@@ -1,0 +1,74 @@
+//! Floorplan explorer — regenerates the paper's Fig. 3 and the aspect
+//! sweep behind eq. 6.
+//!
+//! Emits `out/fig3_symmetric.svg` and `out/fig3_asymmetric.svg` (the 8×8
+//! layouts the paper plots), prints ASCII versions, and sweeps the aspect
+//! ratio over the full interconnect-power model to show the bowl whose
+//! minimum the closed form predicts (plus where the ctrl/clock term moves
+//! it). Also writes `out/aspect_sweep.csv`.
+//!
+//! Run: `cargo run --release --example floorplan_explorer`
+
+use std::fmt::Write as _;
+
+use asymm_sa::arch::SaConfig;
+use asymm_sa::config::ExperimentConfig;
+use asymm_sa::floorplan::{optimizer, svg, ArrayLayout, PeGeometry};
+use asymm_sa::power::{self, TechParams};
+
+fn main() -> anyhow::Result<()> {
+    std::fs::create_dir_all("out")?;
+    let cfg = ExperimentConfig::paper();
+    let area = cfg.pe_area_um2();
+    println!("PE area model: A = {area:.0} um^2 (28nm gate-count estimate)\n");
+
+    // --- Fig. 3: 8x8 layouts, square vs 3.8 --------------------------------
+    let sa8 = SaConfig::paper_8x8();
+    for (name, aspect) in [("fig3_symmetric", 1.0), ("fig3_asymmetric", 3.8)] {
+        let layout = ArrayLayout::generate(&sa8, PeGeometry::new(area, aspect)?)?;
+        println!("{}", svg::render_ascii(&layout));
+        let (w, h) = layout.extent_um();
+        println!(
+            "outline {w:.0} x {h:.0} um, total bus wirelength {:.1} mm\n",
+            layout.total_wirelength_um() / 1000.0
+        );
+        std::fs::write(
+            format!("out/{name}.svg"),
+            svg::render_svg(&layout, name),
+        )?;
+    }
+
+    // --- Aspect sweep over the full interconnect model ---------------------
+    let sa = SaConfig::paper_32x32();
+    let tech = TechParams::default();
+    let (a_h, a_v) = (0.22, 0.36);
+    let pts = optimizer::sweep_ratio(
+        |r| power::model_interconnect_cost(&sa, &tech, a_h, a_v, area, r),
+        0.25,
+        16.0,
+        41,
+    );
+    let base = power::model_interconnect_cost(&sa, &tech, a_h, a_v, area, 1.0);
+    let bus_only = optimizer::closed_form_ratio(&sa, a_h, a_v);
+    let (full_opt, _) = optimizer::minimize_ratio(
+        |r| power::model_interconnect_cost(&sa, &tech, a_h, a_v, area, r),
+        0.2,
+        20.0,
+        1e-9,
+    );
+
+    println!("aspect sweep (32x32, a_h={a_h}, a_v={a_v}):");
+    println!("{:>8} {:>14} {:>9}", "W/H", "fJ/PE-cycle", "vs sq");
+    let mut csv = String::from("aspect,cost_fj,vs_square\n");
+    for &(r, c) in &pts {
+        let rel = 100.0 * (c / base - 1.0);
+        println!("{r:>8.3} {c:>14.4} {rel:>8.1}%");
+        let _ = writeln!(csv, "{r:.6},{c:.6},{:.6}", c / base - 1.0);
+    }
+    std::fs::write("out/aspect_sweep.csv", csv)?;
+    println!();
+    println!("bus-only optimum (eq.6):     W/H = {bus_only:.3}");
+    println!("full-model optimum (w/ctrl): W/H = {full_opt:.3}");
+    println!("wrote out/fig3_symmetric.svg, out/fig3_asymmetric.svg, out/aspect_sweep.csv");
+    Ok(())
+}

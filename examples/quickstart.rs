@@ -1,0 +1,112 @@
+//! Quickstart: the paper's result in 60 seconds.
+//!
+//! 1. Build the paper's 32×32 int16 WS array config (B_v derives to 37).
+//! 2. Compute the optimal PE aspect ratio (eqs. 5/6) → ≈3.8.
+//! 3. Simulate a small quantized GEMM on both engines (cycle-accurate and
+//!    analytic) and show they agree bit-exactly.
+//! 4. Evaluate interconnect power on square vs asymmetric floorplans.
+//! 5. If `artifacts/` exists, run one 32×32 tile product through the
+//!    AOT-compiled Pallas kernel via PJRT and check it against the
+//!    native reference.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use asymm_sa::arch::SaConfig;
+use asymm_sa::config::ExperimentConfig;
+use asymm_sa::floorplan::{optimizer, PeGeometry};
+use asymm_sa::gemm::Matrix;
+use asymm_sa::power::{self, TechParams};
+use asymm_sa::runtime::Runtime;
+use asymm_sa::sim::{fast::simulate_gemm_fast, ws::WsCycleSim};
+use asymm_sa::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. the paper's array --------------------------------------------
+    let sa = SaConfig::paper_32x32();
+    println!(
+        "array: {}x{} WS, B_h={} bits, B_v={} bits (derived lossless)",
+        sa.rows,
+        sa.cols,
+        sa.bus_bits_horizontal(),
+        sa.bus_bits_vertical()
+    );
+
+    // --- 2. optimal aspect ratio -----------------------------------------
+    let (a_h, a_v) = (0.22, 0.36); // the paper's measured averages
+    println!(
+        "eq.5  W/H = B_v/B_h                = {:.3}",
+        optimizer::wirelength_optimal_ratio(&sa)
+    );
+    let r_star = optimizer::closed_form_ratio(&sa, a_h, a_v);
+    println!("eq.6  W/H = (B_v a_v)/(B_h a_h)    = {r_star:.3}  <- the paper's 3.8");
+
+    // --- 3. simulate a quantized GEMM on both engines ---------------------
+    let mut rng = Rng::new(42);
+    let a = Matrix::from_vec(
+        96,
+        64,
+        (0..96 * 64)
+            .map(|_| if rng.chance(0.5) { 0 } else { rng.int_range(0, 2000) as i32 })
+            .collect(),
+    )?;
+    let w = Matrix::from_vec(
+        64,
+        48,
+        (0..64 * 48).map(|_| rng.int_range(-2000, 2000) as i32).collect(),
+    )?;
+    let cyc = WsCycleSim::new(&sa).simulate_gemm(&a, &w)?;
+    let fast = simulate_gemm_fast(&sa, &a, &w)?;
+    assert_eq!(cyc.y, fast.y);
+    assert_eq!(cyc.stats, fast.stats);
+    let (mh, mv) = fast.stats.activities();
+    println!(
+        "sim: 96x64x48 GEMM, {} cycles, measured a_h={mh:.3} a_v={mv:.3} (a_v > a_h as SSII predicts)",
+        fast.cycles
+    );
+
+    // --- 4. power on both floorplans --------------------------------------
+    let cfg = ExperimentConfig::paper();
+    let area = cfg.pe_area_um2();
+    let tech = TechParams::default();
+    let sym = power::evaluate(&sa, &PeGeometry::square(area)?, &tech, &fast);
+    let asym = power::evaluate(&sa, &PeGeometry::new(area, r_star)?, &tech, &fast);
+    println!(
+        "interconnect: square {:.2} mW -> asymmetric {:.2} mW  ({:.1}% saving)",
+        sym.interconnect_mw(),
+        asym.interconnect_mw(),
+        100.0 * (1.0 - asym.interconnect_mw() / sym.interconnect_mw())
+    );
+    println!(
+        "total:        square {:.2} mW -> asymmetric {:.2} mW  ({:.2}% saving)",
+        sym.total_mw(),
+        asym.total_mw(),
+        100.0 * (1.0 - asym.total_mw() / sym.total_mw())
+    );
+
+    // --- 5. PJRT round trip through the Pallas kernel ---------------------
+    match Runtime::load("artifacts") {
+        Ok(rt) => {
+            let t = rt.manifest().tile_matmul.tile;
+            let mut rng = Rng::new(7);
+            let af: Vec<f32> = (0..t * t).map(|_| rng.normal() as f32).collect();
+            let wf: Vec<f32> = (0..t * t).map(|_| rng.normal() as f32).collect();
+            let got = rt.tile_matmul(&af, &wf)?;
+            let am = Matrix::from_vec(t, t, af.clone())?;
+            let wm = Matrix::from_vec(t, t, wf.clone())?;
+            let want = asymm_sa::gemm::matmul_f32(&am, &wm)?;
+            let max_err = got
+                .iter()
+                .zip(want.data.iter())
+                .map(|(g, w)| (g - w).abs())
+                .fold(0f32, f32::max);
+            println!(
+                "PJRT: {t}x{t} tile product through the AOT Pallas WS kernel, max |err| = {max_err:.2e}"
+            );
+            assert!(max_err < 1e-3);
+        }
+        Err(e) => println!("PJRT step skipped ({e})"),
+    }
+
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,116 @@
+//! **End-to-end driver** — the paper's §IV experiment, all layers of the
+//! stack composed (EXPERIMENTS.md records a run of this binary):
+//!
+//! 1. For each Table-I ResNet50 layer, synthesize a realistic post-ReLU
+//!    input tensor and He-init weights (the ImageNet substitution,
+//!    DESIGN.md §3).
+//! 2. Execute the layer forward through the **AOT-compiled JAX/Pallas
+//!    artifact via PJRT** (L1+L2): the artifact returns the activations
+//!    *and* the int16-quantized im2col patches — the exact words the WS
+//!    array streams.
+//! 3. Simulate every GEMM on the 32×32 WS array with the thread-pool
+//!    coordinator (L3), collecting exact per-wire toggle statistics.
+//! 4. Derive the asymmetric aspect ratio from the measured average
+//!    activities (eq. 6) and evaluate the calibrated 28 nm power model
+//!    on both floorplans.
+//! 5. Print the Fig. 4 / Fig. 5 series and write `out/fig4_fig5.csv`.
+//!
+//! Run: `cargo run --release --example resnet50_power`
+//! (falls back to the native im2col path if `artifacts/` is missing).
+
+use asymm_sa::config::ExperimentConfig;
+use asymm_sa::floorplan::{PeGeometry, WireTiming};
+use asymm_sa::report;
+use asymm_sa::runtime::Runtime;
+use asymm_sa::workloads::table1_layers;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = ExperimentConfig::paper();
+    // Derive the aspect ratio from *measured* activities (the paper's
+    // §III-B procedure) instead of pinning 3.8.
+    cfg.floorplans.proposed_aspect = None;
+
+    let runtime = match Runtime::load("artifacts") {
+        Ok(rt) => {
+            println!(
+                "PJRT {} | {} layer artifacts | activity oracle {}x{}",
+                rt.platform(),
+                rt.manifest().layers.len(),
+                rt.manifest().activity.cycles,
+                rt.manifest().activity.lanes,
+            );
+            Some(rt)
+        }
+        Err(e) => {
+            eprintln!("note: running without PJRT runtime ({e})");
+            None
+        }
+    };
+
+    let layers = table1_layers();
+    let t0 = std::time::Instant::now();
+    let out = report::run_experiment(&cfg, &layers, runtime.as_ref())?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut rows = out.rows.clone();
+    rows.push(out.average.clone());
+
+    println!();
+    println!(
+        "measured average activities: a_h={:.3} a_v={:.3}  (paper: 0.22 / 0.36)",
+        out.avg_activities.0, out.avg_activities.1
+    );
+    println!(
+        "eq.6 aspect ratio from measurements: W/H = {:.3}  (paper: 3.8)",
+        out.aspect_used
+    );
+    println!();
+    print!("{}", report::fig4_string(&rows));
+    println!();
+    print!("{}", report::fig5_string(&rows));
+    println!();
+    println!(
+        "headline: interconnect saving {:.1}% (paper: 9.1%), total saving {:.2}% (paper: 2.1%)",
+        100.0 * out.average.interconnect_reduction(),
+        100.0 * out.average.total_reduction(),
+    );
+    println!(
+        "pipeline: {} layers in {wall:.1}s wall | {:.1}M MACs | {:.2}e9 simulated PE-cycles/s | runtime={}",
+        out.rows.len(),
+        out.metrics.macs as f64 / 1e6,
+        out.metrics.pe_cycles_per_sec(cfg.sa.num_pes()) / 1e9,
+        out.used_runtime,
+    );
+
+    std::fs::create_dir_all("out")?;
+    std::fs::write("out/fig4_fig5.csv", report::to_csv(&rows))?;
+    println!("wrote out/fig4_fig5.csv");
+
+    // Zero-performance-cost check (paper SSIV): both floorplans meet the
+    // 1 GHz clock under the Elmore wire model.
+    let timing = WireTiming::default();
+    let area = cfg.pe_area_um2();
+    for (label, aspect) in [("square", 1.0), ("asymmetric", out.aspect_used)] {
+        let pe = PeGeometry::new(area, aspect)?;
+        let fmax = timing.max_clock_ghz(&pe);
+        println!(
+            "timing({label}, W/H={aspect:.2}): max bus clock {fmax:.1} GHz (target {} GHz) — {}",
+            cfg.sa.clock_ghz,
+            if timing.meets_timing(&cfg.sa, &pe) { "OK" } else { "FAIL" }
+        );
+        assert!(timing.meets_timing(&cfg.sa, &pe), "zero performance cost violated");
+    }
+
+    // Shape checks (the reproduction contract).
+    assert!(out.avg_activities.1 > out.avg_activities.0, "a_v > a_h");
+    assert!(out.aspect_used > 1.0, "asymmetric PEs are wider than tall");
+    for r in &rows {
+        assert!(
+            r.interconnect_reduction() > 0.0,
+            "asymmetric must win on every layer ({})",
+            r.name
+        );
+    }
+    println!("resnet50_power OK");
+    Ok(())
+}

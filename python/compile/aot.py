@@ -1,0 +1,137 @@
+"""AOT compile path: lower every L2 entry point to HLO *text* artifacts.
+
+Run once at build time (`make artifacts`); Rust loads the text via
+`HloModuleProto::from_text_file` and executes through PJRT.  HLO text (not
+`.serialize()`) is the interchange format: jax >= 0.5 emits protos with
+64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts produced (+ manifest.json describing shapes for the Rust side):
+
+  layer_<name>.hlo.txt   one per Table-I layer:
+                         (x f32[1,C,Hin,Win], w f32[M,CK2])
+                         -> (out f32[1,M,H,W], patches_q i32[P,CK2])
+  activity_block.hlo.txt (stream i32[T,L], prev i32[1,L], mask i32[1,L])
+                         -> (toggles i32[1,L], zeros i32[1,L])
+  tile_matmul.hlo.txt    (a f32[32,32], w f32[32,32]) -> (f32[32,32],)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+#: Fixed chunk shape of the activity oracle artifact.  Streams of any
+#: length are processed in (ACTIVITY_CYCLES x ACTIVITY_LANES) chunks with
+#: the `prev` row carrying state across chunk seams (exact, no seam error).
+ACTIVITY_CYCLES = 4096
+ACTIVITY_LANES = 64
+
+SA_TILE = 32
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (the 0.5.1-safe route)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_layer(layer: model.ConvLayer, tile: int = SA_TILE) -> str:
+    hin, win = layer.input_hw
+    x = _spec((1, layer.c, hin, win))
+    w = _spec((layer.m, layer.c * layer.k * layer.k))
+    fn = model.make_layer_fn(layer, tile=tile)
+    return to_hlo_text(jax.jit(fn).lower(x, w))
+
+
+def lower_activity() -> str:
+    s = _spec((ACTIVITY_CYCLES, ACTIVITY_LANES), jnp.int32)
+    p = _spec((1, ACTIVITY_LANES), jnp.int32)
+    fn = model.make_activity_fn(ACTIVITY_CYCLES, ACTIVITY_LANES)
+    return to_hlo_text(jax.jit(fn).lower(s, p, p))
+
+
+def lower_tile_matmul(tile: int = SA_TILE) -> str:
+    a = _spec((tile, tile))
+    fn = model.make_tile_matmul_fn(tile)
+    return to_hlo_text(jax.jit(fn).lower(a, a))
+
+
+def build_all(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest: dict = {
+        "sa_tile": SA_TILE,
+        "activity": {
+            "file": "activity_block.hlo.txt",
+            "cycles": ACTIVITY_CYCLES,
+            "lanes": ACTIVITY_LANES,
+        },
+        "tile_matmul": {"file": "tile_matmul.hlo.txt", "tile": SA_TILE},
+        "layers": [],
+    }
+
+    for layer in model.TABLE1_LAYERS:
+        fname = f"layer_{layer.name}.hlo.txt"
+        text = lower_layer(layer)
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        hin, win = layer.input_hw
+        p, ck2, m = layer.gemm_shape
+        manifest["layers"].append(
+            {
+                "name": layer.name,
+                "file": fname,
+                "k": layer.k,
+                "h": layer.h,
+                "w": layer.w,
+                "c": layer.c,
+                "m": layer.m,
+                "stride": layer.stride,
+                "pad": layer.pad,
+                "input_shape": [1, layer.c, hin, win],
+                "weight_shape": [layer.m, ck2],
+                "gemm": [p, ck2, m],
+                "macs": layer.macs,
+            }
+        )
+        print(f"  {fname}: {len(text)} chars, gemm {p}x{ck2}x{m}")
+
+    text = lower_activity()
+    with open(os.path.join(out_dir, "activity_block.hlo.txt"), "w") as f:
+        f.write(text)
+    print(f"  activity_block.hlo.txt: {len(text)} chars")
+
+    text = lower_tile_matmul()
+    with open(os.path.join(out_dir, "tile_matmul.hlo.txt"), "w") as f:
+        f.write(text)
+    print(f"  tile_matmul.hlo.txt: {len(text)} chars")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"  manifest.json: {len(manifest['layers'])} layers")
+    return manifest
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="output dir")
+    args = parser.parse_args()
+    build_all(args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""L1 Pallas kernel: bus switching-activity (bit-toggle) counting.
+
+The paper's eq. (6) scales bus widths by the *average switching activity*
+(a_h, a_v) measured on the horizontal input buses and vertical partial-sum
+buses of the SA.  This kernel is the vectorized oracle for that
+measurement: given a (T, L) matrix of int32 bus words -- L parallel bus
+instances observed for T consecutive cycles -- it counts, per lane,
+
+  * toggles: sum_t popcount((x[t] ^ x[t-1]) & mask)
+  * zeros:   number of cycles the masked word is exactly 0
+
+`mask` keeps only the physical wires of the bus (B_h=16 or B_v=37-wide
+buses are carried in one/two int32 words; see `pack_words`).  The first
+row is diffed against a caller-provided `prev` row so that long streams
+can be processed in fixed-shape chunks with exact results (chunk seams
+carry no error) -- this is how the Rust runtime calls the AOT artifact.
+
+The same counting is implemented in Rust (`activity::oracle`) and both are
+checked against `kernels.ref.toggles_ref` in tests.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _activity_kernel(stream_ref, prev_ref, mask_ref, tog_ref, zer_ref):
+    x = stream_ref[...]  # (T, L) int32
+    prev = prev_ref[...]  # (1, L) int32
+    mask = mask_ref[...]  # (1, L) int32
+    xm = jnp.bitwise_and(x, mask)
+    prevm = jnp.bitwise_and(prev, mask)
+    shifted = jnp.concatenate([prevm, xm[:-1, :]], axis=0)
+    flips = jax.lax.population_count(jnp.bitwise_xor(xm, shifted))
+    tog_ref[...] = jnp.sum(flips, axis=0, keepdims=True)
+    zer_ref[...] = jnp.sum((xm == 0).astype(jnp.int32), axis=0, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def bus_activity(
+    stream: jax.Array, prev: jax.Array, mask: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Count per-lane bit toggles and zero-valued cycles.
+
+    Args:
+      stream: (T, L) int32 bus words, row t = cycle t.
+      prev:   (1, L) int32 word on each lane in the cycle before row 0
+              (use zeros for the true start of a stream -- buses reset low).
+      mask:   (1, L) int32 bit-mask of physically present wires per lane.
+
+    Returns:
+      (toggles, zeros): each (1, L) int32.
+    """
+    t, l = stream.shape
+    if prev.shape != (1, l) or mask.shape != (1, l):
+        raise ValueError(
+            f"prev/mask must be (1,{l}); got {prev.shape}, {mask.shape}"
+        )
+    return pl.pallas_call(
+        _activity_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((1, l), jnp.int32),
+            jax.ShapeDtypeStruct((1, l), jnp.int32),
+        ),
+        interpret=True,
+    )(stream, prev, mask)
+
+
+def pack_words(values: jax.Array, bits: int) -> jax.Array:
+    """Mask signed values to a `bits`-wide bus word (two's complement).
+
+    A B-bit bus carries value & (2**B - 1); for B <= 32 one int32 word per
+    bus instance suffices for toggle counting (the paper's widest bus is
+    B_v=37; the Rust simulator splits those into lo/hi words -- see
+    activity::oracle -- while this JAX path handles the <=32-bit lanes).
+    """
+    if not 1 <= bits <= 32:
+        raise ValueError(f"bits must be in [1,32], got {bits}")
+    mask = jnp.int32((1 << bits) - 1) if bits < 32 else jnp.int32(-1)
+    return jnp.bitwise_and(values.astype(jnp.int32), mask)

@@ -1,0 +1,77 @@
+"""L1 Pallas kernel: symmetric int16 quantization of the bus operands.
+
+The paper's arrays consume *16-bit integer quantized* inputs and weights
+(SSIV).  Quantization therefore sits on the artifact's data path right
+before the horizontal buses: this kernel maps f32 activations to int
+words given a precomputed scale.  It runs blocked over rows so arbitrary
+(P, CK^2) patch matrices stream through a fixed VMEM working set, and it
+lowers into the same HLO module as the GEMM kernel (interpret=True; see
+systolic_gemm.py for the TPU adaptation notes).
+
+The absmax -> scale reduction is a two-pass affair (scale needs a global
+max); the host/jnp side computes the scalar, the kernel does the heavy
+per-element map.  Matches quant::quantize_sym on the Rust side and
+model.quantize_sym's semantics exactly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quantize_kernel(x_ref, scale_ref, qmax_ref, o_ref):
+    x = x_ref[...]
+    scale = scale_ref[0, 0]
+    qmax = qmax_ref[0, 0]
+    # Divide (not multiply-by-reciprocal): bit-identical to the jnp
+    # reference and the Rust quantizer at the round-half boundaries.
+    q = jnp.round(x / scale)
+    o_ref[...] = jnp.clip(q, -qmax, qmax).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block_rows"))
+def quantize_sym_pallas(
+    x: jax.Array, bits: int = 16, block_rows: int = 128
+) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor quantization via a blocked Pallas kernel.
+
+    Args:
+      x: (R, C) f32 tensor.
+      bits: target signed width (values in [-(2^(b-1)-1), 2^(b-1)-1]).
+      block_rows: rows per grid step (VMEM working set control).
+
+    Returns:
+      (q, scale): q int32 of x.shape with x ~= q * scale.
+    """
+    if x.ndim != 2:
+        raise ValueError(f"expected 2-D input, got shape {x.shape}")
+    if not 2 <= bits <= 16:
+        raise ValueError(f"bits must be in [2,16], got {bits}")
+    rows, cols = x.shape
+    qmax = float(2 ** (bits - 1) - 1)
+    absmax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12)
+    scale = absmax / qmax
+    scale_arr = scale.reshape(1, 1).astype(jnp.float32)
+    qmax_arr = jnp.full((1, 1), qmax, dtype=jnp.float32)
+
+    # Pad rows to the block size; slice back after.
+    padded = (rows + block_rows - 1) // block_rows * block_rows
+    xp = jnp.pad(x, ((0, padded - rows), (0, 0)))
+    grid = (padded // block_rows,)
+    q = pl.pallas_call(
+        _quantize_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((padded, cols), jnp.int32),
+        interpret=True,
+    )(xp, scale_arr, qmax_arr)
+    return q[:rows, :], scale

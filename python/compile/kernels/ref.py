@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: pytest asserts the Pallas kernels
+(and, via exported fixtures, the Rust implementations) match these
+references bit-exactly (integers) or to f32 tolerance.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jax.Array, w: jax.Array) -> jax.Array:
+    """a @ w with f32/int32 accumulation — the GEMM oracle."""
+    acc = jnp.int32 if jnp.issubdtype(a.dtype, jnp.integer) else jnp.float32
+    return jnp.matmul(a, w, preferred_element_type=acc)
+
+
+def toggles_ref(
+    stream: jax.Array, prev: jax.Array, mask: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Per-lane toggle and zero counts — the switching-activity oracle.
+
+    Same contract as kernels.activity.bus_activity.
+    """
+    xm = jnp.bitwise_and(stream.astype(jnp.int32), mask)
+    prevm = jnp.bitwise_and(prev.astype(jnp.int32), mask)
+    shifted = jnp.concatenate([prevm, xm[:-1, :]], axis=0)
+    flips = jax.lax.population_count(jnp.bitwise_xor(xm, shifted))
+    toggles = jnp.sum(flips, axis=0, keepdims=True)
+    zeros = jnp.sum((xm == 0).astype(jnp.int32), axis=0, keepdims=True)
+    return toggles, zeros
+
+
+def conv2d_ref(x: jax.Array, w: jax.Array, stride: int, pad: int) -> jax.Array:
+    """NCHW conv oracle via lax.conv for validating im2col+GEMM forward."""
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )

@@ -1,0 +1,115 @@
+"""L1 Pallas kernel: weight-stationary tiled GEMM.
+
+This is the compute hot-spot of every conv layer in the paper (conv lowered
+to GEMM via im2col, exactly as a weight-stationary systolic array executes
+it).  The BlockSpec grid mirrors the WS schedule of the paper's SA:
+
+  * grid step (i, j, k) holds ONE (block_k x block_n) weight tile resident
+    ("weight stationary") while a (block_m x block_k) slab of activations
+    streams against it,
+  * partial sums accumulate across the k-grid dimension in the output ref,
+    which is the software analogue of the vertical psum chain whose bus
+    width/activity the paper optimizes the floorplan for.
+
+TPU adaptation (DESIGN.md SS5): the paper's SA is a 28nm ASIC; on TPU the
+same structure is the MXU systolic array.  Block shapes default to 32x32
+(the paper's array size; also MXU-aligned multiples of 8x128 would be used
+on real hardware).  VMEM footprint per grid step is
+  block_m*block_k + block_k*block_n + block_m*block_n  words,
+kept well under VMEM limits (see DESIGN.md SS8).
+
+Kernels are lowered with interpret=True: the CPU PJRT plugin cannot run
+Mosaic custom-calls; numerics are validated against kernels.ref via pytest.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(a_ref, w_ref, o_ref):
+    """One WS grid step: o += a @ w with the k==0 step initializing o.
+
+    The k grid dimension is the reduction; `o_ref` persists across k steps
+    for a fixed (i, j), so accumulation happens in the output block -- the
+    software mirror of the SA's vertical partial-sum chain.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], w_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def _check_tiling(m: int, k: int, n: int, bm: int, bk: int, bn: int) -> None:
+    if m % bm or k % bk or n % bn:
+        raise ValueError(
+            f"matmul_ws requires dims divisible by blocks: "
+            f"(M,K,N)=({m},{k},{n}) blocks=({bm},{bk},{bn})"
+        )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k")
+)
+def matmul_ws(
+    a: jax.Array,
+    w: jax.Array,
+    *,
+    block_m: int = 32,
+    block_n: int = 32,
+    block_k: int = 32,
+) -> jax.Array:
+    """Weight-stationary tiled matmul `a @ w` as a Pallas kernel.
+
+    Args:
+      a: (M, K) activations (f32 or i32).
+      w: (K, N) weights, same dtype as `a`.
+      block_*: tile sizes; all dims must divide evenly (pad upstream).
+
+    Returns:
+      (M, N) product. f32 in -> f32 out; i32 in -> i32 out (caller must
+      guarantee |partial sums| < 2**31; the Rust cycle simulator models the
+      paper's exact 37-bit accumulator, this kernel is the bulk compute
+      path).
+    """
+    m, k = a.shape
+    k2, n = w.shape
+    if k != k2:
+        raise ValueError(f"inner dims mismatch: {a.shape} @ {w.shape}")
+    _check_tiling(m, k, n, block_m, block_k, block_n)
+    if a.dtype != w.dtype:
+        raise ValueError(f"dtype mismatch: {a.dtype} vs {w.dtype}")
+    acc_dtype = jnp.int32 if jnp.issubdtype(a.dtype, jnp.integer) else jnp.float32
+
+    grid = (m // block_m, n // block_n, k // block_k)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            # Activation slab streams along k for a fixed row-block i.
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            # Weight tile: "stationary" w.r.t. the m-stream, advances with k/j.
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), acc_dtype),
+        interpret=True,
+    )(a, w)
+
+
+def vmem_words_per_step(block_m: int, block_k: int, block_n: int) -> int:
+    """VMEM working-set estimate (in 4-byte words) for one grid step.
+
+    Used by DESIGN.md SS8 / the perf pass to keep the schedule under the
+    16 MiB VMEM budget of a real TPU core.
+    """
+    return block_m * block_k + block_k * block_n + block_m * block_n

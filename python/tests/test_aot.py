@@ -1,0 +1,44 @@
+"""AOT lowering smoke tests: every artifact lowers to parseable HLO text."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+
+
+def test_lower_tile_matmul_is_hlo_text():
+    text = aot.lower_tile_matmul()
+    assert "HloModule" in text
+    assert "f32[32,32]" in text
+
+
+def test_lower_activity_is_hlo_text():
+    text = aot.lower_activity()
+    assert "HloModule" in text
+    assert f"s32[{aot.ACTIVITY_CYCLES},{aot.ACTIVITY_LANES}]" in text
+
+
+def test_lower_smallest_layer():
+    # Lower a reduced layer (same code path as Table-I, smaller shapes) to
+    # keep the test fast; full layers are lowered by `make artifacts`.
+    layer = model.ConvLayer("t", k=1, h=8, w=8, c=32, m=32)
+    text = aot.lower_layer(layer)
+    assert "HloModule" in text
+
+
+def test_build_all_manifest(tmp_path, monkeypatch):
+    # Patch the layer table to one tiny layer so the test stays fast.
+    tiny = (model.ConvLayer("T0", k=1, h=8, w=8, c=32, m=32),)
+    monkeypatch.setattr(model, "TABLE1_LAYERS", tiny)
+    manifest = aot.build_all(str(tmp_path))
+    assert (tmp_path / "manifest.json").exists()
+    assert (tmp_path / "layer_T0.hlo.txt").exists()
+    assert (tmp_path / "activity_block.hlo.txt").exists()
+    assert (tmp_path / "tile_matmul.hlo.txt").exists()
+    with open(tmp_path / "manifest.json") as f:
+        on_disk = json.load(f)
+    assert on_disk["layers"][0]["name"] == "T0"
+    assert on_disk["layers"][0]["gemm"] == [64, 32, 32]
+    assert manifest["sa_tile"] == aot.SA_TILE

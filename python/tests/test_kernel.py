@@ -1,0 +1,93 @@
+"""L1 kernel correctness: Pallas systolic GEMM vs pure-jnp oracle.
+
+Hypothesis sweeps shapes, dtypes and block sizes; every case asserts
+allclose (f32) or bit-exact equality (int32) against kernels.ref.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref, systolic_gemm
+
+hypothesis.settings.register_profile(
+    "kernels", max_examples=25, deadline=None, derandomize=True
+)
+hypothesis.settings.load_profile("kernels")
+
+
+def _rand(shape, dtype, seed):
+    rng = np.random.default_rng(seed)
+    if dtype == jnp.int32:
+        return jnp.asarray(rng.integers(-100, 100, size=shape), dtype=jnp.int32)
+    return jnp.asarray(rng.standard_normal(shape), dtype=jnp.float32)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.int32])
+def test_matmul_ws_basic(dtype):
+    a = _rand((64, 96), dtype, 0)
+    w = _rand((96, 32), dtype, 1)
+    got = systolic_gemm.matmul_ws(a, w)
+    want = ref.matmul_ref(a, w)
+    if dtype == jnp.int32:
+        np.testing.assert_array_equal(got, want)
+    else:
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@hypothesis.given(
+    mi=st.integers(1, 4),
+    ki=st.integers(1, 4),
+    ni=st.integers(1, 4),
+    block=st.sampled_from([8, 16, 32]),
+    is_int=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_ws_shapes(mi, ki, ni, block, is_int, seed):
+    m, k, n = mi * block, ki * block, ni * block
+    dtype = jnp.int32 if is_int else jnp.float32
+    a = _rand((m, k), dtype, seed)
+    w = _rand((k, n), dtype, seed + 1)
+    got = systolic_gemm.matmul_ws(a, w, block_m=block, block_n=block, block_k=block)
+    want = ref.matmul_ref(a, w)
+    assert got.dtype == want.dtype
+    if is_int:
+        np.testing.assert_array_equal(got, want)
+    else:
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_ws_rejects_untiled():
+    a = jnp.zeros((33, 32), jnp.float32)
+    w = jnp.zeros((32, 32), jnp.float32)
+    with pytest.raises(ValueError, match="divisible"):
+        systolic_gemm.matmul_ws(a, w)
+
+
+def test_matmul_ws_rejects_mismatched_inner():
+    a = jnp.zeros((32, 64), jnp.float32)
+    w = jnp.zeros((32, 32), jnp.float32)
+    with pytest.raises(ValueError, match="inner dims"):
+        systolic_gemm.matmul_ws(a, w)
+
+
+def test_matmul_ws_rejects_mixed_dtype():
+    a = jnp.zeros((32, 32), jnp.float32)
+    w = jnp.zeros((32, 32), jnp.int32)
+    with pytest.raises(ValueError, match="dtype"):
+        systolic_gemm.matmul_ws(a, w)
+
+
+def test_matmul_ws_rectangular_blocks():
+    a = _rand((64, 128), jnp.float32, 7)
+    w = _rand((128, 96), jnp.float32, 8)
+    got = systolic_gemm.matmul_ws(a, w, block_m=16, block_n=32, block_k=64)
+    np.testing.assert_allclose(got, ref.matmul_ref(a, w), rtol=1e-4, atol=1e-4)
+
+
+def test_vmem_words_per_step():
+    # 32x32x32 blocks: 3 * 1024 words = 12 KiB — far under 16 MiB VMEM.
+    assert systolic_gemm.vmem_words_per_step(32, 32, 32) == 3 * 32 * 32

@@ -1,0 +1,100 @@
+"""L2 model correctness: im2col+GEMM forward vs lax.conv oracle."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+hypothesis.settings.register_profile(
+    "model", max_examples=15, deadline=None, derandomize=True
+)
+hypothesis.settings.load_profile("model")
+
+
+def _conv_via_model(x, w_oihw, layer):
+    w_mat = w_oihw.reshape(layer.m, layer.c * layer.k * layer.k)
+    return model.layer_forward(x, w_mat, layer)
+
+
+@pytest.mark.parametrize("k,stride", [(1, 1), (3, 1)])
+def test_layer_forward_matches_lax_conv(k, stride):
+    layer = model.ConvLayer("t", k=k, h=8, w=8, c=4, m=6, stride=stride)
+    rng = np.random.default_rng(0)
+    hin, win = layer.input_hw
+    x = jnp.asarray(rng.standard_normal((1, layer.c, hin, win)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((layer.m, layer.c, k, k)), jnp.float32)
+    got = _conv_via_model(x, w, layer)
+    want = jnp.maximum(ref.conv2d_ref(x, w, stride, layer.pad), 0.0)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@hypothesis.given(
+    k=st.sampled_from([1, 3, 5]),
+    hw=st.integers(4, 12),
+    c=st.integers(1, 8),
+    m=st.integers(1, 8),
+    seed=st.integers(0, 2**16),
+)
+def test_im2col_gemm_equals_conv(k, hw, c, m, seed):
+    layer = model.ConvLayer("t", k=k, h=hw, w=hw, c=c, m=m)
+    rng = np.random.default_rng(seed)
+    hin, win = layer.input_hw
+    x = jnp.asarray(rng.standard_normal((1, c, hin, win)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((m, c, k, k)), jnp.float32)
+    got = _conv_via_model(x, w, layer)
+    want = jnp.maximum(ref.conv2d_ref(x, w, 1, layer.pad), 0.0)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+def test_im2col_shape_and_order():
+    layer = model.ConvLayer("t", k=3, h=5, w=5, c=2, m=1)
+    x = jnp.arange(2 * 5 * 5, dtype=jnp.float32).reshape(1, 2, 5, 5)
+    patches = model.im2col(x, layer.k, layer.stride, layer.pad)
+    assert patches.shape == (25, 18)
+    # Center patch (2,2) with pad=1: column (c=0, ki=1, kj=1) = x[0,0,2,2].
+    center_idx = 2 * 5 + 2
+    col_idx = 0 * 9 + 1 * 3 + 1
+    assert patches[center_idx, col_idx] == x[0, 0, 2, 2]
+
+
+def test_im2col_rejects_batch():
+    with pytest.raises(ValueError, match="single-batch"):
+        model.im2col(jnp.zeros((2, 1, 4, 4)), 1, 1, 0)
+
+
+def test_quantize_sym_roundtrip():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((64, 64)), jnp.float32)
+    q, scale = model.quantize_sym(x, bits=16)
+    assert q.dtype == jnp.int32
+    assert int(jnp.max(jnp.abs(q))) <= 2**15 - 1
+    np.testing.assert_allclose(q * scale, x, atol=float(scale) * 0.51)
+
+
+def test_quantize_sym_zero_input():
+    q, scale = model.quantize_sym(jnp.zeros((4, 4)), bits=16)
+    np.testing.assert_array_equal(q, 0)
+    assert float(scale) > 0
+
+
+def test_table1_gemm_shapes():
+    """Table I layers produce the GEMM dims the paper's SA executes."""
+    shapes = {l.name: l.gemm_shape for l in model.TABLE1_LAYERS}
+    assert shapes["L1"] == (56 * 56, 256, 64)
+    assert shapes["L2"] == (28 * 28, 128 * 9, 128)
+    assert shapes["L3"] == (28 * 28, 128, 512)
+    assert shapes["L4"] == (14 * 14, 512, 256)
+    assert shapes["L5"] == (14 * 14, 1024, 256)
+    assert shapes["L6"] == (14 * 14, 256 * 9, 256)
+
+
+def test_gemm_tiled_pads_and_slices():
+    rng = np.random.default_rng(2)
+    a = jnp.asarray(rng.standard_normal((33, 17)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((17, 9)), jnp.float32)
+    got = model.gemm_tiled(a, w)
+    np.testing.assert_allclose(got, a @ w, rtol=1e-4, atol=1e-4)

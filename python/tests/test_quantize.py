@@ -1,0 +1,62 @@
+"""Pallas quantization kernel vs the jnp reference (bit-exact)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import quantize
+
+hypothesis.settings.register_profile(
+    "quant", max_examples=8, deadline=None, derandomize=True
+)
+hypothesis.settings.load_profile("quant")
+
+
+@hypothesis.given(
+    # Fixed shape pool: each distinct shape triggers a jit compile of the
+    # interpret-mode kernel, so the pool is kept small.
+    shape=st.sampled_from([(1, 1), (7, 5), (64, 32), (130, 16)]),
+    bits=st.sampled_from([4, 8, 16]),
+    scale=st.floats(0.01, 100.0),
+    seed=st.integers(0, 2**16),
+)
+def test_matches_jnp_reference(shape, bits, scale, seed):
+    rows, cols = shape
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((rows, cols)) * scale, jnp.float32)
+    q_k, s_k = quantize.quantize_sym_pallas(x, bits=bits, block_rows=64)
+    q_r, s_r = model.quantize_sym(x, bits=bits)
+    np.testing.assert_array_equal(q_k, q_r)
+    assert float(s_k) == pytest.approx(float(s_r), rel=1e-7)
+
+
+def test_range_clamped():
+    x = jnp.asarray([[1e6, -1e6, 0.0, 1.0]], jnp.float32)
+    q, _ = quantize.quantize_sym_pallas(x, bits=16)
+    assert int(jnp.max(q)) == 2**15 - 1
+    assert int(jnp.min(q)) == -(2**15 - 1)
+    assert int(q[0, 2]) == 0
+
+
+def test_zero_tensor():
+    q, s = quantize.quantize_sym_pallas(jnp.zeros((8, 8), jnp.float32))
+    np.testing.assert_array_equal(q, 0)
+    assert float(s) > 0
+
+
+def test_block_seams_are_invisible():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((130, 10)), jnp.float32)
+    q_a, _ = quantize.quantize_sym_pallas(x, block_rows=128)
+    q_b, _ = quantize.quantize_sym_pallas(x, block_rows=13)
+    np.testing.assert_array_equal(q_a, q_b)
+
+
+def test_rejects_bad_args():
+    with pytest.raises(ValueError):
+        quantize.quantize_sym_pallas(jnp.zeros((2, 2, 2), jnp.float32))
+    with pytest.raises(ValueError):
+        quantize.quantize_sym_pallas(jnp.zeros((2, 2), jnp.float32), bits=1)

@@ -1,0 +1,60 @@
+//! Ablation: optimal aspect ratio across input widths and array sizes.
+//!
+//! Paper §III-A: the result `W/H = B_v/B_h > 1` holds for *all* array
+//! sizes. This bench sweeps `B_h ∈ {4, 8, 16}` and `R=C ∈ {8..128}`,
+//! prints the eq. 5/6 optima and the modeled interconnect saving at the
+//! optimum, and times the underlying evaluations.
+
+use asymm_sa::arch::SaConfig;
+use asymm_sa::bench_util::Bench;
+use asymm_sa::floorplan::optimizer;
+use asymm_sa::power::{self, TechParams};
+
+fn main() {
+    let tech = TechParams::default();
+    let (a_h, a_v) = (0.22, 0.36);
+    println!(
+        "{:>5} {:>5} {:>5} {:>9} {:>9} {:>12}",
+        "B_h", "R=C", "B_v", "eq.5", "eq.6", "saving@opt"
+    );
+    for &bits in &[4u32, 8, 16] {
+        for &dim in &[8usize, 16, 32, 64, 128] {
+            let sa = SaConfig::new_ws(dim, dim, bits).expect("config");
+            let eq5 = optimizer::wirelength_optimal_ratio(&sa);
+            let eq6 = optimizer::closed_form_ratio(&sa, a_h, a_v);
+            // Interconnect saving of the full model at its own optimum.
+            let area = 4.0 * bits as f64 * bits as f64; // scale-ish
+            let cost = |r: f64| power::model_interconnect_cost(&sa, &tech, a_h, a_v, area, r);
+            let (opt, copt) = optimizer::minimize_ratio(cost, 0.2, 30.0, 1e-9);
+            let saving = 100.0 * (1.0 - copt / cost(1.0));
+            println!(
+                "{bits:>5} {dim:>5} {:>5} {eq5:>9.3} {eq6:>9.3} {saving:>11.1}%",
+                sa.bus_bits_vertical()
+            );
+            // The paper's §III-A invariant.
+            assert!(eq5 > 1.0 && eq6 > 1.0, "PEs should never be square");
+            assert!(opt > 1.0);
+        }
+    }
+    println!();
+
+    let mut b = Bench::new("ablation_widths");
+    b.case("full_grid_15_configs", || {
+        let mut acc = 0.0;
+        for &bits in &[4u32, 8, 16] {
+            for &dim in &[8usize, 16, 32, 64, 128] {
+                let sa = SaConfig::new_ws(dim, dim, bits).expect("config");
+                let area = 4.0 * bits as f64 * bits as f64;
+                let (opt, _) = optimizer::minimize_ratio(
+                    |r| power::model_interconnect_cost(&sa, &tech, a_h, a_v, area, r),
+                    0.2,
+                    30.0,
+                    1e-9,
+                );
+                acc += opt;
+            }
+        }
+        acc
+    });
+    b.finish();
+}

@@ -1,0 +1,64 @@
+//! Bench: eq. 5/6 optimizers — closed form vs golden-section vs sweep.
+//!
+//! Verifies (and times) that the numeric optimizers land on the paper's
+//! closed-form optimum, across a grid of bus-width/activity settings.
+
+use asymm_sa::arch::SaConfig;
+use asymm_sa::bench_util::Bench;
+use asymm_sa::config::ExperimentConfig;
+use asymm_sa::floorplan::optimizer;
+use asymm_sa::power::{self, TechParams};
+
+fn main() {
+    let sa = SaConfig::paper_32x32();
+    let (a_h, a_v) = (0.22, 0.36);
+
+    // Correctness surface first: numeric == closed form over a grid.
+    println!("{:>6} {:>6} {:>10} {:>10}", "a_h", "a_v", "eq.6", "numeric");
+    for &ah in &[0.1, 0.22, 0.4] {
+        for &av in &[0.2, 0.36, 0.5] {
+            let closed = optimizer::closed_form_ratio(&sa, ah, av);
+            let (num, _) = optimizer::minimize_ratio(
+                |r| optimizer::weighted_bus_cost(&sa, ah, av, r),
+                0.05,
+                50.0,
+                1e-10,
+            );
+            assert!((closed - num).abs() / closed < 1e-4);
+            println!("{ah:>6.2} {av:>6.2} {closed:>10.4} {num:>10.4}");
+        }
+    }
+    println!();
+
+    let mut b = Bench::new("bench_optimizer");
+    b.case("closed_form_eq6", || {
+        optimizer::closed_form_ratio(&sa, a_h, a_v)
+    });
+    b.case("golden_section_bus_cost", || {
+        optimizer::minimize_ratio(
+            |r| optimizer::weighted_bus_cost(&sa, a_h, a_v, r),
+            0.05,
+            50.0,
+            1e-10,
+        )
+    });
+    let tech = TechParams::default();
+    let area = ExperimentConfig::paper().pe_area_um2();
+    b.case("golden_section_full_power_model", || {
+        optimizer::minimize_ratio(
+            |r| power::model_interconnect_cost(&sa, &tech, a_h, a_v, area, r),
+            0.2,
+            20.0,
+            1e-9,
+        )
+    });
+    b.case("sweep_41_points", || {
+        optimizer::sweep_ratio(
+            |r| power::model_interconnect_cost(&sa, &tech, a_h, a_v, area, r),
+            0.25,
+            16.0,
+            41,
+        )
+    });
+    b.finish();
+}

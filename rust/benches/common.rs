@@ -1,0 +1,44 @@
+//! Shared helpers for the figure benches (included via `#[path]`).
+
+use std::sync::Arc;
+
+use asymm_sa::config::ExperimentConfig;
+use asymm_sa::coordinator::{Coordinator, LayerJob, LayerResult};
+use asymm_sa::gemm::{im2col, Matrix};
+use asymm_sa::quant::quantize_sym;
+use asymm_sa::workloads::{table1_layers, ConvLayer, SynthGen};
+
+/// Build the quantized GEMM job for one layer (native im2col path — the
+/// PJRT path is exercised by examples/ and the integration tests).
+pub fn layer_job(layer: &ConvLayer, gen: &mut SynthGen, cfg: &ExperimentConfig) -> LayerJob {
+    let (hin, win) = layer.input_hw();
+    let x = gen.activations(layer.c, hin, win, &cfg.activations);
+    let ck2 = layer.c * layer.k * layer.k;
+    let w = gen.weights(layer.m, ck2);
+    let patches = im2col(&x, layer.c, hin, win, layer.k, layer.stride, layer.pad())
+        .expect("im2col");
+    let aq = quantize_sym(&patches.data, 16);
+    let wq = quantize_sym(&w, 16);
+    let w_mat = Matrix::from_vec(layer.m, ck2, wq.values)
+        .expect("weights")
+        .transpose();
+    LayerJob {
+        name: layer.name.clone(),
+        a: Arc::new(Matrix::from_vec(patches.rows, patches.cols, aq.values).expect("patches")),
+        w: Arc::new(w_mat),
+    }
+}
+
+/// Simulate all Table-I layers once and return the results (bus
+/// statistics are floorplan-independent, so figure benches hoist this
+/// out of their timing loops).
+pub fn simulate_table1(cfg: &ExperimentConfig) -> Vec<LayerResult> {
+    let mut gen = SynthGen::new(cfg.seed);
+    let jobs: Vec<LayerJob> = table1_layers()
+        .iter()
+        .map(|l| layer_job(l, &mut gen, cfg))
+        .collect();
+    Coordinator::new(&cfg.sa, cfg.workers)
+        .run(jobs)
+        .expect("table1 simulation")
+}

@@ -1,0 +1,55 @@
+//! Bench: Fig. 4 — interconnect power, symmetric vs asymmetric.
+//!
+//! Simulates the six Table-I layers once (bus statistics are
+//! floorplan-independent, so the simulation is hoisted out of the timing
+//! loop), prints the Fig. 4 series including the ResNet50-average bar,
+//! and times the power-model evaluation that regenerates the figure from
+//! the cached statistics.
+
+#[path = "common.rs"]
+mod common;
+
+use asymm_sa::bench_util::Bench;
+use asymm_sa::config::ExperimentConfig;
+use asymm_sa::floorplan::{optimizer, PeGeometry};
+use asymm_sa::report::{average_row, fig4_string, power_row};
+
+fn main() {
+    let cfg = ExperimentConfig::paper();
+    println!("simulating the 6 Table-I layers once (statistics cached)...");
+    let results = common::simulate_table1(&cfg);
+
+    // Eq.6 aspect from measured average activities.
+    let n = results.len() as f64;
+    let a_h = results.iter().map(|r| r.sim.stats.horizontal.activity()).sum::<f64>() / n;
+    let a_v = results.iter().map(|r| r.sim.stats.vertical.activity()).sum::<f64>() / n;
+    let aspect = optimizer::closed_form_ratio(&cfg.sa, a_h, a_v);
+    let area = cfg.pe_area_um2();
+    let sym = PeGeometry::square(area).expect("geometry");
+    let asym = PeGeometry::new(area, aspect).expect("geometry");
+
+    let mut rows: Vec<_> = results
+        .iter()
+        .map(|r| power_row(&r.name, &cfg.sa, &cfg.tech, &sym, &asym, &r.sim))
+        .collect();
+    let avg = average_row(&rows).expect("rows");
+    rows.push(avg.clone());
+
+    println!();
+    print!("{}", fig4_string(&rows));
+    println!(
+        "\nmeasured a_h={a_h:.3} a_v={a_v:.3} -> W/H={aspect:.3}; \
+         headline interconnect saving {:.1}% (paper: 9.1%)\n",
+        100.0 * avg.interconnect_reduction()
+    );
+
+    let mut b = Bench::new("fig4_interconnect_power");
+    b.case("power_rows_6_layers_2_floorplans", || {
+        results
+            .iter()
+            .map(|r| power_row(&r.name, &cfg.sa, &cfg.tech, &sym, &asym, &r.sim))
+            .collect::<Vec<_>>()
+    });
+    b.throughput(12.0, "floorplan-evals");
+    b.finish();
+}

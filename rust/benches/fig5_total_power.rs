@@ -1,0 +1,67 @@
+//! Bench: Fig. 5 — total power, symmetric vs asymmetric.
+//!
+//! Same pipeline as the Fig. 4 bench but reporting total power (compute +
+//! registers + leakage + interconnect) and timing the full experiment
+//! orchestration (synthesis → simulation → power) end to end once per
+//! iteration on a reduced layer set, so coordinator overheads are visible.
+
+#[path = "common.rs"]
+mod common;
+
+use asymm_sa::bench_util::Bench;
+use asymm_sa::config::ExperimentConfig;
+use asymm_sa::floorplan::{optimizer, PeGeometry};
+use asymm_sa::report::{average_row, fig5_string, power_row, run_experiment};
+use asymm_sa::workloads::ConvLayer;
+
+fn main() {
+    let cfg = ExperimentConfig::paper();
+    println!("simulating the 6 Table-I layers once (statistics cached)...");
+    let results = common::simulate_table1(&cfg);
+
+    let n = results.len() as f64;
+    let a_h = results.iter().map(|r| r.sim.stats.horizontal.activity()).sum::<f64>() / n;
+    let a_v = results.iter().map(|r| r.sim.stats.vertical.activity()).sum::<f64>() / n;
+    let aspect = optimizer::closed_form_ratio(&cfg.sa, a_h, a_v);
+    let area = cfg.pe_area_um2();
+    let sym = PeGeometry::square(area).expect("geometry");
+    let asym = PeGeometry::new(area, aspect).expect("geometry");
+
+    let mut rows: Vec<_> = results
+        .iter()
+        .map(|r| power_row(&r.name, &cfg.sa, &cfg.tech, &sym, &asym, &r.sim))
+        .collect();
+    let avg = average_row(&rows).expect("rows");
+    rows.push(avg.clone());
+
+    println!();
+    print!("{}", fig5_string(&rows));
+    println!(
+        "\nheadline total saving {:.2}% (paper: 2.1%); interconnect share {:.1}%\n",
+        100.0 * avg.total_reduction(),
+        100.0 * avg.sym.interconnect_share()
+    );
+
+    // End-to-end orchestration timing on a reduced layer (L4-shaped but
+    // 14x smaller stream) so a full pipeline run fits the bench budget.
+    let small = vec![ConvLayer {
+        name: "L4s".into(),
+        k: 1,
+        h: 14,
+        w: 14,
+        c: 128,
+        m: 128,
+        stride: 1,
+    }];
+    let mut b = Bench::new("fig5_total_power");
+    b.case("experiment_end_to_end_small_layer", || {
+        run_experiment(&cfg, &small, None).expect("experiment")
+    });
+    b.case("power_rows_6_layers_2_floorplans", || {
+        results
+            .iter()
+            .map(|r| power_row(&r.name, &cfg.sa, &cfg.tech, &sym, &asym, &r.sim))
+            .collect::<Vec<_>>()
+    });
+    b.finish();
+}

@@ -1,0 +1,83 @@
+//! Bench: simulator throughput — the L3 perf headline (DESIGN.md §8).
+//!
+//! Times the cycle-accurate engine and the analytic oracle on the same
+//! GEMMs and reports simulated PE-cycles/s and MAC/s. Targets: the
+//! analytic engine ≥1e8 PE-cycles/s; the §Perf log in EXPERIMENTS.md
+//! tracks the optimization iterations against this bench.
+
+use asymm_sa::arch::SaConfig;
+use asymm_sa::bench_util::Bench;
+use asymm_sa::gemm::Matrix;
+use asymm_sa::sim::{fast::simulate_gemm_fast, pass_cycles, ws::WsCycleSim};
+use asymm_sa::util::rng::Rng;
+
+fn operands(
+    m: usize,
+    k: usize,
+    n: usize,
+    seed: u64,
+    hi: i64,
+) -> (Matrix<i32>, Matrix<i32>) {
+    let mut rng = Rng::new(seed);
+    let a = Matrix::from_vec(
+        m,
+        k,
+        (0..m * k)
+            .map(|_| if rng.chance(0.5) { 0 } else { rng.int_range(0, hi) as i32 })
+            .collect(),
+    )
+    .expect("sized");
+    let w = Matrix::from_vec(
+        k,
+        n,
+        (0..k * n).map(|_| rng.int_range(-hi, hi) as i32).collect(),
+    )
+    .expect("sized");
+    (a, w)
+}
+
+fn main() {
+    let mut b = Bench::new("sim_throughput");
+
+    // Cycle-accurate engine: small array (it is O(R*C) per cycle).
+    let sa8 = SaConfig::new_ws(8, 8, 8).expect("config");
+    let (a, w) = operands(256, 64, 64, 1, 127);
+    let cycles8 = {
+        let sim = WsCycleSim::new(&sa8).simulate_gemm(&a, &w).expect("sim");
+        sim.cycles
+    };
+    b.case("cycle_engine_8x8_256x64x64", || {
+        WsCycleSim::new(&sa8).simulate_gemm(&a, &w).expect("sim")
+    });
+    b.throughput(cycles8 as f64 * sa8.num_pes() as f64, "PE-cycle");
+
+    b.case("analytic_engine_8x8_256x64x64", || {
+        simulate_gemm_fast(&sa8, &a, &w).expect("sim")
+    });
+    b.throughput(cycles8 as f64 * sa8.num_pes() as f64, "PE-cycle");
+
+    // Paper-scale array, analytic engine only.
+    let sa32 = SaConfig::paper_32x32();
+    let (a32, w32) = operands(512, 128, 128, 2, 2000);
+    let cycles32 = simulate_gemm_fast(&sa32, &a32, &w32).expect("sim").cycles;
+    b.case("analytic_engine_32x32_512x128x128", || {
+        simulate_gemm_fast(&sa32, &a32, &w32).expect("sim")
+    });
+    b.throughput(cycles32 as f64 * sa32.num_pes() as f64, "PE-cycle");
+    println!("(PE-cycle/s = simulated silicon parallelism per wall second)");
+
+    // Sparse vs dense input cost (zero words skip no work in the oracle —
+    // this quantifies the data-dependence of the hot loop).
+    let (mut ad, wd) = operands(512, 128, 128, 3, 2000);
+    for v in ad.data.iter_mut() {
+        if *v == 0 {
+            *v = 7; // densify
+        }
+    }
+    b.case("analytic_engine_32x32_dense_input", || {
+        simulate_gemm_fast(&sa32, &ad, &wd).expect("sim")
+    });
+
+    let _ = pass_cycles(&sa32, 512);
+    b.finish();
+}

@@ -1,0 +1,79 @@
+//! Bench: Table I — per-layer GEMM simulation cost on the 32×32 array.
+//!
+//! Regenerates Table I (layer attributes + derived GEMM shapes) and times
+//! the analytic simulation of each layer's GEMM. Timing uses inputs with
+//! the stream length capped at 256 rows (logged — the full-M figures are
+//! produced by `examples/resnet50_power.rs` / the fig4 bench); toggle
+//! statistics scale linearly in M so per-row cost is representative.
+
+use std::sync::Arc;
+
+use asymm_sa::arch::SaConfig;
+use asymm_sa::bench_util::Bench;
+use asymm_sa::coordinator::{Coordinator, LayerJob};
+use asymm_sa::gemm::Matrix;
+use asymm_sa::report;
+use asymm_sa::sim::fast::simulate_gemm_fast;
+use asymm_sa::util::rng::Rng;
+use asymm_sa::workloads::{gemm_shape, table1_layers};
+
+fn quantized_operands(m: usize, k: usize, n: usize, seed: u64) -> (Matrix<i32>, Matrix<i32>) {
+    let mut rng = Rng::new(seed);
+    let a = Matrix::from_vec(
+        m,
+        k,
+        (0..m * k)
+            .map(|_| if rng.chance(0.5) { 0 } else { rng.int_range(0, 2000) as i32 })
+            .collect(),
+    )
+    .expect("sized");
+    let w = Matrix::from_vec(
+        k,
+        n,
+        (0..k * n).map(|_| rng.int_range(-2000, 2000) as i32).collect(),
+    )
+    .expect("sized");
+    (a, w)
+}
+
+fn main() {
+    print!("{}", report::table1_string(&table1_layers()));
+    println!();
+
+    let sa = SaConfig::paper_32x32();
+    let mut b = Bench::new("table1_layers");
+    const M_CAP: usize = 256;
+
+    for layer in table1_layers() {
+        let (p, ck2, m_out) = gemm_shape(&layer);
+        let m_used = p.min(M_CAP);
+        if m_used < p {
+            println!("note: {} timed with M capped {p} -> {m_used}", layer.name);
+        }
+        let (a, w) = quantized_operands(m_used, ck2, m_out, 7);
+        b.case(&format!("{}_gemm_{}x{}x{}", layer.name, m_used, ck2, m_out), || {
+            simulate_gemm_fast(&sa, &a, &w).expect("sim")
+        });
+        b.throughput((m_used * ck2 * m_out) as f64, "MAC");
+    }
+
+    // Coordinator dispatch overhead: all six capped layers as one batch.
+    let jobs: Vec<LayerJob> = table1_layers()
+        .iter()
+        .map(|l| {
+            let (p, ck2, m_out) = gemm_shape(l);
+            let (a, w) = quantized_operands(p.min(M_CAP), ck2, m_out, 11);
+            LayerJob {
+                name: l.name.clone(),
+                a: Arc::new(a),
+                w: Arc::new(w),
+            }
+        })
+        .collect();
+    let coord = Coordinator::new(&sa, 0);
+    b.case("all_layers_coordinator_batch", || {
+        coord.run(jobs.clone()).expect("batch")
+    });
+
+    b.finish();
+}

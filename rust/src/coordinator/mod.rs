@@ -1,0 +1,295 @@
+//! Thread-pool coordinator: leader/worker execution of simulation jobs.
+//!
+//! The paper's contribution lives at the physical-design layer, so per
+//! DESIGN.md the L3 coordinator is the evaluation *driver*: it owns the
+//! job queue, fans layer-simulation jobs out to CPU workers with bounded
+//! backpressure, and aggregates results + metrics. The same machinery
+//! backs the `repro run` CLI, the figure benches and the `serve_demo`
+//! example (latency/throughput over a request stream).
+//!
+//! Implementation note: the vendored offline dependency set has no async
+//! runtime, so the pool is built directly on `std::thread` + bounded
+//! `sync_channel` queues — which is also the right tool: jobs are pure
+//! CPU-bound simulations with no I/O to overlap.
+
+pub mod metrics;
+
+pub use metrics::{Metrics, MetricsSnapshot};
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::arch::SaConfig;
+use crate::error::{Error, Result};
+use crate::gemm::Matrix;
+use crate::sim::{fast::simulate_gemm_fast, GemmSim};
+
+/// One simulation job: a quantized GEMM belonging to a named layer.
+#[derive(Debug, Clone)]
+pub struct LayerJob {
+    /// Layer name (reporting key).
+    pub name: String,
+    /// Quantized activations / im2col patches, `M×K`.
+    pub a: Arc<Matrix<i32>>,
+    /// Quantized weights, `K×N`.
+    pub w: Arc<Matrix<i32>>,
+}
+
+/// Result of one job.
+#[derive(Debug, Clone)]
+pub struct LayerResult {
+    /// Layer name.
+    pub name: String,
+    /// Full simulation result (outputs + exact bus statistics).
+    pub sim: GemmSim,
+    /// Wall-clock seconds the worker spent on the job.
+    pub wall_secs: f64,
+}
+
+/// Leader/worker coordinator over a fixed array configuration.
+pub struct Coordinator {
+    sa: SaConfig,
+    workers: usize,
+    metrics: Arc<Metrics>,
+}
+
+impl Coordinator {
+    /// New coordinator; `workers == 0` uses all available CPUs.
+    pub fn new(sa: &SaConfig, workers: usize) -> Self {
+        let workers = if workers == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+        } else {
+            workers
+        };
+        Coordinator {
+            sa: sa.clone(),
+            workers,
+            metrics: Arc::new(Metrics::default()),
+        }
+    }
+
+    /// Number of worker threads.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Shared metrics handle.
+    pub fn metrics(&self) -> Arc<Metrics> {
+        Arc::clone(&self.metrics)
+    }
+
+    /// Run all jobs to completion; results are returned in input order.
+    ///
+    /// Dispatch uses a bounded queue (2× workers) so a slow pool applies
+    /// backpressure to the feeder instead of buffering the workload, and
+    /// a shared receiver so idle workers steal the next job (no static
+    /// partitioning — layer costs are wildly uneven).
+    pub fn run(&self, jobs: Vec<LayerJob>) -> Result<Vec<LayerResult>> {
+        let n = jobs.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let (job_tx, job_rx): (SyncSender<(usize, LayerJob)>, Receiver<(usize, LayerJob)>) =
+            sync_channel(self.workers * 2);
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        let (res_tx, res_rx) = sync_channel::<(usize, Result<LayerResult>)>(n);
+        let in_flight = Arc::new(AtomicUsize::new(0));
+
+        std::thread::scope(|scope| -> Result<Vec<LayerResult>> {
+            for _ in 0..self.workers {
+                let job_rx = Arc::clone(&job_rx);
+                let res_tx = res_tx.clone();
+                let sa = self.sa.clone();
+                let metrics = Arc::clone(&self.metrics);
+                let in_flight = Arc::clone(&in_flight);
+                scope.spawn(move || loop {
+                    let next = { job_rx.lock().expect("queue poisoned").recv() };
+                    let Ok((idx, job)) = next else { break };
+                    in_flight.fetch_add(1, Ordering::Relaxed);
+                    let t0 = Instant::now();
+                    let out = simulate_gemm_fast(&sa, &job.a, &job.w).map(|sim| {
+                        let wall = t0.elapsed().as_secs_f64();
+                        metrics.record_job(&sim, wall);
+                        LayerResult {
+                            name: job.name,
+                            sim,
+                            wall_secs: wall,
+                        }
+                    });
+                    in_flight.fetch_sub(1, Ordering::Relaxed);
+                    if res_tx.send((idx, out)).is_err() {
+                        break;
+                    }
+                });
+            }
+            drop(res_tx);
+
+            // Leader feeds the bounded queue from this thread.
+            let feeder = scope.spawn(move || {
+                for (idx, job) in jobs.into_iter().enumerate() {
+                    if job_tx.send((idx, job)).is_err() {
+                        break;
+                    }
+                }
+                // Dropping job_tx closes the queue; workers drain and exit.
+            });
+
+            let mut results: Vec<Option<LayerResult>> = (0..n).map(|_| None).collect();
+            let mut first_err: Option<Error> = None;
+            for _ in 0..n {
+                match res_rx.recv() {
+                    Ok((idx, Ok(r))) => results[idx] = Some(r),
+                    Ok((_, Err(e))) => {
+                        if first_err.is_none() {
+                            first_err = Some(e);
+                        }
+                    }
+                    Err(_) => break,
+                }
+            }
+            feeder.join().map_err(|_| {
+                Error::Coordinator("feeder thread panicked".to_string())
+            })?;
+            if let Some(e) = first_err {
+                return Err(e);
+            }
+            results
+                .into_iter()
+                .enumerate()
+                .map(|(i, r)| {
+                    r.ok_or_else(|| Error::Coordinator(format!("job {i} lost")))
+                })
+                .collect()
+        })
+    }
+
+    /// Alias kept for API compatibility with async-runtime builds.
+    pub fn run_blocking(&self, jobs: Vec<LayerJob>) -> Result<Vec<LayerResult>> {
+        self.run(jobs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::matmul_i64;
+    use crate::util::rng::Rng;
+
+    fn rand_mat(rows: usize, cols: usize, seed: u64) -> Matrix<i32> {
+        let mut rng = Rng::new(seed);
+        let data = (0..rows * cols)
+            .map(|_| rng.int_range(-100, 100) as i32)
+            .collect();
+        Matrix::from_vec(rows, cols, data).unwrap()
+    }
+
+    fn jobs(n: usize) -> Vec<LayerJob> {
+        (0..n)
+            .map(|i| LayerJob {
+                name: format!("J{i}"),
+                a: Arc::new(rand_mat(16 + i, 8, i as u64)),
+                w: Arc::new(rand_mat(8, 12, 100 + i as u64)),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn results_in_order_and_correct() {
+        let sa = SaConfig::new_ws(4, 4, 8).unwrap();
+        let coord = Coordinator::new(&sa, 3);
+        let js = jobs(7);
+        let expected: Vec<_> = js
+            .iter()
+            .map(|j| matmul_i64(&j.a, &j.w).unwrap())
+            .collect();
+        let results = coord.run(js).unwrap();
+        assert_eq!(results.len(), 7);
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(r.name, format!("J{i}"));
+            assert_eq!(r.sim.y, expected[i]);
+            assert!(r.wall_secs >= 0.0);
+        }
+    }
+
+    #[test]
+    fn parallel_equals_sequential_stats() {
+        let sa = SaConfig::new_ws(4, 4, 8).unwrap();
+        let js = jobs(5);
+        let seq: Vec<_> = js
+            .iter()
+            .map(|j| simulate_gemm_fast(&sa, &j.a, &j.w).unwrap())
+            .collect();
+        let par = Coordinator::new(&sa, 4).run(js).unwrap();
+        for (s, p) in seq.iter().zip(par.iter()) {
+            assert_eq!(s.stats, p.sim.stats);
+            assert_eq!(s.cycles, p.sim.cycles);
+        }
+    }
+
+    #[test]
+    fn metrics_accumulate() {
+        let sa = SaConfig::new_ws(4, 4, 8).unwrap();
+        let coord = Coordinator::new(&sa, 2);
+        let js = jobs(4);
+        let total_macs: u64 = js
+            .iter()
+            .map(|j| (j.a.rows * j.a.cols * j.w.cols) as u64)
+            .sum();
+        coord.run(js).unwrap();
+        let snap = coord.metrics().snapshot();
+        assert_eq!(snap.jobs, 4);
+        assert_eq!(snap.macs, total_macs);
+        assert!(snap.sim_cycles > 0);
+    }
+
+    #[test]
+    fn empty_job_list() {
+        let sa = SaConfig::new_ws(4, 4, 8).unwrap();
+        let results = Coordinator::new(&sa, 2).run(vec![]).unwrap();
+        assert!(results.is_empty());
+    }
+
+    #[test]
+    fn bad_job_surfaces_error() {
+        let sa = SaConfig::new_ws(4, 4, 8).unwrap();
+        let bad = vec![LayerJob {
+            name: "bad".into(),
+            a: Arc::new(rand_mat(4, 5, 1)),
+            w: Arc::new(rand_mat(6, 4, 2)), // inner mismatch
+        }];
+        assert!(Coordinator::new(&sa, 1).run(bad).is_err());
+    }
+
+    #[test]
+    fn error_does_not_wedge_pool() {
+        // One bad job among many good ones: error reported, pool exits.
+        let sa = SaConfig::new_ws(4, 4, 8).unwrap();
+        let mut js = jobs(6);
+        js.insert(
+            3,
+            LayerJob {
+                name: "bad".into(),
+                a: Arc::new(rand_mat(4, 5, 1)),
+                w: Arc::new(rand_mat(6, 4, 2)),
+            },
+        );
+        assert!(Coordinator::new(&sa, 2).run(js).is_err());
+    }
+
+    #[test]
+    fn zero_workers_defaults_to_cpus() {
+        let sa = SaConfig::new_ws(4, 4, 8).unwrap();
+        assert!(Coordinator::new(&sa, 0).workers() >= 1);
+    }
+
+    #[test]
+    fn many_more_jobs_than_workers() {
+        let sa = SaConfig::new_ws(4, 4, 8).unwrap();
+        let results = Coordinator::new(&sa, 2).run(jobs(40)).unwrap();
+        assert_eq!(results.len(), 40);
+    }
+}

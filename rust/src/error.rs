@@ -1,0 +1,51 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Errors produced by the asymm-sa library.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Shape/tiling mismatch in a GEMM or simulator call.
+    #[error("shape error: {0}")]
+    Shape(String),
+
+    /// Invalid configuration value or malformed JSON document.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Artifact loading / PJRT execution failure.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Underlying XLA/PJRT error.
+    #[error("xla error: {0}")]
+    Xla(#[from] xla::Error),
+
+    /// I/O failure (artifact files, reports).
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// Coordinator channel/task failure.
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    /// Convenience constructor for shape errors.
+    pub fn shape(msg: impl Into<String>) -> Self {
+        Error::Shape(msg.into())
+    }
+
+    /// Convenience constructor for config errors.
+    pub fn config(msg: impl Into<String>) -> Self {
+        Error::Config(msg.into())
+    }
+
+    /// Convenience constructor for runtime errors.
+    pub fn runtime(msg: impl Into<String>) -> Self {
+        Error::Runtime(msg.into())
+    }
+}

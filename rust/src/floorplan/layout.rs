@@ -1,0 +1,199 @@
+//! Concrete array layout: PE placement rectangles and bus tracks.
+//!
+//! Generates the geometry behind the paper's Fig. 3: an `R×C` grid of
+//! identical PE rectangles (square or asymmetric), plus the horizontal
+//! and vertical bus tracks crossing them. Consumed by the SVG/ASCII
+//! renderers ([`super::svg`]) and by the power model's per-segment
+//! lengths.
+
+
+use crate::arch::SaConfig;
+use crate::error::Result;
+
+use super::PeGeometry;
+
+/// Axis-aligned rectangle in µm.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Rect {
+    /// Left edge x (µm).
+    pub x: f64,
+    /// Top edge y (µm).
+    pub y: f64,
+    /// Width (µm).
+    pub w: f64,
+    /// Height (µm).
+    pub h: f64,
+}
+
+/// A straight bus track across the array.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BusTrack {
+    /// Start point (µm).
+    pub x0: f64,
+    /// Start point (µm).
+    pub y0: f64,
+    /// End point (µm).
+    pub x1: f64,
+    /// End point (µm).
+    pub y1: f64,
+    /// Wires in the track.
+    pub bits: u32,
+}
+
+/// Full physical layout of one array floorplan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArrayLayout {
+    /// Array configuration the layout was generated for.
+    pub rows: usize,
+    /// Array columns.
+    pub cols: usize,
+    /// PE geometry used.
+    pub pe: PeGeometry,
+    /// One rectangle per PE, row-major.
+    pub pes: Vec<Rect>,
+    /// One horizontal input-bus track per row (West→East).
+    pub h_tracks: Vec<BusTrack>,
+    /// One vertical psum-bus track per column (North→South).
+    pub v_tracks: Vec<BusTrack>,
+}
+
+impl ArrayLayout {
+    /// Place the `R×C` grid of PEs with the given geometry.
+    pub fn generate(sa: &SaConfig, pe: PeGeometry) -> Result<Self> {
+        let (w, h) = (pe.width_um(), pe.height_um());
+        let mut pes = Vec::with_capacity(sa.num_pes());
+        for r in 0..sa.rows {
+            for c in 0..sa.cols {
+                pes.push(Rect {
+                    x: c as f64 * w,
+                    y: r as f64 * h,
+                    w,
+                    h,
+                });
+            }
+        }
+        let total_w = sa.cols as f64 * w;
+        let total_h = sa.rows as f64 * h;
+        let h_tracks = (0..sa.rows)
+            .map(|r| BusTrack {
+                x0: 0.0,
+                y0: (r as f64 + 0.5) * h,
+                x1: total_w,
+                y1: (r as f64 + 0.5) * h,
+                bits: sa.bus_bits_horizontal(),
+            })
+            .collect();
+        let v_tracks = (0..sa.cols)
+            .map(|c| BusTrack {
+                x0: (c as f64 + 0.5) * w,
+                y0: 0.0,
+                x1: (c as f64 + 0.5) * w,
+                y1: total_h,
+                bits: sa.bus_bits_vertical(),
+            })
+            .collect();
+        Ok(ArrayLayout {
+            rows: sa.rows,
+            cols: sa.cols,
+            pe,
+            pes,
+            h_tracks,
+            v_tracks,
+        })
+    }
+
+    /// Bounding box (width, height) of the array in µm.
+    pub fn extent_um(&self) -> (f64, f64) {
+        (
+            self.cols as f64 * self.pe.width_um(),
+            self.rows as f64 * self.pe.height_um(),
+        )
+    }
+
+    /// Total silicon area in µm² (invariant across aspect ratios).
+    pub fn area_um2(&self) -> f64 {
+        let (w, h) = self.extent_um();
+        w * h
+    }
+
+    /// Total routed wirelength in µm: tracks × their bit widths.
+    /// Equals the paper's eq. 3 by construction.
+    pub fn total_wirelength_um(&self) -> f64 {
+        let h: f64 = self
+            .h_tracks
+            .iter()
+            .map(|t| (t.x1 - t.x0).abs() * t.bits as f64)
+            .sum();
+        let v: f64 = self
+            .v_tracks
+            .iter()
+            .map(|t| (t.y1 - t.y0).abs() * t.bits as f64)
+            .sum();
+        h + v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::floorplan::WirelengthModel;
+
+    #[test]
+    fn fig3_8x8_layouts() {
+        // The paper's Fig. 3: 8×8 arrays, square vs W/H=3.8.
+        let sa = SaConfig::paper_8x8();
+        let area = 1000.0;
+        let sym = ArrayLayout::generate(&sa, PeGeometry::square(area).unwrap()).unwrap();
+        let asym =
+            ArrayLayout::generate(&sa, PeGeometry::new(area, 3.8).unwrap()).unwrap();
+        assert_eq!(sym.pes.len(), 64);
+        assert_eq!(asym.pes.len(), 64);
+        // Same silicon area, different outline.
+        assert!((sym.area_um2() - asym.area_um2()).abs() < 1e-6);
+        let (sw, sh) = sym.extent_um();
+        let (aw, ah) = asym.extent_um();
+        assert!((sw - sh).abs() < 1e-9, "symmetric outline is square");
+        assert!(aw > ah, "asymmetric outline is wider than tall");
+    }
+
+    #[test]
+    fn pes_tile_without_overlap() {
+        let sa = SaConfig::new_ws(4, 4, 8).unwrap();
+        let l = ArrayLayout::generate(&sa, PeGeometry::new(100.0, 2.0).unwrap()).unwrap();
+        // PE (r,c) starts exactly where (r,c-1) ends.
+        for r in 0..4 {
+            for c in 1..4 {
+                let prev = l.pes[r * 4 + c - 1];
+                let cur = l.pes[r * 4 + c];
+                assert!((prev.x + prev.w - cur.x).abs() < 1e-9);
+            }
+        }
+        // Sum of PE areas equals array area.
+        let total: f64 = l.pes.iter().map(|p| p.w * p.h).sum();
+        assert!((total - l.area_um2()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn track_counts_and_widths() {
+        let sa = SaConfig::paper_32x32();
+        let l = ArrayLayout::generate(&sa, PeGeometry::square(900.0).unwrap()).unwrap();
+        assert_eq!(l.h_tracks.len(), 32);
+        assert_eq!(l.v_tracks.len(), 32);
+        assert!(l.h_tracks.iter().all(|t| t.bits == 16));
+        assert!(l.v_tracks.iter().all(|t| t.bits == 37));
+    }
+
+    #[test]
+    fn layout_wirelength_equals_eq3() {
+        let sa = SaConfig::paper_32x32();
+        for &aspect in &[1.0, 2.3125, 3.8] {
+            let pe = PeGeometry::new(750.0, aspect).unwrap();
+            let l = ArrayLayout::generate(&sa, pe).unwrap();
+            let wl = WirelengthModel::of(&sa, &pe);
+            assert!(
+                (l.total_wirelength_um() - wl.total_um()).abs() / wl.total_um() < 1e-12,
+                "aspect {aspect}"
+            );
+        }
+    }
+}

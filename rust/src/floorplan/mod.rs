@@ -1,0 +1,141 @@
+//! Floorplan model: PE geometry, wirelength (paper eqs. 1–4), layouts.
+//!
+//! The paper's §III model: each PE has fixed area `A = W·H`; a bus of
+//! `B_h` wires crosses every PE horizontally (segment length `W`) and a
+//! bus of `B_v` wires crosses every PE vertically (segment length `H`):
+//!
+//! * `WL_h = R·C·W·B_h` (eq. 1)
+//! * `WL_v = R·C·H·B_v` (eq. 2)
+//! * `WL   = R·C·(W·B_h + H·B_v)` (eq. 3)
+
+pub mod layout;
+pub mod optimizer;
+pub mod svg;
+pub mod timing;
+
+pub use layout::ArrayLayout;
+pub use timing::WireTiming;
+
+
+use crate::arch::SaConfig;
+use crate::error::{Error, Result};
+
+/// Physical shape of one PE: fixed area, variable aspect ratio.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PeGeometry {
+    /// PE area `A` in µm² (constant across floorplans, paper §III).
+    pub area_um2: f64,
+    /// Aspect ratio `W/H`. 1.0 = the conventional square PE; the paper's
+    /// asymmetric design uses ≈3.8.
+    pub aspect: f64,
+}
+
+impl PeGeometry {
+    /// Construct and validate.
+    pub fn new(area_um2: f64, aspect: f64) -> Result<Self> {
+        if !(area_um2 > 0.0) || !area_um2.is_finite() {
+            return Err(Error::config(format!("PE area must be positive: {area_um2}")));
+        }
+        if !(aspect > 0.0) || !aspect.is_finite() {
+            return Err(Error::config(format!("aspect ratio must be positive: {aspect}")));
+        }
+        Ok(PeGeometry { area_um2, aspect })
+    }
+
+    /// Square PE of the given area (the paper's symmetric baseline).
+    pub fn square(area_um2: f64) -> Result<Self> {
+        Self::new(area_um2, 1.0)
+    }
+
+    /// PE width `W = sqrt(A·r)` in µm.
+    pub fn width_um(&self) -> f64 {
+        (self.area_um2 * self.aspect).sqrt()
+    }
+
+    /// PE height `H = sqrt(A/r)` in µm.
+    pub fn height_um(&self) -> f64 {
+        (self.area_um2 / self.aspect).sqrt()
+    }
+}
+
+/// Wirelength model of one array floorplan (paper eqs. 1–3).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WirelengthModel {
+    /// Horizontal bus wirelength `WL_h` in µm.
+    pub horizontal_um: f64,
+    /// Vertical bus wirelength `WL_v` in µm (includes the psum bus only;
+    /// the weight-load chain shares the vertical tracks and is accounted
+    /// separately in the power model).
+    pub vertical_um: f64,
+}
+
+impl WirelengthModel {
+    /// Evaluate eqs. 1–2 for an array `sa` with PE geometry `pe`.
+    pub fn of(sa: &SaConfig, pe: &PeGeometry) -> Self {
+        let rc = (sa.rows * sa.cols) as f64;
+        WirelengthModel {
+            horizontal_um: rc * pe.width_um() * sa.bus_bits_horizontal() as f64,
+            vertical_um: rc * pe.height_um() * sa.bus_bits_vertical() as f64,
+        }
+    }
+
+    /// Total wirelength `WL` (eq. 3) in µm.
+    pub fn total_um(&self) -> f64 {
+        self.horizontal_um + self.vertical_um
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry_preserves_area() {
+        for &r in &[0.25, 1.0, 3.8, 10.0] {
+            let pe = PeGeometry::new(1000.0, r).unwrap();
+            assert!((pe.width_um() * pe.height_um() - 1000.0).abs() < 1e-9);
+            assert!((pe.width_um() / pe.height_um() - r).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn square_is_aspect_one() {
+        let pe = PeGeometry::square(400.0).unwrap();
+        assert_eq!(pe.width_um(), 20.0);
+        assert_eq!(pe.height_um(), 20.0);
+    }
+
+    #[test]
+    fn geometry_rejects_bad_values() {
+        assert!(PeGeometry::new(0.0, 1.0).is_err());
+        assert!(PeGeometry::new(-1.0, 1.0).is_err());
+        assert!(PeGeometry::new(1.0, 0.0).is_err());
+        assert!(PeGeometry::new(1.0, f64::NAN).is_err());
+        assert!(PeGeometry::new(f64::INFINITY, 1.0).is_err());
+    }
+
+    #[test]
+    fn wirelength_eq3() {
+        // Paper eq. 3: WL = R·C·(W·B_h + H·B_v).
+        let sa = SaConfig::paper_32x32();
+        let pe = PeGeometry::new(900.0, 1.0).unwrap();
+        let wl = WirelengthModel::of(&sa, &pe);
+        let rc = 1024.0;
+        assert!((wl.horizontal_um - rc * 30.0 * 16.0).abs() < 1e-6);
+        assert!((wl.vertical_um - rc * 30.0 * 37.0).abs() < 1e-6);
+        assert!((wl.total_um() - rc * 30.0 * 53.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn asymmetric_floorplan_cuts_total_wirelength() {
+        // Eq. 5: W/H = B_v/B_h minimizes WL; check it beats square.
+        let sa = SaConfig::paper_32x32();
+        let square = WirelengthModel::of(&sa, &PeGeometry::square(900.0).unwrap());
+        let opt_ratio = 37.0 / 16.0;
+        let asym =
+            WirelengthModel::of(&sa, &PeGeometry::new(900.0, opt_ratio).unwrap());
+        assert!(asym.total_um() < square.total_um());
+        // At the optimum the two components are equal (AM-GM equality).
+        assert!((asym.horizontal_um - asym.vertical_um).abs() / asym.total_um() < 1e-9);
+    }
+}

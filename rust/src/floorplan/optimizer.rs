@@ -1,0 +1,163 @@
+//! Aspect-ratio optimization (paper §III-A/§III-B, eqs. 5–6).
+//!
+//! * [`wirelength_optimal_ratio`] — eq. 5: `W/H = B_v/B_h`, minimizing
+//!   total wirelength for constant PE area.
+//! * [`closed_form_ratio`] — eq. 6: `W/H = (B_v·a_v)/(B_h·a_h)`,
+//!   minimizing activity-weighted wirelength (∝ interconnect dynamic
+//!   power of the two data buses).
+//! * [`minimize_ratio`] — golden-section search over an arbitrary cost
+//!   `f(aspect)`, used to (a) cross-check the closed forms and (b) find
+//!   the true optimum of the *full* power model (which adds the
+//!   aspect-dependent clock/control term; see [`crate::power`]).
+
+use crate::arch::SaConfig;
+
+/// Eq. 5: the aspect ratio minimizing total wirelength.
+pub fn wirelength_optimal_ratio(sa: &SaConfig) -> f64 {
+    sa.bus_bits_vertical() as f64 / sa.bus_bits_horizontal() as f64
+}
+
+/// Eq. 6: the aspect ratio minimizing activity-weighted wirelength.
+///
+/// For the paper's configuration (`B_h=16, B_v=37, a_h=0.22, a_v=0.36`)
+/// this is ≈3.8 — the ratio used for the asymmetric design in §IV.
+pub fn closed_form_ratio(sa: &SaConfig, a_h: f64, a_v: f64) -> f64 {
+    assert!(a_h > 0.0 && a_v > 0.0, "activities must be positive");
+    (sa.bus_bits_vertical() as f64 * a_v) / (sa.bus_bits_horizontal() as f64 * a_h)
+}
+
+/// Activity-weighted bus wirelength cost at aspect `r` (the objective
+/// whose minimum eq. 6 gives, up to a constant factor):
+/// `√r·B_h·a_h + B_v·a_v/√r`.
+pub fn weighted_bus_cost(sa: &SaConfig, a_h: f64, a_v: f64, aspect: f64) -> f64 {
+    let s = aspect.sqrt();
+    s * sa.bus_bits_horizontal() as f64 * a_h
+        + sa.bus_bits_vertical() as f64 * a_v / s
+}
+
+/// Golden-section minimization of a unimodal `cost` over `[lo, hi]`.
+///
+/// Returns `(argmin, min)` to within `tol` on the argument.
+pub fn minimize_ratio<F: Fn(f64) -> f64>(cost: F, lo: f64, hi: f64, tol: f64) -> (f64, f64) {
+    assert!(lo > 0.0 && hi > lo, "need 0 < lo < hi");
+    const PHI: f64 = 0.618_033_988_749_894_8;
+    let (mut a, mut b) = (lo, hi);
+    let mut c = b - PHI * (b - a);
+    let mut d = a + PHI * (b - a);
+    let (mut fc, mut fd) = (cost(c), cost(d));
+    while (b - a) > tol {
+        if fc < fd {
+            b = d;
+            d = c;
+            fd = fc;
+            c = b - PHI * (b - a);
+            fc = cost(c);
+        } else {
+            a = c;
+            c = d;
+            fc = fd;
+            d = a + PHI * (b - a);
+            fd = cost(d);
+        }
+    }
+    let x = 0.5 * (a + b);
+    (x, cost(x))
+}
+
+/// Uniform log-space sweep of `cost` over `[lo, hi]` with `n` points:
+/// the brute-force cross-check (and the data for the ablation bench).
+pub fn sweep_ratio<F: Fn(f64) -> f64>(cost: F, lo: f64, hi: f64, n: usize) -> Vec<(f64, f64)> {
+    assert!(n >= 2 && lo > 0.0 && hi > lo);
+    (0..n)
+        .map(|i| {
+            let t = i as f64 / (n - 1) as f64;
+            let r = lo * (hi / lo).powf(t);
+            (r, cost(r))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq5_paper_value() {
+        let sa = SaConfig::paper_32x32();
+        // B_v/B_h = 37/16 = 2.3125.
+        assert!((wirelength_optimal_ratio(&sa) - 2.3125).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eq6_paper_value_is_3_8() {
+        // §IV: B_h=16, B_v=37, a_h=0.22, a_v=0.36 → W/H ≈ 3.8.
+        let sa = SaConfig::paper_32x32();
+        let r = closed_form_ratio(&sa, 0.22, 0.36);
+        assert!((r - 3.7840909).abs() < 1e-6, "got {r}");
+    }
+
+    #[test]
+    fn eq6_reduces_to_eq5_at_equal_activity() {
+        let sa = SaConfig::paper_32x32();
+        assert!(
+            (closed_form_ratio(&sa, 0.3, 0.3) - wirelength_optimal_ratio(&sa)).abs() < 1e-12
+        );
+    }
+
+    #[test]
+    fn numeric_minimum_matches_closed_form() {
+        // The golden-section optimum of the weighted-bus cost must land on
+        // eq. 6 — the cross-check the paper derives analytically.
+        let sa = SaConfig::paper_32x32();
+        let (a_h, a_v) = (0.22, 0.36);
+        let want = closed_form_ratio(&sa, a_h, a_v);
+        let (got, _) = minimize_ratio(
+            |r| weighted_bus_cost(&sa, a_h, a_v, r),
+            0.1,
+            20.0,
+            1e-9,
+        );
+        assert!((got - want).abs() < 1e-5, "numeric {got} vs closed {want}");
+    }
+
+    #[test]
+    fn pes_should_not_be_square() {
+        // Paper §III-A conclusion: since B_v > B_h (WS construction), the
+        // optimal PE is wider than tall — for ALL array sizes.
+        for rows in [4usize, 8, 16, 32, 64, 128] {
+            let sa = SaConfig::new_ws(rows, rows, 16).unwrap();
+            assert!(wirelength_optimal_ratio(&sa) > 1.0, "rows={rows}");
+            assert!(closed_form_ratio(&sa, 0.22, 0.36) > 1.0, "rows={rows}");
+        }
+    }
+
+    #[test]
+    fn sweep_bowl_shape() {
+        let sa = SaConfig::paper_32x32();
+        let pts = sweep_ratio(|r| weighted_bus_cost(&sa, 0.22, 0.36, r), 0.25, 16.0, 33);
+        assert_eq!(pts.len(), 33);
+        // Cost decreases toward the optimum then increases: find argmin,
+        // ensure interior and close to eq. 6.
+        let (imin, _) = pts
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1 .1.partial_cmp(&b.1 .1).unwrap())
+            .unwrap();
+        assert!(imin > 0 && imin < pts.len() - 1, "minimum must be interior");
+        let want = closed_form_ratio(&sa, 0.22, 0.36);
+        assert!((pts[imin].0 - want).abs() / want < 0.2);
+    }
+
+    #[test]
+    fn minimize_handles_skewed_bowls() {
+        let (x, f) = minimize_ratio(|r| (r - 7.0) * (r - 7.0) + 3.0, 0.5, 50.0, 1e-9);
+        assert!((x - 7.0).abs() < 1e-6);
+        assert!((f - 3.0).abs() < 1e-10);
+    }
+
+    #[test]
+    #[should_panic]
+    fn closed_form_rejects_zero_activity() {
+        closed_form_ratio(&SaConfig::paper_32x32(), 0.0, 0.3);
+    }
+}

@@ -1,0 +1,140 @@
+//! Renderers for array layouts: SVG (the paper's Fig. 3) and ASCII.
+
+use std::fmt::Write as _;
+
+use super::layout::ArrayLayout;
+
+/// Render a layout as a standalone SVG document (Fig. 3 style: PE grid
+/// with horizontal input tracks and vertical psum tracks overlaid).
+pub fn render_svg(layout: &ArrayLayout, title: &str) -> String {
+    let (w_um, h_um) = layout.extent_um();
+    let margin = 0.06 * w_um.max(h_um);
+    let scale = 900.0 / (w_um.max(h_um) + 2.0 * margin);
+    let px = |v: f64| (v + margin) * scale;
+    let vw = (w_um + 2.0 * margin) * scale;
+    let vh = (h_um + 2.0 * margin) * scale + 40.0;
+
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        r#"<svg xmlns="http://www.w3.org/2000/svg" width="{vw:.0}" height="{vh:.0}" viewBox="0 0 {vw:.1} {vh:.1}">"#
+    );
+    let _ = writeln!(
+        s,
+        r#"<text x="{:.1}" y="20" font-family="sans-serif" font-size="16" text-anchor="middle">{}</text>"#,
+        vw / 2.0,
+        title
+    );
+    let _ = writeln!(s, r#"<g transform="translate(0,30)">"#);
+    for pe in &layout.pes {
+        let _ = writeln!(
+            s,
+            r##"<rect x="{:.2}" y="{:.2}" width="{:.2}" height="{:.2}" fill="#dce9f6" stroke="#33557a" stroke-width="0.8"/>"##,
+            px(pe.x),
+            px(pe.y),
+            pe.w * scale,
+            pe.h * scale
+        );
+    }
+    for t in &layout.h_tracks {
+        let _ = writeln!(
+            s,
+            r##"<line x1="{:.2}" y1="{:.2}" x2="{:.2}" y2="{:.2}" stroke="#c0392b" stroke-width="{:.2}" opacity="0.7"/>"##,
+            px(t.x0),
+            px(t.y0),
+            px(t.x1),
+            px(t.y1),
+            (t.bits as f64).sqrt() * 0.6
+        );
+    }
+    for t in &layout.v_tracks {
+        let _ = writeln!(
+            s,
+            r##"<line x1="{:.2}" y1="{:.2}" x2="{:.2}" y2="{:.2}" stroke="#27ae60" stroke-width="{:.2}" opacity="0.7"/>"##,
+            px(t.x0),
+            px(t.y0),
+            px(t.x1),
+            px(t.y1),
+            (t.bits as f64).sqrt() * 0.6
+        );
+    }
+    let _ = writeln!(s, "</g></svg>");
+    s
+}
+
+/// Compact ASCII rendering of the array outline and PE proportions —
+/// printed by the CLI so the Fig.-3 comparison works in a terminal.
+pub fn render_ascii(layout: &ArrayLayout) -> String {
+    // Map each PE to a character cell block: width proportional to W,
+    // height proportional to H, clamped to keep the output small.
+    let aspect = layout.pe.aspect;
+    let cell_w = ((2.0 * aspect.sqrt()).round() as usize).clamp(1, 12);
+    let cell_h = ((2.0 / aspect.sqrt()).round() as usize).clamp(1, 6);
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "{}x{} array, PE {:.1}um x {:.1}um (W/H = {:.2})",
+        layout.rows,
+        layout.cols,
+        layout.pe.width_um(),
+        layout.pe.height_um(),
+        aspect
+    );
+    for _r in 0..layout.rows {
+        for line in 0..cell_h {
+            for _c in 0..layout.cols {
+                if line == 0 {
+                    s.push('+');
+                    s.push_str(&"-".repeat(cell_w));
+                } else {
+                    s.push('|');
+                    s.push_str(&" ".repeat(cell_w));
+                }
+            }
+            s.push_str(if line == 0 { "+\n" } else { "|\n" });
+        }
+    }
+    for _c in 0..layout.cols {
+        s.push('+');
+        s.push_str(&"-".repeat(cell_w));
+    }
+    s.push_str("+\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::SaConfig;
+    use crate::floorplan::PeGeometry;
+
+    fn layout(aspect: f64) -> ArrayLayout {
+        ArrayLayout::generate(
+            &SaConfig::paper_8x8(),
+            PeGeometry::new(1000.0, aspect).unwrap(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn svg_is_well_formed() {
+        let svg = render_svg(&layout(3.8), "asymmetric 8x8");
+        assert!(svg.starts_with("<svg"));
+        assert!(svg.trim_end().ends_with("</svg>"));
+        // 64 PE rects + 8 + 8 tracks.
+        assert_eq!(svg.matches("<rect").count(), 64);
+        assert_eq!(svg.matches("<line").count(), 16);
+        assert!(svg.contains("asymmetric 8x8"));
+    }
+
+    #[test]
+    fn ascii_reflects_aspect() {
+        let sym = render_ascii(&layout(1.0));
+        let asym = render_ascii(&layout(3.8));
+        assert!(sym.contains("W/H = 1.00"));
+        assert!(asym.contains("W/H = 3.80"));
+        // Asymmetric cells are wider: longer lines for the same column count.
+        let line_len = |s: &str| s.lines().nth(1).map(|l| l.len()).unwrap_or(0);
+        assert!(line_len(&asym) > line_len(&sym));
+    }
+}

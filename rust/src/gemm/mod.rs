@@ -1,0 +1,295 @@
+//! GEMM substrate: matrices, reference matmul, im2col, SA tiling.
+//!
+//! Convolutions are lowered to the GEMM a weight-stationary SA executes
+//! (paper §II): `Y[P×M] = patches[P×CK²] @ W[CK²×M]`, then the GEMM is
+//! tiled onto the R×C array ([`tiling`]).
+
+pub mod tiling;
+
+pub use tiling::{TilePlan, TileStep};
+
+use crate::error::{Error, Result};
+
+/// Dense row-major matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix<T> {
+    /// Number of rows.
+    pub rows: usize,
+    /// Number of columns.
+    pub cols: usize,
+    /// Row-major backing store, `len == rows * cols`.
+    pub data: Vec<T>,
+}
+
+impl<T: Copy + Default> Matrix<T> {
+    /// Zero-initialized matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix {
+            rows,
+            cols,
+            data: vec![T::default(); rows * cols],
+        }
+    }
+
+    /// Build from a row-major vec. Errors if sizes disagree.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<T>) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(Error::shape(format!(
+                "matrix {}x{} needs {} elems, got {}",
+                rows,
+                cols,
+                rows * cols,
+                data.len()
+            )));
+        }
+        Ok(Matrix { rows, cols, data })
+    }
+
+    /// Element accessor.
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> T {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    /// Element setter.
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: T) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Borrow row `r` as a slice.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[T] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Matrix<T> {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.set(c, r, self.get(r, c));
+            }
+        }
+        out
+    }
+
+    /// Copy a `bm x bn` block starting at `(r0, c0)`, zero-padded past the
+    /// matrix edge (how the SA tiler pads ragged tiles).
+    pub fn block_padded(&self, r0: usize, c0: usize, bm: usize, bn: usize) -> Matrix<T> {
+        let mut out = Matrix::zeros(bm, bn);
+        for r in 0..bm.min(self.rows.saturating_sub(r0)) {
+            for c in 0..bn.min(self.cols.saturating_sub(c0)) {
+                out.set(r, c, self.get(r0 + r, c0 + c));
+            }
+        }
+        out
+    }
+}
+
+/// Reference integer GEMM with exact i64 accumulation: the oracle every
+/// simulator result is checked against (mirrors `kernels.ref.matmul_ref`).
+pub fn matmul_i64(a: &Matrix<i32>, w: &Matrix<i32>) -> Result<Matrix<i64>> {
+    if a.cols != w.rows {
+        return Err(Error::shape(format!(
+            "inner dims mismatch: {}x{} @ {}x{}",
+            a.rows, a.cols, w.rows, w.cols
+        )));
+    }
+    let mut out = Matrix::zeros(a.rows, w.cols);
+    for i in 0..a.rows {
+        for j in 0..w.cols {
+            let mut acc = 0i64;
+            for k in 0..a.cols {
+                acc += a.get(i, k) as i64 * w.get(k, j) as i64;
+            }
+            out.set(i, j, acc);
+        }
+    }
+    Ok(out)
+}
+
+/// Reference f32 GEMM.
+pub fn matmul_f32(a: &Matrix<f32>, w: &Matrix<f32>) -> Result<Matrix<f32>> {
+    if a.cols != w.rows {
+        return Err(Error::shape(format!(
+            "inner dims mismatch: {}x{} @ {}x{}",
+            a.rows, a.cols, w.rows, w.cols
+        )));
+    }
+    let mut out = Matrix::zeros(a.rows, w.cols);
+    for i in 0..a.rows {
+        for j in 0..w.cols {
+            let mut acc = 0f32;
+            for k in 0..a.cols {
+                acc += a.get(i, k) * w.get(k, j);
+            }
+            out.set(i, j, acc);
+        }
+    }
+    Ok(out)
+}
+
+/// im2col for NCHW single-batch input: `(C,H,W)` → `(H_out·W_out, C·k²)`
+/// with column order `(c, ki, kj)` — identical to `compile.model.im2col`.
+pub fn im2col(
+    x: &[f32],
+    c: usize,
+    h: usize,
+    w: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+) -> Result<Matrix<f32>> {
+    if x.len() != c * h * w {
+        return Err(Error::shape(format!(
+            "input len {} != C*H*W = {}",
+            x.len(),
+            c * h * w
+        )));
+    }
+    if stride == 0 || k == 0 {
+        return Err(Error::shape("k and stride must be non-zero"));
+    }
+    let h_out = (h + 2 * pad - k) / stride + 1;
+    let w_out = (w + 2 * pad - k) / stride + 1;
+    let mut out = Matrix::zeros(h_out * w_out, c * k * k);
+    for oy in 0..h_out {
+        for ox in 0..w_out {
+            let p = oy * w_out + ox;
+            for ci in 0..c {
+                for ki in 0..k {
+                    for kj in 0..k {
+                        let iy = (oy * stride + ki) as isize - pad as isize;
+                        let ix = (ox * stride + kj) as isize - pad as isize;
+                        let v = if iy >= 0 && ix >= 0 && (iy as usize) < h && (ix as usize) < w {
+                            x[ci * h * w + iy as usize * w + ix as usize]
+                        } else {
+                            0.0
+                        };
+                        out.set(p, ci * k * k + ki * k + kj, v);
+                    }
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_roundtrip_and_access() {
+        let m = Matrix::from_vec(2, 3, vec![1, 2, 3, 4, 5, 6]).unwrap();
+        assert_eq!(m.get(0, 2), 3);
+        assert_eq!(m.get(1, 0), 4);
+        assert_eq!(m.row(1), &[4, 5, 6]);
+        let t = m.transpose();
+        assert_eq!(t.get(2, 0), 3);
+        assert_eq!(t.get(0, 1), 4);
+    }
+
+    #[test]
+    fn from_vec_rejects_bad_len() {
+        assert!(Matrix::from_vec(2, 3, vec![1]).is_err());
+    }
+
+    #[test]
+    fn block_padded_pads_with_zeros() {
+        let m = Matrix::from_vec(2, 2, vec![1, 2, 3, 4]).unwrap();
+        let b = m.block_padded(1, 1, 2, 2);
+        assert_eq!(b.data, vec![4, 0, 0, 0]);
+        let b2 = m.block_padded(0, 0, 2, 2);
+        assert_eq!(b2.data, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn matmul_i64_known() {
+        let a = Matrix::from_vec(2, 2, vec![1, 2, 3, 4]).unwrap();
+        let w = Matrix::from_vec(2, 2, vec![1, 1, 1, 1]).unwrap();
+        let y = matmul_i64(&a, &w).unwrap();
+        assert_eq!(y.data, vec![3, 3, 7, 7]);
+    }
+
+    #[test]
+    fn matmul_rejects_mismatch() {
+        let a = Matrix::<i32>::zeros(2, 3);
+        let w = Matrix::<i32>::zeros(2, 2);
+        assert!(matmul_i64(&a, &w).is_err());
+    }
+
+    #[test]
+    fn matmul_i64_no_overflow_at_int16_extremes() {
+        // 64 products of int16 extremes: exceeds i32, exact in i64.
+        let a = Matrix::from_vec(1, 64, vec![32767i32; 64]).unwrap();
+        let w = Matrix::from_vec(64, 1, vec![-32768i32; 64]).unwrap();
+        let y = matmul_i64(&a, &w).unwrap();
+        assert_eq!(y.get(0, 0), 64 * 32767i64 * -32768i64);
+    }
+
+    #[test]
+    fn im2col_identity_1x1() {
+        // 1x1 kernel, no pad: patches are just the pixels, (H*W, C).
+        let x: Vec<f32> = (0..2 * 3 * 3).map(|v| v as f32).collect();
+        let p = im2col(&x, 2, 3, 3, 1, 1, 0).unwrap();
+        assert_eq!(p.rows, 9);
+        assert_eq!(p.cols, 2);
+        assert_eq!(p.get(4, 0), x[4]);
+        assert_eq!(p.get(4, 1), x[9 + 4]);
+    }
+
+    #[test]
+    fn im2col_3x3_center_and_corner() {
+        let x: Vec<f32> = (0..25).map(|v| v as f32).collect();
+        let p = im2col(&x, 1, 5, 5, 3, 1, 1).unwrap();
+        assert_eq!(p.rows, 25);
+        assert_eq!(p.cols, 9);
+        // Center output (2,2): column (ki=1,kj=1) = x[2,2] = 12.
+        assert_eq!(p.get(12, 4), 12.0);
+        // Corner output (0,0): column (ki=0,kj=0) hits pad → 0.
+        assert_eq!(p.get(0, 0), 0.0);
+        // Corner output (0,0): column (ki=1,kj=1) = x[0,0] = 0.
+        assert_eq!(p.get(0, 4), 0.0);
+        // Corner output (0,0): column (ki=2,kj=2) = x[1,1] = 6.
+        assert_eq!(p.get(0, 8), 6.0);
+    }
+
+    #[test]
+    fn im2col_matches_direct_conv() {
+        // conv(x, w) via im2col @ w_flat equals direct convolution.
+        let (c, h, w, k) = (2usize, 4usize, 4usize, 3usize);
+        let x: Vec<f32> = (0..c * h * w).map(|v| (v as f32 * 0.37).sin()).collect();
+        let wgt: Vec<f32> = (0..c * k * k).map(|v| (v as f32 * 0.11).cos()).collect();
+        let patches = im2col(&x, c, h, w, k, 1, 1).unwrap();
+        let wmat = Matrix::from_vec(c * k * k, 1, wgt.clone()).unwrap();
+        let y = matmul_f32(&patches, &wmat).unwrap();
+        // Direct conv at output (1,2):
+        let (oy, ox) = (1isize, 2isize);
+        let mut want = 0f32;
+        for ci in 0..c {
+            for ki in 0..k {
+                for kj in 0..k {
+                    let iy = oy + ki as isize - 1;
+                    let ix = ox + kj as isize - 1;
+                    if iy >= 0 && ix >= 0 && (iy as usize) < h && (ix as usize) < w {
+                        want += x[ci * h * w + iy as usize * w + ix as usize]
+                            * wgt[ci * k * k + ki * k + kj];
+                    }
+                }
+            }
+        }
+        let got = y.get(oy as usize * w + ox as usize, 0);
+        assert!((got - want).abs() < 1e-4, "{got} vs {want}");
+    }
+
+    #[test]
+    fn im2col_rejects_bad_input() {
+        assert!(im2col(&[0.0; 3], 2, 3, 3, 1, 1, 0).is_err());
+        assert!(im2col(&[0.0; 9], 1, 3, 3, 0, 1, 0).is_err());
+        assert!(im2col(&[0.0; 9], 1, 3, 3, 1, 0, 0).is_err());
+    }
+}

@@ -1,0 +1,179 @@
+//! Tiling of an arbitrary GEMM onto an R×C weight-stationary array.
+//!
+//! A `(M_g × K_g × N_g)` GEMM runs as a sequence of *tile passes*: each
+//! pass preloads one `R×C` weight block `W[k0..k0+R, n0..n0+C]` and
+//! streams all `M_g` activation rows against it. Pass order is chosen to
+//! maximize weight reuse (the WS rationale, paper §II): all `k` blocks of
+//! one `n` block-column run back-to-back so the column's partial sums are
+//! accumulated across consecutive passes.
+
+
+use crate::arch::SaConfig;
+use crate::error::{Error, Result};
+
+/// One weight-stationary tile pass.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TileStep {
+    /// Starting reduction index of the weight block (`k0`).
+    pub k0: usize,
+    /// Starting output-channel index of the weight block (`n0`).
+    pub n0: usize,
+    /// Rows of the weight block actually used (`≤ R`; edge tiles ragged).
+    pub k_len: usize,
+    /// Columns of the weight block actually used (`≤ C`).
+    pub n_len: usize,
+    /// Whether this pass starts a fresh accumulation for its `n` block
+    /// (first `k` block of the column) — later passes add to it.
+    pub first_k: bool,
+}
+
+/// Complete schedule of tile passes for one GEMM on one array.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TilePlan {
+    /// GEMM rows streamed per pass (`M_g`).
+    pub m: usize,
+    /// GEMM reduction size (`K_g`).
+    pub k: usize,
+    /// GEMM output channels (`N_g`).
+    pub n: usize,
+    /// Array rows (R) — reduction indices per pass.
+    pub array_rows: usize,
+    /// Array cols (C) — output channels per pass.
+    pub array_cols: usize,
+    /// Ordered tile passes.
+    pub steps: Vec<TileStep>,
+}
+
+impl TilePlan {
+    /// Build the WS schedule for GEMM `(m × k × n)` on array `sa`.
+    pub fn new(m: usize, k: usize, n: usize, sa: &SaConfig) -> Result<Self> {
+        if m == 0 || k == 0 || n == 0 {
+            return Err(Error::shape(format!("degenerate GEMM {m}x{k}x{n}")));
+        }
+        let (r, c) = (sa.rows, sa.cols);
+        let mut steps = Vec::new();
+        let mut n0 = 0;
+        while n0 < n {
+            let n_len = c.min(n - n0);
+            let mut k0 = 0;
+            while k0 < k {
+                let k_len = r.min(k - k0);
+                steps.push(TileStep {
+                    k0,
+                    n0,
+                    k_len,
+                    n_len,
+                    first_k: k0 == 0,
+                });
+                k0 += r;
+            }
+            n0 += c;
+        }
+        Ok(TilePlan {
+            m,
+            k,
+            n,
+            array_rows: r,
+            array_cols: c,
+            steps,
+        })
+    }
+
+    /// Number of tile passes.
+    pub fn num_passes(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// Total cycles on the array under the WS timing model.
+    pub fn total_cycles(&self, sa: &SaConfig) -> usize {
+        self.steps.len() * sa.ws_tile_cycles(self.m)
+    }
+
+    /// Total MAC operations actually performed (ragged tiles excluded).
+    pub fn total_macs(&self) -> u64 {
+        self.steps
+            .iter()
+            .map(|s| self.m as u64 * s.k_len as u64 * s.n_len as u64)
+            .sum()
+    }
+
+    /// Array utilization: useful MACs / (PEs × cycles spent streaming).
+    pub fn utilization(&self, sa: &SaConfig) -> f64 {
+        let ideal = (sa.num_pes() * self.total_cycles(sa)) as f64;
+        self.total_macs() as f64 / ideal
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sa() -> SaConfig {
+        SaConfig::paper_32x32()
+    }
+
+    #[test]
+    fn exact_fit_single_pass() {
+        let plan = TilePlan::new(100, 32, 32, &sa()).unwrap();
+        assert_eq!(plan.num_passes(), 1);
+        let s = plan.steps[0];
+        assert_eq!((s.k0, s.n0, s.k_len, s.n_len), (0, 0, 32, 32));
+        assert!(s.first_k);
+    }
+
+    #[test]
+    fn k_blocks_run_back_to_back_within_column() {
+        // K=96 (3 blocks), N=64 (2 block-cols) → 6 passes, k-major inside n.
+        let plan = TilePlan::new(10, 96, 64, &sa()).unwrap();
+        assert_eq!(plan.num_passes(), 6);
+        let order: Vec<(usize, usize, bool)> =
+            plan.steps.iter().map(|s| (s.n0, s.k0, s.first_k)).collect();
+        assert_eq!(
+            order,
+            vec![
+                (0, 0, true),
+                (0, 32, false),
+                (0, 64, false),
+                (32, 0, true),
+                (32, 32, false),
+                (32, 64, false),
+            ]
+        );
+    }
+
+    #[test]
+    fn ragged_edges() {
+        let plan = TilePlan::new(5, 33, 40, &sa()).unwrap();
+        assert_eq!(plan.num_passes(), 4);
+        assert_eq!(plan.steps[1].k_len, 1); // 33 = 32 + 1
+        assert_eq!(plan.steps[1].n_len, 32);
+        assert_eq!(plan.steps[2].n_len, 8); // 40 = 32 + 8
+        // MACs: m * (33 * 40) regardless of padding.
+        assert_eq!(plan.total_macs(), 5 * 33 * 40);
+    }
+
+    #[test]
+    fn table1_l1_pass_count() {
+        // L1: 3136x256x64 on 32x32 → ceil(256/32)*ceil(64/32) = 8*2 = 16.
+        let plan = TilePlan::new(3136, 256, 64, &sa()).unwrap();
+        assert_eq!(plan.num_passes(), 16);
+        assert_eq!(plan.total_macs(), 3136 * 256 * 64);
+    }
+
+    #[test]
+    fn utilization_bounds() {
+        let full = TilePlan::new(1000, 64, 64, &sa()).unwrap();
+        let u = full.utilization(&sa());
+        assert!(u > 0.5 && u <= 1.0, "utilization {u}");
+        // Tiny GEMM wastes most of the array.
+        let tiny = TilePlan::new(1, 1, 1, &sa()).unwrap();
+        assert!(tiny.utilization(&sa()) < 0.01);
+    }
+
+    #[test]
+    fn rejects_degenerate() {
+        assert!(TilePlan::new(0, 1, 1, &sa()).is_err());
+        assert!(TilePlan::new(1, 0, 1, &sa()).is_err());
+        assert!(TilePlan::new(1, 1, 0, &sa()).is_err());
+    }
+}

@@ -1,0 +1,56 @@
+//! # asymm-sa — Asymmetric Systolic Array Floorplanning
+//!
+//! Reproduction of *"The Case for Asymmetric Systolic Array Floorplanning"*
+//! (Peltekis, Filippas, Dimitrakopoulos, Nicopoulos, 2023).
+//!
+//! The paper's claim: in a weight-stationary (WS) systolic array the
+//! vertical partial-sum buses are wider (`B_v > B_h`) and toggle more
+//! (`a_v > a_h`) than the horizontal input buses, so the power-optimal PE
+//! floorplan is **rectangular** with aspect ratio
+//! `W/H = (B_v·a_v)/(B_h·a_h)` (paper eq. 6) — ≈3.8 for the evaluated
+//! 32×32 int16 configuration — saving 9.1% interconnect / 2.1% total
+//! power on ResNet50 layers at zero performance cost.
+//!
+//! ## Layering (see DESIGN.md)
+//!
+//! * **L1 (Pallas)** — WS-tiled GEMM + switching-activity kernels,
+//!   AOT-lowered to HLO text under `artifacts/`.
+//! * **L2 (JAX)** — conv-as-GEMM layer forward for the Table-I ResNet50
+//!   layers; build-time only.
+//! * **L3 (this crate)** — everything at run time: cycle-level SA
+//!   simulator with exact per-wire toggle counting ([`sim`]), floorplan
+//!   geometry + optimizer ([`floorplan`]), 28 nm-like power model
+//!   ([`power`]), workload + tiling pipeline ([`workloads`], [`gemm`]),
+//!   thread-pool coordinator ([`coordinator`]), PJRT runtime that
+//!   executes the AOT artifacts ([`runtime`]), figure/table regeneration
+//!   ([`report`]) and self-contained substrates ([`util`],
+//!   [`bench_util`]) for the fully-offline build.
+//!
+//! ## Quickstart
+//!
+//! ```
+//! use asymm_sa::arch::SaConfig;
+//! use asymm_sa::floorplan::optimizer;
+//!
+//! let sa = SaConfig::paper_32x32();           // B_h=16 ⇒ B_v=37
+//! let r = optimizer::closed_form_ratio(&sa, 0.22, 0.36);
+//! assert!((r - 3.78).abs() < 0.05);           // the paper's W/H ≈ 3.8
+//! ```
+
+pub mod activity;
+pub mod arch;
+pub mod bench_util;
+pub mod config;
+pub mod coordinator;
+pub mod error;
+pub mod floorplan;
+pub mod gemm;
+pub mod power;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod workloads;
+
+pub use error::{Error, Result};

@@ -1,0 +1,359 @@
+//! `repro` — the asymm-sa CLI leader.
+//!
+//! Subcommands map one-to-one onto the paper's artifacts:
+//!
+//! * `optimize` — eqs. 5/6 + the full-model numeric optimum;
+//! * `table1`   — print Table I;
+//! * `fig3`     — emit the symmetric/asymmetric 8×8 layouts (SVG+ASCII);
+//! * `run`      — the Fig. 4/5 experiment (the headline reproduction);
+//! * `sweep`    — aspect-ratio sweep of the interconnect model;
+//! * `verify`   — cycle-accurate vs analytic engine cross-check.
+//!
+//! Argument parsing is hand-rolled (the offline vendored dependency set
+//! has no clap); `repro help` documents every flag.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use asymm_sa::arch::SaConfig;
+use asymm_sa::config::ExperimentConfig;
+use asymm_sa::floorplan::{optimizer, svg, ArrayLayout, PeGeometry};
+use asymm_sa::gemm::Matrix;
+use asymm_sa::power::{self, TechParams};
+use asymm_sa::report;
+use asymm_sa::runtime::Runtime;
+use asymm_sa::sim::{fast::simulate_gemm_fast, ws::WsCycleSim};
+use asymm_sa::util::rng::Rng;
+use asymm_sa::workloads::table1_layers;
+
+const USAGE: &str = "\
+repro — asymmetric systolic-array floorplanning reproduction
+
+USAGE: repro <command> [flags]
+
+COMMANDS
+  optimize   print optimal aspect ratios (paper eqs. 5-6)
+               --ah <f>        horizontal activity (default 0.22)
+               --av <f>        vertical activity  (default 0.36)
+  table1     print the paper's Table I
+  fig3       emit the Fig. 3 layouts (8x8, square vs asymmetric)
+               --out <dir>     output directory (default out)
+               --aspect <f>    asymmetric W/H (default 3.8)
+  run        run the Fig. 4/5 experiment on the Table-I layers
+               --config <f>    JSON experiment config
+               --artifacts <d> artifact dir (default artifacts)
+               --no-runtime    skip the PJRT path
+               --full-resnet   all 48 stride-1 ResNet50 convs (slow)
+               --csv <f>       write CSV rows
+  report     run the full experiment and write a markdown report
+               --out <f>       output file (default out/REPORT.md)
+               --no-runtime    skip the PJRT path
+  sweep      aspect-ratio sweep of the interconnect model
+               --points <n>    sweep points (default 25)
+  verify     cross-check cycle-accurate vs analytic engines
+               --cases <n>     random cases (default 10)
+  help       this text
+";
+
+/// Tiny flag parser: `--key value` pairs plus boolean `--key`.
+struct Flags(HashMap<String, String>);
+
+impl Flags {
+    fn parse(args: &[String], bools: &[&str]) -> Result<Flags, String> {
+        let mut map = HashMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            let key = a
+                .strip_prefix("--")
+                .ok_or_else(|| format!("unexpected argument `{a}`"))?;
+            if bools.contains(&key) {
+                map.insert(key.to_string(), "true".to_string());
+                i += 1;
+            } else {
+                let v = args
+                    .get(i + 1)
+                    .ok_or_else(|| format!("flag --{key} needs a value"))?;
+                map.insert(key.to_string(), v.clone());
+                i += 2;
+            }
+        }
+        Ok(Flags(map))
+    }
+
+    fn f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.0.get(key) {
+            Some(v) => v.parse().map_err(|_| format!("--{key}: bad number `{v}`")),
+            None => Ok(default),
+        }
+    }
+
+    fn usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.0.get(key) {
+            Some(v) => v.parse().map_err(|_| format!("--{key}: bad integer `{v}`")),
+            None => Ok(default),
+        }
+    }
+
+    fn path(&self, key: &str) -> Option<PathBuf> {
+        self.0.get(key).map(PathBuf::from)
+    }
+
+    fn flag(&self, key: &str) -> bool {
+        self.0.contains_key(key)
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run_cli(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            eprintln!();
+            eprintln!("{USAGE}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run_cli(args: &[String]) -> Result<(), String> {
+    let Some(cmd) = args.first() else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "optimize" => {
+            let f = Flags::parse(rest, &[])?;
+            optimize(f.f64("ah", 0.22)?, f.f64("av", 0.36)?)
+        }
+        "table1" => {
+            print!("{}", report::table1_string(&table1_layers()));
+            Ok(())
+        }
+        "fig3" => {
+            let f = Flags::parse(rest, &[])?;
+            fig3(
+                &f.path("out").unwrap_or_else(|| PathBuf::from("out")),
+                f.f64("aspect", 3.8)?,
+            )
+        }
+        "run" => {
+            let f = Flags::parse(rest, &["no-runtime", "full-resnet"])?;
+            run(
+                f.path("config"),
+                f.path("artifacts").unwrap_or_else(|| PathBuf::from("artifacts")),
+                f.flag("no-runtime"),
+                f.flag("full-resnet"),
+                f.path("csv"),
+            )
+        }
+        "report" => {
+            let f = Flags::parse(rest, &["no-runtime"])?;
+            report_cmd(
+                f.path("out").unwrap_or_else(|| PathBuf::from("out/REPORT.md")),
+                f.flag("no-runtime"),
+            )
+        }
+        "sweep" => {
+            let f = Flags::parse(rest, &[])?;
+            sweep(f.usize("points", 25)?)
+        }
+        "verify" => {
+            let f = Flags::parse(rest, &[])?;
+            verify(f.usize("cases", 10)?)
+        }
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => Err(format!("unknown command `{other}`")),
+    }
+}
+
+fn optimize(ah: f64, av: f64) -> Result<(), String> {
+    let sa = SaConfig::paper_32x32();
+    println!(
+        "array 32x32, B_h={} B_v={}  (a_h={ah}, a_v={av})",
+        sa.bus_bits_horizontal(),
+        sa.bus_bits_vertical()
+    );
+    println!(
+        "eq.5 (wirelength)    W/H = {:.4}",
+        optimizer::wirelength_optimal_ratio(&sa)
+    );
+    println!(
+        "eq.6 (activity-wtd)  W/H = {:.4}",
+        optimizer::closed_form_ratio(&sa, ah, av)
+    );
+    let tech = TechParams::default();
+    let cfg = ExperimentConfig::paper();
+    let (full, _) = optimizer::minimize_ratio(
+        |r| power::model_interconnect_cost(&sa, &tech, ah, av, cfg.pe_area_um2(), r),
+        0.2,
+        20.0,
+        1e-9,
+    );
+    println!("full model (w/ ctrl) W/H = {full:.4}");
+    Ok(())
+}
+
+fn fig3(out: &PathBuf, aspect: f64) -> Result<(), String> {
+    std::fs::create_dir_all(out).map_err(|e| e.to_string())?;
+    let sa = SaConfig::paper_8x8();
+    let cfg = ExperimentConfig::paper();
+    let area = cfg.pe_area_um2();
+    for (name, r) in [("fig3_symmetric", 1.0), ("fig3_asymmetric", aspect)] {
+        let pe = PeGeometry::new(area, r).map_err(|e| e.to_string())?;
+        let layout = ArrayLayout::generate(&sa, pe).map_err(|e| e.to_string())?;
+        let path = out.join(format!("{name}.svg"));
+        std::fs::write(&path, svg::render_svg(&layout, name)).map_err(|e| e.to_string())?;
+        println!("{}", svg::render_ascii(&layout));
+        println!("wrote {}", path.display());
+    }
+    Ok(())
+}
+
+fn run(
+    config: Option<PathBuf>,
+    artifacts: PathBuf,
+    no_runtime: bool,
+    full_resnet: bool,
+    csv: Option<PathBuf>,
+) -> Result<(), String> {
+    let cfg = match config {
+        Some(p) => ExperimentConfig::from_json_file(p).map_err(|e| e.to_string())?,
+        None => ExperimentConfig::paper(),
+    };
+    let runtime = if no_runtime {
+        None
+    } else {
+        match Runtime::load(&artifacts) {
+            Ok(rt) => {
+                println!(
+                    "PJRT runtime: {} ({} artifacts)",
+                    rt.platform(),
+                    rt.manifest().layers.len()
+                );
+                Some(rt)
+            }
+            Err(e) => {
+                eprintln!("note: PJRT runtime unavailable ({e}); using native path");
+                None
+            }
+        }
+    };
+    let layers = if full_resnet {
+        // The full stride-1 conv inventory: the paper's "average over all
+        // layers of ResNet50" measurement (§IV). PJRT artifacts exist only
+        // for the Table-I shapes, so this mode uses the native path.
+        println!("full-resnet mode: 48 conv layers, native im2col path");
+        asymm_sa::workloads::full_resnet50()
+    } else {
+        table1_layers()
+    };
+    let runtime = if full_resnet { None } else { runtime };
+    let out = report::run_experiment(&cfg, &layers, runtime.as_ref())
+        .map_err(|e| e.to_string())?;
+
+    let mut rows = out.rows.clone();
+    rows.push(out.average.clone());
+    println!(
+        "measured average a_h={:.3} a_v={:.3}; asymmetric W/H={:.3} (runtime: {})",
+        out.avg_activities.0, out.avg_activities.1, out.aspect_used, out.used_runtime
+    );
+    println!();
+    print!("{}", report::fig4_string(&rows));
+    println!();
+    print!("{}", report::fig5_string(&rows));
+    println!();
+    println!(
+        "coordinator: {} jobs, {:.1}M MACs, {:.2}e9 PE-cycles/s simulated",
+        out.metrics.jobs,
+        out.metrics.macs as f64 / 1e6,
+        out.metrics.pe_cycles_per_sec(cfg.sa.num_pes()) / 1e9,
+    );
+    if let Some(p) = csv {
+        std::fs::write(&p, report::to_csv(&rows)).map_err(|e| e.to_string())?;
+        println!("wrote {}", p.display());
+    }
+    Ok(())
+}
+
+fn report_cmd(out_path: PathBuf, no_runtime: bool) -> Result<(), String> {
+    let mut cfg = ExperimentConfig::paper();
+    cfg.floorplans.proposed_aspect = None; // eq. 6 from measurements
+    let runtime = if no_runtime {
+        None
+    } else {
+        Runtime::load("artifacts").ok()
+    };
+    let layers = table1_layers();
+    let out = report::run_experiment(&cfg, &layers, runtime.as_ref())
+        .map_err(|e| e.to_string())?;
+    let md = report::markdown_report(&cfg, &layers, &out);
+    if let Some(dir) = out_path.parent() {
+        std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+    }
+    std::fs::write(&out_path, &md).map_err(|e| e.to_string())?;
+    println!("{md}");
+    println!("wrote {}", out_path.display());
+    Ok(())
+}
+
+fn sweep(points: usize) -> Result<(), String> {
+    let sa = SaConfig::paper_32x32();
+    let tech = TechParams::default();
+    let cfg = ExperimentConfig::paper();
+    let area = cfg.pe_area_um2();
+    let pts = optimizer::sweep_ratio(
+        |r| power::model_interconnect_cost(&sa, &tech, 0.22, 0.36, area, r),
+        0.25,
+        16.0,
+        points,
+    );
+    // Cost at the square baseline for the "vs square" column.
+    let base = power::model_interconnect_cost(&sa, &tech, 0.22, 0.36, area, 1.0);
+    println!("{:>8} {:>14} {:>9}", "W/H", "cost (fJ/PE)", "vs sq");
+    for (r, c) in pts {
+        println!("{r:>8.3} {c:>14.4} {:>8.1}%", 100.0 * (c / base - 1.0));
+    }
+    Ok(())
+}
+
+fn verify(cases: usize) -> Result<(), String> {
+    let mut rng = Rng::new(2023);
+    for i in 0..cases {
+        let rows = if rng.chance(0.5) { 4 } else { 8 };
+        let sa = SaConfig::new_ws(rows, rows, 8).map_err(|e| e.to_string())?;
+        let (m, k, n) = (
+            rng.index(1, 24),
+            rng.index(1, 20),
+            rng.index(1, 20),
+        );
+        let mut mk_mat = |r: usize, c: usize| {
+            Matrix::from_vec(
+                r,
+                c,
+                (0..r * c).map(|_| rng.int_range(-100, 100) as i32).collect(),
+            )
+            .expect("sized correctly")
+        };
+        let a = mk_mat(m, k);
+        let w = mk_mat(k, n);
+        let slow = WsCycleSim::new(&sa)
+            .simulate_gemm(&a, &w)
+            .map_err(|e| e.to_string())?;
+        let fast = simulate_gemm_fast(&sa, &a, &w).map_err(|e| e.to_string())?;
+        assert_eq!(slow.y, fast.y, "case {i}: outputs");
+        assert_eq!(slow.stats, fast.stats, "case {i}: stats");
+        println!(
+            "case {i}: {m}x{k}x{n} on {rows}x{rows} OK (toggles h={} v={})",
+            fast.stats.horizontal.toggles, fast.stats.vertical.toggles
+        );
+    }
+    println!("verify: {cases} cases, cycle-accurate == analytic");
+    Ok(())
+}

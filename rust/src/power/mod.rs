@@ -1,0 +1,260 @@
+//! Power model: interconnect + PE-internal dynamic power of one array.
+//!
+//! Maps exact simulated bus statistics ([`crate::sim::SaStats`]) onto a
+//! floorplan ([`crate::floorplan::PeGeometry`]) using the 28 nm-like
+//! technology constants ([`TechParams`]). The interconnect part is the
+//! quantity the paper's floorplan optimization targets:
+//!
+//! * horizontal bus energy ∝ toggles × PE width `W`,
+//! * vertical (psum + weight-load) energy ∝ toggles × PE height `H`,
+//! * clock/control distribution ∝ cycles × (`W` + `H`) — the
+//!   aspect-*increasing* term that dilutes the ideal bus-only saving to
+//!   the paper's measured 9.1% (DESIGN.md §6).
+
+pub mod tech;
+
+pub use tech::TechParams;
+
+
+use crate::arch::{PeMicroArch, SaConfig};
+use crate::floorplan::PeGeometry;
+use crate::sim::GemmSim;
+
+/// Per-component power of one workload on one floorplan, in mW.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PowerBreakdown {
+    /// Horizontal input-bus wires.
+    pub h_bus_mw: f64,
+    /// Vertical partial-sum bus wires.
+    pub v_bus_mw: f64,
+    /// Weight-load shift chain (vertical tracks).
+    pub w_load_mw: f64,
+    /// Clock mesh + control distribution wires.
+    pub ctrl_mw: f64,
+    /// Multiply-add logic.
+    pub mac_mw: f64,
+    /// Pipeline registers (clock + data).
+    pub reg_mw: f64,
+    /// Leakage.
+    pub leak_mw: f64,
+}
+
+impl PowerBreakdown {
+    /// Total interconnect power (the paper's Fig. 4 quantity).
+    pub fn interconnect_mw(&self) -> f64 {
+        self.h_bus_mw + self.v_bus_mw + self.w_load_mw + self.ctrl_mw
+    }
+
+    /// PE-internal power (logic + registers + leakage).
+    pub fn compute_mw(&self) -> f64 {
+        self.mac_mw + self.reg_mw + self.leak_mw
+    }
+
+    /// Total power (the paper's Fig. 5 quantity).
+    pub fn total_mw(&self) -> f64 {
+        self.interconnect_mw() + self.compute_mw()
+    }
+
+    /// Interconnect share of total power (paper-implied ≈23% at the
+    /// square baseline: 9.1% interconnect saving ⇒ 2.1% total).
+    pub fn interconnect_share(&self) -> f64 {
+        self.interconnect_mw() / self.total_mw()
+    }
+}
+
+/// Evaluate the power of one simulated GEMM on a concrete floorplan.
+///
+/// The same `sim` (bus statistics are floorplan-independent) can be
+/// evaluated on many geometries — this is how the figure harness compares
+/// symmetric vs asymmetric layouts from a single simulation.
+pub fn evaluate(
+    sa: &SaConfig,
+    pe: &PeGeometry,
+    tech: &TechParams,
+    sim: &GemmSim,
+) -> PowerBreakdown {
+    let (w_um, h_um) = (pe.width_um(), pe.height_um());
+    let e_wire = tech.wire_toggle_fj_per_um(); // fJ per µm-toggle
+    let seconds = sim.silicon_seconds(sa);
+    let to_mw = |fj: f64| fj * 1e-15 / seconds * 1e3; // fJ → mW
+
+    // --- Interconnect -----------------------------------------------------
+    let h_bus_fj = sim.stats.horizontal.toggles as f64 * w_um * e_wire;
+    let v_bus_fj = sim.stats.vertical.toggles as f64 * h_um * e_wire;
+    let w_load_fj = sim.stats.weight_load.toggles as f64 * h_um * e_wire;
+    let ctrl_fj = sim.cycles as f64
+        * sa.num_pes() as f64
+        * tech.ctrl_eff_wires
+        * (w_um + h_um)
+        * e_wire;
+
+    // --- PE-internal -------------------------------------------------------
+    // Multiplier data gating: MACs whose streamed input is zero burn a
+    // fraction (1 - zero_gating) of the full MAC energy.
+    let zero_frac = sim.stats.horizontal.zero_fraction();
+    let mac_eff_fj =
+        tech.mac_energy_fj_for(sa.input_bits) * (1.0 - tech.zero_gating * zero_frac);
+    let mac_fj = sim.macs as f64 * mac_eff_fj;
+
+    let reg_bits = PeMicroArch::default().cost(sa).register_bits as f64;
+    let reg_fj =
+        sim.cycles as f64 * sa.num_pes() as f64 * reg_bits * tech.ff_energy_fj_per_bit;
+
+    let leak_mw = tech.leakage_uw_per_pe * sa.num_pes() as f64 * 1e-3;
+
+    PowerBreakdown {
+        h_bus_mw: to_mw(h_bus_fj),
+        v_bus_mw: to_mw(v_bus_fj),
+        w_load_mw: to_mw(w_load_fj),
+        ctrl_mw: to_mw(ctrl_fj),
+        mac_mw: to_mw(mac_fj),
+        reg_mw: to_mw(reg_fj),
+        leak_mw,
+    }
+}
+
+/// Activity-weighted interconnect power *model* (no simulation): the
+/// analytic objective used by the optimizer to pick the aspect ratio from
+/// average activities, mirroring the paper's §III-B procedure.
+pub fn model_interconnect_cost(
+    sa: &SaConfig,
+    tech: &TechParams,
+    a_h: f64,
+    a_v: f64,
+    area_um2: f64,
+    aspect: f64,
+) -> f64 {
+    let pe = PeGeometry {
+        area_um2,
+        aspect,
+    };
+    let (w, h) = (pe.width_um(), pe.height_um());
+    let bh = sa.bus_bits_horizontal() as f64;
+    let bv = sa.bus_bits_vertical() as f64;
+    // Per PE per cycle, in fJ (constant factors irrelevant for argmin).
+    tech.wire_toggle_fj_per_um()
+        * (w * bh * a_h + h * bv * a_v + tech.ctrl_eff_wires * (w + h))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::floorplan::optimizer;
+    use crate::gemm::Matrix;
+    use crate::sim::fast::simulate_gemm_fast;
+
+    fn rand_mat(rows: usize, cols: usize, seed: u64) -> Matrix<i32> {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let data = (0..rows * cols)
+            .map(|_| {
+                if rng.chance(0.5) {
+                    0
+                } else {
+                    rng.int_range(-2000, 2000) as i32
+                }
+            })
+            .collect();
+        Matrix::from_vec(rows, cols, data).unwrap()
+    }
+
+    fn paper_sim() -> (SaConfig, GemmSim) {
+        let sa = SaConfig::paper_32x32();
+        let a = rand_mat(128, 64, 1);
+        let w = rand_mat(64, 64, 2);
+        let sim = simulate_gemm_fast(&sa, &a, &w).unwrap();
+        (sa, sim)
+    }
+
+    #[test]
+    fn asymmetric_beats_square_on_interconnect() {
+        // The headline claim, end to end on simulated traffic.
+        let (sa, sim) = paper_sim();
+        let tech = TechParams::default();
+        let area = 1000.0;
+        let sym = evaluate(&sa, &PeGeometry::square(area).unwrap(), &tech, &sim);
+        let asym = evaluate(
+            &sa,
+            &PeGeometry::new(area, 3.8).unwrap(),
+            &tech,
+            &sim,
+        );
+        assert!(asym.interconnect_mw() < sym.interconnect_mw());
+        assert!(asym.total_mw() < sym.total_mw());
+        // Reduction in a plausible band around the paper's 9.1%.
+        let red = 1.0 - asym.interconnect_mw() / sym.interconnect_mw();
+        assert!(red > 0.03 && red < 0.20, "interconnect reduction {red}");
+    }
+
+    #[test]
+    fn compute_power_is_floorplan_invariant() {
+        let (sa, sim) = paper_sim();
+        let tech = TechParams::default();
+        let sym = evaluate(&sa, &PeGeometry::square(1000.0).unwrap(), &tech, &sim);
+        let asym = evaluate(&sa, &PeGeometry::new(1000.0, 3.8).unwrap(), &tech, &sim);
+        assert!((sym.compute_mw() - asym.compute_mw()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn interconnect_share_near_paper_breakdown() {
+        let (sa, sim) = paper_sim();
+        let tech = TechParams::default();
+        let sym = evaluate(&sa, &PeGeometry::square(1000.0).unwrap(), &tech, &sim);
+        let share = sym.interconnect_share();
+        // Paper-implied ≈23%; accept a generous band (workload-dependent).
+        assert!(share > 0.10 && share < 0.40, "interconnect share {share}");
+    }
+
+    #[test]
+    fn claims_invariant_under_constant_rescale() {
+        // Ratios must not depend on the absolute technology scale.
+        let (sa, sim) = paper_sim();
+        let t1 = TechParams::default();
+        let t2 = TechParams {
+            vdd: t1.vdd * 1.3,
+            wire_cap_ff_per_um: t1.wire_cap_ff_per_um * 2.0,
+            ..t1
+        };
+        let area = 800.0;
+        let red = |t: &TechParams| {
+            let s = evaluate(&sa, &PeGeometry::square(area).unwrap(), t, &sim);
+            let a = evaluate(&sa, &PeGeometry::new(area, 3.8).unwrap(), t, &sim);
+            1.0 - a.interconnect_mw() / s.interconnect_mw()
+        };
+        // Wire-energy scale cancels in the interconnect ratio.
+        assert!((red(&t1) - red(&t2)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn model_cost_minimum_between_eq6_and_eq5_shifted_down() {
+        // Adding the ctrl term pulls the optimum of the *full* model below
+        // the bus-only eq. 6 value (ctrl prefers square).
+        let sa = SaConfig::paper_32x32();
+        let tech = TechParams::default();
+        let (a_h, a_v) = (0.22, 0.36);
+        let eq6 = optimizer::closed_form_ratio(&sa, a_h, a_v);
+        let (full_opt, _) = optimizer::minimize_ratio(
+            |r| model_interconnect_cost(&sa, &tech, a_h, a_v, 1000.0, r),
+            0.2,
+            20.0,
+            1e-9,
+        );
+        assert!(full_opt > 1.0, "still asymmetric: {full_opt}");
+        assert!(full_opt < eq6, "ctrl term pulls optimum below eq.6: {full_opt} vs {eq6}");
+    }
+
+    #[test]
+    fn leakage_scales_with_array_size() {
+        let tech = TechParams::default();
+        let sa_small = SaConfig::new_ws(8, 8, 8).unwrap();
+        // 8-bit bus: operands must fit [-128, 127].
+        let clamp = |m: Matrix<i32>| {
+            Matrix::from_vec(m.rows, m.cols, m.data.iter().map(|v| v.clamp(&-127, &127) / 16).collect())
+                .unwrap()
+        };
+        let a = clamp(rand_mat(16, 8, 3));
+        let w = clamp(rand_mat(8, 8, 4));
+        let sim = simulate_gemm_fast(&sa_small, &a, &w).unwrap();
+        let p = evaluate(&sa_small, &PeGeometry::square(500.0).unwrap(), &tech, &sim);
+        assert!((p.leak_mw - 64.0 * 20.0 * 1e-3).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,96 @@
+//! Technology parameters: a 28 nm-like process model.
+//!
+//! The paper implements its SAs with a Cadence 28 nm flow and reports
+//! *relative* power (9.1% interconnect, 2.1% total). This reproduction
+//! replaces the sign-off tool with an analytical model whose constants
+//! are (a) physically plausible for 28 nm and (b) calibrated so the
+//! *baseline shares* match the paper's implied breakdown — see
+//! DESIGN.md §6 and EXPERIMENTS.md §Calibration:
+//!
+//! * `ctrl_eff_wires` is fitted so that, at the paper's average
+//!   activities (a_h=0.22, a_v=0.36), the bus+control interconnect
+//!   reduction at W/H=3.8 is ≈9.1% (the ideal bus-only reduction is
+//!   18.6%; real layouts dilute it with aspect-*increasing* clock/control
+//!   wiring, which is exactly what this term models).
+//! * `mac_energy_fj` is set so interconnect is ≈23% of total power at the
+//!   square baseline (9.1% interconnect ⇒ 2.1% total, paper §IV).
+//!
+//! All claims we reproduce are ratios; they are insensitive to the
+//! absolute scale of these constants (verified by a property test that
+//! rescales them).
+
+
+/// Process + integration constants for the power model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TechParams {
+    /// Supply voltage (V). 28 nm nominal: 0.9 V.
+    pub vdd: f64,
+    /// Routed-wire capacitance per µm (fF/µm). 28 nm intermediate-layer
+    /// typical: ~0.2 fF/µm.
+    pub wire_cap_ff_per_um: f64,
+    /// Effective always-toggling wires per PE crossing *per direction*
+    /// modeling the clock mesh + control distribution (activity 1.0,
+    /// length `W` horizontally / `H` vertically). Calibrated: 2.514.
+    pub ctrl_eff_wires: f64,
+    /// Energy of one `B_h×B_h` MAC operation (fJ) at the reference width
+    /// of 16 bits; scaled by `(B_h/16)²` for other widths.
+    pub mac_energy_fj: f64,
+    /// Fraction of MAC energy gated away when the streamed input operand
+    /// is zero (multiplier data gating; paper §IV notes sparse layers
+    /// draw less power).
+    pub zero_gating: f64,
+    /// Flip-flop energy per bit per clock cycle (fJ) — clock pin +
+    /// internal nodes, activity-independent part.
+    pub ff_energy_fj_per_bit: f64,
+    /// Static (leakage) power per PE (µW).
+    pub leakage_uw_per_pe: f64,
+}
+
+impl Default for TechParams {
+    fn default() -> Self {
+        TechParams {
+            vdd: 0.9,
+            wire_cap_ff_per_um: 0.20,
+            ctrl_eff_wires: 2.514,
+            mac_energy_fj: 130.0,
+            zero_gating: 0.8,
+            ff_energy_fj_per_bit: 0.7,
+            leakage_uw_per_pe: 20.0,
+        }
+    }
+}
+
+impl TechParams {
+    /// Energy of one toggle on 1 µm of wire (fJ): `½·C·V²`.
+    pub fn wire_toggle_fj_per_um(&self) -> f64 {
+        0.5 * self.wire_cap_ff_per_um * self.vdd * self.vdd
+    }
+
+    /// MAC energy (fJ) for a `bits`-wide multiplier (quadratic scaling).
+    pub fn mac_energy_fj_for(&self, bits: u32) -> f64 {
+        let s = bits as f64 / 16.0;
+        self.mac_energy_fj * s * s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_plausible_for_28nm() {
+        let t = TechParams::default();
+        // ½·0.2fF·0.81V² = 0.081 fJ per µm-toggle.
+        assert!((t.wire_toggle_fj_per_um() - 0.081).abs() < 1e-9);
+        // 16-bit MAC at 28nm: 50–500 fJ band.
+        assert!(t.mac_energy_fj > 50.0 && t.mac_energy_fj < 500.0);
+    }
+
+    #[test]
+    fn mac_energy_scales_quadratically() {
+        let t = TechParams::default();
+        assert!((t.mac_energy_fj_for(8) - t.mac_energy_fj / 4.0).abs() < 1e-9);
+        assert!((t.mac_energy_fj_for(16) - t.mac_energy_fj).abs() < 1e-12);
+    }
+
+}

@@ -1,0 +1,139 @@
+//! Integer quantization (paper §IV: 16-bit quantized inputs and weights).
+//!
+//! Symmetric per-tensor quantization matching `compile.model.quantize_sym`
+//! on the Python side, plus the saturating/masking helpers the cycle
+//! simulator uses to model the paper's exact bus word widths.
+
+
+/// Result of symmetric quantization: `x ≈ q · scale`.
+#[derive(Debug, Clone)]
+pub struct Quantized {
+    /// Quantized values in `[-(2^(bits-1)-1), 2^(bits-1)-1]`.
+    pub values: Vec<i32>,
+    /// Dequantization scale.
+    pub scale: f32,
+    /// Bit width the values were quantized to.
+    pub bits: u32,
+}
+
+/// Symmetric per-tensor quantization of `x` to `bits`-bit signed integers.
+///
+/// Mirrors the JAX-side `quantize_sym`: scale = absmax / (2^(bits-1)-1),
+/// round-to-nearest, clamp. A zero tensor quantizes to all-zero with a
+/// positive scale.
+pub fn quantize_sym(x: &[f32], bits: u32) -> Quantized {
+    assert!((2..=16).contains(&bits), "bits must be in [2,16]");
+    let qmax = ((1i64 << (bits - 1)) - 1) as f32;
+    let absmax = x.iter().fold(0f32, |m, v| m.max(v.abs())).max(1e-12);
+    let scale = absmax / qmax;
+    let values = x
+        .iter()
+        .map(|v| (v / scale).round().clamp(-qmax, qmax) as i32)
+        .collect();
+    Quantized {
+        values,
+        scale,
+        bits,
+    }
+}
+
+/// Dequantize back to f32.
+pub fn dequantize(q: &Quantized) -> Vec<f32> {
+    q.values.iter().map(|&v| v as f32 * q.scale).collect()
+}
+
+/// Mask a signed value to a `bits`-wide two's-complement bus word.
+///
+/// This is the word physically present on a `bits`-wide bus: value
+/// `& (2^bits - 1)`. Used for exact toggle counting on the paper's
+/// 16-bit horizontal and 37-bit vertical buses.
+#[inline]
+pub fn bus_word(value: i64, bits: u32) -> u64 {
+    debug_assert!((1..=64).contains(&bits));
+    if bits == 64 {
+        value as u64
+    } else {
+        (value as u64) & ((1u64 << bits) - 1)
+    }
+}
+
+/// Saturate a value to the representable range of a `bits`-wide signed
+/// integer (models a saturating accumulator ablation; the paper's design
+/// sizes `B_v` so saturation never occurs).
+#[inline]
+pub fn saturate(value: i64, bits: u32) -> i64 {
+    let max = (1i64 << (bits - 1)) - 1;
+    let min = -(1i64 << (bits - 1));
+    value.clamp(min, max)
+}
+
+/// True if `value` fits losslessly in a `bits`-wide signed integer.
+#[inline]
+pub fn fits(value: i64, bits: u32) -> bool {
+    saturate(value, bits) == value
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantize_roundtrip_error_bounded() {
+        let x: Vec<f32> = (0..1000).map(|i| ((i * 37) % 211) as f32 / 211.0 - 0.5).collect();
+        let q = quantize_sym(&x, 16);
+        let back = dequantize(&q);
+        for (a, b) in x.iter().zip(back.iter()) {
+            assert!((a - b).abs() <= q.scale * 0.51, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn quantize_range_respected() {
+        let x = vec![-10.0, 10.0, 0.0];
+        for bits in [4, 8, 16] {
+            let q = quantize_sym(&x, bits);
+            let qmax = (1i32 << (bits - 1)) - 1;
+            assert!(q.values.iter().all(|&v| v.abs() <= qmax));
+            assert_eq!(q.values[2], 0);
+            assert_eq!(q.values[1], qmax);
+            assert_eq!(q.values[0], -qmax);
+        }
+    }
+
+    #[test]
+    fn quantize_zero_tensor() {
+        let q = quantize_sym(&[0.0; 16], 16);
+        assert!(q.values.iter().all(|&v| v == 0));
+        assert!(q.scale > 0.0);
+    }
+
+    #[test]
+    fn bus_word_twos_complement() {
+        // -1 on a 16-bit bus = 0xFFFF (matches the Python activity kernel).
+        assert_eq!(bus_word(-1, 16), 0xFFFF);
+        assert_eq!(bus_word(-1, 37), (1u64 << 37) - 1);
+        assert_eq!(bus_word(5, 16), 5);
+        assert_eq!(bus_word(0, 37), 0);
+        assert_eq!(bus_word(-1, 64), u64::MAX);
+    }
+
+    #[test]
+    fn saturate_and_fits() {
+        assert_eq!(saturate(100_000, 16), 32767);
+        assert_eq!(saturate(-100_000, 16), -32768);
+        assert_eq!(saturate(1234, 16), 1234);
+        assert!(fits(32767, 16));
+        assert!(!fits(32768, 16));
+        // Paper's 37-bit accumulator: sum of 32 products of two int16
+        // extremes fits.
+        let worst = 32i64 * (32768 * 32768);
+        assert!(fits(worst, 37), "worst-case sum must fit in 37 bits");
+        assert!(!fits(worst * 2, 37));
+    }
+
+    #[test]
+    #[should_panic]
+    fn quantize_rejects_bad_bits() {
+        quantize_sym(&[1.0], 1);
+    }
+}

@@ -1,0 +1,201 @@
+//! End-to-end experiment pipeline (the paper's §IV methodology):
+//!
+//! 1. generate per-layer inputs and He-init weights (ImageNet
+//!    substitution, DESIGN.md §3);
+//! 2. run the layer forward — through the AOT PJRT artifact when a
+//!    [`Runtime`] is supplied (the production path: JAX/Pallas-compiled
+//!    conv produces both activations and the quantized im2col patches),
+//!    falling back to the native Rust im2col+quantize otherwise;
+//! 3. simulate every GEMM on the WS array via the [`Coordinator`]
+//!    (exact bus toggle statistics);
+//! 4. pick the asymmetric aspect ratio from the measured average
+//!    activities (eq. 6) unless pinned by the config;
+//! 5. evaluate both floorplans with the power model → Fig. 4/5 rows.
+
+use std::sync::Arc;
+
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::{Coordinator, LayerJob, MetricsSnapshot};
+use crate::error::Result;
+use crate::floorplan::optimizer;
+use crate::gemm::{im2col, Matrix};
+use crate::quant::quantize_sym;
+use crate::runtime::Runtime;
+use crate::workloads::{ConvLayer, SynthGen};
+
+use super::{average_row, power_row, LayerPowerRow};
+
+/// Everything an experiment run produces.
+#[derive(Debug, Clone)]
+pub struct ExperimentOutput {
+    /// Per-layer rows, in input order.
+    pub rows: Vec<LayerPowerRow>,
+    /// The per-layer average row (the paper's "Average" bar).
+    pub average: LayerPowerRow,
+    /// Aspect ratio actually used for the asymmetric design.
+    pub aspect_used: f64,
+    /// Average measured activities `(a_h, a_v)` across layers
+    /// (paper §IV reports 0.22 / 0.36).
+    pub avg_activities: (f64, f64),
+    /// Coordinator metrics snapshot.
+    pub metrics: MetricsSnapshot,
+    /// Whether layer forwards ran through the PJRT artifacts.
+    pub used_runtime: bool,
+}
+
+/// Build the quantized GEMM operands for one layer.
+///
+/// Returns `(a_q, w_q)`: int16 im2col patches `P×CK²` and weights
+/// `CK²×M`, the exact words the array buses carry.
+fn layer_operands(
+    layer: &ConvLayer,
+    gen: &mut SynthGen,
+    runtime: Option<&Runtime>,
+    act_model: &crate::workloads::ActivationModel,
+) -> Result<(Matrix<i32>, Matrix<i32>)> {
+    let (hin, win) = layer.input_hw();
+    let x = gen.activations(layer.c, hin, win, act_model);
+    let ck2 = layer.c * layer.k * layer.k;
+    let w = gen.weights(layer.m, ck2);
+
+    // Patches: through the AOT artifact when available (the L1/L2 path),
+    // else the native Rust im2col + quantizer (bit-identical contract,
+    // enforced by the runtime integration test).
+    let a_q = match runtime {
+        Some(rt) => {
+            let (_out, q) = rt.layer_forward(&layer.name, &x, &w)?;
+            q
+        }
+        None => {
+            let patches = im2col(&x, layer.c, hin, win, layer.k, layer.stride, layer.pad())?;
+            let q = quantize_sym(&patches.data, 16);
+            Matrix::from_vec(patches.rows, patches.cols, q.values)?
+        }
+    };
+
+    // Weights: quantized in Rust either way (the artifact consumes f32
+    // weights for the forward; the array streams their int16 image).
+    let wq = quantize_sym(&w, 16);
+    let w_mat = Matrix::from_vec(layer.m, ck2, wq.values)?; // M×CK²
+    Ok((a_q, w_mat.transpose()))
+}
+
+/// Run the full Table-I experiment and produce the Fig. 4/5 rows.
+pub fn run_experiment(
+    cfg: &ExperimentConfig,
+    layers: &[ConvLayer],
+    runtime: Option<&Runtime>,
+) -> Result<ExperimentOutput> {
+    let mut gen = SynthGen::new(cfg.seed);
+    let mut jobs = Vec::with_capacity(layers.len());
+    for layer in layers {
+        let (a_q, w_q) = layer_operands(layer, &mut gen, runtime, &cfg.activations)?;
+        jobs.push(LayerJob {
+            name: layer.name.clone(),
+            a: Arc::new(a_q),
+            w: Arc::new(w_q),
+        });
+    }
+
+    let coord = Coordinator::new(&cfg.sa, cfg.workers);
+    let results = coord.run_blocking(jobs)?;
+
+    // Average activities over layers → eq. 6 aspect (paper §III-B).
+    let n = results.len() as f64;
+    let a_h = results.iter().map(|r| r.sim.stats.horizontal.activity()).sum::<f64>() / n;
+    let a_v = results.iter().map(|r| r.sim.stats.vertical.activity()).sum::<f64>() / n;
+    let aspect_used = cfg
+        .floorplans
+        .proposed_aspect
+        .unwrap_or_else(|| optimizer::closed_form_ratio(&cfg.sa, a_h, a_v));
+
+    let sym = cfg.baseline_geometry()?;
+    let asym = crate::floorplan::PeGeometry::new(cfg.pe_area_um2(), aspect_used)?;
+
+    let rows: Vec<LayerPowerRow> = results
+        .iter()
+        .map(|r| power_row(&r.name, &cfg.sa, &cfg.tech, &sym, &asym, &r.sim))
+        .collect();
+    let average = average_row(&rows).expect("non-empty experiment");
+
+    Ok(ExperimentOutput {
+        rows,
+        average,
+        aspect_used,
+        avg_activities: (a_h, a_v),
+        metrics: coord.metrics().snapshot(),
+        used_runtime: runtime.is_some(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::resnet50::ConvLayer as CL;
+
+    fn tiny_layers() -> Vec<CL> {
+        vec![
+            CL {
+                name: "T1".into(),
+                k: 1,
+                h: 8,
+                w: 8,
+                c: 16,
+                m: 16,
+                stride: 1,
+            },
+            CL {
+                name: "T2".into(),
+                k: 3,
+                h: 6,
+                w: 6,
+                c: 8,
+                m: 8,
+                stride: 1,
+            },
+        ]
+    }
+
+    #[test]
+    fn experiment_runs_without_runtime() {
+        let mut cfg = ExperimentConfig::paper();
+        cfg.sa = crate::arch::SaConfig::new_ws(8, 8, 16).unwrap();
+        cfg.workers = 2;
+        let out = run_experiment(&cfg, &tiny_layers(), None).unwrap();
+        assert_eq!(out.rows.len(), 2);
+        assert!(!out.used_runtime);
+        assert_eq!(out.metrics.jobs, 2);
+        // Headline shape: asym saves interconnect power on every layer.
+        for r in &out.rows {
+            assert!(r.interconnect_reduction() > 0.0, "{}", r.name);
+        }
+        assert!(out.average.interconnect_reduction() > 0.0);
+        // Activity asymmetry present (a_v > a_h).
+        let (ah, av) = out.avg_activities;
+        assert!(av > ah, "a_v={av} a_h={ah}");
+    }
+
+    #[test]
+    fn derived_aspect_uses_measured_activities() {
+        let mut cfg = ExperimentConfig::paper();
+        cfg.sa = crate::arch::SaConfig::new_ws(8, 8, 16).unwrap();
+        cfg.floorplans.proposed_aspect = None;
+        cfg.workers = 1;
+        let out = run_experiment(&cfg, &tiny_layers(), None).unwrap();
+        let (ah, av) = out.avg_activities;
+        let want = optimizer::closed_form_ratio(&cfg.sa, ah, av);
+        assert!((out.aspect_used - want).abs() < 1e-12);
+        assert!(out.aspect_used > 1.0);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut cfg = ExperimentConfig::paper();
+        cfg.sa = crate::arch::SaConfig::new_ws(8, 8, 16).unwrap();
+        let a = run_experiment(&cfg, &tiny_layers(), None).unwrap();
+        let b = run_experiment(&cfg, &tiny_layers(), None).unwrap();
+        assert_eq!(a.rows, b.rows);
+        assert_eq!(a.aspect_used, b.aspect_used);
+    }
+}

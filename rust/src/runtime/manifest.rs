@@ -1,0 +1,306 @@
+//! Artifact manifest: shapes and metadata emitted by `python -m compile.aot`.
+
+use std::path::{Path, PathBuf};
+
+
+use crate::error::{Error, Result};
+use crate::util::json::{obj, Json};
+
+/// Metadata of one AOT-compiled Table-I layer artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerMeta {
+    /// Layer name ("L1".."L6").
+    pub name: String,
+    /// HLO text file name (relative to the artifact dir).
+    pub file: String,
+    /// Kernel size.
+    pub k: usize,
+    /// Output height.
+    pub h: usize,
+    /// Output width.
+    pub w: usize,
+    /// Input channels.
+    pub c: usize,
+    /// Output channels.
+    pub m: usize,
+    /// Stride.
+    pub stride: usize,
+    /// Padding.
+    pub pad: usize,
+    /// Input tensor shape `[1, C, H_in, W_in]`.
+    pub input_shape: Vec<usize>,
+    /// Weight matrix shape `[M, C·K²]`.
+    pub weight_shape: Vec<usize>,
+    /// GEMM dims `[P, CK², M]`.
+    pub gemm: Vec<usize>,
+    /// MAC count.
+    pub macs: u64,
+}
+
+/// Metadata of the activity-oracle artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ActivityMeta {
+    /// HLO text file name.
+    pub file: String,
+    /// Chunk rows (cycles per call).
+    pub cycles: usize,
+    /// Chunk columns (lanes per call).
+    pub lanes: usize,
+}
+
+/// Metadata of the quickstart tile-matmul artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TileMatmulMeta {
+    /// HLO text file name.
+    pub file: String,
+    /// Tile edge (SA dimension).
+    pub tile: usize,
+}
+
+/// The `manifest.json` document.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    /// SA tile size the GEMM kernels were compiled for.
+    pub sa_tile: usize,
+    /// Activity oracle entry.
+    pub activity: ActivityMeta,
+    /// Tile matmul entry.
+    pub tile_matmul: TileMatmulMeta,
+    /// Per-layer entries.
+    pub layers: Vec<LayerMeta>,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifact directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let path = dir.as_ref().join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::runtime(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        let m = Self::from_json(&text)?;
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Parse a manifest from JSON text.
+    pub fn from_json(text: &str) -> Result<Self> {
+        let j = Json::parse(text)?;
+        let usizes = |v: &Json| -> Result<Vec<usize>> {
+            v.as_arr()?.iter().map(|e| e.as_usize()).collect()
+        };
+        let act = j.req("activity")?;
+        let tm = j.req("tile_matmul")?;
+        let mut layers = Vec::new();
+        for l in j.req("layers")?.as_arr()? {
+            layers.push(LayerMeta {
+                name: l.req("name")?.as_str()?.to_string(),
+                file: l.req("file")?.as_str()?.to_string(),
+                k: l.req("k")?.as_usize()?,
+                h: l.req("h")?.as_usize()?,
+                w: l.req("w")?.as_usize()?,
+                c: l.req("c")?.as_usize()?,
+                m: l.req("m")?.as_usize()?,
+                stride: l.req("stride")?.as_usize()?,
+                pad: l.req("pad")?.as_usize()?,
+                input_shape: usizes(l.req("input_shape")?)?,
+                weight_shape: usizes(l.req("weight_shape")?)?,
+                gemm: usizes(l.req("gemm")?)?,
+                macs: l.req("macs")?.as_u64()?,
+            });
+        }
+        Ok(Manifest {
+            sa_tile: j.req("sa_tile")?.as_usize()?,
+            activity: ActivityMeta {
+                file: act.req("file")?.as_str()?.to_string(),
+                cycles: act.req("cycles")?.as_usize()?,
+                lanes: act.req("lanes")?.as_usize()?,
+            },
+            tile_matmul: TileMatmulMeta {
+                file: tm.req("file")?.as_str()?.to_string(),
+                tile: tm.req("tile")?.as_usize()?,
+            },
+            layers,
+        })
+    }
+
+    /// Serialize back to JSON (testing / tooling).
+    pub fn to_json(&self) -> Json {
+        let nums = |v: &[usize]| Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect());
+        obj(vec![
+            ("sa_tile", Json::Num(self.sa_tile as f64)),
+            (
+                "activity",
+                obj(vec![
+                    ("file", Json::Str(self.activity.file.clone())),
+                    ("cycles", Json::Num(self.activity.cycles as f64)),
+                    ("lanes", Json::Num(self.activity.lanes as f64)),
+                ]),
+            ),
+            (
+                "tile_matmul",
+                obj(vec![
+                    ("file", Json::Str(self.tile_matmul.file.clone())),
+                    ("tile", Json::Num(self.tile_matmul.tile as f64)),
+                ]),
+            ),
+            (
+                "layers",
+                Json::Arr(
+                    self.layers
+                        .iter()
+                        .map(|l| {
+                            obj(vec![
+                                ("name", Json::Str(l.name.clone())),
+                                ("file", Json::Str(l.file.clone())),
+                                ("k", Json::Num(l.k as f64)),
+                                ("h", Json::Num(l.h as f64)),
+                                ("w", Json::Num(l.w as f64)),
+                                ("c", Json::Num(l.c as f64)),
+                                ("m", Json::Num(l.m as f64)),
+                                ("stride", Json::Num(l.stride as f64)),
+                                ("pad", Json::Num(l.pad as f64)),
+                                ("input_shape", nums(&l.input_shape)),
+                                ("weight_shape", nums(&l.weight_shape)),
+                                ("gemm", nums(&l.gemm)),
+                                ("macs", Json::Num(l.macs as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Sanity-check internal consistency.
+    pub fn validate(&self) -> Result<()> {
+        if self.sa_tile == 0 {
+            return Err(Error::config("manifest: sa_tile must be non-zero"));
+        }
+        for l in &self.layers {
+            if l.input_shape.len() != 4 || l.weight_shape.len() != 2 || l.gemm.len() != 3 {
+                return Err(Error::config(format!(
+                    "manifest: layer {} has malformed shapes",
+                    l.name
+                )));
+            }
+            let ck2 = l.c * l.k * l.k;
+            if l.weight_shape != vec![l.m, ck2] {
+                return Err(Error::config(format!(
+                    "manifest: layer {} weight shape {:?} != [{}, {}]",
+                    l.name, l.weight_shape, l.m, ck2
+                )));
+            }
+            if l.gemm != vec![l.h * l.w, ck2, l.m] {
+                return Err(Error::config(format!(
+                    "manifest: layer {} gemm {:?} inconsistent",
+                    l.name, l.gemm
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Find a layer by name.
+    pub fn layer(&self, name: &str) -> Result<&LayerMeta> {
+        self.layers
+            .iter()
+            .find(|l| l.name == name)
+            .ok_or_else(|| Error::runtime(format!("no artifact for layer {name}")))
+    }
+
+    /// Absolute path of a file in the artifact dir.
+    pub fn path_of(dir: impl AsRef<Path>, file: &str) -> PathBuf {
+        dir.as_ref().join(file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Manifest {
+        Manifest {
+            sa_tile: 32,
+            activity: ActivityMeta {
+                file: "activity_block.hlo.txt".into(),
+                cycles: 4096,
+                lanes: 64,
+            },
+            tile_matmul: TileMatmulMeta {
+                file: "tile_matmul.hlo.txt".into(),
+                tile: 32,
+            },
+            layers: vec![LayerMeta {
+                name: "L1".into(),
+                file: "layer_L1.hlo.txt".into(),
+                k: 1,
+                h: 56,
+                w: 56,
+                c: 256,
+                m: 64,
+                stride: 1,
+                pad: 0,
+                input_shape: vec![1, 256, 56, 56],
+                weight_shape: vec![64, 256],
+                gemm: vec![3136, 256, 64],
+                macs: 3136 * 256 * 64,
+            }],
+        }
+    }
+
+    #[test]
+    fn validate_ok_and_lookup() {
+        let m = sample();
+        assert!(m.validate().is_ok());
+        assert_eq!(m.layer("L1").unwrap().m, 64);
+        assert!(m.layer("L9").is_err());
+    }
+
+    #[test]
+    fn validate_rejects_inconsistency() {
+        let mut m = sample();
+        m.layers[0].weight_shape = vec![64, 999];
+        assert!(m.validate().is_err());
+        let mut m = sample();
+        m.layers[0].gemm = vec![1, 2, 3];
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let m = sample();
+        let back = Manifest::from_json(&m.to_json().to_string()).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn parses_real_aot_output_shape() {
+        // Mirror of the document python/compile/aot.py emits.
+        let text = r#"{
+          "sa_tile": 32,
+          "activity": {"file": "activity_block.hlo.txt", "cycles": 4096, "lanes": 64},
+          "tile_matmul": {"file": "tile_matmul.hlo.txt", "tile": 32},
+          "layers": [{
+            "name": "L1", "file": "layer_L1.hlo.txt",
+            "k": 1, "h": 56, "w": 56, "c": 256, "m": 64,
+            "stride": 1, "pad": 0,
+            "input_shape": [1, 256, 56, 56],
+            "weight_shape": [64, 256],
+            "gemm": [3136, 256, 64],
+            "macs": 51380224
+          }]
+        }"#;
+        let m = Manifest::from_json(text).unwrap();
+        assert!(m.validate().is_ok());
+        assert_eq!(m.layers[0].gemm, vec![3136, 256, 64]);
+    }
+
+    #[test]
+    fn load_missing_dir_errors_helpfully() {
+        let err = Manifest::load("/nonexistent-dir").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,221 @@
+//! Input-stationary (IS) dataflow — second ablation baseline.
+//!
+//! IS pins an `R×C` block of *activations* in the PEs; weights stream
+//! horizontally (`B_h` words) and partial sums reduce vertically exactly
+//! as in WS (`B_v` words, every cycle). The bus-width asymmetry therefore
+//! *persists* under IS — unlike OS, where psums stay put — so eq. 6 still
+//! prescribes rectangular PEs. The `ablation_dataflow` bench uses this to
+//! separate the two ingredients of the paper's claim: it is the *moving
+//! wide psums* (WS and IS), not weight-stationarity itself, that makes
+//! the vertical direction dominant.
+//!
+//! Accounting conventions mirror [`super::os`]:
+//! * one IS tile pass pins `A[m0..m0+R, k0..k0+C]ᵀ` and streams all N
+//!   weight columns: `N + R + C + 2` stream cycles + `R` preload;
+//! * `stats.horizontal`  — weight stream (B_h);
+//! * `stats.weight_load` — activation preload chain (B_h, vertical);
+//! * `stats.vertical`    — partial-sum reduction (B_v).
+
+use crate::arch::SaConfig;
+use crate::error::{Error, Result};
+use crate::gemm::{matmul_i64, Matrix};
+use crate::quant::bus_word;
+
+use super::{GemmSim, SaStats};
+
+/// Cycles of one IS tile pass streaming `n` weight columns.
+#[inline]
+pub fn is_pass_cycles(sa: &SaConfig, n: usize) -> usize {
+    sa.rows + n + sa.rows + sa.cols + 2
+}
+
+/// Analytic IS simulation of GEMM `a @ w` (`a: M×K`, `w: K×N`).
+///
+/// The stationary operand is the activation block; the array is laid out
+/// with reduction along rows (`k` on the vertical wires), matching the
+/// WS engines so the per-direction bus widths stay comparable.
+pub fn simulate_gemm_is(sa: &SaConfig, a: &Matrix<i32>, w: &Matrix<i32>) -> Result<GemmSim> {
+    if a.cols != w.rows {
+        return Err(Error::shape(format!(
+            "inner dims mismatch: {}x{} @ {}x{}",
+            a.rows, a.cols, w.rows, w.cols
+        )));
+    }
+    let (r_dim, c_dim) = (sa.rows, sa.cols);
+    let bh = sa.bus_bits_horizontal();
+    let bv = sa.acc_bits;
+    let (m, k, n) = (a.rows, a.cols, w.cols);
+    let pc = is_pass_cycles(sa, n) as u64;
+
+    let y = matmul_i64(a, w)?;
+    let mut stats = SaStats::new(sa);
+    let mut cycles = 0u64;
+    let mut macs = 0u64;
+
+    // Tile: rows of the array hold k-indices (reduction down columns),
+    // columns hold m-indices (outputs drain South per m).
+    let mut k0 = 0;
+    while k0 < k {
+        let k_len = r_dim.min(k - k0);
+        let mut m0 = 0;
+        while m0 < m {
+            let m_len = c_dim.min(m - m0);
+
+            // Activation preload: shift A^T block down the columns
+            // (same chain structure as the WS weight preload; counted
+            // from a cleared chain for tile independence).
+            for c in 0..c_dim {
+                for r in 0..r_dim {
+                    let (mut tog, mut nz) = (0u64, 0u64);
+                    let mut p = 0u64;
+                    if c < m_len {
+                        for t in r..r_dim {
+                            let rr = r_dim - 1 - (t - r);
+                            let v = if rr < k_len {
+                                a.get(m0 + c, k0 + rr) as i64
+                            } else {
+                                0
+                            };
+                            let word = bus_word(v, bh);
+                            tog += (p ^ word).count_ones() as u64;
+                            nz += (word != 0) as u64;
+                            p = word;
+                        }
+                    }
+                    stats.weight_load.toggles += tog;
+                    stats.weight_load.zero_words += r_dim as u64 - nz;
+                    stats.weight_load.observations += r_dim as u64;
+                }
+            }
+
+            // Weight stream: row r carries w[k0+r][0..n] (B_h words),
+            // identical on all C segments of the row.
+            for r in 0..r_dim {
+                let (mut tog, mut nz) = (0u64, 0u64);
+                if r < k_len {
+                    let mut p = 0u64;
+                    for j in 0..n {
+                        let word = bus_word(w.get(k0 + r, j) as i64, bh);
+                        tog += (p ^ word).count_ones() as u64;
+                        nz += (word != 0) as u64;
+                        p = word;
+                    }
+                    tog += p.count_ones() as u64;
+                }
+                stats.horizontal.toggles += tog * c_dim as u64;
+                stats.horizontal.zero_words += (pc - nz) * c_dim as u64;
+                stats.horizontal.observations += pc * c_dim as u64;
+            }
+
+            // Vertical psums: segment (r, c) carries the prefix sum
+            // P_r(j, c) = Σ_{r'≤r} a[m0+c][k0+r'] · w[k0+r'][j] over the
+            // weight-column stream j — same structure as WS.
+            let mut prev_words = vec![0u64; r_dim];
+            let mut toggles = vec![0u64; r_dim];
+            let mut nonzeros = vec![0u64; r_dim];
+            for c in 0..c_dim {
+                toggles.iter_mut().for_each(|v| *v = 0);
+                nonzeros.iter_mut().for_each(|v| *v = 0);
+                prev_words.iter_mut().for_each(|v| *v = 0);
+                if c < m_len {
+                    for j in 0..n {
+                        let mut prefix = 0i64;
+                        let mut word = 0u64;
+                        for r in 0..k_len {
+                            prefix += a.get(m0 + c, k0 + r) as i64 * w.get(k0 + r, j) as i64;
+                            word = bus_word(prefix, bv);
+                            toggles[r] += (prev_words[r] ^ word).count_ones() as u64;
+                            nonzeros[r] += (word != 0) as u64;
+                            prev_words[r] = word;
+                        }
+                        for r in k_len..r_dim {
+                            toggles[r] += (prev_words[r] ^ word).count_ones() as u64;
+                            nonzeros[r] += (word != 0) as u64;
+                            prev_words[r] = word;
+                        }
+                    }
+                    for r in 0..r_dim {
+                        toggles[r] += prev_words[r].count_ones() as u64;
+                    }
+                }
+                for r in 0..r_dim {
+                    stats.vertical.toggles += toggles[r];
+                    stats.vertical.zero_words += pc - nonzeros[r];
+                    stats.vertical.observations += pc;
+                }
+            }
+
+            cycles += pc;
+            macs += (m_len * k_len * n) as u64;
+            m0 += c_dim;
+        }
+        k0 += r_dim;
+    }
+
+    Ok(GemmSim {
+        y,
+        stats,
+        cycles,
+        macs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::fast::simulate_gemm_fast;
+    use crate::util::rng::Rng;
+
+    fn rand_mat(rows: usize, cols: usize, seed: u64) -> Matrix<i32> {
+        let mut rng = Rng::new(seed);
+        let data = (0..rows * cols)
+            .map(|_| rng.int_range(-100, 100) as i32)
+            .collect();
+        Matrix::from_vec(rows, cols, data).unwrap()
+    }
+
+    #[test]
+    fn is_output_matches_reference() {
+        let sa = SaConfig::new_ws(4, 4, 8).unwrap();
+        let a = rand_mat(9, 7, 1);
+        let w = rand_mat(7, 6, 2);
+        let sim = simulate_gemm_is(&sa, &a, &w).unwrap();
+        assert_eq!(sim.y, matmul_i64(&a, &w).unwrap());
+        assert_eq!(sim.macs, 9 * 7 * 6);
+    }
+
+    #[test]
+    fn is_keeps_wide_bus_busy_like_ws() {
+        // IS moves psums every cycle, like WS: vertical activity stays in
+        // the same band, unlike OS.
+        let sa = SaConfig::new_ws(8, 8, 8).unwrap();
+        let a = rand_mat(32, 16, 3);
+        let w = rand_mat(16, 64, 4);
+        let ws = simulate_gemm_fast(&sa, &a, &w).unwrap();
+        let is = simulate_gemm_is(&sa, &a, &w).unwrap();
+        let (_, ws_av) = ws.stats.activities();
+        let (_, is_av) = is.stats.activities();
+        assert!(
+            is_av > ws_av * 0.5,
+            "IS vertical activity {is_av} should stay near WS {ws_av}"
+        );
+    }
+
+    #[test]
+    fn is_cycle_accounting() {
+        let sa = SaConfig::new_ws(4, 4, 8).unwrap();
+        let a = rand_mat(8, 5, 5); // 2 k-blocks x 2 m-blocks
+        let w = rand_mat(5, 6, 6);
+        let sim = simulate_gemm_is(&sa, &a, &w).unwrap();
+        assert_eq!(sim.cycles, 4 * is_pass_cycles(&sa, 6) as u64);
+    }
+
+    #[test]
+    fn is_rejects_shape_mismatch() {
+        let sa = SaConfig::new_ws(4, 4, 8).unwrap();
+        assert!(
+            simulate_gemm_is(&sa, &Matrix::<i32>::zeros(2, 3), &Matrix::<i32>::zeros(4, 4))
+                .is_err()
+        );
+    }
+}

@@ -1,0 +1,143 @@
+//! Systolic-array simulation with exact per-wire toggle counting.
+//!
+//! Two interchangeable engines compute bit-identical results:
+//!
+//! * [`ws::WsCycleSim`] — cycle-by-cycle register-transfer simulation of
+//!   the weight-stationary array (paper Fig. 1): every pipeline register
+//!   is modeled and every wire-segment transition is recorded. This is
+//!   the reproduction's stand-in for the paper's RTL simulation.
+//! * [`fast::simulate_gemm_fast`] — the analytic oracle: computes the
+//!   exact same bus word sequences per wire segment without cycling the
+//!   array, ~an order of magnitude faster. Used by the benchmark harness.
+//!
+//! Equality of the two engines (outputs, toggles, observations) is
+//! enforced by unit, integration and property tests.
+//!
+//! ### Pass timeline (shared by both engines)
+//!
+//! One WS tile pass over an `R×C` array streaming `M` activation rows:
+//!
+//! ```text
+//! preload:  R cycles           weight shift chain moves, a/p regs idle 0
+//! stream :  M + R + C + 2      skewed input feed, psum reduction, drain
+//! ```
+//!
+//! The stream window is sized so every register returns to zero by the
+//! end of the pass (asserted by the cycle engine), which makes pass
+//! boundaries stateless for the horizontal/vertical buses and keeps the
+//! engines' accounting identical.
+
+pub mod fast;
+pub mod is;
+pub mod os;
+pub mod ws;
+
+
+use crate::activity::DirectionStats;
+use crate::arch::SaConfig;
+use crate::gemm::Matrix;
+
+/// Toggle/zero statistics for the three wire groups of a WS array.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SaStats {
+    /// Horizontal input buses: `R·C` segments of `B_h` wires.
+    pub horizontal: DirectionStats,
+    /// Vertical partial-sum buses: `R·C` segments of `B_v` wires.
+    pub vertical: DirectionStats,
+    /// Weight-load shift chain: `R·C` segments of `B_h` wires running
+    /// vertically (double-buffered preload; see paper §II component (a)).
+    pub weight_load: DirectionStats,
+}
+
+impl SaStats {
+    /// Empty stats for the given array configuration.
+    pub fn new(sa: &SaConfig) -> Self {
+        SaStats {
+            horizontal: DirectionStats::new(sa.bus_bits_horizontal()),
+            vertical: DirectionStats::new(sa.bus_bits_vertical()),
+            weight_load: DirectionStats::new(sa.bus_bits_horizontal()),
+        }
+    }
+
+    /// Merge another accumulator into this one.
+    pub fn merge(&mut self, other: &SaStats) {
+        self.horizontal.merge(&other.horizontal);
+        self.vertical.merge(&other.vertical);
+        self.weight_load.merge(&other.weight_load);
+    }
+
+    /// `(a_h, a_v)` — the paper's switching activities (psum bus only for
+    /// the vertical direction, matching §IV's measurement).
+    pub fn activities(&self) -> (f64, f64) {
+        (self.horizontal.activity(), self.vertical.activity())
+    }
+}
+
+/// Result of simulating one full GEMM on the array.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GemmSim {
+    /// Exact product `A @ W` with i64 accumulation (checked against
+    /// [`crate::gemm::matmul_i64`] in tests).
+    pub y: Matrix<i64>,
+    /// Exact bus statistics.
+    pub stats: SaStats,
+    /// Total array cycles (preload + stream across all passes).
+    pub cycles: u64,
+    /// Useful MAC operations.
+    pub macs: u64,
+}
+
+impl GemmSim {
+    /// Effective utilization: MACs / (PEs × cycles).
+    pub fn utilization(&self, sa: &SaConfig) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        self.macs as f64 / (sa.num_pes() as f64 * self.cycles as f64)
+    }
+
+    /// Wall-clock seconds on the modeled silicon at the configured clock.
+    pub fn silicon_seconds(&self, sa: &SaConfig) -> f64 {
+        self.cycles as f64 / (sa.clock_ghz * 1e9)
+    }
+}
+
+/// Stream-phase cycle count for one pass over `m` activation rows.
+#[inline]
+pub fn stream_cycles(sa: &SaConfig, m: usize) -> usize {
+    m + sa.rows + sa.cols + 2
+}
+
+/// Total cycles for one pass (preload + stream).
+#[inline]
+pub fn pass_cycles(sa: &SaConfig, m: usize) -> usize {
+    sa.rows + stream_cycles(sa, m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pass_cycles_formula() {
+        let sa = SaConfig::paper_32x32();
+        assert_eq!(stream_cycles(&sa, 100), 100 + 32 + 32 + 2);
+        assert_eq!(pass_cycles(&sa, 100), 32 + 166);
+    }
+
+    #[test]
+    fn stats_merge() {
+        let sa = SaConfig::paper_32x32();
+        let mut a = SaStats::new(&sa);
+        let mut b = SaStats::new(&sa);
+        b.horizontal.record(0, 0xF);
+        b.vertical.record(0, 0x7);
+        b.weight_load.record(0, 1);
+        a.merge(&b);
+        assert_eq!(a.horizontal.toggles, 4);
+        assert_eq!(a.vertical.toggles, 3);
+        assert_eq!(a.weight_load.toggles, 1);
+        let (ah, av) = a.activities();
+        assert!(ah > 0.0 && av > 0.0);
+    }
+}

@@ -1,0 +1,198 @@
+//! Output-stationary (OS) dataflow — the ablation baseline.
+//!
+//! The paper's analysis (§II) is specific to WS: the wide `B_v` psum bus
+//! is busy every cycle, which is what makes the vertical direction
+//! dominant. Under OS, partial sums stay inside the PEs; the vertical
+//! tracks carry narrow `B_h` weight streams during compute and the wide
+//! `B_v` outputs only during the short drain phase. This module provides
+//! the analytic OS model used by the `ablation_dataflow` bench to show
+//! the optimal aspect ratio is dataflow-dependent (≈square or even
+//! H>W for OS, strongly rectangular for WS).
+//!
+//! Accounting conventions (mirroring the WS engines):
+//! * one OS tile pass computes an `R×C` output block over the full `K`
+//!   reduction: `K` stream cycles + `R+1` drain cycles;
+//! * `stats.horizontal` — activation stream (B_h);
+//! * `stats.weight_load` — weight stream on the vertical tracks (B_h);
+//! * `stats.vertical` — output drain on the vertical tracks (B_v).
+
+use crate::arch::{Dataflow, SaConfig};
+use crate::error::{Error, Result};
+use crate::gemm::{matmul_i64, Matrix};
+use crate::quant::bus_word;
+
+use super::{GemmSim, SaStats};
+
+/// Cycles of one OS tile pass over reduction length `k`.
+#[inline]
+pub fn os_pass_cycles(sa: &SaConfig, k: usize) -> usize {
+    k + sa.rows + 1
+}
+
+/// Analytic OS simulation of GEMM `a @ w` (`a: M×K`, `w: K×N`).
+pub fn simulate_gemm_os(sa: &SaConfig, a: &Matrix<i32>, w: &Matrix<i32>) -> Result<GemmSim> {
+    if a.cols != w.rows {
+        return Err(Error::shape(format!(
+            "inner dims mismatch: {}x{} @ {}x{}",
+            a.rows, a.cols, w.rows, w.cols
+        )));
+    }
+    let mut sa_os = sa.clone();
+    sa_os.dataflow = Dataflow::OutputStationary;
+    let (r_dim, c_dim) = (sa_os.rows, sa_os.cols);
+    let bh = sa_os.bus_bits_horizontal();
+    let bv = sa_os.acc_bits; // drain words are full accumulator width
+    let (m, k, n) = (a.rows, a.cols, w.cols);
+    let pc = os_pass_cycles(&sa_os, k) as u64;
+
+    let y = matmul_i64(a, w)?;
+    let mut stats = SaStats::new(&sa_os);
+    // SaStats::new uses bus_bits_vertical() which is B_h under OS; the
+    // drain rides the wide accumulator bus — fix its width explicitly.
+    stats.vertical = crate::activity::DirectionStats::new(bv);
+    let mut cycles = 0u64;
+    let mut macs = 0u64;
+
+    let mut m0 = 0;
+    while m0 < m {
+        let m_len = r_dim.min(m - m0);
+        let mut n0 = 0;
+        while n0 < n {
+            let n_len = c_dim.min(n - n0);
+
+            // Horizontal: row r streams a[m0+r][0..k] (zero rows beyond
+            // m_len); identical on all C segments of the row.
+            for r in 0..r_dim {
+                let (mut tog, mut nz) = (0u64, 0u64);
+                if r < m_len {
+                    let mut p = 0u64;
+                    for kk in 0..k {
+                        let word = bus_word(a.get(m0 + r, kk) as i64, bh);
+                        tog += (p ^ word).count_ones() as u64;
+                        nz += (word != 0) as u64;
+                        p = word;
+                    }
+                    tog += p.count_ones() as u64;
+                }
+                stats.horizontal.toggles += tog * c_dim as u64;
+                stats.horizontal.zero_words += (pc - nz) * c_dim as u64;
+                stats.horizontal.observations += pc * c_dim as u64;
+            }
+
+            // Vertical weight stream: column c streams w[0..k][n0+c];
+            // identical on all R segments of the column.
+            for c in 0..c_dim {
+                let (mut tog, mut nz) = (0u64, 0u64);
+                if c < n_len {
+                    let mut p = 0u64;
+                    for kk in 0..k {
+                        let word = bus_word(w.get(kk, n0 + c) as i64, bh);
+                        tog += (p ^ word).count_ones() as u64;
+                        nz += (word != 0) as u64;
+                        p = word;
+                    }
+                    tog += p.count_ones() as u64;
+                }
+                stats.weight_load.toggles += tog * r_dim as u64;
+                stats.weight_load.zero_words += (pc - nz) * r_dim as u64;
+                stats.weight_load.observations += pc * r_dim as u64;
+            }
+
+            // Output drain: segment (r,c) sees y[m0+r], y[m0+r-1], …,
+            // y[m0], then zero — `r+1` words out of the R+1 drain cycles.
+            for c in 0..c_dim {
+                for r in 0..r_dim {
+                    let (mut tog, mut nz) = (0u64, 0u64);
+                    if c < n_len {
+                        let mut p = 0u64;
+                        for rr in (0..=r.min(m_len.saturating_sub(1))).rev() {
+                            if r < m_len {
+                                let word = bus_word(y.get(m0 + rr, n0 + c), bv);
+                                tog += (p ^ word).count_ones() as u64;
+                                nz += (word != 0) as u64;
+                                p = word;
+                            }
+                        }
+                        tog += p.count_ones() as u64;
+                    }
+                    stats.vertical.toggles += tog;
+                    stats.vertical.zero_words += pc - nz;
+                    stats.vertical.observations += pc;
+                }
+            }
+
+            cycles += pc;
+            macs += (m_len * k * n_len) as u64;
+            n0 += c_dim;
+        }
+        m0 += r_dim;
+    }
+
+    Ok(GemmSim {
+        y,
+        stats,
+        cycles,
+        macs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::fast::simulate_gemm_fast;
+
+    fn rand_mat(rows: usize, cols: usize, seed: u64) -> Matrix<i32> {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let data = (0..rows * cols)
+            .map(|_| rng.int_range(-100, 100) as i32)
+            .collect();
+        Matrix::from_vec(rows, cols, data).unwrap()
+    }
+
+    #[test]
+    fn os_output_matches_reference() {
+        let sa = SaConfig::new_ws(4, 4, 8).unwrap();
+        let a = rand_mat(9, 7, 1);
+        let w = rand_mat(7, 6, 2);
+        let sim = simulate_gemm_os(&sa, &a, &w).unwrap();
+        assert_eq!(sim.y, matmul_i64(&a, &w).unwrap());
+        assert_eq!(sim.macs, 9 * 7 * 6);
+    }
+
+    #[test]
+    fn os_vertical_wide_bus_is_much_quieter_than_ws() {
+        // The dataflow ablation: the B_v bus toggles far less under OS
+        // (drain-only) than under WS (every cycle) — so the paper's
+        // floorplan conclusion is WS-specific.
+        let sa = SaConfig::new_ws(8, 8, 8).unwrap();
+        let a = rand_mat(64, 32, 3);
+        let w = rand_mat(32, 16, 4);
+        let ws = simulate_gemm_fast(&sa, &a, &w).unwrap();
+        let os = simulate_gemm_os(&sa, &a, &w).unwrap();
+        assert!(
+            os.stats.vertical.toggles * 4 < ws.stats.vertical.toggles,
+            "OS drain toggles {} should be ≪ WS psum toggles {}",
+            os.stats.vertical.toggles,
+            ws.stats.vertical.toggles
+        );
+    }
+
+    #[test]
+    fn os_cycle_accounting() {
+        let sa = SaConfig::new_ws(4, 4, 8).unwrap();
+        let a = rand_mat(8, 5, 5);
+        let w = rand_mat(5, 8, 6);
+        let sim = simulate_gemm_os(&sa, &a, &w).unwrap();
+        // 2 m-blocks × 2 n-blocks passes, each k + R + 1 cycles.
+        assert_eq!(sim.cycles, 4 * (5 + 4 + 1) as u64);
+    }
+
+    #[test]
+    fn os_rejects_shape_mismatch() {
+        let sa = SaConfig::new_ws(4, 4, 8).unwrap();
+        assert!(
+            simulate_gemm_os(&sa, &Matrix::<i32>::zeros(2, 3), &Matrix::<i32>::zeros(4, 4))
+                .is_err()
+        );
+    }
+}

@@ -1,0 +1,318 @@
+//! Cycle-accurate weight-stationary systolic array simulator.
+//!
+//! Register-transfer-level model of the paper's Fig. 1 array: every
+//! pipeline register (input, stationary weight, weight shift chain,
+//! partial sum) is simulated cycle by cycle, and every wire-segment
+//! transition is recorded into [`SaStats`]. This is the reproduction's
+//! equivalent of the paper's SystemVerilog RTL simulation (§IV) — the
+//! authoritative definition of bus behaviour that the fast oracle
+//! ([`super::fast`]) must match bit-exactly.
+
+use crate::arch::SaConfig;
+use crate::error::{Error, Result};
+use crate::gemm::{Matrix, TilePlan};
+use crate::quant::bus_word;
+
+use super::{pass_cycles, stream_cycles, GemmSim, SaStats};
+
+/// Cycle-accurate WS array. Reusable across GEMMs (state drains to zero
+/// at the end of every pass — an invariant the simulator asserts).
+pub struct WsCycleSim {
+    sa: SaConfig,
+    /// Weight shift chain (persists across passes, like the silicon).
+    wshift: Vec<i32>,
+    /// Stationary weight registers.
+    wstat: Vec<i32>,
+    /// Horizontal input pipeline registers.
+    areg: Vec<i32>,
+    /// Vertical partial-sum registers.
+    preg: Vec<i64>,
+}
+
+impl WsCycleSim {
+    /// New simulator for the given array configuration.
+    pub fn new(sa: &SaConfig) -> Self {
+        let n = sa.num_pes();
+        WsCycleSim {
+            sa: sa.clone(),
+            wshift: vec![0; n],
+            wstat: vec![0; n],
+            areg: vec![0; n],
+            preg: vec![0; n],
+        }
+    }
+
+    /// Simulate the full GEMM `a @ w` (`a: M×K` i32, `w: K×N` i32) on the
+    /// array, tiling per [`TilePlan`]. Input values must fit the `B_h`-bit
+    /// horizontal bus.
+    pub fn simulate_gemm(&mut self, a: &Matrix<i32>, w: &Matrix<i32>) -> Result<GemmSim> {
+        if a.cols != w.rows {
+            return Err(Error::shape(format!(
+                "inner dims mismatch: {}x{} @ {}x{}",
+                a.rows, a.cols, w.rows, w.cols
+            )));
+        }
+        let bh = self.sa.input_bits;
+        let lo = -(1i64 << (bh - 1));
+        let hi = (1i64 << (bh - 1)) - 1;
+        let fits = |v: i32| (v as i64) >= lo && (v as i64) <= hi;
+        if !a.data.iter().copied().all(fits) || !w.data.iter().copied().all(fits) {
+            return Err(Error::shape(format!(
+                "operand exceeds the {bh}-bit horizontal bus range [{lo}, {hi}]"
+            )));
+        }
+
+        let plan = TilePlan::new(a.rows, a.cols, w.cols, &self.sa)?;
+        let mut y = Matrix::<i64>::zeros(a.rows, w.cols);
+        let mut stats = SaStats::new(&self.sa);
+        let mut cycles = 0u64;
+
+        for step in &plan.steps {
+            let w_tile = w.block_padded(step.k0, step.n0, self.sa.rows, self.sa.cols);
+            self.run_pass(a, step.k0, step.k_len, step.n0, &w_tile, &mut stats, &mut y);
+            cycles += pass_cycles(&self.sa, a.rows) as u64;
+        }
+
+        Ok(GemmSim {
+            y,
+            stats,
+            cycles,
+            macs: plan.total_macs(),
+        })
+    }
+
+    /// One WS tile pass: preload `w_tile` (R×C, zero-padded), stream all
+    /// M activation rows (columns `k0..k0+k_len` of `a`), accumulate
+    /// outputs into `y[.., n0..]`.
+    fn run_pass(
+        &mut self,
+        a: &Matrix<i32>,
+        k0: usize,
+        k_len: usize,
+        n0: usize,
+        w_tile: &Matrix<i32>,
+        stats: &mut SaStats,
+        y: &mut Matrix<i64>,
+    ) {
+        let (r_dim, c_dim) = (self.sa.rows, self.sa.cols);
+        let bh = self.sa.bus_bits_horizontal();
+        let bv = self.sa.bus_bits_vertical();
+        let m_rows = a.rows;
+
+        // ---- Phase 1: weight preload (R cycles) -------------------------
+        // The shift chain moves one row down per cycle, fed in reverse row
+        // order so that after R cycles wshift[r][c] == w_tile[r][c]; the
+        // a/p registers idle at zero (recorded: they are real bus cycles).
+        for t in 0..r_dim {
+            for r in (0..r_dim).rev() {
+                for c in 0..c_dim {
+                    let idx = r * c_dim + c;
+                    let new = if r == 0 {
+                        w_tile.get(r_dim - 1 - t, c)
+                    } else {
+                        self.wshift[(r - 1) * c_dim + c]
+                    };
+                    stats
+                        .weight_load
+                        .record(bus_word(self.wshift[idx] as i64, bh), bus_word(new as i64, bh));
+                    self.wshift[idx] = new;
+                }
+            }
+            // Idle a/p buses still clock: observations accrue.
+            for idx in 0..r_dim * c_dim {
+                debug_assert_eq!(self.areg[idx], 0, "a-reg not drained before preload");
+                debug_assert_eq!(self.preg[idx], 0, "p-reg not drained before preload");
+                stats.horizontal.record(0, 0);
+                stats.vertical.record(0, 0);
+            }
+        }
+        // Parallel load into the stationary registers (local transfer, no
+        // array-crossing wires involved).
+        self.wstat.copy_from_slice(&self.wshift);
+
+        // ---- Phase 2: skewed streaming (M + R + C + 2 cycles) -----------
+        let t_stream = stream_cycles(&self.sa, m_rows);
+        for t in 0..t_stream {
+            // Partial sums first (they consume the *old* a registers).
+            // Descending r so preg[r-1] is still the old value.
+            for r in (0..r_dim).rev() {
+                for c in 0..c_dim {
+                    let idx = r * c_dim + c;
+                    let from_above = if r == 0 { 0 } else { self.preg[(r - 1) * c_dim + c] };
+                    let prod = self.areg[idx] as i64 * self.wstat[idx] as i64;
+                    let new = from_above + prod;
+                    stats
+                        .vertical
+                        .record(bus_word(self.preg[idx], bv), bus_word(new, bv));
+                    self.preg[idx] = new;
+                    // Bottom-row psum exits South: collect output for m.
+                    if r == r_dim - 1 {
+                        let m_signed = t as isize - (r_dim - 1) as isize - c as isize - 1;
+                        if m_signed >= 0 && (m_signed as usize) < m_rows && n0 + c < y.cols {
+                            let m = m_signed as usize;
+                            y.set(m, n0 + c, y.get(m, n0 + c) + new);
+                        }
+                    }
+                }
+            }
+            // Horizontal input pipeline, descending c so areg[c-1] is old.
+            for r in 0..r_dim {
+                for c in (0..c_dim).rev() {
+                    let idx = r * c_dim + c;
+                    let new = if c == 0 {
+                        // Skewed feed: row r sees a[t - r][k0 + r].
+                        let m_signed = t as isize - r as isize;
+                        if r < k_len && m_signed >= 0 && (m_signed as usize) < m_rows {
+                            a.get(m_signed as usize, k0 + r)
+                        } else {
+                            0
+                        }
+                    } else {
+                        self.areg[idx - 1]
+                    };
+                    stats
+                        .horizontal
+                        .record(bus_word(self.areg[idx] as i64, bh), bus_word(new as i64, bh));
+                    self.areg[idx] = new;
+                }
+            }
+        }
+
+        // Drain invariant: the stream window is sized so the array is
+        // empty again — pass boundaries are stateless for a/p buses.
+        debug_assert!(self.areg.iter().all(|&v| v == 0), "a-regs not drained");
+        debug_assert!(self.preg.iter().all(|&v| v == 0), "p-regs not drained");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::matmul_i64;
+    use crate::workloads::{ActivationModel, SynthGen};
+
+    fn small_sa() -> SaConfig {
+        SaConfig::new_ws(4, 4, 8).unwrap()
+    }
+
+    fn rand_mat(rows: usize, cols: usize, seed: u64, lo: i32, hi: i32) -> Matrix<i32> {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let data = (0..rows * cols)
+            .map(|_| rng.int_range(lo as i64, hi as i64) as i32)
+            .collect();
+        Matrix::from_vec(rows, cols, data).unwrap()
+    }
+
+    #[test]
+    fn exact_fit_gemm_matches_reference() {
+        let sa = small_sa();
+        let a = rand_mat(6, 4, 1, -100, 100);
+        let w = rand_mat(4, 4, 2, -100, 100);
+        let sim = WsCycleSim::new(&sa).simulate_gemm(&a, &w).unwrap();
+        assert_eq!(sim.y, matmul_i64(&a, &w).unwrap());
+        assert_eq!(sim.macs, 6 * 4 * 4);
+    }
+
+    #[test]
+    fn multi_pass_gemm_matches_reference() {
+        let sa = small_sa();
+        // K=10 (3 k-blocks), N=9 (3 n-blocks) → 9 passes with raggedness.
+        let a = rand_mat(7, 10, 3, -100, 100);
+        let w = rand_mat(10, 9, 4, -100, 100);
+        let sim = WsCycleSim::new(&sa).simulate_gemm(&a, &w).unwrap();
+        assert_eq!(sim.y, matmul_i64(&a, &w).unwrap());
+        let plan = TilePlan::new(7, 10, 9, &sa).unwrap();
+        assert_eq!(sim.cycles, plan.total_cycles(&sa) as u64);
+    }
+
+    #[test]
+    fn simulator_reusable_across_gemms() {
+        let sa = small_sa();
+        let mut sim = WsCycleSim::new(&sa);
+        let a = rand_mat(5, 4, 5, -50, 50);
+        let w = rand_mat(4, 4, 6, -50, 50);
+        let r1 = sim.simulate_gemm(&a, &w).unwrap();
+        let r2 = sim.simulate_gemm(&a, &w).unwrap();
+        assert_eq!(r1.y, r2.y);
+        // Weight-load stats differ on the first pass (chain starts at 0 vs
+        // holding the previous weights), h/v stats are pass-stateless.
+        assert_eq!(r1.stats.horizontal, r2.stats.horizontal);
+        assert_eq!(r1.stats.vertical, r2.stats.vertical);
+    }
+
+    #[test]
+    fn zero_inputs_produce_no_data_toggles() {
+        let sa = small_sa();
+        let a = Matrix::<i32>::zeros(5, 4);
+        let w = rand_mat(4, 4, 7, -50, 50);
+        let sim = WsCycleSim::new(&sa).simulate_gemm(&a, &w).unwrap();
+        assert_eq!(sim.stats.horizontal.toggles, 0);
+        assert_eq!(sim.stats.vertical.toggles, 0);
+        assert!(sim.stats.weight_load.toggles > 0);
+        assert!(sim.y.data.iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn observation_accounting() {
+        let sa = small_sa();
+        let m = 5usize;
+        let a = rand_mat(m, 4, 8, -50, 50);
+        let w = rand_mat(4, 4, 9, -50, 50);
+        let sim = WsCycleSim::new(&sa).simulate_gemm(&a, &w).unwrap();
+        // One pass: every h/v segment observes every pass cycle.
+        let pc = pass_cycles(&sa, m) as u64;
+        let segs = sa.num_pes() as u64;
+        assert_eq!(sim.stats.horizontal.observations, pc * segs);
+        assert_eq!(sim.stats.vertical.observations, pc * segs);
+        // Weight chain observes only preload cycles.
+        assert_eq!(sim.stats.weight_load.observations, sa.rows as u64 * segs);
+        assert_eq!(sim.cycles, pc);
+    }
+
+    #[test]
+    fn signed_psums_toggle_more_than_positive_inputs() {
+        // The paper's §II observation: signed accumulation in the vertical
+        // direction flips more bits per wire than the positive inputs.
+        let sa = SaConfig::new_ws(8, 8, 8).unwrap();
+        let mut gen = SynthGen::new(11);
+        let acts = gen.activations(1, 16, 8, &ActivationModel::default());
+        let q: Vec<i32> = acts
+            .iter()
+            .map(|&v| ((v * 40.0) as i32).clamp(0, 127))
+            .collect();
+        let a = Matrix::from_vec(16, 8, q).unwrap();
+        let w = rand_mat(8, 8, 12, -100, 100);
+        let sim = WsCycleSim::new(&sa).simulate_gemm(&a, &w).unwrap();
+        let (ah, av) = sim.stats.activities();
+        assert!(
+            av > ah,
+            "expected a_v > a_h (paper §II), got a_h={ah:.3} a_v={av:.3}"
+        );
+    }
+
+    #[test]
+    fn rejects_out_of_range_operands() {
+        let sa = small_sa(); // 8-bit bus: [-128, 127]
+        let a = Matrix::from_vec(1, 4, vec![200, 0, 0, 0]).unwrap();
+        let w = Matrix::<i32>::zeros(4, 4);
+        assert!(WsCycleSim::new(&sa).simulate_gemm(&a, &w).is_err());
+    }
+
+    #[test]
+    fn rejects_shape_mismatch() {
+        let sa = small_sa();
+        let a = Matrix::<i32>::zeros(2, 3);
+        let w = Matrix::<i32>::zeros(4, 4);
+        assert!(WsCycleSim::new(&sa).simulate_gemm(&a, &w).is_err());
+    }
+
+    #[test]
+    fn int16_extremes_accumulate_losslessly() {
+        // Worst case on the paper's 37-bit accumulator: no wrap.
+        let sa = SaConfig::paper_32x32();
+        let a = Matrix::from_vec(1, 32, vec![32767i32; 32]).unwrap();
+        let w = Matrix::from_vec(32, 1, vec![-32768i32; 32]).unwrap();
+        let sim = WsCycleSim::new(&sa).simulate_gemm(&a, &w).unwrap();
+        assert_eq!(sim.y.get(0, 0), 32 * 32767i64 * -32768i64);
+    }
+}

@@ -1,0 +1,12 @@
+//! Self-contained substrates for the offline build.
+//!
+//! The vendored dependency set (see `.cargo/config.toml`) ships only
+//! `xla`, `anyhow` and `thiserror`, so the crate provides its own
+//! minimal, well-tested replacements for the usual ecosystem pieces:
+//!
+//! * [`json`] — a strict JSON parser/serializer (manifest + configs),
+//! * [`rng`]  — a deterministic SplitMix64-based RNG with Gaussian
+//!   sampling (synthetic workloads, property tests).
+
+pub mod json;
+pub mod rng;

@@ -1,0 +1,32 @@
+//! CNN workloads: the paper's Table-I ResNet50 layers, the full ResNet50
+//! conv inventory, and synthetic activation/weight generators standing in
+//! for ImageNet samples (substitution documented in DESIGN.md §3).
+
+pub mod resnet50;
+pub mod synth;
+
+pub use resnet50::{full_resnet50, table1_layers, ConvLayer};
+pub use synth::{ActivationModel, SynthGen};
+
+/// GEMM dimensions `(M_g, K_g, N_g)` of a conv layer lowered via im2col:
+/// `P × CK² × M` with `P = H_out · W_out`.
+pub fn gemm_shape(layer: &ConvLayer) -> (usize, usize, usize) {
+    (
+        layer.h * layer.w,
+        layer.c * layer.k * layer.k,
+        layer.m,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemm_shape_matches_python_side() {
+        let layers = table1_layers();
+        assert_eq!(gemm_shape(&layers[0]), (3136, 256, 64));
+        assert_eq!(gemm_shape(&layers[1]), (784, 1152, 128));
+        assert_eq!(gemm_shape(&layers[5]), (196, 2304, 256));
+    }
+}

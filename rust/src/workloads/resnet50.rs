@@ -1,0 +1,172 @@
+//! ResNet50 conv layer inventory.
+//!
+//! [`table1_layers`] is the paper's Table I (the six selected layers used
+//! in Figs. 4–5). [`full_resnet50`] is the complete conv inventory of
+//! ResNet50 (He et al. 2016), used to compute the *ResNet50 average* bar
+//! of Figs. 4–5 and the average switching activities of §IV.
+
+
+/// One conv layer in the paper's Table-I parameterization: `K` kernel
+/// size, `h/w` OUTPUT spatial dims, `c` input channels, `m` output
+/// channels.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConvLayer {
+    /// Layer name (Table I: "L1".."L6"; full net: "conv2_1_1x1a" etc.).
+    pub name: String,
+    /// Kernel size K (square kernels).
+    pub k: usize,
+    /// Output height.
+    pub h: usize,
+    /// Output width.
+    pub w: usize,
+    /// Input channels C.
+    pub c: usize,
+    /// Output channels M.
+    pub m: usize,
+    /// Stride (Table-I layers are all stride 1).
+    pub stride: usize,
+}
+
+impl ConvLayer {
+    /// 'Same' padding used by the stride-1 bottleneck convs.
+    pub fn pad(&self) -> usize {
+        self.k / 2
+    }
+
+    /// Input spatial dims for stride-s 'same' convolution.
+    pub fn input_hw(&self) -> (usize, usize) {
+        (self.h * self.stride, self.w * self.stride)
+    }
+
+    /// Total multiply-accumulates.
+    pub fn macs(&self) -> u64 {
+        (self.h * self.w) as u64 * (self.c * self.k * self.k) as u64 * self.m as u64
+    }
+}
+
+fn layer(name: &str, k: usize, h: usize, w: usize, c: usize, m: usize) -> ConvLayer {
+    ConvLayer {
+        name: name.to_string(),
+        k,
+        h,
+        w,
+        c,
+        m,
+        stride: 1,
+    }
+}
+
+/// The paper's Table I: six selected ResNet50 conv layers.
+pub fn table1_layers() -> Vec<ConvLayer> {
+    vec![
+        layer("L1", 1, 56, 56, 256, 64),
+        layer("L2", 3, 28, 28, 128, 128),
+        layer("L3", 1, 28, 28, 128, 512),
+        layer("L4", 1, 14, 14, 512, 256),
+        layer("L5", 1, 14, 14, 1024, 256),
+        layer("L6", 3, 14, 14, 256, 256),
+    ]
+}
+
+/// The full stride-1 conv inventory of ResNet50's bottleneck stages.
+///
+/// Structure per stage i (conv2..conv5, with n_i = {3,4,6,3} blocks and
+/// widths {64,128,256,512}): each block is 1×1 reduce → 3×3 → 1×1 expand
+/// (expansion 4). Strided/downsample convs and the 7×7 stem are omitted:
+/// the paper streams stride-1 'same' GEMMs through the SA and its
+/// selected layers are all of this form (Table I).
+pub fn full_resnet50() -> Vec<ConvLayer> {
+    let mut layers = Vec::new();
+    // (stage, blocks, width, out spatial)
+    let stages = [
+        (2usize, 3usize, 64usize, 56usize),
+        (3, 4, 128, 28),
+        (4, 6, 256, 14),
+        (5, 3, 512, 7),
+    ];
+    for &(stage, blocks, width, hw) in &stages {
+        let expanded = width * 4;
+        for b in 1..=blocks {
+            // Input to the 1x1 reduce: `width` for the very first block of
+            // conv2 (post-stem 64 ch at 56x56 → 64), else `expanded` of
+            // the previous block (same stage) or of the previous stage.
+            let c_in = if stage == 2 && b == 1 {
+                64
+            } else if b == 1 {
+                // first block of a later stage sees prev stage's expansion
+                (width / 2) * 4
+            } else {
+                expanded
+            };
+            layers.push(layer(
+                &format!("conv{stage}_{b}_1x1a"),
+                1,
+                hw,
+                hw,
+                c_in,
+                width,
+            ));
+            layers.push(layer(&format!("conv{stage}_{b}_3x3"), 3, hw, hw, width, width));
+            layers.push(layer(
+                &format!("conv{stage}_{b}_1x1b"),
+                1,
+                hw,
+                hw,
+                width,
+                expanded,
+            ));
+        }
+    }
+    layers
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_matches_paper() {
+        let t = table1_layers();
+        assert_eq!(t.len(), 6);
+        assert_eq!(
+            (t[0].k, t[0].h, t[0].w, t[0].c, t[0].m),
+            (1, 56, 56, 256, 64)
+        );
+        assert_eq!(
+            (t[4].k, t[4].h, t[4].w, t[4].c, t[4].m),
+            (1, 14, 14, 1024, 256)
+        );
+        assert!(t.iter().all(|l| l.stride == 1));
+    }
+
+    #[test]
+    fn pads_are_same_conv() {
+        for l in table1_layers() {
+            assert_eq!(l.pad(), l.k / 2);
+            assert_eq!(l.input_hw(), (l.h, l.w));
+        }
+    }
+
+    #[test]
+    fn full_net_has_16_blocks() {
+        let all = full_resnet50();
+        // 3+4+6+3 = 16 bottleneck blocks × 3 convs.
+        assert_eq!(all.len(), 16 * 3);
+        // Every Table-I layer shape appears in the full net.
+        for t in table1_layers() {
+            assert!(
+                all.iter()
+                    .any(|l| (l.k, l.h, l.w, l.c, l.m) == (t.k, t.h, t.w, t.c, t.m)),
+                "Table-I layer {} missing from full net",
+                t.name
+            );
+        }
+    }
+
+    #[test]
+    fn macs_sane() {
+        let t = table1_layers();
+        // L1: 56*56*256*64 ≈ 51.4 MMACs.
+        assert_eq!(t[0].macs(), 3136 * 256 * 64);
+    }
+}

@@ -1,0 +1,137 @@
+//! Property-style integration tests: the cycle-accurate engine and the
+//! analytic oracle are bit-identical across randomized shapes, arrays,
+//! bit widths and data distributions (the offline-build replacement for
+//! a proptest suite — deterministic seeds, wide case coverage).
+
+use asymm_sa::arch::SaConfig;
+use asymm_sa::gemm::{matmul_i64, Matrix};
+use asymm_sa::sim::{fast::simulate_gemm_fast, os::simulate_gemm_os, ws::WsCycleSim};
+use asymm_sa::util::rng::Rng;
+
+fn rand_operands(
+    rng: &mut Rng,
+    m: usize,
+    k: usize,
+    n: usize,
+    bits: u32,
+    sparsity: f64,
+) -> (Matrix<i32>, Matrix<i32>) {
+    let hi = (1i64 << (bits - 1)) - 1;
+    let mut a_data = Vec::with_capacity(m * k);
+    for _ in 0..m * k {
+        a_data.push(if rng.chance(sparsity) {
+            0
+        } else {
+            rng.int_range(-hi, hi) as i32
+        });
+    }
+    let mut w_data = Vec::with_capacity(k * n);
+    for _ in 0..k * n {
+        w_data.push(rng.int_range(-hi, hi) as i32);
+    }
+    let a = Matrix::from_vec(m, k, a_data).unwrap();
+    let w = Matrix::from_vec(k, n, w_data).unwrap();
+    (a, w)
+}
+
+#[test]
+fn property_cycle_equals_analytic_across_64_random_cases() {
+    let mut rng = Rng::new(0xDEAD_BEEF);
+    for case in 0..64 {
+        let rows = [2usize, 3, 4, 5, 8][rng.index(0, 5)];
+        let cols = [2usize, 3, 4, 5, 8][rng.index(0, 5)];
+        let bits = [4u32, 8, 12][rng.index(0, 3)];
+        let sa = SaConfig::new_ws(rows, cols, bits).unwrap();
+        let m = rng.index(1, 30);
+        let k = rng.index(1, 3 * rows);
+        let n = rng.index(1, 3 * cols);
+        let sparsity = [0.0, 0.5, 0.9][rng.index(0, 3)];
+        let (a, w) = rand_operands(&mut rng, m, k, n, bits, sparsity);
+
+        let slow = WsCycleSim::new(&sa).simulate_gemm(&a, &w).unwrap();
+        let fast = simulate_gemm_fast(&sa, &a, &w).unwrap();
+
+        let ctx = format!("case {case}: {m}x{k}x{n} on {rows}x{cols} @ {bits}b");
+        assert_eq!(slow.y, fast.y, "{ctx}: outputs");
+        assert_eq!(slow.stats, fast.stats, "{ctx}: stats");
+        assert_eq!(slow.cycles, fast.cycles, "{ctx}: cycles");
+        assert_eq!(slow.macs, fast.macs, "{ctx}: macs");
+        // Both must equal the exact reference GEMM.
+        assert_eq!(slow.y, matmul_i64(&a, &w).unwrap(), "{ctx}: reference");
+    }
+}
+
+#[test]
+fn property_engine_state_is_pass_stateless() {
+    // Running two different GEMMs back-to-back on one simulator instance
+    // yields the same h/v statistics as fresh instances (drain invariant).
+    let mut rng = Rng::new(77);
+    let sa = SaConfig::new_ws(4, 4, 8).unwrap();
+    let (a1, w1) = rand_operands(&mut rng, 9, 7, 6, 8, 0.3);
+    let (a2, w2) = rand_operands(&mut rng, 5, 11, 9, 8, 0.3);
+
+    let mut shared = WsCycleSim::new(&sa);
+    let r1 = shared.simulate_gemm(&a1, &w1).unwrap();
+    let r2 = shared.simulate_gemm(&a2, &w2).unwrap();
+
+    let f1 = WsCycleSim::new(&sa).simulate_gemm(&a1, &w1).unwrap();
+    let f2 = WsCycleSim::new(&sa).simulate_gemm(&a2, &w2).unwrap();
+
+    assert_eq!(r1.stats.horizontal, f1.stats.horizontal);
+    assert_eq!(r1.stats.vertical, f1.stats.vertical);
+    assert_eq!(r2.stats.horizontal, f2.stats.horizontal);
+    assert_eq!(r2.stats.vertical, f2.stats.vertical);
+    assert_eq!(r2.y, f2.y);
+}
+
+#[test]
+fn property_toggle_counts_scale_with_stream_length() {
+    // Doubling M (same distribution) roughly doubles data toggles —
+    // sanity for the activity accounting (within a loose band).
+    let mut rng = Rng::new(3);
+    let sa = SaConfig::new_ws(8, 8, 8).unwrap();
+    let (a1, w) = rand_operands(&mut rng, 200, 8, 8, 8, 0.5);
+    let mut a2data = a1.data.clone();
+    a2data.extend_from_slice(&a1.data);
+    let a2 = Matrix::from_vec(400, 8, a2data).unwrap();
+
+    let s1 = simulate_gemm_fast(&sa, &a1, &w).unwrap();
+    let s2 = simulate_gemm_fast(&sa, &a2, &w).unwrap();
+    let ratio_h = s2.stats.horizontal.toggles as f64 / s1.stats.horizontal.toggles as f64;
+    let ratio_v = s2.stats.vertical.toggles as f64 / s1.stats.vertical.toggles as f64;
+    assert!((ratio_h - 2.0).abs() < 0.1, "horizontal ratio {ratio_h}");
+    assert!((ratio_v - 2.0).abs() < 0.1, "vertical ratio {ratio_v}");
+}
+
+#[test]
+fn property_os_and_ws_agree_on_outputs() {
+    let mut rng = Rng::new(11);
+    for _ in 0..16 {
+        let sa = SaConfig::new_ws(4, 4, 8).unwrap();
+        let m = rng.index(1, 20);
+        let k = rng.index(1, 16);
+        let n = rng.index(1, 16);
+        let (a, w) = rand_operands(&mut rng, m, k, n, 8, 0.4);
+        let ws = simulate_gemm_fast(&sa, &a, &w).unwrap();
+        let os = simulate_gemm_os(&sa, &a, &w).unwrap();
+        assert_eq!(ws.y, os.y);
+        assert_eq!(ws.macs, os.macs);
+    }
+}
+
+#[test]
+fn property_activity_bounded_by_one() {
+    // a = toggles/(obs·bits) can never exceed 1 (each wire flips at most
+    // once per cycle).
+    let mut rng = Rng::new(21);
+    for _ in 0..16 {
+        let sa = SaConfig::new_ws(4, 4, 8).unwrap();
+        let (m, k, n) = (rng.index(1, 40), rng.index(1, 12), rng.index(1, 12));
+        let (a, w) = rand_operands(&mut rng, m, k, n, 8, 0.0);
+        let sim = simulate_gemm_fast(&sa, &a, &w).unwrap();
+        let (ah, av) = sim.stats.activities();
+        assert!((0.0..=1.0).contains(&ah), "a_h {ah}");
+        assert!((0.0..=1.0).contains(&av), "a_v {av}");
+        assert!(sim.stats.weight_load.activity() <= 1.0);
+    }
+}

@@ -1,0 +1,127 @@
+//! End-to-end pipeline tests (native path): the reproduction contract.
+//!
+//! Runs the full experiment machinery on reduced layer sets and asserts
+//! the paper's qualitative claims hold: activity asymmetry, asymmetric
+//! floorplan winning on interconnect power at zero performance cost,
+//! savings ordered by layer density, and determinism.
+
+use asymm_sa::arch::SaConfig;
+use asymm_sa::config::ExperimentConfig;
+use asymm_sa::report::run_experiment;
+use asymm_sa::workloads::{ActivationModel, ConvLayer};
+
+fn layer(name: &str, k: usize, hw: usize, c: usize, m: usize) -> ConvLayer {
+    ConvLayer {
+        name: name.into(),
+        k,
+        h: hw,
+        w: hw,
+        c,
+        m,
+        stride: 1,
+    }
+}
+
+/// Scaled-down Table-I-shaped layers (same code path, fits test budget).
+fn reduced_layers() -> Vec<ConvLayer> {
+    vec![
+        layer("r1", 1, 16, 64, 32),
+        layer("r2", 3, 8, 32, 32),
+        layer("r3", 1, 8, 128, 64),
+    ]
+}
+
+fn test_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::paper();
+    cfg.sa = SaConfig::new_ws(16, 16, 16).unwrap();
+    cfg.floorplans.proposed_aspect = None; // eq. 6 from measurements
+    cfg
+}
+
+#[test]
+fn headline_claims_hold_end_to_end() {
+    let out = run_experiment(&test_cfg(), &reduced_layers(), None).unwrap();
+
+    // §II: vertical activity exceeds horizontal.
+    let (a_h, a_v) = out.avg_activities;
+    assert!(a_v > a_h, "a_v={a_v} a_h={a_h}");
+
+    // §III: optimal PEs are wider than tall.
+    assert!(out.aspect_used > 1.0, "aspect {}", out.aspect_used);
+
+    // Fig. 4: asymmetric wins interconnect power on EVERY layer.
+    for r in &out.rows {
+        assert!(
+            r.interconnect_reduction() > 0.0,
+            "layer {} reduction {}",
+            r.name,
+            r.interconnect_reduction()
+        );
+        // Fig. 5: total power also improves, by less.
+        assert!(r.total_reduction() > 0.0, "{}", r.name);
+        assert!(r.total_reduction() < r.interconnect_reduction(), "{}", r.name);
+    }
+
+    // Zero performance cost: floorplanning does not change cycles — the
+    // power rows were computed from ONE simulation per layer.
+    assert_eq!(out.rows.len(), 3);
+}
+
+#[test]
+fn sparser_inputs_reduce_horizontal_activity_e2e() {
+    let mut dense_cfg = test_cfg();
+    dense_cfg.activations = ActivationModel::dense();
+    let mut sparse_cfg = test_cfg();
+    sparse_cfg.activations = ActivationModel::sparse();
+
+    let layers = vec![layer("x", 1, 16, 64, 64)];
+    let dense = run_experiment(&dense_cfg, &layers, None).unwrap();
+    let sparse = run_experiment(&sparse_cfg, &layers, None).unwrap();
+    assert!(
+        sparse.avg_activities.0 < dense.avg_activities.0,
+        "sparse a_h {} !< dense a_h {}",
+        sparse.avg_activities.0,
+        dense.avg_activities.0
+    );
+    // Sparser input also draws less total power (zero gating + fewer
+    // toggles) — the paper's per-layer variation in Figs. 4-5.
+    assert!(
+        sparse.rows[0].sym.total_mw() < dense.rows[0].sym.total_mw(),
+        "sparse {} !< dense {}",
+        sparse.rows[0].sym.total_mw(),
+        dense.rows[0].sym.total_mw()
+    );
+}
+
+#[test]
+fn experiment_is_deterministic() {
+    let a = run_experiment(&test_cfg(), &reduced_layers(), None).unwrap();
+    let b = run_experiment(&test_cfg(), &reduced_layers(), None).unwrap();
+    assert_eq!(a.rows, b.rows);
+    assert_eq!(a.aspect_used, b.aspect_used);
+    assert_eq!(a.avg_activities, b.avg_activities);
+
+    let mut cfg2 = test_cfg();
+    cfg2.seed += 1;
+    let c = run_experiment(&cfg2, &reduced_layers(), None).unwrap();
+    assert_ne!(a.rows, c.rows, "different seed must change the data");
+}
+
+#[test]
+fn pinned_aspect_is_respected() {
+    let mut cfg = test_cfg();
+    cfg.floorplans.proposed_aspect = Some(2.5);
+    let out = run_experiment(&cfg, &reduced_layers(), None).unwrap();
+    assert_eq!(out.aspect_used, 2.5);
+}
+
+#[test]
+fn workers_do_not_change_results() {
+    let mut one = test_cfg();
+    one.workers = 1;
+    let mut many = test_cfg();
+    many.workers = 4;
+    let a = run_experiment(&one, &reduced_layers(), None).unwrap();
+    let b = run_experiment(&many, &reduced_layers(), None).unwrap();
+    assert_eq!(a.rows, b.rows);
+}

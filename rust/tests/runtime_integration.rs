@@ -1,0 +1,177 @@
+//! Runtime integration tests: the Rust ⇄ AOT-artifact contract.
+//!
+//! These run against `artifacts/` (produced by `make artifacts`); when
+//! the directory is absent they skip with a notice so `cargo test` stays
+//! green in a fresh checkout. They pin the *bit-level* contracts the
+//! pipeline depends on:
+//!
+//! * the Pallas tile matmul matches the native f32 GEMM,
+//! * the activity oracle artifact matches `activity::stream_stats`,
+//! * the layer artifact's quantized patches match the native
+//!   im2col + quantize path (so the simulator streams identical words
+//!   whichever path produced them),
+//! * the layer forward matches a native conv reference.
+
+use asymm_sa::activity::stream_stats;
+use asymm_sa::gemm::{im2col, matmul_f32, Matrix};
+use asymm_sa::quant::quantize_sym;
+use asymm_sa::runtime::Runtime;
+use asymm_sa::util::rng::Rng;
+use asymm_sa::workloads::{ActivationModel, SynthGen};
+
+fn runtime() -> Option<Runtime> {
+    match Runtime::load("artifacts") {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP runtime tests: {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn tile_matmul_matches_native_gemm() {
+    let Some(rt) = runtime() else { return };
+    let t = rt.manifest().tile_matmul.tile;
+    let mut rng = Rng::new(1);
+    let a: Vec<f32> = (0..t * t).map(|_| rng.normal() as f32).collect();
+    let w: Vec<f32> = (0..t * t).map(|_| rng.normal() as f32).collect();
+    let got = rt.tile_matmul(&a, &w).unwrap();
+    let want = matmul_f32(
+        &Matrix::from_vec(t, t, a).unwrap(),
+        &Matrix::from_vec(t, t, w).unwrap(),
+    )
+    .unwrap();
+    for (g, w) in got.iter().zip(want.data.iter()) {
+        assert!((g - w).abs() < 1e-3, "{g} vs {w}");
+    }
+}
+
+#[test]
+fn tile_matmul_rejects_bad_shapes() {
+    let Some(rt) = runtime() else { return };
+    assert!(rt.tile_matmul(&[0.0; 3], &[0.0; 3]).is_err());
+}
+
+#[test]
+fn activity_artifact_matches_native_oracle() {
+    let Some(rt) = runtime() else { return };
+    let meta = rt.manifest().activity.clone();
+    let (t, l) = (meta.cycles, meta.lanes);
+    let mut rng = Rng::new(2);
+    let stream: Vec<i32> = (0..t * l)
+        .map(|_| rng.int_range(-(1 << 15), (1 << 15) - 1) as i32)
+        .collect();
+    let prev: Vec<i32> = (0..l).map(|_| rng.int_range(0, 1000) as i32).collect();
+    let mask: Vec<i32> = vec![0xFFFF; l];
+
+    let (tog, zer) = rt.activity_block(&stream, &prev, &mask).unwrap();
+
+    // Native oracle, lane by lane (16-bit bus words).
+    for lane in 0..l {
+        let vals: Vec<i64> = (0..t).map(|row| stream[row * l + lane] as i64).collect();
+        let stats = stream_stats(&vals, prev[lane] as i64, 16);
+        // stream_stats adds no trailing drain toggle; the artifact counts
+        // transitions within the chunk only — identical definition.
+        assert_eq!(tog[lane] as u64, stats.toggles, "lane {lane} toggles");
+        assert_eq!(zer[lane] as u64, stats.zero_words, "lane {lane} zeros");
+    }
+}
+
+#[test]
+fn activity_artifact_rejects_bad_shapes() {
+    let Some(rt) = runtime() else { return };
+    assert!(rt.activity_block(&[0; 10], &[0; 2], &[0; 2]).is_err());
+}
+
+#[test]
+fn layer_artifact_patches_match_native_path() {
+    let Some(rt) = runtime() else { return };
+    // Smallest Table-I layer by MACs: L4 (196x512x256).
+    let meta = rt.manifest().layer("L4").unwrap().clone();
+    let mut gen = SynthGen::new(42);
+    let x = gen.activations(meta.c, meta.input_shape[2], meta.input_shape[3], &ActivationModel::default());
+    let ck2 = meta.c * meta.k * meta.k;
+    let w = gen.weights(meta.m, ck2);
+
+    let (out, q_artifact) = rt.layer_forward("L4", &x, &w).unwrap();
+    assert_eq!(out.len(), meta.m * meta.h * meta.w);
+    assert!(out.iter().all(|&v| v >= 0.0), "post-ReLU outputs");
+
+    // Native path: im2col + symmetric int16 quantization.
+    let patches = im2col(
+        &x,
+        meta.c,
+        meta.input_shape[2],
+        meta.input_shape[3],
+        meta.k,
+        meta.stride,
+        meta.pad,
+    )
+    .unwrap();
+    let q_native = quantize_sym(&patches.data, 16);
+
+    assert_eq!(q_artifact.rows, patches.rows);
+    assert_eq!(q_artifact.cols, patches.cols);
+    let mismatches = q_artifact
+        .data
+        .iter()
+        .zip(q_native.values.iter())
+        .filter(|(a, b)| a != b)
+        .count();
+    // Float rounding at the .5 boundary may differ by 1 ulp for a tiny
+    // fraction of values; the bus-statistics impact is negligible and
+    // bounded here.
+    let frac = mismatches as f64 / q_native.values.len() as f64;
+    assert!(
+        frac < 1e-3,
+        "quantized patch mismatch fraction {frac} ({mismatches} values)"
+    );
+}
+
+#[test]
+fn layer_artifact_forward_matches_native_conv() {
+    let Some(rt) = runtime() else { return };
+    let meta = rt.manifest().layer("L4").unwrap().clone();
+    let mut gen = SynthGen::new(7);
+    let x = gen.activations(meta.c, meta.input_shape[2], meta.input_shape[3], &ActivationModel::default());
+    let ck2 = meta.c * meta.k * meta.k;
+    let w = gen.weights(meta.m, ck2);
+
+    let (out, _q) = rt.layer_forward("L4", &x, &w).unwrap();
+
+    // Native conv: patches (P x CK2) @ w^T (CK2 x M) -> (P, M), ReLU,
+    // transpose to (M, P).
+    let patches = im2col(
+        &x,
+        meta.c,
+        meta.input_shape[2],
+        meta.input_shape[3],
+        meta.k,
+        meta.stride,
+        meta.pad,
+    )
+    .unwrap();
+    let w_mat = Matrix::from_vec(meta.m, ck2, w).unwrap();
+    let y = matmul_f32(&patches, &w_mat.transpose()).unwrap(); // (P, M)
+
+    let p_total = meta.h * meta.w;
+    let mut max_err = 0f32;
+    for p in 0..p_total {
+        for m in 0..meta.m {
+            let want = y.get(p, m).max(0.0);
+            let got = out[m * p_total + p];
+            max_err = max_err.max((got - want).abs());
+        }
+    }
+    assert!(max_err < 2e-2, "max |err| {max_err}");
+}
+
+#[test]
+fn manifest_covers_all_table1_layers() {
+    let Some(rt) = runtime() else { return };
+    for name in ["L1", "L2", "L3", "L4", "L5", "L6"] {
+        let meta = rt.manifest().layer(name).unwrap();
+        assert_eq!(meta.gemm[0], meta.h * meta.w, "{name}");
+    }
+}
