@@ -16,7 +16,7 @@ use asymm_sa::config::ExperimentConfig;
 use asymm_sa::floorplan::{optimizer, svg, ArrayLayout, PeGeometry};
 use asymm_sa::power::{self, TechParams};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     std::fs::create_dir_all("out")?;
     let cfg = ExperimentConfig::paper();
     let area = cfg.pe_area_um2();

@@ -20,7 +20,7 @@ use asymm_sa::runtime::Runtime;
 use asymm_sa::sim::{fast::simulate_gemm_fast, ws::WsCycleSim};
 use asymm_sa::util::rng::Rng;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     // --- 1. the paper's array --------------------------------------------
     let sa = SaConfig::paper_32x32();
     println!(

@@ -24,7 +24,7 @@ use asymm_sa::report;
 use asymm_sa::runtime::Runtime;
 use asymm_sa::workloads::table1_layers;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let mut cfg = ExperimentConfig::paper();
     // Derive the aspect ratio from *measured* activities (the paper's
     // §III-B procedure) instead of pinning 3.8.

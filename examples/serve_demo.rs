@@ -17,13 +17,19 @@ use asymm_sa::gemm::{im2col, Matrix};
 use asymm_sa::quant::quantize_sym;
 use asymm_sa::workloads::{ActivationModel, ConvLayer, SynthGen};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let sa = SaConfig::paper_32x32();
     let coord = Coordinator::new(&sa, 0);
     println!(
         "serve_demo: 32x32 WS array, {} workers, bounded queue {}",
         coord.workers(),
         coord.workers() * 2
+    );
+    // The pool splits the machine between layer fan-out and intra-GEMM
+    // column sharding per batch; show what this host negotiates.
+    let (layer_workers, intra) = coord.negotiate(24);
+    println!(
+        "parallelism negotiation for 24 requests: {layer_workers} layer workers x {intra} intra threads"
     );
 
     // Request mix: small conv layers of three sizes (edge-inference-ish).

@@ -52,4 +52,5 @@ fn main() {
     });
     b.throughput(12.0, "floorplan-evals");
     b.finish();
+    b.write_json("BENCH_fig4.json").expect("write BENCH_fig4.json");
 }

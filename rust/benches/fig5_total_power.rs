@@ -64,4 +64,5 @@ fn main() {
             .collect::<Vec<_>>()
     });
     b.finish();
+    b.write_json("BENCH_fig5.json").expect("write BENCH_fig5.json");
 }

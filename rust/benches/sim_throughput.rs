@@ -1,15 +1,31 @@
 //! Bench: simulator throughput — the L3 perf headline (DESIGN.md §8).
 //!
-//! Times the cycle-accurate engine and the analytic oracle on the same
-//! GEMMs and reports simulated PE-cycles/s and MAC/s. Targets: the
-//! analytic engine ≥1e8 PE-cycles/s; the §Perf log in EXPERIMENTS.md
-//! tracks the optimization iterations against this bench.
+//! Times three engines on the same GEMMs:
+//!
+//! * the cycle-accurate RTL-equivalent (`ws::WsCycleSim`, small array —
+//!   it is O(R·C) per cycle),
+//! * the frozen scalar analytic baseline
+//!   (`baseline::simulate_gemm_fast_scalar`, the pre-blocking engine),
+//! * the column-blocked engine (`fast::simulate_gemm_fast_with`), single
+//!   thread and with intra-GEMM sharding.
+//!
+//! ResNet-50 Table-I shapes on the paper's 32×32 config are the
+//! acceptance workload: the blocked/scalar mean ratio per shape is
+//! printed, recorded as a `speedup_*` metric, and the whole suite is
+//! written to `BENCH_sim.json` so the perf trajectory is machine-tracked
+//! (CI runs this with `ASYMM_SA_BENCH_FAST=1` as a smoke test).
 
 use asymm_sa::arch::SaConfig;
 use asymm_sa::bench_util::Bench;
 use asymm_sa::gemm::Matrix;
-use asymm_sa::sim::{fast::simulate_gemm_fast, pass_cycles, ws::WsCycleSim};
+use asymm_sa::sim::baseline::simulate_gemm_fast_scalar;
+use asymm_sa::sim::{
+    fast::{simulate_gemm_fast, simulate_gemm_fast_with, FastSimOpts},
+    pass_cycles,
+    ws::WsCycleSim,
+};
 use asymm_sa::util::rng::Rng;
+use asymm_sa::workloads::{gemm_shape, table1_layers};
 
 fn operands(
     m: usize,
@@ -38,6 +54,10 @@ fn operands(
 
 fn main() {
     let mut b = Bench::new("sim_throughput");
+    let one_thread = FastSimOpts {
+        threads: 1,
+        ..FastSimOpts::default()
+    };
 
     // Cycle-accurate engine: small array (it is O(R*C) per cycle).
     let sa8 = SaConfig::new_ws(8, 8, 8).expect("config");
@@ -52,19 +72,66 @@ fn main() {
     b.throughput(cycles8 as f64 * sa8.num_pes() as f64, "PE-cycle");
 
     b.case("analytic_engine_8x8_256x64x64", || {
-        simulate_gemm_fast(&sa8, &a, &w).expect("sim")
+        simulate_gemm_fast_with(&sa8, &a, &w, &one_thread).expect("sim")
     });
     b.throughput(cycles8 as f64 * sa8.num_pes() as f64, "PE-cycle");
 
-    // Paper-scale array, analytic engine only.
+    // Paper-scale array: scalar baseline vs blocked, one thread vs auto.
     let sa32 = SaConfig::paper_32x32();
     let (a32, w32) = operands(512, 128, 128, 2, 2000);
     let cycles32 = simulate_gemm_fast(&sa32, &a32, &w32).expect("sim").cycles;
-    b.case("analytic_engine_32x32_512x128x128", || {
+    let pe_cycles32 = cycles32 as f64 * sa32.num_pes() as f64;
+    let scalar = b
+        .case("scalar_32x32_512x128x128", || {
+            simulate_gemm_fast_scalar(&sa32, &a32, &w32).expect("sim")
+        })
+        .mean_ns;
+    b.throughput(pe_cycles32, "PE-cycle");
+    let blocked = b
+        .case("blocked_1t_32x32_512x128x128", || {
+            simulate_gemm_fast_with(&sa32, &a32, &w32, &one_thread).expect("sim")
+        })
+        .mean_ns;
+    b.throughput(pe_cycles32, "PE-cycle");
+    b.case("blocked_auto_32x32_512x128x128", || {
         simulate_gemm_fast(&sa32, &a32, &w32).expect("sim")
     });
-    b.throughput(cycles32 as f64 * sa32.num_pes() as f64, "PE-cycle");
+    b.throughput(pe_cycles32, "PE-cycle");
+    b.note("speedup_synth_512x128x128_1t", scalar / blocked);
     println!("(PE-cycle/s = simulated silicon parallelism per wall second)");
+
+    // ResNet-50 Table-I shapes on the paper config (acceptance workload).
+    // M is capped per layer to fit the bench budget: toggle statistics
+    // and per-row cost scale linearly in M, so the engine ratio is
+    // unaffected (logged so nothing is silently truncated).
+    const M_CAP: usize = 512;
+    let mut ratios = Vec::new();
+    for layer in table1_layers() {
+        let (p, ck2, m_out) = gemm_shape(&layer);
+        let m_used = p.min(M_CAP);
+        if m_used < p {
+            println!("note: {} timed with M capped {p} -> {m_used}", layer.name);
+        }
+        let (a, w) = operands(m_used, ck2, m_out, 7, 2000);
+        let shape = format!("{}x{}x{}", m_used, ck2, m_out);
+        let scalar = b
+            .case(&format!("scalar_{}_{shape}", layer.name), || {
+                simulate_gemm_fast_scalar(&sa32, &a, &w).expect("sim")
+            })
+            .mean_ns;
+        b.throughput((m_used * ck2 * m_out) as f64, "MAC");
+        let blocked = b
+            .case(&format!("blocked_1t_{}_{shape}", layer.name), || {
+                simulate_gemm_fast_with(&sa32, &a, &w, &one_thread).expect("sim")
+            })
+            .mean_ns;
+        b.throughput((m_used * ck2 * m_out) as f64, "MAC");
+        let ratio = scalar / blocked;
+        b.note(&format!("speedup_{}_1t", layer.name), ratio);
+        ratios.push(ratio);
+    }
+    let gmean = (ratios.iter().map(|r| r.ln()).sum::<f64>() / ratios.len() as f64).exp();
+    b.note("speedup_resnet50_geomean_1t", gmean);
 
     // Sparse vs dense input cost (zero words skip no work in the oracle —
     // this quantifies the data-dependence of the hot loop).
@@ -74,10 +141,11 @@ fn main() {
             *v = 7; // densify
         }
     }
-    b.case("analytic_engine_32x32_dense_input", || {
-        simulate_gemm_fast(&sa32, &ad, &wd).expect("sim")
+    b.case("blocked_1t_32x32_dense_input", || {
+        simulate_gemm_fast_with(&sa32, &ad, &wd, &one_thread).expect("sim")
     });
 
     let _ = pass_cycles(&sa32, 512);
     b.finish();
+    b.write_json("BENCH_sim.json").expect("write BENCH_sim.json");
 }

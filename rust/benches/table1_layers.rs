@@ -13,7 +13,7 @@ use asymm_sa::bench_util::Bench;
 use asymm_sa::coordinator::{Coordinator, LayerJob};
 use asymm_sa::gemm::Matrix;
 use asymm_sa::report;
-use asymm_sa::sim::fast::simulate_gemm_fast;
+use asymm_sa::sim::fast::{simulate_gemm_fast_with, FastSimOpts};
 use asymm_sa::util::rng::Rng;
 use asymm_sa::workloads::{gemm_shape, table1_layers};
 
@@ -43,6 +43,12 @@ fn main() {
     let sa = SaConfig::paper_32x32();
     let mut b = Bench::new("table1_layers");
     const M_CAP: usize = 256;
+    // One intra thread: the coordinator batch case below is where the
+    // machine-level parallelism (layer fan-out × intra sharding) shows.
+    let one_thread = FastSimOpts {
+        threads: 1,
+        ..FastSimOpts::default()
+    };
 
     for layer in table1_layers() {
         let (p, ck2, m_out) = gemm_shape(&layer);
@@ -52,7 +58,7 @@ fn main() {
         }
         let (a, w) = quantized_operands(m_used, ck2, m_out, 7);
         b.case(&format!("{}_gemm_{}x{}x{}", layer.name, m_used, ck2, m_out), || {
-            simulate_gemm_fast(&sa, &a, &w).expect("sim")
+            simulate_gemm_fast_with(&sa, &a, &w, &one_thread).expect("sim")
         });
         b.throughput((m_used * ck2 * m_out) as f64, "MAC");
     }
@@ -71,9 +77,12 @@ fn main() {
         })
         .collect();
     let coord = Coordinator::new(&sa, 0);
+    let (layer_workers, intra) = coord.negotiate(jobs.len());
+    println!("coordinator negotiation: {layer_workers} layer workers x {intra} intra threads");
     b.case("all_layers_coordinator_batch", || {
         coord.run(jobs.clone()).expect("batch")
     });
 
     b.finish();
+    b.write_json("BENCH_table1.json").expect("write BENCH_table1.json");
 }

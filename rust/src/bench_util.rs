@@ -2,12 +2,20 @@
 //!
 //! Each `rust/benches/*.rs` target (built with `harness = false`) uses
 //! [`Bench`] to time closures with warmup, report mean/min/max and
-//! throughput, and emit one `name,mean_ns,min_ns,max_ns,iters` CSV line
-//! per case so the figure harness stays machine-readable
-//! (`cargo bench | tee bench_output.txt`).
+//! throughput, and emit machine-readable results two ways:
+//!
+//! * one `name,mean_ns,min_ns,max_ns,iters` CSV line per case on stdout
+//!   ([`Bench::finish`], `cargo bench | tee bench_output.txt`);
+//! * a JSON file ([`Bench::write_json`]) with every case's timing +
+//!   throughput plus free-form [`Bench::note`] metrics — the
+//!   `sim_throughput` bench writes `BENCH_sim.json` so CI tracks the
+//!   engine's perf trajectory per commit.
 
 use std::hint::black_box;
+use std::path::Path;
 use std::time::{Duration, Instant};
+
+use crate::util::json::{obj, Json};
 
 /// One benchmark suite (named group of timed cases).
 pub struct Bench {
@@ -17,6 +25,7 @@ pub struct Bench {
     /// Warmup time per case.
     pub warmup_time: Duration,
     results: Vec<CaseResult>,
+    notes: Vec<(String, f64)>,
 }
 
 /// Timing result of one case.
@@ -32,6 +41,10 @@ pub struct CaseResult {
     pub max_ns: f64,
     /// Iterations measured.
     pub iters: u64,
+    /// Derived throughput, if [`Bench::throughput`] was called: units/s.
+    pub throughput_per_sec: Option<f64>,
+    /// Unit name of the derived throughput.
+    pub throughput_unit: Option<String>,
 }
 
 impl Bench {
@@ -52,6 +65,7 @@ impl Bench {
                 Duration::from_millis(500)
             },
             results: Vec::new(),
+            notes: Vec::new(),
         }
     }
 
@@ -83,6 +97,8 @@ impl Bench {
             min_ns: min,
             max_ns: max,
             iters: times.len() as u64,
+            throughput_per_sec: None,
+            throughput_unit: None,
         };
         println!(
             "{}/{:<40} mean {:>12}  min {:>12}  max {:>12}  ({} iters)",
@@ -97,15 +113,25 @@ impl Bench {
         self.results.last().expect("just pushed")
     }
 
-    /// Report a derived throughput metric for the last case.
-    pub fn throughput(&self, units: f64, unit_name: &str) {
-        if let Some(last) = self.results.last() {
+    /// Report a derived throughput metric for the last case (also
+    /// recorded into the case for [`Bench::write_json`]).
+    pub fn throughput(&mut self, units: f64, unit_name: &str) {
+        if let Some(last) = self.results.last_mut() {
             let per_sec = units / (last.mean_ns * 1e-9);
+            last.throughput_per_sec = Some(per_sec);
+            last.throughput_unit = Some(unit_name.to_string());
             println!(
                 "{}/{:<40} throughput {:.3e} {unit_name}/s",
                 self.suite, last.name, per_sec
             );
         }
+    }
+
+    /// Record a named derived metric for the suite (e.g. a speedup ratio
+    /// between two cases); lands in the JSON under `"metrics"`.
+    pub fn note(&mut self, key: &str, value: f64) {
+        println!("{}/{key} = {value:.3}", self.suite);
+        self.notes.push((key.to_string(), value));
     }
 
     /// Print the machine-readable CSV trailer.
@@ -118,6 +144,49 @@ impl Bench {
                 self.suite, r.name, r.mean_ns, r.min_ns, r.max_ns, r.iters
             );
         }
+    }
+
+    /// Serialize the suite to JSON text (what [`Bench::write_json`] writes).
+    pub fn to_json(&self) -> String {
+        let cases: Vec<Json> = self
+            .results
+            .iter()
+            .map(|r| {
+                let mut pairs = vec![
+                    ("suite", Json::Str(self.suite.clone())),
+                    ("case", Json::Str(r.name.clone())),
+                    ("mean_ns", Json::Num(r.mean_ns)),
+                    ("min_ns", Json::Num(r.min_ns)),
+                    ("max_ns", Json::Num(r.max_ns)),
+                    ("iters", Json::Num(r.iters as f64)),
+                ];
+                if let (Some(t), Some(u)) = (r.throughput_per_sec, &r.throughput_unit) {
+                    pairs.push(("throughput_per_sec", Json::Num(t)));
+                    pairs.push(("throughput_unit", Json::Str(u.clone())));
+                }
+                obj(pairs)
+            })
+            .collect();
+        let metrics = obj(self
+            .notes
+            .iter()
+            .map(|(k, v)| (k.as_str(), Json::Num(*v)))
+            .collect());
+        obj(vec![
+            ("suite", Json::Str(self.suite.clone())),
+            ("cases", Json::Arr(cases)),
+            ("metrics", metrics),
+        ])
+        .to_string()
+    }
+
+    /// Write the suite results as a JSON file (`BENCH_sim.json` et al.),
+    /// so the perf trajectory is machine-tracked per commit.
+    pub fn write_json(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        let path = path.as_ref();
+        std::fs::write(path, self.to_json())?;
+        println!("{}: wrote {}", self.suite, path.display());
+        Ok(())
     }
 
     /// Accumulated results (for programmatic assertions in tests).
@@ -154,6 +223,42 @@ mod tests {
         b.throughput(1.0, "ops");
         b.finish();
         assert_eq!(b.results().len(), 1);
+        assert!(b.results()[0].throughput_per_sec.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn json_roundtrips_cases_and_notes() {
+        let mut b = Bench::new("jsontest");
+        b.measure_time = Duration::from_millis(5);
+        b.warmup_time = Duration::from_millis(1);
+        b.case("one", || 1);
+        b.throughput(10.0, "widget");
+        b.note("speedup_x", 3.5);
+        let parsed = crate::util::json::Json::parse(&b.to_json()).unwrap();
+        assert_eq!(parsed.req("suite").unwrap().as_str().unwrap(), "jsontest");
+        let cases = parsed.req("cases").unwrap().as_arr().unwrap();
+        assert_eq!(cases.len(), 1);
+        assert_eq!(cases[0].req("case").unwrap().as_str().unwrap(), "one");
+        assert!(cases[0].req("mean_ns").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(
+            cases[0].req("throughput_unit").unwrap().as_str().unwrap(),
+            "widget"
+        );
+        let metrics = parsed.req("metrics").unwrap();
+        assert!((metrics.req("speedup_x").unwrap().as_f64().unwrap() - 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn write_json_creates_file() {
+        let mut b = Bench::new("filetest");
+        b.measure_time = Duration::from_millis(5);
+        b.warmup_time = Duration::from_millis(1);
+        b.case("one", || 1);
+        let path = std::env::temp_dir().join("asymm_sa_bench_selftest.json");
+        b.write_json(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(crate::util::json::Json::parse(&text).is_ok());
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

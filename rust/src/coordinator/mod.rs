@@ -11,6 +11,14 @@
 //! runtime, so the pool is built directly on `std::thread` + bounded
 //! `sync_channel` queues — which is also the right tool: jobs are pure
 //! CPU-bound simulations with no I/O to overlap.
+//!
+//! Two parallelism levels compose here: the pool fans *layers* out to
+//! workers, and the analytic engine can shard *column blocks of one
+//! GEMM* across its own scoped threads
+//! ([`crate::sim::fast::FastSimOpts`]). [`Coordinator::negotiate`]
+//! splits the machine between the levels per batch so a handful of big
+//! layers still saturates every CPU without oversubscribing when the
+//! batch is wide.
 
 pub mod metrics;
 
@@ -24,7 +32,10 @@ use std::time::Instant;
 use crate::arch::SaConfig;
 use crate::error::{Error, Result};
 use crate::gemm::Matrix;
-use crate::sim::{fast::simulate_gemm_fast, GemmSim};
+use crate::sim::{
+    fast::{simulate_gemm_fast_with, FastSimOpts, INTRA_PAR_MIN_MACS},
+    GemmSim,
+};
 
 /// One simulation job: a quantized GEMM belonging to a named layer.
 #[derive(Debug, Clone)]
@@ -52,29 +63,69 @@ pub struct LayerResult {
 pub struct Coordinator {
     sa: SaConfig,
     workers: usize,
+    /// Whether `workers` was auto-detected (0 passed to `new`). An
+    /// explicitly pinned count stays a hard concurrency cap: intra
+    /// threads are not auto-raised behind it.
+    auto_workers: bool,
+    /// Intra-GEMM threads per worker; 0 = negotiate per batch.
+    intra: usize,
     metrics: Arc<Metrics>,
 }
 
 impl Coordinator {
-    /// New coordinator; `workers == 0` uses all available CPUs.
+    /// New coordinator; `workers == 0` uses all available CPUs (and
+    /// lets [`Coordinator::negotiate`] hand idle CPUs to intra-GEMM
+    /// sharding). A non-zero count is a hard cap on total concurrency
+    /// unless intra threads are raised explicitly via
+    /// [`Coordinator::with_intra_threads`].
     pub fn new(sa: &SaConfig, workers: usize) -> Self {
-        let workers = if workers == 0 {
-            std::thread::available_parallelism()
-                .map(|n| n.get())
-                .unwrap_or(4)
+        let auto_workers = workers == 0;
+        let workers = if auto_workers {
+            available_cpus()
         } else {
             workers
         };
         Coordinator {
             sa: sa.clone(),
             workers,
+            auto_workers,
+            intra: 0,
             metrics: Arc::new(Metrics::default()),
         }
+    }
+
+    /// Pin the intra-GEMM thread count each worker hands to the analytic
+    /// engine (0 = negotiate per batch; see [`Coordinator::negotiate`]).
+    pub fn with_intra_threads(mut self, intra: usize) -> Self {
+        self.intra = intra;
+        self
     }
 
     /// Number of worker threads.
     pub fn workers(&self) -> usize {
         self.workers
+    }
+
+    /// Split the machine between the two parallelism levels for a batch
+    /// of `n_jobs`: layer-level fan-out uses at most one worker per job,
+    /// and whatever CPUs that leaves idle are handed to each worker as
+    /// intra-GEMM threads — so a batch smaller than the machine (the
+    /// common serving case: 6 Table-I layers on a big host) still
+    /// saturates it, while a saturated pool degrades to 1 intra thread
+    /// instead of oversubscribing. A user-pinned worker count keeps
+    /// meaning a total-concurrency cap: idle CPUs are only auto-claimed
+    /// when the pool size was auto-detected too. Returns
+    /// `(layer_workers, intra)`.
+    pub fn negotiate(&self, n_jobs: usize) -> (usize, usize) {
+        let layer = self.workers.min(n_jobs.max(1)).max(1);
+        let intra = if self.intra != 0 {
+            self.intra
+        } else if self.auto_workers {
+            (available_cpus() / layer).max(1)
+        } else {
+            1
+        };
+        (layer, intra)
     }
 
     /// Shared metrics handle.
@@ -93,14 +144,15 @@ impl Coordinator {
         if n == 0 {
             return Ok(Vec::new());
         }
+        let (layer_workers, intra) = self.negotiate(n);
         let (job_tx, job_rx): (SyncSender<(usize, LayerJob)>, Receiver<(usize, LayerJob)>) =
-            sync_channel(self.workers * 2);
+            sync_channel(layer_workers * 2);
         let job_rx = Arc::new(Mutex::new(job_rx));
         let (res_tx, res_rx) = sync_channel::<(usize, Result<LayerResult>)>(n);
         let in_flight = Arc::new(AtomicUsize::new(0));
 
         std::thread::scope(|scope| -> Result<Vec<LayerResult>> {
-            for _ in 0..self.workers {
+            for _ in 0..layer_workers {
                 let job_rx = Arc::clone(&job_rx);
                 let res_tx = res_tx.clone();
                 let sa = self.sa.clone();
@@ -110,8 +162,16 @@ impl Coordinator {
                     let next = { job_rx.lock().expect("queue poisoned").recv() };
                     let Ok((idx, job)) = next else { break };
                     in_flight.fetch_add(1, Ordering::Relaxed);
+                    // Negotiated intra threads, but only where the sweep
+                    // amortizes spawning — small jobs run serial, same as
+                    // the engine's own auto mode.
+                    let macs = (job.a.rows * job.a.cols * job.w.cols) as u64;
+                    let sim_opts = FastSimOpts {
+                        threads: if macs < INTRA_PAR_MIN_MACS { 1 } else { intra },
+                        ..FastSimOpts::default()
+                    };
                     let t0 = Instant::now();
-                    let out = simulate_gemm_fast(&sa, &job.a, &job.w).map(|sim| {
+                    let out = simulate_gemm_fast_with(&sa, &job.a, &job.w, &sim_opts).map(|sim| {
                         let wall = t0.elapsed().as_secs_f64();
                         metrics.record_job(&sim, wall);
                         LayerResult {
@@ -173,6 +233,13 @@ impl Coordinator {
     }
 }
 
+/// Available CPUs (1 if the platform cannot tell).
+fn available_cpus() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -217,6 +284,7 @@ mod tests {
 
     #[test]
     fn parallel_equals_sequential_stats() {
+        use crate::sim::fast::simulate_gemm_fast;
         let sa = SaConfig::new_ws(4, 4, 8).unwrap();
         let js = jobs(5);
         let seq: Vec<_> = js
@@ -291,5 +359,47 @@ mod tests {
         let sa = SaConfig::new_ws(4, 4, 8).unwrap();
         let results = Coordinator::new(&sa, 2).run(jobs(40)).unwrap();
         assert_eq!(results.len(), 40);
+    }
+
+    #[test]
+    fn negotiation_never_oversubscribes() {
+        let sa = SaConfig::new_ws(4, 4, 8).unwrap();
+        let cpus = super::available_cpus();
+        let coord = Coordinator::new(&sa, 0);
+        for n_jobs in [0usize, 1, 2, cpus, 4 * cpus + 1] {
+            let (layer, intra) = coord.negotiate(n_jobs);
+            assert!(layer >= 1 && intra >= 1, "jobs={n_jobs}");
+            assert!(layer <= n_jobs.max(1), "jobs={n_jobs}");
+            // The two levels multiply out to at most the machine.
+            assert!(layer * intra <= cpus.max(layer), "jobs={n_jobs}: {layer}x{intra}");
+        }
+        // A single huge job gets the whole machine as intra threads.
+        assert_eq!(coord.negotiate(1), (1, cpus));
+        // Pinned intra is honored verbatim.
+        let pinned = Coordinator::new(&sa, 2).with_intra_threads(3);
+        assert_eq!(pinned.negotiate(8), (2, 3));
+        // An explicitly pinned worker count stays a hard concurrency
+        // cap: no auto intra threads behind the user's back.
+        assert_eq!(Coordinator::new(&sa, 1).negotiate(1), (1, 1));
+        assert_eq!(Coordinator::new(&sa, 2).negotiate(8), (2, 1));
+    }
+
+    #[test]
+    fn intra_threads_do_not_change_results() {
+        let sa = SaConfig::new_ws(4, 4, 8).unwrap();
+        let js = jobs(5);
+        let serial = Coordinator::new(&sa, 1)
+            .with_intra_threads(1)
+            .run(js.clone())
+            .unwrap();
+        let sharded = Coordinator::new(&sa, 2)
+            .with_intra_threads(2)
+            .run(js)
+            .unwrap();
+        for (a, b) in serial.iter().zip(sharded.iter()) {
+            assert_eq!(a.sim.y, b.sim.y);
+            assert_eq!(a.sim.stats, b.sim.stats);
+            assert_eq!(a.sim.cycles, b.sim.cycles);
+        }
     }
 }

@@ -1,33 +1,70 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls: the offline vendored dependency
+//! set has no `thiserror`. The XLA variant only exists when the `xla`
+//! feature (and with it the PJRT bindings) is compiled in.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors produced by the asymm-sa library.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Shape/tiling mismatch in a GEMM or simulator call.
-    #[error("shape error: {0}")]
     Shape(String),
 
     /// Invalid configuration value or malformed JSON document.
-    #[error("config error: {0}")]
     Config(String),
 
     /// Artifact loading / PJRT execution failure.
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Underlying XLA/PJRT error.
-    #[error("xla error: {0}")]
-    Xla(#[from] xla::Error),
+    #[cfg(feature = "xla")]
+    Xla(xla::Error),
 
     /// I/O failure (artifact files, reports).
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
     /// Coordinator channel/task failure.
-    #[error("coordinator error: {0}")]
     Coordinator(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Shape(m) => write!(f, "shape error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            #[cfg(feature = "xla")]
+            Error::Xla(e) => write!(f, "xla error: {e}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            #[cfg(feature = "xla")]
+            Error::Xla(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "xla")]
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e)
+    }
 }
 
 /// Crate-wide result alias.
@@ -47,5 +84,27 @@ impl Error {
     /// Convenience constructor for runtime errors.
     pub fn runtime(msg: impl Into<String>) -> Self {
         Error::Runtime(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes() {
+        assert_eq!(Error::shape("x").to_string(), "shape error: x");
+        assert_eq!(Error::config("y").to_string(), "config error: y");
+        assert_eq!(Error::runtime("z").to_string(), "runtime error: z");
+        let io: Error = std::io::Error::new(std::io::ErrorKind::Other, "nope").into();
+        assert!(io.to_string().starts_with("io error:"));
+    }
+
+    #[test]
+    fn io_source_is_preserved() {
+        use std::error::Error as _;
+        let e: Error = std::io::Error::new(std::io::ErrorKind::Other, "nope").into();
+        assert!(e.source().is_some());
+        assert!(Error::shape("x").source().is_none());
     }
 }

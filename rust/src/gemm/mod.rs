@@ -80,12 +80,27 @@ impl<T: Copy + Default> Matrix<T> {
     /// matrix edge (how the SA tiler pads ragged tiles).
     pub fn block_padded(&self, r0: usize, c0: usize, bm: usize, bn: usize) -> Matrix<T> {
         let mut out = Matrix::zeros(bm, bn);
-        for r in 0..bm.min(self.rows.saturating_sub(r0)) {
-            for c in 0..bn.min(self.cols.saturating_sub(c0)) {
-                out.set(r, c, self.get(r0 + r, c0 + c));
-            }
-        }
+        self.block_padded_into(r0, c0, &mut out);
         out
+    }
+
+    /// [`Matrix::block_padded`] into a caller-owned buffer whose shape
+    /// picks the block size — lets tile loops double-buffer two tiles
+    /// instead of allocating a fresh matrix per pass (the analytic
+    /// engine's weight chain swaps a prev/cur pair every step).
+    pub fn block_padded_into(&self, r0: usize, c0: usize, out: &mut Matrix<T>) {
+        let (bm, bn) = (out.rows, out.cols);
+        for v in out.data.iter_mut() {
+            *v = T::default();
+        }
+        let copy_w = bn.min(self.cols.saturating_sub(c0));
+        if copy_w == 0 {
+            return; // block origin past the right edge: all padding
+        }
+        for r in 0..bm.min(self.rows.saturating_sub(r0)) {
+            let src = (r0 + r) * self.cols + c0;
+            out.data[r * bn..r * bn + copy_w].copy_from_slice(&self.data[src..src + copy_w]);
+        }
     }
 }
 
@@ -205,6 +220,22 @@ mod tests {
         assert_eq!(b.data, vec![4, 0, 0, 0]);
         let b2 = m.block_padded(0, 0, 2, 2);
         assert_eq!(b2.data, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn block_padded_into_clears_stale_contents() {
+        // Reusing a dirty buffer must behave exactly like a fresh copy.
+        let m = Matrix::from_vec(3, 3, (1..=9).collect()).unwrap();
+        let mut buf = Matrix::from_vec(2, 2, vec![-7; 4]).unwrap();
+        m.block_padded_into(2, 2, &mut buf);
+        assert_eq!(buf, m.block_padded(2, 2, 2, 2));
+        assert_eq!(buf.data, vec![9, 0, 0, 0]);
+        m.block_padded_into(0, 1, &mut buf);
+        assert_eq!(buf.data, vec![2, 3, 5, 6]);
+        // Origin fully past the right edge: all padding, no panic.
+        m.block_padded_into(0, 10, &mut buf);
+        assert_eq!(buf.data, vec![0; 4]);
+        assert_eq!(m.block_padded(0, 10, 2, 2).data, vec![0; 4]);
     }
 
     #[test]

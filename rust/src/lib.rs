@@ -26,6 +26,28 @@
 //!   ([`report`]) and self-contained substrates ([`util`],
 //!   [`bench_util`]) for the fully-offline build.
 //!
+//! ## Features
+//!
+//! * `xla` (off by default) — compiles the real PJRT client behind
+//!   [`runtime::Runtime`]; requires the vendored `xla` bindings as a
+//!   dependency. Without it the runtime is an uninhabited stub whose
+//!   `load` fails, and every pipeline falls back to the native
+//!   im2col + quantize path, keeping the offline
+//!   `cargo build --release && cargo test` green with zero external
+//!   crates.
+//!
+//! ## Performance
+//!
+//! The hot path is the analytic engine
+//! [`sim::fast::simulate_gemm_fast`]: a column-blocked, register-tiled
+//! toggle-counting kernel with memoized per-k-block horizontal
+//! statistics, closed-form weight-chain accounting and optional
+//! intra-GEMM thread sharding (negotiated against the
+//! [`coordinator`]'s layer-level fan-out). See the repository README's
+//! "Performance" section and `benches/sim_throughput.rs` →
+//! `BENCH_sim.json` for the measurement protocol against the frozen
+//! [`sim::baseline`] engine.
+//!
 //! ## Quickstart
 //!
 //! ```

@@ -6,175 +6,24 @@
 //! ([`Runtime::load`]) and then executes from the request path with no
 //! Python anywhere (see /opt/xla-example/README.md for the interchange
 //! rationale — HLO *text*, tuple returns).
+//!
+//! The XLA dependency is optional. With the `xla` feature the real PJRT
+//! client is compiled in ([`pjrt`]); without it (the default offline
+//! build) [`Runtime`] is an uninhabited stub whose `load` always fails,
+//! so every caller's `Runtime::load(..).ok()` fallback path — the native
+//! im2col + quantize pipeline — kicks in with no `cfg` at the call sites.
+//! [`Manifest`] parsing is pure Rust and available either way.
 
 pub mod manifest;
 
 pub use manifest::{LayerMeta, Manifest};
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+#[cfg(feature = "xla")]
+mod pjrt;
+#[cfg(feature = "xla")]
+pub use pjrt::Runtime;
 
-use crate::error::{Error, Result};
-use crate::gemm::Matrix;
-
-/// A compiled artifact bundle bound to a PJRT CPU client.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    manifest: Manifest,
-    dir: PathBuf,
-    layers: HashMap<String, xla::PjRtLoadedExecutable>,
-    activity: xla::PjRtLoadedExecutable,
-    tile_matmul: xla::PjRtLoadedExecutable,
-}
-
-impl Runtime {
-    /// Create a PJRT CPU client, load `manifest.json` and compile every
-    /// artifact in `dir`.
-    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
-        let dir = dir.as_ref().to_path_buf();
-        let manifest = Manifest::load(&dir)?;
-        let client = xla::PjRtClient::cpu()?;
-
-        let compile = |file: &str| -> Result<xla::PjRtLoadedExecutable> {
-            let path = dir.join(file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str()
-                    .ok_or_else(|| Error::runtime("non-utf8 artifact path"))?,
-            )?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            Ok(client.compile(&comp)?)
-        };
-
-        let mut layers = HashMap::new();
-        for l in &manifest.layers {
-            layers.insert(l.name.clone(), compile(&l.file)?);
-        }
-        let activity = compile(&manifest.activity.file)?;
-        let tile_matmul = compile(&manifest.tile_matmul.file)?;
-
-        Ok(Runtime {
-            client,
-            manifest,
-            dir,
-            layers,
-            activity,
-            tile_matmul,
-        })
-    }
-
-    /// The loaded manifest.
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    /// Artifact directory this runtime was loaded from.
-    pub fn dir(&self) -> &Path {
-        &self.dir
-    }
-
-    /// PJRT platform name (diagnostics).
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Execute the AOT conv forward of layer `name`.
-    ///
-    /// `x`: `(1,C,H_in,W_in)` f32 flattened; `w`: `(M, C·K²)` f32
-    /// flattened. Returns the post-ReLU output `(1,M,H,W)` flattened and
-    /// the int16-quantized im2col patches `(P, C·K²)` — exactly the words
-    /// the WS array streams on its horizontal buses.
-    pub fn layer_forward(
-        &self,
-        name: &str,
-        x: &[f32],
-        w: &[f32],
-    ) -> Result<(Vec<f32>, Matrix<i32>)> {
-        let meta = self.manifest.layer(name)?;
-        let exe = self
-            .layers
-            .get(name)
-            .ok_or_else(|| Error::runtime(format!("layer {name} not compiled")))?;
-
-        let in_elems: usize = meta.input_shape.iter().product();
-        if x.len() != in_elems {
-            return Err(Error::shape(format!(
-                "layer {name}: input len {} != {:?}",
-                x.len(),
-                meta.input_shape
-            )));
-        }
-        let w_elems: usize = meta.weight_shape.iter().product();
-        if w.len() != w_elems {
-            return Err(Error::shape(format!(
-                "layer {name}: weight len {} != {:?}",
-                w.len(),
-                meta.weight_shape
-            )));
-        }
-
-        let dims_i64 = |v: &[usize]| v.iter().map(|&d| d as i64).collect::<Vec<_>>();
-        let xl = xla::Literal::vec1(x).reshape(&dims_i64(&meta.input_shape))?;
-        let wl = xla::Literal::vec1(w).reshape(&dims_i64(&meta.weight_shape))?;
-
-        let result = exe.execute::<xla::Literal>(&[xl, wl])?[0][0].to_literal_sync()?;
-        let (out_l, q_l) = result.to_tuple2()?;
-        let out = out_l.to_vec::<f32>()?;
-        let q = q_l.to_vec::<i32>()?;
-        let (p, ck2) = (meta.gemm[0], meta.gemm[1]);
-        Ok((out, Matrix::from_vec(p, ck2, q)?))
-    }
-
-    /// Execute one chunk of the activity oracle artifact.
-    ///
-    /// Shapes are fixed by the manifest (`cycles × lanes`); returns
-    /// per-lane `(toggles, zeros)`.
-    pub fn activity_block(
-        &self,
-        stream: &[i32],
-        prev: &[i32],
-        mask: &[i32],
-    ) -> Result<(Vec<i32>, Vec<i32>)> {
-        let (t, l) = (self.manifest.activity.cycles, self.manifest.activity.lanes);
-        if stream.len() != t * l || prev.len() != l || mask.len() != l {
-            return Err(Error::shape(format!(
-                "activity chunk wants ({t}x{l}) + 2x(1x{l}); got {}, {}, {}",
-                stream.len(),
-                prev.len(),
-                mask.len()
-            )));
-        }
-        let sl = xla::Literal::vec1(stream).reshape(&[t as i64, l as i64])?;
-        let pl = xla::Literal::vec1(prev).reshape(&[1, l as i64])?;
-        let ml = xla::Literal::vec1(mask).reshape(&[1, l as i64])?;
-        let result = self.activity.execute::<xla::Literal>(&[sl, pl, ml])?[0][0]
-            .to_literal_sync()?;
-        let (tog, zer) = result.to_tuple2()?;
-        Ok((tog.to_vec::<i32>()?, zer.to_vec::<i32>()?))
-    }
-
-    /// Execute the quickstart tile-matmul artifact: one `tile×tile` f32
-    /// product through the Pallas WS kernel.
-    pub fn tile_matmul(&self, a: &[f32], w: &[f32]) -> Result<Vec<f32>> {
-        let t = self.manifest.tile_matmul.tile;
-        if a.len() != t * t || w.len() != t * t {
-            return Err(Error::shape(format!(
-                "tile matmul wants {t}x{t} operands; got {} and {}",
-                a.len(),
-                w.len()
-            )));
-        }
-        let al = xla::Literal::vec1(a).reshape(&[t as i64, t as i64])?;
-        let wl = xla::Literal::vec1(w).reshape(&[t as i64, t as i64])?;
-        let result = self.tile_matmul.execute::<xla::Literal>(&[al, wl])?[0][0]
-            .to_literal_sync()?;
-        let out = result.to_tuple1()?;
-        Ok(out.to_vec::<f32>()?)
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    //! Runtime tests require built artifacts; they live in
-    //! `rust/tests/runtime_integration.rs` (skipped gracefully when
-    //! `artifacts/` is absent) to keep unit tests hermetic.
-}
+#[cfg(not(feature = "xla"))]
+mod stub;
+#[cfg(not(feature = "xla"))]
+pub use stub::Runtime;

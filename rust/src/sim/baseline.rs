@@ -1,0 +1,270 @@
+//! Pre-blocking analytic engine, kept as the perf/correctness reference.
+//!
+//! This is the scalar engine the column-blocked kernel in [`super::fast`]
+//! replaced: per-register O(R²·C) weight-chain sweeps, horizontal stats
+//! re-derived for every tile pass, and a hand-unrolled two-column
+//! vertical loop. It stays in the tree for two reasons:
+//!
+//! * **differential testing** — three independent implementations
+//!   (cycle-accurate, scalar analytic, blocked analytic) must agree
+//!   bit-exactly (see `tests/fast_engine_property.rs`);
+//! * **speedup accounting** — the `sim_throughput` bench times this
+//!   engine against the blocked one and records the ratio in
+//!   `BENCH_sim.json`, so the perf trajectory is measured against a
+//!   fixed baseline rather than a moving one.
+//!
+//! Do not optimize this module; that is the point of it.
+
+use crate::arch::SaConfig;
+use crate::error::{Error, Result};
+use crate::gemm::{Matrix, TilePlan};
+use crate::quant::bus_word;
+
+use super::{pass_cycles, GemmSim, SaStats};
+
+/// Scalar analytic simulation of GEMM `a @ w`: same contract and
+/// bit-identical results as [`super::ws::WsCycleSim::simulate_gemm`] and
+/// [`super::fast::simulate_gemm_fast`].
+pub fn simulate_gemm_fast_scalar(
+    sa: &SaConfig,
+    a: &Matrix<i32>,
+    w: &Matrix<i32>,
+) -> Result<GemmSim> {
+    if a.cols != w.rows {
+        return Err(Error::shape(format!(
+            "inner dims mismatch: {}x{} @ {}x{}",
+            a.rows, a.cols, w.rows, w.cols
+        )));
+    }
+    let bh_bits = sa.input_bits;
+    let lo = -(1i64 << (bh_bits - 1));
+    let hi = (1i64 << (bh_bits - 1)) - 1;
+    let fits = |v: i32| (v as i64) >= lo && (v as i64) <= hi;
+    if !a.data.iter().copied().all(fits) || !w.data.iter().copied().all(fits) {
+        return Err(Error::shape(format!(
+            "operand exceeds the {bh_bits}-bit horizontal bus range [{lo}, {hi}]"
+        )));
+    }
+
+    let plan = TilePlan::new(a.rows, a.cols, w.cols, sa)?;
+    let (r_dim, c_dim) = (sa.rows, sa.cols);
+    let bh = sa.bus_bits_horizontal();
+    let bv = sa.bus_bits_vertical();
+    let mask_h: u64 = if bh == 64 { u64::MAX } else { (1u64 << bh) - 1 };
+    let mask_v: u64 = if bv == 64 { u64::MAX } else { (1u64 << bv) - 1 };
+    let m_rows = a.rows;
+    let pc = pass_cycles(sa, m_rows) as u64;
+
+    let mut y = Matrix::<i64>::zeros(a.rows, w.cols);
+    let mut stats = SaStats::new(sa);
+    let mut cycles = 0u64;
+    // Weight shift chain persists across passes (matches the silicon and
+    // the cycle engine).
+    let mut chain_prev = Matrix::<i32>::zeros(r_dim, c_dim);
+
+    let a_t = a.transpose();
+
+    // Scratch reused across passes/columns.
+    let mut prefix = vec![0i64; m_rows];
+    let mut prefix2 = vec![0i64; m_rows];
+    let mut wcol = vec![0i64; r_dim];
+    let mut wcol2 = vec![0i64; r_dim];
+
+    for step in &plan.steps {
+        let w_tile = w.block_padded(step.k0, step.n0, r_dim, c_dim);
+        let (k0, k_len, n0, n_len) = (step.k0, step.k_len, step.n0, step.n_len);
+
+        // ---- Weight chain: flush of previous weights + new feed --------
+        // Register (r,c) over the R preload cycles sees
+        //   prev[r-1], prev[r-2], …, prev[0], w[R-1], w[R-2], …, w[r]
+        // starting from state prev[r].
+        for r in 0..r_dim {
+            for c in 0..c_dim {
+                let mut p = bus_word(chain_prev.get(r, c) as i64, bh);
+                let mut tog = 0u64;
+                let mut zer = 0u64;
+                for t in 0..r_dim {
+                    let v = if t < r {
+                        chain_prev.get(r - 1 - t, c)
+                    } else {
+                        w_tile.get(r_dim - 1 - (t - r), c)
+                    };
+                    let word = bus_word(v as i64, bh);
+                    tog += (p ^ word).count_ones() as u64;
+                    zer += (word == 0) as u64;
+                    p = word;
+                }
+                stats.weight_load.toggles += tog;
+                stats.weight_load.zero_words += zer;
+                stats.weight_load.observations += r_dim as u64;
+            }
+        }
+        chain_prev = w_tile.clone();
+
+        // ---- Horizontal: row r's segment sequence = A[·][k0+r] ---------
+        for r in 0..r_dim {
+            let (mut tog, mut nz) = (0u64, 0u64);
+            if r < k_len {
+                let mut p = 0u64;
+                for &v in a_t.row(k0 + r) {
+                    let word = v as i64 as u64 & mask_h;
+                    tog += (p ^ word).count_ones() as u64;
+                    nz += (word != 0) as u64;
+                    p = word;
+                }
+                tog += p.count_ones() as u64; // drain back to zero
+            }
+            stats.horizontal.toggles += tog * c_dim as u64;
+            stats.horizontal.zero_words += (pc - nz) * c_dim as u64;
+            stats.horizontal.observations += pc * c_dim as u64;
+        }
+
+        // ---- Vertical: prefix sums per column, two-way unrolled ---------
+        let mut c = 0;
+        while c < n_len {
+            if c + 1 < n_len {
+                for r in 0..k_len {
+                    wcol[r] = w_tile.get(r, c) as i64;
+                    wcol2[r] = w_tile.get(r, c + 1) as i64;
+                }
+                prefix.iter_mut().for_each(|v| *v = 0);
+                prefix2.iter_mut().for_each(|v| *v = 0);
+                let (mut last_tog, mut last_nz) = (0u64, 0u64);
+                let (mut last_tog2, mut last_nz2) = (0u64, 0u64);
+                for r in 0..k_len {
+                    let w_rc = wcol[r];
+                    let w_rc2 = wcol2[r];
+                    let arow = a_t.row(k0 + r);
+                    let (mut tog, mut nz) = (0u64, 0u64);
+                    let (mut tog2, mut nz2) = (0u64, 0u64);
+                    let mut prev = 0u64;
+                    let mut prev2 = 0u64;
+                    for ((pm, pm2), &av) in
+                        prefix.iter_mut().zip(prefix2.iter_mut()).zip(arow)
+                    {
+                        let avl = av as i64;
+                        *pm += avl * w_rc;
+                        *pm2 += avl * w_rc2;
+                        let word = *pm as u64 & mask_v;
+                        let word2 = *pm2 as u64 & mask_v;
+                        tog += (prev ^ word).count_ones() as u64;
+                        tog2 += (prev2 ^ word2).count_ones() as u64;
+                        nz += (word != 0) as u64;
+                        nz2 += (word2 != 0) as u64;
+                        prev = word;
+                        prev2 = word2;
+                    }
+                    tog += prev.count_ones() as u64;
+                    tog2 += prev2.count_ones() as u64;
+                    stats.vertical.toggles += tog + tog2;
+                    stats.vertical.zero_words += 2 * pc - nz - nz2;
+                    (last_tog, last_nz) = (tog, nz);
+                    (last_tog2, last_nz2) = (tog2, nz2);
+                }
+                let tail = (r_dim - k_len) as u64;
+                stats.vertical.toggles += tail * (last_tog + last_tog2);
+                stats.vertical.zero_words += tail * (2 * pc - last_nz - last_nz2);
+                stats.vertical.observations += 2 * pc * r_dim as u64;
+                for (m, (&pm, &pm2)) in prefix.iter().zip(prefix2.iter()).enumerate() {
+                    y.set(m, n0 + c, y.get(m, n0 + c) + pm);
+                    y.set(m, n0 + c + 1, y.get(m, n0 + c + 1) + pm2);
+                }
+                c += 2;
+            } else {
+                for r in 0..k_len {
+                    wcol[r] = w_tile.get(r, c) as i64;
+                }
+                prefix.iter_mut().for_each(|v| *v = 0);
+                let mut last_tog = 0u64;
+                let mut last_nz = 0u64;
+                for r in 0..k_len {
+                    let w_rc = wcol[r];
+                    let arow = a_t.row(k0 + r);
+                    let (mut tog, mut nz) = (0u64, 0u64);
+                    let mut prev = 0u64;
+                    for (pm, &av) in prefix.iter_mut().zip(arow) {
+                        *pm += av as i64 * w_rc;
+                        let word = *pm as u64 & mask_v;
+                        tog += (prev ^ word).count_ones() as u64;
+                        nz += (word != 0) as u64;
+                        prev = word;
+                    }
+                    tog += prev.count_ones() as u64; // drain back to zero
+                    stats.vertical.toggles += tog;
+                    stats.vertical.zero_words += pc - nz;
+                    last_tog = tog;
+                    last_nz = nz;
+                }
+                let tail = (r_dim - k_len) as u64;
+                stats.vertical.toggles += tail * last_tog;
+                stats.vertical.zero_words += tail * (pc - last_nz);
+                stats.vertical.observations += pc * r_dim as u64;
+                for (m, &pm) in prefix.iter().enumerate() {
+                    y.set(m, n0 + c, y.get(m, n0 + c) + pm);
+                }
+                c += 1;
+            }
+        }
+        // Unused columns: idle zero wires.
+        if n_len < c_dim {
+            let idle = (c_dim - n_len) as u64;
+            stats.vertical.zero_words += idle * pc * r_dim as u64;
+            stats.vertical.observations += idle * pc * r_dim as u64;
+        }
+
+        cycles += pc;
+    }
+
+    Ok(GemmSim {
+        y,
+        stats,
+        cycles,
+        macs: plan.total_macs(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::matmul_i64;
+    use crate::sim::ws::WsCycleSim;
+
+    fn rand_mat(rows: usize, cols: usize, seed: u64, lo: i32, hi: i32) -> Matrix<i32> {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let data = (0..rows * cols)
+            .map(|_| rng.int_range(lo as i64, hi as i64) as i32)
+            .collect();
+        Matrix::from_vec(rows, cols, data).unwrap()
+    }
+
+    /// The baseline must stay bit-identical to the cycle engine — it is
+    /// only useful as a reference if it remains one.
+    #[test]
+    fn matches_cycle_sim_exactly() {
+        let cases = [
+            (4usize, 4usize, 8u32, 6usize, 4usize, 4usize),
+            (4, 4, 8, 7, 10, 9), // ragged multi-pass
+            (8, 4, 8, 5, 8, 4),  // non-square array
+        ];
+        for (i, &(r, c, bits, m, k, n)) in cases.iter().enumerate() {
+            let sa = SaConfig::new_ws(r, c, bits).unwrap();
+            let a = rand_mat(m, k, 100 + i as u64, -100, 100);
+            let w = rand_mat(k, n, 200 + i as u64, -100, 100);
+            let slow = WsCycleSim::new(&sa).simulate_gemm(&a, &w).unwrap();
+            let fast = simulate_gemm_fast_scalar(&sa, &a, &w).unwrap();
+            assert_eq!(fast.y, slow.y, "case {i}: outputs differ");
+            assert_eq!(fast.stats, slow.stats, "case {i}: stats differ");
+            assert_eq!(fast.cycles, slow.cycles, "case {i}: cycles differ");
+            assert_eq!(fast.macs, slow.macs, "case {i}: macs differ");
+        }
+    }
+
+    #[test]
+    fn matches_reference_gemm() {
+        let sa = SaConfig::new_ws(8, 8, 8).unwrap();
+        let a = rand_mat(20, 19, 1, -128, 127);
+        let w = rand_mat(19, 23, 2, -128, 127);
+        let sim = simulate_gemm_fast_scalar(&sa, &a, &w).unwrap();
+        assert_eq!(sim.y, matmul_i64(&a, &w).unwrap());
+    }
+}

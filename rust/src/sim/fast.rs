@@ -12,11 +12,40 @@
 //! * weight chain `(r,c)`: the tail of the previous pass's weights being
 //!   flushed, then the new column feed.
 //!
-//! so toggles/zeros can be counted directly on those sequences. The
-//! result is defined to be — and tested to be — **bit-identical** to
-//! [`super::ws::WsCycleSim`], at roughly an order of magnitude less work
-//! (no per-cycle register shuffling; horizontal rows deduplicated ×C).
+//! The result is defined to be — and tested to be — **bit-identical** to
+//! [`super::ws::WsCycleSim`]. This module is the column-blocked engine;
+//! the scalar predecessor survives as [`super::baseline`] and the blocked
+//! engine is benchmarked against it (`benches/sim_throughput.rs` →
+//! `BENCH_sim.json`).
+//!
+//! ### How the work is organized
+//!
+//! 1. **Vertical (the hot loop)** — a register-tiled kernel, const-generic
+//!    over the column-block width `B ∈ 1..=8` ([`FastSimOpts::col_block`]):
+//!    one linear scan of `a_t.row(k0+r)` feeds `B` independent prefix
+//!    accumulators, and two consecutive `k` rows are fused per scan, so
+//!    each activation load drives up to `2·B` xor/popcount chains and each
+//!    prefix element is loaded/stored once per row *pair* instead of once
+//!    per row.
+//! 2. **Horizontal** — memoized per `k`-block: the per-row toggle/zero
+//!    counts depend only on `A[·][k0+r]`, so tile passes that share the
+//!    same `k0/k_len` (every `n`-block column re-walks the same K slices)
+//!    reuse one scan instead of re-deriving it per pass.
+//! 3. **Weight chain** — closed form: the per-register flush sequence is
+//!    a prefix of previous-tile transitions plus a suffix of new-tile
+//!    transitions, so each pass costs O(R·C) popcounts instead of the
+//!    per-register O(R²·C) sweep. Tiles are double-buffered (no per-pass
+//!    allocation).
+//! 4. **Intra-GEMM parallelism** — independent column blocks are sharded
+//!    across scoped threads ([`FastSimOpts::threads`]); every shard owns a
+//!    disjoint slice of `y` and a private stats accumulator, and u64
+//!    merges are exact, so the result is bit-identical at any thread
+//!    count. The [`crate::coordinator`] negotiates this against its
+//!    layer-level fan-out so the two never oversubscribe.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::activity::DirectionStats;
 use crate::arch::SaConfig;
 use crate::error::{Error, Result};
 use crate::gemm::{Matrix, TilePlan};
@@ -24,13 +53,74 @@ use crate::quant::bus_word;
 
 use super::{pass_cycles, GemmSim, SaStats};
 
-/// Analytic simulation of GEMM `a @ w` on the array: same contract and
-/// bit-identical results as [`super::ws::WsCycleSim::simulate_gemm`].
+/// Widest supported column block (lanes per sweep of `A`).
+pub const MAX_COL_BLOCK: usize = 8;
+
+/// Below this many useful MACs, auto mode (`threads == 0`) stays
+/// single-threaded: thread setup would cost more than the sweep.
+/// Public so dispatchers that pin an explicit thread count (the
+/// coordinator's negotiated intra value) can apply the same guard to
+/// small jobs instead of paying spawn/join overhead per GEMM.
+pub const INTRA_PAR_MIN_MACS: u64 = 4 << 20;
+
+/// Tuning knobs of the blocked engine. The defaults are the fast path;
+/// every setting produces bit-identical results (enforced by the
+/// property suite), only the wall clock changes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FastSimOpts {
+    /// Columns per sweep of `A`, `1..=MAX_COL_BLOCK`. With the two-row
+    /// fusion the kernel keeps `2·col_block` toggle chains in flight; 4
+    /// is the register-pressure sweet spot on common 16-GPR targets.
+    pub col_block: usize,
+    /// Scoped worker threads for the vertical sweeps. `0` = auto: use
+    /// every available CPU when the GEMM is large enough to amortize
+    /// spawning, else stay serial. The coordinator passes an explicit
+    /// count negotiated against its own worker pool.
+    pub threads: usize,
+}
+
+impl Default for FastSimOpts {
+    fn default() -> Self {
+        FastSimOpts {
+            col_block: 4,
+            threads: 0,
+        }
+    }
+}
+
+/// Analytic simulation of GEMM `a @ w` with default [`FastSimOpts`]:
+/// same contract and bit-identical results as
+/// [`super::ws::WsCycleSim::simulate_gemm`].
 pub fn simulate_gemm_fast(
     sa: &SaConfig,
     a: &Matrix<i32>,
     w: &Matrix<i32>,
 ) -> Result<GemmSim> {
+    simulate_gemm_fast_with(sa, a, w, &FastSimOpts::default())
+}
+
+/// One unit of vertical work: a chunk of ≤ `col_block` output columns
+/// inside a single `n`-block, processed through all `k`-blocks.
+struct ColChunk {
+    /// Absolute first output column.
+    col0: usize,
+    /// Columns in the chunk.
+    width: usize,
+}
+
+/// Analytic simulation with explicit tuning. See [`simulate_gemm_fast`].
+pub fn simulate_gemm_fast_with(
+    sa: &SaConfig,
+    a: &Matrix<i32>,
+    w: &Matrix<i32>,
+    opts: &FastSimOpts,
+) -> Result<GemmSim> {
+    if !(1..=MAX_COL_BLOCK).contains(&opts.col_block) {
+        return Err(Error::config(format!(
+            "col_block must be in [1, {MAX_COL_BLOCK}]: {}",
+            opts.col_block
+        )));
+    }
     if a.cols != w.rows {
         return Err(Error::shape(format!(
             "inner dims mismatch: {}x{} @ {}x{}",
@@ -58,177 +148,166 @@ pub fn simulate_gemm_fast(
     let m_rows = a.rows;
     let pc = pass_cycles(sa, m_rows) as u64;
 
-    let mut y = Matrix::<i64>::zeros(a.rows, w.cols);
     let mut stats = SaStats::new(sa);
-    let mut cycles = 0u64;
-    // Weight shift chain persists across passes (matches the silicon and
-    // the cycle engine).
-    let mut chain_prev = Matrix::<i32>::zeros(r_dim, c_dim);
 
     // A transposed once: column k of `a` becomes the contiguous row k of
-    // `a_t`, which is the exact word sequence of horizontal row-segment k
-    // and the operand stream of the vertical prefix loop (perf: turns the
-    // strided accesses of the hot loops into linear scans).
+    // `a_t`, the exact word sequence of horizontal row-segment k and the
+    // operand stream of the vertical prefix loop (linear scans).
     let a_t = a.transpose();
 
-    // Scratch reused across passes/columns (hot path).
-    let mut prefix = vec![0i64; m_rows];
-    let mut prefix2 = vec![0i64; m_rows];
-    let mut wcol = vec![0i64; r_dim];
-    let mut wcol2 = vec![0i64; r_dim];
-
+    // ---- Weight chain + per-pass idle columns (sequential) -------------
+    // The chain threads pass-to-pass state (prev tile → cur tile), so it
+    // runs in plan order; the closed form makes it O(R·C) per pass. The
+    // tiles are double-buffered *as bus-word images* and swapped — each
+    // weight is masked once per pass (the previous tile's words are
+    // reused verbatim), with no per-pass allocation.
+    let mut prev_words = vec![0u64; r_dim * c_dim];
+    let mut cur_words = vec![0u64; r_dim * c_dim];
     for step in &plan.steps {
-        let w_tile = w.block_padded(step.k0, step.n0, r_dim, c_dim);
-        let (k0, k_len, n0, n_len) = (step.k0, step.k_len, step.n0, step.n_len);
-
-        // ---- Weight chain: flush of previous weights + new feed --------
-        // Register (r,c) over the R preload cycles sees
-        //   prev[r-1], prev[r-2], …, prev[0], w[R-1], w[R-2], …, w[r]
-        // starting from state prev[r].
         for r in 0..r_dim {
             for c in 0..c_dim {
-                let mut p = bus_word(chain_prev.get(r, c) as i64, bh);
-                let mut tog = 0u64;
-                let mut zer = 0u64;
-                for t in 0..r_dim {
-                    let v = if t < r {
-                        chain_prev.get(r - 1 - t, c)
-                    } else {
-                        w_tile.get(r_dim - 1 - (t - r), c)
-                    };
-                    let word = bus_word(v as i64, bh);
-                    tog += (p ^ word).count_ones() as u64;
-                    zer += (word == 0) as u64;
-                    p = word;
-                }
-                stats.weight_load.toggles += tog;
-                stats.weight_load.zero_words += zer;
-                stats.weight_load.observations += r_dim as u64;
+                let v = if step.k0 + r < w.rows && step.n0 + c < w.cols {
+                    w.get(step.k0 + r, step.n0 + c)
+                } else {
+                    0 // zero-padded ragged tile, as the silicon preloads
+                };
+                cur_words[r * c_dim + c] = bus_word(v as i64, bh);
             }
         }
-        chain_prev = w_tile.clone();
+        weight_chain_pass(&prev_words, &cur_words, r_dim, c_dim, &mut stats.weight_load);
+        std::mem::swap(&mut prev_words, &mut cur_words);
 
-        // ---- Horizontal: row r's segment sequence = A[·][k0+r] ---------
-        // All C segments of a row see the same (delayed) sequence.
-        for r in 0..r_dim {
-            let (mut tog, mut nz) = (0u64, 0u64);
-            if r < k_len {
-                let mut p = 0u64;
-                for &v in a_t.row(k0 + r) {
-                    let word = v as i64 as u64 & mask_h;
-                    tog += (p ^ word).count_ones() as u64;
-                    nz += (word != 0) as u64;
-                    p = word;
-                }
-                tog += p.count_ones() as u64; // drain back to zero
-            }
-            stats.horizontal.toggles += tog * c_dim as u64;
-            stats.horizontal.zero_words += (pc - nz) * c_dim as u64;
-            stats.horizontal.observations += pc * c_dim as u64;
-        }
-
-        // ---- Vertical: prefix sums per column ---------------------------
-        // Loop order is r-outer / m-inner: `prefix[m]` carries the
-        // running sum so each inner iteration is an independent
-        // mul-add (no loop-carried MAC latency chain), the operand rows
-        // `a_t.row(k0+r)` are linear scans, and the pass-through rows
-        // (r >= k_len) are deduplicated instead of recomputed — segment
-        // (r>=k_len, c) sees exactly row k_len-1's word sequence.
-        let mut c = 0;
-        while c < n_len {
-            // Two columns per sweep: halves the a_t row traffic and
-            // interleaves two independent xor/popcnt chains (ILP).
-            if c + 1 < n_len {
-                for r in 0..k_len {
-                    wcol[r] = w_tile.get(r, c) as i64;
-                    wcol2[r] = w_tile.get(r, c + 1) as i64;
-                }
-                prefix.iter_mut().for_each(|v| *v = 0);
-                prefix2.iter_mut().for_each(|v| *v = 0);
-                let (mut last_tog, mut last_nz) = (0u64, 0u64);
-                let (mut last_tog2, mut last_nz2) = (0u64, 0u64);
-                for r in 0..k_len {
-                    let w_rc = wcol[r];
-                    let w_rc2 = wcol2[r];
-                    let arow = a_t.row(k0 + r);
-                    let (mut tog, mut nz) = (0u64, 0u64);
-                    let (mut tog2, mut nz2) = (0u64, 0u64);
-                    let mut prev = 0u64;
-                    let mut prev2 = 0u64;
-                    for ((pm, pm2), &av) in
-                        prefix.iter_mut().zip(prefix2.iter_mut()).zip(arow)
-                    {
-                        let avl = av as i64;
-                        *pm += avl * w_rc;
-                        *pm2 += avl * w_rc2;
-                        let word = *pm as u64 & mask_v;
-                        let word2 = *pm2 as u64 & mask_v;
-                        tog += (prev ^ word).count_ones() as u64;
-                        tog2 += (prev2 ^ word2).count_ones() as u64;
-                        nz += (word != 0) as u64;
-                        nz2 += (word2 != 0) as u64;
-                        prev = word;
-                        prev2 = word2;
-                    }
-                    tog += prev.count_ones() as u64;
-                    tog2 += prev2.count_ones() as u64;
-                    stats.vertical.toggles += tog + tog2;
-                    stats.vertical.zero_words += 2 * pc - nz - nz2;
-                    (last_tog, last_nz) = (tog, nz);
-                    (last_tog2, last_nz2) = (tog2, nz2);
-                }
-                let tail = (r_dim - k_len) as u64;
-                stats.vertical.toggles += tail * (last_tog + last_tog2);
-                stats.vertical.zero_words += tail * (2 * pc - last_nz - last_nz2);
-                stats.vertical.observations += 2 * pc * r_dim as u64;
-                for (m, (&pm, &pm2)) in prefix.iter().zip(prefix2.iter()).enumerate() {
-                    y.set(m, n0 + c, y.get(m, n0 + c) + pm);
-                    y.set(m, n0 + c + 1, y.get(m, n0 + c + 1) + pm2);
-                }
-                c += 2;
-            } else {
-                for r in 0..k_len {
-                    wcol[r] = w_tile.get(r, c) as i64;
-                }
-                prefix.iter_mut().for_each(|v| *v = 0);
-                let mut last_tog = 0u64;
-                let mut last_nz = 0u64;
-                for r in 0..k_len {
-                    let w_rc = wcol[r];
-                    let arow = a_t.row(k0 + r);
-                    let (mut tog, mut nz) = (0u64, 0u64);
-                    let mut prev = 0u64;
-                    for (pm, &av) in prefix.iter_mut().zip(arow) {
-                        *pm += av as i64 * w_rc;
-                        let word = *pm as u64 & mask_v;
-                        tog += (prev ^ word).count_ones() as u64;
-                        nz += (word != 0) as u64;
-                        prev = word;
-                    }
-                    tog += prev.count_ones() as u64; // drain back to zero
-                    stats.vertical.toggles += tog;
-                    stats.vertical.zero_words += pc - nz;
-                    last_tog = tog;
-                    last_nz = nz;
-                }
-                let tail = (r_dim - k_len) as u64;
-                stats.vertical.toggles += tail * last_tog;
-                stats.vertical.zero_words += tail * (pc - last_nz);
-                stats.vertical.observations += pc * r_dim as u64;
-                for (m, &pm) in prefix.iter().enumerate() {
-                    y.set(m, n0 + c, y.get(m, n0 + c) + pm);
-                }
-                c += 1;
-            }
-        }
-        // Unused columns: idle zero wires.
-        if n_len < c_dim {
-            let idle = (c_dim - n_len) as u64;
+        // Unused columns of this pass: idle zero wires.
+        if step.n_len < c_dim {
+            let idle = (c_dim - step.n_len) as u64;
             stats.vertical.zero_words += idle * pc * r_dim as u64;
             stats.vertical.observations += idle * pc * r_dim as u64;
         }
+    }
+    let cycles = plan.steps.len() as u64 * pc;
 
-        cycles += pc;
+    // ---- Horizontal: memoized per k-block -------------------------------
+    // Row r's segment sequence is A[·][k0+r], independent of the pass's
+    // n0 — so each K slice is scanned once and scaled by the number of
+    // n-block columns that replay it. Both block lists are read straight
+    // off the plan's schedule (not re-derived from the GEMM dims), and
+    // the memo's regularity assumption — every n-block replays the same
+    // k-blocks — is checked against the actual step count.
+    let k_blocks: Vec<(usize, usize)> = plan
+        .steps
+        .iter()
+        .take_while(|s| s.n0 == plan.steps[0].n0)
+        .map(|s| (s.k0, s.k_len))
+        .collect();
+    let n_groups: Vec<(usize, usize)> = plan
+        .steps
+        .iter()
+        .filter(|s| s.first_k)
+        .map(|s| (s.n0, s.n_len))
+        .collect();
+    let n_blocks = n_groups.len();
+    assert_eq!(
+        n_blocks * k_blocks.len(),
+        plan.steps.len(),
+        "tile schedule is no longer a regular k x n grid; the horizontal \
+         memo and column sharding below assume it is"
+    );
+    for &(k0, k_len) in &k_blocks {
+        let (mut tog_sum, mut nz_sum) = (0u64, 0u64);
+        for r in 0..k_len {
+            let (tog, nz) = horizontal_row_stats(a_t.row(k0 + r), mask_h);
+            tog_sum += tog;
+            nz_sum += nz;
+        }
+        // Rows r >= k_len stream constant zero: no toggles, no non-zeros.
+        let reps = (c_dim * n_blocks) as u64;
+        stats.horizontal.toggles += tog_sum * reps;
+        stats.horizontal.zero_words += (r_dim as u64 * pc - nz_sum) * reps;
+        stats.horizontal.observations += pc * r_dim as u64 * reps;
+    }
+
+    // ---- Vertical: column-blocked sweeps, optionally sharded ------------
+    let mut chunks: Vec<ColChunk> = Vec::new();
+    for &(n0, n_len) in &n_groups {
+        let mut c0 = 0;
+        while c0 < n_len {
+            let width = opts.col_block.min(n_len - c0);
+            chunks.push(ColChunk {
+                col0: n0 + c0,
+                width,
+            });
+            c0 += width;
+        }
+    }
+
+    // Processes one chunk through every k-block: vertical stats into a
+    // private accumulator, output contributions into `y_acc` (layout
+    // `m * width + lane`). Captures only shared references, so the same
+    // closure serves the serial path and every scoped thread.
+    let process = |chunk: &ColChunk, prefix: &mut Vec<i64>, y_acc: &mut Vec<i64>| {
+        let mut vert = DirectionStats::new(bv);
+        y_acc.clear();
+        y_acc.resize(m_rows * chunk.width, 0);
+        for &(k0, k_len) in &k_blocks {
+            prefix.clear();
+            prefix.resize(m_rows * chunk.width, 0);
+            sweep_dispatch(
+                chunk.width,
+                &a_t,
+                w,
+                k0,
+                k_len,
+                chunk.col0,
+                mask_v,
+                pc,
+                r_dim,
+                prefix,
+                &mut vert,
+            );
+            for (acc, &p) in y_acc.iter_mut().zip(prefix.iter()) {
+                *acc += p;
+            }
+        }
+        vert
+    };
+
+    let threads = resolve_threads(opts.threads, plan.total_macs(), chunks.len());
+    let mut y = Matrix::<i64>::zeros(a.rows, w.cols);
+    if threads <= 1 {
+        let (mut prefix, mut y_acc) = (Vec::new(), Vec::new());
+        for chunk in &chunks {
+            let vert = process(chunk, &mut prefix, &mut y_acc);
+            stats.vertical.merge(&vert);
+            scatter_columns(&mut y, chunk, &y_acc);
+        }
+    } else {
+        let next = AtomicUsize::new(0);
+        let parts = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..threads)
+                .map(|_| {
+                    scope.spawn(|| {
+                        let mut done = Vec::new();
+                        let mut prefix = Vec::new();
+                        loop {
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            let Some(chunk) = chunks.get(i) else { break };
+                            let mut y_acc = Vec::new();
+                            let vert = process(chunk, &mut prefix, &mut y_acc);
+                            done.push((i, y_acc, vert));
+                        }
+                        done
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .flat_map(|h| h.join().expect("vertical sweep worker panicked"))
+                .collect::<Vec<_>>()
+        });
+        for (i, y_acc, vert) in parts {
+            stats.vertical.merge(&vert);
+            scatter_columns(&mut y, &chunks[i], &y_acc);
+        }
     }
 
     Ok(GemmSim {
@@ -237,6 +316,239 @@ pub fn simulate_gemm_fast(
         cycles,
         macs: plan.total_macs(),
     })
+}
+
+/// Resolve the effective thread count. Explicit requests are honored
+/// (capped by the number of work units); auto mode parallelizes only
+/// GEMMs large enough to amortize thread startup.
+fn resolve_threads(requested: usize, total_macs: u64, units: usize) -> usize {
+    let t = if requested == 0 {
+        if total_macs < INTRA_PAR_MIN_MACS {
+            1
+        } else {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        }
+    } else {
+        requested
+    };
+    t.clamp(1, units.max(1))
+}
+
+/// Add one chunk's accumulated output columns into `y`.
+fn scatter_columns(y: &mut Matrix<i64>, chunk: &ColChunk, y_acc: &[i64]) {
+    for m in 0..y.rows {
+        let row = &y_acc[m * chunk.width..(m + 1) * chunk.width];
+        for (l, &v) in row.iter().enumerate() {
+            let col = chunk.col0 + l;
+            y.set(m, col, y.get(m, col) + v);
+        }
+    }
+}
+
+/// Toggle/non-zero counts of one horizontal row sequence (`pc`-padded
+/// stream of `arow`, starting and draining at zero).
+fn horizontal_row_stats(arow: &[i32], mask_h: u64) -> (u64, u64) {
+    let (mut tog, mut nz) = (0u64, 0u64);
+    let mut p = 0u64;
+    for &v in arow {
+        let word = v as i64 as u64 & mask_h;
+        tog += (p ^ word).count_ones() as u64;
+        nz += (word != 0) as u64;
+        p = word;
+    }
+    tog += p.count_ones() as u64; // drain back to zero
+    (tog, nz)
+}
+
+/// Weight-chain statistics of one preload pass, in closed form.
+///
+/// `prev`/`cur` are the two tiles as pre-masked `R×C` row-major bus
+/// words. Register `(r,c)` starts at `prev[r][c]` and over the `R`
+/// preload cycles sees `prev[r-1..=0][c]` then `cur[R-1..=r][c]`, so its
+/// toggles decompose into a prefix of previous-tile transitions, the
+/// splice word `prev[0] → cur[R-1]`, and a suffix of new-tile
+/// transitions. Summing the decomposition over `r` weights each
+/// transition by how many registers replay it — O(R) popcounts per
+/// column instead of O(R²).
+fn weight_chain_pass(
+    prev: &[u64],
+    cur: &[u64],
+    r_dim: usize,
+    c_dim: usize,
+    out: &mut DirectionStats,
+) {
+    debug_assert_eq!(prev.len(), r_dim * c_dim);
+    debug_assert_eq!(cur.len(), r_dim * c_dim);
+    for c in 0..c_dim {
+        let wp = |r: usize| prev[r * c_dim + c];
+        let wc = |r: usize| cur[r * c_dim + c];
+        let mut tog = 0u64;
+        let mut zer = 0u64;
+        // Splice prev[0] → cur[R-1]: seen by every register.
+        tog += r_dim as u64 * (wp(0) ^ wc(r_dim - 1)).count_ones() as u64;
+        for j in 1..r_dim {
+            // prev[j] → prev[j-1]: replayed by registers r >= j.
+            tog += (r_dim - j) as u64 * (wp(j) ^ wp(j - 1)).count_ones() as u64;
+            // cur[j] → cur[j-1]: replayed by registers r <= j-1.
+            tog += j as u64 * (wc(j) ^ wc(j - 1)).count_ones() as u64;
+        }
+        for j in 0..r_dim {
+            // prev[j] appears in the flush of registers r >= j+1.
+            if wp(j) == 0 {
+                zer += (r_dim - 1 - j) as u64;
+            }
+            // cur[j] appears in the feed of registers r <= j.
+            if wc(j) == 0 {
+                zer += j as u64 + 1;
+            }
+        }
+        out.toggles += tog;
+        out.zero_words += zer;
+    }
+    out.observations += (r_dim * r_dim * c_dim) as u64;
+}
+
+/// Monomorphized dispatch over the chunk width.
+#[allow(clippy::too_many_arguments)]
+fn sweep_dispatch(
+    width: usize,
+    a_t: &Matrix<i32>,
+    w: &Matrix<i32>,
+    k0: usize,
+    k_len: usize,
+    col0: usize,
+    mask_v: u64,
+    pc: u64,
+    r_dim: usize,
+    prefix: &mut [i64],
+    vert: &mut DirectionStats,
+) {
+    match width {
+        1 => sweep_cols::<1>(a_t, w, k0, k_len, col0, mask_v, pc, r_dim, prefix, vert),
+        2 => sweep_cols::<2>(a_t, w, k0, k_len, col0, mask_v, pc, r_dim, prefix, vert),
+        3 => sweep_cols::<3>(a_t, w, k0, k_len, col0, mask_v, pc, r_dim, prefix, vert),
+        4 => sweep_cols::<4>(a_t, w, k0, k_len, col0, mask_v, pc, r_dim, prefix, vert),
+        5 => sweep_cols::<5>(a_t, w, k0, k_len, col0, mask_v, pc, r_dim, prefix, vert),
+        6 => sweep_cols::<6>(a_t, w, k0, k_len, col0, mask_v, pc, r_dim, prefix, vert),
+        7 => sweep_cols::<7>(a_t, w, k0, k_len, col0, mask_v, pc, r_dim, prefix, vert),
+        8 => sweep_cols::<8>(a_t, w, k0, k_len, col0, mask_v, pc, r_dim, prefix, vert),
+        _ => unreachable!("col_block validated to 1..={MAX_COL_BLOCK}"),
+    }
+}
+
+/// The register-tiled vertical kernel: one k-block of one column chunk.
+///
+/// `prefix` (layout `m * B + lane`, zeroed by the caller) carries the
+/// running sums `Σ_{r'≤r} A[m][k0+r']·W[k0+r'][col0+lane]`; after the
+/// last row it holds this k-block's contribution to `y`. Two consecutive
+/// rows are fused per scan of `A`: the mid value after row `r` and the
+/// final value after row `r+1` are both observable from one load/store
+/// of the prefix element, halving prefix traffic and doubling the number
+/// of independent xor/popcount chains (ILP). Rows `r >= k_len` pass the
+/// last used row's words through unchanged and are accounted by scaling.
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn sweep_cols<const B: usize>(
+    a_t: &Matrix<i32>,
+    w: &Matrix<i32>,
+    k0: usize,
+    k_len: usize,
+    col0: usize,
+    mask_v: u64,
+    pc: u64,
+    r_dim: usize,
+    prefix: &mut [i64],
+    vert: &mut DirectionStats,
+) {
+    debug_assert_eq!(prefix.len(), a_t.cols * B);
+    // (toggles, non-zeros) of the final used row, for the pass-through
+    // scaling below.
+    let mut last = ([0u64; B], [0u64; B]);
+    let mut r = 0;
+    while r < k_len {
+        if r + 1 < k_len {
+            // ---- fused row pair ----
+            let mut w0 = [0i64; B];
+            let mut w1 = [0i64; B];
+            for l in 0..B {
+                w0[l] = w.get(k0 + r, col0 + l) as i64;
+                w1[l] = w.get(k0 + r + 1, col0 + l) as i64;
+            }
+            let row0 = a_t.row(k0 + r);
+            let row1 = a_t.row(k0 + r + 1);
+            let mut prev0 = [0u64; B];
+            let mut prev1 = [0u64; B];
+            let mut tog0 = [0u64; B];
+            let mut tog1 = [0u64; B];
+            let mut nz0 = [0u64; B];
+            let mut nz1 = [0u64; B];
+            for ((chunk, &a0), &a1) in prefix
+                .chunks_exact_mut(B)
+                .zip(row0.iter())
+                .zip(row1.iter())
+            {
+                let a0 = a0 as i64;
+                let a1 = a1 as i64;
+                for l in 0..B {
+                    let mid = chunk[l] + a0 * w0[l];
+                    let fin = mid + a1 * w1[l];
+                    chunk[l] = fin;
+                    let word0 = mid as u64 & mask_v;
+                    let word1 = fin as u64 & mask_v;
+                    tog0[l] += (prev0[l] ^ word0).count_ones() as u64;
+                    tog1[l] += (prev1[l] ^ word1).count_ones() as u64;
+                    nz0[l] += (word0 != 0) as u64;
+                    nz1[l] += (word1 != 0) as u64;
+                    prev0[l] = word0;
+                    prev1[l] = word1;
+                }
+            }
+            for l in 0..B {
+                tog0[l] += prev0[l].count_ones() as u64; // drain back to zero
+                tog1[l] += prev1[l].count_ones() as u64;
+                vert.toggles += tog0[l] + tog1[l];
+                vert.zero_words += 2 * pc - nz0[l] - nz1[l];
+            }
+            last = (tog1, nz1);
+            r += 2;
+        } else {
+            // ---- single trailing row ----
+            let mut wv = [0i64; B];
+            for l in 0..B {
+                wv[l] = w.get(k0 + r, col0 + l) as i64;
+            }
+            let arow = a_t.row(k0 + r);
+            let mut prev = [0u64; B];
+            let mut tog = [0u64; B];
+            let mut nz = [0u64; B];
+            for (chunk, &av) in prefix.chunks_exact_mut(B).zip(arow.iter()) {
+                let av = av as i64;
+                for l in 0..B {
+                    chunk[l] += av * wv[l];
+                    let word = chunk[l] as u64 & mask_v;
+                    tog[l] += (prev[l] ^ word).count_ones() as u64;
+                    nz[l] += (word != 0) as u64;
+                    prev[l] = word;
+                }
+            }
+            for l in 0..B {
+                tog[l] += prev[l].count_ones() as u64; // drain back to zero
+                vert.toggles += tog[l];
+                vert.zero_words += pc - nz[l];
+            }
+            last = (tog, nz);
+            r += 1;
+        }
+    }
+    // Pass-through rows r >= k_len replay row k_len-1's word sequence.
+    let tail = (r_dim - k_len) as u64;
+    for l in 0..B {
+        vert.toggles += tail * last.0[l];
+        vert.zero_words += tail * (pc - last.1[l]);
+    }
+    vert.observations += pc * r_dim as u64 * B as u64;
 }
 
 #[cfg(test)]
@@ -258,10 +570,10 @@ mod tests {
     fn matches_cycle_sim_exactly() {
         let cases = [
             (4usize, 4usize, 8u32, 6usize, 4usize, 4usize),
-            (4, 4, 8, 7, 10, 9),    // ragged multi-pass
-            (8, 4, 8, 5, 8, 4),     // non-square array
-            (4, 8, 8, 3, 12, 17),   // wide array, ragged N
-            (4, 4, 8, 1, 1, 1),     // degenerate GEMM
+            (4, 4, 8, 7, 10, 9),  // ragged multi-pass
+            (8, 4, 8, 5, 8, 4),   // non-square array
+            (4, 8, 8, 3, 12, 17), // wide array, ragged N
+            (4, 4, 8, 1, 1, 1),   // degenerate GEMM
         ];
         for (i, &(r, c, bits, m, k, n)) in cases.iter().enumerate() {
             let sa = SaConfig::new_ws(r, c, bits).unwrap();
@@ -273,6 +585,26 @@ mod tests {
             assert_eq!(fast.stats, slow.stats, "case {i}: stats differ");
             assert_eq!(fast.cycles, slow.cycles, "case {i}: cycles differ");
             assert_eq!(fast.macs, slow.macs, "case {i}: macs differ");
+        }
+    }
+
+    /// Every block width and a forced thread count reproduce the default
+    /// result bit-for-bit, including the memoized multi-pass path (the
+    /// 10×9 shape spans 3 k-blocks × 3 n-blocks on a 4×4 array).
+    #[test]
+    fn all_block_widths_and_threads_agree() {
+        let sa = SaConfig::new_ws(4, 4, 8).unwrap();
+        let a = rand_mat(13, 10, 5, -100, 100);
+        let w = rand_mat(10, 9, 6, -100, 100);
+        let want = WsCycleSim::new(&sa).simulate_gemm(&a, &w).unwrap();
+        for col_block in 1..=MAX_COL_BLOCK {
+            for threads in [1usize, 2, 3] {
+                let opts = FastSimOpts { col_block, threads };
+                let got = simulate_gemm_fast_with(&sa, &a, &w, &opts).unwrap();
+                assert_eq!(got.y, want.y, "B={col_block} t={threads}: outputs");
+                assert_eq!(got.stats, want.stats, "B={col_block} t={threads}: stats");
+                assert_eq!(got.cycles, want.cycles, "B={col_block} t={threads}: cycles");
+            }
         }
     }
 
@@ -319,6 +651,20 @@ mod tests {
     }
 
     #[test]
+    fn rejects_bad_col_block() {
+        let sa = SaConfig::new_ws(4, 4, 8).unwrap();
+        let a = Matrix::<i32>::zeros(2, 4);
+        let w = Matrix::<i32>::zeros(4, 4);
+        for col_block in [0, MAX_COL_BLOCK + 1] {
+            let opts = FastSimOpts {
+                col_block,
+                threads: 1,
+            };
+            assert!(simulate_gemm_fast_with(&sa, &a, &w, &opts).is_err());
+        }
+    }
+
+    #[test]
     fn utilization_and_time() {
         let sa = SaConfig::paper_32x32();
         let a = rand_mat(512, 64, 5, -100, 100);
@@ -327,5 +673,18 @@ mod tests {
         let u = sim.utilization(&sa);
         assert!(u > 0.3 && u <= 1.0, "utilization {u}");
         assert!(sim.silicon_seconds(&sa) > 0.0);
+    }
+
+    #[test]
+    fn thread_resolution_policy() {
+        // Explicit counts honored but capped by the work available.
+        assert_eq!(resolve_threads(3, 0, 10), 3);
+        assert_eq!(resolve_threads(16, 0, 2), 2);
+        assert_eq!(resolve_threads(1, u64::MAX, 10), 1);
+        // Auto: serial below the amortization threshold.
+        assert_eq!(resolve_threads(0, INTRA_PAR_MIN_MACS - 1, 64), 1);
+        assert!(resolve_threads(0, INTRA_PAR_MIN_MACS, 64) >= 1);
+        // Degenerate unit counts never yield zero threads.
+        assert_eq!(resolve_threads(0, 0, 0), 1);
     }
 }

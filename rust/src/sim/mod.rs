@@ -1,17 +1,27 @@
 //! Systolic-array simulation with exact per-wire toggle counting.
 //!
-//! Two interchangeable engines compute bit-identical results:
+//! Three engines compute bit-identical results:
 //!
 //! * [`ws::WsCycleSim`] — cycle-by-cycle register-transfer simulation of
 //!   the weight-stationary array (paper Fig. 1): every pipeline register
 //!   is modeled and every wire-segment transition is recorded. This is
-//!   the reproduction's stand-in for the paper's RTL simulation.
-//! * [`fast::simulate_gemm_fast`] — the analytic oracle: computes the
-//!   exact same bus word sequences per wire segment without cycling the
-//!   array, ~an order of magnitude faster. Used by the benchmark harness.
+//!   the reproduction's stand-in for the paper's RTL simulation and the
+//!   authoritative definition of bus behaviour.
+//! * [`fast::simulate_gemm_fast`] — the production analytic engine:
+//!   derives the exact per-segment word sequences without cycling the
+//!   array, then counts them with a column-blocked register-tiled kernel
+//!   (1–8 lanes × fused row pairs), per-k-block memoized horizontal
+//!   statistics, closed-form O(R·C) weight-chain accounting, and
+//!   optional intra-GEMM sharding across scoped threads
+//!   ([`fast::FastSimOpts`]). Used by the coordinator, the figure
+//!   benches and the serving demo.
+//! * [`baseline::simulate_gemm_fast_scalar`] — the scalar predecessor of
+//!   the blocked engine, frozen as the reference the `sim_throughput`
+//!   bench measures speedups against (recorded in `BENCH_sim.json`).
 //!
-//! Equality of the two engines (outputs, toggles, observations) is
-//! enforced by unit, integration and property tests.
+//! Equality of the engines (outputs, toggles, observations, cycles) is
+//! enforced by unit tests here, the `engines_equivalence` and
+//! `fast_engine_property` integration suites, and `repro verify`.
 //!
 //! ### Pass timeline (shared by both engines)
 //!
@@ -27,6 +37,7 @@
 //! boundaries stateless for the horizontal/vertical buses and keeps the
 //! engines' accounting identical.
 
+pub mod baseline;
 pub mod fast;
 pub mod is;
 pub mod os;

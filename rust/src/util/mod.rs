@@ -1,8 +1,9 @@
 //! Self-contained substrates for the offline build.
 //!
-//! The vendored dependency set (see `.cargo/config.toml`) ships only
-//! `xla`, `anyhow` and `thiserror`, so the crate provides its own
-//! minimal, well-tested replacements for the usual ecosystem pieces:
+//! The offline image ships no crates.io registry at all — the crate
+//! depends only on std (the PJRT bindings are opt-in via the `xla`
+//! feature) — so it provides its own minimal, well-tested replacements
+//! for the usual ecosystem pieces:
 //!
 //! * [`json`] — a strict JSON parser/serializer (manifest + configs),
 //! * [`rng`]  — a deterministic SplitMix64-based RNG with Gaussian

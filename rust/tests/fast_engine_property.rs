@@ -1,0 +1,129 @@
+//! Property suite for the column-blocked analytic engine: across
+//! randomized ragged shapes, every column-block width and several thread
+//! counts, `fast` must be bit-identical to the cycle-accurate engine and
+//! to the frozen scalar baseline (outputs, stats, cycles, macs) —
+//! including the memoized multi-pass path (shapes spanning several
+//! k-blocks × n-blocks re-derive horizontal statistics from the memo).
+
+use asymm_sa::arch::SaConfig;
+use asymm_sa::gemm::{matmul_i64, Matrix};
+use asymm_sa::sim::baseline::simulate_gemm_fast_scalar;
+use asymm_sa::sim::fast::{simulate_gemm_fast_with, FastSimOpts, MAX_COL_BLOCK};
+use asymm_sa::sim::ws::WsCycleSim;
+use asymm_sa::util::rng::Rng;
+
+fn rand_operands(
+    rng: &mut Rng,
+    m: usize,
+    k: usize,
+    n: usize,
+    bits: u32,
+    sparsity: f64,
+) -> (Matrix<i32>, Matrix<i32>) {
+    let hi = (1i64 << (bits - 1)) - 1;
+    let a = Matrix::from_vec(
+        m,
+        k,
+        (0..m * k)
+            .map(|_| {
+                if rng.chance(sparsity) {
+                    0
+                } else {
+                    rng.int_range(-hi, hi) as i32
+                }
+            })
+            .collect(),
+    )
+    .unwrap();
+    let w = Matrix::from_vec(
+        k,
+        n,
+        (0..k * n).map(|_| rng.int_range(-hi, hi) as i32).collect(),
+    )
+    .unwrap();
+    (a, w)
+}
+
+/// 24 random ragged cases × all widths × thread counts {1, 3}: the
+/// blocked engine equals the cycle engine and the scalar baseline.
+#[test]
+fn property_blocked_equals_cycle_across_widths_and_threads() {
+    let mut rng = Rng::new(0xB10C_CAFE);
+    for case in 0..24 {
+        let rows = [2usize, 3, 4, 5, 8][rng.index(0, 5)];
+        let cols = [2usize, 3, 4, 5, 8][rng.index(0, 5)];
+        let bits = [4u32, 8, 12][rng.index(0, 3)];
+        let sa = SaConfig::new_ws(rows, cols, bits).unwrap();
+        // Spans up to 3 k-blocks × 3 n-blocks: exercises the memoized
+        // horizontal path and the chained weight-tile double buffer.
+        let m = rng.index(1, 30);
+        let k = rng.index(1, 3 * rows);
+        let n = rng.index(1, 3 * cols);
+        let sparsity = [0.0, 0.5, 0.9][rng.index(0, 3)];
+        let (a, w) = rand_operands(&mut rng, m, k, n, bits, sparsity);
+
+        let cycle = WsCycleSim::new(&sa).simulate_gemm(&a, &w).unwrap();
+        let scalar = simulate_gemm_fast_scalar(&sa, &a, &w).unwrap();
+        let ctx0 = format!("case {case}: {m}x{k}x{n} on {rows}x{cols} @ {bits}b");
+        assert_eq!(cycle.y, matmul_i64(&a, &w).unwrap(), "{ctx0}: reference");
+        assert_eq!(cycle.y, scalar.y, "{ctx0}: scalar outputs");
+        assert_eq!(cycle.stats, scalar.stats, "{ctx0}: scalar stats");
+
+        for col_block in 1..=MAX_COL_BLOCK {
+            for threads in [1usize, 3] {
+                let opts = FastSimOpts { col_block, threads };
+                let fast = simulate_gemm_fast_with(&sa, &a, &w, &opts).unwrap();
+                let ctx = format!("{ctx0} B={col_block} t={threads}");
+                assert_eq!(fast.y, cycle.y, "{ctx}: outputs");
+                assert_eq!(fast.stats, cycle.stats, "{ctx}: stats");
+                assert_eq!(fast.cycles, cycle.cycles, "{ctx}: cycles");
+                assert_eq!(fast.macs, cycle.macs, "{ctx}: macs");
+            }
+        }
+    }
+}
+
+/// A many-pass shape (4 k-blocks × 4 n-blocks, both ragged) where the
+/// horizontal memo is replayed 4× and the weight chain threads 16 tiles
+/// through the double buffer.
+#[test]
+fn memoized_multi_pass_path_is_exact() {
+    let mut rng = Rng::new(7);
+    let sa = SaConfig::new_ws(4, 4, 8).unwrap();
+    let (a, w) = rand_operands(&mut rng, 17, 13, 15, 8, 0.4);
+    let cycle = WsCycleSim::new(&sa).simulate_gemm(&a, &w).unwrap();
+    for col_block in [1, 3, 5, MAX_COL_BLOCK] {
+        let opts = FastSimOpts {
+            col_block,
+            threads: 2,
+        };
+        let fast = simulate_gemm_fast_with(&sa, &a, &w, &opts).unwrap();
+        assert_eq!(fast.y, cycle.y, "B={col_block}: outputs");
+        assert_eq!(fast.stats, cycle.stats, "B={col_block}: stats");
+        assert_eq!(fast.cycles, cycle.cycles, "B={col_block}: cycles");
+    }
+}
+
+/// Above the auto-parallelism threshold (a >4M-MAC GEMM) the sharded
+/// default path must still be bit-identical — checked against the scalar
+/// baseline (the cycle engine is too slow at this size).
+#[test]
+fn auto_threaded_large_gemm_matches_scalar_baseline() {
+    let mut rng = Rng::new(11);
+    let sa = SaConfig::new_ws(8, 8, 8).unwrap();
+    let (a, w) = rand_operands(&mut rng, 300, 150, 100, 8, 0.5);
+    let scalar = simulate_gemm_fast_scalar(&sa, &a, &w).unwrap();
+    // Default opts: auto threads, default block.
+    let auto = asymm_sa::sim::fast::simulate_gemm_fast(&sa, &a, &w).unwrap();
+    assert_eq!(auto.y, scalar.y);
+    assert_eq!(auto.stats, scalar.stats);
+    assert_eq!(auto.cycles, scalar.cycles);
+    assert_eq!(auto.macs, scalar.macs);
+    // Thread count beyond the number of column chunks is clamped, not UB.
+    let opts = FastSimOpts {
+        col_block: 8,
+        threads: 64,
+    };
+    let over = simulate_gemm_fast_with(&sa, &a, &w, &opts).unwrap();
+    assert_eq!(over.stats, scalar.stats);
+}
