@@ -1,112 +1,70 @@
-//! Serving demo: the coordinator as a request-driven accelerator service.
+//! Serving demo: thin client of the first-class serve subsystem.
 //!
-//! Simulates a stream of conv-layer inference requests arriving at a
-//! configurable rate, dispatches them through the thread-pool coordinator
-//! (bounded queue = backpressure), and reports latency percentiles and
-//! throughput — the operational view of the L3 layer that the figure
-//! harness uses in batch mode.
+//! Everything the old hand-rolled loop did — request generation,
+//! batching, dispatch, latency accounting — now lives in
+//! `asymm_sa::serve` (shape-coalesced batching in front of the
+//! coordinator + a memoized result cache). This example just configures
+//! a [`Server`], streams a seeded scenario through it, and prints the
+//! summary. The `repro serve` subcommand drives an equivalent
+//! (differently-seeded, flag-configurable) scenario through the same
+//! API and additionally writes a JSON summary.
 //!
 //! Run: `cargo run --release --example serve_demo`
 
-use std::sync::Arc;
-use std::time::Instant;
-
 use asymm_sa::arch::SaConfig;
-use asymm_sa::coordinator::{Coordinator, LayerJob};
-use asymm_sa::gemm::{im2col, Matrix};
-use asymm_sa::quant::quantize_sym;
-use asymm_sa::workloads::{ActivationModel, ConvLayer, SynthGen};
+use asymm_sa::serve::{run_scenario, session::serving_mix, ScenarioConfig, ServeConfig, Server};
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     let sa = SaConfig::paper_32x32();
-    let coord = Coordinator::new(&sa, 0);
+    let server = Server::new(ServeConfig {
+        sa: sa.clone(),
+        workers: 0,
+        cache_capacity: 24,
+        window: 16,
+    });
     println!(
-        "serve_demo: 32x32 WS array, {} workers, bounded queue {}",
-        coord.workers(),
-        coord.workers() * 2
+        "serve_demo: 32x32 WS array, {} workers, window {}, cache {} entries",
+        server.coordinator().workers(),
+        server.config().window,
+        server.config().cache_capacity,
     );
     // The pool splits the machine between layer fan-out and intra-GEMM
-    // column sharding per batch; show what this host negotiates.
-    let (layer_workers, intra) = coord.negotiate(24);
+    // column sharding per coalesced batch; show what this host does for
+    // a full admission window.
+    let (layer_workers, intra) = server.coordinator().negotiate(server.config().window);
     println!(
-        "parallelism negotiation for 24 requests: {layer_workers} layer workers x {intra} intra threads"
+        "parallelism negotiation for a full window: {layer_workers} layer workers x {intra} intra threads"
     );
 
-    // Request mix: small conv layers of three sizes (edge-inference-ish).
-    let mk = |name: &str, k, hw, c, m| ConvLayer {
-        name: name.into(),
-        k,
-        h: hw,
-        w: hw,
-        c,
-        m,
-        stride: 1,
+    let scenario = ScenarioConfig {
+        seed: 1,
+        requests: 48,
+        unique_inputs: 4,
     };
-    let mix = [
-        mk("tiny-1x1", 1, 14, 64, 64),
-        mk("mid-3x3", 3, 14, 32, 64),
-        mk("wide-1x1", 1, 28, 128, 64),
-    ];
+    let (responses, sum) = run_scenario(&server, &scenario, &serving_mix())?;
+    println!("{sum}");
 
-    // Materialize a batch of requests round-robin over the mix.
-    let n_requests = 24;
-    let mut gen = SynthGen::new(1);
-    let model = ActivationModel::default();
-    let mut jobs = Vec::new();
-    for i in 0..n_requests {
-        let layer = &mix[i % mix.len()];
-        let (hin, win) = layer.input_hw();
-        let x = gen.activations(layer.c, hin, win, &model);
-        let ck2 = layer.c * layer.k * layer.k;
-        let w = gen.weights(layer.m, ck2);
-        let patches = im2col(&x, layer.c, hin, win, layer.k, layer.stride, layer.pad())?;
-        let aq = quantize_sym(&patches.data, 16);
-        let wq = quantize_sym(&w, 16);
-        let w_mat = Matrix::from_vec(layer.m, ck2, wq.values)?.transpose();
-        jobs.push(LayerJob {
-            name: format!("req{:02}:{}", i, layer.name),
-            a: Arc::new(Matrix::from_vec(patches.rows, patches.cols, aq.values)?),
-            w: Arc::new(w_mat),
-        });
-    }
-
-    let t0 = Instant::now();
-    let results = coord.run(jobs)?;
-    let wall = t0.elapsed().as_secs_f64();
-
-    let mut lat: Vec<f64> = results.iter().map(|r| r.wall_secs * 1e3).collect();
-    lat.sort_by(|a, b| a.partial_cmp(b).expect("finite"));
-    let pct = |p: f64| lat[((p * (lat.len() - 1) as f64).round()) as usize];
-    let total_macs: u64 = results.iter().map(|r| r.sim.macs).sum();
-
+    // Silicon-side stats: what the modeled accelerator would have done
+    // for every served response (cached ones included — that is the
+    // point of the cache).
+    let silicon_s: f64 = responses.iter().map(|r| r.sim.silicon_seconds(&sa)).sum();
     println!(
-        "{} requests in {:.2}s -> {:.1} req/s, {:.2} GMAC/s simulated",
-        results.len(),
-        wall,
-        results.len() as f64 / wall,
-        total_macs as f64 / wall / 1e9
-    );
-    println!(
-        "per-request sim latency: p50 {:.1} ms, p90 {:.1} ms, p99 {:.1} ms, max {:.1} ms",
-        pct(0.50),
-        pct(0.90),
-        pct(0.99),
-        pct(1.0)
-    );
-
-    // Silicon-side stats: what the modeled accelerator would have done.
-    let silicon_s: f64 = results.iter().map(|r| r.sim.silicon_seconds(&sa)).sum();
-    println!(
-        "modeled silicon time at {:.1} GHz: {:.3} ms total ({:.0}x faster than simulation)",
+        "modeled silicon time at {:.1} GHz: {:.3} ms total across served responses \
+         ({:.0}x faster than the serving wall clock)",
         sa.clock_ghz,
         silicon_s * 1e3,
-        wall / silicon_s
+        sum.wall_secs / silicon_s.max(1e-12)
     );
-    let snap = coord.metrics().snapshot();
+    let snap = server.metrics().snapshot();
     println!(
-        "metrics: {} jobs, {:.2}e9 PE-cycles/s simulated",
+        "metrics: {} sim jobs, {:.2}e9 PE-cycles/s simulated, cache hit rate {:.1}%",
         snap.jobs,
-        snap.pe_cycles_per_sec(sa.num_pes()) / 1e9
+        snap.pe_cycles_per_sec(sa.num_pes()) / 1e9,
+        100.0 * snap.cache_hit_rate()
+    );
+    assert!(
+        snap.cache_hits > 0,
+        "seeded scenario must produce repeat traffic"
     );
     println!("serve_demo OK");
     Ok(())

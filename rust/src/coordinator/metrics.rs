@@ -1,21 +1,59 @@
-//! Lock-free coordinator metrics.
+//! Coordinator metrics: lock-free counters plus per-event latency logs.
+//!
+//! Two kinds of state live here:
+//!
+//! * monotonic counters (jobs, MACs, cycles, cache hits) on relaxed
+//!   atomics — cheap enough for the worker hot path;
+//! * per-event latency logs (per-job wall time, per-request serve
+//!   latency) behind a mutex, appended once per job/request.
+//!
+//! Under fan-out, jobs complete in a nondeterministic order, so the raw
+//! append order of the latency logs depends on thread scheduling. A
+//! percentile computed over the raw log would therefore be
+//! arrival-order-dependent whenever the estimator looks at positions
+//! (nearest-rank does). [`Metrics::snapshot`] fixes the satellite bug by
+//! exposing only a **stable sorted view**: the multiset of recorded
+//! values fully determines the snapshot, so serve-latency percentiles
+//! are identical at any worker count for the same recorded values.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-
+use std::sync::Mutex;
 
 use crate::sim::GemmSim;
 
-/// Shared counters updated by workers.
+/// Bound on each per-event latency log: long-lived servers must not
+/// grow metrics memory with total traffic. Past the cap, new samples
+/// are counted in `latency_samples_dropped` instead of stored — the
+/// aggregate counters stay exact forever; only percentile resolution
+/// degrades, and every in-repo scenario stays far below the cap.
+pub const LATENCY_LOG_CAP: usize = 1 << 20;
+
+/// Shared counters updated by workers and the serve front-end.
 #[derive(Debug, Default)]
 pub struct Metrics {
     jobs: AtomicU64,
     macs: AtomicU64,
     sim_cycles: AtomicU64,
     wall_micros: AtomicU64,
+    cache_hits: AtomicU64,
+    cache_lookups: AtomicU64,
+    latency_samples_dropped: AtomicU64,
+    /// Per-job wall times (µs), append order = completion order
+    /// (nondeterministic under fan-out; sorted before exposure).
+    job_wall_micros: Mutex<Vec<u64>>,
+    /// Per-request serve latencies (µs), measured from batch admission:
+    /// cache lookup + batching + simulation. Waiting for *earlier*
+    /// stream windows is not included (see
+    /// `serve::InferResponse::latency_secs`).
+    serve_latency_micros: Mutex<Vec<u64>>,
 }
 
 /// Point-in-time copy of the metrics.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+///
+/// The latency views are sorted ascending — a *stable* function of the
+/// recorded multiset, independent of completion order (and hence of the
+/// worker count that produced them).
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct MetricsSnapshot {
     /// Jobs completed.
     pub jobs: u64,
@@ -25,25 +63,90 @@ pub struct MetricsSnapshot {
     pub sim_cycles: u64,
     /// Total worker wall time in microseconds.
     pub wall_micros: u64,
+    /// Result-cache hits observed by the serve front-end.
+    pub cache_hits: u64,
+    /// Result-cache lookups observed by the serve front-end.
+    pub cache_lookups: u64,
+    /// Latency samples dropped once a log hit [`LATENCY_LOG_CAP`].
+    pub latency_samples_dropped: u64,
+    /// Per-job wall times in µs, sorted ascending.
+    pub job_wall_sorted_micros: Vec<u64>,
+    /// Per-request serve latencies in µs, sorted ascending.
+    pub serve_latency_sorted_micros: Vec<u64>,
+}
+
+/// Nearest-rank percentile over an ascending-sorted slice; `p ∈ [0, 1]`.
+/// Returns 0 for an empty slice. Deterministic: depends only on the
+/// sorted values, never on arrival order.
+pub fn percentile_micros(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = (p.clamp(0.0, 1.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[rank.min(sorted.len() - 1)]
 }
 
 impl Metrics {
-    /// Record one finished job.
+    /// Append to a bounded latency log; samples past the cap are
+    /// tallied in `latency_samples_dropped` instead of stored.
+    fn push_bounded(&self, log: &Mutex<Vec<u64>>, micros: u64) {
+        let mut g = log.lock().expect("metrics poisoned");
+        if g.len() < LATENCY_LOG_CAP {
+            g.push(micros);
+        } else {
+            drop(g);
+            self.latency_samples_dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Record one finished simulation job.
     pub fn record_job(&self, sim: &GemmSim, wall_secs: f64) {
         self.jobs.fetch_add(1, Ordering::Relaxed);
         self.macs.fetch_add(sim.macs, Ordering::Relaxed);
         self.sim_cycles.fetch_add(sim.cycles, Ordering::Relaxed);
-        self.wall_micros
-            .fetch_add((wall_secs * 1e6) as u64, Ordering::Relaxed);
+        let micros = (wall_secs * 1e6) as u64;
+        self.wall_micros.fetch_add(micros, Ordering::Relaxed);
+        self.push_bounded(&self.job_wall_micros, micros);
     }
 
-    /// Snapshot the counters.
+    /// Record one serve-side request completion (cached or simulated).
+    pub fn record_serve_latency(&self, latency_secs: f64) {
+        self.push_bounded(&self.serve_latency_micros, (latency_secs * 1e6) as u64);
+    }
+
+    /// Record one result-cache lookup.
+    pub fn record_cache_lookup(&self, hit: bool) {
+        self.cache_lookups.fetch_add(1, Ordering::Relaxed);
+        if hit {
+            self.cache_hits.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Snapshot the counters; latency logs are sorted into the stable
+    /// view (see module docs).
     pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut job_wall: Vec<u64> = self
+            .job_wall_micros
+            .lock()
+            .expect("metrics poisoned")
+            .clone();
+        job_wall.sort_unstable();
+        let mut serve_lat: Vec<u64> = self
+            .serve_latency_micros
+            .lock()
+            .expect("metrics poisoned")
+            .clone();
+        serve_lat.sort_unstable();
         MetricsSnapshot {
             jobs: self.jobs.load(Ordering::Relaxed),
             macs: self.macs.load(Ordering::Relaxed),
             sim_cycles: self.sim_cycles.load(Ordering::Relaxed),
             wall_micros: self.wall_micros.load(Ordering::Relaxed),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            cache_lookups: self.cache_lookups.load(Ordering::Relaxed),
+            latency_samples_dropped: self.latency_samples_dropped.load(Ordering::Relaxed),
+            job_wall_sorted_micros: job_wall,
+            serve_latency_sorted_micros: serve_lat,
         }
     }
 }
@@ -65,25 +168,48 @@ impl MetricsSnapshot {
         }
         self.sim_cycles as f64 * pes as f64 / (self.wall_micros as f64 * 1e-6)
     }
+
+    /// Per-job wall-time percentile in milliseconds (nearest rank over
+    /// the stable sorted view).
+    pub fn job_wall_percentile_ms(&self, p: f64) -> f64 {
+        percentile_micros(&self.job_wall_sorted_micros, p) as f64 * 1e-3
+    }
+
+    /// Per-request serve-latency percentile in milliseconds.
+    pub fn serve_latency_percentile_ms(&self, p: f64) -> f64 {
+        percentile_micros(&self.serve_latency_sorted_micros, p) as f64 * 1e-3
+    }
+
+    /// Result-cache hit rate in [0, 1]; 0 when no lookups were made.
+    pub fn cache_hit_rate(&self) -> f64 {
+        if self.cache_lookups == 0 {
+            return 0.0;
+        }
+        self.cache_hits as f64 / self.cache_lookups as f64
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::arch::SaConfig;
     use crate::gemm::Matrix;
     use crate::sim::SaStats;
-    use crate::arch::SaConfig;
 
-    #[test]
-    fn record_and_rates() {
-        let m = Metrics::default();
+    fn dummy_sim() -> GemmSim {
         let sa = SaConfig::new_ws(4, 4, 8).unwrap();
-        let sim = GemmSim {
+        GemmSim {
             y: Matrix::zeros(1, 1),
             stats: SaStats::new(&sa),
             cycles: 1000,
             macs: 5000,
-        };
+        }
+    }
+
+    #[test]
+    fn record_and_rates() {
+        let m = Metrics::default();
+        let sim = dummy_sim();
         m.record_job(&sim, 0.5);
         m.record_job(&sim, 0.5);
         let s = m.snapshot();
@@ -99,5 +225,60 @@ mod tests {
         let s = Metrics::default().snapshot();
         assert_eq!(s.macs_per_sec(), 0.0);
         assert_eq!(s.pe_cycles_per_sec(1024), 0.0);
+        assert_eq!(s.cache_hit_rate(), 0.0);
+        assert_eq!(s.job_wall_percentile_ms(0.5), 0.0);
+        assert_eq!(s.serve_latency_percentile_ms(0.99), 0.0);
+    }
+
+    #[test]
+    fn snapshot_is_arrival_order_independent() {
+        // The satellite fix: identical multisets recorded in different
+        // orders (as happens under fan-out) produce identical snapshots.
+        let walls = [0.004, 0.001, 0.003, 0.002, 0.005];
+        let sim = dummy_sim();
+        let forward = Metrics::default();
+        for w in walls {
+            forward.record_job(&sim, w);
+        }
+        let backward = Metrics::default();
+        for w in walls.iter().rev() {
+            backward.record_job(&sim, *w);
+        }
+        assert_eq!(forward.snapshot(), backward.snapshot());
+        let view = forward.snapshot().job_wall_sorted_micros;
+        assert_eq!(view, vec![1000, 2000, 3000, 4000, 5000]);
+    }
+
+    #[test]
+    fn percentiles_nearest_rank() {
+        let sorted = [10u64, 20, 30, 40, 50];
+        assert_eq!(percentile_micros(&sorted, 0.0), 10);
+        assert_eq!(percentile_micros(&sorted, 0.5), 30);
+        assert_eq!(percentile_micros(&sorted, 1.0), 50);
+        assert_eq!(percentile_micros(&sorted, 0.9), 50);
+        assert_eq!(percentile_micros(&[], 0.5), 0);
+    }
+
+    #[test]
+    fn cache_counters() {
+        let m = Metrics::default();
+        m.record_cache_lookup(true);
+        m.record_cache_lookup(false);
+        m.record_cache_lookup(true);
+        let s = m.snapshot();
+        assert_eq!(s.cache_lookups, 3);
+        assert_eq!(s.cache_hits, 2);
+        assert!((s.cache_hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn serve_latencies_sorted() {
+        let m = Metrics::default();
+        for l in [0.003, 0.001, 0.002] {
+            m.record_serve_latency(l);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.serve_latency_sorted_micros, vec![1000, 2000, 3000]);
+        assert!((s.serve_latency_percentile_ms(0.5) - 2.0).abs() < 1e-9);
     }
 }

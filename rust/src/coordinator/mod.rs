@@ -233,11 +233,10 @@ impl Coordinator {
     }
 }
 
-/// Available CPUs (1 if the platform cannot tell).
+/// Available CPUs (1 if the platform cannot tell); honors the
+/// `ASYMM_SA_TEST_THREADS` CI override (see [`crate::util::effective_cpus`]).
 fn available_cpus() -> usize {
-    std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1)
+    crate::util::effective_cpus()
 }
 
 #[cfg(test)]

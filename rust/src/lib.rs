@@ -21,10 +21,11 @@
 //!   simulator with exact per-wire toggle counting ([`sim`]), floorplan
 //!   geometry + optimizer ([`floorplan`]), 28 nm-like power model
 //!   ([`power`]), workload + tiling pipeline ([`workloads`], [`gemm`]),
-//!   thread-pool coordinator ([`coordinator`]), PJRT runtime that
-//!   executes the AOT artifacts ([`runtime`]), figure/table regeneration
-//!   ([`report`]) and self-contained substrates ([`util`],
-//!   [`bench_util`]) for the fully-offline build.
+//!   thread-pool coordinator ([`coordinator`]), serving front-end with
+//!   shape-coalesced batching and a memoized result cache ([`serve`]),
+//!   PJRT runtime that executes the AOT artifacts ([`runtime`]),
+//!   figure/table regeneration ([`report`]) and self-contained
+//!   substrates ([`util`], [`bench_util`]) for the fully-offline build.
 //!
 //! ## Features
 //!
@@ -71,6 +72,7 @@ pub mod power;
 pub mod quant;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod util;
 pub mod workloads;

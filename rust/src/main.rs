@@ -6,6 +6,8 @@
 //! * `table1`   — print Table I;
 //! * `fig3`     — emit the symmetric/asymmetric 8×8 layouts (SVG+ASCII);
 //! * `run`      — the Fig. 4/5 experiment (the headline reproduction);
+//! * `serve`    — seeded serving scenario through the serve subsystem
+//!   (shape-coalesced batching + memoized result cache);
 //! * `sweep`    — aspect-ratio sweep of the interconnect model;
 //! * `verify`   — cycle-accurate vs analytic engine cross-check.
 //!
@@ -48,6 +50,16 @@ COMMANDS
   report     run the full experiment and write a markdown report
                --out <f>       output file (default out/REPORT.md)
                --no-runtime    skip the PJRT path
+  serve      seeded serving scenario: shape-coalesced batching + result
+             cache through the serve subsystem; prints latency
+             percentiles and the cache hit rate
+               --requests <n>  request count (default 96)
+               --seed <n>      scenario seed (default 2023)
+               --workers <n>   coordinator workers (default 0 = auto)
+               --window <n>    batch admission window (default 16)
+               --cache <n>     result-cache entries (default 24)
+               --unique <n>    input variants per layer (default 4)
+               --json <f>      summary JSON path (default SERVE_summary.json)
   sweep      aspect-ratio sweep of the interconnect model
                --points <n>    sweep points (default 25)
   verify     cross-check cycle-accurate vs analytic engines
@@ -155,6 +167,18 @@ fn run_cli(args: &[String]) -> Result<(), String> {
             report_cmd(
                 f.path("out").unwrap_or_else(|| PathBuf::from("out/REPORT.md")),
                 f.flag("no-runtime"),
+            )
+        }
+        "serve" => {
+            let f = Flags::parse(rest, &[])?;
+            serve(
+                f.usize("requests", 96)?,
+                f.usize("seed", 2023)? as u64,
+                f.usize("workers", 0)?,
+                f.usize("window", 16)?,
+                f.usize("cache", 24)?,
+                f.usize("unique", 4)?,
+                f.path("json").unwrap_or_else(|| PathBuf::from("SERVE_summary.json")),
             )
         }
         "sweep" => {
@@ -300,6 +324,73 @@ fn report_cmd(out_path: PathBuf, no_runtime: bool) -> Result<(), String> {
     std::fs::write(&out_path, &md).map_err(|e| e.to_string())?;
     println!("{md}");
     println!("wrote {}", out_path.display());
+    Ok(())
+}
+
+#[allow(clippy::too_many_arguments)]
+fn serve(
+    requests: usize,
+    seed: u64,
+    workers: usize,
+    window: usize,
+    cache: usize,
+    unique: usize,
+    json: PathBuf,
+) -> Result<(), String> {
+    use asymm_sa::bench_util::Bench;
+    use asymm_sa::serve::{run_scenario, ScenarioConfig, ServeConfig, Server};
+
+    let sa = SaConfig::paper_32x32();
+    let server = Server::new(ServeConfig {
+        sa: sa.clone(),
+        workers,
+        cache_capacity: cache,
+        window,
+    });
+    let (layer_workers, intra) = server.coordinator().negotiate(window.max(1));
+    println!(
+        "serve: 32x32 WS array, {} workers ({} layer x {} intra per full window), \
+         window {}, cache {} entries",
+        server.coordinator().workers(),
+        layer_workers,
+        intra,
+        window,
+        cache
+    );
+
+    let scn = ScenarioConfig {
+        seed,
+        requests,
+        unique_inputs: unique,
+    };
+    let mix = asymm_sa::serve::session::serving_mix();
+    let (responses, sum) = run_scenario(&server, &scn, &mix).map_err(|e| e.to_string())?;
+
+    println!("{sum}");
+    let silicon_s: f64 = responses.iter().map(|r| r.sim.silicon_seconds(&sa)).sum();
+    println!(
+        "modeled silicon time at {:.1} GHz: {:.3} ms total across responses",
+        sa.clock_ghz,
+        silicon_s * 1e3
+    );
+
+    // Machine-readable summary next to BENCH_sim.json (CI artifact).
+    let mut b = Bench::new("serve");
+    b.note("requests", sum.requests as f64);
+    b.note("sim_jobs", sum.jobs as f64);
+    b.note("wall_secs", sum.wall_secs);
+    b.note("req_per_sec", sum.req_per_sec);
+    b.note("macs_per_sec", sum.macs_per_sec);
+    b.note("p50_ms", sum.p50_ms);
+    b.note("p90_ms", sum.p90_ms);
+    b.note("p99_ms", sum.p99_ms);
+    b.note("max_ms", sum.max_ms);
+    b.note("cache_hits", sum.cache.hits as f64);
+    b.note("cache_misses", sum.cache.misses as f64);
+    b.note("cache_hit_rate", sum.cache.hit_rate());
+    b.note("cache_evictions", sum.cache.evictions as f64);
+    b.note("cache_capacity", cache as f64);
+    b.write_json(&json).map_err(|e| e.to_string())?;
     Ok(())
 }
 

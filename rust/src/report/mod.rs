@@ -234,6 +234,14 @@ pub fn markdown_report(
         out.metrics.pe_cycles_per_sec(cfg.sa.num_pes()) / 1e9,
         out.used_runtime
     );
+    // Stable sorted-view percentiles (deterministic at any worker count).
+    let _ = writeln!(
+        s,
+        "Per-job sim wall time: p50 {:.2} ms, p99 {:.2} ms over {} jobs.",
+        out.metrics.job_wall_percentile_ms(0.50),
+        out.metrics.job_wall_percentile_ms(0.99),
+        out.metrics.job_wall_sorted_micros.len(),
+    );
     s
 }
 

@@ -47,8 +47,10 @@ pub struct ExperimentOutput {
 /// Build the quantized GEMM operands for one layer.
 ///
 /// Returns `(a_q, w_q)`: int16 im2col patches `P×CK²` and weights
-/// `CK²×M`, the exact words the array buses carry.
-fn layer_operands(
+/// `CK²×M`, the exact words the array buses carry. Public because the
+/// serve scenario generator ([`crate::serve::session`]) lowers its
+/// request mix through the same path.
+pub fn layer_operands(
     layer: &ConvLayer,
     gen: &mut SynthGen,
     runtime: Option<&Runtime>,
@@ -81,12 +83,13 @@ fn layer_operands(
     Ok((a_q, w_mat.transpose()))
 }
 
-/// Run the full Table-I experiment and produce the Fig. 4/5 rows.
-pub fn run_experiment(
+/// Lower `layers` into coordinator jobs: one seeded generator pass over
+/// the whole list, operands via [`layer_operands`].
+fn layer_jobs(
     cfg: &ExperimentConfig,
     layers: &[ConvLayer],
     runtime: Option<&Runtime>,
-) -> Result<ExperimentOutput> {
+) -> Result<Vec<LayerJob>> {
     let mut gen = SynthGen::new(cfg.seed);
     let mut jobs = Vec::with_capacity(layers.len());
     for layer in layers {
@@ -97,7 +100,16 @@ pub fn run_experiment(
             w: Arc::new(w_q),
         });
     }
+    Ok(jobs)
+}
 
+/// Run the full Table-I experiment and produce the Fig. 4/5 rows.
+pub fn run_experiment(
+    cfg: &ExperimentConfig,
+    layers: &[ConvLayer],
+    runtime: Option<&Runtime>,
+) -> Result<ExperimentOutput> {
+    let jobs = layer_jobs(cfg, layers, runtime)?;
     let coord = Coordinator::new(&cfg.sa, cfg.workers);
     let results = coord.run_blocking(jobs)?;
 

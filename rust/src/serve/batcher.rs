@@ -1,0 +1,133 @@
+//! Shape-coalescing batcher: groups requests with identical GEMM shape.
+//!
+//! [`crate::coordinator::Coordinator::negotiate`] splits the machine
+//! between layer-level fan-out and intra-GEMM column sharding *per
+//! batch*, assuming the batch is roughly cost-uniform: a handful of big
+//! jobs gets few workers × many intra threads, a wide batch gets the
+//! opposite. A request stream that trickles in as singletons defeats
+//! this — every `run([job])` negotiates `(1, cpus)` and pays the
+//! scoped-thread setup per request. Coalescing same-shape requests into
+//! one submission makes the cost-uniformity assumption *true by
+//! construction* (same `(M, K, N)` ⇒ same pass count ⇒ same work), so
+//! negotiation sees wide batches and amortizes fan-out across them.
+
+use std::collections::HashMap;
+
+use crate::gemm::Matrix;
+
+/// GEMM shape `(M, K, N)` — the coalescing key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ShapeKey {
+    /// Streamed activation rows `M`.
+    pub m: usize,
+    /// Reduction depth `K`.
+    pub k: usize,
+    /// Output channels `N`.
+    pub n: usize,
+}
+
+impl ShapeKey {
+    /// Shape of the GEMM `a @ w`.
+    pub fn of(a: &Matrix<i32>, w: &Matrix<i32>) -> ShapeKey {
+        ShapeKey {
+            m: a.rows,
+            k: a.cols,
+            n: w.cols,
+        }
+    }
+
+    /// Useful MACs of one GEMM of this shape.
+    pub fn macs(&self) -> u64 {
+        self.m as u64 * self.k as u64 * self.n as u64
+    }
+}
+
+impl std::fmt::Display for ShapeKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}x{}x{}", self.m, self.k, self.n)
+    }
+}
+
+/// One coalesced group: indices (into the caller's slice) of all items
+/// sharing `shape`, in arrival order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShapeGroup {
+    /// Common GEMM shape.
+    pub shape: ShapeKey,
+    /// Arrival-order indices of the group's members.
+    pub indices: Vec<usize>,
+}
+
+/// Coalesce items into shape groups, preserving first-arrival order of
+/// groups and arrival order within each group — fully deterministic for
+/// a given input sequence.
+pub fn coalesce_by_shape<T>(items: &[T], shape_of: impl Fn(&T) -> ShapeKey) -> Vec<ShapeGroup> {
+    let mut groups: Vec<ShapeGroup> = Vec::new();
+    let mut index: HashMap<ShapeKey, usize> = HashMap::new();
+    for (i, item) in items.iter().enumerate() {
+        let shape = shape_of(item);
+        match index.get(&shape) {
+            Some(&g) => groups[g].indices.push(i),
+            None => {
+                index.insert(shape, groups.len());
+                groups.push(ShapeGroup {
+                    shape,
+                    indices: vec![i],
+                });
+            }
+        }
+    }
+    groups
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sk(m: usize, k: usize, n: usize) -> ShapeKey {
+        ShapeKey { m, k, n }
+    }
+
+    #[test]
+    fn groups_preserve_arrival_order() {
+        let shapes = [
+            sk(8, 4, 4),
+            sk(2, 2, 2),
+            sk(8, 4, 4),
+            sk(2, 2, 2),
+            sk(8, 4, 4),
+        ];
+        let groups = coalesce_by_shape(&shapes, |s| *s);
+        assert_eq!(groups.len(), 2);
+        assert_eq!(groups[0].shape, sk(8, 4, 4));
+        assert_eq!(groups[0].indices, vec![0, 2, 4]);
+        assert_eq!(groups[1].shape, sk(2, 2, 2));
+        assert_eq!(groups[1].indices, vec![1, 3]);
+    }
+
+    #[test]
+    fn distinct_shapes_stay_apart() {
+        // Same MAC count, different shape — must not coalesce.
+        let shapes = [sk(4, 2, 2), sk(2, 4, 2), sk(2, 2, 4)];
+        let groups = coalesce_by_shape(&shapes, |s| *s);
+        assert_eq!(groups.len(), 3);
+        assert!(groups.iter().all(|g| g.indices.len() == 1));
+        assert_eq!(shapes[0].macs(), shapes[1].macs());
+    }
+
+    #[test]
+    fn shape_of_matrices() {
+        let a = Matrix::<i32>::zeros(5, 3);
+        let w = Matrix::<i32>::zeros(3, 7);
+        let s = ShapeKey::of(&a, &w);
+        assert_eq!((s.m, s.k, s.n), (5, 3, 7));
+        assert_eq!(s.macs(), 105);
+        assert_eq!(s.to_string(), "5x3x7");
+    }
+
+    #[test]
+    fn empty_input() {
+        let groups = coalesce_by_shape(&[] as &[ShapeKey], |s| *s);
+        assert!(groups.is_empty());
+    }
+}

@@ -1,0 +1,404 @@
+//! First-class serving: shape-coalesced batching + memoized results.
+//!
+//! This module promotes the old `serve_demo` loop into the crate's
+//! scaling layer: a [`Server`] accepts streams of conv-layer inference
+//! requests (already lowered to quantized GEMMs) and answers them
+//! through three stages:
+//!
+//! 1. **Result cache** ([`cache`]) — a bounded LRU keyed by
+//!    `(SaConfig fingerprint, dataflow, GEMM shape, input digest)`.
+//!    Simulation is a pure function of that key, so repeat traffic (the
+//!    dominant pattern when re-evaluating the same Table-I layers under
+//!    many configurations) returns the memoized toggle/power statistics
+//!    bit-identically, without re-simulation. Hits are `Arc` clones of
+//!    the original [`GemmSim`] — equality with a cold run is asserted by
+//!    `tests/serve_cache.rs`.
+//! 2. **Shape-coalescing batcher** ([`batcher`]) — cache misses with
+//!    identical GEMM shape are submitted to the [`Coordinator`] as one
+//!    batch. Why this composes with [`Coordinator::negotiate`]: the
+//!    negotiator splits the machine between layer fan-out and intra-GEMM
+//!    sharding assuming batch cost-uniformity, and identical shape means
+//!    identical pass structure, so a coalesced batch is cost-uniform by
+//!    construction — `negotiate` sees one wide batch (few intra threads,
+//!    full fan-out) instead of N singletons that would each negotiate
+//!    `(1, cpus)` and pay scoped-thread setup per request.
+//! 3. **Coordinator** — the existing leader/worker pool; unchanged.
+//!
+//! Per-request latencies and cache hit rates land in the coordinator's
+//! [`Metrics`](crate::coordinator::Metrics) as stable sorted views, so
+//! reported percentiles are deterministic across worker counts.
+//!
+//! The `repro serve` subcommand runs a seeded deterministic scenario
+//! through this module ([`session`]) and emits a JSON summary;
+//! `examples/serve_demo.rs` is a thin client of the same API.
+
+pub mod batcher;
+pub mod cache;
+pub mod session;
+
+pub use batcher::{coalesce_by_shape, ShapeGroup, ShapeKey};
+pub use cache::{operand_digest, sa_fingerprint, CacheKey, CacheStats, ResultCache};
+pub use session::{build_requests, run_scenario, ScenarioConfig, ServeSummary};
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::arch::SaConfig;
+use crate::coordinator::{Coordinator, LayerJob, Metrics};
+use crate::error::Result;
+use crate::gemm::Matrix;
+use crate::sim::GemmSim;
+
+/// Serving configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Array configuration every request is simulated on.
+    pub sa: SaConfig,
+    /// Coordinator workers (0 = all CPUs, negotiated per batch).
+    pub workers: usize,
+    /// Result-cache bound in entries (0 disables memoization).
+    pub cache_capacity: usize,
+    /// Max requests drained per batch window by
+    /// [`Server::process_stream`].
+    pub window: usize,
+}
+
+impl ServeConfig {
+    /// Defaults for an array: auto workers, 32-entry cache, window 16.
+    pub fn new(sa: SaConfig) -> Self {
+        ServeConfig {
+            sa,
+            workers: 0,
+            cache_capacity: 32,
+            window: 16,
+        }
+    }
+}
+
+/// One inference request, already lowered to a quantized GEMM
+/// (`a: M×K` activations/patches, `w: K×N` weights).
+#[derive(Debug, Clone)]
+pub struct InferRequest {
+    /// Client-chosen request id (echoed in the response).
+    pub id: u64,
+    /// Layer/request name (reporting key).
+    pub name: String,
+    /// Quantized activations, `M×K`.
+    pub a: Arc<Matrix<i32>>,
+    /// Quantized weights, `K×N`.
+    pub w: Arc<Matrix<i32>>,
+}
+
+impl InferRequest {
+    /// GEMM shape of this request.
+    pub fn shape(&self) -> ShapeKey {
+        ShapeKey::of(&self.a, &self.w)
+    }
+}
+
+/// One completed response.
+#[derive(Debug, Clone)]
+pub struct InferResponse {
+    /// Request id.
+    pub id: u64,
+    /// Request name.
+    pub name: String,
+    /// GEMM shape served.
+    pub shape: ShapeKey,
+    /// Full simulation result (outputs + exact bus statistics). Cache
+    /// hits share the allocation of the original cold simulation.
+    pub sim: Arc<GemmSim>,
+    /// Whether the result came from the cache.
+    pub cache_hit: bool,
+    /// Wall-clock seconds from batch admission to completion.
+    pub latency_secs: f64,
+}
+
+/// Request-driven serving front-end over a [`Coordinator`].
+pub struct Server {
+    cfg: ServeConfig,
+    coord: Coordinator,
+    cache: Mutex<ResultCache>,
+    sa_fp: u64,
+}
+
+impl Server {
+    /// New server; owns a coordinator pool and a result cache.
+    pub fn new(cfg: ServeConfig) -> Self {
+        let coord = Coordinator::new(&cfg.sa, cfg.workers);
+        let cache = Mutex::new(ResultCache::new(cfg.cache_capacity));
+        let sa_fp = sa_fingerprint(&cfg.sa);
+        Server {
+            cfg,
+            coord,
+            cache,
+            sa_fp,
+        }
+    }
+
+    /// Serving configuration.
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    /// Shared metrics handle (latency percentiles, cache hit rate).
+    pub fn metrics(&self) -> Arc<Metrics> {
+        self.coord.metrics()
+    }
+
+    /// Underlying coordinator (negotiation introspection).
+    pub fn coordinator(&self) -> &Coordinator {
+        &self.coord
+    }
+
+    /// Point-in-time cache statistics.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.lock().expect("cache poisoned").stats()
+    }
+
+    /// Cache key of a request on this server's array.
+    ///
+    /// Digests both operand matrices on every call — deliberately not
+    /// memoized by `Arc` pointer identity (a freed-and-reused
+    /// allocation would alias a stale digest into a wrong cached
+    /// result). The scan is linear in operand bytes and orders of
+    /// magnitude cheaper than the simulation a hit avoids.
+    pub fn cache_key(&self, req: &InferRequest) -> CacheKey {
+        let s = req.shape();
+        CacheKey {
+            sa_fingerprint: self.sa_fp,
+            shape: (s.m, s.k, s.n),
+            input_digest: operand_digest(req.a.rows, req.a.cols, &req.a.data, req.w.cols, &req.w.data),
+        }
+    }
+
+    /// Serve one admitted batch: cache lookups first, then misses
+    /// deduplicated by key and coalesced by shape into coordinator
+    /// submissions. Responses come back in request order.
+    pub fn process_batch(&self, requests: &[InferRequest]) -> Result<Vec<InferResponse>> {
+        let t0 = Instant::now();
+        let metrics = self.coord.metrics();
+        let keys: Vec<CacheKey> = requests.iter().map(|r| self.cache_key(r)).collect();
+
+        // Stage 1: cache. One lock for the whole admitted batch.
+        let mut sims: Vec<Option<Arc<GemmSim>>> = vec![None; requests.len()];
+        {
+            let mut cache = self.cache.lock().expect("cache poisoned");
+            for (i, key) in keys.iter().enumerate() {
+                sims[i] = cache.get(key);
+                metrics.record_cache_lookup(sims[i].is_some());
+            }
+        }
+        let hit_latency = t0.elapsed().as_secs_f64();
+
+        // Stage 2: dedup misses by key — one simulation per distinct
+        // key, fanned out to every requester (including intra-batch
+        // duplicates that arrived before the first result existed).
+        let mut unique: Vec<usize> = Vec::new(); // first requester index per key
+        let mut owner: Vec<usize> = vec![usize::MAX; requests.len()]; // -> position in `unique`
+        for i in 0..requests.len() {
+            if sims[i].is_some() {
+                continue;
+            }
+            match unique.iter().position(|&u| keys[u] == keys[i]) {
+                Some(p) => owner[i] = p,
+                None => {
+                    owner[i] = unique.len();
+                    unique.push(i);
+                }
+            }
+        }
+
+        // Stage 3: coalesce distinct misses by shape; each group is one
+        // cost-uniform coordinator batch.
+        let mut group_latency: Vec<f64> = vec![0.0; unique.len()];
+        let mut results: Vec<Option<Arc<GemmSim>>> = vec![None; unique.len()];
+        let groups = coalesce_by_shape(&unique, |&u| requests[u].shape());
+        for group in &groups {
+            let jobs: Vec<LayerJob> = group
+                .indices
+                .iter()
+                .map(|&gi| {
+                    let req = &requests[unique[gi]];
+                    LayerJob {
+                        name: req.name.clone(),
+                        a: Arc::clone(&req.a),
+                        w: Arc::clone(&req.w),
+                    }
+                })
+                .collect();
+            let batch = self.coord.run(jobs)?;
+            let done = t0.elapsed().as_secs_f64();
+            let mut cache = self.cache.lock().expect("cache poisoned");
+            for (&gi, res) in group.indices.iter().zip(batch) {
+                let sim = Arc::new(res.sim);
+                cache.insert(keys[unique[gi]], Arc::clone(&sim));
+                results[gi] = Some(sim);
+                group_latency[gi] = done;
+            }
+        }
+
+        // Stage 4: responses in request order.
+        let mut out = Vec::with_capacity(requests.len());
+        for (i, req) in requests.iter().enumerate() {
+            let (sim, cache_hit, latency) = match sims[i].take() {
+                Some(sim) => (sim, true, hit_latency),
+                None => {
+                    let p = owner[i];
+                    let sim = Arc::clone(results[p].as_ref().expect("miss simulated"));
+                    // Duplicates of a simulated key are not cache hits:
+                    // they were admitted before the result existed.
+                    (sim, false, group_latency[p])
+                }
+            };
+            metrics.record_serve_latency(latency);
+            out.push(InferResponse {
+                id: req.id,
+                name: req.name.clone(),
+                shape: req.shape(),
+                sim,
+                cache_hit,
+                latency_secs: latency,
+            });
+        }
+        Ok(out)
+    }
+
+    /// Serve a request stream in admission windows of
+    /// [`ServeConfig::window`] requests (the batching horizon: a larger
+    /// window coalesces more, a smaller one bounds per-request queueing
+    /// delay). Responses are returned in request order.
+    pub fn process_stream(&self, requests: &[InferRequest]) -> Result<Vec<InferResponse>> {
+        let window = self.cfg.window.max(1);
+        let mut out = Vec::with_capacity(requests.len());
+        for chunk in requests.chunks(window) {
+            out.extend(self.process_batch(chunk)?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::fast::simulate_gemm_fast;
+    use crate::util::rng::Rng;
+
+    fn rand_mat(rows: usize, cols: usize, seed: u64) -> Arc<Matrix<i32>> {
+        let mut rng = Rng::new(seed);
+        let data = (0..rows * cols)
+            .map(|_| rng.int_range(-100, 100) as i32)
+            .collect();
+        Arc::new(Matrix::from_vec(rows, cols, data).unwrap())
+    }
+
+    fn server(cache: usize) -> Server {
+        let sa = SaConfig::new_ws(4, 4, 8).unwrap();
+        Server::new(ServeConfig {
+            sa,
+            workers: 2,
+            cache_capacity: cache,
+            window: 4,
+        })
+    }
+
+    fn req(id: u64, a_seed: u64, shape: (usize, usize, usize)) -> InferRequest {
+        let (m, k, n) = shape;
+        InferRequest {
+            id,
+            name: format!("req{id}"),
+            a: rand_mat(m, k, a_seed),
+            w: rand_mat(k, n, 1000 + a_seed),
+        }
+    }
+
+    #[test]
+    fn responses_in_order_and_correct() {
+        let s = server(8);
+        let reqs: Vec<_> = (0..6).map(|i| req(i, i, (8 + i as usize, 5, 6))).collect();
+        let out = s.process_stream(&reqs).unwrap();
+        assert_eq!(out.len(), 6);
+        for (i, r) in out.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+            let want = simulate_gemm_fast(&s.config().sa, &reqs[i].a, &reqs[i].w).unwrap();
+            assert_eq!(r.sim.y, want.y);
+            assert_eq!(r.sim.stats, want.stats);
+        }
+    }
+
+    #[test]
+    fn repeat_requests_hit_the_cache() {
+        let s = server(8);
+        let reqs: Vec<_> = (0..4).map(|i| req(i, 7, (6, 4, 4))).collect(); // identical
+        let first = s.process_batch(&reqs[..1].to_vec()).unwrap();
+        assert!(!first[0].cache_hit);
+        let again = s.process_batch(&reqs).unwrap();
+        assert!(again.iter().all(|r| r.cache_hit));
+        for r in &again {
+            assert_eq!(r.sim.y, first[0].sim.y);
+            assert_eq!(r.sim.stats, first[0].sim.stats);
+            assert_eq!(r.sim.cycles, first[0].sim.cycles);
+        }
+        let stats = s.cache_stats();
+        assert_eq!(stats.hits, 4);
+        assert!(s.metrics().snapshot().cache_hit_rate() > 0.0);
+    }
+
+    #[test]
+    fn intra_batch_duplicates_simulate_once() {
+        let s = server(8);
+        let reqs: Vec<_> = (0..3).map(|i| req(i, 9, (5, 3, 3))).collect();
+        let out = s.process_batch(&reqs).unwrap();
+        // Not hits (no result existed at admission), but one simulation.
+        assert!(out.iter().all(|r| !r.cache_hit));
+        assert_eq!(s.metrics().snapshot().jobs, 1);
+        assert!(Arc::ptr_eq(&out[0].sim, &out[1].sim));
+        assert!(Arc::ptr_eq(&out[0].sim, &out[2].sim));
+    }
+
+    #[test]
+    fn disabled_cache_still_serves_correctly() {
+        let s = server(0);
+        let reqs: Vec<_> = (0..3).map(|i| req(i, 3, (6, 4, 4))).collect();
+        let out = s.process_stream(&reqs).unwrap();
+        assert!(out.iter().all(|r| !r.cache_hit));
+        // Distinct submissions simulate every time.
+        let out2 = s.process_stream(&reqs[..1]).unwrap();
+        assert_eq!(out2[0].sim.y, out[0].sim.y);
+        assert_eq!(s.cache_stats().len, 0);
+    }
+
+    #[test]
+    fn mixed_shapes_coalesce_into_groups() {
+        let s = server(16);
+        // 4 of shape A, 2 of shape B, interleaved.
+        let reqs = vec![
+            req(0, 0, (6, 4, 4)),
+            req(1, 10, (3, 2, 5)),
+            req(2, 1, (6, 4, 4)),
+            req(3, 11, (3, 2, 5)),
+            req(4, 2, (6, 4, 4)),
+            req(5, 3, (6, 4, 4)),
+        ];
+        let out = s.process_batch(&reqs).unwrap();
+        assert_eq!(out.len(), 6);
+        for (r, q) in out.iter().zip(&reqs) {
+            assert_eq!(r.shape, q.shape());
+            let want = simulate_gemm_fast(&s.config().sa, &q.a, &q.w).unwrap();
+            assert_eq!(r.sim.y, want.y);
+        }
+        assert_eq!(s.metrics().snapshot().jobs, 6);
+    }
+
+    #[test]
+    fn bad_request_surfaces_error() {
+        let s = server(4);
+        let bad = InferRequest {
+            id: 0,
+            name: "bad".into(),
+            a: rand_mat(4, 5, 1),
+            w: rand_mat(6, 4, 2), // inner mismatch
+        };
+        assert!(s.process_batch(&[bad]).is_err());
+    }
+}

@@ -1,0 +1,291 @@
+//! Seeded serving scenarios: deterministic request streams + summaries.
+//!
+//! `repro serve` and `examples/serve_demo.rs` both need the same thing:
+//! a reproducible stream of conv-layer inference requests with enough
+//! repeat traffic to exercise the result cache, and a compact summary
+//! (latency percentiles, hit rate, throughput) computed from the
+//! coordinator's stable sorted metrics views. This module provides both
+//! so the CLI and the example stay thin clients of [`super::Server`].
+//!
+//! Determinism: the operand pool (one `(activations, weights)` pair per
+//! `(layer, variant)`) is generated eagerly in a fixed order with seeds
+//! derived from the scenario seed, and the request sequence is a second
+//! independent seeded draw — so the stream, the coalescing decisions and
+//! the cache hit pattern are identical on every run and at every worker
+//! count. Only wall-clock latency *values* vary run to run; their
+//! percentile computation is order-stable (see
+//! [`crate::coordinator::Metrics`]).
+
+use std::sync::Arc;
+
+use crate::error::Result;
+use crate::gemm::Matrix;
+use crate::report::pipeline::layer_operands;
+use crate::util::rng::Rng;
+use crate::workloads::{ActivationModel, ConvLayer, SynthGen};
+
+use super::{CacheStats, InferRequest, InferResponse, Server};
+
+/// Scenario shape: how many requests, over how many distinct inputs.
+#[derive(Debug, Clone)]
+pub struct ScenarioConfig {
+    /// Scenario seed (operand pool + request sequence).
+    pub seed: u64,
+    /// Total requests in the stream.
+    pub requests: usize,
+    /// Distinct activation variants per layer: repeats of a variant are
+    /// the cache's repeat traffic. With `requests ≫ layers × variants`
+    /// the hit rate is deterministically nonzero.
+    pub unique_inputs: usize,
+}
+
+impl Default for ScenarioConfig {
+    fn default() -> Self {
+        ScenarioConfig {
+            seed: 2023,
+            requests: 96,
+            unique_inputs: 4,
+        }
+    }
+}
+
+/// The default request mix: small conv layers of three sizes
+/// (edge-inference-ish; same shapes the old serve_demo used).
+pub fn serving_mix() -> Vec<ConvLayer> {
+    let mk = |name: &str, k, hw, c, m| ConvLayer {
+        name: name.into(),
+        k,
+        h: hw,
+        w: hw,
+        c,
+        m,
+        stride: 1,
+    };
+    vec![
+        mk("tiny-1x1", 1, 14, 64, 64),
+        mk("mid-3x3", 3, 14, 32, 64),
+        mk("wide-1x1", 1, 28, 128, 64),
+    ]
+}
+
+/// Mix the scenario seed with a `(layer, variant)` coordinate.
+fn pool_seed(seed: u64, layer: usize, variant: usize) -> u64 {
+    seed ^ (layer as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ (variant as u64 + 1).wrapping_mul(0xBF58_476D_1CE4_E5B9)
+}
+
+/// Build the deterministic request stream for a scenario.
+///
+/// Requests round-robin over `mix`; each draws one of
+/// [`ScenarioConfig::unique_inputs`] precomputed operand variants, so
+/// identical variants are `Arc`-shared (and digest-identical — the
+/// cache sees genuine repeat traffic).
+pub fn build_requests(scn: &ScenarioConfig, mix: &[ConvLayer]) -> Result<Vec<InferRequest>> {
+    assert!(!mix.is_empty(), "scenario needs a non-empty layer mix");
+    let variants = scn.unique_inputs.max(1);
+    let model = ActivationModel::default();
+
+    // Operand pool, fixed generation order (layer-major, then variant).
+    let mut pool: Vec<Vec<(Arc<Matrix<i32>>, Arc<Matrix<i32>>)>> = Vec::with_capacity(mix.len());
+    for (li, layer) in mix.iter().enumerate() {
+        let mut per_layer = Vec::with_capacity(variants);
+        for v in 0..variants {
+            let mut gen = SynthGen::new(pool_seed(scn.seed, li, v));
+            let (a, w) = layer_operands(layer, &mut gen, None, &model)?;
+            per_layer.push((Arc::new(a), Arc::new(w)));
+        }
+        pool.push(per_layer);
+    }
+
+    // Request sequence: independent draw over the pool.
+    let mut seq = Rng::new(scn.seed ^ 0x00A1_1CE5_5E1E_C7ED);
+    let mut requests = Vec::with_capacity(scn.requests);
+    for i in 0..scn.requests {
+        let li = i % mix.len();
+        let v = seq.index(0, variants);
+        let (a, w) = &pool[li][v];
+        requests.push(InferRequest {
+            id: i as u64,
+            name: format!("req{:03}:{}:v{}", i, mix[li].name, v),
+            a: Arc::clone(a),
+            w: Arc::clone(w),
+        });
+    }
+    Ok(requests)
+}
+
+/// Compact scenario outcome: what `repro serve` prints and serializes.
+#[derive(Debug, Clone)]
+pub struct ServeSummary {
+    /// Requests served.
+    pub requests: usize,
+    /// Simulation jobs actually run (misses after dedup).
+    pub jobs: u64,
+    /// End-to-end wall seconds for the stream.
+    pub wall_secs: f64,
+    /// Requests per wall second.
+    pub req_per_sec: f64,
+    /// *Served* MACs per wall second: the useful work the serving layer
+    /// delivered, counting cached responses (whose MACs were avoided,
+    /// not re-simulated). For raw engine throughput use the metrics
+    /// snapshot's `macs` (cold simulations only).
+    pub macs_per_sec: f64,
+    /// Serve-latency percentiles in ms (stable sorted view).
+    pub p50_ms: f64,
+    /// 90th percentile (ms).
+    pub p90_ms: f64,
+    /// 99th percentile (ms).
+    pub p99_ms: f64,
+    /// Max (ms).
+    pub max_ms: f64,
+    /// Result-cache statistics.
+    pub cache: CacheStats,
+}
+
+impl std::fmt::Display for ServeSummary {
+    /// Human-readable three-line summary — the single definition both
+    /// `repro serve` and `examples/serve_demo.rs` print.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "{} requests in {:.2}s -> {:.1} req/s, {:.2} GMAC/s served ({} cold sim jobs)",
+            self.requests,
+            self.wall_secs,
+            self.req_per_sec,
+            self.macs_per_sec / 1e9,
+            self.jobs
+        )?;
+        writeln!(
+            f,
+            "serve latency: p50 {:.2} ms, p90 {:.2} ms, p99 {:.2} ms, max {:.2} ms",
+            self.p50_ms, self.p90_ms, self.p99_ms, self.max_ms
+        )?;
+        write!(
+            f,
+            "cache: {} hits / {} lookups ({:.1}% hit rate), {} evictions, {} resident",
+            self.cache.hits,
+            self.cache.hits + self.cache.misses,
+            100.0 * self.cache.hit_rate(),
+            self.cache.evictions,
+            self.cache.len
+        )
+    }
+}
+
+/// Run a scenario stream through a server and summarize it.
+///
+/// Reads the server's metrics afterwards; pass a freshly constructed
+/// server so the summary covers exactly this stream.
+pub fn run_scenario(
+    server: &Server,
+    scn: &ScenarioConfig,
+    mix: &[ConvLayer],
+) -> Result<(Vec<InferResponse>, ServeSummary)> {
+    let requests = build_requests(scn, mix)?;
+    let t0 = std::time::Instant::now();
+    let responses = server.process_stream(&requests)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let snap = server.metrics().snapshot();
+    let total_macs: u64 = responses.iter().map(|r| r.sim.macs).sum();
+    let summary = ServeSummary {
+        requests: responses.len(),
+        jobs: snap.jobs,
+        wall_secs: wall,
+        req_per_sec: responses.len() as f64 / wall.max(1e-12),
+        macs_per_sec: total_macs as f64 / wall.max(1e-12),
+        p50_ms: snap.serve_latency_percentile_ms(0.50),
+        p90_ms: snap.serve_latency_percentile_ms(0.90),
+        p99_ms: snap.serve_latency_percentile_ms(0.99),
+        max_ms: snap.serve_latency_percentile_ms(1.0),
+        cache: server.cache_stats(),
+    };
+    Ok((responses, summary))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::SaConfig;
+    use crate::serve::ServeConfig;
+
+    fn tiny_mix() -> Vec<ConvLayer> {
+        vec![
+            ConvLayer {
+                name: "t1".into(),
+                k: 1,
+                h: 6,
+                w: 6,
+                c: 8,
+                m: 8,
+                stride: 1,
+            },
+            ConvLayer {
+                name: "t2".into(),
+                k: 3,
+                h: 4,
+                w: 4,
+                c: 4,
+                m: 8,
+                stride: 1,
+            },
+        ]
+    }
+
+    fn scn(requests: usize) -> ScenarioConfig {
+        ScenarioConfig {
+            seed: 7,
+            requests,
+            unique_inputs: 2,
+        }
+    }
+
+    #[test]
+    fn request_stream_is_deterministic() {
+        let a = build_requests(&scn(12), &tiny_mix()).unwrap();
+        let b = build_requests(&scn(12), &tiny_mix()).unwrap();
+        assert_eq!(a.len(), 12);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.name, y.name);
+            assert_eq!(x.a.data, y.a.data);
+            assert_eq!(x.w.data, y.w.data);
+        }
+        // Repeat traffic exists: ≤ layers × variants distinct operand sets.
+        let mut digests: Vec<u64> = a
+            .iter()
+            .map(|r| super::super::operand_digest(r.a.rows, r.a.cols, &r.a.data, r.w.cols, &r.w.data))
+            .collect();
+        digests.sort_unstable();
+        digests.dedup();
+        assert!(digests.len() <= 4, "distinct operand sets: {}", digests.len());
+    }
+
+    #[test]
+    fn scenario_produces_hits_and_deterministic_results() {
+        let sa = SaConfig::new_ws(8, 8, 16).unwrap();
+        let mk_server = || {
+            Server::new(ServeConfig {
+                sa: sa.clone(),
+                workers: 2,
+                cache_capacity: 16,
+                window: 4,
+            })
+        };
+        let s1 = mk_server();
+        let (r1, sum1) = run_scenario(&s1, &scn(16), &tiny_mix()).unwrap();
+        assert_eq!(sum1.requests, 16);
+        assert!(sum1.cache.hits > 0, "expected repeat traffic hits");
+        assert!(sum1.cache.hit_rate() > 0.0);
+        // Re-running the same scenario on a fresh server: bit-identical
+        // responses and identical hit pattern.
+        let s2 = mk_server();
+        let (r2, sum2) = run_scenario(&s2, &scn(16), &tiny_mix()).unwrap();
+        assert_eq!(sum1.cache.hits, sum2.cache.hits);
+        assert_eq!(sum1.jobs, sum2.jobs);
+        for (x, y) in r1.iter().zip(&r2) {
+            assert_eq!(x.cache_hit, y.cache_hit);
+            assert_eq!(x.sim.y, y.sim.y);
+            assert_eq!(x.sim.stats, y.sim.stats);
+        }
+    }
+}

@@ -326,9 +326,9 @@ fn resolve_threads(requested: usize, total_macs: u64, units: usize) -> usize {
         if total_macs < INTRA_PAR_MIN_MACS {
             1
         } else {
-            std::thread::available_parallelism()
-                .map(|n| n.get())
-                .unwrap_or(1)
+            // Honors the ASYMM_SA_TEST_THREADS CI override so the
+            // single-threaded matrix leg really is single-threaded.
+            crate::util::effective_cpus()
         }
     } else {
         requested

@@ -11,3 +11,33 @@
 
 pub mod json;
 pub mod rng;
+
+/// CPUs the parallel layers may use: `ASYMM_SA_TEST_THREADS` if set to a
+/// positive integer, else the detected parallelism (1 if unknown).
+///
+/// The env override exists for the CI test matrix: running the whole
+/// suite with `ASYMM_SA_TEST_THREADS=1` pins every auto-detected thread
+/// count (coordinator workers, negotiated intra-GEMM shards) to a
+/// deterministic single-threaded schedule, so thread-count-dependent
+/// regressions show up as a diff between the two matrix legs. Explicitly
+/// pinned counts (e.g. `Coordinator::new(sa, 4)`) are never overridden.
+pub fn effective_cpus() -> usize {
+    if let Ok(v) = std::env::var("ASYMM_SA_TEST_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn effective_cpus_is_positive() {
+        assert!(super::effective_cpus() >= 1);
+    }
+}

@@ -5,7 +5,14 @@
 
 use asymm_sa::arch::SaConfig;
 use asymm_sa::gemm::{matmul_i64, Matrix};
-use asymm_sa::sim::{fast::simulate_gemm_fast, os::simulate_gemm_os, ws::WsCycleSim};
+use asymm_sa::sim::{
+    fast::simulate_gemm_fast,
+    is::{is_pass_cycles, simulate_gemm_is},
+    os::{os_pass_cycles, simulate_gemm_os},
+    pass_cycles,
+    ws::WsCycleSim,
+    SaStats,
+};
 use asymm_sa::util::rng::Rng;
 
 fn rand_operands(
@@ -116,6 +123,132 @@ fn property_os_and_ws_agree_on_outputs() {
         let os = simulate_gemm_os(&sa, &a, &w).unwrap();
         assert_eq!(ws.y, os.y);
         assert_eq!(ws.macs, os.macs);
+    }
+}
+
+/// Ragged/degenerate GEMM shapes every engine must agree on: the
+/// dataflow ablations (OS, IS) change the traffic, never the math.
+fn awkward_shapes(rows: usize, cols: usize) -> Vec<(usize, usize, usize)> {
+    vec![
+        (1, 1, 1),            // scalar product
+        (rows, 1, 1),         // R×1 column
+        (1, 1, cols),         // 1×C row
+        (1, rows - 1, 1),     // K < R reduction
+        (3, rows - 1, cols),  // K < R, full width
+        (2 * rows + 1, 1, 2 * cols + 1), // ragged both ways, K = 1
+        (5, 3 * rows, 2),     // deep reduction, narrow output
+    ]
+}
+
+#[test]
+fn property_os_and_is_agree_with_ws_on_ragged_shapes() {
+    let mut rng = Rng::new(0xA11);
+    for (rows, cols, bits) in [(4usize, 4usize, 8u32), (5, 3, 8), (8, 8, 12)] {
+        let sa = SaConfig::new_ws(rows, cols, bits).unwrap();
+        for (m, k, n) in awkward_shapes(rows, cols) {
+            let (a, w) = rand_operands(&mut rng, m, k, n, bits, 0.3);
+            let ctx = format!("{m}x{k}x{n} on {rows}x{cols} @ {bits}b");
+            let reference = matmul_i64(&a, &w).unwrap();
+            let ws = simulate_gemm_fast(&sa, &a, &w).unwrap();
+            let os = simulate_gemm_os(&sa, &a, &w).unwrap();
+            let is = simulate_gemm_is(&sa, &a, &w).unwrap();
+            assert_eq!(ws.y, reference, "{ctx}: WS outputs");
+            assert_eq!(os.y, reference, "{ctx}: OS outputs");
+            assert_eq!(is.y, reference, "{ctx}: IS outputs");
+            let macs = (m * k * n) as u64;
+            assert_eq!(ws.macs, macs, "{ctx}: WS macs");
+            assert_eq!(os.macs, macs, "{ctx}: OS macs");
+            assert_eq!(is.macs, macs, "{ctx}: IS macs");
+        }
+    }
+}
+
+/// Every wire group observes a word on every cycle of every pass — no
+/// engine may drop or double-count observations. The closed forms below
+/// are functions of the matrix dimensions only, so this pins the
+/// accounting (observations, and zero/toggle bounds per observation)
+/// against the tiling arithmetic for all three dataflows.
+fn check_word_conservation(
+    ctx: &str,
+    stats: &SaStats,
+    expect_h: u64,
+    expect_v: u64,
+    expect_wl: u64,
+) {
+    assert_eq!(stats.horizontal.observations, expect_h, "{ctx}: h obs");
+    assert_eq!(stats.vertical.observations, expect_v, "{ctx}: v obs");
+    assert_eq!(stats.weight_load.observations, expect_wl, "{ctx}: wl obs");
+    for (name, d) in [
+        ("horizontal", &stats.horizontal),
+        ("vertical", &stats.vertical),
+        ("weight_load", &stats.weight_load),
+    ] {
+        assert!(d.zero_words <= d.observations, "{ctx}: {name} zeros");
+        assert!(
+            d.toggles <= d.observations * d.bits as u64,
+            "{ctx}: {name} toggles exceed wire capacity"
+        );
+    }
+}
+
+#[test]
+fn property_engines_conserve_total_bus_words() {
+    let div_up = |a: usize, b: usize| a.div_ceil(b);
+    let mut rng = Rng::new(0xB22);
+    for (rows, cols, bits) in [(4usize, 4usize, 8u32), (5, 3, 8), (8, 8, 12)] {
+        let sa = SaConfig::new_ws(rows, cols, bits).unwrap();
+        let (r64, c64) = (rows as u64, cols as u64);
+        let mut shapes = awkward_shapes(rows, cols);
+        shapes.push((rng.index(1, 20), rng.index(1, 20), rng.index(1, 20)));
+        for (m, k, n) in shapes {
+            let (a, w) = rand_operands(&mut rng, m, k, n, bits, 0.4);
+            let ctx = format!("{m}x{k}x{n} on {rows}x{cols} @ {bits}b");
+
+            // WS: ceil(K/R)·ceil(N/C) passes of `pass_cycles(m)` cycles;
+            // data buses observe R·C words per cycle, the weight chain
+            // R words per register per pass.
+            let ws = simulate_gemm_fast(&sa, &a, &w).unwrap();
+            let ws_passes = (div_up(k, rows) * div_up(n, cols)) as u64;
+            let ws_pc = pass_cycles(&sa, m) as u64;
+            check_word_conservation(
+                &format!("WS {ctx}"),
+                &ws.stats,
+                ws_passes * ws_pc * r64 * c64,
+                ws_passes * ws_pc * r64 * c64,
+                ws_passes * r64 * r64 * c64,
+            );
+            assert_eq!(ws.cycles, ws_passes * ws_pc, "WS {ctx}: cycles");
+
+            // OS: ceil(M/R)·ceil(N/C) passes of `k + R + 1` cycles; all
+            // three groups observe R·C words per cycle (weights stream on
+            // the vertical tracks for the whole pass).
+            let os = simulate_gemm_os(&sa, &a, &w).unwrap();
+            let os_passes = (div_up(m, rows) * div_up(n, cols)) as u64;
+            let os_pc = os_pass_cycles(&sa, k) as u64;
+            check_word_conservation(
+                &format!("OS {ctx}"),
+                &os.stats,
+                os_passes * os_pc * r64 * c64,
+                os_passes * os_pc * r64 * c64,
+                os_passes * os_pc * r64 * c64,
+            );
+            assert_eq!(os.cycles, os_passes * os_pc, "OS {ctx}: cycles");
+
+            // IS: ceil(K/R)·ceil(M/C) passes of `R + N + R + C + 2`
+            // cycles; the stationary-activation preload chain observes R
+            // words per register per pass (like the WS weight chain).
+            let is = simulate_gemm_is(&sa, &a, &w).unwrap();
+            let is_passes = (div_up(k, rows) * div_up(m, cols)) as u64;
+            let is_pc = is_pass_cycles(&sa, n) as u64;
+            check_word_conservation(
+                &format!("IS {ctx}"),
+                &is.stats,
+                is_passes * is_pc * r64 * c64,
+                is_passes * is_pc * r64 * c64,
+                is_passes * r64 * r64 * c64,
+            );
+            assert_eq!(is.cycles, is_passes * is_pc, "IS {ctx}: cycles");
+        }
     }
 }
 

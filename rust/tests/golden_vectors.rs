@@ -1,0 +1,387 @@
+//! Golden-vector regression tier: exact per-layer bus statistics for the
+//! paper's Table-I layers on the 32×32 WS array, pinned in
+//! `tests/golden/table1.json`.
+//!
+//! The differential suites (`engines_equivalence`,
+//! `fast_engine_property`) prove the engines agree with *each other*;
+//! this tier pins them to *checked-in numbers*, so a change that shifts
+//! all engines together (a shared accounting bug, a timeline tweak, a
+//! "harmless" refactor) still fails loudly. It is also the contract the
+//! serve-layer result cache relies on: a cached toggle count is only
+//! trustworthy if the cold number can never drift silently.
+//!
+//! Inputs are **pure-integer seeded** (SplitMix64 draws, modulo
+//! sparsity/range) rather than the float SynthGen path: every value in
+//! the fixture is then reproducible bit-exactly by any faithful port of
+//! the integer pipeline, with no dependence on libm transcendentals.
+//! The checked-in fixture was produced by the NumPy differential port
+//! of the frozen scalar engine (`tools/golden_gen.py`), which the
+//! `fast == scalar == cycle` property suites tie to this engine.
+//!
+//! Regeneration (after an *intended* semantic change):
+//!
+//! ```sh
+//! UPDATE_GOLDEN=1 cargo test --test golden_vectors
+//! git diff rust/tests/golden/table1.json   # review every number!
+//! ```
+
+use std::fmt::Write as _;
+
+use asymm_sa::activity::DirectionStats;
+use asymm_sa::arch::SaConfig;
+use asymm_sa::config::ExperimentConfig;
+use asymm_sa::floorplan::PeGeometry;
+use asymm_sa::gemm::Matrix;
+use asymm_sa::power::{self, TechParams};
+use asymm_sa::serve::cache::digest_i64;
+use asymm_sa::sim::fast::simulate_gemm_fast;
+use asymm_sa::util::json::{obj, Json};
+use asymm_sa::util::rng::Rng;
+use asymm_sa::workloads::{gemm_shape, table1_layers};
+
+const GOLDEN_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/golden/table1.json");
+
+/// Fixture input scheme (mirrored by tools/golden_gen.py — change both
+/// together and regenerate).
+const INPUT_SEED: u64 = 0xA5A5_2023;
+/// Activation sparsity in percent (ReLU-like zero bursts).
+const A_SPARSITY_PCT: u64 = 40;
+
+/// Deterministic int16 operand matrix from pure integer RNG draws:
+/// one draw decides zero/nonzero, a second draws the value. No floats
+/// anywhere, so any exact SplitMix64 port regenerates it bit-for-bit.
+fn golden_matrix(rows: usize, cols: usize, seed: u64, sparsity_pct: u64) -> Matrix<i32> {
+    let mut rng = Rng::new(seed);
+    let data = (0..rows * cols)
+        .map(|_| {
+            if rng.next_u64() % 100 < sparsity_pct {
+                0
+            } else {
+                ((rng.next_u64() % 65535) as i64 - 32767) as i32
+            }
+        })
+        .collect();
+    Matrix::from_vec(rows, cols, data).expect("sized correctly")
+}
+
+fn a_seed(layer_idx: usize) -> u64 {
+    INPUT_SEED.wrapping_add(1000 + layer_idx as u64)
+}
+
+fn w_seed(layer_idx: usize) -> u64 {
+    INPUT_SEED.wrapping_add(2000 + layer_idx as u64)
+}
+
+/// Everything the fixture pins for one layer.
+#[derive(Debug, Clone, PartialEq)]
+struct GoldenLayer {
+    name: String,
+    shape: (usize, usize, usize),
+    /// (toggles, zero_words, observations) per direction.
+    horizontal: (u64, u64, u64),
+    vertical: (u64, u64, u64),
+    weight_load: (u64, u64, u64),
+    cycles: u64,
+    macs: u64,
+    /// FNV-1a digest of the exact output matrix (row-major i64 words).
+    y_digest: u64,
+    /// Interconnect power on the square floorplan (mW).
+    interconnect_sym_mw: f64,
+    /// Interconnect power at the paper's W/H = 3.8 (mW).
+    interconnect_asym_mw: f64,
+}
+
+fn dir_triple(d: &DirectionStats) -> (u64, u64, u64) {
+    (d.toggles, d.zero_words, d.observations)
+}
+
+/// Simulate one Table-I layer's GEMM on the paper array and collect the
+/// golden record.
+fn compute_layer(
+    sa: &SaConfig,
+    tech: &TechParams,
+    area_um2: f64,
+    idx: usize,
+    name: &str,
+    shape: (usize, usize, usize),
+) -> GoldenLayer {
+    let (m, k, n) = shape;
+    let a = golden_matrix(m, k, a_seed(idx), A_SPARSITY_PCT);
+    let w = golden_matrix(k, n, w_seed(idx), 0);
+    let sim = simulate_gemm_fast(sa, &a, &w).expect("table1 shapes are valid");
+    let sym = PeGeometry::new(area_um2, 1.0).expect("valid geometry");
+    let asym = PeGeometry::new(area_um2, 3.8).expect("valid geometry");
+    GoldenLayer {
+        name: name.to_string(),
+        shape,
+        horizontal: dir_triple(&sim.stats.horizontal),
+        vertical: dir_triple(&sim.stats.vertical),
+        weight_load: dir_triple(&sim.stats.weight_load),
+        cycles: sim.cycles,
+        macs: sim.macs,
+        y_digest: digest_i64(0, &sim.y.data),
+        interconnect_sym_mw: power::evaluate(sa, &sym, tech, &sim).interconnect_mw(),
+        interconnect_asym_mw: power::evaluate(sa, &asym, tech, &sim).interconnect_mw(),
+    }
+}
+
+fn triple_json(t: (u64, u64, u64)) -> Json {
+    obj(vec![
+        ("toggles", Json::Num(t.0 as f64)),
+        ("zero_words", Json::Num(t.1 as f64)),
+        ("observations", Json::Num(t.2 as f64)),
+    ])
+}
+
+fn triple_from_json(j: &Json) -> (u64, u64, u64) {
+    (
+        j.req("toggles").unwrap().as_u64().unwrap(),
+        j.req("zero_words").unwrap().as_u64().unwrap(),
+        j.req("observations").unwrap().as_u64().unwrap(),
+    )
+}
+
+fn layer_to_json(l: &GoldenLayer) -> Json {
+    obj(vec![
+        ("name", Json::Str(l.name.clone())),
+        (
+            "gemm",
+            Json::Arr(vec![
+                Json::Num(l.shape.0 as f64),
+                Json::Num(l.shape.1 as f64),
+                Json::Num(l.shape.2 as f64),
+            ]),
+        ),
+        ("horizontal", triple_json(l.horizontal)),
+        ("vertical", triple_json(l.vertical)),
+        ("weight_load", triple_json(l.weight_load)),
+        ("cycles", Json::Num(l.cycles as f64)),
+        ("macs", Json::Num(l.macs as f64)),
+        ("y_digest", Json::Str(format!("{:016x}", l.y_digest))),
+        ("interconnect_sym_mw", Json::Num(l.interconnect_sym_mw)),
+        ("interconnect_asym_mw", Json::Num(l.interconnect_asym_mw)),
+    ])
+}
+
+fn layer_from_json(j: &Json) -> GoldenLayer {
+    let g = j.req("gemm").unwrap().as_arr().unwrap();
+    GoldenLayer {
+        name: j.req("name").unwrap().as_str().unwrap().to_string(),
+        shape: (
+            g[0].as_usize().unwrap(),
+            g[1].as_usize().unwrap(),
+            g[2].as_usize().unwrap(),
+        ),
+        horizontal: triple_from_json(j.req("horizontal").unwrap()),
+        vertical: triple_from_json(j.req("vertical").unwrap()),
+        weight_load: triple_from_json(j.req("weight_load").unwrap()),
+        cycles: j.req("cycles").unwrap().as_u64().unwrap(),
+        macs: j.req("macs").unwrap().as_u64().unwrap(),
+        y_digest: u64::from_str_radix(j.req("y_digest").unwrap().as_str().unwrap(), 16)
+            .expect("hex digest"),
+        interconnect_sym_mw: j.req("interconnect_sym_mw").unwrap().as_f64().unwrap(),
+        interconnect_asym_mw: j.req("interconnect_asym_mw").unwrap().as_f64().unwrap(),
+    }
+}
+
+/// Compare a recomputed layer against the fixture. Integer counts must
+/// match *exactly* (a single toggle of drift fails); the two power
+/// figures — pure f64 arithmetic over those integers — get a 1e-9
+/// relative band to be robust to decimal round-tripping of the fixture.
+fn diff_layers(golden: &GoldenLayer, got: &GoldenLayer) -> Vec<String> {
+    let mut diffs = Vec::new();
+    let mut exact = |field: &str, want: u64, have: u64| {
+        if want != have {
+            diffs.push(format!("{field}: golden {want} != recomputed {have}"));
+        }
+    };
+    exact("horizontal.toggles", golden.horizontal.0, got.horizontal.0);
+    exact("horizontal.zero_words", golden.horizontal.1, got.horizontal.1);
+    exact("horizontal.observations", golden.horizontal.2, got.horizontal.2);
+    exact("vertical.toggles", golden.vertical.0, got.vertical.0);
+    exact("vertical.zero_words", golden.vertical.1, got.vertical.1);
+    exact("vertical.observations", golden.vertical.2, got.vertical.2);
+    exact("weight_load.toggles", golden.weight_load.0, got.weight_load.0);
+    exact("weight_load.zero_words", golden.weight_load.1, got.weight_load.1);
+    exact(
+        "weight_load.observations",
+        golden.weight_load.2,
+        got.weight_load.2,
+    );
+    exact("cycles", golden.cycles, got.cycles);
+    exact("macs", golden.macs, got.macs);
+    exact("y_digest", golden.y_digest, got.y_digest);
+    let mut close = |field: &str, want: f64, have: f64| {
+        let rel = (want - have).abs() / want.abs().max(1e-300);
+        if rel > 1e-9 {
+            diffs.push(format!("{field}: golden {want} vs recomputed {have} (rel {rel:e})"));
+        }
+    };
+    close(
+        "interconnect_sym_mw",
+        golden.interconnect_sym_mw,
+        got.interconnect_sym_mw,
+    );
+    close(
+        "interconnect_asym_mw",
+        golden.interconnect_asym_mw,
+        got.interconnect_asym_mw,
+    );
+    if golden.name != got.name {
+        diffs.push(format!("name: {} != {}", golden.name, got.name));
+    }
+    if golden.shape != got.shape {
+        diffs.push(format!("shape: {:?} != {:?}", golden.shape, got.shape));
+    }
+    diffs
+}
+
+fn compute_all() -> Vec<GoldenLayer> {
+    let sa = SaConfig::paper_32x32();
+    let tech = TechParams::default();
+    let area = ExperimentConfig::paper().pe_area_um2();
+    table1_layers()
+        .iter()
+        .enumerate()
+        .map(|(i, l)| compute_layer(&sa, &tech, area, i, &l.name, gemm_shape(l)))
+        .collect()
+}
+
+fn fixture_json(layers: &[GoldenLayer]) -> String {
+    let sa = SaConfig::paper_32x32();
+    obj(vec![
+        (
+            "description",
+            Json::Str(
+                "Golden bus statistics for the Table-I layers on the paper's 32x32 WS array. \
+                 Regenerate with UPDATE_GOLDEN=1 cargo test --test golden_vectors."
+                    .to_string(),
+            ),
+        ),
+        (
+            "sa",
+            obj(vec![
+                ("rows", Json::Num(sa.rows as f64)),
+                ("cols", Json::Num(sa.cols as f64)),
+                ("input_bits", Json::Num(sa.input_bits as f64)),
+                ("acc_bits", Json::Num(sa.acc_bits as f64)),
+            ]),
+        ),
+        ("input_seed", Json::Num(INPUT_SEED as f64)),
+        ("a_sparsity_pct", Json::Num(A_SPARSITY_PCT as f64)),
+        (
+            "layers",
+            Json::Arr(layers.iter().map(layer_to_json).collect()),
+        ),
+    ])
+    .to_string()
+}
+
+#[test]
+fn golden_vectors_match() {
+    if std::env::var("UPDATE_GOLDEN").is_ok() {
+        let layers = compute_all();
+        std::fs::write(GOLDEN_PATH, fixture_json(&layers)).expect("write golden fixture");
+        eprintln!("regenerated {GOLDEN_PATH}; review the diff before committing");
+        return;
+    }
+
+    let text = std::fs::read_to_string(GOLDEN_PATH)
+        .unwrap_or_else(|e| panic!("missing golden fixture {GOLDEN_PATH}: {e}"));
+    let parsed = Json::parse(&text).expect("fixture parses");
+    let golden: Vec<GoldenLayer> = parsed
+        .req("layers")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(layer_from_json)
+        .collect();
+    assert_eq!(
+        parsed.req("input_seed").unwrap().as_u64().unwrap(),
+        INPUT_SEED,
+        "fixture was generated under a different input scheme"
+    );
+    assert_eq!(golden.len(), 6, "Table I has six layers");
+
+    let got = compute_all();
+    let mut report = String::new();
+    for (g, c) in golden.iter().zip(&got) {
+        for d in diff_layers(g, c) {
+            let _ = writeln!(report, "{}: {d}", g.name);
+        }
+    }
+    assert!(
+        report.is_empty(),
+        "golden drift detected — if intended, regenerate with UPDATE_GOLDEN=1:\n{report}"
+    );
+}
+
+/// The comparator itself must catch a single-count perturbation in any
+/// integer field and a relative drift in the power figures — this is
+/// the CI-checked form of the "deliberate 1-count perturbation" drill.
+#[test]
+fn comparator_detects_one_count_perturbation() {
+    let base = GoldenLayer {
+        name: "L0".into(),
+        shape: (8, 8, 8),
+        horizontal: (100, 50, 200),
+        vertical: (300, 20, 200),
+        weight_load: (40, 10, 64),
+        cycles: 1234,
+        macs: 512,
+        y_digest: 0xDEAD_BEEF_0123_4567,
+        interconnect_sym_mw: 12.5,
+        interconnect_asym_mw: 11.25,
+    };
+    assert!(diff_layers(&base, &base).is_empty());
+
+    let mut cases: Vec<GoldenLayer> = Vec::new();
+    let mut c = base.clone();
+    c.horizontal.0 += 1;
+    cases.push(c);
+    let mut c = base.clone();
+    c.vertical.0 -= 1;
+    cases.push(c);
+    let mut c = base.clone();
+    c.weight_load.2 += 1;
+    cases.push(c);
+    let mut c = base.clone();
+    c.cycles += 1;
+    cases.push(c);
+    let mut c = base.clone();
+    c.y_digest ^= 1;
+    cases.push(c);
+    let mut c = base.clone();
+    c.interconnect_sym_mw *= 1.0 + 1e-6;
+    cases.push(c);
+    for (i, perturbed) in cases.iter().enumerate() {
+        assert!(
+            !diff_layers(&base, perturbed).is_empty(),
+            "perturbation case {i} slipped through the comparator"
+        );
+    }
+}
+
+/// The fixture round-trips through the JSON layer without loss: what
+/// `UPDATE_GOLDEN=1` writes is exactly what the checker reads back.
+#[test]
+fn fixture_serialization_round_trips() {
+    let layer = GoldenLayer {
+        name: "Lx".into(),
+        shape: (3136, 256, 64),
+        horizontal: (123_456_789_012, 345, 678),
+        vertical: (11, 22, 33),
+        weight_load: (44, 55, 66),
+        cycles: 987_654_321,
+        macs: 51_380_224,
+        y_digest: 0xFFFF_FFFF_FFFF_FFFE, // > 2^53: must survive as hex
+        interconnect_sym_mw: 0.123456789012345,
+        interconnect_asym_mw: 98765.4321,
+    };
+    let text = fixture_json(&[layer.clone()]);
+    let parsed = Json::parse(&text).unwrap();
+    let back = layer_from_json(&parsed.req("layers").unwrap().as_arr().unwrap()[0]);
+    assert_eq!(layer, back);
+    assert!(diff_layers(&layer, &back).is_empty());
+}

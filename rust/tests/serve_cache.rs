@@ -1,0 +1,253 @@
+//! Serve-subsystem contracts: cache hits are bit-identical to cold
+//! simulation, LRU eviction is deterministic, and latency metrics are
+//! arrival-order independent (deterministic across worker counts).
+
+use std::sync::Arc;
+
+use asymm_sa::arch::SaConfig;
+use asymm_sa::coordinator::{Coordinator, LayerJob};
+use asymm_sa::gemm::Matrix;
+use asymm_sa::serve::{
+    operand_digest, CacheKey, InferRequest, ResultCache, ServeConfig, Server,
+};
+use asymm_sa::sim::fast::simulate_gemm_fast;
+use asymm_sa::util::rng::Rng;
+
+fn rand_mat(rows: usize, cols: usize, seed: u64) -> Arc<Matrix<i32>> {
+    let mut rng = Rng::new(seed);
+    let data = (0..rows * cols)
+        .map(|_| rng.int_range(-100, 100) as i32)
+        .collect();
+    Arc::new(Matrix::from_vec(rows, cols, data).unwrap())
+}
+
+fn request(id: u64, a_seed: u64, (m, k, n): (usize, usize, usize)) -> InferRequest {
+    InferRequest {
+        id,
+        name: format!("r{id}"),
+        a: rand_mat(m, k, a_seed),
+        w: rand_mat(k, n, 5000 + a_seed),
+    }
+}
+
+fn server(sa: &SaConfig, workers: usize, cache: usize, window: usize) -> Server {
+    Server::new(ServeConfig {
+        sa: sa.clone(),
+        workers,
+        cache_capacity: cache,
+        window,
+    })
+}
+
+/// A randomized request stream with repeats: every cache-hit response
+/// must be bit-identical — outputs, `SaStats`, cycles, macs — to a cold
+/// simulation of the same operands.
+#[test]
+fn cache_hits_are_bit_identical_to_cold_simulation() {
+    let sa = SaConfig::new_ws(4, 4, 8).unwrap();
+    let s = server(&sa, 2, 32, 8);
+
+    // 40 requests drawn from 6 distinct operand sets over 2 shapes.
+    let mut rng = Rng::new(0xCAFE);
+    let pool: Vec<InferRequest> = (0..6)
+        .map(|i| {
+            let shape = if i % 2 == 0 { (9, 5, 6) } else { (4, 7, 3) };
+            request(i, 40 + i, shape)
+        })
+        .collect();
+    let stream: Vec<InferRequest> = (0..40)
+        .map(|id| {
+            let p = &pool[rng.index(0, pool.len())];
+            InferRequest {
+                id,
+                name: format!("r{id}"),
+                a: Arc::clone(&p.a),
+                w: Arc::clone(&p.w),
+            }
+        })
+        .collect();
+
+    let responses = s.process_stream(&stream).unwrap();
+    assert_eq!(responses.len(), 40);
+    let hits = responses.iter().filter(|r| r.cache_hit).count();
+    assert!(hits > 0, "stream with repeats must produce hits");
+
+    for (resp, req) in responses.iter().zip(&stream) {
+        // Cold truth, fresh engine, no cache anywhere near it.
+        let cold = simulate_gemm_fast(&sa, &req.a, &req.w).unwrap();
+        assert_eq!(resp.sim.y, cold.y, "req {}: outputs", req.id);
+        assert_eq!(resp.sim.stats, cold.stats, "req {}: stats", req.id);
+        assert_eq!(resp.sim.cycles, cold.cycles, "req {}: cycles", req.id);
+        assert_eq!(resp.sim.macs, cold.macs, "req {}: macs", req.id);
+    }
+
+    let stats = s.cache_stats();
+    assert_eq!(stats.hits as usize, hits);
+    assert_eq!(stats.hits + stats.misses, 40);
+}
+
+/// The same stream against servers with different worker counts yields
+/// the same hit pattern and the same bit-identical results.
+#[test]
+fn hit_pattern_is_worker_count_invariant() {
+    let sa = SaConfig::new_ws(4, 4, 8).unwrap();
+    let stream: Vec<InferRequest> = (0..24)
+        .map(|id| request(id, 7 + (id % 5), (8, 6, 5)))
+        .collect();
+
+    let s1 = server(&sa, 1, 16, 6);
+    let s4 = server(&sa, 4, 16, 6);
+    let r1 = s1.process_stream(&stream).unwrap();
+    let r4 = s4.process_stream(&stream).unwrap();
+    for (a, b) in r1.iter().zip(&r4) {
+        assert_eq!(a.cache_hit, b.cache_hit, "req {}", a.id);
+        assert_eq!(a.sim.y, b.sim.y);
+        assert_eq!(a.sim.stats, b.sim.stats);
+    }
+    assert_eq!(s1.cache_stats().hits, s4.cache_stats().hits);
+    assert_eq!(s1.cache_stats().evictions, s4.cache_stats().evictions);
+}
+
+/// The LRU bound evicts deterministically: a fixed access sequence
+/// always leaves the same residue, twice over.
+#[test]
+fn lru_bound_evicts_deterministically() {
+    let sa = SaConfig::new_ws(2, 2, 8).unwrap();
+    let key = |tag: u64| CacheKey {
+        sa_fingerprint: 1,
+        shape: (1, 1, 1),
+        input_digest: tag,
+    };
+    let sim = {
+        let a = rand_mat(1, 1, 0);
+        let w = rand_mat(1, 1, 1);
+        Arc::new(simulate_gemm_fast(&sa, &a, &w).unwrap())
+    };
+
+    let run = || {
+        let mut c = ResultCache::new(3);
+        for t in 0..4u64 {
+            c.insert(key(t), Arc::clone(&sim));
+        } // cap 3: inserting key 3 evicts key 0
+        assert!(c.get(&key(1)).is_some()); // 1 most recent
+        c.insert(key(4), Arc::clone(&sim)); // evicts 2 (LRU among 1,2,3)
+        c.insert(key(5), Arc::clone(&sim)); // evicts 3
+        let residents: Vec<bool> = (0..6).map(|t| c.contains(&key(t))).collect();
+        (residents, c.stats())
+    };
+    let (res_a, stats_a) = run();
+    let (res_b, stats_b) = run();
+    assert_eq!(res_a, res_b, "eviction must be deterministic");
+    assert_eq!(stats_a, stats_b);
+    assert_eq!(
+        res_a,
+        vec![false, true, false, false, true, true],
+        "expected exactly {{1, 4, 5}} resident"
+    );
+    assert_eq!(stats_a.evictions, 3);
+    assert_eq!(stats_a.len, 3);
+}
+
+/// End-to-end eviction determinism: a stream whose distinct key count
+/// exceeds the cache bound produces identical eviction counts and hit
+/// patterns on repeated runs.
+#[test]
+fn overflowing_stream_is_deterministic() {
+    let sa = SaConfig::new_ws(4, 4, 8).unwrap();
+    // 10 distinct operand sets, cache bound 4, revisited twice.
+    let pool: Vec<InferRequest> = (0..10).map(|i| request(i, 600 + i, (5, 4, 4))).collect();
+    let mut stream = Vec::new();
+    for round in 0..2u64 {
+        for p in &pool {
+            stream.push(InferRequest {
+                id: round * 10 + p.id,
+                name: p.name.clone(),
+                a: Arc::clone(&p.a),
+                w: Arc::clone(&p.w),
+            });
+        }
+    }
+    let run = || {
+        let s = server(&sa, 3, 4, 5);
+        let resp = s.process_stream(&stream).unwrap();
+        let hits: Vec<bool> = resp.iter().map(|r| r.cache_hit).collect();
+        (hits, s.cache_stats())
+    };
+    let (h1, c1) = run();
+    let (h2, c2) = run();
+    assert_eq!(h1, h2);
+    assert_eq!(c1, c2);
+    assert!(c1.evictions > 0, "bound 4 over 10 keys must evict");
+    assert_eq!(c1.len, 4);
+}
+
+/// Satellite fix: `MetricsSnapshot` exposes per-job wall times as a
+/// stable sorted view, so latency percentiles are deterministic across
+/// thread counts — the snapshot is a function of the recorded multiset,
+/// not of completion order. Verified with workers ∈ {1, 4}.
+#[test]
+fn job_wall_view_is_stable_for_workers_1_and_4() {
+    let sa = SaConfig::new_ws(4, 4, 8).unwrap();
+    for workers in [1usize, 4] {
+        let coord = Coordinator::new(&sa, workers);
+        let jobs: Vec<LayerJob> = (0..12)
+            .map(|i| LayerJob {
+                name: format!("J{i}"),
+                a: rand_mat(10 + i, 6, i as u64),
+                w: rand_mat(6, 7, 300 + i as u64),
+            })
+            .collect();
+        let results = coord.run(jobs).unwrap();
+        let snap = coord.metrics().snapshot();
+
+        // The sorted view is exactly the sorted multiset of the per-job
+        // wall times the results report (in input order) — nothing is
+        // lost or reordered beyond the sort, at any worker count.
+        let mut expect: Vec<u64> = results
+            .iter()
+            .map(|r| (r.wall_secs * 1e6) as u64)
+            .collect();
+        expect.sort_unstable();
+        assert_eq!(
+            snap.job_wall_sorted_micros, expect,
+            "workers={workers}: sorted view != sorted multiset"
+        );
+        assert!(snap.job_wall_sorted_micros.windows(2).all(|w| w[0] <= w[1]));
+        // Percentiles come off the stable view: p100 is its maximum.
+        assert!(snap.job_wall_percentile_ms(0.5) <= snap.job_wall_percentile_ms(1.0));
+        assert_eq!(
+            asymm_sa::coordinator::metrics::percentile_micros(&snap.job_wall_sorted_micros, 1.0),
+            *snap.job_wall_sorted_micros.last().unwrap()
+        );
+    }
+}
+
+/// The cache key separates array configs: the same operands on two
+/// different arrays must not share cache entries.
+#[test]
+fn different_arrays_do_not_share_entries() {
+    let sa_a = SaConfig::new_ws(4, 4, 8).unwrap();
+    let sa_b = SaConfig::new_ws(8, 2, 8).unwrap();
+    let req = request(0, 77, (6, 5, 4));
+
+    let s_a = server(&sa_a, 1, 8, 4);
+    let s_b = server(&sa_b, 1, 8, 4);
+    let ra = s_a.process_batch(std::slice::from_ref(&req)).unwrap();
+    let rb = s_b.process_batch(std::slice::from_ref(&req)).unwrap();
+    // Different geometry → different stats/cycles, and the keys differ.
+    assert_ne!(s_a.cache_key(&req), s_b.cache_key(&req));
+    assert_ne!(ra[0].sim.cycles, rb[0].sim.cycles);
+    // Same math though.
+    assert_eq!(ra[0].sim.y, rb[0].sim.y);
+}
+
+/// Digest sanity at the integration level: permuting operand words or
+/// moving the A/W boundary changes the key.
+#[test]
+fn operand_digest_discriminates() {
+    let d1 = operand_digest(2, 3, &[1, 2, 3, 4, 5, 6], 2, &[7, 8, 9, 10, 11, 12]);
+    let d2 = operand_digest(2, 3, &[1, 2, 3, 4, 6, 5], 2, &[7, 8, 9, 10, 11, 12]);
+    let d3 = operand_digest(3, 2, &[1, 2, 3, 4, 5, 6], 2, &[7, 8, 9, 10, 11, 12]);
+    assert_ne!(d1, d2);
+    assert_ne!(d1, d3);
+}

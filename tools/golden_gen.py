@@ -1,0 +1,526 @@
+#!/usr/bin/env python3
+"""Generate rust/tests/golden/table1.json — the golden-vector fixture.
+
+This is an exact, bit-for-bit port of the crate's frozen scalar analytic
+engine (rust/src/sim/baseline.rs) plus the pieces the fixture depends on:
+
+  * util::rng::Rng            (SplitMix64, pure integer)
+  * the golden input scheme   (tests/golden_vectors.rs::golden_matrix)
+  * quant::bus_word           (two's-complement masking)
+  * the WS tile schedule      (gemm::tiling::TilePlan: n-major, k-minor)
+  * serve::cache::digest_i64  (FNV-1a, length-prefixed, little-endian)
+  * power::evaluate           (interconnect terms only, f64 arithmetic
+                               replicated operation-for-operation)
+
+Why a Python generator exists at all: the fixture must be produced by an
+implementation *independent* of the engine under test (otherwise the
+golden tier would bless whatever the engine says today), and the repo's
+build containers do not always ship a Rust toolchain. The port is
+differentially validated in two ways before writing anything:
+
+  1. a line-by-line scalar transliteration of baseline.rs is compared
+     against the vectorized NumPy engine on randomized small shapes
+     (catches vectorization mistakes — the realistic error class);
+  2. structural invariants the Rust property suites enforce
+     (observation conservation closed forms, activity <= 1, outputs ==
+     exact matmul) are asserted on every generated layer.
+
+The engines themselves are tied together on the Rust side: fast ==
+scalar == cycle-accurate, enforced by tests/fast_engine_property.rs and
+tests/engines_equivalence.rs. UPDATE_GOLDEN=1 on the Rust test
+regenerates the same file from the fast engine; the two paths must agree
+exactly on every integer.
+
+Usage: python3 tools/golden_gen.py [--check-only]
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import sys
+from pathlib import Path
+
+import numpy as np
+
+MASK64 = (1 << 64) - 1
+PHI = 0x9E37_79B9_7F4A_7C15
+
+# ----------------------------------------------------------------------
+# util::rng::Rng (SplitMix64)
+# ----------------------------------------------------------------------
+
+
+class Rng:
+    """Port of rust/src/util/rng.rs::Rng."""
+
+    def __init__(self, seed: int):
+        self.state = (seed ^ PHI) & MASK64
+
+    def next_u64(self) -> int:
+        self.state = (self.state + PHI) & MASK64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58_476D_1CE4_E5B9) & MASK64
+        z = ((z ^ (z >> 27)) * 0x94D0_49BB_1331_11EB) & MASK64
+        return (z ^ (z >> 31)) & MASK64
+
+
+def rng_stream(seed: int, n: int) -> np.ndarray:
+    """Vectorized SplitMix64: draw `n` values of Rng(seed) at once.
+
+    The state after k calls is (seed ^ PHI) + k*PHI mod 2^64, so the
+    whole stream is a closed form over a counter.
+    """
+    init = (seed ^ PHI) & MASK64
+    ks = np.arange(1, n + 1, dtype=np.uint64)
+    state = (np.uint64(init) + ks * np.uint64(PHI))  # wraps mod 2^64
+    z = state
+    z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    return z ^ (z >> np.uint64(31))
+
+
+# ----------------------------------------------------------------------
+# Golden input scheme (tests/golden_vectors.rs)
+# ----------------------------------------------------------------------
+
+INPUT_SEED = 0xA5A5_2023
+A_SPARSITY_PCT = 40
+
+
+def golden_matrix(rows: int, cols: int, seed: int, sparsity_pct: int) -> np.ndarray:
+    """Port of golden_vectors.rs::golden_matrix (row-major int32).
+
+    Sequential draws: one u64 decides zero/nonzero; nonzero elements
+    draw a second u64 for the value. Consumption is data-dependent, so
+    we draw a (precomputed, vectorized) stream and walk it.
+    """
+    n = rows * cols
+    stream = rng_stream(seed, 2 * n)  # upper bound: 2 draws per element
+    out = np.zeros(n, dtype=np.int32)
+    pos = 0
+    sv = stream  # local alias
+    for i in range(n):
+        r = int(sv[pos])
+        pos += 1
+        if r % 100 < sparsity_pct:
+            continue
+        v = int(sv[pos]) % 65535 - 32767
+        pos += 1
+        out[i] = v
+    return out.reshape(rows, cols)
+
+
+# ----------------------------------------------------------------------
+# Scalar transliteration of sim/baseline.rs (reference for the port)
+# ----------------------------------------------------------------------
+
+
+def bus_word(v: int, bits: int) -> int:
+    return v & ((1 << bits) - 1)
+
+
+def pass_cycles(R: int, C: int, m: int) -> int:
+    # sim::pass_cycles = rows + (m + rows + cols + 2)
+    return R + (m + R + C + 2)
+
+
+def tile_steps(K: int, N: int, R: int, C: int):
+    steps = []
+    n0 = 0
+    while n0 < N:
+        n_len = min(C, N - n0)
+        k0 = 0
+        while k0 < K:
+            k_len = min(R, K - k0)
+            steps.append((k0, n0, k_len, n_len))
+            k0 += R
+        n0 += C
+    return steps
+
+
+def simulate_ws_scalar(R, C, bh, bv, A, W):
+    """Direct line-by-line port of simulate_gemm_fast_scalar. Slow —
+    used only to validate the vectorized engine on small shapes."""
+    m, K = A.shape
+    N = W.shape[1]
+    pc = pass_cycles(R, C, m)
+    y = [[0] * N for _ in range(m)]
+    stats = {k: [0, 0, 0] for k in ("h", "v", "wl")}  # toggles, zeros, obs
+    chain_prev = [[0] * C for _ in range(R)]
+    a_t = A.T.tolist()
+    Wl = W.tolist()
+
+    for (k0, n0, k_len, n_len) in tile_steps(K, N, R, C):
+        w_tile = [
+            [
+                Wl[k0 + r][n0 + c] if (r < k_len and c < n_len) else 0
+                for c in range(C)
+            ]
+            for r in range(R)
+        ]
+        # Weight chain.
+        for r in range(R):
+            for c in range(C):
+                p = bus_word(chain_prev[r][c], bh)
+                tog = 0
+                zer = 0
+                for t in range(R):
+                    v = chain_prev[r - 1 - t][c] if t < r else w_tile[R - 1 - (t - r)][c]
+                    word = bus_word(v, bh)
+                    tog += bin(p ^ word).count("1")
+                    zer += word == 0
+                    p = word
+                stats["wl"][0] += tog
+                stats["wl"][1] += zer
+                stats["wl"][2] += R
+        chain_prev = [row[:] for row in w_tile]
+        # Horizontal.
+        for r in range(R):
+            tog = nz = 0
+            if r < k_len:
+                p = 0
+                for v in a_t[k0 + r]:
+                    word = bus_word(int(v), bh)
+                    tog += bin(p ^ word).count("1")
+                    nz += word != 0
+                    p = word
+                tog += bin(p).count("1")
+            stats["h"][0] += tog * C
+            stats["h"][1] += (pc - nz) * C
+            stats["h"][2] += pc * C
+        # Vertical (column at a time; stat math identical to the pairs).
+        for c in range(n_len):
+            prefix = [0] * m
+            last_tog = last_nz = 0
+            for r in range(k_len):
+                w_rc = w_tile[r][c]
+                arow = a_t[k0 + r]
+                tog = nz = 0
+                prev = 0
+                for mi in range(m):
+                    prefix[mi] += int(arow[mi]) * w_rc
+                    word = bus_word(prefix[mi], bv)
+                    tog += bin(prev ^ word).count("1")
+                    nz += word != 0
+                    prev = word
+                tog += bin(prev).count("1")
+                stats["v"][0] += tog
+                stats["v"][1] += pc - nz
+                last_tog, last_nz = tog, nz
+            tail = R - k_len
+            stats["v"][0] += tail * last_tog
+            stats["v"][1] += tail * (pc - last_nz)
+            stats["v"][2] += pc * R
+            for mi in range(m):
+                y[mi][n0 + c] += prefix[mi]
+        if n_len < C:
+            idle = C - n_len
+            stats["v"][1] += idle * pc * R
+            stats["v"][2] += idle * pc * R
+
+    cycles = len(tile_steps(K, N, R, C)) * pc
+    macs = m * K * N
+    return np.array(y, dtype=np.int64), stats, cycles, macs
+
+
+# ----------------------------------------------------------------------
+# Vectorized NumPy engine (the production generator)
+# ----------------------------------------------------------------------
+
+
+def _u64(x: np.ndarray) -> np.ndarray:
+    return x.astype(np.int64).view(np.uint64)
+
+
+def _pc64(x: np.ndarray) -> np.ndarray:
+    return np.bitwise_count(x).astype(np.int64)
+
+
+def simulate_ws_numpy(R, C, bh, bv, A, W):
+    """Vectorized port of simulate_gemm_fast_scalar."""
+    m, K = A.shape
+    N = W.shape[1]
+    pc = pass_cycles(R, C, m)
+    mask_h = np.uint64((1 << bh) - 1)
+    mask_v = np.uint64((1 << bv) - 1)
+    A64 = A.astype(np.int64)
+    a_t = A64.T.copy()
+    y = np.zeros((m, N), dtype=np.int64)
+    h_tog = h_zer = h_obs = 0
+    v_tog = v_zer = v_obs = 0
+    wl_tog = wl_zer = wl_obs = 0
+    chain_prev = np.zeros((R, C), dtype=np.int64)
+
+    # Gather indices for the weight-chain sequence (constant per array).
+    T, Rr = np.meshgrid(np.arange(R), np.arange(R), indexing="ij")
+    from_prev = T < Rr
+    idx_prev = np.clip(Rr - 1 - T, 0, R - 1)
+    idx_new = np.clip(R - 1 - (T - Rr), 0, R - 1)
+
+    steps = tile_steps(K, N, R, C)
+    for (k0, n0, k_len, n_len) in steps:
+        w_tile = np.zeros((R, C), dtype=np.int64)
+        w_tile[:k_len, :n_len] = W[k0 : k0 + k_len, n0 : n0 + n_len]
+
+        # ---- Weight chain ------------------------------------------------
+        seq = np.where(from_prev[:, :, None], chain_prev[idx_prev], w_tile[idx_new])
+        words = _u64(seq) & mask_h  # (T=R, r=R, c=C)
+        p0 = (_u64(chain_prev) & mask_h)[None, :, :]
+        prev = np.concatenate([p0, words[:-1]], axis=0)
+        wl_tog += int(_pc64(prev ^ words).sum())
+        wl_zer += int((words == 0).sum())
+        wl_obs += R * R * C
+        chain_prev = w_tile
+
+        # ---- Horizontal --------------------------------------------------
+        rows = a_t[k0 : k0 + k_len]  # (k_len, m)
+        words = _u64(rows) & mask_h
+        prev = np.concatenate(
+            [np.zeros((k_len, 1), dtype=np.uint64), words[:, :-1]], axis=1
+        )
+        tog_r = _pc64(prev ^ words).sum(axis=1) + _pc64(words[:, -1])
+        nz_r = (words != 0).sum(axis=1).astype(np.int64)
+        h_tog += int(tog_r.sum()) * C
+        h_zer += int((pc - nz_r).sum()) * C + (R - k_len) * pc * C
+        h_obs += pc * C * R
+
+        # ---- Vertical ----------------------------------------------------
+        prod = a_t[k0 : k0 + k_len, :, None] * w_tile[:k_len, None, :n_len]
+        prefix = np.cumsum(prod, axis=0)  # (k_len, m, n_len) exact int64
+        words = _u64(prefix) & mask_v
+        prev = np.concatenate(
+            [np.zeros((k_len, 1, n_len), dtype=np.uint64), words[:, :-1, :]], axis=1
+        )
+        tog = _pc64(prev ^ words).sum(axis=1) + _pc64(words[:, -1, :])  # (k_len, n_len)
+        nz = (words != 0).sum(axis=1).astype(np.int64)
+        tail = R - k_len
+        v_tog += int(tog.sum()) + tail * int(tog[-1].sum())
+        v_zer += int((pc - nz).sum()) + tail * int((pc - nz[-1]).sum())
+        v_obs += pc * R * n_len
+        if n_len < C:
+            v_zer += (C - n_len) * pc * R
+            v_obs += (C - n_len) * pc * R
+        y[:, n0 : n0 + n_len] += prefix[-1]
+
+    stats = {
+        "h": [h_tog, h_zer, h_obs],
+        "v": [v_tog, v_zer, v_obs],
+        "wl": [wl_tog, wl_zer, wl_obs],
+    }
+    return y, stats, len(steps) * pc, m * K * N
+
+
+# ----------------------------------------------------------------------
+# serve::cache::digest_i64 (FNV-1a, length-prefixed, LE)
+# ----------------------------------------------------------------------
+
+FNV_PRIME = 0x0000_0100_0000_01B3
+
+
+def _fnv1a(h: int, data: bytes) -> int:
+    for b in data:
+        h ^= b
+        h = (h * FNV_PRIME) & MASK64
+    return h
+
+
+def digest_i64(seed: int, values: np.ndarray) -> int:
+    h = _fnv1a(seed, len(values).to_bytes(8, "little"))
+    return _fnv1a(h, values.astype("<i8").tobytes())
+
+
+# ----------------------------------------------------------------------
+# power::evaluate — interconnect terms, f64 op-for-op
+# ----------------------------------------------------------------------
+
+# TechParams::default()
+VDD = 0.9
+WIRE_CAP = 0.20
+CTRL_EFF_WIRES = 2.514
+# PeMicroArch::default().cost(paper_32x32): the paper's constant A.
+NAND2_UM2 = 0.49
+UTILIZATION = 0.70
+
+
+def pe_area_um2(bh: int, bv: int) -> float:
+    register_bits = 2 * bh + bv
+    mult_gates = 1.1 * float(bh) * float(bh)
+    add_gates = 6.0 * float(bv)
+    ff_gates = 4.0 * float(register_bits)
+    gates = mult_gates + add_gates + ff_gates
+    return gates * NAND2_UM2 / UTILIZATION
+
+
+def interconnect_mw(stats, cycles, R, C, area, aspect, clock_ghz=1.0):
+    w_um = math.sqrt(area * aspect)
+    h_um = math.sqrt(area / aspect)
+    e_wire = 0.5 * WIRE_CAP * VDD * VDD
+    seconds = float(cycles) / (clock_ghz * 1e9)
+    h_bus_fj = float(stats["h"][0]) * w_um * e_wire
+    v_bus_fj = float(stats["v"][0]) * h_um * e_wire
+    w_load_fj = float(stats["wl"][0]) * h_um * e_wire
+    ctrl_fj = float(cycles) * float(R * C) * CTRL_EFF_WIRES * (w_um + h_um) * e_wire
+
+    def to_mw(fj: float) -> float:
+        return fj * 1e-15 / seconds * 1e3
+
+    return to_mw(h_bus_fj) + to_mw(v_bus_fj) + to_mw(w_load_fj) + to_mw(ctrl_fj)
+
+
+# ----------------------------------------------------------------------
+# Validation + generation
+# ----------------------------------------------------------------------
+
+TABLE1 = [
+    # name, (P, CK^2, M) — workloads::gemm_shape over table1_layers()
+    ("L1", (3136, 256, 64)),
+    ("L2", (784, 1152, 128)),
+    ("L3", (784, 128, 512)),
+    ("L4", (196, 512, 256)),
+    ("L5", (196, 1024, 256)),
+    ("L6", (196, 2304, 256)),
+]
+
+
+def selfcheck():
+    """Differential: scalar transliteration == vectorized engine."""
+    rng = Rng(99)
+    cases = [
+        (4, 4, 8, 6, 4, 4),
+        (4, 4, 8, 7, 10, 9),
+        (8, 4, 8, 5, 8, 4),
+        (5, 3, 12, 9, 11, 7),
+        (4, 4, 16, 13, 33, 40),  # ragged multi-pass at full width
+        (4, 4, 8, 1, 1, 1),
+    ]
+    for (R, C, bits, m, k, n) in cases:
+        hi = (1 << (bits - 1)) - 1
+        bv = 2 * bits + max(0, (R - 1).bit_length()) if R > 1 else 2 * bits
+        A = np.array(
+            [rng.next_u64() % (2 * hi + 1) - hi for _ in range(m * k)], dtype=np.int64
+        ).reshape(m, k)
+        W = np.array(
+            [rng.next_u64() % (2 * hi + 1) - hi for _ in range(k * n)], dtype=np.int64
+        ).reshape(k, n)
+        ys, ss, cs, ms = simulate_ws_scalar(R, C, bits, bv, A, W)
+        yv, sv, cv, mv = simulate_ws_numpy(R, C, bits, bv, A, W)
+        assert np.array_equal(ys, yv), f"y mismatch {R}x{C} {m}x{k}x{n}"
+        assert ss == sv, f"stats mismatch {R}x{C} {m}x{k}x{n}: {ss} vs {sv}"
+        assert (cs, ms) == (cv, mv)
+        assert np.array_equal(yv, A @ W), "outputs must equal exact matmul"
+        # Observation conservation closed forms (mirrors the Rust
+        # property suite).
+        passes = math.ceil(k / R) * math.ceil(n / C)
+        pc = pass_cycles(R, C, m)
+        assert sv["h"][2] == passes * pc * R * C
+        assert sv["v"][2] == passes * pc * R * C
+        assert sv["wl"][2] == passes * R * R * C
+        for key, bits_k in (("h", bits), ("v", bv), ("wl", bits)):
+            tog, zer, obs = sv[key]
+            assert 0 <= zer <= obs and 0 <= tog <= obs * bits_k
+    # RNG sanity: scalar class and closed-form stream agree.
+    r = Rng(12345)
+    seq = [r.next_u64() for _ in range(100)]
+    assert seq == [int(x) for x in rng_stream(12345, 100)]
+    print("selfcheck: scalar == vectorized on all cases, invariants hold")
+
+
+def compute_doc() -> dict:
+    R, C, BH, BV = 32, 32, 16, 37
+    area = pe_area_um2(BH, BV)
+    layers = []
+    for idx, (name, (m, k, n)) in enumerate(TABLE1):
+        A = golden_matrix(m, k, INPUT_SEED + 1000 + idx, A_SPARSITY_PCT)
+        W = golden_matrix(k, n, INPUT_SEED + 2000 + idx, 0)
+        y, stats, cycles, macs = simulate_ws_numpy(R, C, BH, BV, A, W)
+        assert np.array_equal(y, A.astype(np.int64) @ W.astype(np.int64))
+        passes = math.ceil(k / R) * math.ceil(n / C)
+        pc = pass_cycles(R, C, m)
+        assert cycles == passes * pc and macs == m * k * n
+        assert stats["h"][2] == passes * pc * R * C
+        assert stats["v"][2] == passes * pc * R * C
+        assert stats["wl"][2] == passes * R * R * C
+        a_act = stats["h"][0] / (stats["h"][2] * BH)
+        v_act = stats["v"][0] / (stats["v"][2] * BV)
+        assert 0.0 < a_act <= 1.0 and 0.0 < v_act <= 1.0
+        entry = {
+            "name": name,
+            "gemm": [m, k, n],
+            "horizontal": dict(
+                zip(("toggles", "zero_words", "observations"), stats["h"])
+            ),
+            "vertical": dict(zip(("toggles", "zero_words", "observations"), stats["v"])),
+            "weight_load": dict(
+                zip(("toggles", "zero_words", "observations"), stats["wl"])
+            ),
+            "cycles": cycles,
+            "macs": macs,
+            "y_digest": format(digest_i64(0, y.reshape(-1)), "016x"),
+            "interconnect_sym_mw": interconnect_mw(stats, cycles, R, C, area, 1.0),
+            "interconnect_asym_mw": interconnect_mw(stats, cycles, R, C, area, 3.8),
+        }
+        layers.append(entry)
+        print(
+            f"{name}: {m}x{k}x{n}  a_h={a_act:.3f} a_v={v_act:.3f} "
+            f"cycles={cycles} icn_sym={entry['interconnect_sym_mw']:.3f}mW"
+        )
+    return {
+        "description": (
+            "Golden bus statistics for the Table-I layers on the paper's 32x32 "
+            "WS array. Regenerate with UPDATE_GOLDEN=1 cargo test --test "
+            "golden_vectors."
+        ),
+        "sa": {"rows": R, "cols": C, "input_bits": BH, "acc_bits": BV},
+        "input_seed": INPUT_SEED,
+        "a_sparsity_pct": A_SPARSITY_PCT,
+        "layers": layers,
+    }
+
+
+def compare_against(path: Path, doc: dict) -> None:
+    """Value-wise comparison with the checked-in fixture: integers exact,
+    floats to 1e-9 relative (the same contract golden_vectors.rs
+    enforces). Exits nonzero on any disagreement, so `--check-only`
+    really does arbitrate between the Rust UPDATE_GOLDEN=1 writer and
+    this independent port."""
+    golden = json.loads(path.read_text())
+    diffs = []
+
+    def walk(prefix, want, have):
+        if isinstance(want, dict) and isinstance(have, dict):
+            for key in sorted(set(want) | set(have)):
+                if key not in want or key not in have:
+                    diffs.append(f"{prefix}.{key}: present on one side only")
+                else:
+                    walk(f"{prefix}.{key}", want[key], have[key])
+        elif isinstance(want, list) and isinstance(have, list):
+            if len(want) != len(have):
+                diffs.append(f"{prefix}: length {len(want)} vs {len(have)}")
+            for i, (w, h) in enumerate(zip(want, have)):
+                walk(f"{prefix}[{i}]", w, h)
+        elif isinstance(want, float) or isinstance(have, float):
+            if abs(want - have) > 1e-9 * max(abs(want), 1e-300):
+                diffs.append(f"{prefix}: {want} vs {have}")
+        elif want != have:
+            diffs.append(f"{prefix}: {want!r} vs {have!r}")
+
+    walk("fixture", golden, doc)
+    if diffs:
+        print(f"FIXTURE DISAGREEMENT ({len(diffs)} fields):")
+        for d in diffs[:40]:
+            print(" ", d)
+        sys.exit(1)
+    print(f"{path}: checked-in fixture matches this generator value-for-value")
+
+
+if __name__ == "__main__":
+    selfcheck()
+    fixture = Path(__file__).resolve().parent.parent / "rust/tests/golden/table1.json"
+    doc = compute_doc()
+    if "--check-only" in sys.argv:
+        compare_against(fixture, doc)
+    else:
+        fixture.parent.mkdir(parents=True, exist_ok=True)
+        fixture.write_text(json.dumps(doc, sort_keys=True, separators=(",", ":")))
+        print(f"wrote {fixture}")
