@@ -26,6 +26,7 @@ pub struct Bench {
     pub warmup_time: Duration,
     results: Vec<CaseResult>,
     notes: Vec<(String, f64)>,
+    sections: Vec<(String, Json)>,
 }
 
 /// Timing result of one case.
@@ -66,6 +67,7 @@ impl Bench {
             },
             results: Vec::new(),
             notes: Vec::new(),
+            sections: Vec::new(),
         }
     }
 
@@ -134,6 +136,15 @@ impl Bench {
         self.notes.push((key.to_string(), value));
     }
 
+    /// Attach a structured JSON payload to the suite (e.g. the sweep
+    /// summary document `repro sweep` embeds in `SWEEP_summary.json`).
+    /// Lands at the top level of [`Bench::to_json`] next to
+    /// `suite`/`cases`/`metrics`; keys must not collide with those
+    /// (colliding keys would be deduplicated by the object builder).
+    pub fn section(&mut self, key: &str, value: Json) {
+        self.sections.push((key.to_string(), value));
+    }
+
     /// Print the machine-readable CSV trailer.
     pub fn finish(&self) {
         println!("---BENCH-CSV---");
@@ -172,12 +183,15 @@ impl Bench {
             .iter()
             .map(|(k, v)| (k.as_str(), Json::Num(*v)))
             .collect());
-        obj(vec![
+        let mut pairs = vec![
             ("suite", Json::Str(self.suite.clone())),
             ("cases", Json::Arr(cases)),
             ("metrics", metrics),
-        ])
-        .to_string()
+        ];
+        for (k, v) in &self.sections {
+            pairs.push((k.as_str(), v.clone()));
+        }
+        obj(pairs).to_string()
     }
 
     /// Write the suite results as a JSON file (`BENCH_sim.json` et al.),
@@ -246,6 +260,23 @@ mod tests {
         );
         let metrics = parsed.req("metrics").unwrap();
         assert!((metrics.req("speedup_x").unwrap().as_f64().unwrap() - 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sections_land_in_json() {
+        let mut b = Bench::new("sectiontest");
+        b.note("n", 1.0);
+        b.section(
+            "sweep",
+            obj(vec![("points", Json::Num(3.0)), ("ok", Json::Bool(true))]),
+        );
+        let parsed = crate::util::json::Json::parse(&b.to_json()).unwrap();
+        let s = parsed.req("sweep").unwrap();
+        assert_eq!(s.req("points").unwrap().as_usize().unwrap(), 3);
+        assert!(s.req("ok").unwrap().as_bool().unwrap());
+        // Standard keys still present.
+        assert_eq!(parsed.req("suite").unwrap().as_str().unwrap(), "sectiontest");
+        assert!(parsed.req("metrics").unwrap().get("n").is_some());
     }
 
     #[test]

@@ -24,8 +24,7 @@ pub mod metrics;
 
 pub use metrics::{Metrics, MetricsSnapshot};
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::mpsc::sync_channel;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -135,52 +134,76 @@ impl Coordinator {
 
     /// Run all jobs to completion; results are returned in input order.
     ///
-    /// Dispatch uses a bounded queue (2× workers) so a slow pool applies
-    /// backpressure to the feeder instead of buffering the workload, and
-    /// a shared receiver so idle workers steal the next job (no static
-    /// partitioning — layer costs are wildly uneven).
+    /// A thin lowering onto [`Coordinator::run_tasks`]: each layer job
+    /// becomes one task that hands the negotiated intra-GEMM thread
+    /// count to the analytic engine (small jobs stay serial, same as
+    /// the engine's own auto mode) and records itself into the shared
+    /// metrics.
     pub fn run(&self, jobs: Vec<LayerJob>) -> Result<Vec<LayerResult>> {
-        let n = jobs.len();
+        let mut tasks: Vec<Box<dyn FnOnce(usize) -> Result<LayerResult> + Send + '_>> =
+            Vec::with_capacity(jobs.len());
+        for job in jobs {
+            let sa = self.sa.clone();
+            let metrics = Arc::clone(&self.metrics);
+            tasks.push(Box::new(move |intra: usize| {
+                let macs = (job.a.rows * job.a.cols * job.w.cols) as u64;
+                let sim_opts = FastSimOpts {
+                    threads: if macs < INTRA_PAR_MIN_MACS { 1 } else { intra },
+                    ..FastSimOpts::default()
+                };
+                let t0 = Instant::now();
+                simulate_gemm_fast_with(&sa, &job.a, &job.w, &sim_opts).map(|sim| {
+                    let wall = t0.elapsed().as_secs_f64();
+                    metrics.record_job(&sim, wall);
+                    LayerResult {
+                        name: job.name,
+                        sim,
+                        wall_secs: wall,
+                    }
+                })
+            }));
+        }
+        self.run_tasks(tasks)
+    }
+
+    /// Alias kept for API compatibility with async-runtime builds.
+    pub fn run_blocking(&self, jobs: Vec<LayerJob>) -> Result<Vec<LayerResult>> {
+        self.run(jobs)
+    }
+
+    /// The worker-pool core both [`Coordinator::run`] and the
+    /// design-space explorer ([`crate::explore`]) execute on: bounded
+    /// dispatch queue (2× workers, so a slow pool applies backpressure
+    /// to the feeder instead of buffering the workload), shared receiver
+    /// (idle workers steal the next task — no static partitioning, task
+    /// costs are wildly uneven), results in input order, first error
+    /// wins. Each task receives the intra-GEMM thread count negotiated
+    /// for this batch, so work that simulates GEMMs can hand it to the
+    /// analytic engine.
+    pub fn run_tasks<'env, T: Send + 'env>(
+        &self,
+        tasks: Vec<Box<dyn FnOnce(usize) -> Result<T> + Send + 'env>>,
+    ) -> Result<Vec<T>> {
+        let n = tasks.len();
         if n == 0 {
             return Ok(Vec::new());
         }
-        let (layer_workers, intra) = self.negotiate(n);
-        let (job_tx, job_rx): (SyncSender<(usize, LayerJob)>, Receiver<(usize, LayerJob)>) =
-            sync_channel(layer_workers * 2);
+        let (workers, intra) = self.negotiate(n);
+        let (job_tx, job_rx) = sync_channel::<(
+            usize,
+            Box<dyn FnOnce(usize) -> Result<T> + Send + 'env>,
+        )>(workers * 2);
         let job_rx = Arc::new(Mutex::new(job_rx));
-        let (res_tx, res_rx) = sync_channel::<(usize, Result<LayerResult>)>(n);
-        let in_flight = Arc::new(AtomicUsize::new(0));
+        let (res_tx, res_rx) = sync_channel::<(usize, Result<T>)>(n);
 
-        std::thread::scope(|scope| -> Result<Vec<LayerResult>> {
-            for _ in 0..layer_workers {
+        std::thread::scope(|scope| -> Result<Vec<T>> {
+            for _ in 0..workers {
                 let job_rx = Arc::clone(&job_rx);
                 let res_tx = res_tx.clone();
-                let sa = self.sa.clone();
-                let metrics = Arc::clone(&self.metrics);
-                let in_flight = Arc::clone(&in_flight);
                 scope.spawn(move || loop {
                     let next = { job_rx.lock().expect("queue poisoned").recv() };
-                    let Ok((idx, job)) = next else { break };
-                    in_flight.fetch_add(1, Ordering::Relaxed);
-                    // Negotiated intra threads, but only where the sweep
-                    // amortizes spawning — small jobs run serial, same as
-                    // the engine's own auto mode.
-                    let macs = (job.a.rows * job.a.cols * job.w.cols) as u64;
-                    let sim_opts = FastSimOpts {
-                        threads: if macs < INTRA_PAR_MIN_MACS { 1 } else { intra },
-                        ..FastSimOpts::default()
-                    };
-                    let t0 = Instant::now();
-                    let out = simulate_gemm_fast_with(&sa, &job.a, &job.w, &sim_opts).map(|sim| {
-                        let wall = t0.elapsed().as_secs_f64();
-                        metrics.record_job(&sim, wall);
-                        LayerResult {
-                            name: job.name,
-                            sim,
-                            wall_secs: wall,
-                        }
-                    });
-                    in_flight.fetch_sub(1, Ordering::Relaxed);
+                    let Ok((idx, task)) = next else { break };
+                    let out = task(intra);
                     if res_tx.send((idx, out)).is_err() {
                         break;
                     }
@@ -188,17 +211,15 @@ impl Coordinator {
             }
             drop(res_tx);
 
-            // Leader feeds the bounded queue from this thread.
             let feeder = scope.spawn(move || {
-                for (idx, job) in jobs.into_iter().enumerate() {
-                    if job_tx.send((idx, job)).is_err() {
+                for (idx, task) in tasks.into_iter().enumerate() {
+                    if job_tx.send((idx, task)).is_err() {
                         break;
                     }
                 }
-                // Dropping job_tx closes the queue; workers drain and exit.
             });
 
-            let mut results: Vec<Option<LayerResult>> = (0..n).map(|_| None).collect();
+            let mut results: Vec<Option<T>> = (0..n).map(|_| None).collect();
             let mut first_err: Option<Error> = None;
             for _ in 0..n {
                 match res_rx.recv() {
@@ -221,15 +242,10 @@ impl Coordinator {
                 .into_iter()
                 .enumerate()
                 .map(|(i, r)| {
-                    r.ok_or_else(|| Error::Coordinator(format!("job {i} lost")))
+                    r.ok_or_else(|| Error::Coordinator(format!("task {i} lost")))
                 })
                 .collect()
         })
-    }
-
-    /// Alias kept for API compatibility with async-runtime builds.
-    pub fn run_blocking(&self, jobs: Vec<LayerJob>) -> Result<Vec<LayerResult>> {
-        self.run(jobs)
     }
 }
 
@@ -381,6 +397,47 @@ mod tests {
         // cap: no auto intra threads behind the user's back.
         assert_eq!(Coordinator::new(&sa, 1).negotiate(1), (1, 1));
         assert_eq!(Coordinator::new(&sa, 2).negotiate(8), (2, 1));
+    }
+
+    #[test]
+    fn run_tasks_orders_results_and_passes_intra() {
+        let sa = SaConfig::new_ws(4, 4, 8).unwrap();
+        let coord = Coordinator::new(&sa, 3);
+        let data: Vec<usize> = (0..17).collect();
+        let tasks: Vec<Box<dyn FnOnce(usize) -> Result<usize> + Send>> = data
+            .iter()
+            .map(|&i| {
+                Box::new(move |intra: usize| {
+                    assert!(intra >= 1);
+                    Ok(i * 2)
+                }) as Box<dyn FnOnce(usize) -> Result<usize> + Send>
+            })
+            .collect();
+        let out = coord.run_tasks(tasks).unwrap();
+        assert_eq!(out, (0..17).map(|i| i * 2).collect::<Vec<_>>());
+        assert!(coord
+            .run_tasks::<usize>(Vec::new())
+            .unwrap()
+            .is_empty());
+    }
+
+    #[test]
+    fn run_tasks_surfaces_errors_and_borrows() {
+        let sa = SaConfig::new_ws(4, 4, 8).unwrap();
+        let coord = Coordinator::new(&sa, 2);
+        // Tasks may borrow caller-owned state (scoped threads).
+        let shared = vec![10usize, 20, 30];
+        let mut tasks: Vec<Box<dyn FnOnce(usize) -> Result<usize> + Send + '_>> =
+            Vec::new();
+        for i in 0..shared.len() {
+            let shared = &shared;
+            tasks.push(Box::new(move |_| Ok(shared[i] + 1)));
+        }
+        tasks.push(Box::new(|_| {
+            Err(Error::Coordinator("task failed".to_string()))
+        }));
+        assert!(coord.run_tasks(tasks).is_err());
+        assert_eq!(shared.len(), 3); // still borrowed-alive afterwards
     }
 
     #[test]

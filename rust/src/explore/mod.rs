@@ -1,0 +1,1081 @@
+//! Parallel floorplan design-space exploration (DSE).
+//!
+//! The paper answers one question — "what is the best PE aspect ratio
+//! for a 32×32 WS array on ResNet50?" — with one number (W/H ≈ 3.8).
+//! This module answers the general question "what is the best floorplan
+//! for *this* workload" by sweeping three axes at a fixed PE budget:
+//!
+//! * **array geometry** — every `rows × cols` factorization of the
+//!   budget ([`space::factorizations`]) plus a continuous log-spaced PE
+//!   aspect-ratio grid per geometry ([`space::aspect_grid`]);
+//! * **dataflow** — WS (the paper's target, fast analytic engine), OS
+//!   and IS (the ablation engines), which change which buses are wide
+//!   and busy and hence the optimal aspect;
+//! * **workload** — the paper's Table-I ResNet50 layers and the
+//!   synthetic conv mix, lowered through the same seeded
+//!   im2col + quantize pipeline as `repro run`.
+//!
+//! Every point is evaluated with the exact toggle-counting engines plus
+//! [`crate::power::evaluate`], so the sweep output is bit-deterministic:
+//! the same [`SweepConfig`] produces the same [`SweepOutput`] (and the
+//! same summary JSON) at any worker count. Sweep points are sharded
+//! across the [`Coordinator`] worker pool via
+//! [`Coordinator::run_tasks`], reusing its `negotiate` split (layer
+//! fan-out × intra-GEMM threads) and metrics. Completed simulations are
+//! memoized in the serve-layer [`ResultCache`] keyed by
+//! `(dataflow-salted config fingerprint, GEMM shape, operand digest)`,
+//! so repeated evaluations — the square baseline re-read, a re-run of
+//! the same sweep, overlapping sweeps — skip the engines entirely.
+//!
+//! Per point the sweep reports the measured activities, the eq.-5/eq.-6
+//! closed-form optima, the square-PE baseline and the swept optimum; per
+//! workload it reports the Pareto frontier of interconnect power vs
+//! cycles ([`pareto::pareto_min2`]) with the square most-square-geometry
+//! WS baseline annotated. `repro sweep` drives this module and writes
+//! `SWEEP_summary.json` ([`sweep_bench`]), a markdown report
+//! ([`crate::report::sweep_markdown`]) and an SVG scatter
+//! ([`crate::floorplan::svg::render_scatter_svg`]).
+
+pub mod pareto;
+pub mod space;
+
+pub use pareto::pareto_min2;
+pub use space::{aspect_grid, factorizations, grid_step, most_square};
+
+use std::collections::HashSet;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::arch::{PeMicroArch, SaConfig};
+use crate::bench_util::Bench;
+use crate::coordinator::{Coordinator, Metrics};
+use crate::error::{Error, Result};
+use crate::floorplan::{optimizer, PeGeometry};
+use crate::gemm::Matrix;
+use crate::power::{self, TechParams};
+use crate::report::pipeline::layer_operands;
+use crate::serve::cache::{
+    mix, operand_digest, sa_fingerprint, CacheKey, CacheStats, ResultCache,
+};
+use crate::sim::fast::{simulate_gemm_fast_with, FastSimOpts, INTRA_PAR_MIN_MACS};
+use crate::sim::is::simulate_gemm_is;
+use crate::sim::os::simulate_gemm_os;
+use crate::sim::GemmSim;
+use crate::util::json::{obj, Json};
+use crate::workloads::{synth_sweep_layers, table1_layers, ActivationModel, SynthGen};
+
+/// Dataflow axis of the sweep. WS/OS map onto [`crate::arch::Dataflow`];
+/// IS is the input-stationary ablation engine (same wide-psum vertical
+/// bus as WS, so the asymmetry conclusion transfers — see
+/// [`crate::sim::is`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DataflowKind {
+    /// Weight-stationary (the paper's configuration; fast engine).
+    Ws,
+    /// Output-stationary ablation.
+    Os,
+    /// Input-stationary ablation.
+    Is,
+}
+
+impl DataflowKind {
+    /// Short lowercase name (CLI/JSON spelling).
+    pub fn name(&self) -> &'static str {
+        match self {
+            DataflowKind::Ws => "ws",
+            DataflowKind::Os => "os",
+            DataflowKind::Is => "is",
+        }
+    }
+
+    /// Parse the CLI/JSON spelling.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.trim() {
+            "ws" => Ok(DataflowKind::Ws),
+            "os" => Ok(DataflowKind::Os),
+            "is" => Ok(DataflowKind::Is),
+            other => Err(Error::config(format!(
+                "unknown dataflow `{other}` (expected ws, os or is)"
+            ))),
+        }
+    }
+
+    /// Cache-fingerprint salt: the three engines produce different
+    /// statistics for the same array/operands and must never alias in
+    /// the result cache.
+    fn salt(&self) -> u64 {
+        match self {
+            DataflowKind::Ws => 0x5753_0001,
+            DataflowKind::Os => 0x4F53_0002,
+            DataflowKind::Is => 0x4953_0003,
+        }
+    }
+}
+
+/// Workload axis of the sweep.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkloadKind {
+    /// The paper's six Table-I ResNet50 layers.
+    Table1,
+    /// The small synthetic conv mix ([`synth_sweep_layers`]).
+    Synth,
+}
+
+impl WorkloadKind {
+    /// Short lowercase name (CLI/JSON spelling).
+    pub fn name(&self) -> &'static str {
+        match self {
+            WorkloadKind::Table1 => "table1",
+            WorkloadKind::Synth => "synth",
+        }
+    }
+
+    /// Conv layers of this workload.
+    pub fn layers(&self) -> Vec<crate::workloads::ConvLayer> {
+        match self {
+            WorkloadKind::Table1 => table1_layers(),
+            WorkloadKind::Synth => synth_sweep_layers(),
+        }
+    }
+}
+
+/// Everything one sweep varies and how.
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    /// Total PEs every geometry must provide (the fixed silicon budget).
+    pub pe_budget: usize,
+    /// Horizontal bus width. Must be 16: the workload pipeline quantizes
+    /// operands to int16 (the paper's §IV precision).
+    pub input_bits: u32,
+    /// Aspect-ratio grid, log-spaced inclusive `[lo, hi]`.
+    pub aspect_lo: f64,
+    /// Upper end of the aspect grid.
+    pub aspect_hi: f64,
+    /// Grid points (>= 2).
+    pub aspect_points: usize,
+    /// Dataflows to sweep (each must appear once).
+    pub dataflows: Vec<DataflowKind>,
+    /// Workloads to sweep (each must appear once).
+    pub workloads: Vec<WorkloadKind>,
+    /// Per-workload layer cap (0 = all layers) — the CI smoke knob.
+    pub max_layers: usize,
+    /// Operand-generation seed (scenario determinism).
+    pub seed: u64,
+    /// Coordinator workers (0 = all CPUs). Never serialized: the sweep
+    /// output is worker-count-invariant by construction.
+    pub workers: usize,
+    /// Shared result-cache bound in entries (0 disables memoization).
+    /// [`Explorer::new`] raises a non-zero bound to one run's working
+    /// set (layers × dataflows × geometries): mid-run LRU eviction under
+    /// parallel insertion would make the victim set — and hence the
+    /// summary's cache counters — scheduling-dependent, breaking the
+    /// byte-identical summary contract.
+    pub cache_capacity: usize,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        SweepConfig {
+            pe_budget: 1024,
+            input_bits: 16,
+            aspect_lo: 0.25,
+            aspect_hi: 16.0,
+            aspect_points: 25,
+            dataflows: vec![DataflowKind::Ws],
+            workloads: vec![WorkloadKind::Table1, WorkloadKind::Synth],
+            max_layers: 0,
+            seed: 2023,
+            workers: 0,
+            cache_capacity: 256,
+        }
+    }
+}
+
+impl SweepConfig {
+    /// Validate invariants (called by [`Explorer::new`]).
+    pub fn validate(&self) -> Result<()> {
+        if self.pe_budget == 0 {
+            return Err(Error::config("pe_budget must be positive"));
+        }
+        if self.input_bits != 16 {
+            return Err(Error::config(
+                "input_bits must be 16: the workload pipeline quantizes to int16",
+            ));
+        }
+        if !(self.aspect_lo > 0.0) || self.aspect_hi <= self.aspect_lo {
+            return Err(Error::config("need 0 < aspect_lo < aspect_hi"));
+        }
+        if self.aspect_points < 2 {
+            return Err(Error::config("aspect_points must be >= 2"));
+        }
+        if self.dataflows.is_empty() || self.workloads.is_empty() {
+            return Err(Error::config("need at least one dataflow and one workload"));
+        }
+        for (i, d) in self.dataflows.iter().enumerate() {
+            if self.dataflows[..i].contains(d) {
+                return Err(Error::config(format!("duplicate dataflow `{}`", d.name())));
+            }
+        }
+        for (i, w) in self.workloads.iter().enumerate() {
+            if self.workloads[..i].contains(w) {
+                return Err(Error::config(format!("duplicate workload `{}`", w.name())));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Power of one `(geometry, dataflow, workload)` point at one PE aspect
+/// ratio (workload-average, matching the paper's "Average" bars).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AspectEval {
+    /// PE aspect ratio `W/H`.
+    pub aspect: f64,
+    /// Whether this sample sits on the log grid (the injected square and
+    /// eq.-6 samples are off-grid annotations).
+    pub on_grid: bool,
+    /// Data-bus-only interconnect power (mW) — the eq.-6 objective.
+    pub bus_mw: f64,
+    /// Full interconnect power (mW): buses + weight chain + clock/ctrl.
+    pub interconnect_mw: f64,
+    /// Total power (mW).
+    pub total_mw: f64,
+}
+
+/// One evaluated `(workload, dataflow, rows × cols)` sweep point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConfigPoint {
+    /// Workload the point was measured on.
+    pub workload: WorkloadKind,
+    /// Dataflow/engine.
+    pub dataflow: DataflowKind,
+    /// Array rows.
+    pub rows: usize,
+    /// Array columns.
+    pub cols: usize,
+    /// PE area from the gate-count model (µm²; depends on `acc_bits`,
+    /// hence on `rows`).
+    pub pe_area_um2: f64,
+    /// Total array cycles across the workload's layers.
+    pub cycles: u64,
+    /// Total useful MACs across the workload's layers.
+    pub macs: u64,
+    /// Mean horizontal switching activity across layers.
+    pub a_h: f64,
+    /// Mean vertical switching activity across layers.
+    pub a_v: f64,
+    /// Eq. 5 closed form (`B_v/B_h`, wirelength-optimal) under the WS
+    /// bus-width convention (`B_v` = accumulator width). For OS points —
+    /// whose *streaming* vertical operands are only `B_h` wide — this
+    /// column is reported for reference against the WS machine, not as
+    /// the OS optimum (the swept `best_grid_bus` is).
+    pub eq5_ratio: f64,
+    /// Eq. 6 closed form from the measured mean activities. Unlike
+    /// eq. 5 this is width-convention-independent: activities are
+    /// measured against the same width the toggles were counted on, so
+    /// the widths cancel and eq. 6 equals the measured vertical/
+    /// horizontal toggle-rate ratio — the true data-bus power argmin
+    /// for whichever engine produced the statistics.
+    pub eq6_ratio: f64,
+    /// All evaluated aspect samples, ascending by aspect.
+    pub aspects: Vec<AspectEval>,
+    /// The square-PE sample (aspect exactly 1.0).
+    pub square: AspectEval,
+    /// Minimum-interconnect sample over all aspects (grid + injected).
+    pub best: AspectEval,
+    /// Minimum data-bus-power sample restricted to *on-grid* aspects:
+    /// the swept cross-check of eq. 6 (the injected eq.-6 sample is
+    /// excluded so the check is not circular).
+    pub best_grid_bus: AspectEval,
+}
+
+impl ConfigPoint {
+    /// Compact display label, e.g. `32x32 ws`.
+    pub fn label(&self) -> String {
+        format!("{}x{} {}", self.rows, self.cols, self.dataflow.name())
+    }
+
+    /// Fractional interconnect saving of the best aspect vs this
+    /// point's own square-PE floorplan.
+    pub fn interconnect_saving_vs_square(&self) -> f64 {
+        1.0 - self.best.interconnect_mw / self.square.interconnect_mw
+    }
+}
+
+/// Per-workload headline: best swept point vs the square baseline, and
+/// the eq.-6 cross-check.
+#[derive(Debug, Clone)]
+pub struct Headline {
+    /// Workload.
+    pub workload: WorkloadKind,
+    /// Square-PE interconnect power of the most-square WS baseline (mW).
+    pub baseline_interconnect_mw: f64,
+    /// Square-PE total power of the baseline (mW).
+    pub baseline_total_mw: f64,
+    /// Baseline cycles.
+    pub baseline_cycles: u64,
+    /// Label of the minimum-interconnect swept point.
+    pub best_label: String,
+    /// Aspect ratio of that point's optimum.
+    pub best_aspect: f64,
+    /// Its interconnect power (mW).
+    pub best_interconnect_mw: f64,
+    /// Fractional interconnect saving vs the square baseline.
+    pub interconnect_saving: f64,
+    /// Eq.-6 ratio of the baseline geometry under WS.
+    pub eq6_ratio: f64,
+    /// Whether eq. 6 lands within one grid step of the swept bus-power
+    /// optimum of the baseline geometry (the paper's closed form vs the
+    /// brute-force sweep).
+    pub eq6_within_one_step: bool,
+    /// Whether the best swept point beats the square baseline on
+    /// interconnect power (the paper's ordering, generalized).
+    pub best_beats_square: bool,
+}
+
+/// Everything one sweep run produces.
+#[derive(Debug, Clone)]
+pub struct SweepOutput {
+    /// All swept points, ordered workload-major, then dataflow, then
+    /// ascending rows — the deterministic enumeration order.
+    pub points: Vec<ConfigPoint>,
+    /// One square most-square-geometry WS baseline per workload
+    /// (evaluated after the sweep, so its lookups hit the cache when WS
+    /// is part of the sweep).
+    pub baselines: Vec<ConfigPoint>,
+    /// Per workload: indices into `points` of the Pareto frontier of
+    /// (cycles, best interconnect power), sorted by cycles.
+    pub pareto: Vec<Vec<usize>>,
+    /// Result-cache traffic of this run (delta, not cumulative).
+    pub cache: CacheStats,
+}
+
+impl SweepOutput {
+    /// Headline numbers for workload index `wi` of `cfg.workloads`.
+    pub fn headline(&self, cfg: &SweepConfig, wi: usize) -> Headline {
+        let kind = cfg.workloads[wi];
+        let base = &self.baselines[wi];
+        let mine: Vec<&ConfigPoint> =
+            self.points.iter().filter(|p| p.workload == kind).collect();
+        let best_point = mine
+            .iter()
+            .copied()
+            .min_by(|a, b| {
+                a.best
+                    .interconnect_mw
+                    .total_cmp(&b.best.interconnect_mw)
+                    .then(a.rows.cmp(&b.rows))
+                    .then(a.dataflow.name().cmp(b.dataflow.name()))
+            })
+            .expect("sweep produced points for every workload");
+        // The eq.-6 cross-check anchors on the baseline geometry's WS
+        // sweep point (the paper's own configuration).
+        let anchor = mine
+            .iter()
+            .copied()
+            .find(|p| {
+                p.rows == base.rows && p.cols == base.cols && p.dataflow == DataflowKind::Ws
+            })
+            .unwrap_or(base);
+        let step = grid_step(cfg.aspect_lo, cfg.aspect_hi, cfg.aspect_points);
+        let eq6_within_one_step = (anchor.eq6_ratio / anchor.best_grid_bus.aspect)
+            .ln()
+            .abs()
+            <= step.ln() * (1.0 + 1e-9) + 1e-12;
+        Headline {
+            workload: kind,
+            baseline_interconnect_mw: base.square.interconnect_mw,
+            baseline_total_mw: base.square.total_mw,
+            baseline_cycles: base.cycles,
+            best_label: best_point.label(),
+            best_aspect: best_point.best.aspect,
+            best_interconnect_mw: best_point.best.interconnect_mw,
+            interconnect_saving: 1.0
+                - best_point.best.interconnect_mw / base.square.interconnect_mw,
+            eq6_ratio: anchor.eq6_ratio,
+            eq6_within_one_step,
+            best_beats_square: best_point.best.interconnect_mw
+                < base.square.interconnect_mw,
+        }
+    }
+}
+
+/// One lowered workload layer: quantized GEMM operands + cache digest.
+struct PreparedJob {
+    a: Arc<Matrix<i32>>,
+    w: Arc<Matrix<i32>>,
+    digest: u64,
+}
+
+/// One lowered workload.
+struct PreparedWorkload {
+    jobs: Vec<PreparedJob>,
+}
+
+fn prepare_workload(
+    kind: WorkloadKind,
+    widx: usize,
+    cfg: &SweepConfig,
+) -> Result<PreparedWorkload> {
+    let mut layers = kind.layers();
+    if cfg.max_layers > 0 && layers.len() > cfg.max_layers {
+        layers.truncate(cfg.max_layers);
+    }
+    // Per-workload seed split so adding a workload never shifts the
+    // operand streams of the others.
+    let mut gen =
+        SynthGen::new(cfg.seed ^ (widx as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    let model = ActivationModel::default();
+    let mut jobs = Vec::with_capacity(layers.len());
+    for layer in &layers {
+        let (a, w) = layer_operands(layer, &mut gen, None, &model)?;
+        let digest = operand_digest(a.rows, a.cols, &a.data, w.cols, &w.data);
+        jobs.push(PreparedJob {
+            a: Arc::new(a),
+            w: Arc::new(w),
+            digest,
+        });
+    }
+    Ok(PreparedWorkload { jobs })
+}
+
+/// Engine dispatch: WS uses the fast analytic engine with the negotiated
+/// intra-GEMM threads; OS/IS use the ablation engines (serial).
+fn simulate(
+    df: DataflowKind,
+    sa: &SaConfig,
+    a: &Matrix<i32>,
+    w: &Matrix<i32>,
+    intra: usize,
+) -> Result<GemmSim> {
+    match df {
+        DataflowKind::Ws => {
+            let macs = (a.rows * a.cols * w.cols) as u64;
+            let opts = FastSimOpts {
+                threads: if macs < INTRA_PAR_MIN_MACS { 1 } else { intra },
+                ..FastSimOpts::default()
+            };
+            simulate_gemm_fast_with(sa, a, w, &opts)
+        }
+        DataflowKind::Os => simulate_gemm_os(sa, a, w),
+        DataflowKind::Is => simulate_gemm_is(sa, a, w),
+    }
+}
+
+/// The sweep engine: owns the shared result cache and a coordinator pool
+/// whose `negotiate`/metrics the sweep reuses. Construct once, call
+/// [`Explorer::run`] as often as needed — repeat runs are served from
+/// the cache.
+pub struct Explorer {
+    cfg: SweepConfig,
+    tech: TechParams,
+    coord: Coordinator,
+    cache: Mutex<ResultCache>,
+}
+
+impl Explorer {
+    /// New explorer for a validated sweep configuration.
+    pub fn new(cfg: SweepConfig) -> Result<Self> {
+        cfg.validate()?;
+        let (br, bc) = most_square(cfg.pe_budget);
+        let sa = SaConfig::new_ws(br, bc, cfg.input_bits)?;
+        let coord = Coordinator::new(&sa, cfg.workers);
+        // One run's unique cache keys: every (workload layer, dataflow,
+        // geometry) triple, plus the post-sweep WS baseline's keys when
+        // WS is not itself swept. A non-zero bound below this would
+        // evict mid-run, and parallel insertion order would then pick
+        // scheduling-dependent victims — the post-sweep baseline reads
+        // (and the summary's cache counters) would stop being
+        // deterministic. Raise the bound so one run never evicts; zero
+        // still disables memoization entirely (deterministically).
+        let total_layers: usize = cfg
+            .workloads
+            .iter()
+            .map(|w| {
+                let n = w.layers().len();
+                if cfg.max_layers > 0 {
+                    n.min(cfg.max_layers)
+                } else {
+                    n
+                }
+            })
+            .sum();
+        let mut run_keys =
+            total_layers * cfg.dataflows.len() * factorizations(cfg.pe_budget).len();
+        if !cfg.dataflows.contains(&DataflowKind::Ws) {
+            run_keys += total_layers; // the baseline's own WS entries
+        }
+        let capacity = if cfg.cache_capacity == 0 {
+            0
+        } else {
+            cfg.cache_capacity.max(run_keys)
+        };
+        let cache = Mutex::new(ResultCache::new(capacity));
+        Ok(Explorer {
+            tech: TechParams::default(),
+            coord,
+            cache,
+            cfg,
+        })
+    }
+
+    /// Sweep configuration.
+    pub fn config(&self) -> &SweepConfig {
+        &self.cfg
+    }
+
+    /// Underlying coordinator (negotiation/metrics introspection).
+    pub fn coordinator(&self) -> &Coordinator {
+        &self.coord
+    }
+
+    /// Point-in-time cache statistics (cumulative across runs).
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.lock().expect("cache poisoned").stats()
+    }
+
+    /// Run the full sweep. Deterministic: the same configuration yields
+    /// the same output at any worker count (the summary JSON is asserted
+    /// byte-identical by `tests/sweep_determinism.rs`).
+    pub fn run(&self) -> Result<SweepOutput> {
+        let stats0 = self.cache_stats();
+
+        // 1. Lower every workload to quantized GEMM operands (seeded,
+        //    order-fixed — the scenario's determinism root).
+        let prepared: Vec<PreparedWorkload> = self
+            .cfg
+            .workloads
+            .iter()
+            .enumerate()
+            .map(|(wi, wk)| prepare_workload(*wk, wi, &self.cfg))
+            .collect::<Result<Vec<_>>>()?;
+
+        // 2. Deterministic point enumeration: workload-major, then
+        //    dataflow, then ascending rows.
+        let geoms = factorizations(self.cfg.pe_budget);
+        let mut descs: Vec<(usize, DataflowKind, usize, usize)> = Vec::new();
+        for wi in 0..prepared.len() {
+            for &df in &self.cfg.dataflows {
+                for &(r, c) in &geoms {
+                    descs.push((wi, df, r, c));
+                }
+            }
+        }
+
+        // 3. Shard points across the coordinator pool. Results come back
+        //    in input order; each task gets the negotiated intra-GEMM
+        //    thread count for its WS simulations.
+        let metrics = self.coord.metrics();
+        let mut tasks: Vec<Box<dyn FnOnce(usize) -> Result<ConfigPoint> + Send + '_>> =
+            Vec::with_capacity(descs.len());
+        for &(wi, df, r, c) in &descs {
+            let wl = &prepared[wi];
+            let wk = self.cfg.workloads[wi];
+            let metrics = Arc::clone(&metrics);
+            tasks.push(Box::new(move |intra: usize| {
+                self.eval_config(wk, wl, df, r, c, intra, &metrics)
+            }));
+        }
+        let points = self.coord.run_tasks(tasks)?;
+
+        // 4. Square most-square WS baselines, evaluated after the
+        //    fan-out so their lookups deterministically hit the cache
+        //    whenever WS was part of the sweep.
+        let (br, bc) = most_square(self.cfg.pe_budget);
+        let intra = self.coord.negotiate(1).1;
+        let mut baselines = Vec::with_capacity(prepared.len());
+        for (wi, wl) in prepared.iter().enumerate() {
+            baselines.push(self.eval_config(
+                self.cfg.workloads[wi],
+                wl,
+                DataflowKind::Ws,
+                br,
+                bc,
+                intra,
+                &metrics,
+            )?);
+        }
+
+        // 5. Per-workload Pareto frontier over (cycles, interconnect).
+        let pareto: Vec<Vec<usize>> = (0..prepared.len())
+            .map(|wi| {
+                let idxs: Vec<usize> =
+                    (0..points.len()).filter(|&i| descs[i].0 == wi).collect();
+                pareto_min2(
+                    &idxs,
+                    |&i| points[i].cycles as f64,
+                    |&i| points[i].best.interconnect_mw,
+                )
+                .into_iter()
+                .map(|k| idxs[k])
+                .collect()
+            })
+            .collect();
+
+        let stats1 = self.cache_stats();
+        Ok(SweepOutput {
+            points,
+            baselines,
+            pareto,
+            cache: CacheStats {
+                hits: stats1.hits - stats0.hits,
+                misses: stats1.misses - stats0.misses,
+                evictions: stats1.evictions - stats0.evictions,
+                len: stats1.len,
+                capacity: stats1.capacity,
+            },
+        })
+    }
+
+    /// Evaluate one `(workload, dataflow, geometry)` point: simulate
+    /// every layer (through the shared result cache), then sweep the PE
+    /// aspect grid over the power model.
+    #[allow(clippy::too_many_arguments)]
+    fn eval_config(
+        &self,
+        kind: WorkloadKind,
+        wl: &PreparedWorkload,
+        df: DataflowKind,
+        rows: usize,
+        cols: usize,
+        intra: usize,
+        metrics: &Metrics,
+    ) -> Result<ConfigPoint> {
+        let sa = SaConfig::new_ws(rows, cols, self.cfg.input_bits)?;
+        let fp = mix(sa_fingerprint(&sa), df.salt());
+
+        let mut sims: Vec<Arc<GemmSim>> = Vec::with_capacity(wl.jobs.len());
+        for job in &wl.jobs {
+            let key = CacheKey {
+                sa_fingerprint: fp,
+                shape: (job.a.rows, job.a.cols, job.w.cols),
+                input_digest: job.digest,
+            };
+            let cached = { self.cache.lock().expect("cache poisoned").get(&key) };
+            metrics.record_cache_lookup(cached.is_some());
+            let sim = match cached {
+                Some(sim) => sim,
+                None => {
+                    let t0 = Instant::now();
+                    let sim = simulate(df, &sa, &job.a, &job.w, intra)?;
+                    metrics.record_job(&sim, t0.elapsed().as_secs_f64());
+                    let sim = Arc::new(sim);
+                    self.cache
+                        .lock()
+                        .expect("cache poisoned")
+                        .insert(key, Arc::clone(&sim));
+                    sim
+                }
+            };
+            sims.push(sim);
+        }
+
+        let n = sims.len() as f64;
+        let cycles: u64 = sims.iter().map(|s| s.cycles).sum();
+        let macs: u64 = sims.iter().map(|s| s.macs).sum();
+        let a_h = sims
+            .iter()
+            .map(|s| s.stats.horizontal.activity())
+            .sum::<f64>()
+            / n;
+        let a_v = sims
+            .iter()
+            .map(|s| s.stats.vertical.activity())
+            .sum::<f64>()
+            / n;
+        let eq5_ratio = optimizer::wirelength_optimal_ratio(&sa);
+        let eq6_ratio = if a_h > 0.0 && a_v > 0.0 {
+            optimizer::closed_form_ratio(&sa, a_h, a_v)
+        } else {
+            eq5_ratio
+        };
+        let pe_area_um2 = PeMicroArch::default().cost(&sa).area_um2;
+
+        // Aspect samples: the log grid plus the square PE and the eq.-6
+        // prediction as off-grid annotations (skipped when they collide
+        // with a grid point exactly).
+        let mut samples: Vec<(f64, bool)> =
+            aspect_grid(self.cfg.aspect_lo, self.cfg.aspect_hi, self.cfg.aspect_points)
+                .into_iter()
+                .map(|a| (a, true))
+                .collect();
+        for extra in [1.0, eq6_ratio] {
+            if extra.is_finite() && extra > 0.0 && !samples.iter().any(|&(a, _)| a == extra)
+            {
+                samples.push((extra, false));
+            }
+        }
+        samples.sort_by(|a, b| a.0.total_cmp(&b.0));
+
+        let mut aspects: Vec<AspectEval> = Vec::with_capacity(samples.len());
+        for &(aspect, on_grid) in &samples {
+            let pe = PeGeometry::new(pe_area_um2, aspect)?;
+            let (mut bus, mut ic, mut tot) = (0.0, 0.0, 0.0);
+            for s in &sims {
+                let p = power::evaluate(&sa, &pe, &self.tech, s);
+                bus += p.bus_mw();
+                ic += p.interconnect_mw();
+                tot += p.total_mw();
+            }
+            aspects.push(AspectEval {
+                aspect,
+                on_grid,
+                bus_mw: bus / n,
+                interconnect_mw: ic / n,
+                total_mw: tot / n,
+            });
+        }
+
+        let square = *aspects
+            .iter()
+            .find(|e| e.aspect == 1.0)
+            .expect("aspect 1.0 is always sampled");
+        let best = *aspects
+            .iter()
+            .min_by(|a, b| {
+                a.interconnect_mw
+                    .total_cmp(&b.interconnect_mw)
+                    .then(a.aspect.total_cmp(&b.aspect))
+            })
+            .expect("non-empty aspect grid");
+        let best_grid_bus = *aspects
+            .iter()
+            .filter(|e| e.on_grid)
+            .min_by(|a, b| a.bus_mw.total_cmp(&b.bus_mw).then(a.aspect.total_cmp(&b.aspect)))
+            .expect("grid samples are non-empty");
+
+        Ok(ConfigPoint {
+            workload: kind,
+            dataflow: df,
+            rows,
+            cols,
+            pe_area_um2,
+            cycles,
+            macs,
+            a_h,
+            a_v,
+            eq5_ratio,
+            eq6_ratio,
+            aspects,
+            square,
+            best,
+            best_grid_bus,
+        })
+    }
+}
+
+fn aspect_json(e: &AspectEval) -> Json {
+    obj(vec![
+        ("aspect", Json::Num(e.aspect)),
+        ("on_grid", Json::Bool(e.on_grid)),
+        ("bus_mw", Json::Num(e.bus_mw)),
+        ("interconnect_mw", Json::Num(e.interconnect_mw)),
+        ("total_mw", Json::Num(e.total_mw)),
+    ])
+}
+
+fn point_json(p: &ConfigPoint, on_frontier: bool) -> Json {
+    obj(vec![
+        ("workload", Json::Str(p.workload.name().to_string())),
+        ("dataflow", Json::Str(p.dataflow.name().to_string())),
+        ("rows", Json::Num(p.rows as f64)),
+        ("cols", Json::Num(p.cols as f64)),
+        ("pe_area_um2", Json::Num(p.pe_area_um2)),
+        ("cycles", Json::Num(p.cycles as f64)),
+        ("macs", Json::Num(p.macs as f64)),
+        ("a_h", Json::Num(p.a_h)),
+        ("a_v", Json::Num(p.a_v)),
+        ("eq5_ratio", Json::Num(p.eq5_ratio)),
+        ("eq6_ratio", Json::Num(p.eq6_ratio)),
+        ("square", aspect_json(&p.square)),
+        ("best", aspect_json(&p.best)),
+        ("best_grid_bus", aspect_json(&p.best_grid_bus)),
+        ("pareto", Json::Bool(on_frontier)),
+    ])
+}
+
+fn headline_json(h: &Headline) -> Json {
+    obj(vec![
+        ("workload", Json::Str(h.workload.name().to_string())),
+        (
+            "baseline_interconnect_mw",
+            Json::Num(h.baseline_interconnect_mw),
+        ),
+        ("baseline_total_mw", Json::Num(h.baseline_total_mw)),
+        ("baseline_cycles", Json::Num(h.baseline_cycles as f64)),
+        ("best_label", Json::Str(h.best_label.clone())),
+        ("best_aspect", Json::Num(h.best_aspect)),
+        ("best_interconnect_mw", Json::Num(h.best_interconnect_mw)),
+        (
+            "interconnect_saving_pct",
+            Json::Num(100.0 * h.interconnect_saving),
+        ),
+        ("eq6_ratio", Json::Num(h.eq6_ratio)),
+        ("eq6_within_one_step", Json::Bool(h.eq6_within_one_step)),
+        ("best_beats_square", Json::Bool(h.best_beats_square)),
+    ])
+}
+
+/// The machine-readable sweep document: configuration echo, every point
+/// with its annotations and Pareto membership, baselines, per-workload
+/// headlines and the run's cache traffic. Everything in it is
+/// deterministic — no wall-clock, no worker count.
+pub fn summary_json(cfg: &SweepConfig, out: &SweepOutput) -> Json {
+    let frontier: HashSet<usize> = out.pareto.iter().flatten().copied().collect();
+    let headlines: Vec<Json> = (0..cfg.workloads.len())
+        .map(|wi| headline_json(&out.headline(cfg, wi)))
+        .collect();
+    obj(vec![
+        ("pe_budget", Json::Num(cfg.pe_budget as f64)),
+        ("input_bits", Json::Num(cfg.input_bits as f64)),
+        ("aspect_lo", Json::Num(cfg.aspect_lo)),
+        ("aspect_hi", Json::Num(cfg.aspect_hi)),
+        ("aspect_points", Json::Num(cfg.aspect_points as f64)),
+        ("max_layers", Json::Num(cfg.max_layers as f64)),
+        ("seed", Json::Num(cfg.seed as f64)),
+        ("cache_capacity", Json::Num(cfg.cache_capacity as f64)),
+        (
+            "dataflows",
+            Json::Arr(
+                cfg.dataflows
+                    .iter()
+                    .map(|d| Json::Str(d.name().to_string()))
+                    .collect(),
+            ),
+        ),
+        (
+            "workloads",
+            Json::Arr(
+                cfg.workloads
+                    .iter()
+                    .map(|w| Json::Str(w.name().to_string()))
+                    .collect(),
+            ),
+        ),
+        (
+            "points",
+            Json::Arr(
+                out.points
+                    .iter()
+                    .enumerate()
+                    .map(|(i, p)| point_json(p, frontier.contains(&i)))
+                    .collect(),
+            ),
+        ),
+        (
+            "baselines",
+            Json::Arr(out.baselines.iter().map(|b| point_json(b, false)).collect()),
+        ),
+        ("headlines", Json::Arr(headlines)),
+        (
+            "cache",
+            obj(vec![
+                ("hits", Json::Num(out.cache.hits as f64)),
+                ("misses", Json::Num(out.cache.misses as f64)),
+                ("evictions", Json::Num(out.cache.evictions as f64)),
+            ]),
+        ),
+    ])
+}
+
+/// Assemble the `SWEEP_summary.json` bench document: headline metrics as
+/// notes plus the full [`summary_json`] section. Deliberately contains
+/// no timing case and no worker count, so the file is byte-identical for
+/// the same sweep at any parallelism.
+pub fn sweep_bench(cfg: &SweepConfig, out: &SweepOutput) -> Bench {
+    let mut b = Bench::new("sweep");
+    b.note("points", out.points.len() as f64);
+    b.note(
+        "geometries",
+        factorizations(cfg.pe_budget).len() as f64,
+    );
+    b.note("cache_hits", out.cache.hits as f64);
+    b.note("cache_misses", out.cache.misses as f64);
+    for wi in 0..cfg.workloads.len() {
+        let h = out.headline(cfg, wi);
+        let name = h.workload.name();
+        b.note(
+            &format!("{name}_interconnect_saving_pct"),
+            100.0 * h.interconnect_saving,
+        );
+        b.note(&format!("{name}_best_aspect"), h.best_aspect);
+        b.note(&format!("{name}_eq6_ratio"), h.eq6_ratio);
+        b.note(
+            &format!("{name}_eq6_within_one_step"),
+            if h.eq6_within_one_step { 1.0 } else { 0.0 },
+        );
+        b.note(
+            &format!("{name}_best_beats_square"),
+            if h.best_beats_square { 1.0 } else { 0.0 },
+        );
+    }
+    b.section("sweep", summary_json(cfg, out));
+    b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> SweepConfig {
+        SweepConfig {
+            pe_budget: 16,
+            aspect_points: 5,
+            dataflows: vec![DataflowKind::Ws],
+            workloads: vec![WorkloadKind::Synth],
+            max_layers: 1,
+            seed: 7,
+            workers: 2,
+            cache_capacity: 32,
+            ..SweepConfig::default()
+        }
+    }
+
+    #[test]
+    fn sweep_covers_every_factorization() {
+        let out = Explorer::new(tiny_cfg()).unwrap().run().unwrap();
+        assert_eq!(out.points.len(), factorizations(16).len());
+        for p in &out.points {
+            assert_eq!(p.rows * p.cols, 16);
+            assert!(p.cycles > 0 && p.macs > 0);
+            assert!(p.a_h > 0.0 && p.a_v > 0.0);
+            assert_eq!(p.square.aspect, 1.0);
+            assert!(p.best.interconnect_mw <= p.square.interconnect_mw);
+            assert!(p.best.interconnect_mw > 0.0);
+            // Samples are sorted and include the grid.
+            assert!(p.aspects.len() >= 5);
+            for w in p.aspects.windows(2) {
+                assert!(w[0].aspect < w[1].aspect);
+            }
+        }
+        assert_eq!(out.baselines.len(), 1);
+        assert_eq!((out.baselines[0].rows, out.baselines[0].cols), (4, 4));
+        assert_eq!(out.pareto.len(), 1);
+        assert!(!out.pareto[0].is_empty());
+        // Frontier indices are valid and sorted by cycles.
+        for w in out.pareto[0].windows(2) {
+            assert!(out.points[w[0]].cycles <= out.points[w[1]].cycles);
+        }
+    }
+
+    #[test]
+    fn macs_are_geometry_invariant() {
+        // The same workload runs on every geometry: useful MACs must not
+        // depend on the factorization, only cycles may.
+        let out = Explorer::new(tiny_cfg()).unwrap().run().unwrap();
+        let macs0 = out.points[0].macs;
+        assert!(out.points.iter().all(|p| p.macs == macs0));
+        let cycles: Vec<u64> = out.points.iter().map(|p| p.cycles).collect();
+        assert!(cycles.iter().any(|&c| c != cycles[0]), "{cycles:?}");
+    }
+
+    #[test]
+    fn undersized_cache_bound_is_raised_to_the_working_set() {
+        // A 1-entry bound would evict mid-run in scheduling-dependent
+        // order; the explorer raises it so a full run never evicts and
+        // a second run is served entirely from the cache.
+        let cfg = SweepConfig {
+            cache_capacity: 1,
+            ..tiny_cfg()
+        };
+        let ex = Explorer::new(cfg).unwrap();
+        assert!(ex.cache_stats().capacity >= factorizations(16).len());
+        let first = ex.run().unwrap();
+        assert_eq!(first.cache.evictions, 0);
+        let second = ex.run().unwrap();
+        assert_eq!(second.cache.misses, 0);
+        // Without WS among the swept dataflows the baseline adds its own
+        // WS entries: the raised bound must cover them too.
+        let os_only = Explorer::new(SweepConfig {
+            cache_capacity: 1,
+            dataflows: vec![DataflowKind::Os],
+            ..tiny_cfg()
+        })
+        .unwrap();
+        let first = os_only.run().unwrap();
+        assert_eq!(first.cache.evictions, 0);
+        assert_eq!(os_only.run().unwrap().cache.misses, 0);
+        // Capacity zero still disables memoization (deterministically).
+        let off = Explorer::new(SweepConfig {
+            cache_capacity: 0,
+            ..tiny_cfg()
+        })
+        .unwrap();
+        let a = off.run().unwrap();
+        let b = off.run().unwrap();
+        assert_eq!(a.cache.hits, 0);
+        assert_eq!(b.cache.hits, 0);
+        assert_eq!(a.cache.misses, b.cache.misses);
+    }
+
+    #[test]
+    fn dataflow_kinds_parse_and_salt() {
+        assert_eq!(DataflowKind::parse("ws").unwrap(), DataflowKind::Ws);
+        assert_eq!(DataflowKind::parse(" os ").unwrap(), DataflowKind::Os);
+        assert_eq!(DataflowKind::parse("is").unwrap(), DataflowKind::Is);
+        assert!(DataflowKind::parse("systolic").is_err());
+        assert_ne!(DataflowKind::Ws.salt(), DataflowKind::Os.salt());
+        assert_ne!(DataflowKind::Os.salt(), DataflowKind::Is.salt());
+        assert_ne!(DataflowKind::Ws.salt(), DataflowKind::Is.salt());
+    }
+
+    #[test]
+    fn config_validation() {
+        assert!(SweepConfig {
+            pe_budget: 0,
+            ..SweepConfig::default()
+        }
+        .validate()
+        .is_err());
+        assert!(SweepConfig {
+            aspect_points: 1,
+            ..SweepConfig::default()
+        }
+        .validate()
+        .is_err());
+        assert!(SweepConfig {
+            input_bits: 8,
+            ..SweepConfig::default()
+        }
+        .validate()
+        .is_err());
+        assert!(SweepConfig {
+            dataflows: vec![],
+            ..SweepConfig::default()
+        }
+        .validate()
+        .is_err());
+        assert!(SweepConfig {
+            dataflows: vec![DataflowKind::Ws, DataflowKind::Ws],
+            ..SweepConfig::default()
+        }
+        .validate()
+        .is_err());
+        assert!(SweepConfig {
+            workloads: vec![WorkloadKind::Synth, WorkloadKind::Synth],
+            ..SweepConfig::default()
+        }
+        .validate()
+        .is_err());
+        assert!(SweepConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn summary_json_shape() {
+        let cfg = tiny_cfg();
+        let out = Explorer::new(cfg.clone()).unwrap().run().unwrap();
+        let j = summary_json(&cfg, &out);
+        assert_eq!(
+            j.req("points").unwrap().as_arr().unwrap().len(),
+            out.points.len()
+        );
+        assert_eq!(j.req("headlines").unwrap().as_arr().unwrap().len(), 1);
+        assert_eq!(j.req("baselines").unwrap().as_arr().unwrap().len(), 1);
+        assert!(j.req("cache").unwrap().req("misses").unwrap().as_u64().unwrap() > 0);
+        // The bench wrapper parses back as JSON with the section present.
+        let text = sweep_bench(&cfg, &out).to_json();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(parsed.req("suite").unwrap().as_str().unwrap(), "sweep");
+        assert!(parsed.req("sweep").unwrap().get("points").is_some());
+    }
+}

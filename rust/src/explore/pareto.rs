@@ -1,0 +1,100 @@
+//! Pareto-frontier extraction for two minimized objectives.
+//!
+//! The explorer's operating points trade throughput (cycles) against
+//! interconnect power; neither dominates, so the sweep reports the set of
+//! non-dominated points. The extraction is a pure function of the
+//! *multiset* of objective values — input order never changes which
+//! points survive or how the frontier is sorted — which is what lets
+//! `SWEEP_summary.json` stay byte-identical across worker counts
+//! (asserted by `tests/sweep_determinism.rs`).
+
+/// Indices of the non-dominated items under joint minimization of `x`
+/// and `y`, sorted by `(x, y, index)` ascending.
+///
+/// An item is dominated when some other item is no worse in both
+/// objectives and strictly better in at least one. Exact ties are all
+/// kept (they represent the same operating point).
+pub fn pareto_min2<T>(
+    items: &[T],
+    x: impl Fn(&T) -> f64,
+    y: impl Fn(&T) -> f64,
+) -> Vec<usize> {
+    let objs: Vec<(f64, f64)> = items.iter().map(|t| (x(t), y(t))).collect();
+    let dominated = |i: usize| {
+        let (xi, yi) = objs[i];
+        objs.iter().enumerate().any(|(j, &(xj, yj))| {
+            j != i && xj <= xi && yj <= yi && (xj < xi || yj < yi)
+        })
+    };
+    let mut front: Vec<usize> = (0..items.len()).filter(|&i| !dominated(i)).collect();
+    front.sort_by(|&a, &b| {
+        objs[a]
+            .0
+            .total_cmp(&objs[b].0)
+            .then(objs[a].1.total_cmp(&objs[b].1))
+            .then(a.cmp(&b))
+    });
+    front
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frontier_extracts_nondominated() {
+        let pts = [(1.0, 5.0), (2.0, 3.0), (3.0, 4.0), (4.0, 1.0), (5.0, 2.0)];
+        // (3,4) is dominated by (2,3); (5,2) by (4,1).
+        assert_eq!(pareto_min2(&pts, |p| p.0, |p| p.1), vec![0, 1, 3]);
+    }
+
+    #[test]
+    fn frontier_is_input_order_independent() {
+        let mut pts = vec![(1.0, 5.0), (2.0, 3.0), (3.0, 4.0), (4.0, 1.0), (5.0, 2.0)];
+        let values = |items: &[(f64, f64)]| -> Vec<(f64, f64)> {
+            pareto_min2(items, |p| p.0, |p| p.1)
+                .into_iter()
+                .map(|i| items[i])
+                .collect()
+        };
+        let forward = values(&pts);
+        pts.reverse();
+        let backward = values(&pts);
+        assert_eq!(forward, backward);
+    }
+
+    #[test]
+    fn ties_are_all_kept_and_empty_is_empty() {
+        let pts = [(1.0, 1.0), (1.0, 1.0)];
+        assert_eq!(pareto_min2(&pts, |p| p.0, |p| p.1), vec![0, 1]);
+        assert!(pareto_min2(&[] as &[(f64, f64)], |p| p.0, |p| p.1).is_empty());
+    }
+
+    #[test]
+    fn single_point_is_the_frontier() {
+        let pts = [(7.0, 7.0)];
+        assert_eq!(pareto_min2(&pts, |p| p.0, |p| p.1), vec![0]);
+    }
+
+    #[test]
+    fn frontier_monotone_in_second_objective() {
+        // Sorted by x ascending, the surviving y values must be
+        // non-increasing (else the later point would be dominated).
+        let pts = [
+            (1.0, 9.0),
+            (2.0, 7.0),
+            (2.5, 8.0),
+            (3.0, 5.0),
+            (9.0, 5.0),
+            (10.0, 4.0),
+        ];
+        let f = pareto_min2(&pts, |p| p.0, |p| p.1);
+        for w in f.windows(2) {
+            assert!(pts[w[0]].0 <= pts[w[1]].0);
+            assert!(pts[w[0]].1 >= pts[w[1]].1);
+        }
+        // (2.5, 8.0) dominated by (2.0, 7.0); (9.0, 5.0) by (3.0, 5.0)? No:
+        // equal y, larger x — dominated. Frontier: 0, 1, 3, 5.
+        assert_eq!(f, vec![0, 1, 3, 5]);
+    }
+}

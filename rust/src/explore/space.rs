@@ -1,0 +1,121 @@
+//! Sweep-space enumeration: PE-budget factorizations and aspect grids.
+//!
+//! The paper evaluates one point of a much larger design space — a
+//! 32×32 WS array with square vs W/H≈3.8 PEs. At a fixed PE budget the
+//! space has two geometric axes: the *array* factorization `rows × cols`
+//! (which changes bus widths, pass structure and cycles) and the
+//! continuous *PE* aspect ratio `W/H` (which changes wirelengths only).
+//! This module enumerates both deterministically.
+
+/// All `rows × cols` factorizations of a PE budget, sorted by ascending
+/// `rows`. Every divisor pair appears in both orientations (`8×128` and
+/// `128×8` are different machines: bus widths and pass counts differ).
+pub fn factorizations(pes: usize) -> Vec<(usize, usize)> {
+    assert!(pes >= 1, "PE budget must be positive");
+    let mut out = Vec::new();
+    let mut r = 1;
+    while r * r <= pes {
+        if pes % r == 0 {
+            out.push((r, pes / r));
+            if r != pes / r {
+                out.push((pes / r, r));
+            }
+        }
+        r += 1;
+    }
+    out.sort_unstable();
+    out
+}
+
+/// The most-square factorization of a PE budget (`rows <= cols`): the
+/// conventional baseline geometry (`32×32` for the paper's 1024 PEs).
+pub fn most_square(pes: usize) -> (usize, usize) {
+    assert!(pes >= 1, "PE budget must be positive");
+    let mut best = (1, pes);
+    let mut r = 1;
+    while r * r <= pes {
+        if pes % r == 0 {
+            best = (r, pes / r);
+        }
+        r += 1;
+    }
+    best
+}
+
+/// Log-spaced aspect-ratio grid over `[lo, hi]`, inclusive of both ends
+/// (`n >= 2` points) — the same spacing [`crate::floorplan::optimizer::sweep_ratio`]
+/// uses, exposed so the explorer and its tests agree on what "one grid
+/// step" means.
+pub fn aspect_grid(lo: f64, hi: f64, n: usize) -> Vec<f64> {
+    assert!(n >= 2 && lo > 0.0 && hi > lo, "need n >= 2 and 0 < lo < hi");
+    (0..n)
+        .map(|i| {
+            let t = i as f64 / (n - 1) as f64;
+            lo * (hi / lo).powf(t)
+        })
+        .collect()
+}
+
+/// Multiplicative spacing between adjacent grid points:
+/// `(hi/lo)^(1/(n-1))`.
+pub fn grid_step(lo: f64, hi: f64, n: usize) -> f64 {
+    assert!(n >= 2 && lo > 0.0 && hi > lo, "need n >= 2 and 0 < lo < hi");
+    (hi / lo).powf(1.0 / (n - 1) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factorizations_of_1024() {
+        let f = factorizations(1024);
+        assert_eq!(f.len(), 11); // 2^10 has 11 divisors
+        assert!(f.contains(&(32, 32)));
+        assert!(f.contains(&(1, 1024)));
+        assert!(f.contains(&(1024, 1)));
+        assert!(f.iter().all(|&(r, c)| r * c == 1024));
+        let mut sorted = f.clone();
+        sorted.sort_unstable();
+        assert_eq!(f, sorted);
+    }
+
+    #[test]
+    fn factorizations_small_and_prime() {
+        assert_eq!(factorizations(1), vec![(1, 1)]);
+        assert_eq!(factorizations(17), vec![(1, 17), (17, 1)]);
+        assert_eq!(
+            factorizations(12),
+            vec![(1, 12), (2, 6), (3, 4), (4, 3), (6, 2), (12, 1)]
+        );
+    }
+
+    #[test]
+    fn most_square_examples() {
+        assert_eq!(most_square(1024), (32, 32));
+        assert_eq!(most_square(48), (6, 8));
+        assert_eq!(most_square(17), (1, 17));
+        assert_eq!(most_square(1), (1, 1));
+        assert_eq!(most_square(64), (8, 8));
+    }
+
+    #[test]
+    fn aspect_grid_endpoints_and_monotonicity() {
+        let g = aspect_grid(0.25, 16.0, 9);
+        assert_eq!(g.len(), 9);
+        assert!((g[0] - 0.25).abs() < 1e-12);
+        assert!((g[8] - 16.0).abs() < 1e-9);
+        for w in g.windows(2) {
+            assert!(w[1] > w[0]);
+            // Constant multiplicative spacing.
+            let step = grid_step(0.25, 16.0, 9);
+            assert!((w[1] / w[0] - step).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn grid_rejects_degenerate_ranges() {
+        aspect_grid(2.0, 1.0, 8);
+    }
+}

@@ -1,8 +1,183 @@
-//! Renderers for array layouts: SVG (the paper's Fig. 3) and ASCII.
+//! Renderers for array layouts: SVG (the paper's Fig. 3) and ASCII,
+//! plus the design-space Pareto scatter (`repro sweep`).
 
 use std::fmt::Write as _;
 
 use super::layout::ArrayLayout;
+
+/// One point of the design-space scatter ([`render_scatter_svg`]).
+#[derive(Debug, Clone)]
+pub struct ScatterPoint {
+    /// X coordinate (e.g. total workload cycles).
+    pub x: f64,
+    /// Y coordinate (e.g. interconnect power in mW).
+    pub y: f64,
+    /// Point label (drawn for frontier/baseline points).
+    pub label: String,
+    /// Whether the point sits on the Pareto frontier.
+    pub frontier: bool,
+    /// Whether this is the square-baseline annotation.
+    pub baseline: bool,
+}
+
+/// Minimal XML text escape (`&`, `<`, `>`): labels and titles are
+/// interpolated into SVG text nodes and must not break well-formedness.
+fn xml_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '&' => out.push_str("&amp;"),
+            '<' => out.push_str("&lt;"),
+            '>' => out.push_str("&gt;"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render a standalone annotated scatter: all points as circles,
+/// Pareto-frontier points connected by a polyline and labelled, the
+/// baseline as a distinct square marker. Pure-std companion to
+/// [`render_svg`] so `repro sweep` can plot its frontier offline.
+pub fn render_scatter_svg(
+    points: &[ScatterPoint],
+    title: &str,
+    x_label: &str,
+    y_label: &str,
+) -> String {
+    const W: f64 = 860.0;
+    const H: f64 = 560.0;
+    const ML: f64 = 80.0; // left margin (y tick labels)
+    const MR: f64 = 30.0;
+    const MT: f64 = 50.0;
+    const MB: f64 = 64.0;
+
+    let (mut x0, mut x1) = (f64::MAX, f64::MIN);
+    let (mut y0, mut y1) = (f64::MAX, f64::MIN);
+    for p in points {
+        x0 = x0.min(p.x);
+        x1 = x1.max(p.x);
+        y0 = y0.min(p.y);
+        y1 = y1.max(p.y);
+    }
+    if points.is_empty() {
+        (x0, x1, y0, y1) = (0.0, 1.0, 0.0, 1.0);
+    }
+    // 5% padding so extreme points clear the frame.
+    let (xs, ys) = ((x1 - x0).max(1e-12), (y1 - y0).max(1e-12));
+    let (x0, x1) = (x0 - 0.05 * xs, x1 + 0.05 * xs);
+    let (y0, y1) = (y0 - 0.05 * ys, y1 + 0.05 * ys);
+    let (xs, ys) = (x1 - x0, y1 - y0);
+    let px = |x: f64| ML + (x - x0) / xs * (W - ML - MR);
+    let py = |y: f64| H - MB - (y - y0) / ys * (H - MT - MB);
+
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        r#"<svg xmlns="http://www.w3.org/2000/svg" width="{W:.0}" height="{H:.0}" viewBox="0 0 {W:.0} {H:.0}">"#
+    );
+    let _ = writeln!(
+        s,
+        r#"<text x="{:.1}" y="26" font-family="sans-serif" font-size="16" text-anchor="middle">{}</text>"#,
+        W / 2.0,
+        xml_escape(title)
+    );
+    // Frame + axis labels.
+    let _ = writeln!(
+        s,
+        r##"<rect x="{ML:.1}" y="{MT:.1}" width="{:.1}" height="{:.1}" fill="none" stroke="#444" stroke-width="1"/>"##,
+        W - ML - MR,
+        H - MT - MB
+    );
+    let _ = writeln!(
+        s,
+        r#"<text x="{:.1}" y="{:.1}" font-family="sans-serif" font-size="12" text-anchor="middle">{}</text>"#,
+        (ML + W - MR) / 2.0,
+        H - 18.0,
+        xml_escape(x_label)
+    );
+    let _ = writeln!(
+        s,
+        r#"<text x="18" y="{:.1}" font-family="sans-serif" font-size="12" text-anchor="middle" transform="rotate(-90 18 {:.1})">{}</text>"#,
+        (MT + H - MB) / 2.0,
+        (MT + H - MB) / 2.0,
+        xml_escape(y_label)
+    );
+    // Four ticks per axis.
+    for i in 0..=4 {
+        let t = i as f64 / 4.0;
+        let (xv, yv) = (x0 + t * xs, y0 + t * ys);
+        let _ = writeln!(
+            s,
+            r##"<line x1="{0:.1}" y1="{1:.1}" x2="{0:.1}" y2="{2:.1}" stroke="#444" stroke-width="1"/><text x="{0:.1}" y="{3:.1}" font-family="sans-serif" font-size="10" text-anchor="middle">{4:.4}</text>"##,
+            px(xv),
+            H - MB,
+            H - MB + 5.0,
+            H - MB + 18.0,
+            xv
+        );
+        let _ = writeln!(
+            s,
+            r##"<line x1="{0:.1}" y1="{2:.1}" x2="{1:.1}" y2="{2:.1}" stroke="#444" stroke-width="1"/><text x="{3:.1}" y="{4:.1}" font-family="sans-serif" font-size="10" text-anchor="end">{5:.4}</text>"##,
+            ML - 5.0,
+            ML,
+            py(yv),
+            ML - 8.0,
+            py(yv) + 3.0,
+            yv
+        );
+    }
+    // Frontier polyline, sorted by x.
+    let mut frontier: Vec<&ScatterPoint> = points.iter().filter(|p| p.frontier).collect();
+    frontier.sort_by(|a, b| a.x.total_cmp(&b.x).then(a.y.total_cmp(&b.y)));
+    if frontier.len() >= 2 {
+        let path: Vec<String> = frontier
+            .iter()
+            .map(|p| format!("{:.1},{:.1}", px(p.x), py(p.y)))
+            .collect();
+        let _ = writeln!(
+            s,
+            r##"<polyline points="{}" fill="none" stroke="#c0392b" stroke-width="1.5" opacity="0.8"/>"##,
+            path.join(" ")
+        );
+    }
+    // Points: baseline square, frontier/off-frontier circles.
+    for p in points {
+        if p.baseline {
+            let _ = writeln!(
+                s,
+                r##"<rect x="{:.1}" y="{:.1}" width="10" height="10" fill="#f39c12" stroke="#7d5109" stroke-width="1"><title>{}</title></rect>"##,
+                px(p.x) - 5.0,
+                py(p.y) - 5.0,
+                xml_escape(&p.label)
+            );
+        } else {
+            let (fill, r) = if p.frontier {
+                ("#c0392b", 5.0)
+            } else {
+                ("#5d89ba", 3.5)
+            };
+            let _ = writeln!(
+                s,
+                r##"<circle cx="{:.1}" cy="{:.1}" r="{r}" fill="{fill}" opacity="0.85"><title>{}</title></circle>"##,
+                px(p.x),
+                py(p.y),
+                xml_escape(&p.label)
+            );
+        }
+        if p.frontier || p.baseline {
+            let _ = writeln!(
+                s,
+                r#"<text x="{:.1}" y="{:.1}" font-family="sans-serif" font-size="9">{}</text>"#,
+                px(p.x) + 7.0,
+                py(p.y) - 5.0,
+                xml_escape(&p.label)
+            );
+        }
+    }
+    let _ = writeln!(s, "</svg>");
+    s
+}
 
 /// Render a layout as a standalone SVG document (Fig. 3 style: PE grid
 /// with horizontal input tracks and vertical psum tracks overlaid).
@@ -125,6 +300,86 @@ mod tests {
         assert_eq!(svg.matches("<rect").count(), 64);
         assert_eq!(svg.matches("<line").count(), 16);
         assert!(svg.contains("asymmetric 8x8"));
+    }
+
+    #[test]
+    fn scatter_svg_is_well_formed() {
+        let pts = vec![
+            ScatterPoint {
+                x: 100.0,
+                y: 50.0,
+                label: "a".into(),
+                frontier: true,
+                baseline: false,
+            },
+            ScatterPoint {
+                x: 200.0,
+                y: 30.0,
+                label: "b".into(),
+                frontier: true,
+                baseline: false,
+            },
+            ScatterPoint {
+                x: 150.0,
+                y: 60.0,
+                label: "c".into(),
+                frontier: false,
+                baseline: false,
+            },
+            ScatterPoint {
+                x: 120.0,
+                y: 55.0,
+                label: "square".into(),
+                frontier: false,
+                baseline: true,
+            },
+        ];
+        let svg = render_scatter_svg(&pts, "pareto", "cycles", "mW");
+        assert!(svg.starts_with("<svg"));
+        assert!(svg.trim_end().ends_with("</svg>"));
+        assert_eq!(svg.matches("<circle").count(), 3);
+        assert_eq!(svg.matches("<polyline").count(), 1);
+        assert!(svg.contains("pareto") && svg.contains("cycles") && svg.contains("mW"));
+        assert!(svg.contains("square"));
+        // Frontier + baseline points are labelled.
+        assert!(svg.matches("font-size=\"9\"").count() >= 3);
+    }
+
+    #[test]
+    fn scatter_svg_escapes_markup_in_text() {
+        let pts = [ScatterPoint {
+            x: 1.0,
+            y: 2.0,
+            label: "P&R <variant>".into(),
+            frontier: true,
+            baseline: false,
+        }];
+        let svg = render_scatter_svg(&pts, "cycles < budget & power", "x&y", "a<b");
+        assert!(!svg.contains("P&R"));
+        assert!(svg.contains("P&amp;R &lt;variant&gt;"));
+        assert!(svg.contains("cycles &lt; budget &amp; power"));
+        assert!(svg.contains("x&amp;y") && svg.contains("a&lt;b"));
+    }
+
+    #[test]
+    fn scatter_svg_handles_degenerate_inputs() {
+        // Empty and single-point scatters must not divide by zero.
+        let empty = render_scatter_svg(&[], "empty", "x", "y");
+        assert!(empty.contains("</svg>"));
+        let one = render_scatter_svg(
+            &[ScatterPoint {
+                x: 5.0,
+                y: 5.0,
+                label: "only".into(),
+                frontier: true,
+                baseline: false,
+            }],
+            "one",
+            "x",
+            "y",
+        );
+        assert!(one.contains("<circle"));
+        assert_eq!(one.matches("<polyline").count(), 0);
     }
 
     #[test]

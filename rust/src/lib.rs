@@ -23,6 +23,7 @@
 //!   ([`power`]), workload + tiling pipeline ([`workloads`], [`gemm`]),
 //!   thread-pool coordinator ([`coordinator`]), serving front-end with
 //!   shape-coalesced batching and a memoized result cache ([`serve`]),
+//!   parallel design-space explorer with Pareto reporting ([`explore`]),
 //!   PJRT runtime that executes the AOT artifacts ([`runtime`]),
 //!   figure/table regeneration ([`report`]) and self-contained
 //!   substrates ([`util`], [`bench_util`]) for the fully-offline build.
@@ -66,6 +67,7 @@ pub mod bench_util;
 pub mod config;
 pub mod coordinator;
 pub mod error;
+pub mod explore;
 pub mod floorplan;
 pub mod gemm;
 pub mod power;

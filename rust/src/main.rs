@@ -8,7 +8,8 @@
 //! * `run`      — the Fig. 4/5 experiment (the headline reproduction);
 //! * `serve`    — seeded serving scenario through the serve subsystem
 //!   (shape-coalesced batching + memoized result cache);
-//! * `sweep`    — aspect-ratio sweep of the interconnect model;
+//! * `sweep`    — parallel design-space exploration (geometry × dataflow
+//!   × workload) with Pareto reporting;
 //! * `verify`   — cycle-accurate vs analytic engine cross-check.
 //!
 //! Argument parsing is hand-rolled (the offline vendored dependency set
@@ -60,8 +61,22 @@ COMMANDS
                --cache <n>     result-cache entries (default 24)
                --unique <n>    input variants per layer (default 4)
                --json <f>      summary JSON path (default SERVE_summary.json)
-  sweep      aspect-ratio sweep of the interconnect model
-               --points <n>    sweep points (default 25)
+  sweep      parallel design-space exploration: every rows x cols
+             factorization of the PE budget x dataflow x workload,
+             each with a PE aspect-ratio grid, evaluated with the exact
+             engines + power model through the shared result cache;
+             emits the Pareto frontier of interconnect power vs cycles
+               --pes <n>       PE budget (default 1024)
+               --points <n>    aspect grid points (default 25)
+               --dataflows <s> comma list of ws,os,is (default ws)
+               --workload <s>  table1 | synth | both (default both)
+               --layers <n>    max layers per workload (default 0 = all)
+               --seed <n>      operand seed (default 2023)
+               --workers <n>   coordinator workers (default 0 = auto)
+               --cache <n>     result-cache entries (default 256)
+               --json <f>      summary path (default SWEEP_summary.json)
+               --md <f>        Pareto report (default out/SWEEP_pareto.md)
+               --svg <f>       Pareto scatter (default out/SWEEP_pareto.svg)
   verify     cross-check cycle-accurate vs analytic engines
                --cases <n>     random cases (default 10)
   help       this text
@@ -109,6 +124,13 @@ impl Flags {
 
     fn path(&self, key: &str) -> Option<PathBuf> {
         self.0.get(key).map(PathBuf::from)
+    }
+
+    fn string(&self, key: &str, default: &str) -> String {
+        self.0
+            .get(key)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
     }
 
     fn flag(&self, key: &str) -> bool {
@@ -183,7 +205,19 @@ fn run_cli(args: &[String]) -> Result<(), String> {
         }
         "sweep" => {
             let f = Flags::parse(rest, &[])?;
-            sweep(f.usize("points", 25)?)
+            sweep(
+                f.usize("pes", 1024)?,
+                f.usize("points", 25)?,
+                f.string("dataflows", "ws"),
+                f.string("workload", "both"),
+                f.usize("layers", 0)?,
+                f.usize("seed", 2023)? as u64,
+                f.usize("workers", 0)?,
+                f.usize("cache", 256)?,
+                f.path("json").unwrap_or_else(|| PathBuf::from("SWEEP_summary.json")),
+                f.path("md").unwrap_or_else(|| PathBuf::from("out/SWEEP_pareto.md")),
+                f.path("svg").unwrap_or_else(|| PathBuf::from("out/SWEEP_pareto.svg")),
+            )
         }
         "verify" => {
             let f = Flags::parse(rest, &[])?;
@@ -394,23 +428,127 @@ fn serve(
     Ok(())
 }
 
-fn sweep(points: usize) -> Result<(), String> {
-    let sa = SaConfig::paper_32x32();
-    let tech = TechParams::default();
-    let cfg = ExperimentConfig::paper();
-    let area = cfg.pe_area_um2();
-    let pts = optimizer::sweep_ratio(
-        |r| power::model_interconnect_cost(&sa, &tech, 0.22, 0.36, area, r),
-        0.25,
-        16.0,
-        points,
-    );
-    // Cost at the square baseline for the "vs square" column.
-    let base = power::model_interconnect_cost(&sa, &tech, 0.22, 0.36, area, 1.0);
-    println!("{:>8} {:>14} {:>9}", "W/H", "cost (fJ/PE)", "vs sq");
-    for (r, c) in pts {
-        println!("{r:>8.3} {c:>14.4} {:>8.1}%", 100.0 * (c / base - 1.0));
+/// Create the parent directory of an output path when it has one (a
+/// bare filename writes into the working directory).
+fn ensure_parent(path: &PathBuf) -> Result<(), String> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+        }
     }
+    Ok(())
+}
+
+#[allow(clippy::too_many_arguments)]
+fn sweep(
+    pes: usize,
+    points: usize,
+    dataflows: String,
+    workload: String,
+    layers: usize,
+    seed: u64,
+    workers: usize,
+    cache: usize,
+    json: PathBuf,
+    md_path: PathBuf,
+    svg_path: PathBuf,
+) -> Result<(), String> {
+    use asymm_sa::explore::{self, DataflowKind, Explorer, SweepConfig, WorkloadKind};
+    use asymm_sa::floorplan::svg::{render_scatter_svg, ScatterPoint};
+
+    let dataflows = dataflows
+        .split(',')
+        .map(DataflowKind::parse)
+        .collect::<asymm_sa::Result<Vec<_>>>()
+        .map_err(|e| e.to_string())?;
+    let workloads = match workload.as_str() {
+        "table1" => vec![WorkloadKind::Table1],
+        "synth" => vec![WorkloadKind::Synth],
+        "both" => vec![WorkloadKind::Table1, WorkloadKind::Synth],
+        other => return Err(format!("unknown workload `{other}` (table1|synth|both)")),
+    };
+    let cfg = SweepConfig {
+        pe_budget: pes,
+        aspect_points: points,
+        dataflows,
+        workloads,
+        max_layers: layers,
+        seed,
+        workers,
+        cache_capacity: cache,
+        ..SweepConfig::default()
+    };
+    let explorer = Explorer::new(cfg.clone()).map_err(|e| e.to_string())?;
+    let n_points =
+        explore::factorizations(pes).len() * cfg.dataflows.len() * cfg.workloads.len();
+    let (lw, intra) = explorer.coordinator().negotiate(n_points);
+    println!(
+        "sweep: {pes} PEs -> {} geometries x {} dataflows x {} workloads = {n_points} \
+         points ({lw} workers x {intra} intra threads)",
+        explore::factorizations(pes).len(),
+        cfg.dataflows.len(),
+        cfg.workloads.len(),
+    );
+    let t0 = std::time::Instant::now();
+    let out = explorer.run().map_err(|e| e.to_string())?;
+    println!(
+        "swept {} points in {:.2}s ({} cold sims, {} cache hits)\n",
+        out.points.len(),
+        t0.elapsed().as_secs_f64(),
+        out.cache.misses,
+        out.cache.hits
+    );
+
+    // Markdown Pareto report (also printed).
+    let md = asymm_sa::report::sweep_markdown(&cfg, &out);
+    print!("{md}");
+    ensure_parent(&md_path)?;
+    std::fs::write(&md_path, &md).map_err(|e| e.to_string())?;
+    println!("wrote {}", md_path.display());
+
+    // SVG scatter of the first workload's space.
+    let frontier: std::collections::HashSet<usize> = out
+        .pareto
+        .first()
+        .map(|v| v.iter().copied().collect())
+        .unwrap_or_default();
+    let wl0 = cfg.workloads[0];
+    let mut pts: Vec<ScatterPoint> = Vec::new();
+    for (i, p) in out.points.iter().enumerate() {
+        if p.workload != wl0 {
+            continue;
+        }
+        pts.push(ScatterPoint {
+            x: p.cycles as f64,
+            y: p.best.interconnect_mw,
+            label: format!("{} W/H={:.2}", p.label(), p.best.aspect),
+            frontier: frontier.contains(&i),
+            baseline: false,
+        });
+    }
+    if let Some(base) = out.baselines.first() {
+        pts.push(ScatterPoint {
+            x: base.cycles as f64,
+            y: base.square.interconnect_mw,
+            label: format!("square {}x{} ws", base.rows, base.cols),
+            frontier: false,
+            baseline: true,
+        });
+    }
+    let svg = render_scatter_svg(
+        &pts,
+        &format!("{}: interconnect power vs cycles at {pes} PEs", wl0.name()),
+        "workload cycles",
+        "interconnect power (mW)",
+    );
+    ensure_parent(&svg_path)?;
+    std::fs::write(&svg_path, svg).map_err(|e| e.to_string())?;
+    println!("wrote {}", svg_path.display());
+
+    // Machine-readable summary (deterministic at any worker count).
+    ensure_parent(&json)?;
+    let b = explore::sweep_bench(&cfg, &out);
+    b.write_json(&json).map_err(|e| e.to_string())?;
     Ok(())
 }
 

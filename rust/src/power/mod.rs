@@ -45,6 +45,15 @@ impl PowerBreakdown {
         self.h_bus_mw + self.v_bus_mw + self.w_load_mw + self.ctrl_mw
     }
 
+    /// Data-bus-only interconnect power (horizontal input + vertical
+    /// psum buses): exactly the objective eq. 6 minimizes. Excludes the
+    /// weight-load chain and the aspect-*increasing* clock/control term,
+    /// so the design-space explorer can cross-check the closed form
+    /// against its swept optimum without the dilution terms.
+    pub fn bus_mw(&self) -> f64 {
+        self.h_bus_mw + self.v_bus_mw
+    }
+
     /// PE-internal power (logic + registers + leakage).
     pub fn compute_mw(&self) -> f64 {
         self.mac_mw + self.reg_mw + self.leak_mw
@@ -180,6 +189,9 @@ mod tests {
         );
         assert!(asym.interconnect_mw() < sym.interconnect_mw());
         assert!(asym.total_mw() < sym.total_mw());
+        // The data buses are a strict subset of the interconnect.
+        assert!(sym.bus_mw() < sym.interconnect_mw());
+        assert!(asym.bus_mw() < asym.interconnect_mw());
         // Reduction in a plausible band around the paper's 9.1%.
         let red = 1.0 - asym.interconnect_mw() / sym.interconnect_mw();
         assert!(red > 0.03 && red < 0.20, "interconnect reduction {red}");

@@ -245,6 +245,97 @@ pub fn markdown_report(
     s
 }
 
+/// Markdown design-space sweep report: per-workload square baseline,
+/// Pareto-frontier table and headline numbers — what `repro sweep`
+/// writes next to `SWEEP_summary.json`.
+pub fn sweep_markdown(
+    cfg: &crate::explore::SweepConfig,
+    out: &crate::explore::SweepOutput,
+) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "# asymm-sa design-space sweep\n");
+    let _ = writeln!(
+        s,
+        "PE budget {}: {} geometries x {} dataflows x {} workloads; aspect grid \
+         [{}, {}] x {} points; seed {}.\n",
+        cfg.pe_budget,
+        crate::explore::factorizations(cfg.pe_budget).len(),
+        cfg.dataflows.len(),
+        cfg.workloads.len(),
+        cfg.aspect_lo,
+        cfg.aspect_hi,
+        cfg.aspect_points,
+        cfg.seed,
+    );
+    for (wi, _) in cfg.workloads.iter().enumerate() {
+        let h = out.headline(cfg, wi);
+        let base = &out.baselines[wi];
+        let _ = writeln!(s, "## Workload `{}`\n", h.workload.name());
+        let _ = writeln!(
+            s,
+            "Square {}x{} WS baseline: {:.3} mW interconnect, {:.3} mW total, {} cycles.\n",
+            base.rows,
+            base.cols,
+            base.square.interconnect_mw,
+            base.square.total_mw,
+            base.cycles,
+        );
+        let _ = writeln!(
+            s,
+            "| geometry | dataflow | best W/H | cycles | interconnect (mW) | vs square | eq.6 W/H | eq.5 W/H |"
+        );
+        let _ = writeln!(s, "|---|---|---|---|---|---|---|---|");
+        for &i in &out.pareto[wi] {
+            let p = &out.points[i];
+            let _ = writeln!(
+                s,
+                "| {}x{} | {} | {:.2} | {} | {:.3} | {:+.1}% | {:.2} | {:.2} |",
+                p.rows,
+                p.cols,
+                p.dataflow.name(),
+                p.best.aspect,
+                p.cycles,
+                p.best.interconnect_mw,
+                100.0 * (p.best.interconnect_mw / base.square.interconnect_mw - 1.0),
+                p.eq6_ratio,
+                p.eq5_ratio,
+            );
+        }
+        let _ = writeln!(
+            s,
+            "\nBest point `{}` at W/H = {:.2}: {:.3} mW interconnect, {:.1}% below the \
+             square baseline ({}).",
+            h.best_label,
+            h.best_aspect,
+            h.best_interconnect_mw,
+            100.0 * h.interconnect_saving,
+            if h.best_beats_square {
+                "beats square"
+            } else {
+                "does NOT beat square"
+            },
+        );
+        let _ = writeln!(
+            s,
+            "Eq.-6 closed form W/H = {:.3} vs swept bus-power optimum: {}.\n",
+            h.eq6_ratio,
+            if h.eq6_within_one_step {
+                "within one grid step"
+            } else {
+                "OUTSIDE one grid step"
+            },
+        );
+    }
+    let _ = writeln!(
+        s,
+        "Cache traffic this run: {} hits / {} lookups, {} cold simulations.",
+        out.cache.hits,
+        out.cache.hits + out.cache.misses,
+        out.cache.misses,
+    );
+    s
+}
+
 /// CSV export of the full comparison (one row per layer).
 pub fn to_csv(rows: &[LayerPowerRow]) -> String {
     let mut s = String::from(
@@ -375,6 +466,30 @@ mod tests {
         assert!(md.contains("Fig. 5"));
         assert!(md.contains("Timing"));
         assert!(md.contains("meets target"));
+    }
+
+    #[test]
+    fn sweep_markdown_contains_sections() {
+        use crate::explore::{DataflowKind, Explorer, SweepConfig, WorkloadKind};
+        let cfg = SweepConfig {
+            pe_budget: 16,
+            aspect_points: 5,
+            dataflows: vec![DataflowKind::Ws],
+            workloads: vec![WorkloadKind::Synth],
+            max_layers: 1,
+            seed: 5,
+            workers: 1,
+            cache_capacity: 16,
+            ..SweepConfig::default()
+        };
+        let out = Explorer::new(cfg.clone()).unwrap().run().unwrap();
+        let md = sweep_markdown(&cfg, &out);
+        assert!(md.contains("# asymm-sa design-space sweep"));
+        assert!(md.contains("## Workload `synth`"));
+        assert!(md.contains("Square 4x4 WS baseline"));
+        assert!(md.contains("| geometry | dataflow |"));
+        assert!(md.contains("Eq.-6 closed form"));
+        assert!(md.contains("Cache traffic"));
     }
 
     #[test]

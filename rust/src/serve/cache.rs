@@ -91,6 +91,14 @@ pub fn sa_fingerprint(sa: &SaConfig) -> u64 {
     fnv1a(h, &sa.clock_ghz.to_bits().to_le_bytes())
 }
 
+/// Mix an extra discriminant word into a fingerprint (FNV-1a over the
+/// word's little-endian byte image). The design-space explorer salts
+/// [`sa_fingerprint`] with a dataflow/engine tag so WS/OS/IS simulations
+/// of the same array and operands never alias in the cache.
+pub fn mix(seed: u64, word: u64) -> u64 {
+    fnv1a(seed, &word.to_le_bytes())
+}
+
 /// Full cache key: everything a simulation result depends on.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct CacheKey {
@@ -312,6 +320,16 @@ mod tests {
         assert_ne!(sa_fingerprint(&ws), sa_fingerprint(&os));
         assert_ne!(sa_fingerprint(&ws), sa_fingerprint(&slow));
         assert_eq!(sa_fingerprint(&ws), sa_fingerprint(&SaConfig::paper_32x32()));
+    }
+
+    #[test]
+    fn mix_separates_engine_salts() {
+        let fp = sa_fingerprint(&SaConfig::paper_32x32());
+        assert_ne!(mix(fp, 1), fp);
+        assert_ne!(mix(fp, 1), mix(fp, 2));
+        // Deterministic and seed-sensitive.
+        assert_eq!(mix(fp, 7), mix(fp, 7));
+        assert_ne!(mix(fp, 7), mix(fp ^ 1, 7));
     }
 
     #[test]

@@ -8,6 +8,29 @@ pub mod synth;
 pub use resnet50::{full_resnet50, table1_layers, ConvLayer};
 pub use synth::{ActivationModel, SynthGen};
 
+/// Small synthetic conv mix for the design-space explorer
+/// ([`crate::explore`]): three edge-inference-scale layers whose
+/// activations come from the same seeded ImageNet substitution as the
+/// Table-I pipeline. The shapes deliberately span tall (P-heavy), deep
+/// (K-heavy) and wide (N-heavy) GEMMs so geometry sweeps see the pass
+/// structure change, while staying cheap enough for per-commit sweeps.
+pub fn synth_sweep_layers() -> Vec<ConvLayer> {
+    let mk = |name: &str, k: usize, hw: usize, c: usize, m: usize| ConvLayer {
+        name: name.into(),
+        k,
+        h: hw,
+        w: hw,
+        c,
+        m,
+        stride: 1,
+    };
+    vec![
+        mk("synth-tall-1x1", 1, 14, 64, 64), // 196 x 64 x 64
+        mk("synth-deep-3x3", 3, 8, 32, 48),  // 64 x 288 x 48
+        mk("synth-wide-1x1", 1, 28, 32, 96), // 784 x 32 x 96
+    ]
+}
+
 /// GEMM dimensions `(M_g, K_g, N_g)` of a conv layer lowered via im2col:
 /// `P × CK² × M` with `P = H_out · W_out`.
 pub fn gemm_shape(layer: &ConvLayer) -> (usize, usize, usize) {
@@ -28,5 +51,17 @@ mod tests {
         assert_eq!(gemm_shape(&layers[0]), (3136, 256, 64));
         assert_eq!(gemm_shape(&layers[1]), (784, 1152, 128));
         assert_eq!(gemm_shape(&layers[5]), (196, 2304, 256));
+    }
+
+    #[test]
+    fn synth_sweep_mix_spans_shapes() {
+        let mix = synth_sweep_layers();
+        assert_eq!(mix.len(), 3);
+        assert_eq!(gemm_shape(&mix[0]), (196, 64, 64));
+        assert_eq!(gemm_shape(&mix[1]), (64, 288, 48));
+        assert_eq!(gemm_shape(&mix[2]), (784, 32, 96));
+        // Distinct shapes: the coalescer/cache must see them apart.
+        let shapes: Vec<_> = mix.iter().map(gemm_shape).collect();
+        assert!(shapes[0] != shapes[1] && shapes[1] != shapes[2]);
     }
 }

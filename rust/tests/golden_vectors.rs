@@ -1,6 +1,7 @@
-//! Golden-vector regression tier: exact per-layer bus statistics for the
-//! paper's Table-I layers on the 32×32 WS array, pinned in
-//! `tests/golden/table1.json`.
+//! Golden-vector regression tier: exact per-layer bus statistics plus
+//! the power breakdown (interconnect / compute / total mW on the square
+//! and W/H = 3.8 floorplans) for the paper's Table-I layers on the
+//! 32×32 WS array, pinned in `tests/golden/table1.json`.
 //!
 //! The differential suites (`engines_equivalence`,
 //! `fast_engine_property`) prove the engines agree with *each other*;
@@ -89,6 +90,14 @@ struct GoldenLayer {
     interconnect_sym_mw: f64,
     /// Interconnect power at the paper's W/H = 3.8 (mW).
     interconnect_asym_mw: f64,
+    /// PE-internal power (MAC + registers + leakage, mW). Floorplan-
+    /// invariant: the same value holds for both geometries (asserted at
+    /// generation time).
+    compute_mw: f64,
+    /// Total power on the square floorplan (mW).
+    total_sym_mw: f64,
+    /// Total power at W/H = 3.8 (mW).
+    total_asym_mw: f64,
 }
 
 fn dir_triple(d: &DirectionStats) -> (u64, u64, u64) {
@@ -111,6 +120,13 @@ fn compute_layer(
     let sim = simulate_gemm_fast(sa, &a, &w).expect("table1 shapes are valid");
     let sym = PeGeometry::new(area_um2, 1.0).expect("valid geometry");
     let asym = PeGeometry::new(area_um2, 3.8).expect("valid geometry");
+    let p_sym = power::evaluate(sa, &sym, tech, &sim);
+    let p_asym = power::evaluate(sa, &asym, tech, &sim);
+    // Compute power is floorplan-invariant by construction; pin one copy.
+    assert!(
+        (p_sym.compute_mw() - p_asym.compute_mw()).abs() < 1e-12,
+        "compute power must not depend on the aspect ratio"
+    );
     GoldenLayer {
         name: name.to_string(),
         shape,
@@ -120,8 +136,11 @@ fn compute_layer(
         cycles: sim.cycles,
         macs: sim.macs,
         y_digest: digest_i64(0, &sim.y.data),
-        interconnect_sym_mw: power::evaluate(sa, &sym, tech, &sim).interconnect_mw(),
-        interconnect_asym_mw: power::evaluate(sa, &asym, tech, &sim).interconnect_mw(),
+        interconnect_sym_mw: p_sym.interconnect_mw(),
+        interconnect_asym_mw: p_asym.interconnect_mw(),
+        compute_mw: p_sym.compute_mw(),
+        total_sym_mw: p_sym.total_mw(),
+        total_asym_mw: p_asym.total_mw(),
     }
 }
 
@@ -160,6 +179,9 @@ fn layer_to_json(l: &GoldenLayer) -> Json {
         ("y_digest", Json::Str(format!("{:016x}", l.y_digest))),
         ("interconnect_sym_mw", Json::Num(l.interconnect_sym_mw)),
         ("interconnect_asym_mw", Json::Num(l.interconnect_asym_mw)),
+        ("compute_mw", Json::Num(l.compute_mw)),
+        ("total_sym_mw", Json::Num(l.total_sym_mw)),
+        ("total_asym_mw", Json::Num(l.total_asym_mw)),
     ])
 }
 
@@ -181,6 +203,9 @@ fn layer_from_json(j: &Json) -> GoldenLayer {
             .expect("hex digest"),
         interconnect_sym_mw: j.req("interconnect_sym_mw").unwrap().as_f64().unwrap(),
         interconnect_asym_mw: j.req("interconnect_asym_mw").unwrap().as_f64().unwrap(),
+        compute_mw: j.req("compute_mw").unwrap().as_f64().unwrap(),
+        total_sym_mw: j.req("total_sym_mw").unwrap().as_f64().unwrap(),
+        total_asym_mw: j.req("total_asym_mw").unwrap().as_f64().unwrap(),
     }
 }
 
@@ -227,6 +252,9 @@ fn diff_layers(golden: &GoldenLayer, got: &GoldenLayer) -> Vec<String> {
         golden.interconnect_asym_mw,
         got.interconnect_asym_mw,
     );
+    close("compute_mw", golden.compute_mw, got.compute_mw);
+    close("total_sym_mw", golden.total_sym_mw, got.total_sym_mw);
+    close("total_asym_mw", golden.total_asym_mw, got.total_asym_mw);
     if golden.name != got.name {
         diffs.push(format!("name: {} != {}", golden.name, got.name));
     }
@@ -333,6 +361,9 @@ fn comparator_detects_one_count_perturbation() {
         y_digest: 0xDEAD_BEEF_0123_4567,
         interconnect_sym_mw: 12.5,
         interconnect_asym_mw: 11.25,
+        compute_mw: 40.0,
+        total_sym_mw: 52.5,
+        total_asym_mw: 51.25,
     };
     assert!(diff_layers(&base, &base).is_empty());
 
@@ -354,6 +385,12 @@ fn comparator_detects_one_count_perturbation() {
     cases.push(c);
     let mut c = base.clone();
     c.interconnect_sym_mw *= 1.0 + 1e-6;
+    cases.push(c);
+    let mut c = base.clone();
+    c.compute_mw *= 1.0 + 1e-6;
+    cases.push(c);
+    let mut c = base.clone();
+    c.total_asym_mw *= 1.0 - 1e-6;
     cases.push(c);
     for (i, perturbed) in cases.iter().enumerate() {
         assert!(
@@ -378,6 +415,9 @@ fn fixture_serialization_round_trips() {
         y_digest: 0xFFFF_FFFF_FFFF_FFFE, // > 2^53: must survive as hex
         interconnect_sym_mw: 0.123456789012345,
         interconnect_asym_mw: 98765.4321,
+        compute_mw: 123.456789012345,
+        total_sym_mw: 123.580245801357,
+        total_asym_mw: 222222.8877,
     };
     let text = fixture_json(&[layer.clone()]);
     let parsed = Json::parse(&text).unwrap();

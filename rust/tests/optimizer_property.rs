@@ -1,0 +1,116 @@
+//! Property tier for the aspect-ratio optimizer (paper eqs. 5–6).
+//!
+//! The unit tests in `floorplan/optimizer.rs` pin the paper's single
+//! configuration; this tier sweeps seeded random bus widths and
+//! switching activities and asserts the *structural* identity the paper
+//! derives analytically: the golden-section minimum of the
+//! activity-weighted bus cost `√r·B_h·a_h + B_v·a_v/√r` coincides with
+//! the eq.-6 closed form `r* = (B_v·a_v)/(B_h·a_h)` — and degenerates to
+//! eq. 5 when the activities are equal. The design-space explorer's
+//! "eq.-6 within one grid step of the swept optimum" acceptance check
+//! rests on exactly this identity.
+
+use asymm_sa::arch::SaConfig;
+use asymm_sa::floorplan::optimizer::{
+    closed_form_ratio, minimize_ratio, sweep_ratio, weighted_bus_cost,
+    wirelength_optimal_ratio,
+};
+use asymm_sa::util::rng::Rng;
+
+/// Random valid WS array: input width in [2, 16] bits, power-of-two
+/// rows/cols in [1, 128] (the accumulation rule then fixes `B_v`).
+fn random_sa(rng: &mut Rng) -> SaConfig {
+    let input_bits = rng.index(2, 17) as u32;
+    let rows = 1usize << rng.index(0, 8);
+    let cols = 1usize << rng.index(0, 8);
+    SaConfig::new_ws(rows, cols, input_bits).expect("random config is valid")
+}
+
+/// Random activity in [0.02, 1.0] — the physically meaningful band
+/// (closed_form_ratio rejects zero activities by contract).
+fn random_activity(rng: &mut Rng) -> f64 {
+    0.02 + 0.98 * rng.uniform()
+}
+
+#[test]
+fn closed_form_matches_numeric_minimum_across_random_space() {
+    let mut rng = Rng::new(0xE906_2023);
+    for case in 0..200 {
+        let sa = random_sa(&mut rng);
+        let a_h = random_activity(&mut rng);
+        let a_v = random_activity(&mut rng);
+        let want = closed_form_ratio(&sa, a_h, a_v);
+        assert!(want.is_finite() && want > 0.0, "case {case}: eq.6 {want}");
+
+        // Bracket the optimum generously; tolerance scales with it.
+        let (lo, hi) = (want / 64.0, want * 64.0);
+        let (got, fmin) = minimize_ratio(
+            |r| weighted_bus_cost(&sa, a_h, a_v, r),
+            lo,
+            hi,
+            want * 1e-9,
+        );
+        let rel = (got - want).abs() / want;
+        assert!(
+            rel < 1e-6,
+            "case {case}: numeric {got} vs closed-form {want} (rel {rel:e}, \
+             B_h={} B_v={} a_h={a_h} a_v={a_v})",
+            sa.bus_bits_horizontal(),
+            sa.bus_bits_vertical(),
+        );
+        // The numeric minimum value can never beat the closed form's
+        // cost by more than roundoff (it is the same function).
+        let at_closed = weighted_bus_cost(&sa, a_h, a_v, want);
+        assert!(
+            fmin <= at_closed * (1.0 + 1e-12),
+            "case {case}: fmin {fmin} vs cost(eq6) {at_closed}"
+        );
+    }
+}
+
+#[test]
+fn equal_activities_reduce_eq6_to_eq5() {
+    let mut rng = Rng::new(0xE905_2023);
+    for case in 0..200 {
+        let sa = random_sa(&mut rng);
+        let a = random_activity(&mut rng);
+        let eq5 = wirelength_optimal_ratio(&sa);
+        let eq6 = closed_form_ratio(&sa, a, a);
+        assert!(
+            (eq6 - eq5).abs() < 1e-12 * eq5.max(1.0),
+            "case {case}: eq6 {eq6} != eq5 {eq5} at equal activity {a}"
+        );
+        // And unit activities are just the equal-activity special case.
+        let unit = closed_form_ratio(&sa, 1.0, 1.0);
+        assert!((unit - eq5).abs() < 1e-12 * eq5.max(1.0));
+    }
+}
+
+#[test]
+fn grid_argmin_brackets_the_closed_form_within_one_step() {
+    // The discrete analogue the explorer's acceptance check uses: for a
+    // unimodal cost, the argmin over a log-spaced grid spanning the
+    // optimum sits within one multiplicative grid step of eq. 6.
+    let mut rng = Rng::new(0xE907_2023);
+    for case in 0..100 {
+        let sa = random_sa(&mut rng);
+        let a_h = random_activity(&mut rng);
+        let a_v = random_activity(&mut rng);
+        let want = closed_form_ratio(&sa, a_h, a_v);
+        let (lo, hi, n) = (want / 32.0, want * 32.0, 41);
+        let pts = sweep_ratio(|r| weighted_bus_cost(&sa, a_h, a_v, r), lo, hi, n);
+        let (imin, _) = pts
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1 .1.total_cmp(&b.1 .1))
+            .expect("non-empty sweep");
+        let step = (hi / lo).powf(1.0 / (n - 1) as f64);
+        let dist = (pts[imin].0 / want).ln().abs();
+        assert!(
+            dist <= step.ln() * (1.0 + 1e-9) + 1e-12,
+            "case {case}: grid argmin {} vs eq.6 {want} ({} steps away)",
+            pts[imin].0,
+            dist / step.ln(),
+        );
+    }
+}

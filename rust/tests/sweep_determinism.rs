@@ -1,0 +1,122 @@
+//! Determinism tier for the design-space explorer.
+//!
+//! Three contracts, all load-bearing for `repro sweep` as a CI artifact:
+//!
+//! 1. **Worker-count invariance** — the summary document is
+//!    byte-identical with 1 worker and with N workers: the Pareto set
+//!    and every annotated number are functions of the configuration
+//!    only, never of completion order.
+//! 2. **Cache reuse** — a second run on the same [`Explorer`] is served
+//!    from the shared result cache (hits > 0, zero cold simulations)
+//!    and produces bit-identical points.
+//! 3. **Paper ordering** — the best asymmetric point beats the square
+//!    WS baseline on interconnect power, and the eq.-6 closed form
+//!    lands within one grid step of the swept bus-power optimum (the
+//!    small-budget analogue of `repro sweep --pes 1024`).
+
+use asymm_sa::explore::{self, DataflowKind, Explorer, SweepConfig, WorkloadKind};
+
+fn cfg(workers: usize) -> SweepConfig {
+    SweepConfig {
+        pe_budget: 16,
+        aspect_points: 9,
+        dataflows: vec![DataflowKind::Ws, DataflowKind::Os, DataflowKind::Is],
+        workloads: vec![WorkloadKind::Synth],
+        max_layers: 2,
+        seed: 2023,
+        workers,
+        cache_capacity: 64,
+        ..SweepConfig::default()
+    }
+}
+
+#[test]
+fn summary_is_worker_count_invariant() {
+    let o1 = Explorer::new(cfg(1)).unwrap().run().unwrap();
+    let o4 = Explorer::new(cfg(4)).unwrap().run().unwrap();
+    let j1 = explore::sweep_bench(&cfg(1), &o1).to_json();
+    let j4 = explore::sweep_bench(&cfg(4), &o4).to_json();
+    assert_eq!(
+        j1, j4,
+        "SWEEP_summary.json must be byte-identical across worker counts"
+    );
+    // The Pareto set is order-independent of completion order.
+    assert_eq!(o1.pareto, o4.pareto);
+    // And the cache saw identical traffic: every (config, shape, digest)
+    // key is distinct within one run, so hit/miss counts are exact.
+    assert_eq!(o1.cache.hits, o4.cache.hits);
+    assert_eq!(o1.cache.misses, o4.cache.misses);
+}
+
+#[test]
+fn second_run_reuses_the_result_cache() {
+    let c = cfg(2);
+    let ex = Explorer::new(c.clone()).unwrap();
+    let first = ex.run().unwrap();
+    assert!(first.cache.misses > 0, "first run must simulate");
+    // The post-sweep baseline re-read already hits entries the WS sweep
+    // pass inserted.
+    assert!(first.cache.hits > 0, "baseline lookups should hit");
+
+    let second = ex.run().unwrap();
+    assert_eq!(second.cache.misses, 0, "everything memoized: {:?}", second.cache);
+    assert!(second.cache.hits >= first.cache.misses);
+
+    // Memoized results are bit-identical to the cold run.
+    let j1 = explore::summary_json(&c, &first);
+    let j2 = explore::summary_json(&c, &second);
+    assert_eq!(j1.get("points"), j2.get("points"));
+    assert_eq!(j1.get("headlines"), j2.get("headlines"));
+    assert_eq!(j1.get("baselines"), j2.get("baselines"));
+}
+
+#[test]
+fn asymmetric_beats_square_and_matches_eq6() {
+    // Small-budget analogue of the `repro sweep --pes 1024` acceptance
+    // run: full synth workload, WS dataflow, 17-point grid.
+    let c = SweepConfig {
+        pe_budget: 64,
+        aspect_points: 17,
+        dataflows: vec![DataflowKind::Ws],
+        workloads: vec![WorkloadKind::Synth],
+        max_layers: 0,
+        seed: 2023,
+        workers: 0,
+        cache_capacity: 64,
+        ..SweepConfig::default()
+    };
+    let out = Explorer::new(c.clone()).unwrap().run().unwrap();
+    let h = out.headline(&c, 0);
+    assert!(
+        h.best_beats_square,
+        "best point {} ({} mW) must beat the square baseline ({} mW)",
+        h.best_label, h.best_interconnect_mw, h.baseline_interconnect_mw
+    );
+    assert!(h.interconnect_saving > 0.0);
+    assert!(
+        h.eq6_within_one_step,
+        "eq.6 W/H {} must land within one grid step of the swept optimum",
+        h.eq6_ratio
+    );
+    // WS keeps the wide psum bus busy: the optimum is wider-than-tall.
+    assert!(h.best_aspect > 1.0, "best W/H {}", h.best_aspect);
+    assert!(h.eq6_ratio > 1.0);
+
+    // Frontier sanity: sorted by cycles, non-increasing interconnect.
+    let f = &out.pareto[0];
+    assert!(!f.is_empty());
+    for w in f.windows(2) {
+        assert!(out.points[w[0]].cycles <= out.points[w[1]].cycles);
+        assert!(
+            out.points[w[0]].best.interconnect_mw >= out.points[w[1]].best.interconnect_mw
+        );
+    }
+    // The square-geometry WS point exists and its eq.6 annotation is
+    // consistent with its measured activity asymmetry.
+    let sq = out
+        .points
+        .iter()
+        .find(|p| p.rows == 8 && p.cols == 8)
+        .expect("8x8 geometry swept");
+    assert!(sq.a_v > sq.a_h, "a_v {} vs a_h {}", sq.a_v, sq.a_h);
+}

@@ -331,13 +331,17 @@ def digest_i64(seed: int, values: np.ndarray) -> int:
 
 
 # ----------------------------------------------------------------------
-# power::evaluate — interconnect terms, f64 op-for-op
+# power::evaluate — interconnect + compute terms, f64 op-for-op
 # ----------------------------------------------------------------------
 
 # TechParams::default()
 VDD = 0.9
 WIRE_CAP = 0.20
 CTRL_EFF_WIRES = 2.514
+MAC_ENERGY_FJ = 130.0
+ZERO_GATING = 0.8
+FF_ENERGY_FJ_PER_BIT = 0.7
+LEAKAGE_UW_PER_PE = 20.0
 # PeMicroArch::default().cost(paper_32x32): the paper's constant A.
 NAND2_UM2 = 0.49
 UTILIZATION = 0.70
@@ -366,6 +370,28 @@ def interconnect_mw(stats, cycles, R, C, area, aspect, clock_ghz=1.0):
         return fj * 1e-15 / seconds * 1e3
 
     return to_mw(h_bus_fj) + to_mw(v_bus_fj) + to_mw(w_load_fj) + to_mw(ctrl_fj)
+
+
+def compute_mw(stats, cycles, macs, R, C, bh, bv, clock_ghz=1.0):
+    """power::evaluate's PE-internal terms (mac + reg + leak), replicated
+    operation-for-operation: floorplan-invariant, so one value covers both
+    geometries (the Rust generator asserts the same invariance)."""
+    seconds = float(cycles) / (clock_ghz * 1e9)
+
+    def to_mw(fj: float) -> float:
+        return fj * 1e-15 / seconds * 1e3
+
+    # Multiplier data gating over the horizontal zero fraction.
+    zero_frac = float(stats["h"][1]) / float(stats["h"][2])
+    scale = float(bh) / 16.0
+    mac_eff_fj = (MAC_ENERGY_FJ * scale * scale) * (1.0 - ZERO_GATING * zero_frac)
+    mac_fj = float(macs) * mac_eff_fj
+
+    register_bits = 2 * bh + bv
+    reg_fj = float(cycles) * float(R * C) * float(register_bits) * FF_ENERGY_FJ_PER_BIT
+
+    leak_mw = LEAKAGE_UW_PER_PE * float(R * C) * 1e-3
+    return to_mw(mac_fj) + to_mw(reg_fj) + leak_mw
 
 
 # ----------------------------------------------------------------------
@@ -444,6 +470,9 @@ def compute_doc() -> dict:
         a_act = stats["h"][0] / (stats["h"][2] * BH)
         v_act = stats["v"][0] / (stats["v"][2] * BV)
         assert 0.0 < a_act <= 1.0 and 0.0 < v_act <= 1.0
+        ic_sym = interconnect_mw(stats, cycles, R, C, area, 1.0)
+        ic_asym = interconnect_mw(stats, cycles, R, C, area, 3.8)
+        comp = compute_mw(stats, cycles, macs, R, C, BH, BV)
         entry = {
             "name": name,
             "gemm": [m, k, n],
@@ -457,13 +486,17 @@ def compute_doc() -> dict:
             "cycles": cycles,
             "macs": macs,
             "y_digest": format(digest_i64(0, y.reshape(-1)), "016x"),
-            "interconnect_sym_mw": interconnect_mw(stats, cycles, R, C, area, 1.0),
-            "interconnect_asym_mw": interconnect_mw(stats, cycles, R, C, area, 3.8),
+            "interconnect_sym_mw": ic_sym,
+            "interconnect_asym_mw": ic_asym,
+            "compute_mw": comp,
+            "total_sym_mw": ic_sym + comp,
+            "total_asym_mw": ic_asym + comp,
         }
         layers.append(entry)
         print(
             f"{name}: {m}x{k}x{n}  a_h={a_act:.3f} a_v={v_act:.3f} "
-            f"cycles={cycles} icn_sym={entry['interconnect_sym_mw']:.3f}mW"
+            f"cycles={cycles} icn_sym={entry['interconnect_sym_mw']:.3f}mW "
+            f"total_sym={entry['total_sym_mw']:.3f}mW"
         )
     return {
         "description": (
