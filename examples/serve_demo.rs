@@ -13,6 +13,7 @@
 
 use asymm_sa::arch::SaConfig;
 use asymm_sa::serve::{run_scenario, session::serving_mix, ScenarioConfig, ServeConfig, Server};
+use asymm_sa::sim::engine::DataflowKind;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     let sa = SaConfig::paper_32x32();
@@ -21,6 +22,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         workers: 0,
         cache_capacity: 24,
         window: 16,
+        engine: DataflowKind::Ws,
     });
     println!(
         "serve_demo: 32x32 WS array, {} workers, window {}, cache {} entries",

@@ -1,0 +1,110 @@
+//! Bench: dataflow-engine + sweep throughput → `BENCH_sweep.json`.
+//!
+//! The `repro sweep` hot path spends its time in the per-dataflow
+//! analytic engines, so this suite records two things next to the
+//! `sim_throughput` WS numbers:
+//!
+//! * **per-engine speedups** — the frozen scalar OS/IS baselines
+//!   (`baseline::simulate_gemm_{os,is}_scalar`, kept unoptimized on
+//!   purpose) against the blocked engines, single-thread and
+//!   auto-threaded, on the paper's 32×32 config (`speedup_{os,is}_1t`
+//!   and `_auto` metrics — the acceptance gate is ≥2× single-thread);
+//! * **end-to-end sweep scaling** — a WS+OS+IS `Explorer` run at
+//!   workers=1 vs auto (`sweep_workers_speedup`), with the result cache
+//!   disabled so every iteration re-simulates.
+//!
+//! CI runs this with `ASYMM_SA_BENCH_FAST=1` and uploads
+//! `BENCH_sweep.json` next to `BENCH_sim.json`, so the per-dataflow
+//! perf trajectory is machine-tracked per commit.
+
+use asymm_sa::arch::SaConfig;
+use asymm_sa::bench_util::Bench;
+use asymm_sa::explore::{Explorer, SweepConfig, WorkloadKind};
+use asymm_sa::gemm::Matrix;
+use asymm_sa::sim::engine::DataflowKind;
+use asymm_sa::sim::fast::FastSimOpts;
+use asymm_sa::util::rng::Rng;
+
+fn operands(m: usize, k: usize, n: usize, seed: u64, hi: i64) -> (Matrix<i32>, Matrix<i32>) {
+    let mut rng = Rng::new(seed);
+    let a = Matrix::from_vec(
+        m,
+        k,
+        (0..m * k)
+            .map(|_| if rng.chance(0.5) { 0 } else { rng.int_range(0, hi) as i32 })
+            .collect(),
+    )
+    .expect("sized");
+    let w = Matrix::from_vec(
+        k,
+        n,
+        (0..k * n).map(|_| rng.int_range(-hi, hi) as i32).collect(),
+    )
+    .expect("sized");
+    (a, w)
+}
+
+fn main() {
+    let mut b = Bench::new("sweep_throughput");
+    let one_thread = FastSimOpts {
+        threads: 1,
+        ..FastSimOpts::default()
+    };
+
+    // ---- Engine speedups: scalar baseline vs blocked, per dataflow ----
+    let sa32 = SaConfig::paper_32x32();
+    let (a, w) = operands(512, 128, 128, 2, 2000);
+    let shape = "32x32_512x128x128";
+    for kind in [DataflowKind::Os, DataflowKind::Is] {
+        let name = kind.name();
+        let scalar = b
+            .case(&format!("scalar_{name}_{shape}"), || {
+                kind.simulate_scalar(&sa32, &a, &w).expect("sim")
+            })
+            .mean_ns;
+        b.throughput((512 * 128 * 128) as f64, "MAC");
+        let fast_1t = b
+            .case(&format!("blocked_{name}_1t_{shape}"), || {
+                kind.simulate_with(&sa32, &a, &w, &one_thread).expect("sim")
+            })
+            .mean_ns;
+        b.throughput((512 * 128 * 128) as f64, "MAC");
+        let fast_auto = b
+            .case(&format!("blocked_{name}_auto_{shape}"), || {
+                kind.engine().simulate(&sa32, &a, &w).expect("sim")
+            })
+            .mean_ns;
+        b.throughput((512 * 128 * 128) as f64, "MAC");
+        b.note(&format!("speedup_{name}_1t"), scalar / fast_1t);
+        b.note(&format!("speedup_{name}_auto"), scalar / fast_auto);
+    }
+
+    // ---- End-to-end sweep: workers 1 vs auto over all three dataflows --
+    // Cache disabled so repeat iterations re-simulate; small budget so a
+    // full Explorer run fits the per-case measurement budget.
+    let mk_cfg = |workers: usize| SweepConfig {
+        pe_budget: 256,
+        aspect_points: 9,
+        dataflows: vec![DataflowKind::Ws, DataflowKind::Os, DataflowKind::Is],
+        workloads: vec![WorkloadKind::Synth],
+        max_layers: 1,
+        seed: 2023,
+        workers,
+        cache_capacity: 0,
+        ..SweepConfig::default()
+    };
+    let sweep_1w = b
+        .case("sweep_ws_os_is_256pes_workers1", || {
+            Explorer::new(mk_cfg(1)).expect("cfg").run().expect("sweep")
+        })
+        .mean_ns;
+    let sweep_auto = b
+        .case("sweep_ws_os_is_256pes_workers_auto", || {
+            Explorer::new(mk_cfg(0)).expect("cfg").run().expect("sweep")
+        })
+        .mean_ns;
+    b.note("sweep_workers_speedup", sweep_1w / sweep_auto);
+
+    b.finish();
+    b.write_json("BENCH_sweep.json").expect("write BENCH_sweep.json");
+}

@@ -19,6 +19,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+use crate::sim::engine::DataflowKind;
 use crate::sim::GemmSim;
 
 /// Bound on each per-event latency log: long-lived servers must not
@@ -46,6 +47,43 @@ pub struct Metrics {
     /// stream windows is not included (see
     /// `serve::InferResponse::latency_secs`).
     serve_latency_micros: Mutex<Vec<u64>>,
+    /// Per-dataflow job counters, indexed by [`DataflowKind::index`]:
+    /// the sweep's per-engine throughput view, so a regression in any
+    /// one dataflow leg is visible instead of averaged away.
+    engine_jobs: [AtomicU64; 3],
+    engine_macs: [AtomicU64; 3],
+    engine_wall_micros: [AtomicU64; 3],
+}
+
+/// Per-dataflow slice of the job counters (one metrics lane per
+/// [`DataflowKind`]). Only recorded for cold simulations — cache hits
+/// never touch an engine.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EngineLane {
+    /// Jobs this engine completed.
+    pub jobs: u64,
+    /// MACs this engine simulated.
+    pub macs: u64,
+    /// Engine wall time in microseconds (summed across workers).
+    pub wall_micros: u64,
+}
+
+impl EngineLane {
+    /// Completed simulations per engine-wall second.
+    pub fn jobs_per_sec(&self) -> f64 {
+        if self.wall_micros == 0 {
+            return 0.0;
+        }
+        self.jobs as f64 / (self.wall_micros as f64 * 1e-6)
+    }
+
+    /// Simulated MACs per engine-wall second.
+    pub fn macs_per_sec(&self) -> f64 {
+        if self.wall_micros == 0 {
+            return 0.0;
+        }
+        self.macs as f64 / (self.wall_micros as f64 * 1e-6)
+    }
 }
 
 /// Point-in-time copy of the metrics.
@@ -73,6 +111,9 @@ pub struct MetricsSnapshot {
     pub job_wall_sorted_micros: Vec<u64>,
     /// Per-request serve latencies in µs, sorted ascending.
     pub serve_latency_sorted_micros: Vec<u64>,
+    /// Per-dataflow job counters, indexed by [`DataflowKind::index`]
+    /// (use [`MetricsSnapshot::engine`]).
+    pub engines: [EngineLane; 3],
 }
 
 /// Nearest-rank percentile over an ascending-sorted slice; `p ∈ [0, 1]`.
@@ -114,6 +155,16 @@ impl Metrics {
         self.push_bounded(&self.serve_latency_micros, (latency_secs * 1e6) as u64);
     }
 
+    /// Record one finished simulation into its dataflow's lane (in
+    /// addition to [`Metrics::record_job`], which callers still invoke
+    /// for the aggregate counters).
+    pub fn record_engine_job(&self, kind: DataflowKind, sim: &GemmSim, wall_secs: f64) {
+        let i = kind.index();
+        self.engine_jobs[i].fetch_add(1, Ordering::Relaxed);
+        self.engine_macs[i].fetch_add(sim.macs, Ordering::Relaxed);
+        self.engine_wall_micros[i].fetch_add((wall_secs * 1e6) as u64, Ordering::Relaxed);
+    }
+
     /// Record one result-cache lookup.
     pub fn record_cache_lookup(&self, hit: bool) {
         self.cache_lookups.fetch_add(1, Ordering::Relaxed);
@@ -147,6 +198,11 @@ impl Metrics {
             latency_samples_dropped: self.latency_samples_dropped.load(Ordering::Relaxed),
             job_wall_sorted_micros: job_wall,
             serve_latency_sorted_micros: serve_lat,
+            engines: std::array::from_fn(|i| EngineLane {
+                jobs: self.engine_jobs[i].load(Ordering::Relaxed),
+                macs: self.engine_macs[i].load(Ordering::Relaxed),
+                wall_micros: self.engine_wall_micros[i].load(Ordering::Relaxed),
+            }),
         }
     }
 }
@@ -186,6 +242,11 @@ impl MetricsSnapshot {
             return 0.0;
         }
         self.cache_hits as f64 / self.cache_lookups as f64
+    }
+
+    /// This dataflow's slice of the job counters.
+    pub fn engine(&self, kind: DataflowKind) -> EngineLane {
+        self.engines[kind.index()]
     }
 }
 
@@ -257,6 +318,26 @@ mod tests {
         assert_eq!(percentile_micros(&sorted, 1.0), 50);
         assert_eq!(percentile_micros(&sorted, 0.9), 50);
         assert_eq!(percentile_micros(&[], 0.5), 0);
+    }
+
+    #[test]
+    fn engine_lanes_accumulate_per_dataflow() {
+        let m = Metrics::default();
+        let sim = dummy_sim();
+        m.record_engine_job(DataflowKind::Ws, &sim, 0.5);
+        m.record_engine_job(DataflowKind::Os, &sim, 0.25);
+        m.record_engine_job(DataflowKind::Os, &sim, 0.25);
+        let s = m.snapshot();
+        let ws = s.engine(DataflowKind::Ws);
+        assert_eq!((ws.jobs, ws.macs, ws.wall_micros), (1, 5000, 500_000));
+        let os = s.engine(DataflowKind::Os);
+        assert_eq!((os.jobs, os.macs, os.wall_micros), (2, 10_000, 500_000));
+        assert_eq!(s.engine(DataflowKind::Is), EngineLane::default());
+        assert!((os.jobs_per_sec() - 4.0).abs() < 1e-9);
+        assert!((os.macs_per_sec() - 20_000.0).abs() < 1e-6);
+        assert_eq!(EngineLane::default().jobs_per_sec(), 0.0);
+        // Engine lanes ride alongside, not instead of, the aggregates.
+        assert_eq!(s.jobs, 0);
     }
 
     #[test]

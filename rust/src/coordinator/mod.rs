@@ -13,16 +13,19 @@
 //! CPU-bound simulations with no I/O to overlap.
 //!
 //! Two parallelism levels compose here: the pool fans *layers* out to
-//! workers, and the analytic engine can shard *column blocks of one
-//! GEMM* across its own scoped threads
+//! workers, and the analytic engines can shard *column blocks of one
+//! GEMM* across their own scoped threads
 //! ([`crate::sim::fast::FastSimOpts`]). [`Coordinator::negotiate`]
 //! splits the machine between the levels per batch so a handful of big
 //! layers still saturates every CPU without oversubscribing when the
-//! batch is wide.
+//! batch is wide. The pool is dataflow-generic: [`Coordinator::run`]
+//! simulates jobs on whichever engine [`Coordinator::with_engine`]
+//! selected (WS by default), and both levels of parallelism apply to
+//! every dataflow.
 
 pub mod metrics;
 
-pub use metrics::{Metrics, MetricsSnapshot};
+pub use metrics::{EngineLane, Metrics, MetricsSnapshot};
 
 use std::sync::mpsc::sync_channel;
 use std::sync::{Arc, Mutex};
@@ -32,7 +35,8 @@ use crate::arch::SaConfig;
 use crate::error::{Error, Result};
 use crate::gemm::Matrix;
 use crate::sim::{
-    fast::{simulate_gemm_fast_with, FastSimOpts, INTRA_PAR_MIN_MACS},
+    engine::DataflowKind,
+    fast::{FastSimOpts, INTRA_PAR_MIN_MACS},
     GemmSim,
 };
 
@@ -68,6 +72,11 @@ pub struct Coordinator {
     auto_workers: bool,
     /// Intra-GEMM threads per worker; 0 = negotiate per batch.
     intra: usize,
+    /// Dataflow engine [`Coordinator::run`] simulates jobs on. Every
+    /// kind runs the fast blocked engine for its dataflow
+    /// ([`crate::sim::engine::DataflowEngine`]) with the negotiated
+    /// intra-GEMM threads.
+    engine: DataflowKind,
     metrics: Arc<Metrics>,
 }
 
@@ -89,6 +98,7 @@ impl Coordinator {
             workers,
             auto_workers,
             intra: 0,
+            engine: DataflowKind::Ws,
             metrics: Arc::new(Metrics::default()),
         }
     }
@@ -98,6 +108,18 @@ impl Coordinator {
     pub fn with_intra_threads(mut self, intra: usize) -> Self {
         self.intra = intra;
         self
+    }
+
+    /// Select the dataflow engine [`Coordinator::run`] simulates jobs on
+    /// (default: weight-stationary, the paper's configuration).
+    pub fn with_engine(mut self, engine: DataflowKind) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    /// The dataflow engine this pool simulates jobs on.
+    pub fn engine(&self) -> DataflowKind {
+        self.engine
     }
 
     /// Number of worker threads.
@@ -144,6 +166,7 @@ impl Coordinator {
             Vec::with_capacity(jobs.len());
         for job in jobs {
             let sa = self.sa.clone();
+            let engine = self.engine;
             let metrics = Arc::clone(&self.metrics);
             tasks.push(Box::new(move |intra: usize| {
                 let macs = (job.a.rows * job.a.cols * job.w.cols) as u64;
@@ -152,9 +175,10 @@ impl Coordinator {
                     ..FastSimOpts::default()
                 };
                 let t0 = Instant::now();
-                simulate_gemm_fast_with(&sa, &job.a, &job.w, &sim_opts).map(|sim| {
+                engine.simulate_with(&sa, &job.a, &job.w, &sim_opts).map(|sim| {
                     let wall = t0.elapsed().as_secs_f64();
                     metrics.record_job(&sim, wall);
+                    metrics.record_engine_job(engine, &sim, wall);
                     LayerResult {
                         name: job.name,
                         sim,
@@ -438,6 +462,29 @@ mod tests {
         }));
         assert!(coord.run_tasks(tasks).is_err());
         assert_eq!(shared.len(), 3); // still borrowed-alive afterwards
+    }
+
+    #[test]
+    fn engine_selection_runs_the_requested_dataflow() {
+        let sa = SaConfig::new_ws(4, 4, 8).unwrap();
+        let js = jobs(3);
+        let expect: Vec<_> = js
+            .iter()
+            .map(|j| DataflowKind::Os.simulate_scalar(&sa, &j.a, &j.w).unwrap())
+            .collect();
+        let coord = Coordinator::new(&sa, 2).with_engine(DataflowKind::Os);
+        assert_eq!(coord.engine(), DataflowKind::Os);
+        assert_eq!(Coordinator::new(&sa, 2).engine(), DataflowKind::Ws);
+        let results = coord.run(js).unwrap();
+        for (r, e) in results.iter().zip(&expect) {
+            assert_eq!(r.sim.y, e.y);
+            assert_eq!(r.sim.stats, e.stats);
+            assert_eq!(r.sim.cycles, e.cycles);
+        }
+        let snap = coord.metrics().snapshot();
+        assert_eq!(snap.engine(DataflowKind::Os).jobs, 3);
+        assert_eq!(snap.engine(DataflowKind::Ws).jobs, 0);
+        assert_eq!(snap.jobs, 3);
     }
 
     #[test]

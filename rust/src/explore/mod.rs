@@ -8,9 +8,12 @@
 //! * **array geometry** — every `rows × cols` factorization of the
 //!   budget ([`space::factorizations`]) plus a continuous log-spaced PE
 //!   aspect-ratio grid per geometry ([`space::aspect_grid`]);
-//! * **dataflow** — WS (the paper's target, fast analytic engine), OS
-//!   and IS (the ablation engines), which change which buses are wide
-//!   and busy and hence the optimal aspect;
+//! * **dataflow** — WS (the paper's target), OS and IS (the
+//!   ablations), which change which buses are wide and busy and hence
+//!   the optimal aspect. All three run on the fast blocked engines
+//!   behind [`crate::sim::engine::DataflowEngine`], so every sweep leg
+//!   gets memoized stream statistics and intra-GEMM parallelism — not
+//!   just the WS points;
 //! * **workload** — the paper's Table-I ResNet50 layers and the
 //!   synthetic conv mix, lowered through the same seeded
 //!   im2col + quantize pipeline as `repro run`.
@@ -57,60 +60,16 @@ use crate::report::pipeline::layer_operands;
 use crate::serve::cache::{
     mix, operand_digest, sa_fingerprint, CacheKey, CacheStats, ResultCache,
 };
-use crate::sim::fast::{simulate_gemm_fast_with, FastSimOpts, INTRA_PAR_MIN_MACS};
-use crate::sim::is::simulate_gemm_is;
-use crate::sim::os::simulate_gemm_os;
+use crate::sim::fast::{FastSimOpts, INTRA_PAR_MIN_MACS};
 use crate::sim::GemmSim;
 use crate::util::json::{obj, Json};
 use crate::workloads::{synth_sweep_layers, table1_layers, ActivationModel, SynthGen};
 
-/// Dataflow axis of the sweep. WS/OS map onto [`crate::arch::Dataflow`];
-/// IS is the input-stationary ablation engine (same wide-psum vertical
-/// bus as WS, so the asymmetry conclusion transfers — see
-/// [`crate::sim::is`]).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub enum DataflowKind {
-    /// Weight-stationary (the paper's configuration; fast engine).
-    Ws,
-    /// Output-stationary ablation.
-    Os,
-    /// Input-stationary ablation.
-    Is,
-}
-
-impl DataflowKind {
-    /// Short lowercase name (CLI/JSON spelling).
-    pub fn name(&self) -> &'static str {
-        match self {
-            DataflowKind::Ws => "ws",
-            DataflowKind::Os => "os",
-            DataflowKind::Is => "is",
-        }
-    }
-
-    /// Parse the CLI/JSON spelling.
-    pub fn parse(s: &str) -> Result<Self> {
-        match s.trim() {
-            "ws" => Ok(DataflowKind::Ws),
-            "os" => Ok(DataflowKind::Os),
-            "is" => Ok(DataflowKind::Is),
-            other => Err(Error::config(format!(
-                "unknown dataflow `{other}` (expected ws, os or is)"
-            ))),
-        }
-    }
-
-    /// Cache-fingerprint salt: the three engines produce different
-    /// statistics for the same array/operands and must never alias in
-    /// the result cache.
-    fn salt(&self) -> u64 {
-        match self {
-            DataflowKind::Ws => 0x5753_0001,
-            DataflowKind::Os => 0x4F53_0002,
-            DataflowKind::Is => 0x4953_0003,
-        }
-    }
-}
+/// Dataflow axis of the sweep — the crate-wide engine discriminant,
+/// re-exported from [`crate::sim::engine`]. Every kind now runs on the
+/// same blocked, memoized, intra-parallel machinery; the sweep treats
+/// them uniformly through [`DataflowKind::simulate_with`].
+pub use crate::sim::engine::DataflowKind;
 
 /// Workload axis of the sweep.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -439,8 +398,11 @@ fn prepare_workload(
     Ok(PreparedWorkload { jobs })
 }
 
-/// Engine dispatch: WS uses the fast analytic engine with the negotiated
-/// intra-GEMM threads; OS/IS use the ablation engines (serial).
+/// Engine dispatch: every dataflow runs its fast blocked engine
+/// ([`crate::sim::engine::DataflowEngine`]) with the negotiated
+/// intra-GEMM thread count; small jobs stay serial under the same guard
+/// the coordinator applies, so thread setup is never paid on GEMMs too
+/// small to amortize it.
 fn simulate(
     df: DataflowKind,
     sa: &SaConfig,
@@ -448,18 +410,12 @@ fn simulate(
     w: &Matrix<i32>,
     intra: usize,
 ) -> Result<GemmSim> {
-    match df {
-        DataflowKind::Ws => {
-            let macs = (a.rows * a.cols * w.cols) as u64;
-            let opts = FastSimOpts {
-                threads: if macs < INTRA_PAR_MIN_MACS { 1 } else { intra },
-                ..FastSimOpts::default()
-            };
-            simulate_gemm_fast_with(sa, a, w, &opts)
-        }
-        DataflowKind::Os => simulate_gemm_os(sa, a, w),
-        DataflowKind::Is => simulate_gemm_is(sa, a, w),
-    }
+    let macs = (a.rows * a.cols * w.cols) as u64;
+    let opts = FastSimOpts {
+        threads: if macs < INTRA_PAR_MIN_MACS { 1 } else { intra },
+        ..FastSimOpts::default()
+    };
+    df.simulate_with(sa, a, w, &opts)
 }
 
 /// The sweep engine: owns the shared result cache and a coordinator pool
@@ -658,7 +614,9 @@ impl Explorer {
                 None => {
                     let t0 = Instant::now();
                     let sim = simulate(df, &sa, &job.a, &job.w, intra)?;
-                    metrics.record_job(&sim, t0.elapsed().as_secs_f64());
+                    let wall = t0.elapsed().as_secs_f64();
+                    metrics.record_job(&sim, wall);
+                    metrics.record_engine_job(df, &sim, wall);
                     let sim = Arc::new(sim);
                     self.cache
                         .lock()
@@ -1006,17 +964,6 @@ mod tests {
         assert_eq!(a.cache.hits, 0);
         assert_eq!(b.cache.hits, 0);
         assert_eq!(a.cache.misses, b.cache.misses);
-    }
-
-    #[test]
-    fn dataflow_kinds_parse_and_salt() {
-        assert_eq!(DataflowKind::parse("ws").unwrap(), DataflowKind::Ws);
-        assert_eq!(DataflowKind::parse(" os ").unwrap(), DataflowKind::Os);
-        assert_eq!(DataflowKind::parse("is").unwrap(), DataflowKind::Is);
-        assert!(DataflowKind::parse("systolic").is_err());
-        assert_ne!(DataflowKind::Ws.salt(), DataflowKind::Os.salt());
-        assert_ne!(DataflowKind::Os.salt(), DataflowKind::Is.salt());
-        assert_ne!(DataflowKind::Ws.salt(), DataflowKind::Is.salt());
     }
 
     #[test]

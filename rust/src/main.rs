@@ -60,6 +60,7 @@ COMMANDS
                --window <n>    batch admission window (default 16)
                --cache <n>     result-cache entries (default 24)
                --unique <n>    input variants per layer (default 4)
+               --dataflow <s>  engine: ws | os | is (default ws)
                --json <f>      summary JSON path (default SERVE_summary.json)
   sweep      parallel design-space exploration: every rows x cols
              factorization of the PE budget x dataflow x workload,
@@ -200,6 +201,7 @@ fn run_cli(args: &[String]) -> Result<(), String> {
                 f.usize("window", 16)?,
                 f.usize("cache", 24)?,
                 f.usize("unique", 4)?,
+                f.string("dataflow", "ws"),
                 f.path("json").unwrap_or_else(|| PathBuf::from("SERVE_summary.json")),
             )
         }
@@ -369,22 +371,27 @@ fn serve(
     window: usize,
     cache: usize,
     unique: usize,
+    dataflow: String,
     json: PathBuf,
 ) -> Result<(), String> {
     use asymm_sa::bench_util::Bench;
     use asymm_sa::serve::{run_scenario, ScenarioConfig, ServeConfig, Server};
+    use asymm_sa::sim::engine::DataflowKind;
 
+    let engine = DataflowKind::parse(&dataflow).map_err(|e| e.to_string())?;
     let sa = SaConfig::paper_32x32();
     let server = Server::new(ServeConfig {
         sa: sa.clone(),
         workers,
         cache_capacity: cache,
         window,
+        engine,
     });
     let (layer_workers, intra) = server.coordinator().negotiate(window.max(1));
     println!(
-        "serve: 32x32 WS array, {} workers ({} layer x {} intra per full window), \
-         window {}, cache {} entries",
+        "serve: 32x32 array, {} engine, {} workers ({} layer x {} intra per full \
+         window), window {}, cache {} entries",
+        engine.name(),
         server.coordinator().workers(),
         layer_workers,
         intra,
@@ -492,12 +499,31 @@ fn sweep(
     let t0 = std::time::Instant::now();
     let out = explorer.run().map_err(|e| e.to_string())?;
     println!(
-        "swept {} points in {:.2}s ({} cold sims, {} cache hits)\n",
+        "swept {} points in {:.2}s ({} cold sims, {} cache hits)",
         out.points.len(),
         t0.elapsed().as_secs_f64(),
         out.cache.misses,
         out.cache.hits
     );
+    // Per-dataflow engine throughput (coordinator metrics lanes): a
+    // regression in any one dataflow leg shows up here instead of being
+    // averaged into the total.
+    let snap = explorer.coordinator().metrics().snapshot();
+    for df in &cfg.dataflows {
+        let lane = snap.engine(*df);
+        if lane.jobs > 0 {
+            println!(
+                "  {} engine: {} cold sims, {:.2}s engine wall, {:.1} sims/s, \
+                 {:.2}e9 MACs/s",
+                df.name(),
+                lane.jobs,
+                lane.wall_micros as f64 * 1e-6,
+                lane.jobs_per_sec(),
+                lane.macs_per_sec() / 1e9
+            );
+        }
+    }
+    println!();
 
     // Markdown Pareto report (also printed).
     let md = asymm_sa::report::sweep_markdown(&cfg, &out);

@@ -22,7 +22,10 @@
 //!    construction — `negotiate` sees one wide batch (few intra threads,
 //!    full fan-out) instead of N singletons that would each negotiate
 //!    `(1, cpus)` and pay scoped-thread setup per request.
-//! 3. **Coordinator** — the existing leader/worker pool; unchanged.
+//! 3. **Coordinator** — the existing leader/worker pool, running
+//!    whichever dataflow engine [`ServeConfig::engine`] selects (WS by
+//!    default; OS/IS servers ride the same fast blocked machinery via
+//!    [`crate::sim::engine::DataflowEngine`]).
 //!
 //! Per-request latencies and cache hit rates land in the coordinator's
 //! [`Metrics`](crate::coordinator::Metrics) as stable sorted views, so
@@ -47,6 +50,7 @@ use crate::arch::SaConfig;
 use crate::coordinator::{Coordinator, LayerJob, Metrics};
 use crate::error::Result;
 use crate::gemm::Matrix;
+use crate::sim::engine::DataflowKind;
 use crate::sim::GemmSim;
 
 /// Serving configuration.
@@ -61,16 +65,23 @@ pub struct ServeConfig {
     /// Max requests drained per batch window by
     /// [`Server::process_stream`].
     pub window: usize,
+    /// Dataflow engine requests are simulated on (WS is the paper's
+    /// configuration). The result-cache fingerprint is salted with the
+    /// engine ([`cache::mix`]), so servers of different dataflows never
+    /// alias results for the same array and operands.
+    pub engine: DataflowKind,
 }
 
 impl ServeConfig {
-    /// Defaults for an array: auto workers, 32-entry cache, window 16.
+    /// Defaults for an array: auto workers, 32-entry cache, window 16,
+    /// weight-stationary engine.
     pub fn new(sa: SaConfig) -> Self {
         ServeConfig {
             sa,
             workers: 0,
             cache_capacity: 32,
             window: 16,
+            engine: DataflowKind::Ws,
         }
     }
 }
@@ -123,11 +134,13 @@ pub struct Server {
 }
 
 impl Server {
-    /// New server; owns a coordinator pool and a result cache.
+    /// New server; owns a coordinator pool (running the configured
+    /// dataflow engine) and a result cache keyed under the
+    /// engine-salted array fingerprint.
     pub fn new(cfg: ServeConfig) -> Self {
-        let coord = Coordinator::new(&cfg.sa, cfg.workers);
+        let coord = Coordinator::new(&cfg.sa, cfg.workers).with_engine(cfg.engine);
         let cache = Mutex::new(ResultCache::new(cfg.cache_capacity));
-        let sa_fp = sa_fingerprint(&cfg.sa);
+        let sa_fp = cache::mix(sa_fingerprint(&cfg.sa), cfg.engine.salt());
         Server {
             cfg,
             coord,
@@ -299,6 +312,7 @@ mod tests {
             workers: 2,
             cache_capacity: cache,
             window: 4,
+            engine: DataflowKind::Ws,
         })
     }
 
@@ -388,6 +402,34 @@ mod tests {
             assert_eq!(r.sim.y, want.y);
         }
         assert_eq!(s.metrics().snapshot().jobs, 6);
+    }
+
+    #[test]
+    fn non_ws_server_serves_its_dataflow_and_salts_the_cache() {
+        let sa = SaConfig::new_ws(4, 4, 8).unwrap();
+        let mk = |engine| {
+            Server::new(ServeConfig {
+                sa: sa.clone(),
+                workers: 2,
+                cache_capacity: 8,
+                window: 4,
+                engine,
+            })
+        };
+        let os = mk(DataflowKind::Os);
+        let reqs: Vec<_> = (0..2).map(|i| req(i, 21, (6, 4, 4))).collect();
+        let out = os.process_batch(&reqs).unwrap();
+        let want = DataflowKind::Os
+            .simulate_scalar(&sa, &reqs[0].a, &reqs[0].w)
+            .unwrap();
+        assert_eq!(out[0].sim.y, want.y);
+        assert_eq!(out[0].sim.stats, want.stats);
+        assert_eq!(out[0].sim.cycles, want.cycles);
+        // The same request on WS vs OS servers must key differently: the
+        // engine-salted fingerprints may never alias.
+        let ws = mk(DataflowKind::Ws);
+        assert_ne!(ws.cache_key(&reqs[0]), os.cache_key(&reqs[0]));
+        assert_eq!(os.coordinator().engine(), DataflowKind::Os);
     }
 
     #[test]

@@ -269,6 +269,7 @@ mod tests {
                 workers: 2,
                 cache_capacity: 16,
                 window: 4,
+                engine: crate::sim::engine::DataflowKind::Ws,
             })
         };
         let s1 = mk_server();

@@ -1,25 +1,37 @@
-//! Pre-blocking analytic engine, kept as the perf/correctness reference.
+//! Pre-blocking analytic engines, kept as the perf/correctness references.
 //!
-//! This is the scalar engine the column-blocked kernel in [`super::fast`]
-//! replaced: per-register O(R²·C) weight-chain sweeps, horizontal stats
-//! re-derived for every tile pass, and a hand-unrolled two-column
-//! vertical loop. It stays in the tree for two reasons:
+//! Three frozen scalar engines live here:
 //!
-//! * **differential testing** — three independent implementations
-//!   (cycle-accurate, scalar analytic, blocked analytic) must agree
-//!   bit-exactly (see `tests/fast_engine_property.rs`);
-//! * **speedup accounting** — the `sim_throughput` bench times this
-//!   engine against the blocked one and records the ratio in
-//!   `BENCH_sim.json`, so the perf trajectory is measured against a
-//!   fixed baseline rather than a moving one.
+//! * [`simulate_gemm_fast_scalar`] — the WS engine the column-blocked
+//!   kernel in [`super::fast`] replaced: per-register O(R²·C)
+//!   weight-chain sweeps, horizontal stats re-derived for every tile
+//!   pass, and a hand-unrolled two-column vertical loop;
+//! * [`simulate_gemm_os_scalar`] / [`simulate_gemm_is_scalar`] — the
+//!   one-word-at-a-time OS/IS ablation engines that [`super::os`] /
+//!   [`super::is`] replaced with blocked, memoized, closed-form
+//!   implementations on the shared [`super::engine`] machinery.
+//!
+//! They stay in the tree for two reasons:
+//!
+//! * **differential testing** — for every dataflow, independent
+//!   implementations must agree bit-exactly (see
+//!   `tests/fast_engine_property.rs` and `tests/engines_equivalence.rs`;
+//!   WS additionally has the cycle-accurate RTL model);
+//! * **speedup accounting** — the `sim_throughput` / `sweep_throughput`
+//!   benches time these engines against the blocked ones and record the
+//!   ratios in `BENCH_sim.json` / `BENCH_sweep.json`, so the perf
+//!   trajectory is measured against fixed baselines rather than moving
+//!   ones.
 //!
 //! Do not optimize this module; that is the point of it.
 
-use crate::arch::SaConfig;
+use crate::arch::{Dataflow, SaConfig};
 use crate::error::{Error, Result};
-use crate::gemm::{Matrix, TilePlan};
+use crate::gemm::{matmul_i64, Matrix, TilePlan};
 use crate::quant::bus_word;
 
+use super::is::is_pass_cycles;
+use super::os::os_pass_cycles;
 use super::{pass_cycles, GemmSim, SaStats};
 
 /// Scalar analytic simulation of GEMM `a @ w`: same contract and
@@ -223,6 +235,254 @@ pub fn simulate_gemm_fast_scalar(
     })
 }
 
+/// Frozen scalar OS simulation of GEMM `a @ w`: same contract and
+/// bit-identical results as [`super::os::simulate_gemm_os`]. This is the
+/// pre-blocking engine verbatim — per-pass rescans of every activation
+/// row and weight column, and a per-register O(R²·C)-flavoured drain
+/// sweep — kept as the OS differential baseline.
+pub fn simulate_gemm_os_scalar(
+    sa: &SaConfig,
+    a: &Matrix<i32>,
+    w: &Matrix<i32>,
+) -> Result<GemmSim> {
+    if a.cols != w.rows {
+        return Err(Error::shape(format!(
+            "inner dims mismatch: {}x{} @ {}x{}",
+            a.rows, a.cols, w.rows, w.cols
+        )));
+    }
+    let mut sa_os = sa.clone();
+    sa_os.dataflow = Dataflow::OutputStationary;
+    let (r_dim, c_dim) = (sa_os.rows, sa_os.cols);
+    let bh = sa_os.bus_bits_horizontal();
+    let bv = sa_os.acc_bits; // drain words are full accumulator width
+    let (m, k, n) = (a.rows, a.cols, w.cols);
+    let pc = os_pass_cycles(&sa_os, k) as u64;
+
+    let y = matmul_i64(a, w)?;
+    let mut stats = SaStats::with_widths(bh, bv);
+    let mut cycles = 0u64;
+    let mut macs = 0u64;
+
+    let mut m0 = 0;
+    while m0 < m {
+        let m_len = r_dim.min(m - m0);
+        let mut n0 = 0;
+        while n0 < n {
+            let n_len = c_dim.min(n - n0);
+
+            // Horizontal: row r streams a[m0+r][0..k] (zero rows beyond
+            // m_len); identical on all C segments of the row.
+            for r in 0..r_dim {
+                let (mut tog, mut nz) = (0u64, 0u64);
+                if r < m_len {
+                    let mut p = 0u64;
+                    for kk in 0..k {
+                        let word = bus_word(a.get(m0 + r, kk) as i64, bh);
+                        tog += (p ^ word).count_ones() as u64;
+                        nz += (word != 0) as u64;
+                        p = word;
+                    }
+                    tog += p.count_ones() as u64;
+                }
+                stats.horizontal.toggles += tog * c_dim as u64;
+                stats.horizontal.zero_words += (pc - nz) * c_dim as u64;
+                stats.horizontal.observations += pc * c_dim as u64;
+            }
+
+            // Vertical weight stream: column c streams w[0..k][n0+c];
+            // identical on all R segments of the column.
+            for c in 0..c_dim {
+                let (mut tog, mut nz) = (0u64, 0u64);
+                if c < n_len {
+                    let mut p = 0u64;
+                    for kk in 0..k {
+                        let word = bus_word(w.get(kk, n0 + c) as i64, bh);
+                        tog += (p ^ word).count_ones() as u64;
+                        nz += (word != 0) as u64;
+                        p = word;
+                    }
+                    tog += p.count_ones() as u64;
+                }
+                stats.weight_load.toggles += tog * r_dim as u64;
+                stats.weight_load.zero_words += (pc - nz) * r_dim as u64;
+                stats.weight_load.observations += pc * r_dim as u64;
+            }
+
+            // Output drain: segment (r,c) sees y[m0+r], y[m0+r-1], …,
+            // y[m0], then zero — `r+1` words out of the R+1 drain cycles.
+            for c in 0..c_dim {
+                for r in 0..r_dim {
+                    let (mut tog, mut nz) = (0u64, 0u64);
+                    if c < n_len {
+                        let mut p = 0u64;
+                        for rr in (0..=r.min(m_len.saturating_sub(1))).rev() {
+                            if r < m_len {
+                                let word = bus_word(y.get(m0 + rr, n0 + c), bv);
+                                tog += (p ^ word).count_ones() as u64;
+                                nz += (word != 0) as u64;
+                                p = word;
+                            }
+                        }
+                        tog += p.count_ones() as u64;
+                    }
+                    stats.vertical.toggles += tog;
+                    stats.vertical.zero_words += pc - nz;
+                    stats.vertical.observations += pc;
+                }
+            }
+
+            cycles += pc;
+            macs += (m_len * k * n_len) as u64;
+            n0 += c_dim;
+        }
+        m0 += r_dim;
+    }
+
+    Ok(GemmSim {
+        y,
+        stats,
+        cycles,
+        macs,
+    })
+}
+
+/// Frozen scalar IS simulation of GEMM `a @ w`: same contract and
+/// bit-identical results as [`super::is::simulate_gemm_is`]. This is the
+/// pre-blocking engine verbatim — per-register O(R²·C) preload-chain
+/// sweeps, per-pass weight-row rescans, and a one-word-at-a-time
+/// vertical prefix loop with per-cycle pass-through bookkeeping — kept
+/// as the IS differential baseline.
+pub fn simulate_gemm_is_scalar(
+    sa: &SaConfig,
+    a: &Matrix<i32>,
+    w: &Matrix<i32>,
+) -> Result<GemmSim> {
+    if a.cols != w.rows {
+        return Err(Error::shape(format!(
+            "inner dims mismatch: {}x{} @ {}x{}",
+            a.rows, a.cols, w.rows, w.cols
+        )));
+    }
+    let (r_dim, c_dim) = (sa.rows, sa.cols);
+    let bh = sa.bus_bits_horizontal();
+    let bv = sa.acc_bits;
+    let (m, k, n) = (a.rows, a.cols, w.cols);
+    let pc = is_pass_cycles(sa, n) as u64;
+
+    let y = matmul_i64(a, w)?;
+    let mut stats = SaStats::new(sa);
+    let mut cycles = 0u64;
+    let mut macs = 0u64;
+
+    // Tile: rows of the array hold k-indices (reduction down columns),
+    // columns hold m-indices (outputs drain South per m).
+    let mut k0 = 0;
+    while k0 < k {
+        let k_len = r_dim.min(k - k0);
+        let mut m0 = 0;
+        while m0 < m {
+            let m_len = c_dim.min(m - m0);
+
+            // Activation preload: shift A^T block down the columns
+            // (same chain structure as the WS weight preload; counted
+            // from a cleared chain for tile independence).
+            for c in 0..c_dim {
+                for r in 0..r_dim {
+                    let (mut tog, mut nz) = (0u64, 0u64);
+                    let mut p = 0u64;
+                    if c < m_len {
+                        for t in r..r_dim {
+                            let rr = r_dim - 1 - (t - r);
+                            let v = if rr < k_len {
+                                a.get(m0 + c, k0 + rr) as i64
+                            } else {
+                                0
+                            };
+                            let word = bus_word(v, bh);
+                            tog += (p ^ word).count_ones() as u64;
+                            nz += (word != 0) as u64;
+                            p = word;
+                        }
+                    }
+                    stats.weight_load.toggles += tog;
+                    stats.weight_load.zero_words += r_dim as u64 - nz;
+                    stats.weight_load.observations += r_dim as u64;
+                }
+            }
+
+            // Weight stream: row r carries w[k0+r][0..n] (B_h words),
+            // identical on all C segments of the row.
+            for r in 0..r_dim {
+                let (mut tog, mut nz) = (0u64, 0u64);
+                if r < k_len {
+                    let mut p = 0u64;
+                    for j in 0..n {
+                        let word = bus_word(w.get(k0 + r, j) as i64, bh);
+                        tog += (p ^ word).count_ones() as u64;
+                        nz += (word != 0) as u64;
+                        p = word;
+                    }
+                    tog += p.count_ones() as u64;
+                }
+                stats.horizontal.toggles += tog * c_dim as u64;
+                stats.horizontal.zero_words += (pc - nz) * c_dim as u64;
+                stats.horizontal.observations += pc * c_dim as u64;
+            }
+
+            // Vertical psums: segment (r, c) carries the prefix sum
+            // P_r(j, c) = Σ_{r'≤r} a[m0+c][k0+r'] · w[k0+r'][j] over the
+            // weight-column stream j — same structure as WS.
+            let mut prev_words = vec![0u64; r_dim];
+            let mut toggles = vec![0u64; r_dim];
+            let mut nonzeros = vec![0u64; r_dim];
+            for c in 0..c_dim {
+                toggles.iter_mut().for_each(|v| *v = 0);
+                nonzeros.iter_mut().for_each(|v| *v = 0);
+                prev_words.iter_mut().for_each(|v| *v = 0);
+                if c < m_len {
+                    for j in 0..n {
+                        let mut prefix = 0i64;
+                        let mut word = 0u64;
+                        for r in 0..k_len {
+                            prefix += a.get(m0 + c, k0 + r) as i64 * w.get(k0 + r, j) as i64;
+                            word = bus_word(prefix, bv);
+                            toggles[r] += (prev_words[r] ^ word).count_ones() as u64;
+                            nonzeros[r] += (word != 0) as u64;
+                            prev_words[r] = word;
+                        }
+                        for r in k_len..r_dim {
+                            toggles[r] += (prev_words[r] ^ word).count_ones() as u64;
+                            nonzeros[r] += (word != 0) as u64;
+                            prev_words[r] = word;
+                        }
+                    }
+                    for r in 0..r_dim {
+                        toggles[r] += prev_words[r].count_ones() as u64;
+                    }
+                }
+                for r in 0..r_dim {
+                    stats.vertical.toggles += toggles[r];
+                    stats.vertical.zero_words += pc - nonzeros[r];
+                    stats.vertical.observations += pc;
+                }
+            }
+
+            cycles += pc;
+            macs += (m_len * k_len * n) as u64;
+            m0 += c_dim;
+        }
+        k0 += r_dim;
+    }
+
+    Ok(GemmSim {
+        y,
+        stats,
+        cycles,
+        macs,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -266,5 +526,29 @@ mod tests {
         let w = rand_mat(19, 23, 2, -128, 127);
         let sim = simulate_gemm_fast_scalar(&sa, &a, &w).unwrap();
         assert_eq!(sim.y, matmul_i64(&a, &w).unwrap());
+    }
+
+    /// The frozen OS/IS baselines keep the exact contract of the fast
+    /// engines they reference: correct outputs/MACs and the pass-count
+    /// cycle formulas (bit-level equality with the fast engines lives in
+    /// the integration tiers).
+    #[test]
+    fn scalar_os_is_reference_outputs_and_cycles() {
+        let sa = SaConfig::new_ws(4, 4, 8).unwrap();
+        let a = rand_mat(9, 7, 3, -100, 100);
+        let w = rand_mat(7, 6, 4, -100, 100);
+        let reference = matmul_i64(&a, &w).unwrap();
+        let os = simulate_gemm_os_scalar(&sa, &a, &w).unwrap();
+        assert_eq!(os.y, reference);
+        assert_eq!(os.macs, 9 * 7 * 6);
+        assert_eq!(os.cycles, 3 * 2 * os_pass_cycles(&sa, 7) as u64);
+        let is = simulate_gemm_is_scalar(&sa, &a, &w).unwrap();
+        assert_eq!(is.y, reference);
+        assert_eq!(is.macs, 9 * 7 * 6);
+        assert_eq!(is.cycles, 2 * 3 * is_pass_cycles(&sa, 6) as u64);
+        assert!(os.stats.vertical.observations > 0);
+        assert!(is.stats.vertical.observations > 0);
+        assert!(simulate_gemm_os_scalar(&sa, &Matrix::<i32>::zeros(2, 3), &w).is_err());
+        assert!(simulate_gemm_is_scalar(&sa, &Matrix::<i32>::zeros(2, 3), &w).is_err());
     }
 }

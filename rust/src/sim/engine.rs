@@ -1,0 +1,488 @@
+//! Dataflow-generic engine dispatch: one fast analytic machinery for
+//! WS, OS and IS.
+//!
+//! PR 1 made the weight-stationary engine fast (column blocking,
+//! memoized stream statistics, closed-form chain accounting, scoped
+//! intra-GEMM sharding); this module generalizes that machinery so the
+//! output-stationary and input-stationary ablation engines run on the
+//! same mechanisms instead of privileged per-dataflow scalar loops —
+//! the way SCALE-Sim-class simulators treat every dataflow through one
+//! analytic cost model.
+//!
+//! Three layers live here:
+//!
+//! * [`DataflowKind`] — the engine discriminant shared by the
+//!   design-space explorer, the serve subsystem and the coordinator
+//!   (CLI spelling, cache-fingerprint salt, metrics lane index);
+//! * [`DataflowEngine`] — the trait each engine implements: a fast
+//!   blocked path taking [`FastSimOpts`] (every setting is
+//!   bit-identical, only wall clock changes) and the frozen scalar
+//!   reference it is differentially tested against;
+//! * shared kernels — [`stream_row_stats`] (one contiguous word stream,
+//!   drain-to-zero), [`blocks`]/[`chunk_columns`] (tile decomposition),
+//!   and [`run_chunks`] (order-deterministic scoped-thread sharding).
+//!   The stream/chunking helpers serve all three fast engines;
+//!   `run_chunks` shards OS/IS, while the WS engine keeps its own
+//!   scoped-thread loop in [`super::fast`] because it threads reusable
+//!   per-worker scratch buffers through chunks (a shape `run_chunks`
+//!   deliberately does not model).
+//!
+//! Equality contracts: `fast == scalar` per dataflow is enforced by
+//! `tests/engines_equivalence.rs` / `tests/fast_engine_property.rs`,
+//! and the WS chain additionally equals the cycle-accurate RTL model.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::arch::SaConfig;
+use crate::error::{Error, Result};
+use crate::gemm::Matrix;
+
+use super::baseline::{
+    simulate_gemm_fast_scalar, simulate_gemm_is_scalar, simulate_gemm_os_scalar,
+};
+use super::fast::{simulate_gemm_fast_with, FastSimOpts, MAX_COL_BLOCK};
+use super::is::simulate_gemm_is_with;
+use super::os::simulate_gemm_os_with;
+use super::GemmSim;
+
+/// One dataflow's pair of analytic engines: the production blocked path
+/// and the frozen scalar baseline it must match bit-for-bit (outputs,
+/// toggles/zeros/observations, cycles, MACs).
+pub trait DataflowEngine: Sync {
+    /// Which dataflow this engine simulates.
+    fn kind(&self) -> DataflowKind;
+
+    /// Fast blocked simulation with explicit tuning. Every option
+    /// produces bit-identical results; only the wall clock changes.
+    fn simulate_with(
+        &self,
+        sa: &SaConfig,
+        a: &Matrix<i32>,
+        w: &Matrix<i32>,
+        opts: &FastSimOpts,
+    ) -> Result<GemmSim>;
+
+    /// The frozen scalar reference (see [`super::baseline`]): kept
+    /// unoptimized so speedups are measured against a fixed baseline
+    /// and every fast-engine change stays provably bit-identical.
+    fn simulate_scalar(
+        &self,
+        sa: &SaConfig,
+        a: &Matrix<i32>,
+        w: &Matrix<i32>,
+    ) -> Result<GemmSim>;
+
+    /// Fast simulation with default [`FastSimOpts`].
+    fn simulate(&self, sa: &SaConfig, a: &Matrix<i32>, w: &Matrix<i32>) -> Result<GemmSim> {
+        self.simulate_with(sa, a, w, &FastSimOpts::default())
+    }
+}
+
+/// Weight-stationary engine (the paper's configuration).
+pub struct WsEngine;
+
+/// Output-stationary ablation engine.
+pub struct OsEngine;
+
+/// Input-stationary ablation engine.
+pub struct IsEngine;
+
+impl DataflowEngine for WsEngine {
+    fn kind(&self) -> DataflowKind {
+        DataflowKind::Ws
+    }
+
+    fn simulate_with(
+        &self,
+        sa: &SaConfig,
+        a: &Matrix<i32>,
+        w: &Matrix<i32>,
+        opts: &FastSimOpts,
+    ) -> Result<GemmSim> {
+        simulate_gemm_fast_with(sa, a, w, opts)
+    }
+
+    fn simulate_scalar(
+        &self,
+        sa: &SaConfig,
+        a: &Matrix<i32>,
+        w: &Matrix<i32>,
+    ) -> Result<GemmSim> {
+        simulate_gemm_fast_scalar(sa, a, w)
+    }
+}
+
+impl DataflowEngine for OsEngine {
+    fn kind(&self) -> DataflowKind {
+        DataflowKind::Os
+    }
+
+    fn simulate_with(
+        &self,
+        sa: &SaConfig,
+        a: &Matrix<i32>,
+        w: &Matrix<i32>,
+        opts: &FastSimOpts,
+    ) -> Result<GemmSim> {
+        simulate_gemm_os_with(sa, a, w, opts)
+    }
+
+    fn simulate_scalar(
+        &self,
+        sa: &SaConfig,
+        a: &Matrix<i32>,
+        w: &Matrix<i32>,
+    ) -> Result<GemmSim> {
+        simulate_gemm_os_scalar(sa, a, w)
+    }
+}
+
+impl DataflowEngine for IsEngine {
+    fn kind(&self) -> DataflowKind {
+        DataflowKind::Is
+    }
+
+    fn simulate_with(
+        &self,
+        sa: &SaConfig,
+        a: &Matrix<i32>,
+        w: &Matrix<i32>,
+        opts: &FastSimOpts,
+    ) -> Result<GemmSim> {
+        simulate_gemm_is_with(sa, a, w, opts)
+    }
+
+    fn simulate_scalar(
+        &self,
+        sa: &SaConfig,
+        a: &Matrix<i32>,
+        w: &Matrix<i32>,
+    ) -> Result<GemmSim> {
+        simulate_gemm_is_scalar(sa, a, w)
+    }
+}
+
+/// Dataflow axis shared by the sweep, serve and coordinator layers.
+/// WS/OS map onto [`crate::arch::Dataflow`]; IS is the input-stationary
+/// ablation (same wide-psum vertical bus as WS, so the paper's
+/// asymmetry conclusion transfers — see [`super::is`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DataflowKind {
+    /// Weight-stationary (the paper's configuration).
+    Ws,
+    /// Output-stationary ablation.
+    Os,
+    /// Input-stationary ablation.
+    Is,
+}
+
+impl DataflowKind {
+    /// Every dataflow, in metrics-lane order (see [`DataflowKind::index`]).
+    pub const ALL: [DataflowKind; 3] = [DataflowKind::Ws, DataflowKind::Os, DataflowKind::Is];
+
+    /// Short lowercase name (CLI/JSON spelling).
+    pub fn name(&self) -> &'static str {
+        match self {
+            DataflowKind::Ws => "ws",
+            DataflowKind::Os => "os",
+            DataflowKind::Is => "is",
+        }
+    }
+
+    /// Parse the CLI/JSON spelling.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.trim() {
+            "ws" => Ok(DataflowKind::Ws),
+            "os" => Ok(DataflowKind::Os),
+            "is" => Ok(DataflowKind::Is),
+            other => Err(Error::config(format!(
+                "unknown dataflow `{other}` (expected ws, os or is)"
+            ))),
+        }
+    }
+
+    /// Cache-fingerprint salt: the three engines produce different
+    /// statistics for the same array/operands and must never alias in
+    /// the result cache ([`crate::serve::cache::mix`]).
+    pub fn salt(&self) -> u64 {
+        match self {
+            DataflowKind::Ws => 0x5753_0001,
+            DataflowKind::Os => 0x4F53_0002,
+            DataflowKind::Is => 0x4953_0003,
+        }
+    }
+
+    /// Dense index into per-dataflow metric lanes
+    /// ([`crate::coordinator::Metrics`]).
+    pub fn index(&self) -> usize {
+        match self {
+            DataflowKind::Ws => 0,
+            DataflowKind::Os => 1,
+            DataflowKind::Is => 2,
+        }
+    }
+
+    /// The engine pair implementing this dataflow.
+    pub fn engine(&self) -> &'static dyn DataflowEngine {
+        match self {
+            DataflowKind::Ws => &WsEngine,
+            DataflowKind::Os => &OsEngine,
+            DataflowKind::Is => &IsEngine,
+        }
+    }
+
+    /// Fast blocked simulation (see [`DataflowEngine::simulate_with`]).
+    pub fn simulate_with(
+        &self,
+        sa: &SaConfig,
+        a: &Matrix<i32>,
+        w: &Matrix<i32>,
+        opts: &FastSimOpts,
+    ) -> Result<GemmSim> {
+        self.engine().simulate_with(sa, a, w, opts)
+    }
+
+    /// Frozen scalar reference (see [`DataflowEngine::simulate_scalar`]).
+    pub fn simulate_scalar(
+        &self,
+        sa: &SaConfig,
+        a: &Matrix<i32>,
+        w: &Matrix<i32>,
+    ) -> Result<GemmSim> {
+        self.engine().simulate_scalar(sa, a, w)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Shared kernels of the blocked engines
+// ---------------------------------------------------------------------
+
+/// Shared tuning-option guard of the three `*_with` entry points.
+pub(crate) fn validate_opts(opts: &FastSimOpts) -> Result<()> {
+    if !(1..=MAX_COL_BLOCK).contains(&opts.col_block) {
+        return Err(Error::config(format!(
+            "col_block must be in [1, {MAX_COL_BLOCK}]: {}",
+            opts.col_block
+        )));
+    }
+    Ok(())
+}
+
+/// Monomorphized dispatch over a chunk width in `1..=MAX_COL_BLOCK`:
+/// `width_dispatch!(width, kernel, (args…))` expands to the 8-arm match
+/// calling `kernel::<N>(args…)` — one definition for the three blocked
+/// engines' width-generic kernels.
+macro_rules! width_dispatch {
+    ($width:expr, $kernel:ident, ($($arg:expr),* $(,)?)) => {
+        match $width {
+            1 => $kernel::<1>($($arg),*),
+            2 => $kernel::<2>($($arg),*),
+            3 => $kernel::<3>($($arg),*),
+            4 => $kernel::<4>($($arg),*),
+            5 => $kernel::<5>($($arg),*),
+            6 => $kernel::<6>($($arg),*),
+            7 => $kernel::<7>($($arg),*),
+            8 => $kernel::<8>($($arg),*),
+            _ => unreachable!("col_block validated to 1..=MAX_COL_BLOCK"),
+        }
+    };
+}
+pub(crate) use width_dispatch;
+
+/// Bus-word mask for a `bits`-wide bus, hoisted out of hot loops (the
+/// `quant::bus_word` width branch would otherwise run per element).
+#[inline]
+pub(crate) fn bus_mask(bits: u32) -> u64 {
+    if bits == 64 {
+        u64::MAX
+    } else {
+        (1u64 << bits) - 1
+    }
+}
+
+/// Toggle/non-zero counts of one contiguous word stream on a bus: the
+/// masked words of `row` starting from bus state zero and draining back
+/// to zero after the last word. The workhorse of every memoized stream
+/// statistic (WS/IS horizontal rows, OS activation rows and weight
+/// columns).
+#[inline]
+pub(crate) fn stream_row_stats(row: &[i32], mask: u64) -> (u64, u64) {
+    let (mut tog, mut nz) = (0u64, 0u64);
+    let mut p = 0u64;
+    for &v in row {
+        let word = v as i64 as u64 & mask;
+        tog += (p ^ word).count_ones() as u64;
+        nz += (word != 0) as u64;
+        p = word;
+    }
+    tog += p.count_ones() as u64; // drain back to zero
+    (tog, nz)
+}
+
+/// Block decomposition of one GEMM dimension onto an array dimension:
+/// `(start, len)` pairs with `len == step` except possibly the last
+/// (ragged) block.
+pub(crate) fn blocks(total: usize, step: usize) -> Vec<(usize, usize)> {
+    debug_assert!(step > 0);
+    let mut out = Vec::with_capacity(total.div_ceil(step));
+    let mut start = 0;
+    while start < total {
+        let len = step.min(total - start);
+        out.push((start, len));
+        start += step;
+    }
+    out
+}
+
+/// One unit of blocked-engine work: a chunk of ≤ `col_block` array
+/// columns inside a single block.
+pub(crate) struct ColChunk {
+    /// Absolute first column index.
+    pub col0: usize,
+    /// Columns in the chunk.
+    pub width: usize,
+}
+
+/// Split every `(start, len)` group into chunks of at most `block`
+/// columns. Chunks never straddle a group boundary, so each one maps to
+/// a contiguous run of *active* array columns of exactly one tile pass.
+pub(crate) fn chunk_columns(groups: &[(usize, usize)], block: usize) -> Vec<ColChunk> {
+    let mut chunks = Vec::new();
+    for &(start, len) in groups {
+        let mut c0 = 0;
+        while c0 < len {
+            let width = block.min(len - c0);
+            chunks.push(ColChunk {
+                col0: start + c0,
+                width,
+            });
+            c0 += width;
+        }
+    }
+    chunks
+}
+
+/// Process `n_chunks` independent work units on `threads` scoped
+/// threads (work-stealing over an atomic cursor) and return the results
+/// **in chunk order** — so callers merge deterministically at any
+/// thread count. `threads <= 1` runs inline with no thread setup.
+pub(crate) fn run_chunks<T: Send>(
+    threads: usize,
+    n_chunks: usize,
+    process: impl Fn(usize) -> T + Sync,
+) -> Vec<T> {
+    if threads <= 1 || n_chunks <= 1 {
+        return (0..n_chunks).map(process).collect();
+    }
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        let process = &process;
+        let next = &next;
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                scope.spawn(move || {
+                    let mut done = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n_chunks {
+                            break;
+                        }
+                        done.push((i, process(i)));
+                    }
+                    done
+                })
+            })
+            .collect();
+        let mut out: Vec<Option<T>> = (0..n_chunks).map(|_| None).collect();
+        for h in handles {
+            for (i, t) in h.join().expect("chunk worker panicked") {
+                out[i] = Some(t);
+            }
+        }
+        out.into_iter()
+            .map(|t| t.expect("chunk result lost"))
+            .collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::matmul_i64;
+    use crate::util::rng::Rng;
+
+    fn rand_mat(rows: usize, cols: usize, seed: u64) -> Matrix<i32> {
+        let mut rng = Rng::new(seed);
+        let data = (0..rows * cols)
+            .map(|_| rng.int_range(-100, 100) as i32)
+            .collect();
+        Matrix::from_vec(rows, cols, data).unwrap()
+    }
+
+    #[test]
+    fn kinds_parse_name_salt_index() {
+        for kind in DataflowKind::ALL {
+            assert_eq!(DataflowKind::parse(kind.name()).unwrap(), kind);
+            assert_eq!(kind.engine().kind(), kind);
+            assert_eq!(DataflowKind::ALL[kind.index()], kind);
+        }
+        assert_eq!(DataflowKind::parse(" os ").unwrap(), DataflowKind::Os);
+        assert!(DataflowKind::parse("systolic").is_err());
+        assert_ne!(DataflowKind::Ws.salt(), DataflowKind::Os.salt());
+        assert_ne!(DataflowKind::Os.salt(), DataflowKind::Is.salt());
+        assert_ne!(DataflowKind::Ws.salt(), DataflowKind::Is.salt());
+    }
+
+    /// Every engine pair: fast == scalar == reference GEMM on a small
+    /// ragged shape (the heavy cross-product lives in the test tiers).
+    #[test]
+    fn every_engine_fast_equals_scalar() {
+        let sa = SaConfig::new_ws(4, 4, 8).unwrap();
+        let a = rand_mat(9, 7, 1);
+        let w = rand_mat(7, 6, 2);
+        let reference = matmul_i64(&a, &w).unwrap();
+        for kind in DataflowKind::ALL {
+            let fast = kind.engine().simulate(&sa, &a, &w).unwrap();
+            let scalar = kind.simulate_scalar(&sa, &a, &w).unwrap();
+            let ctx = kind.name();
+            assert_eq!(fast.y, reference, "{ctx}: outputs vs reference");
+            assert_eq!(fast.y, scalar.y, "{ctx}: outputs");
+            assert_eq!(fast.stats, scalar.stats, "{ctx}: stats");
+            assert_eq!(fast.cycles, scalar.cycles, "{ctx}: cycles");
+            assert_eq!(fast.macs, scalar.macs, "{ctx}: macs");
+        }
+    }
+
+    #[test]
+    fn stream_row_stats_hand_example() {
+        // 1 -> 3 -> 3 -> 0 on a 16-bit bus: 1 + 1 + 0 + 2 toggles.
+        let (tog, nz) = stream_row_stats(&[1, 3, 3], bus_mask(16));
+        assert_eq!(tog, 4);
+        assert_eq!(nz, 3);
+        // -1 masks to all-ones: 16 up, 16 down.
+        let (tog, nz) = stream_row_stats(&[-1], bus_mask(16));
+        assert_eq!(tog, 32);
+        assert_eq!(nz, 1);
+        assert_eq!(stream_row_stats(&[], bus_mask(16)), (0, 0));
+    }
+
+    #[test]
+    fn blocks_and_chunks_cover_exactly() {
+        assert_eq!(blocks(10, 4), vec![(0, 4), (4, 4), (8, 2)]);
+        assert_eq!(blocks(4, 4), vec![(0, 4)]);
+        assert_eq!(blocks(0, 4), Vec::<(usize, usize)>::new());
+        let chunks = chunk_columns(&blocks(10, 4), 3);
+        let spans: Vec<(usize, usize)> =
+            chunks.iter().map(|c| (c.col0, c.width)).collect();
+        assert_eq!(spans, vec![(0, 3), (3, 1), (4, 3), (7, 1), (8, 2)]);
+    }
+
+    #[test]
+    fn run_chunks_is_order_deterministic() {
+        let serial = run_chunks(1, 17, |i| i * i);
+        for threads in [2, 3, 8] {
+            assert_eq!(run_chunks(threads, 17, |i| i * i), serial);
+        }
+        assert!(run_chunks(4, 0, |i| i).is_empty());
+    }
+}

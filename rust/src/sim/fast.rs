@@ -51,6 +51,9 @@ use crate::error::{Error, Result};
 use crate::gemm::{Matrix, TilePlan};
 use crate::quant::bus_word;
 
+use super::engine::{
+    bus_mask, chunk_columns, stream_row_stats, validate_opts, width_dispatch, ColChunk,
+};
 use super::{pass_cycles, GemmSim, SaStats};
 
 /// Widest supported column block (lanes per sweep of `A`).
@@ -99,15 +102,6 @@ pub fn simulate_gemm_fast(
     simulate_gemm_fast_with(sa, a, w, &FastSimOpts::default())
 }
 
-/// One unit of vertical work: a chunk of ≤ `col_block` output columns
-/// inside a single `n`-block, processed through all `k`-blocks.
-struct ColChunk {
-    /// Absolute first output column.
-    col0: usize,
-    /// Columns in the chunk.
-    width: usize,
-}
-
 /// Analytic simulation with explicit tuning. See [`simulate_gemm_fast`].
 pub fn simulate_gemm_fast_with(
     sa: &SaConfig,
@@ -115,12 +109,7 @@ pub fn simulate_gemm_fast_with(
     w: &Matrix<i32>,
     opts: &FastSimOpts,
 ) -> Result<GemmSim> {
-    if !(1..=MAX_COL_BLOCK).contains(&opts.col_block) {
-        return Err(Error::config(format!(
-            "col_block must be in [1, {MAX_COL_BLOCK}]: {}",
-            opts.col_block
-        )));
-    }
+    validate_opts(opts)?;
     if a.cols != w.rows {
         return Err(Error::shape(format!(
             "inner dims mismatch: {}x{} @ {}x{}",
@@ -143,8 +132,8 @@ pub fn simulate_gemm_fast_with(
     let bv = sa.bus_bits_vertical();
     // Masks hoisted out of the hot loops (bus_word's width branch and
     // shift would otherwise run per element).
-    let mask_h: u64 = if bh == 64 { u64::MAX } else { (1u64 << bh) - 1 };
-    let mask_v: u64 = if bv == 64 { u64::MAX } else { (1u64 << bv) - 1 };
+    let mask_h = bus_mask(bh);
+    let mask_v = bus_mask(bv);
     let m_rows = a.rows;
     let pc = pass_cycles(sa, m_rows) as u64;
 
@@ -215,7 +204,7 @@ pub fn simulate_gemm_fast_with(
     for &(k0, k_len) in &k_blocks {
         let (mut tog_sum, mut nz_sum) = (0u64, 0u64);
         for r in 0..k_len {
-            let (tog, nz) = horizontal_row_stats(a_t.row(k0 + r), mask_h);
+            let (tog, nz) = stream_row_stats(a_t.row(k0 + r), mask_h);
             tog_sum += tog;
             nz_sum += nz;
         }
@@ -227,18 +216,7 @@ pub fn simulate_gemm_fast_with(
     }
 
     // ---- Vertical: column-blocked sweeps, optionally sharded ------------
-    let mut chunks: Vec<ColChunk> = Vec::new();
-    for &(n0, n_len) in &n_groups {
-        let mut c0 = 0;
-        while c0 < n_len {
-            let width = opts.col_block.min(n_len - c0);
-            chunks.push(ColChunk {
-                col0: n0 + c0,
-                width,
-            });
-            c0 += width;
-        }
-    }
+    let chunks: Vec<ColChunk> = chunk_columns(&n_groups, opts.col_block);
 
     // Processes one chunk through every k-block: vertical stats into a
     // private accumulator, output contributions into `y_acc` (layout
@@ -320,8 +298,9 @@ pub fn simulate_gemm_fast_with(
 
 /// Resolve the effective thread count. Explicit requests are honored
 /// (capped by the number of work units); auto mode parallelizes only
-/// GEMMs large enough to amortize thread startup.
-fn resolve_threads(requested: usize, total_macs: u64, units: usize) -> usize {
+/// GEMMs large enough to amortize thread startup. Shared by all three
+/// blocked engines (WS here, OS/IS through [`super::engine`]).
+pub(crate) fn resolve_threads(requested: usize, total_macs: u64, units: usize) -> usize {
     let t = if requested == 0 {
         if total_macs < INTRA_PAR_MIN_MACS {
             1
@@ -345,21 +324,6 @@ fn scatter_columns(y: &mut Matrix<i64>, chunk: &ColChunk, y_acc: &[i64]) {
             y.set(m, col, y.get(m, col) + v);
         }
     }
-}
-
-/// Toggle/non-zero counts of one horizontal row sequence (`pc`-padded
-/// stream of `arow`, starting and draining at zero).
-fn horizontal_row_stats(arow: &[i32], mask_h: u64) -> (u64, u64) {
-    let (mut tog, mut nz) = (0u64, 0u64);
-    let mut p = 0u64;
-    for &v in arow {
-        let word = v as i64 as u64 & mask_h;
-        tog += (p ^ word).count_ones() as u64;
-        nz += (word != 0) as u64;
-        p = word;
-    }
-    tog += p.count_ones() as u64; // drain back to zero
-    (tog, nz)
 }
 
 /// Weight-chain statistics of one preload pass, in closed form.
@@ -425,17 +389,11 @@ fn sweep_dispatch(
     prefix: &mut [i64],
     vert: &mut DirectionStats,
 ) {
-    match width {
-        1 => sweep_cols::<1>(a_t, w, k0, k_len, col0, mask_v, pc, r_dim, prefix, vert),
-        2 => sweep_cols::<2>(a_t, w, k0, k_len, col0, mask_v, pc, r_dim, prefix, vert),
-        3 => sweep_cols::<3>(a_t, w, k0, k_len, col0, mask_v, pc, r_dim, prefix, vert),
-        4 => sweep_cols::<4>(a_t, w, k0, k_len, col0, mask_v, pc, r_dim, prefix, vert),
-        5 => sweep_cols::<5>(a_t, w, k0, k_len, col0, mask_v, pc, r_dim, prefix, vert),
-        6 => sweep_cols::<6>(a_t, w, k0, k_len, col0, mask_v, pc, r_dim, prefix, vert),
-        7 => sweep_cols::<7>(a_t, w, k0, k_len, col0, mask_v, pc, r_dim, prefix, vert),
-        8 => sweep_cols::<8>(a_t, w, k0, k_len, col0, mask_v, pc, r_dim, prefix, vert),
-        _ => unreachable!("col_block validated to 1..={MAX_COL_BLOCK}"),
-    }
+    width_dispatch!(
+        width,
+        sweep_cols,
+        (a_t, w, k0, k_len, col0, mask_v, pc, r_dim, prefix, vert)
+    )
 }
 
 /// The register-tiled vertical kernel: one k-block of one column chunk.

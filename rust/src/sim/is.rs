@@ -1,4 +1,5 @@
-//! Input-stationary (IS) dataflow — second ablation baseline.
+//! Input-stationary (IS) dataflow — second ablation baseline, on the
+//! fast blocked machinery.
 //!
 //! IS pins an `R×C` block of *activations* in the PEs; weights stream
 //! horizontally (`B_h` words) and partial sums reduce vertically exactly
@@ -10,17 +11,50 @@
 //! the vertical direction dominant.
 //!
 //! Accounting conventions mirror [`super::os`]:
-//! * one IS tile pass pins `A[m0..m0+R, k0..k0+C]ᵀ` and streams all N
+//! * one IS tile pass pins `A[m0..m0+C, k0..k0+R]ᵀ` and streams all N
 //!   weight columns: `N + R + C + 2` stream cycles + `R` preload;
 //! * `stats.horizontal`  — weight stream (B_h);
 //! * `stats.weight_load` — activation preload chain (B_h, vertical);
 //! * `stats.vertical`    — partial-sum reduction (B_v).
+//!
+//! ### How the blocked engine organizes the work
+//!
+//! Bit-identical to the frozen scalar reference
+//! ([`super::baseline::simulate_gemm_is_scalar`], enforced by the
+//! property tiers), but on the [`super::engine`] machinery:
+//!
+//! 1. **Vertical (the hot loop)** — a register-tiled kernel,
+//!    monomorphized over the lane count `B ∈ 1..=8`
+//!    ([`FastSimOpts::col_block`]): one scan of each transposed weight
+//!    row feeds `B` stationary-activation lanes, every `(r, lane)`
+//!    prefix word drives its own xor/popcount chain, and the final
+//!    prefix row *is* this pass's contribution to `y` — so the separate
+//!    `matmul_i64` the scalar engine pays disappears entirely. Rows
+//!    `r >= k_len` replay row `k_len-1`'s words and are accounted by
+//!    scaling instead of the scalar engine's per-cycle pass-through
+//!    loop.
+//! 2. **Horizontal** — memoized per `k`-block: row `r`'s stream is
+//!    `W[k0+r][·]`, independent of the pass's `m0`, so each weight row
+//!    is scanned once and scaled by the `m`-block count.
+//! 3. **Preload chain** — closed form: register `(r, c)` sees the word
+//!    suffix `u_{R-1}, …, u_r` of its column's stationary block, so
+//!    summing over `r` weights each transition by how many registers
+//!    replay it — O(R) per column instead of O(R²).
+//! 4. **Sharding** — lane chunks of array columns (= output rows of
+//!    `y`) are distributed over scoped threads; each chunk owns a
+//!    disjoint slice of `y` and a private stats accumulator, so results
+//!    are bit-identical at any thread count.
 
+use crate::activity::DirectionStats;
 use crate::arch::SaConfig;
 use crate::error::{Error, Result};
-use crate::gemm::{matmul_i64, Matrix};
-use crate::quant::bus_word;
+use crate::gemm::Matrix;
 
+use super::engine::{
+    blocks, bus_mask, chunk_columns, run_chunks, stream_row_stats, validate_opts,
+    width_dispatch,
+};
+use super::fast::{resolve_threads, FastSimOpts};
 use super::{GemmSim, SaStats};
 
 /// Cycles of one IS tile pass streaming `n` weight columns.
@@ -29,12 +63,26 @@ pub fn is_pass_cycles(sa: &SaConfig, n: usize) -> usize {
     sa.rows + n + sa.rows + sa.cols + 2
 }
 
-/// Analytic IS simulation of GEMM `a @ w` (`a: M×K`, `w: K×N`).
+/// Analytic IS simulation of GEMM `a @ w` (`a: M×K`, `w: K×N`) with
+/// default [`FastSimOpts`].
 ///
 /// The stationary operand is the activation block; the array is laid out
 /// with reduction along rows (`k` on the vertical wires), matching the
 /// WS engines so the per-direction bus widths stay comparable.
 pub fn simulate_gemm_is(sa: &SaConfig, a: &Matrix<i32>, w: &Matrix<i32>) -> Result<GemmSim> {
+    simulate_gemm_is_with(sa, a, w, &FastSimOpts::default())
+}
+
+/// Analytic IS simulation with explicit tuning. See [`simulate_gemm_is`]
+/// and the module docs; every option is bit-identical, only the wall
+/// clock changes.
+pub fn simulate_gemm_is_with(
+    sa: &SaConfig,
+    a: &Matrix<i32>,
+    w: &Matrix<i32>,
+    opts: &FastSimOpts,
+) -> Result<GemmSim> {
+    validate_opts(opts)?;
     if a.cols != w.rows {
         return Err(Error::shape(format!(
             "inner dims mismatch: {}x{} @ {}x{}",
@@ -44,126 +92,260 @@ pub fn simulate_gemm_is(sa: &SaConfig, a: &Matrix<i32>, w: &Matrix<i32>) -> Resu
     let (r_dim, c_dim) = (sa.rows, sa.cols);
     let bh = sa.bus_bits_horizontal();
     let bv = sa.acc_bits;
+    let mask_h = bus_mask(bh);
+    let mask_v = bus_mask(bv);
     let (m, k, n) = (a.rows, a.cols, w.cols);
     let pc = is_pass_cycles(sa, n) as u64;
 
-    let y = matmul_i64(a, w)?;
+    // Rows of the array hold k-indices (reduction down columns), columns
+    // hold m-indices (outputs drain South per m).
+    let k_blocks = blocks(k, r_dim);
+    let m_blocks = blocks(m, c_dim);
+    let passes = (k_blocks.len() * m_blocks.len()) as u64;
     let mut stats = SaStats::new(sa);
-    let mut cycles = 0u64;
-    let mut macs = 0u64;
 
-    // Tile: rows of the array hold k-indices (reduction down columns),
-    // columns hold m-indices (outputs drain South per m).
-    let mut k0 = 0;
-    while k0 < k {
-        let k_len = r_dim.min(k - k0);
-        let mut m0 = 0;
-        while m0 < m {
-            let m_len = c_dim.min(m - m0);
-
-            // Activation preload: shift A^T block down the columns
-            // (same chain structure as the WS weight preload; counted
-            // from a cleared chain for tile independence).
-            for c in 0..c_dim {
-                for r in 0..r_dim {
-                    let (mut tog, mut nz) = (0u64, 0u64);
-                    let mut p = 0u64;
-                    if c < m_len {
-                        for t in r..r_dim {
-                            let rr = r_dim - 1 - (t - r);
-                            let v = if rr < k_len {
-                                a.get(m0 + c, k0 + rr) as i64
-                            } else {
-                                0
-                            };
-                            let word = bus_word(v, bh);
-                            tog += (p ^ word).count_ones() as u64;
-                            nz += (word != 0) as u64;
-                            p = word;
-                        }
+    // ---- Activation preload chain: closed form per pass column ----------
+    // Register (r, c) of an active column sees the word suffix
+    // u_{R-1}, u_{R-2}, …, u_r (u_j = the block's j-th stationary word,
+    // zero-padded past k_len) starting from a cleared chain, so
+    //
+    //   Σ_r tog_r = R·popcnt(u_{R-1}) + Σ_{j≤R-2} (j+1)·popcnt(u_{j+1}^u_j)
+    //   Σ_r nz_r  = Σ_j (j+1)·(u_j ≠ 0)
+    //
+    // — O(R) per column instead of the scalar engine's O(R²) sweep.
+    for &(k0, k_len) in &k_blocks {
+        for &(m0, m_len) in &m_blocks {
+            for c in 0..m_len {
+                let arow = a.row(m0 + c);
+                let word_at = |j: usize| -> u64 {
+                    if j < k_len {
+                        arow[k0 + j] as i64 as u64 & mask_h
+                    } else {
+                        0
                     }
-                    stats.weight_load.toggles += tog;
-                    stats.weight_load.zero_words += r_dim as u64 - nz;
-                    stats.weight_load.observations += r_dim as u64;
+                };
+                let mut next = word_at(r_dim - 1);
+                let mut tog_total = r_dim as u64 * next.count_ones() as u64;
+                let mut nz_total = r_dim as u64 * ((next != 0) as u64);
+                for j in (0..r_dim - 1).rev() {
+                    let u = word_at(j);
+                    tog_total += (j + 1) as u64 * (next ^ u).count_ones() as u64;
+                    nz_total += (j + 1) as u64 * ((u != 0) as u64);
+                    next = u;
                 }
+                stats.weight_load.toggles += tog_total;
+                stats.weight_load.zero_words += (r_dim * r_dim) as u64 - nz_total;
+                stats.weight_load.observations += (r_dim * r_dim) as u64;
             }
-
-            // Weight stream: row r carries w[k0+r][0..n] (B_h words),
-            // identical on all C segments of the row.
-            for r in 0..r_dim {
-                let (mut tog, mut nz) = (0u64, 0u64);
-                if r < k_len {
-                    let mut p = 0u64;
-                    for j in 0..n {
-                        let word = bus_word(w.get(k0 + r, j) as i64, bh);
-                        tog += (p ^ word).count_ones() as u64;
-                        nz += (word != 0) as u64;
-                        p = word;
-                    }
-                    tog += p.count_ones() as u64;
-                }
-                stats.horizontal.toggles += tog * c_dim as u64;
-                stats.horizontal.zero_words += (pc - nz) * c_dim as u64;
-                stats.horizontal.observations += pc * c_dim as u64;
-            }
-
-            // Vertical psums: segment (r, c) carries the prefix sum
-            // P_r(j, c) = Σ_{r'≤r} a[m0+c][k0+r'] · w[k0+r'][j] over the
-            // weight-column stream j — same structure as WS.
-            let mut prev_words = vec![0u64; r_dim];
-            let mut toggles = vec![0u64; r_dim];
-            let mut nonzeros = vec![0u64; r_dim];
-            for c in 0..c_dim {
-                toggles.iter_mut().for_each(|v| *v = 0);
-                nonzeros.iter_mut().for_each(|v| *v = 0);
-                prev_words.iter_mut().for_each(|v| *v = 0);
-                if c < m_len {
-                    for j in 0..n {
-                        let mut prefix = 0i64;
-                        let mut word = 0u64;
-                        for r in 0..k_len {
-                            prefix += a.get(m0 + c, k0 + r) as i64 * w.get(k0 + r, j) as i64;
-                            word = bus_word(prefix, bv);
-                            toggles[r] += (prev_words[r] ^ word).count_ones() as u64;
-                            nonzeros[r] += (word != 0) as u64;
-                            prev_words[r] = word;
-                        }
-                        for r in k_len..r_dim {
-                            toggles[r] += (prev_words[r] ^ word).count_ones() as u64;
-                            nonzeros[r] += (word != 0) as u64;
-                            prev_words[r] = word;
-                        }
-                    }
-                    for r in 0..r_dim {
-                        toggles[r] += prev_words[r].count_ones() as u64;
-                    }
-                }
-                for r in 0..r_dim {
-                    stats.vertical.toggles += toggles[r];
-                    stats.vertical.zero_words += pc - nonzeros[r];
-                    stats.vertical.observations += pc;
-                }
-            }
-
-            cycles += pc;
-            macs += (m_len * k_len * n) as u64;
-            m0 += c_dim;
+            // Idle columns c >= m_len: cleared chain shifting zeros.
+            let idle = (c_dim - m_len) as u64;
+            stats.weight_load.zero_words += idle * (r_dim * r_dim) as u64;
+            stats.weight_load.observations += idle * (r_dim * r_dim) as u64;
         }
-        k0 += r_dim;
+    }
+
+    // ---- Horizontal: memoized per k-block -------------------------------
+    // Row r streams W[k0+r][0..n] on all C segments of the row, in every
+    // m-block pass of this k-block — one scan, scaled by the replays.
+    for &(k0, k_len) in &k_blocks {
+        let (mut tog_sum, mut nz_sum) = (0u64, 0u64);
+        for r in 0..k_len {
+            let (tog, nz) = stream_row_stats(w.row(k0 + r), mask_h);
+            tog_sum += tog;
+            nz_sum += nz;
+        }
+        // Rows r >= k_len stream constant zero.
+        let reps = (c_dim * m_blocks.len()) as u64;
+        stats.horizontal.toggles += tog_sum * reps;
+        stats.horizontal.zero_words += (r_dim as u64 * pc - nz_sum) * reps;
+        stats.horizontal.observations += pc * r_dim as u64 * reps;
+    }
+
+    // ---- Idle vertical columns (c >= m_len): constant-zero wires --------
+    for &(_, m_len) in &m_blocks {
+        if m_len < c_dim {
+            let idle = (c_dim - m_len) as u64 * k_blocks.len() as u64;
+            stats.vertical.zero_words += idle * pc * r_dim as u64;
+            stats.vertical.observations += idle * pc * r_dim as u64;
+        }
+    }
+
+    // ---- Vertical psums + outputs: lane chunks, optionally sharded ------
+    // A chunk is a run of active array columns (= m-indices) of one
+    // m-block; it walks every k-block, so it owns complete rows of `y`.
+    let w_t = w.transpose();
+    let chunks = chunk_columns(&m_blocks, opts.col_block);
+    let total_macs = (m * k * n) as u64;
+    let threads = resolve_threads(opts.threads, total_macs, chunks.len());
+    let bv_bits = stats.vertical.bits;
+    let parts = run_chunks(threads, chunks.len(), |ci| {
+        let chunk = &chunks[ci];
+        let mut vert = DirectionStats::new(bv_bits);
+        let mut y_rows = vec![0i64; chunk.width * n];
+        // Scratch reused across this chunk's k-blocks (r_dim bounds
+        // every k_len) — the kernel would otherwise re-allocate per
+        // pass in the hot path.
+        let mut a_vals = vec![0i64; r_dim * chunk.width];
+        let mut prev = vec![0u64; r_dim * chunk.width];
+        let mut tog = vec![0u64; r_dim * chunk.width];
+        let mut nz = vec![0u64; r_dim * chunk.width];
+        for &(k0, k_len) in &k_blocks {
+            let len = k_len * chunk.width;
+            is_dispatch(
+                chunk.width,
+                a,
+                &w_t,
+                k0,
+                k_len,
+                chunk.col0,
+                mask_v,
+                pc,
+                r_dim,
+                n,
+                &mut a_vals[..len],
+                &mut prev[..len],
+                &mut tog[..len],
+                &mut nz[..len],
+                &mut y_rows,
+                &mut vert,
+            );
+        }
+        (y_rows, vert)
+    });
+
+    let mut y = Matrix::<i64>::zeros(m, n);
+    for (chunk, (y_rows, vert)) in chunks.iter().zip(parts) {
+        stats.vertical.merge(&vert);
+        for l in 0..chunk.width {
+            let dst0 = (chunk.col0 + l) * n;
+            y.data[dst0..dst0 + n].copy_from_slice(&y_rows[l * n..(l + 1) * n]);
+        }
     }
 
     Ok(GemmSim {
         y,
         stats,
-        cycles,
-        macs,
+        cycles: passes * pc,
+        macs: total_macs,
     })
+}
+
+/// Monomorphized dispatch over the chunk width.
+#[allow(clippy::too_many_arguments)]
+fn is_dispatch(
+    width: usize,
+    a: &Matrix<i32>,
+    w_t: &Matrix<i32>,
+    k0: usize,
+    k_len: usize,
+    col0: usize,
+    mask_v: u64,
+    pc: u64,
+    r_dim: usize,
+    n: usize,
+    a_vals: &mut [i64],
+    prev: &mut [u64],
+    tog: &mut [u64],
+    nz: &mut [u64],
+    y_rows: &mut [i64],
+    vert: &mut DirectionStats,
+) {
+    width_dispatch!(
+        width,
+        is_sweep_cols,
+        (a, w_t, k0, k_len, col0, mask_v, pc, r_dim, n, a_vals, prev, tog, nz, y_rows, vert)
+    )
+}
+
+/// The register-tiled IS vertical kernel: one k-block of one lane chunk.
+///
+/// Lane `l` is array column `col0 + l` (stationary activations
+/// `A[col0+l][k0..k0+k_len]`). One scan of each transposed weight row
+/// `Wᵀ[j][k0..k0+k_len]` advances all `B` lanes' running prefixes; the
+/// `(r, lane)` prefix words feed per-segment toggle chains, and the
+/// last used row's prefix is this k-block's contribution to
+/// `y[col0+l][j]` (accumulated into `y_rows`, layout `l·n + j`). Rows
+/// `r >= k_len` pass the last used row's words through unchanged and
+/// are accounted by scaling.
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn is_sweep_cols<const B: usize>(
+    a: &Matrix<i32>,
+    w_t: &Matrix<i32>,
+    k0: usize,
+    k_len: usize,
+    col0: usize,
+    mask_v: u64,
+    pc: u64,
+    r_dim: usize,
+    n: usize,
+    a_vals: &mut [i64],
+    prev: &mut [u64],
+    tog: &mut [u64],
+    nz: &mut [u64],
+    y_rows: &mut [i64],
+    vert: &mut DirectionStats,
+) {
+    debug_assert_eq!(y_rows.len(), n * B);
+    debug_assert_eq!(a_vals.len(), k_len * B);
+    debug_assert_eq!(prev.len(), k_len * B);
+    // Stationary activations, lane-interleaved: a_vals[r*B + l]
+    // (fully overwritten); the toggle-chain state starts cleared.
+    for l in 0..B {
+        let arow = a.row(col0 + l);
+        for r in 0..k_len {
+            a_vals[r * B + l] = arow[k0 + r] as i64;
+        }
+    }
+    prev.fill(0);
+    tog.fill(0);
+    nz.fill(0);
+    for j in 0..n {
+        let wk = &w_t.row(j)[k0..k0 + k_len];
+        let mut run = [0i64; B];
+        for (r, &wv) in wk.iter().enumerate() {
+            let wvl = wv as i64;
+            let base = r * B;
+            for l in 0..B {
+                run[l] += a_vals[base + l] * wvl;
+                let word = run[l] as u64 & mask_v;
+                tog[base + l] += (prev[base + l] ^ word).count_ones() as u64;
+                nz[base + l] += (word != 0) as u64;
+                prev[base + l] = word;
+            }
+        }
+        for l in 0..B {
+            y_rows[l * n + j] += run[l];
+        }
+    }
+    // Drain back to zero, per-row totals, and the pass-through tail:
+    // rows r >= k_len replay row k_len-1's word sequence exactly.
+    let tail = (r_dim - k_len) as u64;
+    for l in 0..B {
+        let mut tog_sum = 0u64;
+        let mut zer_sum = 0u64;
+        for r in 0..k_len {
+            let i = r * B + l;
+            let t = tog[i] + prev[i].count_ones() as u64;
+            tog_sum += t;
+            zer_sum += pc - nz[i];
+            if r == k_len - 1 {
+                tog_sum += tail * t;
+                zer_sum += tail * (pc - nz[i]);
+            }
+        }
+        vert.toggles += tog_sum;
+        vert.zero_words += zer_sum;
+        vert.observations += pc * r_dim as u64;
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sim::fast::simulate_gemm_fast;
+    use crate::gemm::matmul_i64;
+    use crate::sim::baseline::simulate_gemm_is_scalar;
+    use crate::sim::fast::{simulate_gemm_fast, MAX_COL_BLOCK};
     use crate::util::rng::Rng;
 
     fn rand_mat(rows: usize, cols: usize, seed: u64) -> Matrix<i32> {
@@ -182,6 +364,27 @@ mod tests {
         let sim = simulate_gemm_is(&sa, &a, &w).unwrap();
         assert_eq!(sim.y, matmul_i64(&a, &w).unwrap());
         assert_eq!(sim.macs, 9 * 7 * 6);
+    }
+
+    /// The blocked engine is bit-identical to the frozen scalar baseline
+    /// across widths and thread counts (the wide cross-product lives in
+    /// the integration tiers).
+    #[test]
+    fn is_matches_scalar_baseline_exactly() {
+        let sa = SaConfig::new_ws(4, 4, 8).unwrap();
+        let a = rand_mat(11, 9, 5);
+        let w = rand_mat(9, 10, 6);
+        let want = simulate_gemm_is_scalar(&sa, &a, &w).unwrap();
+        for col_block in [1, 3, MAX_COL_BLOCK] {
+            for threads in [1usize, 3] {
+                let opts = FastSimOpts { col_block, threads };
+                let got = simulate_gemm_is_with(&sa, &a, &w, &opts).unwrap();
+                assert_eq!(got.y, want.y, "B={col_block} t={threads}: outputs");
+                assert_eq!(got.stats, want.stats, "B={col_block} t={threads}: stats");
+                assert_eq!(got.cycles, want.cycles, "B={col_block} t={threads}: cycles");
+                assert_eq!(got.macs, want.macs, "B={col_block} t={threads}: macs");
+            }
+        }
     }
 
     #[test]
@@ -211,11 +414,22 @@ mod tests {
     }
 
     #[test]
-    fn is_rejects_shape_mismatch() {
+    fn is_rejects_bad_inputs() {
         let sa = SaConfig::new_ws(4, 4, 8).unwrap();
         assert!(
             simulate_gemm_is(&sa, &Matrix::<i32>::zeros(2, 3), &Matrix::<i32>::zeros(4, 4))
                 .is_err()
         );
+        let opts = FastSimOpts {
+            col_block: MAX_COL_BLOCK + 1,
+            threads: 1,
+        };
+        assert!(simulate_gemm_is_with(
+            &sa,
+            &Matrix::<i32>::zeros(2, 4),
+            &Matrix::<i32>::zeros(4, 4),
+            &opts
+        )
+        .is_err());
     }
 }

@@ -1,23 +1,30 @@
 //! Systolic-array simulation with exact per-wire toggle counting.
 //!
-//! Three engines compute bit-identical results:
+//! Every dataflow is served by a *pair* of analytic engines — a fast
+//! blocked implementation and a frozen scalar baseline it must match
+//! bit-for-bit — dispatched through the [`engine::DataflowEngine`]
+//! trait ([`engine::DataflowKind`] is the discriminant the explorer,
+//! serve layer and coordinator share):
 //!
-//! * [`ws::WsCycleSim`] — cycle-by-cycle register-transfer simulation of
-//!   the weight-stationary array (paper Fig. 1): every pipeline register
-//!   is modeled and every wire-segment transition is recorded. This is
-//!   the reproduction's stand-in for the paper's RTL simulation and the
-//!   authoritative definition of bus behaviour.
-//! * [`fast::simulate_gemm_fast`] — the production analytic engine:
-//!   derives the exact per-segment word sequences without cycling the
-//!   array, then counts them with a column-blocked register-tiled kernel
-//!   (1–8 lanes × fused row pairs), per-k-block memoized horizontal
-//!   statistics, closed-form O(R·C) weight-chain accounting, and
-//!   optional intra-GEMM sharding across scoped threads
-//!   ([`fast::FastSimOpts`]). Used by the coordinator, the figure
-//!   benches and the serving demo.
-//! * [`baseline::simulate_gemm_fast_scalar`] — the scalar predecessor of
-//!   the blocked engine, frozen as the reference the `sim_throughput`
-//!   bench measures speedups against (recorded in `BENCH_sim.json`).
+//! * **WS** — [`fast::simulate_gemm_fast`], the original production
+//!   engine: exact per-segment word sequences counted with a
+//!   column-blocked register-tiled kernel (1–8 lanes × fused row
+//!   pairs), per-k-block memoized horizontal statistics, closed-form
+//!   O(R·C) weight-chain accounting, and optional intra-GEMM sharding
+//!   across scoped threads ([`fast::FastSimOpts`]). WS additionally has
+//!   [`ws::WsCycleSim`] — the cycle-by-cycle register-transfer
+//!   simulation of the array (paper Fig. 1), the reproduction's
+//!   stand-in for the paper's RTL and the authoritative definition of
+//!   bus behaviour.
+//! * **OS** — [`os::simulate_gemm_os`]: per-block memoized activation
+//!   and weight streams, a closed-form output-drain accounting, and a
+//!   multi-lane output kernel, sharded like WS.
+//! * **IS** — [`is::simulate_gemm_is`]: a register-tiled vertical
+//!   prefix kernel whose final row doubles as the output, memoized
+//!   weight-stream statistics and a closed-form preload chain.
+//! * [`baseline`] — the frozen scalar predecessors of all three, the
+//!   references the `sim_throughput`/`sweep_throughput` benches measure
+//!   speedups against (`BENCH_sim.json` / `BENCH_sweep.json`).
 //!
 //! Equality of the engines (outputs, toggles, observations, cycles) is
 //! enforced by unit tests here, the `engines_equivalence` and
@@ -38,10 +45,13 @@
 //! engines' accounting identical.
 
 pub mod baseline;
+pub mod engine;
 pub mod fast;
 pub mod is;
 pub mod os;
 pub mod ws;
+
+pub use engine::{DataflowEngine, DataflowKind};
 
 
 use crate::activity::DirectionStats;
@@ -61,13 +71,23 @@ pub struct SaStats {
 }
 
 impl SaStats {
+    /// Empty stats with explicit bus widths: `bh`-bit horizontal buses
+    /// and weight/preload chain, `bv`-bit vertical buses. The engines
+    /// whose vertical words are not the config's nominal vertical width
+    /// (the OS drain rides the full accumulator bus regardless of the
+    /// dataflow discriminant) construct through this instead of
+    /// overriding fields after [`SaStats::new`].
+    pub fn with_widths(bh: u32, bv: u32) -> Self {
+        SaStats {
+            horizontal: DirectionStats::new(bh),
+            vertical: DirectionStats::new(bv),
+            weight_load: DirectionStats::new(bh),
+        }
+    }
+
     /// Empty stats for the given array configuration.
     pub fn new(sa: &SaConfig) -> Self {
-        SaStats {
-            horizontal: DirectionStats::new(sa.bus_bits_horizontal()),
-            vertical: DirectionStats::new(sa.bus_bits_vertical()),
-            weight_load: DirectionStats::new(sa.bus_bits_horizontal()),
-        }
+        Self::with_widths(sa.bus_bits_horizontal(), sa.bus_bits_vertical())
     }
 
     /// Merge another accumulator into this one.
@@ -134,6 +154,19 @@ mod tests {
         let sa = SaConfig::paper_32x32();
         assert_eq!(stream_cycles(&sa, 100), 100 + 32 + 32 + 2);
         assert_eq!(pass_cycles(&sa, 100), 32 + 166);
+    }
+
+    #[test]
+    fn with_widths_sets_all_three_groups() {
+        let s = SaStats::with_widths(16, 37);
+        assert_eq!(s.horizontal.bits, 16);
+        assert_eq!(s.vertical.bits, 37);
+        assert_eq!(s.weight_load.bits, 16);
+        // `new` is the config-derived special case of `with_widths`.
+        let sa = SaConfig::paper_32x32();
+        let n = SaStats::new(&sa);
+        assert_eq!(n.vertical.bits, sa.bus_bits_vertical());
+        assert_eq!(n.horizontal.bits, sa.bus_bits_horizontal());
     }
 
     #[test]

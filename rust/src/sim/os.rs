@@ -1,13 +1,15 @@
-//! Output-stationary (OS) dataflow — the ablation baseline.
+//! Output-stationary (OS) dataflow — the ablation baseline, on the fast
+//! blocked machinery.
 //!
 //! The paper's analysis (§II) is specific to WS: the wide `B_v` psum bus
 //! is busy every cycle, which is what makes the vertical direction
 //! dominant. Under OS, partial sums stay inside the PEs; the vertical
 //! tracks carry narrow `B_h` weight streams during compute and the wide
 //! `B_v` outputs only during the short drain phase. This module provides
-//! the analytic OS model used by the `ablation_dataflow` bench to show
-//! the optimal aspect ratio is dataflow-dependent (≈square or even
-//! H>W for OS, strongly rectangular for WS).
+//! the analytic OS model used by the `ablation_dataflow` bench and the
+//! design-space explorer to show the optimal aspect ratio is
+//! dataflow-dependent (≈square or even H>W for OS, strongly rectangular
+//! for WS).
 //!
 //! Accounting conventions (mirroring the WS engines):
 //! * one OS tile pass computes an `R×C` output block over the full `K`
@@ -15,12 +17,43 @@
 //! * `stats.horizontal` — activation stream (B_h);
 //! * `stats.weight_load` — weight stream on the vertical tracks (B_h);
 //! * `stats.vertical` — output drain on the vertical tracks (B_v).
+//!
+//! ### How the blocked engine organizes the work
+//!
+//! Bit-identical to the frozen scalar reference
+//! ([`super::baseline::simulate_gemm_os_scalar`], enforced by the
+//! property tiers), but on the [`super::engine`] machinery instead of
+//! per-pass one-word-at-a-time loops:
+//!
+//! 1. **Horizontal** — memoized per `m`-block: row `r`'s stream is
+//!    `A[m0+r][·]`, independent of the pass's `n0`, so each activation
+//!    row is scanned once ([`super::engine::stream_row_stats`]) and
+//!    scaled by the `n`-block count that replays it (the scalar engine
+//!    rescanned every row per pass).
+//! 2. **Weight stream** — memoized per `n`-block on a one-time
+//!    transpose of `W` (contiguous column scans), scaled by the
+//!    `m`-block count and the `R` identical segments per column.
+//! 3. **Output drain** — closed form: segment `(r, c)` replays the
+//!    drain prefix `y[m0+r..=m0]`, so summing over `r` weights each
+//!    word/transition by how many segments replay it — O(m_len) per
+//!    column instead of the scalar engine's O(R²) sweep.
+//! 4. **Outputs + sharding** — `y` columns are computed by a register-
+//!    tiled multi-lane dot-product kernel (replacing the cache-hostile
+//!    `matmul_i64` the scalar engine calls) and column chunks are
+//!    sharded over scoped threads exactly like the WS engine
+//!    ([`FastSimOpts::threads`] / `Coordinator::negotiate`); u64 merges
+//!    are exact, so results are bit-identical at any thread count.
 
+use crate::activity::DirectionStats;
 use crate::arch::{Dataflow, SaConfig};
 use crate::error::{Error, Result};
-use crate::gemm::{matmul_i64, Matrix};
-use crate::quant::bus_word;
+use crate::gemm::Matrix;
 
+use super::engine::{
+    blocks, bus_mask, chunk_columns, run_chunks, stream_row_stats, validate_opts,
+    width_dispatch,
+};
+use super::fast::{resolve_threads, FastSimOpts};
 use super::{GemmSim, SaStats};
 
 /// Cycles of one OS tile pass over reduction length `k`.
@@ -29,8 +62,22 @@ pub fn os_pass_cycles(sa: &SaConfig, k: usize) -> usize {
     k + sa.rows + 1
 }
 
-/// Analytic OS simulation of GEMM `a @ w` (`a: M×K`, `w: K×N`).
+/// Analytic OS simulation of GEMM `a @ w` (`a: M×K`, `w: K×N`) with
+/// default [`FastSimOpts`].
 pub fn simulate_gemm_os(sa: &SaConfig, a: &Matrix<i32>, w: &Matrix<i32>) -> Result<GemmSim> {
+    simulate_gemm_os_with(sa, a, w, &FastSimOpts::default())
+}
+
+/// Analytic OS simulation with explicit tuning. See [`simulate_gemm_os`]
+/// and the module docs; every option is bit-identical, only the wall
+/// clock changes.
+pub fn simulate_gemm_os_with(
+    sa: &SaConfig,
+    a: &Matrix<i32>,
+    w: &Matrix<i32>,
+    opts: &FastSimOpts,
+) -> Result<GemmSim> {
+    validate_opts(opts)?;
     if a.cols != w.rows {
         return Err(Error::shape(format!(
             "inner dims mismatch: {}x{} @ {}x{}",
@@ -42,104 +89,204 @@ pub fn simulate_gemm_os(sa: &SaConfig, a: &Matrix<i32>, w: &Matrix<i32>) -> Resu
     let (r_dim, c_dim) = (sa_os.rows, sa_os.cols);
     let bh = sa_os.bus_bits_horizontal();
     let bv = sa_os.acc_bits; // drain words are full accumulator width
+    let mask_h = bus_mask(bh);
+    let mask_v = bus_mask(bv);
     let (m, k, n) = (a.rows, a.cols, w.cols);
     let pc = os_pass_cycles(&sa_os, k) as u64;
 
-    let y = matmul_i64(a, w)?;
-    let mut stats = SaStats::new(&sa_os);
-    // SaStats::new uses bus_bits_vertical() which is B_h under OS; the
-    // drain rides the wide accumulator bus — fix its width explicitly.
-    stats.vertical = crate::activity::DirectionStats::new(bv);
-    let mut cycles = 0u64;
-    let mut macs = 0u64;
+    let m_blocks = blocks(m, r_dim);
+    let n_blocks = blocks(n, c_dim);
+    let passes = (m_blocks.len() * n_blocks.len()) as u64;
+    let mut stats = SaStats::with_widths(bh, bv);
 
-    let mut m0 = 0;
-    while m0 < m {
-        let m_len = r_dim.min(m - m0);
-        let mut n0 = 0;
-        while n0 < n {
-            let n_len = c_dim.min(n - n0);
-
-            // Horizontal: row r streams a[m0+r][0..k] (zero rows beyond
-            // m_len); identical on all C segments of the row.
-            for r in 0..r_dim {
-                let (mut tog, mut nz) = (0u64, 0u64);
-                if r < m_len {
-                    let mut p = 0u64;
-                    for kk in 0..k {
-                        let word = bus_word(a.get(m0 + r, kk) as i64, bh);
-                        tog += (p ^ word).count_ones() as u64;
-                        nz += (word != 0) as u64;
-                        p = word;
-                    }
-                    tog += p.count_ones() as u64;
-                }
-                stats.horizontal.toggles += tog * c_dim as u64;
-                stats.horizontal.zero_words += (pc - nz) * c_dim as u64;
-                stats.horizontal.observations += pc * c_dim as u64;
-            }
-
-            // Vertical weight stream: column c streams w[0..k][n0+c];
-            // identical on all R segments of the column.
-            for c in 0..c_dim {
-                let (mut tog, mut nz) = (0u64, 0u64);
-                if c < n_len {
-                    let mut p = 0u64;
-                    for kk in 0..k {
-                        let word = bus_word(w.get(kk, n0 + c) as i64, bh);
-                        tog += (p ^ word).count_ones() as u64;
-                        nz += (word != 0) as u64;
-                        p = word;
-                    }
-                    tog += p.count_ones() as u64;
-                }
-                stats.weight_load.toggles += tog * r_dim as u64;
-                stats.weight_load.zero_words += (pc - nz) * r_dim as u64;
-                stats.weight_load.observations += pc * r_dim as u64;
-            }
-
-            // Output drain: segment (r,c) sees y[m0+r], y[m0+r-1], …,
-            // y[m0], then zero — `r+1` words out of the R+1 drain cycles.
-            for c in 0..c_dim {
-                for r in 0..r_dim {
-                    let (mut tog, mut nz) = (0u64, 0u64);
-                    if c < n_len {
-                        let mut p = 0u64;
-                        for rr in (0..=r.min(m_len.saturating_sub(1))).rev() {
-                            if r < m_len {
-                                let word = bus_word(y.get(m0 + rr, n0 + c), bv);
-                                tog += (p ^ word).count_ones() as u64;
-                                nz += (word != 0) as u64;
-                                p = word;
-                            }
-                        }
-                        tog += p.count_ones() as u64;
-                    }
-                    stats.vertical.toggles += tog;
-                    stats.vertical.zero_words += pc - nz;
-                    stats.vertical.observations += pc;
-                }
-            }
-
-            cycles += pc;
-            macs += (m_len * k * n_len) as u64;
-            n0 += c_dim;
+    // ---- Horizontal: memoized per m-block -------------------------------
+    // Row r streams A[m0+r][0..k] on all C segments of the row, in every
+    // n-block pass of this m-block — one scan, scaled by the replays.
+    for &(m0, m_len) in &m_blocks {
+        let (mut tog_sum, mut nz_sum) = (0u64, 0u64);
+        for r in 0..m_len {
+            let (tog, nz) = stream_row_stats(a.row(m0 + r), mask_h);
+            tog_sum += tog;
+            nz_sum += nz;
         }
-        m0 += r_dim;
+        // Rows r >= m_len stream constant zero: no toggles, no non-zeros.
+        let reps = (c_dim * n_blocks.len()) as u64;
+        stats.horizontal.toggles += tog_sum * reps;
+        stats.horizontal.zero_words += (r_dim as u64 * pc - nz_sum) * reps;
+        stats.horizontal.observations += pc * r_dim as u64 * reps;
+    }
+
+    // ---- Weight stream: memoized per n-block ----------------------------
+    // Column c streams W[0..k][n0+c] on all R segments of the column, in
+    // every m-block pass — contiguous scans off a one-time transpose.
+    let w_t = w.transpose();
+    for &(n0, n_len) in &n_blocks {
+        let (mut tog_sum, mut nz_sum) = (0u64, 0u64);
+        for c in 0..n_len {
+            let (tog, nz) = stream_row_stats(w_t.row(n0 + c), mask_h);
+            tog_sum += tog;
+            nz_sum += nz;
+        }
+        let reps = (r_dim * m_blocks.len()) as u64;
+        stats.weight_load.toggles += tog_sum * reps;
+        stats.weight_load.zero_words += (c_dim as u64 * pc - nz_sum) * reps;
+        stats.weight_load.observations += pc * c_dim as u64 * reps;
+    }
+
+    // ---- Idle drain columns (c >= n_len): constant-zero wires -----------
+    for &(_, n_len) in &n_blocks {
+        if n_len < c_dim {
+            let idle = (c_dim - n_len) as u64 * m_blocks.len() as u64;
+            stats.vertical.zero_words += idle * pc * r_dim as u64;
+            stats.vertical.observations += idle * pc * r_dim as u64;
+        }
+    }
+
+    // ---- Outputs + drain statistics: column chunks, optionally sharded --
+    let chunks = chunk_columns(&n_blocks, opts.col_block);
+    let total_macs = (m * k * n) as u64;
+    let threads = resolve_threads(opts.threads, total_macs, chunks.len());
+    let bv_bits = stats.vertical.bits;
+    let parts = run_chunks(threads, chunks.len(), |ci| {
+        let chunk = &chunks[ci];
+        let mut vert = DirectionStats::new(bv_bits);
+        let mut y_acc = vec![0i64; m * chunk.width];
+        os_dispatch(
+            chunk.width,
+            a,
+            &w_t,
+            chunk.col0,
+            &m_blocks,
+            mask_v,
+            pc,
+            r_dim,
+            &mut y_acc,
+            &mut vert,
+        );
+        (y_acc, vert)
+    });
+
+    let mut y = Matrix::<i64>::zeros(m, n);
+    for (chunk, (y_acc, vert)) in chunks.iter().zip(parts) {
+        stats.vertical.merge(&vert);
+        for mi in 0..m {
+            let row = &y_acc[mi * chunk.width..(mi + 1) * chunk.width];
+            for (l, &v) in row.iter().enumerate() {
+                y.set(mi, chunk.col0 + l, v);
+            }
+        }
     }
 
     Ok(GemmSim {
         y,
         stats,
-        cycles,
-        macs,
+        cycles: passes * pc,
+        macs: total_macs,
     })
+}
+
+/// Monomorphized dispatch over the chunk width.
+#[allow(clippy::too_many_arguments)]
+fn os_dispatch(
+    width: usize,
+    a: &Matrix<i32>,
+    w_t: &Matrix<i32>,
+    col0: usize,
+    m_blocks: &[(usize, usize)],
+    mask_v: u64,
+    pc: u64,
+    r_dim: usize,
+    y_acc: &mut [i64],
+    vert: &mut DirectionStats,
+) {
+    width_dispatch!(
+        width,
+        os_sweep_cols,
+        (a, w_t, col0, m_blocks, mask_v, pc, r_dim, y_acc, vert)
+    )
+}
+
+/// One chunk of `B` output columns: exact outputs by a `B`-lane dot
+/// product over contiguous `A` rows / transposed `W` rows, then the
+/// drain statistics in closed form per column and `m`-block.
+///
+/// Drain closed form: segment `(r, c)` (for `r < m_len`) sees the word
+/// sequence `v_r, v_{r-1}, …, v_0, 0` where `v_j` is the masked drain
+/// word of `y[m0+j][c]`, so over the column
+///
+/// ```text
+/// Σ_r tog_r = Σ_j popcnt(v_j)                  (each segment's entry)
+///           + m_len · popcnt(v_0)              (every segment drains v_0)
+///           + Σ_{j≥1} (m_len − j) · popcnt(v_j ^ v_{j−1})
+/// Σ_r nz_r  = Σ_j (m_len − j) · (v_j ≠ 0)
+/// ```
+///
+/// — O(m_len) per column instead of the scalar engine's O(m_len²).
+/// Segments `r >= m_len` idle at zero and are accounted by scaling.
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn os_sweep_cols<const B: usize>(
+    a: &Matrix<i32>,
+    w_t: &Matrix<i32>,
+    col0: usize,
+    m_blocks: &[(usize, usize)],
+    mask_v: u64,
+    pc: u64,
+    r_dim: usize,
+    y_acc: &mut [i64],
+    vert: &mut DirectionStats,
+) {
+    debug_assert_eq!(y_acc.len(), a.rows * B);
+    let empty: &[i32] = &[];
+    let mut wrows: [&[i32]; B] = [empty; B];
+    for (l, wr) in wrows.iter_mut().enumerate() {
+        *wr = w_t.row(col0 + l);
+    }
+    for (chunk, mi) in y_acc.chunks_exact_mut(B).zip(0..a.rows) {
+        let arow = a.row(mi);
+        let mut acc = [0i64; B];
+        for (kk, &av) in arow.iter().enumerate() {
+            let avl = av as i64;
+            for l in 0..B {
+                acc[l] += avl * wrows[l][kk] as i64;
+            }
+        }
+        chunk.copy_from_slice(&acc);
+    }
+
+    for &(m0, m_len) in m_blocks {
+        for l in 0..B {
+            let mut pop_sum = 0u64; // Σ_j popcnt(v_j)
+            let mut v0_pop = 0u64; // popcnt(v_0)
+            let mut weighted_tog = 0u64; // Σ_{j>=1} (m_len-j)·popcnt(v_j ^ v_{j-1})
+            let mut weighted_nz = 0u64; // Σ_j (m_len-j)·(v_j != 0)
+            let mut prev = 0u64;
+            for j in 0..m_len {
+                let word = y_acc[(m0 + j) * B + l] as u64 & mask_v;
+                let pop = word.count_ones() as u64;
+                pop_sum += pop;
+                if j == 0 {
+                    v0_pop = pop;
+                } else {
+                    weighted_tog += (m_len - j) as u64 * (prev ^ word).count_ones() as u64;
+                }
+                weighted_nz += (m_len - j) as u64 * ((word != 0) as u64);
+                prev = word;
+            }
+            vert.toggles += pop_sum + m_len as u64 * v0_pop + weighted_tog;
+            // r < m_len contribute pc - nz_r; r >= m_len idle at zero.
+            vert.zero_words += r_dim as u64 * pc - weighted_nz;
+            vert.observations += pc * r_dim as u64;
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sim::fast::simulate_gemm_fast;
+    use crate::gemm::matmul_i64;
+    use crate::sim::baseline::simulate_gemm_os_scalar;
+    use crate::sim::fast::{simulate_gemm_fast, MAX_COL_BLOCK};
 
     fn rand_mat(rows: usize, cols: usize, seed: u64) -> Matrix<i32> {
         let mut rng = crate::util::rng::Rng::new(seed);
@@ -157,6 +304,27 @@ mod tests {
         let sim = simulate_gemm_os(&sa, &a, &w).unwrap();
         assert_eq!(sim.y, matmul_i64(&a, &w).unwrap());
         assert_eq!(sim.macs, 9 * 7 * 6);
+    }
+
+    /// The blocked engine is bit-identical to the frozen scalar baseline
+    /// across widths and thread counts (the wide cross-product lives in
+    /// the integration tiers).
+    #[test]
+    fn os_matches_scalar_baseline_exactly() {
+        let sa = SaConfig::new_ws(4, 4, 8).unwrap();
+        let a = rand_mat(11, 9, 5);
+        let w = rand_mat(9, 10, 6);
+        let want = simulate_gemm_os_scalar(&sa, &a, &w).unwrap();
+        for col_block in [1, 3, MAX_COL_BLOCK] {
+            for threads in [1usize, 3] {
+                let opts = FastSimOpts { col_block, threads };
+                let got = simulate_gemm_os_with(&sa, &a, &w, &opts).unwrap();
+                assert_eq!(got.y, want.y, "B={col_block} t={threads}: outputs");
+                assert_eq!(got.stats, want.stats, "B={col_block} t={threads}: stats");
+                assert_eq!(got.cycles, want.cycles, "B={col_block} t={threads}: cycles");
+                assert_eq!(got.macs, want.macs, "B={col_block} t={threads}: macs");
+            }
+        }
     }
 
     #[test]
@@ -188,11 +356,22 @@ mod tests {
     }
 
     #[test]
-    fn os_rejects_shape_mismatch() {
+    fn os_rejects_bad_inputs() {
         let sa = SaConfig::new_ws(4, 4, 8).unwrap();
         assert!(
             simulate_gemm_os(&sa, &Matrix::<i32>::zeros(2, 3), &Matrix::<i32>::zeros(4, 4))
                 .is_err()
         );
+        let opts = FastSimOpts {
+            col_block: 0,
+            threads: 1,
+        };
+        assert!(simulate_gemm_os_with(
+            &sa,
+            &Matrix::<i32>::zeros(2, 4),
+            &Matrix::<i32>::zeros(4, 4),
+            &opts
+        )
+        .is_err());
     }
 }

@@ -1,0 +1,45 @@
+//! Shared golden-fixture input scheme, used by `golden_vectors.rs`
+//! (WS / table1.json) and `golden_dataflows.rs` (OS+IS /
+//! dataflows.json), and mirrored by `tools/golden_gen.py` — change all
+//! of them together and regenerate both fixtures.
+//!
+//! Pure-integer seeded operands (SplitMix64 draws, modulo
+//! sparsity/range) so any faithful port of the integer pipeline
+//! regenerates every value bit-exactly, with no libm dependence.
+
+#![allow(dead_code)] // each integration-test crate uses a subset
+
+use asymm_sa::gemm::Matrix;
+use asymm_sa::util::rng::Rng;
+
+/// Root seed of the golden operand streams.
+pub const INPUT_SEED: u64 = 0xA5A5_2023;
+
+/// Activation sparsity in percent (ReLU-like zero bursts).
+pub const A_SPARSITY_PCT: u64 = 40;
+
+/// Deterministic int16 operand matrix from pure integer RNG draws: one
+/// draw decides zero/nonzero, a second draws the value.
+pub fn golden_matrix(rows: usize, cols: usize, seed: u64, sparsity_pct: u64) -> Matrix<i32> {
+    let mut rng = Rng::new(seed);
+    let data = (0..rows * cols)
+        .map(|_| {
+            if rng.next_u64() % 100 < sparsity_pct {
+                0
+            } else {
+                ((rng.next_u64() % 65535) as i64 - 32767) as i32
+            }
+        })
+        .collect();
+    Matrix::from_vec(rows, cols, data).expect("sized correctly")
+}
+
+/// Activation-matrix seed of Table-I layer `layer_idx`.
+pub fn a_seed(layer_idx: usize) -> u64 {
+    INPUT_SEED.wrapping_add(1000 + layer_idx as u64)
+}
+
+/// Weight-matrix seed of Table-I layer `layer_idx`.
+pub fn w_seed(layer_idx: usize) -> u64 {
+    INPUT_SEED.wrapping_add(2000 + layer_idx as u64)
+}

@@ -6,12 +6,14 @@
 use asymm_sa::arch::SaConfig;
 use asymm_sa::gemm::{matmul_i64, Matrix};
 use asymm_sa::sim::{
-    fast::simulate_gemm_fast,
-    is::{is_pass_cycles, simulate_gemm_is},
-    os::{os_pass_cycles, simulate_gemm_os},
+    baseline::{simulate_gemm_is_scalar, simulate_gemm_os_scalar},
+    engine::DataflowKind,
+    fast::{simulate_gemm_fast, FastSimOpts},
+    is::{is_pass_cycles, simulate_gemm_is, simulate_gemm_is_with},
+    os::{os_pass_cycles, simulate_gemm_os, simulate_gemm_os_with},
     pass_cycles,
     ws::WsCycleSim,
-    SaStats,
+    GemmSim, SaStats,
 };
 use asymm_sa::util::rng::Rng;
 
@@ -250,6 +252,76 @@ fn property_engines_conserve_total_bus_words() {
             assert_eq!(is.cycles, is_passes * is_pc, "IS {ctx}: cycles");
         }
     }
+}
+
+fn assert_sims_equal(ctx: &str, got: &GemmSim, want: &GemmSim) {
+    assert_eq!(got.y, want.y, "{ctx}: outputs");
+    assert_eq!(got.stats, want.stats, "{ctx}: stats");
+    assert_eq!(got.cycles, want.cycles, "{ctx}: cycles");
+    assert_eq!(got.macs, want.macs, "{ctx}: macs");
+}
+
+/// The tentpole contract of the dataflow-generic engine: the blocked
+/// OS/IS implementations are bit-identical — toggles, zero words,
+/// observations, cycles, MACs and the full output matrix — to the
+/// frozen scalar baselines across seeded ragged shapes, bus widths and
+/// 1/2/4 intra-GEMM threads.
+#[test]
+fn property_fast_os_and_is_equal_scalar_baselines() {
+    let mut rng = Rng::new(0xD47A_F107);
+    for case in 0..24 {
+        let rows = [2usize, 3, 4, 5, 8][rng.index(0, 5)];
+        let cols = [2usize, 3, 4, 5, 8][rng.index(0, 5)];
+        let bits = [4u32, 8, 12][rng.index(0, 3)];
+        let sa = SaConfig::new_ws(rows, cols, bits).unwrap();
+        // Spans up to 3 blocks on every tiled axis: exercises the
+        // memoized streams, the closed-form chains and ragged tails.
+        let m = rng.index(1, 3 * rows.max(cols));
+        let k = rng.index(1, 3 * rows);
+        let n = rng.index(1, 3 * cols);
+        let sparsity = [0.0, 0.5, 0.9][rng.index(0, 3)];
+        let (a, w) = rand_operands(&mut rng, m, k, n, bits, sparsity);
+
+        let os_ref = simulate_gemm_os_scalar(&sa, &a, &w).unwrap();
+        let is_ref = simulate_gemm_is_scalar(&sa, &a, &w).unwrap();
+        let ctx0 = format!("case {case}: {m}x{k}x{n} on {rows}x{cols} @ {bits}b");
+        assert_eq!(os_ref.y, matmul_i64(&a, &w).unwrap(), "{ctx0}: OS reference");
+        for threads in [1usize, 2, 4] {
+            let opts = FastSimOpts {
+                threads,
+                ..FastSimOpts::default()
+            };
+            let os = simulate_gemm_os_with(&sa, &a, &w, &opts).unwrap();
+            assert_sims_equal(&format!("{ctx0} OS t={threads}"), &os, &os_ref);
+            let is = simulate_gemm_is_with(&sa, &a, &w, &opts).unwrap();
+            assert_sims_equal(&format!("{ctx0} IS t={threads}"), &is, &is_ref);
+        }
+    }
+}
+
+/// The trait dispatch returns the same engines the free functions do,
+/// for every dataflow kind.
+#[test]
+fn property_engine_dispatch_matches_free_functions() {
+    let mut rng = Rng::new(0x1D15_9A7C);
+    let sa = SaConfig::new_ws(5, 3, 8).unwrap();
+    let (a, w) = rand_operands(&mut rng, 11, 9, 7, 8, 0.3);
+    let by_kind = |kind: DataflowKind| kind.engine().simulate(&sa, &a, &w).unwrap();
+    assert_sims_equal(
+        "ws dispatch",
+        &by_kind(DataflowKind::Ws),
+        &simulate_gemm_fast(&sa, &a, &w).unwrap(),
+    );
+    assert_sims_equal(
+        "os dispatch",
+        &by_kind(DataflowKind::Os),
+        &simulate_gemm_os(&sa, &a, &w).unwrap(),
+    );
+    assert_sims_equal(
+        "is dispatch",
+        &by_kind(DataflowKind::Is),
+        &simulate_gemm_is(&sa, &a, &w).unwrap(),
+    );
 }
 
 #[test]

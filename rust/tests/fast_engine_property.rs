@@ -7,8 +7,12 @@
 
 use asymm_sa::arch::SaConfig;
 use asymm_sa::gemm::{matmul_i64, Matrix};
-use asymm_sa::sim::baseline::simulate_gemm_fast_scalar;
+use asymm_sa::sim::baseline::{
+    simulate_gemm_fast_scalar, simulate_gemm_is_scalar, simulate_gemm_os_scalar,
+};
 use asymm_sa::sim::fast::{simulate_gemm_fast_with, FastSimOpts, MAX_COL_BLOCK};
+use asymm_sa::sim::is::simulate_gemm_is_with;
+use asymm_sa::sim::os::simulate_gemm_os_with;
 use asymm_sa::sim::ws::WsCycleSim;
 use asymm_sa::util::rng::Rng;
 
@@ -102,6 +106,64 @@ fn memoized_multi_pass_path_is_exact() {
         assert_eq!(fast.stats, cycle.stats, "B={col_block}: stats");
         assert_eq!(fast.cycles, cycle.cycles, "B={col_block}: cycles");
     }
+}
+
+/// The OS/IS counterparts of the width × thread cross-product: every
+/// lane count and several thread counts reproduce the frozen scalar
+/// baselines bit-for-bit on a many-block shape (4 blocks on each tiled
+/// axis, both ragged — memoized streams replayed 4×, closed-form
+/// chains across 16 passes).
+#[test]
+fn os_is_blocked_equals_scalar_across_widths_and_threads() {
+    let mut rng = Rng::new(9);
+    let sa = SaConfig::new_ws(4, 4, 8).unwrap();
+    let (a, w) = rand_operands(&mut rng, 15, 13, 15, 8, 0.4);
+    let os_ref = simulate_gemm_os_scalar(&sa, &a, &w).unwrap();
+    let is_ref = simulate_gemm_is_scalar(&sa, &a, &w).unwrap();
+    assert_eq!(os_ref.y, matmul_i64(&a, &w).unwrap());
+    for col_block in 1..=MAX_COL_BLOCK {
+        for threads in [1usize, 3] {
+            let opts = FastSimOpts { col_block, threads };
+            let ctx = format!("B={col_block} t={threads}");
+            let os = simulate_gemm_os_with(&sa, &a, &w, &opts).unwrap();
+            assert_eq!(os.y, os_ref.y, "OS {ctx}: outputs");
+            assert_eq!(os.stats, os_ref.stats, "OS {ctx}: stats");
+            assert_eq!(os.cycles, os_ref.cycles, "OS {ctx}: cycles");
+            assert_eq!(os.macs, os_ref.macs, "OS {ctx}: macs");
+            let is = simulate_gemm_is_with(&sa, &a, &w, &opts).unwrap();
+            assert_eq!(is.y, is_ref.y, "IS {ctx}: outputs");
+            assert_eq!(is.stats, is_ref.stats, "IS {ctx}: stats");
+            assert_eq!(is.cycles, is_ref.cycles, "IS {ctx}: cycles");
+            assert_eq!(is.macs, is_ref.macs, "IS {ctx}: macs");
+        }
+    }
+}
+
+/// Above the auto-parallelism threshold the sharded default paths of
+/// all three dataflows must still be bit-identical to their scalar
+/// baselines (the cycle engine is too slow at this size).
+#[test]
+fn auto_threaded_large_os_is_match_scalar_baselines() {
+    let mut rng = Rng::new(13);
+    let sa = SaConfig::new_ws(8, 8, 8).unwrap();
+    let (a, w) = rand_operands(&mut rng, 260, 130, 140, 8, 0.5);
+    let os_ref = simulate_gemm_os_scalar(&sa, &a, &w).unwrap();
+    let os = asymm_sa::sim::os::simulate_gemm_os(&sa, &a, &w).unwrap();
+    assert_eq!(os.y, os_ref.y);
+    assert_eq!(os.stats, os_ref.stats);
+    assert_eq!(os.cycles, os_ref.cycles);
+    let is_ref = simulate_gemm_is_scalar(&sa, &a, &w).unwrap();
+    let is = asymm_sa::sim::is::simulate_gemm_is(&sa, &a, &w).unwrap();
+    assert_eq!(is.y, is_ref.y);
+    assert_eq!(is.stats, is_ref.stats);
+    assert_eq!(is.cycles, is_ref.cycles);
+    // Thread counts beyond the chunk count are clamped, not UB.
+    let opts = FastSimOpts {
+        col_block: 8,
+        threads: 64,
+    };
+    let over = simulate_gemm_os_with(&sa, &a, &w, &opts).unwrap();
+    assert_eq!(over.stats, os_ref.stats);
 }
 
 /// Above the auto-parallelism threshold (a >4M-MAC GEMM) the sharded

@@ -26,52 +26,23 @@
 //! git diff rust/tests/golden/table1.json   # review every number!
 //! ```
 
+mod common;
+
 use std::fmt::Write as _;
 
 use asymm_sa::activity::DirectionStats;
 use asymm_sa::arch::SaConfig;
 use asymm_sa::config::ExperimentConfig;
 use asymm_sa::floorplan::PeGeometry;
-use asymm_sa::gemm::Matrix;
 use asymm_sa::power::{self, TechParams};
 use asymm_sa::serve::cache::digest_i64;
 use asymm_sa::sim::fast::simulate_gemm_fast;
 use asymm_sa::util::json::{obj, Json};
-use asymm_sa::util::rng::Rng;
 use asymm_sa::workloads::{gemm_shape, table1_layers};
 
+use common::{a_seed, golden_matrix, w_seed, A_SPARSITY_PCT, INPUT_SEED};
+
 const GOLDEN_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/golden/table1.json");
-
-/// Fixture input scheme (mirrored by tools/golden_gen.py — change both
-/// together and regenerate).
-const INPUT_SEED: u64 = 0xA5A5_2023;
-/// Activation sparsity in percent (ReLU-like zero bursts).
-const A_SPARSITY_PCT: u64 = 40;
-
-/// Deterministic int16 operand matrix from pure integer RNG draws:
-/// one draw decides zero/nonzero, a second draws the value. No floats
-/// anywhere, so any exact SplitMix64 port regenerates it bit-for-bit.
-fn golden_matrix(rows: usize, cols: usize, seed: u64, sparsity_pct: u64) -> Matrix<i32> {
-    let mut rng = Rng::new(seed);
-    let data = (0..rows * cols)
-        .map(|_| {
-            if rng.next_u64() % 100 < sparsity_pct {
-                0
-            } else {
-                ((rng.next_u64() % 65535) as i64 - 32767) as i32
-            }
-        })
-        .collect();
-    Matrix::from_vec(rows, cols, data).expect("sized correctly")
-}
-
-fn a_seed(layer_idx: usize) -> u64 {
-    INPUT_SEED.wrapping_add(1000 + layer_idx as u64)
-}
-
-fn w_seed(layer_idx: usize) -> u64 {
-    INPUT_SEED.wrapping_add(2000 + layer_idx as u64)
-}
 
 /// Everything the fixture pins for one layer.
 #[derive(Debug, Clone, PartialEq)]

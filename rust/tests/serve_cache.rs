@@ -36,6 +36,7 @@ fn server(sa: &SaConfig, workers: usize, cache: usize, window: usize) -> Server 
         workers,
         cache_capacity: cache,
         window,
+        engine: asymm_sa::sim::engine::DataflowKind::Ws,
     })
 }
 

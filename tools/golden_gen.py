@@ -1,8 +1,12 @@
 #!/usr/bin/env python3
-"""Generate rust/tests/golden/table1.json — the golden-vector fixture.
+"""Generate the golden-vector fixtures:
+
+  * rust/tests/golden/table1.json     — WS engine (Table-I layers)
+  * rust/tests/golden/dataflows.json  — OS and IS engines, same layers
 
 This is an exact, bit-for-bit port of the crate's frozen scalar analytic
-engine (rust/src/sim/baseline.rs) plus the pieces the fixture depends on:
+engines (rust/src/sim/baseline.rs — WS, OS and IS) plus the pieces the
+fixtures depend on:
 
   * util::rng::Rng            (SplitMix64, pure integer)
   * the golden input scheme   (tests/golden_vectors.rs::golden_matrix)
@@ -11,6 +15,13 @@ engine (rust/src/sim/baseline.rs) plus the pieces the fixture depends on:
   * serve::cache::digest_i64  (FNV-1a, length-prefixed, little-endian)
   * power::evaluate           (interconnect terms only, f64 arithmetic
                                replicated operation-for-operation)
+
+For each dataflow, two independent Python implementations are compared
+before anything is written: a line-by-line scalar transliteration of the
+frozen Rust engine, and a vectorized/closed-form port that mirrors the
+blocked Rust engines' algebra (memoized streams, drain/preload closed
+forms, pass-through tail scaling). Their agreement validates exactly the
+identities the fast Rust engines rely on.
 
 Why a Python generator exists at all: the fixture must be produced by an
 implementation *independent* of the engine under test (otherwise the
@@ -312,6 +323,335 @@ def simulate_ws_numpy(R, C, bh, bv, A, W):
 
 
 # ----------------------------------------------------------------------
+# OS engine: scalar transliteration of baseline.rs::simulate_gemm_os_scalar
+# ----------------------------------------------------------------------
+
+
+def blocks(total: int, step: int):
+    return [(s, min(step, total - s)) for s in range(0, total, step)]
+
+
+def os_pass_cycles(R: int, k: int) -> int:
+    return k + R + 1
+
+
+def is_pass_cycles(R: int, C: int, n: int) -> int:
+    return R + n + R + C + 2
+
+
+def simulate_os_scalar(R, C, bh, bv, A, W):
+    """Line-by-line port of simulate_gemm_os_scalar. Slow — used only to
+    validate the vectorized OS engine on small shapes."""
+    m, k = A.shape
+    n = W.shape[1]
+    pc = os_pass_cycles(R, k)
+    y = A.astype(np.int64) @ W.astype(np.int64)
+    stats = {key: [0, 0, 0] for key in ("h", "v", "wl")}
+    cycles = macs = 0
+    Al = A.tolist()
+    Wl = W.tolist()
+    Yl = y.tolist()
+    m0 = 0
+    while m0 < m:
+        m_len = min(R, m - m0)
+        n0 = 0
+        while n0 < n:
+            n_len = min(C, n - n0)
+            # Horizontal: row r streams a[m0+r][0..k].
+            for r in range(R):
+                tog = nz = 0
+                if r < m_len:
+                    p = 0
+                    for kk in range(k):
+                        word = bus_word(Al[m0 + r][kk], bh)
+                        tog += bin(p ^ word).count("1")
+                        nz += word != 0
+                        p = word
+                    tog += bin(p).count("1")
+                stats["h"][0] += tog * C
+                stats["h"][1] += (pc - nz) * C
+                stats["h"][2] += pc * C
+            # Vertical weight stream: column c streams w[0..k][n0+c].
+            for c in range(C):
+                tog = nz = 0
+                if c < n_len:
+                    p = 0
+                    for kk in range(k):
+                        word = bus_word(Wl[kk][n0 + c], bh)
+                        tog += bin(p ^ word).count("1")
+                        nz += word != 0
+                        p = word
+                    tog += bin(p).count("1")
+                stats["wl"][0] += tog * R
+                stats["wl"][1] += (pc - nz) * R
+                stats["wl"][2] += pc * R
+            # Output drain.
+            for c in range(C):
+                for r in range(R):
+                    tog = nz = 0
+                    if c < n_len:
+                        p = 0
+                        for rr in range(min(r, m_len - 1), -1, -1):
+                            if r < m_len:
+                                word = bus_word(Yl[m0 + rr][n0 + c], bv)
+                                tog += bin(p ^ word).count("1")
+                                nz += word != 0
+                                p = word
+                        tog += bin(p).count("1")
+                    stats["v"][0] += tog
+                    stats["v"][1] += pc - nz
+                    stats["v"][2] += pc
+            cycles += pc
+            macs += m_len * k * n_len
+            n0 += C
+        m0 += R
+    return y, stats, cycles, macs
+
+
+# ----------------------------------------------------------------------
+# OS engine: vectorized port of the blocked sim/os.rs algebra
+# ----------------------------------------------------------------------
+
+
+def _stream_rows(rows_i64: np.ndarray, mask: np.uint64):
+    """(toggles, nonzeros) summed over contiguous word-stream rows, each
+    starting and draining at zero — engine::stream_row_stats."""
+    if rows_i64.shape[1] == 0:
+        return 0, 0
+    words = _u64(rows_i64) & mask
+    prev = np.concatenate(
+        [np.zeros((words.shape[0], 1), dtype=np.uint64), words[:, :-1]], axis=1
+    )
+    tog = int(_pc64(prev ^ words).sum()) + int(_pc64(words[:, -1]).sum())
+    nz = int((words != 0).sum())
+    return tog, nz
+
+
+def simulate_os_numpy(R, C, bh, bv, A, W):
+    """Vectorized port of the blocked OS engine (sim/os.rs): memoized
+    activation/weight streams, closed-form drain accounting."""
+    m, k = A.shape
+    n = W.shape[1]
+    pc = os_pass_cycles(R, k)
+    mask_h = np.uint64((1 << bh) - 1)
+    mask_v = np.uint64((1 << bv) - 1)
+    A64 = A.astype(np.int64)
+    W64 = W.astype(np.int64)
+    y = A64 @ W64
+    m_blocks = blocks(m, R)
+    n_blocks = blocks(n, C)
+    h = [0, 0, 0]
+    wl = [0, 0, 0]
+    v = [0, 0, 0]
+
+    # Horizontal: memoized per m-block, scaled by the n-block replays.
+    for (m0, m_len) in m_blocks:
+        tog, nz = _stream_rows(A64[m0 : m0 + m_len], mask_h)
+        reps = C * len(n_blocks)
+        h[0] += tog * reps
+        h[1] += (R * pc - nz) * reps
+        h[2] += pc * R * reps
+
+    # Weight stream: memoized per n-block, scaled by the m-block replays.
+    for (n0, n_len) in n_blocks:
+        tog, nz = _stream_rows(W64[:, n0 : n0 + n_len].T.copy(), mask_h)
+        reps = R * len(m_blocks)
+        wl[0] += tog * reps
+        wl[1] += (C * pc - nz) * reps
+        wl[2] += pc * C * reps
+
+    # Drain: closed form per (m-block, n-block) pass and column.
+    for (m0, m_len) in m_blocks:
+        for (n0, n_len) in n_blocks:
+            V = _u64(y[m0 : m0 + m_len, n0 : n0 + n_len]) & mask_v  # (m_len, n_len)
+            pop = _pc64(V)
+            pop_sum = pop.sum(axis=0)
+            v0_pop = pop[0]
+            if m_len > 1:
+                d = _pc64(V[1:] ^ V[:-1])  # (m_len-1, n_len), transition j>=1
+                w_tog = np.arange(m_len - 1, 0, -1, dtype=np.int64)[:, None]
+                weighted_tog = (d * w_tog).sum(axis=0)
+            else:
+                weighted_tog = np.zeros(n_len, dtype=np.int64)
+            w_nz = np.arange(m_len, 0, -1, dtype=np.int64)[:, None]
+            weighted_nz = ((V != 0).astype(np.int64) * w_nz).sum(axis=0)
+            v[0] += int((pop_sum + m_len * v0_pop + weighted_tog).sum())
+            v[1] += R * pc * n_len - int(weighted_nz.sum())
+            v[2] += pc * R * n_len
+            if n_len < C:
+                v[1] += (C - n_len) * pc * R
+                v[2] += (C - n_len) * pc * R
+
+    stats = {"h": h, "v": v, "wl": wl}
+    return y, stats, len(m_blocks) * len(n_blocks) * pc, m * k * n
+
+
+# ----------------------------------------------------------------------
+# IS engine: scalar transliteration of baseline.rs::simulate_gemm_is_scalar
+# ----------------------------------------------------------------------
+
+
+def simulate_is_scalar(R, C, bh, bv, A, W):
+    """Line-by-line port of simulate_gemm_is_scalar. Slow — used only to
+    validate the vectorized IS engine on small shapes."""
+    m, k = A.shape
+    n = W.shape[1]
+    pc = is_pass_cycles(R, C, n)
+    y = A.astype(np.int64) @ W.astype(np.int64)
+    stats = {key: [0, 0, 0] for key in ("h", "v", "wl")}
+    cycles = macs = 0
+    Al = A.tolist()
+    Wl = W.tolist()
+    k0 = 0
+    while k0 < k:
+        k_len = min(R, k - k0)
+        m0 = 0
+        while m0 < m:
+            m_len = min(C, m - m0)
+            # Activation preload chain.
+            for c in range(C):
+                for r in range(R):
+                    tog = nz = 0
+                    p = 0
+                    if c < m_len:
+                        for t in range(r, R):
+                            rr = R - 1 - (t - r)
+                            vv = Al[m0 + c][k0 + rr] if rr < k_len else 0
+                            word = bus_word(vv, bh)
+                            tog += bin(p ^ word).count("1")
+                            nz += word != 0
+                            p = word
+                    stats["wl"][0] += tog
+                    stats["wl"][1] += R - nz
+                    stats["wl"][2] += R
+            # Weight stream rows.
+            for r in range(R):
+                tog = nz = 0
+                if r < k_len:
+                    p = 0
+                    for j in range(n):
+                        word = bus_word(Wl[k0 + r][j], bh)
+                        tog += bin(p ^ word).count("1")
+                        nz += word != 0
+                        p = word
+                    tog += bin(p).count("1")
+                stats["h"][0] += tog * C
+                stats["h"][1] += (pc - nz) * C
+                stats["h"][2] += pc * C
+            # Vertical psums.
+            for c in range(C):
+                toggles = [0] * R
+                nonzeros = [0] * R
+                prev_words = [0] * R
+                if c < m_len:
+                    for j in range(n):
+                        prefix = 0
+                        word = 0
+                        for r in range(k_len):
+                            prefix += Al[m0 + c][k0 + r] * Wl[k0 + r][j]
+                            word = bus_word(prefix, bv)
+                            toggles[r] += bin(prev_words[r] ^ word).count("1")
+                            nonzeros[r] += word != 0
+                            prev_words[r] = word
+                        for r in range(k_len, R):
+                            toggles[r] += bin(prev_words[r] ^ word).count("1")
+                            nonzeros[r] += word != 0
+                            prev_words[r] = word
+                    for r in range(R):
+                        toggles[r] += bin(prev_words[r]).count("1")
+                for r in range(R):
+                    stats["v"][0] += toggles[r]
+                    stats["v"][1] += pc - nonzeros[r]
+                    stats["v"][2] += pc
+            cycles += pc
+            macs += m_len * k_len * n
+            m0 += C
+        k0 += R
+    return y, stats, cycles, macs
+
+
+# ----------------------------------------------------------------------
+# IS engine: vectorized port of the blocked sim/is.rs algebra
+# ----------------------------------------------------------------------
+
+
+def simulate_is_numpy(R, C, bh, bv, A, W):
+    """Vectorized port of the blocked IS engine (sim/is.rs): closed-form
+    preload chain, memoized weight streams, prefix kernel with
+    pass-through tail scaling (vectorized over the full m axis — the
+    per-column chains depend only on the global m index and k-block)."""
+    m, k = A.shape
+    n = W.shape[1]
+    pc = is_pass_cycles(R, C, n)
+    mask_h = np.uint64((1 << bh) - 1)
+    mask_v = np.uint64((1 << bv) - 1)
+    A64 = A.astype(np.int64)
+    W64 = W.astype(np.int64)
+    y = A64 @ W64
+    k_blocks = blocks(k, R)
+    m_blocks = blocks(m, C)
+    h = [0, 0, 0]
+    wl = [0, 0, 0]
+    v = [0, 0, 0]
+
+    # Preload chain: closed form per pass (vectorized over columns).
+    # u[c, j] = block word j of column c (zero-padded past k_len);
+    #   Σ_r tog_r = R·pc(u[:,R-1]) + Σ_{j≤R-2} (j+1)·pc(u[:,j+1]^u[:,j])
+    #   Σ_r nz_r  = Σ_j (j+1)·(u[:,j] != 0)
+    for (k0, k_len) in k_blocks:
+        for (m0, m_len) in m_blocks:
+            u = np.zeros((m_len, R), dtype=np.uint64)
+            u[:, :k_len] = _u64(A64[m0 : m0 + m_len, k0 : k0 + k_len]) & mask_h
+            tog_tot = R * _pc64(u[:, R - 1]).astype(np.int64)
+            if R > 1:
+                e = _pc64(u[:, 1:] ^ u[:, :-1])  # transition into u[:, j], j<=R-2
+                wj = np.arange(1, R, dtype=np.int64)[None, :]
+                tog_tot = tog_tot + (e * wj).sum(axis=1)
+            wn = np.arange(1, R + 1, dtype=np.int64)[None, :]
+            nz_tot = ((u != 0).astype(np.int64) * wn).sum(axis=1)
+            wl[0] += int(tog_tot.sum())
+            wl[1] += m_len * R * R - int(nz_tot.sum()) + (C - m_len) * R * R
+            wl[2] += C * R * R
+
+    # Horizontal: memoized per k-block, scaled by the m-block replays.
+    for (k0, k_len) in k_blocks:
+        tog, nz = _stream_rows(W64[k0 : k0 + k_len], mask_h)
+        reps = C * len(m_blocks)
+        h[0] += tog * reps
+        h[1] += (R * pc - nz) * reps
+        h[2] += pc * R * reps
+
+    # Vertical: prefix kernel per k-block over the full m axis; tail
+    # rows replay row k_len-1; idle columns accounted per m-block.
+    y_check = np.zeros_like(y)
+    for (k0, k_len) in k_blocks:
+        prod = A64[:, k0 : k0 + k_len].T[:, :, None] * W64[k0 : k0 + k_len, None, :]
+        prefix = np.cumsum(prod, axis=0)  # (k_len, m, n)
+        words = _u64(prefix) & mask_v
+        prev = np.concatenate(
+            [np.zeros((k_len, m, 1), dtype=np.uint64), words[:, :, :-1]], axis=2
+        )
+        if n > 0:
+            tog = _pc64(prev ^ words).sum(axis=2) + _pc64(words[:, :, -1])
+        else:
+            tog = np.zeros((k_len, m), dtype=np.int64)
+        nz = (words != 0).sum(axis=2).astype(np.int64)
+        tail = R - k_len
+        v[0] += int(tog.sum()) + tail * int(tog[-1].sum())
+        v[1] += int((pc - nz).sum()) + tail * int((pc - nz[-1]).sum())
+        v[2] += pc * R * m
+        y_check += prefix[-1]
+    for (_, m_len) in m_blocks:
+        if m_len < C:
+            v[1] += (C - m_len) * pc * R * len(k_blocks)
+            v[2] += (C - m_len) * pc * R * len(k_blocks)
+    assert np.array_equal(y_check, y), "IS prefix outputs must equal A @ W"
+
+    stats = {"h": h, "v": v, "wl": wl}
+    return y, stats, len(k_blocks) * len(m_blocks) * pc, m * k * n
+
+
+# ----------------------------------------------------------------------
 # serve::cache::digest_i64 (FNV-1a, length-prefixed, LE)
 # ----------------------------------------------------------------------
 
@@ -452,6 +792,74 @@ def selfcheck():
     print("selfcheck: scalar == vectorized on all cases, invariants hold")
 
 
+def selfcheck_dataflows():
+    """Differential for the OS/IS engines: the scalar transliterations of
+    the frozen Rust baselines vs the vectorized ports of the blocked
+    engines' closed forms (memoized streams, drain/preload closed forms,
+    pass-through tail scaling). Agreement here validates exactly the
+    algebra sim/os.rs and sim/is.rs rely on."""
+    rng = Rng(4242)
+    cases = [
+        (4, 4, 8, 6, 4, 4),
+        (4, 4, 8, 7, 10, 9),     # ragged multi-pass
+        (8, 4, 8, 5, 8, 4),      # non-square array
+        (4, 8, 8, 9, 3, 11),     # wide array, K < R
+        (5, 3, 12, 9, 11, 7),    # odd dims
+        (4, 4, 16, 13, 33, 40),  # multi-block at full width
+        (4, 4, 8, 1, 1, 1),      # degenerate GEMM
+        (3, 5, 8, 2, 14, 2),     # deep reduction, narrow output
+    ]
+    for (R, C, bits, m, k, n) in cases:
+        hi = (1 << (bits - 1)) - 1
+        guard = (R - 1).bit_length() if R > 1 else 0
+        bv = 2 * bits + guard
+        A = np.array(
+            [rng.next_u64() % (2 * hi + 1) - hi for _ in range(m * k)], dtype=np.int64
+        ).reshape(m, k)
+        W = np.array(
+            [rng.next_u64() % (2 * hi + 1) - hi for _ in range(k * n)], dtype=np.int64
+        ).reshape(k, n)
+        for (name, scalar_fn, numpy_fn, pcyc, wl_obs) in (
+            (
+                "OS",
+                simulate_os_scalar,
+                simulate_os_numpy,
+                os_pass_cycles(R, k),
+                # OS weights stream for the whole pass on R·C segments.
+                lambda passes, pcy: passes * pcy * R * C,
+            ),
+            (
+                "IS",
+                simulate_is_scalar,
+                simulate_is_numpy,
+                is_pass_cycles(R, C, n),
+                # IS preload chain: R words per register per pass.
+                lambda passes, _pcy: passes * R * R * C,
+            ),
+        ):
+            ys, ss, cs, ms = scalar_fn(R, C, bits, bv, A, W)
+            yv, sv, cv, mv = numpy_fn(R, C, bits, bv, A, W)
+            ctx = f"{name} {R}x{C} {m}x{k}x{n}"
+            assert np.array_equal(ys, yv), f"{ctx}: y mismatch"
+            assert ss == sv, f"{ctx}: stats mismatch: {ss} vs {sv}"
+            assert (cs, ms) == (cv, mv), f"{ctx}: cycles/macs mismatch"
+            assert np.array_equal(yv, A @ W), f"{ctx}: outputs must equal matmul"
+            # Conservation closed forms (mirror the Rust property suite).
+            if name == "OS":
+                passes = math.ceil(m / R) * math.ceil(n / C)
+            else:
+                passes = math.ceil(k / R) * math.ceil(m / C)
+            assert cv == passes * pcyc, f"{ctx}: cycle closed form"
+            assert sv["h"][2] == passes * pcyc * R * C, f"{ctx}: h obs"
+            assert sv["v"][2] == passes * pcyc * R * C, f"{ctx}: v obs"
+            assert sv["wl"][2] == wl_obs(passes, pcyc), f"{ctx}: wl obs"
+            for key, bits_k in (("h", bits), ("v", bv), ("wl", bits)):
+                tog, zer, obs = sv[key]
+                assert 0 <= zer <= obs, f"{ctx}: {key} zeros"
+                assert 0 <= tog <= obs * bits_k, f"{ctx}: {key} toggle capacity"
+    print("selfcheck: OS/IS scalar == vectorized on all cases, invariants hold")
+
+
 def compute_doc() -> dict:
     R, C, BH, BV = 32, 32, 16, 37
     area = pe_area_um2(BH, BV)
@@ -547,13 +955,86 @@ def compare_against(path: Path, doc: dict) -> None:
     print(f"{path}: checked-in fixture matches this generator value-for-value")
 
 
+def compute_dataflows_doc() -> dict:
+    """OS/IS golden statistics for the same Table-I layers and golden
+    operand scheme as table1.json, generated by the vectorized ports
+    (differentially validated by selfcheck_dataflows). Pure integers —
+    the OS/IS power paths are already covered by the sweep tier."""
+    R, C, BH, BV = 32, 32, 16, 37
+    layers = []
+    for idx, (name, (m, k, n)) in enumerate(TABLE1):
+        A = golden_matrix(m, k, INPUT_SEED + 1000 + idx, A_SPARSITY_PCT)
+        W = golden_matrix(k, n, INPUT_SEED + 2000 + idx, 0)
+        entry = {"name": name, "gemm": [m, k, n]}
+        for key, fn, passes, pcyc in (
+            (
+                "os",
+                simulate_os_numpy,
+                math.ceil(m / R) * math.ceil(n / C),
+                os_pass_cycles(R, k),
+            ),
+            (
+                "is",
+                simulate_is_numpy,
+                math.ceil(k / R) * math.ceil(m / C),
+                is_pass_cycles(R, C, n),
+            ),
+        ):
+            y, stats, cycles, macs = fn(R, C, BH, BV, A, W)
+            assert np.array_equal(y, A.astype(np.int64) @ W.astype(np.int64))
+            assert cycles == passes * pcyc and macs == m * k * n
+            assert stats["h"][2] == passes * pcyc * R * C
+            assert stats["v"][2] == passes * pcyc * R * C
+            entry[key] = {
+                "horizontal": dict(
+                    zip(("toggles", "zero_words", "observations"), stats["h"])
+                ),
+                "vertical": dict(
+                    zip(("toggles", "zero_words", "observations"), stats["v"])
+                ),
+                "weight_load": dict(
+                    zip(("toggles", "zero_words", "observations"), stats["wl"])
+                ),
+                "cycles": cycles,
+                "macs": macs,
+                "y_digest": format(digest_i64(0, y.reshape(-1)), "016x"),
+            }
+            a_act = stats["h"][0] / (stats["h"][2] * BH)
+            v_act = stats["v"][0] / (stats["v"][2] * BV)
+            print(
+                f"{name}/{key}: {m}x{k}x{n}  a_h={a_act:.3f} a_v={v_act:.3f} "
+                f"cycles={cycles}"
+            )
+        # Cross-engine invariant: OS and IS see the same exact product.
+        assert entry["os"]["y_digest"] == entry["is"]["y_digest"]
+        layers.append(entry)
+    return {
+        "description": (
+            "Golden OS/IS bus statistics for the Table-I layers on the paper's "
+            "32x32 array (same golden operand scheme as table1.json). Regenerate "
+            "with UPDATE_GOLDEN=1 cargo test --test golden_dataflows."
+        ),
+        "sa": {"rows": R, "cols": C, "input_bits": BH, "acc_bits": BV},
+        "input_seed": INPUT_SEED,
+        "a_sparsity_pct": A_SPARSITY_PCT,
+        "layers": layers,
+    }
+
+
 if __name__ == "__main__":
     selfcheck()
-    fixture = Path(__file__).resolve().parent.parent / "rust/tests/golden/table1.json"
+    selfcheck_dataflows()
+    golden_dir = Path(__file__).resolve().parent.parent / "rust/tests/golden"
+    fixture = golden_dir / "table1.json"
     doc = compute_doc()
+    df_fixture = golden_dir / "dataflows.json"
+    df_doc = compute_dataflows_doc()
     if "--check-only" in sys.argv:
         compare_against(fixture, doc)
+        compare_against(df_fixture, df_doc)
     else:
-        fixture.parent.mkdir(parents=True, exist_ok=True)
+        golden_dir.mkdir(parents=True, exist_ok=True)
         fixture.write_text(json.dumps(doc, sort_keys=True, separators=(",", ":")))
         print(f"wrote {fixture}")
+        df_fixture.write_text(json.dumps(df_doc, sort_keys=True, separators=(",", ":")))
+        print(f"wrote {df_fixture}")
