@@ -1,0 +1,96 @@
+//! Bench: fleet serving throughput → `BENCH_fleet.json`.
+//!
+//! Times the three fleet stages separately so a regression localizes:
+//!
+//! * **provisioning** — the explorer sweep + frontier energy ranking at
+//!   a small budget (the fleet's cold-start cost);
+//! * **per-policy serving** — one policy run over a fixed trace on a
+//!   prebuilt plan, fresh servers per iteration (so every iteration
+//!   pays its own cold simulations — the worst case);
+//! * **warm serving** — the same run on a persistent fleet whose
+//!   result caches stay hot across iterations (the steady-state case).
+//!
+//! Derived notes record requests/second per policy, the warm/cold
+//! ratio, and the headline interconnect margins, so CI tracks both the
+//! performance and the *quality* trajectory of the fleet per commit.
+
+use asymm_sa::bench_util::Bench;
+use asymm_sa::explore::WorkloadKind;
+use asymm_sa::fleet::{
+    build_trace, modeled_knobs, provision, run_fleet_comparison, run_policy, Fleet,
+    FleetConfig, RoutePolicy, HETEROGENEOUS,
+};
+use asymm_sa::power::TechParams;
+
+fn main() {
+    let mut b = Bench::new("fleet_throughput");
+    let cfg = FleetConfig {
+        pe_budget: 64,
+        arrays: 2,
+        workload: WorkloadKind::Synth,
+        max_layers: 2,
+        requests: 32,
+        unique_inputs: 2,
+        seed: 2023,
+        window: 4,
+        cache_capacity: 64,
+        workers: 0,
+        spill_macs: 0,
+        gap_us: 0.0,
+    };
+
+    b.case("provision_64pes_2arrays", || {
+        provision(&cfg).expect("provision")
+    });
+
+    let plan = provision(&cfg).expect("provision");
+    let trace = build_trace(&cfg).expect("trace");
+    let (gap, spill) = modeled_knobs(&cfg, &plan, &trace);
+    let tech = TechParams::default();
+
+    let mut cold_affine = 0.0f64;
+    for policy in RoutePolicy::ALL {
+        let mean_ns = b
+            .case(&format!("cold_{}_{}req", policy.name(), cfg.requests), || {
+                let fleet = Fleet::build(HETEROGENEOUS, &plan.selected, &cfg).expect("fleet");
+                run_policy(&fleet, policy, &trace, &cfg, gap, spill, &tech).expect("run")
+            })
+            .mean_ns;
+        b.throughput(cfg.requests as f64, "req");
+        if policy == RoutePolicy::ShapeAffine {
+            cold_affine = mean_ns;
+        }
+    }
+    assert!(cold_affine > 0.0, "RoutePolicy::ALL must include ShapeAffine");
+
+    // Steady state: persistent servers, hot result caches.
+    let warm_fleet = Fleet::build(HETEROGENEOUS, &plan.selected, &cfg).expect("fleet");
+    let warm = b
+        .case("warm_shape_affine_32req", || {
+            run_policy(
+                &warm_fleet,
+                RoutePolicy::ShapeAffine,
+                &trace,
+                &cfg,
+                gap,
+                spill,
+                &tech,
+            )
+            .expect("run")
+        })
+        .mean_ns;
+    b.throughput(cfg.requests as f64, "req");
+    b.note("warm_over_cold_speedup", cold_affine / warm);
+
+    // Quality trajectory: the full comparison's headline margins.
+    let report = run_fleet_comparison(&cfg).expect("comparison");
+    let h = report.headline();
+    b.note("interconnect_margin_pct", 100.0 * h.interconnect_margin);
+    b.note(
+        "affine_vs_round_robin_pct",
+        100.0 * h.affine_vs_round_robin,
+    );
+
+    b.finish();
+    b.write_json("BENCH_fleet.json").expect("write BENCH_fleet.json");
+}

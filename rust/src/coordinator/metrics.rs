@@ -116,6 +116,18 @@ pub struct MetricsSnapshot {
     pub engines: [EngineLane; 3],
 }
 
+/// Convert second-valued latency samples into the stable sorted-µs view
+/// the snapshots expose: round each sample to integer microseconds and
+/// sort ascending. The result is a function of the sample multiset only
+/// — the fleet layer uses this for its modeled-latency lanes so that
+/// per-policy percentiles are worker-count-deterministic by
+/// construction.
+pub fn sorted_micros<I: IntoIterator<Item = f64>>(secs: I) -> Vec<u64> {
+    let mut v: Vec<u64> = secs.into_iter().map(|s| (s * 1e6).round() as u64).collect();
+    v.sort_unstable();
+    v
+}
+
 /// Nearest-rank percentile over an ascending-sorted slice; `p ∈ [0, 1]`.
 /// Returns 0 for an empty slice. Deterministic: depends only on the
 /// sorted values, never on arrival order.
@@ -350,6 +362,17 @@ mod tests {
         assert_eq!(s.cache_lookups, 3);
         assert_eq!(s.cache_hits, 2);
         assert!((s.cache_hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sorted_micros_is_order_independent() {
+        let a = sorted_micros([0.003, 0.001, 0.002]);
+        let b = sorted_micros([0.002, 0.003, 0.001]);
+        assert_eq!(a, b);
+        assert_eq!(a, vec![1000, 2000, 3000]);
+        // Rounds to the nearest microsecond; empty stays empty.
+        assert_eq!(sorted_micros([1.4e-6, 1.6e-6]), vec![1, 2]);
+        assert!(sorted_micros(Vec::<f64>::new()).is_empty());
     }
 
     #[test]

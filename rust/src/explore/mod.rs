@@ -310,6 +310,12 @@ pub struct SweepOutput {
 }
 
 impl SweepOutput {
+    /// Pareto-frontier points of workload index `wi`, in ascending
+    /// cycle order — what the fleet provisioner selects from.
+    pub fn frontier_points(&self, wi: usize) -> Vec<&ConfigPoint> {
+        self.pareto[wi].iter().map(|&i| &self.points[i]).collect()
+    }
+
     /// Headline numbers for workload index `wi` of `cfg.workloads`.
     pub fn headline(&self, cfg: &SweepConfig, wi: usize) -> Headline {
         let kind = cfg.workloads[wi];

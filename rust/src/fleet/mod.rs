@@ -1,0 +1,914 @@
+//! Fleet serving: a heterogeneous multi-array cluster provisioned from
+//! the Pareto frontier.
+//!
+//! The paper's core result is that the best floorplan is
+//! workload-dependent; the explorer ([`crate::explore`]) computes the
+//! per-workload Pareto frontier of array geometries, and the serve layer
+//! ([`crate::serve`]) runs request traffic on *one* array. This module
+//! closes the loop: serve traffic on a **fleet** of differently shaped
+//! asymmetric arrays and route each request to the array whose geometry
+//! is cheapest for its GEMM shape (the SISA-style multi-array scaling
+//! argument composed with the paper's per-shape optimality argument).
+//!
+//! Four stages:
+//!
+//! 1. **Provisioning** ([`provision`]) — run the explorer at a per-array
+//!    PE budget, rank the Pareto frontier by workload interconnect
+//!    *energy*, take the K cheapest points as the heterogeneous fleet
+//!    (each at its swept best PE aspect), and K copies of the
+//!    most-square geometry at W/H = 1 as the equal-total-PE homogeneous
+//!    baseline. Every array is wrapped in its own [`Server`] with its
+//!    engine-salted result cache.
+//! 2. **Routing** ([`router`]) — `round_robin`, `least_loaded` (by
+//!    queued MAC count) and `shape_affine`, which scores arrays with the
+//!    closed-form interconnect-energy model and spills to the
+//!    least-loaded array past a queue bound.
+//! 3. **Execution** ([`run_policy`]) — deterministic admission of a
+//!    seeded scenario trace ([`crate::serve::build_requests`]) into
+//!    per-array bounded queues that flush through
+//!    [`Server::process_batch`] at the admission window. Latency is
+//!    *modeled*: requests arrive on a fixed inter-arrival gap and each
+//!    array drains at its silicon rate (closed-form WS cycles at the
+//!    array clock), so queueing delay, spill decisions and the reported
+//!    percentiles are pure functions of the trace — byte-identical at
+//!    any worker count. Wall-clock throughput is measured too, but only
+//!    printed, never serialized.
+//! 4. **Reporting** — fleet-level rollups (per-array utilization,
+//!    per-policy modeled-latency percentiles as sorted snapshots, exact
+//!    interconnect/total energy from [`crate::power::evaluate`] over
+//!    every response) serialized into `FLEET_summary.json`
+//!    ([`fleet_bench`]) and a markdown comparison
+//!    ([`crate::report::fleet_markdown`]); `repro fleet` drives it all.
+//!
+//! Energy, not instantaneous power, is the rollup: a serving fleet pays
+//! `power × time` per request, and ranking by power alone would crown
+//! the frontier's slow tail (see [`provision`] docs).
+
+pub mod provision;
+pub mod router;
+
+pub use provision::{provision, ArraySpec, FleetPlan};
+pub use router::{RoutePolicy, Router};
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use crate::bench_util::Bench;
+use crate::coordinator::metrics::{percentile_micros, sorted_micros};
+use crate::error::{Error, Result};
+use crate::explore::WorkloadKind;
+use crate::floorplan::PeGeometry;
+use crate::power::{self, TechParams};
+use crate::serve::{
+    build_requests, CacheStats, InferRequest, ScenarioConfig, ServeConfig, Server,
+};
+use crate::util::json::{obj, Json};
+
+/// Label of the frontier-provisioned fleet in runs and summaries.
+pub const HETEROGENEOUS: &str = "heterogeneous";
+/// Label of the homogeneous square baseline fleet.
+pub const SQUARE: &str = "square";
+
+/// Everything one fleet comparison varies and how.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// PE budget **per array** (total PEs = budget × arrays, equal for
+    /// both fleets).
+    pub pe_budget: usize,
+    /// Arrays per fleet (K).
+    pub arrays: usize,
+    /// Workload the fleet is provisioned for and served with.
+    pub workload: WorkloadKind,
+    /// Per-workload layer cap for provisioning and the trace mix
+    /// (0 = all layers) — the CI smoke knob.
+    pub max_layers: usize,
+    /// Requests in the scenario trace.
+    pub requests: usize,
+    /// Distinct activation variants per layer (repeat traffic for the
+    /// per-array result caches).
+    pub unique_inputs: usize,
+    /// Scenario seed (provisioning operands + trace).
+    pub seed: u64,
+    /// Per-array admission window: a queue flushes through
+    /// [`Server::process_batch`] when it holds this many requests.
+    pub window: usize,
+    /// Per-array result-cache bound in entries.
+    pub cache_capacity: usize,
+    /// Per-array coordinator workers (0 = all CPUs, negotiated per
+    /// batch). Never serialized: the summary is worker-count-invariant.
+    pub workers: usize,
+    /// `ShapeAffine` spill bound on queued MACs; 0 = auto (4× the mean
+    /// trace request). To make spill effectively unreachable, set a
+    /// bound larger than the trace's total MACs (e.g. `u64::MAX`).
+    pub spill_macs: u64,
+    /// Modeled inter-arrival gap in µs; 0 = auto (mean square-fleet
+    /// service time ÷ K × 1.2, i.e. the square fleet runs just under
+    /// saturation).
+    pub gap_us: f64,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            pe_budget: 1024,
+            arrays: 3,
+            workload: WorkloadKind::Table1,
+            max_layers: 0,
+            requests: 96,
+            unique_inputs: 2,
+            seed: 2023,
+            window: 8,
+            cache_capacity: 64,
+            workers: 0,
+            spill_macs: 0,
+            gap_us: 0.0,
+        }
+    }
+}
+
+impl FleetConfig {
+    /// Validate invariants (called by [`run_fleet_comparison`]).
+    pub fn validate(&self) -> Result<()> {
+        if self.pe_budget == 0 {
+            return Err(Error::config("pe_budget must be positive"));
+        }
+        if self.arrays == 0 {
+            return Err(Error::config("fleet needs at least one array"));
+        }
+        if self.requests == 0 {
+            return Err(Error::config("scenario needs at least one request"));
+        }
+        if !self.gap_us.is_finite() || self.gap_us < 0.0 {
+            return Err(Error::config("gap_us must be finite and >= 0"));
+        }
+        Ok(())
+    }
+}
+
+/// One provisioned array wrapped in its serving front-end.
+pub struct FleetArray {
+    /// The array's provisioning decision.
+    pub spec: ArraySpec,
+    /// Its server (own coordinator pool + engine-salted result cache).
+    pub server: Server,
+}
+
+/// A fleet: K servers behind one router.
+pub struct Fleet {
+    label: String,
+    arrays: Vec<FleetArray>,
+}
+
+impl Fleet {
+    /// Wrap provisioned specs in fresh servers (fresh caches — runs on
+    /// the same specs stay independently comparable).
+    pub fn build(label: &str, specs: &[ArraySpec], cfg: &FleetConfig) -> Result<Fleet> {
+        if specs.is_empty() {
+            return Err(Error::config("fleet needs at least one array"));
+        }
+        let arrays = specs
+            .iter()
+            .map(|spec| {
+                let server = Server::new(ServeConfig {
+                    sa: spec.sa.clone(),
+                    workers: cfg.workers,
+                    cache_capacity: cfg.cache_capacity,
+                    window: cfg.window,
+                    engine: spec.engine,
+                });
+                FleetArray {
+                    spec: spec.clone(),
+                    server,
+                }
+            })
+            .collect();
+        Ok(Fleet {
+            label: label.to_string(),
+            arrays,
+        })
+    }
+
+    /// Fleet label (`heterogeneous` / `square`).
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    /// The fleet's arrays.
+    pub fn arrays(&self) -> &[FleetArray] {
+        &self.arrays
+    }
+}
+
+/// Build the deterministic scenario trace for a fleet configuration:
+/// the workload mix (capped at `max_layers`) through the serve layer's
+/// seeded request generator.
+pub fn build_trace(cfg: &FleetConfig) -> Result<Vec<InferRequest>> {
+    let mut mix = cfg.workload.layers();
+    if cfg.max_layers > 0 && mix.len() > cfg.max_layers {
+        mix.truncate(cfg.max_layers);
+    }
+    let scn = ScenarioConfig {
+        seed: cfg.seed,
+        requests: cfg.requests,
+        unique_inputs: cfg.unique_inputs,
+    };
+    build_requests(&scn, &mix)
+}
+
+/// Per-array outcome of one policy run.
+#[derive(Debug, Clone)]
+pub struct ArrayRun {
+    /// Display label of the array.
+    pub label: String,
+    /// Array rows.
+    pub rows: usize,
+    /// Array cols.
+    pub cols: usize,
+    /// PE aspect ratio.
+    pub aspect: f64,
+    /// Requests routed to this array.
+    pub requests: u64,
+    /// MACs served (cache hits included: served work, not engine work).
+    pub macs: u64,
+    /// Array cycles across served responses.
+    pub sim_cycles: u64,
+    /// Served MACs / (PEs × served cycles); 0 for an idle array.
+    pub utilization: f64,
+    /// Peak modeled backlog: the most requests admitted to this array
+    /// but not yet modeled-finished at any admission instant — the
+    /// congestion signal the spill bound acts against.
+    pub queue_peak: usize,
+    /// Exact interconnect energy of this array's responses (µJ).
+    pub interconnect_uj: f64,
+    /// Exact total energy (µJ).
+    pub total_uj: f64,
+    /// Silicon seconds across responses.
+    pub silicon_secs: f64,
+    /// The array's result-cache statistics after the run.
+    pub cache: CacheStats,
+}
+
+/// One `(fleet, policy)` run over the trace.
+#[derive(Debug, Clone)]
+pub struct PolicyRun {
+    /// Fleet label ([`HETEROGENEOUS`] / [`SQUARE`]).
+    pub fleet: String,
+    /// Routing policy.
+    pub policy: RoutePolicy,
+    /// Per-array rollups, in array index order.
+    pub per_array: Vec<ArrayRun>,
+    /// Modeled per-request latencies in µs, sorted ascending — the
+    /// stable snapshot percentiles are computed from (arrival-order
+    /// independent by construction).
+    pub latency_sorted_us: Vec<u64>,
+    /// `ShapeAffine` spill count (0 for the other policies).
+    pub spills: u64,
+    /// Fleet interconnect energy (µJ): Σ per-response exact
+    /// interconnect power × silicon time.
+    pub interconnect_uj: f64,
+    /// Fleet total energy (µJ).
+    pub total_uj: f64,
+    /// Fleet silicon seconds.
+    pub silicon_secs: f64,
+    /// Measured wall-clock seconds of the run (printed, never
+    /// serialized: varies with worker count and machine).
+    pub wall_secs: f64,
+}
+
+impl PolicyRun {
+    /// Modeled latency percentile in µs (nearest rank over the sorted
+    /// snapshot).
+    pub fn latency_us(&self, p: f64) -> u64 {
+        percentile_micros(&self.latency_sorted_us, p)
+    }
+
+    /// Mean modeled latency in µs.
+    pub fn mean_latency_us(&self) -> f64 {
+        if self.latency_sorted_us.is_empty() {
+            return 0.0;
+        }
+        self.latency_sorted_us.iter().sum::<u64>() as f64 / self.latency_sorted_us.len() as f64
+    }
+
+    /// Time-averaged fleet interconnect power (mW) over silicon time.
+    pub fn avg_interconnect_mw(&self) -> f64 {
+        if self.silicon_secs <= 0.0 {
+            return 0.0;
+        }
+        self.interconnect_uj / self.silicon_secs * 1e-3
+    }
+
+    /// Time-averaged fleet total power (mW).
+    pub fn avg_total_mw(&self) -> f64 {
+        if self.silicon_secs <= 0.0 {
+            return 0.0;
+        }
+        self.total_uj / self.silicon_secs * 1e-3
+    }
+}
+
+/// Mutable per-array accumulators of one policy run.
+#[derive(Default)]
+struct ArrayAcc {
+    requests: u64,
+    macs: u64,
+    sim_cycles: u64,
+    queue_peak: usize,
+    interconnect_uj: f64,
+    total_uj: f64,
+    silicon_secs: f64,
+}
+
+/// Flush one array's pending queue through its server and fold the
+/// responses into the accumulators.
+fn flush_array(
+    arr: &FleetArray,
+    geom: &PeGeometry,
+    tech: &TechParams,
+    pending: &mut Vec<InferRequest>,
+    acc: &mut ArrayAcc,
+) -> Result<()> {
+    if pending.is_empty() {
+        return Ok(());
+    }
+    let batch = std::mem::take(pending);
+    let responses = arr.server.process_batch(&batch)?;
+    for r in &responses {
+        acc.macs += r.sim.macs;
+        acc.sim_cycles += r.sim.cycles;
+        let p = power::evaluate(&arr.spec.sa, geom, tech, &r.sim);
+        let secs = r.sim.silicon_seconds(&arr.spec.sa);
+        // mW × s = mJ; ×1e3 → µJ.
+        acc.interconnect_uj += p.interconnect_mw() * secs * 1e3;
+        acc.total_uj += p.total_mw() * secs * 1e3;
+        acc.silicon_secs += secs;
+    }
+    Ok(())
+}
+
+/// Run one policy over the trace on one fleet.
+///
+/// Admission model: request `i` arrives at `i × gap_secs`; the router
+/// sees each array's *outstanding* queued MACs (admitted minus modeled-
+/// finished at the arrival instant); the chosen array's modeled busy
+/// horizon advances by the closed-form service time. Queues flush
+/// through [`Server::process_batch`] every `window` admissions (and at
+/// end of trace), so the engines simulate exactly the routed work.
+pub fn run_policy(
+    fleet: &Fleet,
+    policy: RoutePolicy,
+    trace: &[InferRequest],
+    cfg: &FleetConfig,
+    gap_secs: f64,
+    spill_macs: u64,
+    tech: &TechParams,
+) -> Result<PolicyRun> {
+    let n = fleet.arrays.len();
+    let window = cfg.window.max(1);
+    let geoms: Vec<PeGeometry> = fleet
+        .arrays
+        .iter()
+        .map(|a| a.spec.geometry())
+        .collect::<Result<Vec<_>>>()?;
+
+    let t_wall = Instant::now();
+    let mut router = Router::new(policy);
+    let mut busy_until = vec![0.0f64; n];
+    let mut inflight: Vec<VecDeque<(f64, u64)>> = (0..n).map(|_| VecDeque::new()).collect();
+    let mut outstanding = vec![0u64; n];
+    let mut pending: Vec<Vec<InferRequest>> = (0..n).map(|_| Vec::new()).collect();
+    let mut accs: Vec<ArrayAcc> = (0..n).map(|_| ArrayAcc::default()).collect();
+    let mut lat_secs: Vec<f64> = Vec::with_capacity(trace.len());
+    // Shape-independent factor of the ShapeAffine score, once per
+    // array; the per-request cost buffer is only filled when the policy
+    // actually consults it.
+    let cycle_fj: Vec<f64> = fleet
+        .arrays
+        .iter()
+        .map(|a| a.spec.cycle_cost_fj(tech))
+        .collect();
+    let mut costs = vec![0.0f64; n];
+    // Pin the hoisted-score identity once per array: the in-loop
+    // product below must be [`ArraySpec::shape_cost_fj`] exactly.
+    if let Some(first) = trace.first() {
+        let s = first.shape();
+        for (a, arr) in fleet.arrays.iter().enumerate() {
+            debug_assert_eq!(
+                cycle_fj[a] * arr.spec.modeled_cycles(&s) as f64,
+                arr.spec.shape_cost_fj(&s, tech)
+            );
+        }
+    }
+
+    for (i, req) in trace.iter().enumerate() {
+        let t = i as f64 * gap_secs;
+        // Retire modeled completions up to the arrival instant.
+        for a in 0..n {
+            while let Some(&(finish, macs)) = inflight[a].front() {
+                if finish <= t {
+                    outstanding[a] -= macs;
+                    inflight[a].pop_front();
+                } else {
+                    break;
+                }
+            }
+        }
+        let shape = req.shape();
+        if policy == RoutePolicy::ShapeAffine {
+            for (a, arr) in fleet.arrays.iter().enumerate() {
+                costs[a] = cycle_fj[a] * arr.spec.modeled_cycles(&shape) as f64;
+            }
+        }
+        let a = router.route(&costs, &outstanding, spill_macs);
+
+        let service = fleet.arrays[a].spec.modeled_service_secs(&shape);
+        let start = if busy_until[a] > t { busy_until[a] } else { t };
+        let done = start + service;
+        busy_until[a] = done;
+        let macs = req.macs();
+        inflight[a].push_back((done, macs));
+        outstanding[a] += macs;
+        lat_secs.push(done - t);
+
+        accs[a].requests += 1;
+        if inflight[a].len() > accs[a].queue_peak {
+            accs[a].queue_peak = inflight[a].len();
+        }
+        pending[a].push(req.clone());
+        if pending[a].len() >= window {
+            flush_array(&fleet.arrays[a], &geoms[a], tech, &mut pending[a], &mut accs[a])?;
+        }
+    }
+    for a in 0..n {
+        flush_array(&fleet.arrays[a], &geoms[a], tech, &mut pending[a], &mut accs[a])?;
+    }
+
+    let per_array: Vec<ArrayRun> = fleet
+        .arrays
+        .iter()
+        .zip(&accs)
+        .map(|(arr, acc)| {
+            let pes = arr.spec.sa.num_pes() as f64;
+            ArrayRun {
+                label: arr.spec.label(),
+                rows: arr.spec.sa.rows,
+                cols: arr.spec.sa.cols,
+                aspect: arr.spec.aspect,
+                requests: acc.requests,
+                macs: acc.macs,
+                sim_cycles: acc.sim_cycles,
+                utilization: if acc.sim_cycles > 0 {
+                    acc.macs as f64 / (pes * acc.sim_cycles as f64)
+                } else {
+                    0.0
+                },
+                queue_peak: acc.queue_peak,
+                interconnect_uj: acc.interconnect_uj,
+                total_uj: acc.total_uj,
+                silicon_secs: acc.silicon_secs,
+                cache: arr.server.cache_stats(),
+            }
+        })
+        .collect();
+
+    Ok(PolicyRun {
+        fleet: fleet.label.clone(),
+        policy,
+        latency_sorted_us: sorted_micros(lat_secs),
+        spills: router.spills(),
+        interconnect_uj: per_array.iter().map(|a| a.interconnect_uj).sum(),
+        total_uj: per_array.iter().map(|a| a.total_uj).sum(),
+        silicon_secs: per_array.iter().map(|a| a.silicon_secs).sum(),
+        per_array,
+        wall_secs: t_wall.elapsed().as_secs_f64(),
+    })
+}
+
+/// Headline comparison the acceptance criteria pin: the
+/// `ShapeAffine`-routed heterogeneous fleet vs the best homogeneous
+/// square run, and `ShapeAffine` vs `RoundRobin` within the
+/// heterogeneous fleet.
+#[derive(Debug, Clone)]
+pub struct FleetHeadline {
+    /// Interconnect energy of `heterogeneous + shape_affine` (µJ).
+    pub het_interconnect_uj: f64,
+    /// Minimum interconnect energy over the square fleet's runs (µJ) —
+    /// routing cannot change square-fleet power (identical arrays), so
+    /// this is the square fleet's number up to float accumulation order.
+    pub square_interconnect_uj: f64,
+    /// `1 − het/square` on interconnect energy.
+    pub interconnect_margin: f64,
+    /// Time-averaged interconnect power of the het affine run (mW).
+    pub het_avg_interconnect_mw: f64,
+    /// Time-averaged interconnect power of the square reference (mW).
+    pub square_avg_interconnect_mw: f64,
+    /// `1 − het/square` on time-averaged interconnect power.
+    pub power_margin: f64,
+    /// `1 − affine/round_robin` on heterogeneous interconnect energy.
+    pub affine_vs_round_robin: f64,
+    /// Modeled p99 latency of the het affine run (µs).
+    pub het_p99_us: u64,
+    /// Best modeled p99 among the square runs (µs).
+    pub square_p99_us: u64,
+}
+
+/// Everything one `repro fleet` comparison produces.
+#[derive(Debug)]
+pub struct FleetReport {
+    /// The provisioning decision both fleets came from.
+    pub plan: FleetPlan,
+    /// Requests in the trace.
+    pub requests: usize,
+    /// Modeled inter-arrival gap used (µs).
+    pub gap_us: f64,
+    /// `ShapeAffine` spill bound used (MACs).
+    pub spill_macs: u64,
+    /// All `(fleet, policy)` runs: heterogeneous then square, each in
+    /// [`RoutePolicy::ALL`] order.
+    pub runs: Vec<PolicyRun>,
+}
+
+impl FleetReport {
+    /// The run of one `(fleet, policy)` pair.
+    pub fn run(&self, fleet: &str, policy: RoutePolicy) -> Option<&PolicyRun> {
+        self.runs
+            .iter()
+            .find(|r| r.fleet == fleet && r.policy == policy)
+    }
+
+    /// Compute the headline comparison.
+    pub fn headline(&self) -> FleetHeadline {
+        let het = self
+            .run(HETEROGENEOUS, RoutePolicy::ShapeAffine)
+            .expect("comparison always runs heterogeneous/shape_affine");
+        let rr = self
+            .run(HETEROGENEOUS, RoutePolicy::RoundRobin)
+            .expect("comparison always runs heterogeneous/round_robin");
+        let squares: Vec<&PolicyRun> =
+            self.runs.iter().filter(|r| r.fleet == SQUARE).collect();
+        assert!(!squares.is_empty(), "comparison always runs the square fleet");
+        let square = squares
+            .iter()
+            .copied()
+            .min_by(|a, b| a.interconnect_uj.total_cmp(&b.interconnect_uj))
+            .expect("non-empty");
+        let square_p99 = squares
+            .iter()
+            .map(|r| r.latency_us(0.99))
+            .min()
+            .expect("non-empty");
+        FleetHeadline {
+            het_interconnect_uj: het.interconnect_uj,
+            square_interconnect_uj: square.interconnect_uj,
+            interconnect_margin: 1.0 - het.interconnect_uj / square.interconnect_uj,
+            het_avg_interconnect_mw: het.avg_interconnect_mw(),
+            square_avg_interconnect_mw: square.avg_interconnect_mw(),
+            power_margin: 1.0 - het.avg_interconnect_mw() / square.avg_interconnect_mw(),
+            affine_vs_round_robin: 1.0 - het.interconnect_uj / rr.interconnect_uj,
+            het_p99_us: het.latency_us(0.99),
+            square_p99_us: square_p99,
+        }
+    }
+}
+
+/// Derive the modeled knobs a comparison runs with: `(gap_secs,
+/// spill_macs)` — the configured values, or the deterministic automatic
+/// formulas when 0.
+pub fn modeled_knobs(cfg: &FleetConfig, plan: &FleetPlan, trace: &[InferRequest]) -> (f64, u64) {
+    let gap_secs = if cfg.gap_us > 0.0 {
+        cfg.gap_us * 1e-6
+    } else {
+        // The square fleet runs just under saturation: mean square-array
+        // service time ÷ K, with 20% headroom.
+        let mean_service: f64 = trace
+            .iter()
+            .map(|r| plan.square[0].modeled_service_secs(&r.shape()))
+            .sum::<f64>()
+            / trace.len() as f64;
+        mean_service / plan.square.len() as f64 * 1.2
+    };
+    let spill = if cfg.spill_macs > 0 {
+        cfg.spill_macs
+    } else {
+        let mean_macs = trace.iter().map(|r| r.macs()).sum::<u64>() / trace.len() as u64;
+        4 * mean_macs
+    };
+    (gap_secs, spill)
+}
+
+/// Provision both fleets and run every `(fleet, policy)` pair over the
+/// same seeded trace. Deterministic: the same configuration produces
+/// the same report (and byte-identical [`fleet_bench`] JSON) at any
+/// worker count — asserted by `tests/fleet_determinism.rs`.
+pub fn run_fleet_comparison(cfg: &FleetConfig) -> Result<FleetReport> {
+    cfg.validate()?;
+    let plan = provision(cfg)?;
+    let trace = build_trace(cfg)?;
+    let tech = TechParams::default();
+    let (gap_secs, spill_macs) = modeled_knobs(cfg, &plan, &trace);
+
+    let mut runs = Vec::with_capacity(2 * RoutePolicy::ALL.len());
+    for (label, specs) in [(HETEROGENEOUS, &plan.selected), (SQUARE, &plan.square)] {
+        for policy in RoutePolicy::ALL {
+            // Fresh servers per run: every run pays its own cold
+            // simulations, so cache counters stay comparable.
+            let fleet = Fleet::build(label, specs, cfg)?;
+            runs.push(run_policy(
+                &fleet, policy, &trace, cfg, gap_secs, spill_macs, &tech,
+            )?);
+        }
+    }
+    Ok(FleetReport {
+        plan,
+        requests: trace.len(),
+        gap_us: gap_secs * 1e6,
+        spill_macs,
+        runs,
+    })
+}
+
+// ---------------------------------------------------------------------
+// Serialization
+// ---------------------------------------------------------------------
+
+fn spec_json(s: &ArraySpec) -> Json {
+    obj(vec![
+        ("rows", Json::Num(s.sa.rows as f64)),
+        ("cols", Json::Num(s.sa.cols as f64)),
+        ("dataflow", Json::Str(s.engine.name().to_string())),
+        ("aspect", Json::Num(s.aspect)),
+        ("pe_area_um2", Json::Num(s.pe_area_um2)),
+        ("a_h", Json::Num(s.a_h)),
+        ("a_v", Json::Num(s.a_v)),
+        (
+            "provisioned_interconnect_mw",
+            Json::Num(s.provisioned_interconnect_mw),
+        ),
+        ("provisioned_cycles", Json::Num(s.provisioned_cycles as f64)),
+    ])
+}
+
+fn array_run_json(a: &ArrayRun) -> Json {
+    obj(vec![
+        ("label", Json::Str(a.label.clone())),
+        ("rows", Json::Num(a.rows as f64)),
+        ("cols", Json::Num(a.cols as f64)),
+        ("aspect", Json::Num(a.aspect)),
+        ("requests", Json::Num(a.requests as f64)),
+        ("macs", Json::Num(a.macs as f64)),
+        ("sim_cycles", Json::Num(a.sim_cycles as f64)),
+        ("utilization", Json::Num(a.utilization)),
+        ("queue_peak", Json::Num(a.queue_peak as f64)),
+        ("interconnect_uj", Json::Num(a.interconnect_uj)),
+        ("total_uj", Json::Num(a.total_uj)),
+        ("cache_hits", Json::Num(a.cache.hits as f64)),
+        ("cache_misses", Json::Num(a.cache.misses as f64)),
+    ])
+}
+
+fn run_json(r: &PolicyRun) -> Json {
+    obj(vec![
+        ("fleet", Json::Str(r.fleet.clone())),
+        ("policy", Json::Str(r.policy.name().to_string())),
+        (
+            "per_array",
+            Json::Arr(r.per_array.iter().map(array_run_json).collect()),
+        ),
+        ("spills", Json::Num(r.spills as f64)),
+        ("p50_us", Json::Num(r.latency_us(0.50) as f64)),
+        ("p90_us", Json::Num(r.latency_us(0.90) as f64)),
+        ("p99_us", Json::Num(r.latency_us(0.99) as f64)),
+        ("max_us", Json::Num(r.latency_us(1.0) as f64)),
+        ("mean_us", Json::Num(r.mean_latency_us())),
+        ("interconnect_uj", Json::Num(r.interconnect_uj)),
+        ("total_uj", Json::Num(r.total_uj)),
+        ("silicon_secs", Json::Num(r.silicon_secs)),
+        ("avg_interconnect_mw", Json::Num(r.avg_interconnect_mw())),
+        ("avg_total_mw", Json::Num(r.avg_total_mw())),
+    ])
+}
+
+fn headline_json(h: &FleetHeadline) -> Json {
+    obj(vec![
+        ("het_interconnect_uj", Json::Num(h.het_interconnect_uj)),
+        ("square_interconnect_uj", Json::Num(h.square_interconnect_uj)),
+        (
+            "interconnect_margin_pct",
+            Json::Num(100.0 * h.interconnect_margin),
+        ),
+        (
+            "het_avg_interconnect_mw",
+            Json::Num(h.het_avg_interconnect_mw),
+        ),
+        (
+            "square_avg_interconnect_mw",
+            Json::Num(h.square_avg_interconnect_mw),
+        ),
+        ("power_margin_pct", Json::Num(100.0 * h.power_margin)),
+        (
+            "affine_vs_round_robin_pct",
+            Json::Num(100.0 * h.affine_vs_round_robin),
+        ),
+        ("het_p99_us", Json::Num(h.het_p99_us as f64)),
+        ("square_p99_us", Json::Num(h.square_p99_us as f64)),
+    ])
+}
+
+/// The machine-readable fleet document: configuration echo, the
+/// provisioning plan, every `(fleet, policy)` run and the headline.
+/// Deterministic — no wall-clock, no worker count.
+pub fn summary_json(cfg: &FleetConfig, report: &FleetReport) -> Json {
+    obj(vec![
+        ("pe_budget", Json::Num(cfg.pe_budget as f64)),
+        ("arrays", Json::Num(cfg.arrays as f64)),
+        ("workload", Json::Str(cfg.workload.name().to_string())),
+        ("max_layers", Json::Num(cfg.max_layers as f64)),
+        ("requests", Json::Num(report.requests as f64)),
+        ("unique_inputs", Json::Num(cfg.unique_inputs as f64)),
+        ("seed", Json::Num(cfg.seed as f64)),
+        ("window", Json::Num(cfg.window as f64)),
+        ("cache_capacity", Json::Num(cfg.cache_capacity as f64)),
+        ("gap_us", Json::Num(report.gap_us)),
+        ("spill_macs", Json::Num(report.spill_macs as f64)),
+        (
+            "frontier",
+            Json::Arr(
+                report
+                    .plan
+                    .frontier
+                    .iter()
+                    .map(|s| Json::Str(s.clone()))
+                    .collect(),
+            ),
+        ),
+        (
+            "selected",
+            Json::Arr(report.plan.selected.iter().map(spec_json).collect()),
+        ),
+        (
+            "square_fleet",
+            Json::Arr(report.plan.square.iter().map(spec_json).collect()),
+        ),
+        (
+            "runs",
+            Json::Arr(report.runs.iter().map(run_json).collect()),
+        ),
+        ("headline", headline_json(&report.headline())),
+    ])
+}
+
+/// Assemble the `FLEET_summary.json` bench document: headline metrics
+/// as notes plus the full [`summary_json`] section. Deliberately
+/// contains no timing case and no worker count, so the file is
+/// byte-identical for the same comparison at any parallelism.
+pub fn fleet_bench(cfg: &FleetConfig, report: &FleetReport) -> Bench {
+    let h = report.headline();
+    let mut b = Bench::new("fleet");
+    b.note("arrays", cfg.arrays as f64);
+    b.note("requests", report.requests as f64);
+    b.note("interconnect_margin_pct", 100.0 * h.interconnect_margin);
+    b.note("power_margin_pct", 100.0 * h.power_margin);
+    b.note(
+        "affine_vs_round_robin_pct",
+        100.0 * h.affine_vs_round_robin,
+    );
+    b.note("het_p99_us", h.het_p99_us as f64);
+    b.note("square_p99_us", h.square_p99_us as f64);
+    if let Some(r) = report.run(HETEROGENEOUS, RoutePolicy::ShapeAffine) {
+        b.note("shape_affine_spills", r.spills as f64);
+    }
+    b.section("fleet", summary_json(cfg, report));
+    b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> FleetConfig {
+        FleetConfig {
+            pe_budget: 16,
+            arrays: 2,
+            workload: WorkloadKind::Synth,
+            max_layers: 2,
+            requests: 10,
+            unique_inputs: 2,
+            seed: 11,
+            window: 3,
+            cache_capacity: 16,
+            workers: 2,
+            ..FleetConfig::default()
+        }
+    }
+
+    #[test]
+    fn comparison_runs_every_fleet_policy_pair() {
+        let cfg = tiny_cfg();
+        let report = run_fleet_comparison(&cfg).unwrap();
+        assert_eq!(report.runs.len(), 6);
+        for (label, specs) in [(HETEROGENEOUS, &report.plan.selected), (SQUARE, &report.plan.square)]
+        {
+            assert_eq!(specs.len(), 2);
+            for policy in RoutePolicy::ALL {
+                let run = report.run(label, policy).expect("run exists");
+                // Every request routed somewhere; latencies recorded.
+                let routed: u64 = run.per_array.iter().map(|a| a.requests).sum();
+                assert_eq!(routed as usize, cfg.requests);
+                assert_eq!(run.latency_sorted_us.len(), cfg.requests);
+                for w in run.latency_sorted_us.windows(2) {
+                    assert!(w[0] <= w[1]);
+                }
+                // Served work and energy exist and are consistent.
+                let macs: u64 = run.per_array.iter().map(|a| a.macs).sum();
+                assert!(macs > 0);
+                assert!(run.interconnect_uj > 0.0);
+                assert!(run.total_uj > run.interconnect_uj);
+                assert!(run.silicon_secs > 0.0);
+                assert!(run.avg_interconnect_mw() > 0.0);
+                for a in &run.per_array {
+                    assert!(a.utilization >= 0.0 && a.utilization <= 1.0);
+                    // Backlog peak: bounded by the requests this array
+                    // received, nonzero iff it received any.
+                    assert!(a.queue_peak as u64 <= a.requests);
+                    assert_eq!(a.queue_peak == 0, a.requests == 0);
+                }
+            }
+        }
+        // Round-robin splits requests evenly (10 over 2 arrays).
+        let rr = report.run(HETEROGENEOUS, RoutePolicy::RoundRobin).unwrap();
+        assert_eq!(rr.per_array[0].requests, 5);
+        assert_eq!(rr.per_array[1].requests, 5);
+    }
+
+    #[test]
+    fn square_fleet_power_is_policy_invariant() {
+        // Identical arrays: routing changes latency, never energy.
+        let report = run_fleet_comparison(&tiny_cfg()).unwrap();
+        let runs: Vec<&PolicyRun> =
+            report.runs.iter().filter(|r| r.fleet == SQUARE).collect();
+        assert_eq!(runs.len(), 3);
+        for r in &runs[1..] {
+            let rel = (r.interconnect_uj - runs[0].interconnect_uj).abs()
+                / runs[0].interconnect_uj;
+            assert!(rel < 1e-9, "square power must not depend on routing: {rel}");
+        }
+    }
+
+    #[test]
+    fn headline_is_consistent_with_runs() {
+        let report = run_fleet_comparison(&tiny_cfg()).unwrap();
+        let h = report.headline();
+        let het = report.run(HETEROGENEOUS, RoutePolicy::ShapeAffine).unwrap();
+        assert_eq!(h.het_interconnect_uj, het.interconnect_uj);
+        assert!(h.square_interconnect_uj > 0.0);
+        assert!(h.interconnect_margin.is_finite());
+        assert!(h.power_margin.is_finite());
+        assert!(h.affine_vs_round_robin.is_finite());
+        assert_eq!(h.het_p99_us, het.latency_us(0.99));
+    }
+
+    #[test]
+    fn summary_json_shape_and_validation() {
+        let cfg = tiny_cfg();
+        let report = run_fleet_comparison(&cfg).unwrap();
+        let j = summary_json(&cfg, &report);
+        assert_eq!(j.req("runs").unwrap().as_arr().unwrap().len(), 6);
+        assert_eq!(j.req("selected").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(j.req("square_fleet").unwrap().as_arr().unwrap().len(), 2);
+        assert!(j.req("headline").unwrap().get("interconnect_margin_pct").is_some());
+        // The bench wrapper parses back with the section present.
+        let text = fleet_bench(&cfg, &report).to_json();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(parsed.req("suite").unwrap().as_str().unwrap(), "fleet");
+        assert!(parsed.req("fleet").unwrap().get("runs").is_some());
+
+        for bad in [
+            FleetConfig { arrays: 0, ..tiny_cfg() },
+            FleetConfig { requests: 0, ..tiny_cfg() },
+            FleetConfig { pe_budget: 0, ..tiny_cfg() },
+            FleetConfig { gap_us: f64::NAN, ..tiny_cfg() },
+            FleetConfig { gap_us: f64::INFINITY, ..tiny_cfg() },
+            FleetConfig { gap_us: -1.0, ..tiny_cfg() },
+        ] {
+            assert!(bad.validate().is_err());
+        }
+    }
+
+    #[test]
+    fn explicit_knobs_override_the_auto_formulas() {
+        let cfg = FleetConfig {
+            gap_us: 12.5,
+            spill_macs: 777,
+            ..tiny_cfg()
+        };
+        let plan = provision(&cfg).unwrap();
+        let trace = build_trace(&cfg).unwrap();
+        let (gap, spill) = modeled_knobs(&cfg, &plan, &trace);
+        assert!((gap - 12.5e-6).abs() < 1e-15);
+        assert_eq!(spill, 777);
+        let auto = FleetConfig { gap_us: 0.0, spill_macs: 0, ..tiny_cfg() };
+        let (gap, spill) = modeled_knobs(&auto, &plan, &trace);
+        assert!(gap > 0.0);
+        assert!(spill > 0);
+    }
+}

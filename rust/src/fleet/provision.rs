@@ -1,0 +1,293 @@
+//! Fleet provisioning: choose K arrays from the explorer's Pareto
+//! frontier for a PE budget and a workload mix.
+//!
+//! The source paper picks one floorplan for one workload average. The
+//! explorer ([`crate::explore`]) already generalizes that to a
+//! per-workload Pareto frontier of `(cycles, interconnect power)`; this
+//! module turns the frontier into a *serving fleet*: K differently
+//! shaped arrays, each with its own eq.-6-swept PE floorplan, that a
+//! router can play against each other per request shape.
+//!
+//! **Selection criterion.** Frontier points are ranked by mean
+//! *interconnect energy* over the provisioning workload — best
+//! interconnect power × workload cycles — and the K cheapest are taken.
+//! Ranking by power alone (or spreading evenly over the frontier) picks
+//! the frontier's slow tail: geometries like `1×1024` draw little power
+//! precisely because they take many cycles, and on *energy per request*
+//! they lose to the square baseline by 2-5×. Energy is what a serving
+//! fleet pays per request, so energy is what provisioning minimizes;
+//! the cycle-frugal end of the frontier still enters the fleet because
+//! low cycles is half of the energy product.
+//!
+//! The homogeneous comparison fleet is K copies of the most-square
+//! geometry at the square (W/H = 1) PE floorplan — the conventional
+//! deployment the paper argues against, at equal total PE count.
+
+use crate::arch::SaConfig;
+use crate::error::{Error, Result};
+use crate::explore::{ConfigPoint, DataflowKind, Explorer, SweepConfig, WorkloadKind};
+use crate::floorplan::PeGeometry;
+use crate::power::{self, TechParams};
+use crate::serve::ShapeKey;
+
+use super::FleetConfig;
+
+/// One provisioned array: geometry, dataflow, PE floorplan and the
+/// workload-average activities the closed-form router score uses.
+#[derive(Debug, Clone)]
+pub struct ArraySpec {
+    /// Array configuration (geometry, bus widths, clock).
+    pub sa: SaConfig,
+    /// Dataflow engine the array's server runs (WS for every array this
+    /// provisioner emits; per-array dataflow mixing is a ROADMAP item).
+    pub engine: DataflowKind,
+    /// PE aspect ratio `W/H` of the array's floorplan (the explorer's
+    /// best sample for heterogeneous arrays, exactly 1.0 for the square
+    /// fleet).
+    pub aspect: f64,
+    /// PE area from the gate-count model (µm²).
+    pub pe_area_um2: f64,
+    /// Mean horizontal switching activity measured at provisioning.
+    pub a_h: f64,
+    /// Mean vertical switching activity measured at provisioning.
+    pub a_v: f64,
+    /// Workload-average interconnect power at `aspect` (mW), from the
+    /// provisioning sweep.
+    pub provisioned_interconnect_mw: f64,
+    /// Workload cycles of the provisioning sweep point.
+    pub provisioned_cycles: u64,
+}
+
+impl ArraySpec {
+    /// Build a spec from an explorer sweep point; `square` selects the
+    /// conventional W/H = 1 floorplan instead of the swept optimum.
+    pub fn from_point(p: &ConfigPoint, square: bool) -> Result<ArraySpec> {
+        // The explorer validated input_bits == 16 (the workload pipeline
+        // quantizes operands to int16, paper §IV).
+        let sa = SaConfig::new_ws(p.rows, p.cols, 16)?;
+        let (aspect, mw) = if square {
+            (p.square.aspect, p.square.interconnect_mw)
+        } else {
+            (p.best.aspect, p.best.interconnect_mw)
+        };
+        Ok(ArraySpec {
+            sa,
+            engine: p.dataflow,
+            aspect,
+            pe_area_um2: p.pe_area_um2,
+            a_h: p.a_h,
+            a_v: p.a_v,
+            provisioned_interconnect_mw: mw,
+            provisioned_cycles: p.cycles,
+        })
+    }
+
+    /// Compact display label, e.g. `16x64 ws W/H=2.00`.
+    pub fn label(&self) -> String {
+        format!(
+            "{}x{} {} W/H={:.2}",
+            self.sa.rows,
+            self.sa.cols,
+            self.engine.name(),
+            self.aspect
+        )
+    }
+
+    /// The array's PE floorplan.
+    pub fn geometry(&self) -> Result<PeGeometry> {
+        PeGeometry::new(self.pe_area_um2, self.aspect)
+    }
+
+    /// Closed-form WS cycle count for one GEMM of `shape` on this
+    /// array: `ceil(K/R)·ceil(N/C)` tile passes of
+    /// [`SaConfig::ws_tile_cycles`] each — exactly the cycle count the
+    /// analytic engine reports, without simulating.
+    pub fn modeled_cycles(&self, shape: &ShapeKey) -> u64 {
+        let passes = shape.k.div_ceil(self.sa.rows) * shape.n.div_ceil(self.sa.cols);
+        (passes * self.sa.ws_tile_cycles(shape.m)) as u64
+    }
+
+    /// Modeled service time of one GEMM of `shape` at the array clock.
+    pub fn modeled_service_secs(&self, shape: &ShapeKey) -> f64 {
+        self.modeled_cycles(shape) as f64 / (self.sa.clock_ghz * 1e9)
+    }
+
+    /// Shape-independent factor of the router score: closed-form
+    /// interconnect fJ per cycle for the whole array
+    /// ([`power::model_interconnect_cost`] at the array's
+    /// provisioning-time activities and floorplan, × PEs). Constant per
+    /// array — [`super::run_policy`] computes it once per run.
+    pub fn cycle_cost_fj(&self, tech: &TechParams) -> f64 {
+        power::model_interconnect_cost(
+            &self.sa,
+            tech,
+            self.a_h,
+            self.a_v,
+            self.pe_area_um2,
+            self.aspect,
+        ) * self.sa.num_pes() as f64
+    }
+
+    /// `ShapeAffine` router score: modeled interconnect *energy* (fJ) of
+    /// serving one GEMM of `shape` on this array —
+    /// [`ArraySpec::cycle_cost_fj`] × modeled cycles. No simulation:
+    /// routing a request costs O(K) arithmetic.
+    pub fn shape_cost_fj(&self, shape: &ShapeKey, tech: &TechParams) -> f64 {
+        self.cycle_cost_fj(tech) * self.modeled_cycles(shape) as f64
+    }
+}
+
+/// Everything provisioning decided: the heterogeneous fleet, the equal-
+/// total-PE square fleet, and the frontier it chose from.
+#[derive(Debug, Clone)]
+pub struct FleetPlan {
+    /// Workload the fleet was provisioned for.
+    pub workload: WorkloadKind,
+    /// Per-array PE budget (both fleets; total PEs = budget × K).
+    pub pe_budget: usize,
+    /// The K heterogeneous arrays, in energy rank order.
+    pub selected: Vec<ArraySpec>,
+    /// K copies of the square most-square baseline array.
+    pub square: Vec<ArraySpec>,
+    /// Human-readable frontier labels (cycle order), for reporting.
+    pub frontier: Vec<String>,
+}
+
+/// Run the explorer and provision both fleets for `cfg`.
+///
+/// Deterministic: the explorer output is worker-count-invariant, the
+/// energy ranking is a total order (ties break by rows), so the same
+/// configuration always yields the same fleet.
+pub fn provision(cfg: &FleetConfig) -> Result<FleetPlan> {
+    if cfg.arrays == 0 {
+        return Err(Error::config("fleet needs at least one array"));
+    }
+    let sweep = SweepConfig {
+        pe_budget: cfg.pe_budget,
+        dataflows: vec![DataflowKind::Ws],
+        workloads: vec![cfg.workload],
+        max_layers: cfg.max_layers,
+        seed: cfg.seed,
+        workers: cfg.workers,
+        ..SweepConfig::default()
+    };
+    let out = Explorer::new(sweep)?.run()?;
+    let frontier = out.frontier_points(0);
+    assert!(!frontier.is_empty(), "a sweep always produces a frontier");
+
+    // Energy rank: interconnect power at the best aspect × workload
+    // cycles, ascending; rows break ties so the order is total.
+    let mut ranked: Vec<&ConfigPoint> = frontier.clone();
+    ranked.sort_by(|a, b| {
+        (a.best.interconnect_mw * a.cycles as f64)
+            .total_cmp(&(b.best.interconnect_mw * b.cycles as f64))
+            .then(a.rows.cmp(&b.rows))
+    });
+    // K cheapest; wrap around when the frontier is smaller than the
+    // fleet (duplicate geometries then add capacity, not diversity).
+    let selected = (0..cfg.arrays)
+        .map(|i| ArraySpec::from_point(ranked[i % ranked.len()], false))
+        .collect::<Result<Vec<_>>>()?;
+
+    let base = &out.baselines[0];
+    let square = (0..cfg.arrays)
+        .map(|_| ArraySpec::from_point(base, true))
+        .collect::<Result<Vec<_>>>()?;
+
+    let frontier_labels = frontier
+        .iter()
+        .map(|p| {
+            format!(
+                "{} W/H={:.2} {:.3}mW {}cy",
+                p.label(),
+                p.best.aspect,
+                p.best.interconnect_mw,
+                p.cycles
+            )
+        })
+        .collect();
+
+    Ok(FleetPlan {
+        workload: cfg.workload,
+        pe_budget: cfg.pe_budget,
+        selected,
+        square,
+        frontier: frontier_labels,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::FleetConfig;
+
+    fn tiny_cfg(arrays: usize) -> FleetConfig {
+        FleetConfig {
+            pe_budget: 16,
+            arrays,
+            workload: WorkloadKind::Synth,
+            max_layers: 1,
+            seed: 7,
+            workers: 2,
+            ..FleetConfig::default()
+        }
+    }
+
+    #[test]
+    fn provisions_budget_true_fleets() {
+        let plan = provision(&tiny_cfg(2)).unwrap();
+        assert_eq!(plan.selected.len(), 2);
+        assert_eq!(plan.square.len(), 2);
+        assert!(!plan.frontier.is_empty());
+        for spec in plan.selected.iter().chain(&plan.square) {
+            assert_eq!(spec.sa.rows * spec.sa.cols, 16);
+            assert_eq!(spec.engine, DataflowKind::Ws);
+            assert!(spec.a_h > 0.0 && spec.a_v > 0.0);
+            assert!(spec.provisioned_interconnect_mw > 0.0);
+            assert!(spec.provisioned_cycles > 0);
+            assert!(spec.geometry().is_ok());
+        }
+        // The square fleet is homogeneous at W/H = 1 on the most-square
+        // geometry.
+        for s in &plan.square {
+            assert_eq!((s.sa.rows, s.sa.cols), (4, 4));
+            assert_eq!(s.aspect, 1.0);
+        }
+        // Selection is energy-ranked ascending.
+        let energy = |s: &ArraySpec| s.provisioned_interconnect_mw * s.provisioned_cycles as f64;
+        for w in plan.selected.windows(2) {
+            assert!(energy(&w[0]) <= energy(&w[1]) * (1.0 + 1e-12));
+        }
+    }
+
+    #[test]
+    fn oversized_fleet_wraps_the_frontier() {
+        // More arrays than frontier points: duplicates add capacity.
+        let plan = provision(&tiny_cfg(7)).unwrap();
+        assert_eq!(plan.selected.len(), 7);
+        if plan.frontier.len() < 7 {
+            // The wrap-around entry repeats the energy-cheapest point.
+            let first = (plan.selected[0].sa.rows, plan.selected[0].sa.cols);
+            let wrapped = &plan.selected[plan.frontier.len()];
+            assert_eq!((wrapped.sa.rows, wrapped.sa.cols), first);
+        }
+        assert!(provision(&tiny_cfg(0)).is_err());
+    }
+
+    #[test]
+    fn modeled_cycles_match_the_tile_plan() {
+        let plan = provision(&tiny_cfg(1)).unwrap();
+        let spec = &plan.selected[0];
+        let shape = ShapeKey { m: 10, k: 33, n: 40 };
+        let plan_cycles = crate::gemm::TilePlan::new(10, 33, 40, &spec.sa)
+            .unwrap()
+            .total_cycles(&spec.sa) as u64;
+        assert_eq!(spec.modeled_cycles(&shape), plan_cycles);
+        assert!(spec.modeled_service_secs(&shape) > 0.0);
+        // The router score scales with work: more output channels, more
+        // modeled energy.
+        let tech = TechParams::default();
+        let big = ShapeKey { m: 10, k: 33, n: 400 };
+        assert!(spec.shape_cost_fj(&big, &tech) > spec.shape_cost_fj(&shape, &tech));
+    }
+}

@@ -1,0 +1,217 @@
+//! Pluggable fleet routing policies.
+//!
+//! A router answers one question per request: *which array serves it?*
+//! Three policies cover the classic trade-off surface:
+//!
+//! * [`RoutePolicy::RoundRobin`] — the shape- and load-blind baseline;
+//!   perfectly fair in request count, indifferent to everything else.
+//! * [`RoutePolicy::LeastLoaded`] — pick the array with the smallest
+//!   outstanding queued MAC count. Balances *work* (not requests), so a
+//!   stream of mixed GEMM sizes does not hotspot the array that happened
+//!   to receive the big ones.
+//! * [`RoutePolicy::ShapeAffine`] — the fleet's reason to exist: score
+//!   every array for the request's GEMM shape with the closed-form
+//!   interconnect-energy model
+//!   ([`super::provision::ArraySpec::shape_cost_fj`]) and pick the
+//!   cheapest, spilling to the least-loaded array when the winner's
+//!   queue exceeds a MAC bound — power-optimal routing with a pressure
+//!   valve against hotspotting.
+//!
+//! Routing is deterministic: ties break toward the lowest array index,
+//! the round-robin cursor and spill counter are explicit state, and the
+//! inputs (modeled costs, queued MACs) are themselves deterministic
+//! functions of the admitted trace — so a fleet run is reproducible
+//! byte-for-byte at any worker count.
+
+use crate::error::{Error, Result};
+
+/// Which routing policy a fleet run uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RoutePolicy {
+    /// Request `i` goes to array `i mod K`.
+    RoundRobin,
+    /// Array with the least outstanding queued MACs.
+    LeastLoaded,
+    /// Cheapest array under the closed-form interconnect-energy score,
+    /// with spill to the least-loaded array past the queue bound.
+    ShapeAffine,
+}
+
+impl RoutePolicy {
+    /// Every policy, in the order `repro fleet` compares them.
+    pub const ALL: [RoutePolicy; 3] = [
+        RoutePolicy::RoundRobin,
+        RoutePolicy::LeastLoaded,
+        RoutePolicy::ShapeAffine,
+    ];
+
+    /// Short lowercase name (CLI/JSON spelling).
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoutePolicy::RoundRobin => "round_robin",
+            RoutePolicy::LeastLoaded => "least_loaded",
+            RoutePolicy::ShapeAffine => "shape_affine",
+        }
+    }
+
+    /// Parse the CLI/JSON spelling.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.trim() {
+            "round_robin" => Ok(RoutePolicy::RoundRobin),
+            "least_loaded" => Ok(RoutePolicy::LeastLoaded),
+            "shape_affine" => Ok(RoutePolicy::ShapeAffine),
+            other => Err(Error::config(format!(
+                "unknown routing policy `{other}` (expected round_robin, \
+                 least_loaded or shape_affine)"
+            ))),
+        }
+    }
+}
+
+/// Stateful router for one fleet run: owns the round-robin cursor and
+/// the spill counter.
+#[derive(Debug)]
+pub struct Router {
+    policy: RoutePolicy,
+    rr_next: usize,
+    spills: u64,
+}
+
+impl Router {
+    /// New router for a policy.
+    pub fn new(policy: RoutePolicy) -> Self {
+        Router {
+            policy,
+            rr_next: 0,
+            spills: 0,
+        }
+    }
+
+    /// The policy this router implements.
+    pub fn policy(&self) -> RoutePolicy {
+        self.policy
+    }
+
+    /// How many `ShapeAffine` decisions spilled to the least-loaded
+    /// array because the affine winner's queue exceeded the bound.
+    pub fn spills(&self) -> u64 {
+        self.spills
+    }
+
+    /// Pick an array for one request.
+    ///
+    /// * `costs[i]` — modeled interconnect energy (fJ) of serving the
+    ///   request on array `i` (only consulted by `ShapeAffine`);
+    /// * `queued_macs[i]` — outstanding MACs queued on array `i`;
+    /// * `spill_macs` — `ShapeAffine` queue bound. 0 disables spill at
+    ///   this layer; note [`super::modeled_knobs`] resolves the
+    ///   *config-level* 0-means-auto sentinel before calling, so a
+    ///   comparison driven through [`super::run_fleet_comparison`]
+    ///   always arrives here with a concrete bound (pass a bound larger
+    ///   than the trace's total MACs to make spill unreachable).
+    ///
+    /// Ties break toward the lowest index, so the decision is a pure
+    /// function of `(router state, costs, queued_macs)`.
+    pub fn route(&mut self, costs: &[f64], queued_macs: &[u64], spill_macs: u64) -> usize {
+        let n = costs.len();
+        assert!(n > 0, "router needs a non-empty fleet");
+        assert_eq!(n, queued_macs.len(), "cost/load vectors must align");
+        match self.policy {
+            RoutePolicy::RoundRobin => {
+                let i = self.rr_next % n;
+                self.rr_next += 1;
+                i
+            }
+            RoutePolicy::LeastLoaded => argmin_u64(queued_macs),
+            RoutePolicy::ShapeAffine => {
+                let best = argmin_f64(costs);
+                if spill_macs > 0 && queued_macs[best] > spill_macs {
+                    let alt = argmin_u64(queued_macs);
+                    // A spill is only a spill if it actually reroutes;
+                    // when the affine winner is also the least-loaded
+                    // array there is nowhere better to go.
+                    if alt != best {
+                        self.spills += 1;
+                        return alt;
+                    }
+                }
+                best
+            }
+        }
+    }
+}
+
+/// Index of the minimum; first occurrence wins (deterministic ties).
+fn argmin_u64(xs: &[u64]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate().skip(1) {
+        if x < xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Index of the minimum under `total_cmp`; first occurrence wins.
+fn argmin_f64(xs: &[f64]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate().skip(1) {
+        if x.total_cmp(&xs[best]) == std::cmp::Ordering::Less {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_round_trip() {
+        for p in RoutePolicy::ALL {
+            assert_eq!(RoutePolicy::parse(p.name()).unwrap(), p);
+        }
+        assert!(RoutePolicy::parse("bogus").is_err());
+        assert_eq!(RoutePolicy::parse(" shape_affine ").unwrap(), RoutePolicy::ShapeAffine);
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = Router::new(RoutePolicy::RoundRobin);
+        let costs = [0.0; 3];
+        let loads = [0u64; 3];
+        let picks: Vec<usize> = (0..7).map(|_| r.route(&costs, &loads, 0)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2, 0]);
+        assert_eq!(r.spills(), 0);
+    }
+
+    #[test]
+    fn least_loaded_balances_macs_with_deterministic_ties() {
+        let mut r = Router::new(RoutePolicy::LeastLoaded);
+        assert_eq!(r.route(&[0.0; 3], &[5, 2, 9], 0), 1);
+        // Ties break toward the lowest index.
+        assert_eq!(r.route(&[0.0; 3], &[4, 4, 4], 0), 0);
+        assert_eq!(r.route(&[0.0; 3], &[7, 3, 3], 0), 1);
+    }
+
+    #[test]
+    fn shape_affine_picks_cheapest_and_spills_past_bound() {
+        let mut r = Router::new(RoutePolicy::ShapeAffine);
+        // Cheapest wins regardless of load when under the bound.
+        assert_eq!(r.route(&[3.0, 1.0, 2.0], &[10, 10, 0], 100), 1);
+        assert_eq!(r.spills(), 0);
+        // Past the bound: spill to the least-loaded array.
+        assert_eq!(r.route(&[3.0, 1.0, 2.0], &[10, 101, 0], 100), 2);
+        assert_eq!(r.spills(), 1);
+        // Winner over the bound but already least-loaded: stays put and
+        // does NOT count as a spill (nothing was rerouted).
+        assert_eq!(r.route(&[1.0, 2.0, 3.0], &[150, 300, 200], 100), 0);
+        assert_eq!(r.spills(), 1);
+        // Bound 0 disables spill entirely.
+        assert_eq!(r.route(&[3.0, 1.0, 2.0], &[10, u64::MAX, 0], 0), 1);
+        assert_eq!(r.spills(), 1);
+        // Cost ties break toward the lowest index.
+        assert_eq!(r.route(&[2.0, 2.0, 5.0], &[0, 0, 0], 0), 0);
+    }
+}

@@ -24,6 +24,8 @@
 //!   thread-pool coordinator ([`coordinator`]), serving front-end with
 //!   shape-coalesced batching and a memoized result cache ([`serve`]),
 //!   parallel design-space explorer with Pareto reporting ([`explore`]),
+//!   multi-array fleet serving provisioned from the Pareto frontier
+//!   with shape-affine routing ([`fleet`]),
 //!   PJRT runtime that executes the AOT artifacts ([`runtime`]),
 //!   figure/table regeneration ([`report`]) and self-contained
 //!   substrates ([`util`], [`bench_util`]) for the fully-offline build.
@@ -68,6 +70,7 @@ pub mod config;
 pub mod coordinator;
 pub mod error;
 pub mod explore;
+pub mod fleet;
 pub mod floorplan;
 pub mod gemm;
 pub mod power;

@@ -336,6 +336,110 @@ pub fn sweep_markdown(
     s
 }
 
+/// Markdown fleet-serving report: the provisioning decision, one row
+/// per `(fleet, policy)` run (power, modeled latency, spills, cache
+/// traffic) and the headline heterogeneous-vs-square margin — what
+/// `repro fleet` writes next to `FLEET_summary.json`. Deterministic:
+/// every number comes from the worker-count-invariant report.
+pub fn fleet_markdown(
+    cfg: &crate::fleet::FleetConfig,
+    report: &crate::fleet::FleetReport,
+) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "# asymm-sa fleet serving\n");
+    let _ = writeln!(
+        s,
+        "{} arrays x {} PEs each (equal total PE count per fleet), workload \
+         `{}`, {} requests, seed {}; modeled arrival gap {:.1} us, spill bound \
+         {} MACs.\n",
+        cfg.arrays,
+        cfg.pe_budget,
+        report.plan.workload.name(),
+        report.requests,
+        cfg.seed,
+        report.gap_us,
+        report.spill_macs,
+    );
+    let _ = writeln!(s, "## Provisioning\n");
+    let _ = writeln!(s, "Pareto frontier (cycle order):\n");
+    for f in &report.plan.frontier {
+        let _ = writeln!(s, "* {f}");
+    }
+    let _ = writeln!(
+        s,
+        "\n| fleet | arrays (energy rank) |\n|---|---|\n| heterogeneous | {} |\n| square | {} x {} |\n",
+        report
+            .plan
+            .selected
+            .iter()
+            .map(|a| a.label())
+            .collect::<Vec<_>>()
+            .join(", "),
+        report.plan.square.len(),
+        report.plan.square[0].label(),
+    );
+    let _ = writeln!(s, "## Policy comparison\n");
+    let _ = writeln!(
+        s,
+        "| fleet | policy | interconnect (uJ) | avg interconnect (mW) | p50 (us) | p99 (us) | spills | cache hits |"
+    );
+    let _ = writeln!(s, "|---|---|---|---|---|---|---|---|");
+    for r in &report.runs {
+        let hits: u64 = r.per_array.iter().map(|a| a.cache.hits).sum();
+        let lookups: u64 = r
+            .per_array
+            .iter()
+            .map(|a| a.cache.hits + a.cache.misses)
+            .sum();
+        let _ = writeln!(
+            s,
+            "| {} | {} | {:.2} | {:.2} | {} | {} | {} | {}/{} |",
+            r.fleet,
+            r.policy.name(),
+            r.interconnect_uj,
+            r.avg_interconnect_mw(),
+            r.latency_us(0.50),
+            r.latency_us(0.99),
+            r.spills,
+            hits,
+            lookups,
+        );
+    }
+    let h = report.headline();
+    let _ = writeln!(
+        s,
+        "\nHeadline: the `shape_affine`-routed heterogeneous fleet spends \
+         {:.2} uJ of interconnect energy vs {:.2} uJ for the homogeneous \
+         square fleet — a {:.1}% margin ({:.1}% on time-averaged interconnect \
+         power), with `shape_affine` {:.1}% ahead of `round_robin` on its own \
+         fleet. Modeled p99: {} us (heterogeneous) vs {} us (best square \
+         policy).",
+        h.het_interconnect_uj,
+        h.square_interconnect_uj,
+        100.0 * h.interconnect_margin,
+        100.0 * h.power_margin,
+        100.0 * h.affine_vs_round_robin,
+        h.het_p99_us,
+        h.square_p99_us,
+    );
+    let _ = writeln!(
+        s,
+        "\nPer-array utilization ({}): {}",
+        "shape_affine",
+        report
+            .run(crate::fleet::HETEROGENEOUS, crate::fleet::RoutePolicy::ShapeAffine)
+            .map(|r| {
+                r.per_array
+                    .iter()
+                    .map(|a| format!("{} {:.1}% ({} req)", a.label, 100.0 * a.utilization, a.requests))
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            })
+            .unwrap_or_default(),
+    );
+    s
+}
+
 /// CSV export of the full comparison (one row per layer).
 pub fn to_csv(rows: &[LayerPowerRow]) -> String {
     let mut s = String::from(
@@ -490,6 +594,33 @@ mod tests {
         assert!(md.contains("| geometry | dataflow |"));
         assert!(md.contains("Eq.-6 closed form"));
         assert!(md.contains("Cache traffic"));
+    }
+
+    #[test]
+    fn fleet_markdown_contains_sections() {
+        use crate::explore::WorkloadKind;
+        use crate::fleet::{run_fleet_comparison, FleetConfig};
+        let cfg = FleetConfig {
+            pe_budget: 16,
+            arrays: 2,
+            workload: WorkloadKind::Synth,
+            max_layers: 1,
+            requests: 6,
+            unique_inputs: 1,
+            seed: 3,
+            window: 3,
+            cache_capacity: 8,
+            workers: 1,
+            ..FleetConfig::default()
+        };
+        let report = run_fleet_comparison(&cfg).unwrap();
+        let md = fleet_markdown(&cfg, &report);
+        assert!(md.contains("# asymm-sa fleet serving"));
+        assert!(md.contains("## Provisioning"));
+        assert!(md.contains("## Policy comparison"));
+        assert!(md.contains("| heterogeneous | shape_affine |"));
+        assert!(md.contains("| square | round_robin |"));
+        assert!(md.contains("Headline:"));
     }
 
     #[test]

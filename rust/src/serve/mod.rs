@@ -105,6 +105,12 @@ impl InferRequest {
     pub fn shape(&self) -> ShapeKey {
         ShapeKey::of(&self.a, &self.w)
     }
+
+    /// Useful MACs of this request's GEMM — the load unit the fleet
+    /// layer's queue accounting and `least_loaded` routing use.
+    pub fn macs(&self) -> u64 {
+        self.shape().macs()
+    }
 }
 
 /// One completed response.

@@ -1,0 +1,91 @@
+//! Property tier for the WS tile scheduler (`gemm/tiling.rs`).
+//!
+//! The tile plan is the contract every engine and the fleet's
+//! closed-form cycle model lean on: each pass preloads one `R×C` weight
+//! block and streams all `M` activation rows, with `k` blocks of one
+//! `n` block-column back to back. Across ragged `(M,K,N) × (R,C)` draws
+//! this suite pins the schedule's invariants exactly:
+//!
+//! * every `(k, n)` weight element is covered by exactly one pass;
+//! * `first_k` marks exactly the first pass of each `n` block-column;
+//! * pass count is `ceil(K/R) · ceil(N/C)`;
+//! * pass order is block-column-major with ascending `k0` inside;
+//! * MAC and cycle totals match their closed forms.
+
+use asymm_sa::arch::SaConfig;
+use asymm_sa::gemm::TilePlan;
+use asymm_sa::util::rng::Rng;
+
+#[test]
+fn ragged_draws_cover_every_weight_element_exactly_once() {
+    let mut rng = Rng::new(0x71E5_2026);
+    for case in 0..200 {
+        let m = rng.index(1, 41);
+        let k = rng.index(1, 70);
+        let n = rng.index(1, 70);
+        let r = rng.index(1, 10);
+        let c = rng.index(1, 10);
+        let sa = SaConfig::new_ws(r, c, 8).unwrap();
+        let plan = TilePlan::new(m, k, n, &sa).unwrap();
+        let ctx = format!("case {case}: {m}x{k}x{n} on {r}x{c}");
+
+        // Pass count closed form.
+        assert_eq!(
+            plan.num_passes(),
+            k.div_ceil(r) * n.div_ceil(c),
+            "{ctx}: pass count"
+        );
+
+        // Exactly-once coverage of the K×N weight grid.
+        let mut cover = vec![0u32; k * n];
+        for s in &plan.steps {
+            assert!(s.k_len >= 1 && s.k_len <= r, "{ctx}: k_len {}", s.k_len);
+            assert!(s.n_len >= 1 && s.n_len <= c, "{ctx}: n_len {}", s.n_len);
+            assert!(s.k0 + s.k_len <= k, "{ctx}: k overrun");
+            assert!(s.n0 + s.n_len <= n, "{ctx}: n overrun");
+            for kk in s.k0..s.k0 + s.k_len {
+                for nn in s.n0..s.n0 + s.n_len {
+                    cover[kk * n + nn] += 1;
+                }
+            }
+        }
+        assert!(
+            cover.iter().all(|&x| x == 1),
+            "{ctx}: weight elements not covered exactly once"
+        );
+
+        // first_k is set iff the pass starts a block-column's
+        // accumulation, and each block-column has exactly one.
+        let mut firsts_per_col = vec![0u32; n.div_ceil(c)];
+        for s in &plan.steps {
+            assert_eq!(s.first_k, s.k0 == 0, "{ctx}: first_k at k0={}", s.k0);
+            if s.first_k {
+                firsts_per_col[s.n0 / c] += 1;
+            }
+        }
+        assert!(
+            firsts_per_col.iter().all(|&x| x == 1),
+            "{ctx}: first_k per block-column {firsts_per_col:?}"
+        );
+
+        // Block-column-major order, ascending k0 inside each column —
+        // the weight-reuse order the WS rationale requires.
+        for w in plan.steps.windows(2) {
+            assert!(
+                (w[0].n0, w[0].k0) < (w[1].n0, w[1].k0),
+                "{ctx}: pass order regressed"
+            );
+            if w[0].n0 == w[1].n0 {
+                assert_eq!(w[1].k0, w[0].k0 + r, "{ctx}: k stride");
+            }
+        }
+
+        // Closed-form totals.
+        assert_eq!(plan.total_macs(), (m * k * n) as u64, "{ctx}: MACs");
+        assert_eq!(
+            plan.total_cycles(&sa),
+            plan.num_passes() * sa.ws_tile_cycles(m),
+            "{ctx}: cycles"
+        );
+    }
+}
