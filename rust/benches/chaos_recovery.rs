@@ -1,0 +1,113 @@
+//! Bench: fault-injection + recovery overhead → `BENCH_chaos.json`.
+//!
+//! Times the chaos machinery against its own fault-free path so a
+//! regression localizes:
+//!
+//! * **fault-free chaos** — `run_policy_chaos` with an empty plan,
+//!   which must cost the same as the plain engine (it *is* the plain
+//!   engine: an empty plan delegates);
+//! * **single-death recovery** — the acceptance scenario: one array
+//!   dies mid-trace, inflight work retries, a hot spare is promoted
+//!   with a warmed cache;
+//! * **full comparison** — `run_chaos_comparison` end to end at a
+//!   CI-sized configuration.
+//!
+//! Derived notes record the recovery overhead ratio and the headline
+//! robustness quality (completion rate, p99 inflation), so CI tracks
+//! both the cost and the *quality* trajectory of self-healing.
+
+use asymm_sa::bench_util::Bench;
+use asymm_sa::explore::WorkloadKind;
+use asymm_sa::faults::{run_chaos_comparison, ChaosConfig, ChaosKnobs, FaultPlan};
+use asymm_sa::fleet::{
+    build_trace, modeled_knobs, provision, provision_spare, run_policy_chaos, FleetConfig,
+    RoutePolicy, HETEROGENEOUS,
+};
+use asymm_sa::power::TechParams;
+
+fn main() {
+    let mut b = Bench::new("chaos_recovery");
+    let cfg = FleetConfig {
+        pe_budget: 64,
+        arrays: 2,
+        workload: WorkloadKind::Synth,
+        max_layers: 2,
+        requests: 32,
+        unique_inputs: 2,
+        seed: 2023,
+        window: 4,
+        cache_capacity: 64,
+        workers: 0,
+        spill_macs: 0,
+        gap_us: 0.0,
+    };
+    let knobs = ChaosKnobs::default();
+    let plan = provision(&cfg).expect("provision");
+    let trace = build_trace(&cfg).expect("trace");
+    let (gap, spill) = modeled_knobs(&cfg, &plan, &trace);
+    let tech = TechParams::default();
+    let spare = provision_spare(&cfg).expect("spare");
+    let death = FaultPlan::single_death(0, 0.35 * trace.len() as f64 * gap);
+
+    let fault_free = b
+        .case("fault_free_shape_affine_32req", || {
+            run_policy_chaos(
+                &plan.selected,
+                HETEROGENEOUS,
+                RoutePolicy::ShapeAffine,
+                &trace,
+                &cfg,
+                &knobs,
+                &FaultPlan::none(),
+                None,
+                gap,
+                spill,
+                &tech,
+            )
+            .expect("run")
+        })
+        .mean_ns;
+    b.throughput(cfg.requests as f64, "req");
+
+    let recovery = b
+        .case("single_death_hot_spare_32req", || {
+            run_policy_chaos(
+                &plan.selected,
+                HETEROGENEOUS,
+                RoutePolicy::ShapeAffine,
+                &trace,
+                &cfg,
+                &knobs,
+                &death,
+                Some(&spare),
+                gap,
+                spill,
+                &tech,
+            )
+            .expect("run")
+        })
+        .mean_ns;
+    b.throughput(cfg.requests as f64, "req");
+    b.note("recovery_over_fault_free", recovery / fault_free);
+
+    let ccfg = ChaosConfig {
+        fleet: cfg.clone(),
+        scenarios: 2,
+        knobs,
+        hot_spare: true,
+    };
+    b.case("full_comparison_2scenarios", || {
+        run_chaos_comparison(&ccfg).expect("comparison")
+    });
+
+    // Quality trajectory: the headline robustness numbers.
+    let report = run_chaos_comparison(&ccfg).expect("comparison");
+    let h = report.headline();
+    b.note("mean_completion_rate", h.mean_completion_rate);
+    b.note("worst_p99_inflation", h.worst_p99_inflation);
+    b.note("total_lost", h.total_lost as f64);
+    b.note("total_promotions", h.total_promotions as f64);
+
+    b.finish();
+    b.write_json("BENCH_chaos.json").expect("write BENCH_chaos.json");
+}

@@ -39,6 +39,8 @@ pub struct Metrics {
     cache_hits: AtomicU64,
     cache_lookups: AtomicU64,
     latency_samples_dropped: AtomicU64,
+    retries: AtomicU64,
+    failovers: AtomicU64,
     /// Per-job wall times (µs), append order = completion order
     /// (nondeterministic under fan-out; sorted before exposure).
     job_wall_micros: Mutex<Vec<u64>>,
@@ -107,6 +109,12 @@ pub struct MetricsSnapshot {
     pub cache_lookups: u64,
     /// Latency samples dropped once a log hit [`LATENCY_LOG_CAP`].
     pub latency_samples_dropped: u64,
+    /// Requests re-queued against this server after a fault rejection
+    /// (recorded by the fleet's chaos admission loop).
+    pub retries: u64,
+    /// Requests rerouted away from this server because it was down or
+    /// stalled at the routing instant.
+    pub failovers: u64,
     /// Per-job wall times in µs, sorted ascending.
     pub job_wall_sorted_micros: Vec<u64>,
     /// Per-request serve latencies in µs, sorted ascending.
@@ -177,6 +185,16 @@ impl Metrics {
         self.engine_wall_micros[i].fetch_add((wall_secs * 1e6) as u64, Ordering::Relaxed);
     }
 
+    /// Record one fault-driven retry queued against this server.
+    pub fn record_retry(&self) {
+        self.retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one request failed over away from this server.
+    pub fn record_failover(&self) {
+        self.failovers.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Record one result-cache lookup.
     pub fn record_cache_lookup(&self, hit: bool) {
         self.cache_lookups.fetch_add(1, Ordering::Relaxed);
@@ -208,6 +226,8 @@ impl Metrics {
             cache_hits: self.cache_hits.load(Ordering::Relaxed),
             cache_lookups: self.cache_lookups.load(Ordering::Relaxed),
             latency_samples_dropped: self.latency_samples_dropped.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            failovers: self.failovers.load(Ordering::Relaxed),
             job_wall_sorted_micros: job_wall,
             serve_latency_sorted_micros: serve_lat,
             engines: std::array::from_fn(|i| EngineLane {
@@ -350,6 +370,21 @@ mod tests {
         assert_eq!(EngineLane::default().jobs_per_sec(), 0.0);
         // Engine lanes ride alongside, not instead of, the aggregates.
         assert_eq!(s.jobs, 0);
+    }
+
+    #[test]
+    fn robustness_counters() {
+        let m = Metrics::default();
+        m.record_retry();
+        m.record_retry();
+        m.record_failover();
+        let s = m.snapshot();
+        assert_eq!(s.retries, 2);
+        assert_eq!(s.failovers, 1);
+        // Fresh metrics report zero — the fault-free path never touches
+        // these, keeping snapshots comparable with pre-chaos baselines.
+        let clean = Metrics::default().snapshot();
+        assert_eq!((clean.retries, clean.failovers), (0, 0));
     }
 
     #[test]

@@ -27,6 +27,32 @@ pub enum Error {
 
     /// Coordinator channel/task failure.
     Coordinator(String),
+
+    /// An array's admission queue hit its configured bound; the request
+    /// must be retried or routed elsewhere.
+    QueueFull {
+        /// Array whose queue rejected the request.
+        array: usize,
+        /// Requests in flight on that array at rejection time.
+        queued: usize,
+        /// The configured per-array bound.
+        bound: usize,
+    },
+
+    /// No healthy array could admit the request (every candidate was
+    /// dead or stalled at the routing instant).
+    ArrayFailed {
+        /// The policy's preferred array at the failed decision.
+        array: usize,
+    },
+
+    /// A request exhausted its bounded retry budget.
+    RetryBudgetExhausted {
+        /// Request id.
+        request: u64,
+        /// Attempts made (initial admission plus retries).
+        attempts: u32,
+    },
 }
 
 impl fmt::Display for Error {
@@ -39,6 +65,22 @@ impl fmt::Display for Error {
             Error::Xla(e) => write!(f, "xla error: {e}"),
             Error::Io(e) => write!(f, "io error: {e}"),
             Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::QueueFull {
+                array,
+                queued,
+                bound,
+            } => write!(
+                f,
+                "queue full: array {array} holds {queued} requests (bound {bound})"
+            ),
+            Error::ArrayFailed { array } => write!(
+                f,
+                "array failed: no healthy array can admit (preferred array {array} down)"
+            ),
+            Error::RetryBudgetExhausted { request, attempts } => write!(
+                f,
+                "retry budget exhausted: request {request} lost after {attempts} attempts"
+            ),
         }
     }
 }
@@ -98,6 +140,33 @@ mod tests {
         assert_eq!(Error::runtime("z").to_string(), "runtime error: z");
         let io: Error = std::io::Error::new(std::io::ErrorKind::Other, "nope").into();
         assert!(io.to_string().starts_with("io error:"));
+    }
+
+    #[test]
+    fn typed_rejections_carry_their_context() {
+        use std::error::Error as _;
+        // Callers (the chaos admission loop, tests) match on these, so
+        // the payloads must survive construction and render readably.
+        let q = Error::QueueFull {
+            array: 2,
+            queued: 9,
+            bound: 8,
+        };
+        assert!(matches!(q, Error::QueueFull { array: 2, bound: 8, .. }));
+        assert_eq!(
+            q.to_string(),
+            "queue full: array 2 holds 9 requests (bound 8)"
+        );
+        let a = Error::ArrayFailed { array: 1 };
+        assert!(matches!(a, Error::ArrayFailed { array: 1 }));
+        assert!(a.to_string().contains("array 1 down"));
+        let r = Error::RetryBudgetExhausted {
+            request: 41,
+            attempts: 9,
+        };
+        assert!(r.to_string().contains("request 41"));
+        assert!(r.to_string().contains("9 attempts"));
+        assert!(r.source().is_none());
     }
 
     #[test]

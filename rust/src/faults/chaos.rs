@@ -1,0 +1,508 @@
+//! Chaos orchestration: the PR-5 policy comparison under seeded fault
+//! scenarios, reported against its own fault-free baseline.
+//!
+//! `repro chaos` runs here. The baseline is the *unmodified*
+//! [`run_fleet_comparison`] — embedded verbatim as the `fault_free`
+//! section of `CHAOS_summary.json`, so a fault-free chaos run is
+//! byte-identical to the `repro fleet` path at any worker count
+//! (asserted by `tests/chaos_determinism.rs`). Each scenario then
+//! replays every `(fleet, policy)` pair through the failure-aware
+//! [`run_policy_chaos`] under a [`FaultPlan`] drawn from the scenario
+//! RNG, and the report distills per-scenario [`Degradation`] —
+//! latency-percentile inflation, completion rate, and the modeled
+//! energy overhead of recovery (degraded-mode service + spare cache
+//! warmup) — into one [`ChaosHeadline`].
+
+use crate::bench_util::Bench;
+use crate::error::{Error, Result};
+use crate::fleet::{
+    build_trace, modeled_knobs, provision_spare, run_fleet_comparison, run_json, run_policy_chaos,
+    spec_json, summary_json, ArraySpec, FleetConfig, FleetReport, PolicyRun, RoutePolicy,
+    HETEROGENEOUS, SQUARE,
+};
+use crate::power::TechParams;
+use crate::util::json::{obj, Json};
+
+use super::{ChaosKnobs, FaultEvent, FaultKind, FaultPlan};
+
+/// Everything one chaos comparison varies and how.
+#[derive(Debug, Clone)]
+pub struct ChaosConfig {
+    /// The underlying fleet comparison (provisioning, trace, knobs).
+    pub fleet: FleetConfig,
+    /// Seeded fault scenarios to replay the comparison under.
+    pub scenarios: usize,
+    /// Recovery policy: retry budget, queue bound, strict escalation.
+    pub knobs: ChaosKnobs,
+    /// Provision a hot spare up front and promote it into dead slots.
+    pub hot_spare: bool,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        ChaosConfig {
+            fleet: FleetConfig::default(),
+            scenarios: 3,
+            knobs: ChaosKnobs::default(),
+            hot_spare: true,
+        }
+    }
+}
+
+impl ChaosConfig {
+    /// Reject configurations with nothing to measure.
+    pub fn validate(&self) -> Result<()> {
+        self.fleet.validate()?;
+        if self.scenarios == 0 {
+            return Err(Error::config("chaos needs at least one scenario"));
+        }
+        if self.knobs.retry_limit == 0 {
+            return Err(Error::config(
+                "retry_limit must be >= 1: a zero budget loses every rejected request",
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// One scenario's full `(fleet, policy)` sweep under its fault plan.
+#[derive(Debug, Clone)]
+pub struct ScenarioOutcome {
+    /// Scenario index (feeds the plan RNG).
+    pub scenario: usize,
+    /// The injected schedule.
+    pub plan: FaultPlan,
+    /// All runs: heterogeneous then square, each in
+    /// [`RoutePolicy::ALL`] order.
+    pub runs: Vec<PolicyRun>,
+}
+
+impl ScenarioOutcome {
+    /// Find one run by fleet label and policy.
+    pub fn run(&self, fleet: &str, policy: RoutePolicy) -> Option<&PolicyRun> {
+        self.runs
+            .iter()
+            .find(|r| r.fleet == fleet && r.policy == policy)
+    }
+}
+
+/// How one scenario degraded the headline lane (heterogeneous fleet,
+/// `shape_affine` routing) versus its fault-free baseline.
+#[derive(Debug, Clone)]
+pub struct Degradation {
+    /// Scenario index.
+    pub scenario: usize,
+    /// Fraction of the trace that completed (1.0 = nothing lost).
+    pub completion_rate: f64,
+    /// p50 latency ratio vs fault-free (1.0 = unchanged).
+    pub p50_inflation: f64,
+    /// p99 latency ratio vs fault-free.
+    pub p99_inflation: f64,
+    /// p99.9 latency ratio vs fault-free.
+    pub p999_inflation: f64,
+    /// Total retries across the lane's arrays.
+    pub retries: u64,
+    /// Total failovers across the lane's arrays.
+    pub failovers: u64,
+    /// Requests lost after exhausting the retry budget.
+    pub lost: u64,
+    /// Hot-spare promotions.
+    pub promotions: u64,
+    /// Modeled recovery energy: degraded-mode surcharge + spare cache
+    /// warmup (µJ).
+    pub recovery_uj: f64,
+    /// Interconnect energy overhead vs fault-free, recovery included
+    /// (percent; 0 = no overhead).
+    pub energy_overhead_pct: f64,
+}
+
+/// The full chaos comparison: fault-free baseline plus every scenario.
+#[derive(Debug, Clone)]
+pub struct ChaosReport {
+    /// The untouched fault-free comparison (the `repro fleet` result).
+    pub baseline: FleetReport,
+    /// The pre-provisioned hot spare, if any.
+    pub spare: Option<ArraySpec>,
+    /// Requests in the trace.
+    pub requests: usize,
+    /// Modeled inter-arrival gap used (µs).
+    pub gap_us: f64,
+    /// `ShapeAffine` spill bound used (MACs).
+    pub spill_macs: u64,
+    /// One outcome per seeded scenario.
+    pub scenarios: Vec<ScenarioOutcome>,
+}
+
+/// Latency-percentile ratio, guarding the degenerate zero baseline.
+fn inflation(run: &PolicyRun, base: &PolicyRun, p: f64) -> f64 {
+    run.latency_us(p) as f64 / base.latency_us(p).max(1) as f64
+}
+
+impl ChaosReport {
+    /// Distill one scenario into its headline-lane [`Degradation`].
+    pub fn degradation(&self, s: &ScenarioOutcome) -> Degradation {
+        let base = self
+            .baseline
+            .run(HETEROGENEOUS, RoutePolicy::ShapeAffine)
+            .expect("baseline always carries the headline lane");
+        let run = s
+            .run(HETEROGENEOUS, RoutePolicy::ShapeAffine)
+            .expect("every scenario carries the headline lane");
+        let sum = |f: fn(&crate::faults::ArrayRobustness) -> u64| -> u64 {
+            run.per_array.iter().map(|a| f(&a.robustness)).sum()
+        };
+        let recovery_uj = run.recovery_uj();
+        Degradation {
+            scenario: s.scenario,
+            completion_rate: run.completion_rate(),
+            p50_inflation: inflation(run, base, 0.50),
+            p99_inflation: inflation(run, base, 0.99),
+            p999_inflation: inflation(run, base, 0.999),
+            retries: sum(|r| r.retries),
+            failovers: sum(|r| r.failovers),
+            lost: run.lost,
+            promotions: sum(|r| r.promotions),
+            recovery_uj,
+            energy_overhead_pct: if base.interconnect_uj > 0.0 {
+                100.0 * ((run.interconnect_uj + recovery_uj) / base.interconnect_uj - 1.0)
+            } else {
+                0.0
+            },
+        }
+    }
+
+    /// Every scenario's degradation, in scenario order.
+    pub fn degradations(&self) -> Vec<Degradation> {
+        self.scenarios.iter().map(|s| self.degradation(s)).collect()
+    }
+
+    /// Roll the per-scenario degradations into one headline.
+    pub fn headline(&self) -> ChaosHeadline {
+        let ds = self.degradations();
+        let n = ds.len().max(1) as f64;
+        ChaosHeadline {
+            scenarios: ds.len(),
+            mean_completion_rate: ds.iter().map(|d| d.completion_rate).sum::<f64>() / n,
+            min_completion_rate: ds
+                .iter()
+                .map(|d| d.completion_rate)
+                .fold(1.0, f64::min),
+            worst_p99_inflation: ds
+                .iter()
+                .map(|d| d.p99_inflation)
+                .fold(1.0, f64::max),
+            total_retries: ds.iter().map(|d| d.retries).sum(),
+            total_failovers: ds.iter().map(|d| d.failovers).sum(),
+            total_lost: ds.iter().map(|d| d.lost).sum(),
+            total_promotions: ds.iter().map(|d| d.promotions).sum(),
+            total_recovery_uj: ds.iter().map(|d| d.recovery_uj).sum(),
+        }
+    }
+}
+
+/// The chaos comparison's one-line verdict, over the headline lane of
+/// every scenario.
+#[derive(Debug, Clone)]
+pub struct ChaosHeadline {
+    /// Scenarios measured.
+    pub scenarios: usize,
+    /// Mean completion rate across scenarios.
+    pub mean_completion_rate: f64,
+    /// Worst-case completion rate.
+    pub min_completion_rate: f64,
+    /// Worst-case p99 inflation.
+    pub worst_p99_inflation: f64,
+    /// Retries summed over scenarios.
+    pub total_retries: u64,
+    /// Failovers summed over scenarios.
+    pub total_failovers: u64,
+    /// Requests lost summed over scenarios.
+    pub total_lost: u64,
+    /// Hot-spare promotions summed over scenarios.
+    pub total_promotions: u64,
+    /// Recovery energy summed over scenarios (µJ).
+    pub total_recovery_uj: f64,
+}
+
+/// Run the fault-free comparison, then replay it under every seeded
+/// fault scenario. Deterministic: the same configuration produces the
+/// same report (and byte-identical [`chaos_bench`] JSON) at any worker
+/// count — asserted by `tests/chaos_determinism.rs`.
+pub fn run_chaos_comparison(ccfg: &ChaosConfig) -> Result<ChaosReport> {
+    ccfg.validate()?;
+    let cfg = &ccfg.fleet;
+    let baseline = run_fleet_comparison(cfg)?;
+    let trace = build_trace(cfg)?;
+    let tech = TechParams::default();
+    let (gap_secs, spill_macs) = modeled_knobs(cfg, &baseline.plan, &trace);
+    let spare = if ccfg.hot_spare {
+        Some(provision_spare(cfg)?)
+    } else {
+        None
+    };
+    let horizon = trace.len() as f64 * gap_secs;
+
+    let mut scenarios = Vec::with_capacity(ccfg.scenarios);
+    for s in 0..ccfg.scenarios {
+        let plan = FaultPlan::generate(cfg.seed, s as u64, cfg.arrays, horizon);
+        let mut runs = Vec::with_capacity(2 * RoutePolicy::ALL.len());
+        for (label, specs) in [
+            (HETEROGENEOUS, &baseline.plan.selected),
+            (SQUARE, &baseline.plan.square),
+        ] {
+            for policy in RoutePolicy::ALL {
+                runs.push(run_policy_chaos(
+                    specs,
+                    label,
+                    policy,
+                    &trace,
+                    cfg,
+                    &ccfg.knobs,
+                    &plan,
+                    spare.as_ref(),
+                    gap_secs,
+                    spill_macs,
+                    &tech,
+                )?);
+            }
+        }
+        scenarios.push(ScenarioOutcome {
+            scenario: s,
+            plan,
+            runs,
+        });
+    }
+    Ok(ChaosReport {
+        baseline,
+        spare,
+        requests: trace.len(),
+        gap_us: gap_secs * 1e6,
+        spill_macs,
+        scenarios,
+    })
+}
+
+// ---------------------------------------------------------------------
+// Serialization
+// ---------------------------------------------------------------------
+
+fn fault_event_json(e: &FaultEvent) -> Json {
+    let mut kv = vec![
+        ("array", Json::Num(e.array as f64)),
+        ("at_us", Json::Num(e.at_secs * 1e6)),
+        ("kind", Json::Str(e.kind.name().to_string())),
+    ];
+    match e.kind {
+        FaultKind::TransientStall { secs } => kv.push(("stall_us", Json::Num(secs * 1e6))),
+        FaultKind::SlowClock { factor } => kv.push(("factor", Json::Num(factor))),
+        FaultKind::ColumnLoss { fraction } => kv.push(("fraction", Json::Num(fraction))),
+        FaultKind::PermanentDeath => {}
+    }
+    kv.push(("label", Json::Str(e.label())));
+    obj(kv)
+}
+
+fn degradation_json(d: &Degradation) -> Json {
+    obj(vec![
+        ("scenario", Json::Num(d.scenario as f64)),
+        ("completion_rate", Json::Num(d.completion_rate)),
+        ("p50_inflation", Json::Num(d.p50_inflation)),
+        ("p99_inflation", Json::Num(d.p99_inflation)),
+        ("p999_inflation", Json::Num(d.p999_inflation)),
+        ("retries", Json::Num(d.retries as f64)),
+        ("failovers", Json::Num(d.failovers as f64)),
+        ("lost", Json::Num(d.lost as f64)),
+        ("promotions", Json::Num(d.promotions as f64)),
+        ("recovery_uj", Json::Num(d.recovery_uj)),
+        ("energy_overhead_pct", Json::Num(d.energy_overhead_pct)),
+    ])
+}
+
+fn scenario_json(report: &ChaosReport, s: &ScenarioOutcome) -> Json {
+    obj(vec![
+        ("scenario", Json::Num(s.scenario as f64)),
+        (
+            "events",
+            Json::Arr(s.plan.events.iter().map(fault_event_json).collect()),
+        ),
+        ("runs", Json::Arr(s.runs.iter().map(run_json).collect())),
+        ("degradation", degradation_json(&report.degradation(s))),
+    ])
+}
+
+fn headline_json(h: &ChaosHeadline) -> Json {
+    obj(vec![
+        ("scenarios", Json::Num(h.scenarios as f64)),
+        ("mean_completion_rate", Json::Num(h.mean_completion_rate)),
+        ("min_completion_rate", Json::Num(h.min_completion_rate)),
+        ("worst_p99_inflation", Json::Num(h.worst_p99_inflation)),
+        ("total_retries", Json::Num(h.total_retries as f64)),
+        ("total_failovers", Json::Num(h.total_failovers as f64)),
+        ("total_lost", Json::Num(h.total_lost as f64)),
+        ("total_promotions", Json::Num(h.total_promotions as f64)),
+        ("total_recovery_uj", Json::Num(h.total_recovery_uj)),
+    ])
+}
+
+/// The machine-readable chaos document. The `fault_free` section is the
+/// *unmodified* [`summary_json`] of the baseline comparison — the same
+/// bytes `repro fleet` would serialize — so fault-free byte-identity is
+/// structural, not incidental. Deterministic — no wall-clock, no worker
+/// count.
+pub fn chaos_summary_json(ccfg: &ChaosConfig, report: &ChaosReport) -> Json {
+    obj(vec![
+        ("scenarios", Json::Num(ccfg.scenarios as f64)),
+        ("retry_limit", Json::Num(ccfg.knobs.retry_limit as f64)),
+        ("queue_bound", Json::Num(ccfg.knobs.queue_bound as f64)),
+        ("hot_spare", Json::Bool(ccfg.hot_spare)),
+        (
+            "spare",
+            report.spare.as_ref().map(spec_json).unwrap_or(Json::Null),
+        ),
+        ("fault_free", summary_json(&ccfg.fleet, &report.baseline)),
+        (
+            "chaos_scenarios",
+            Json::Arr(
+                report
+                    .scenarios
+                    .iter()
+                    .map(|s| scenario_json(report, s))
+                    .collect(),
+            ),
+        ),
+        ("headline", headline_json(&report.headline())),
+    ])
+}
+
+/// Assemble the `CHAOS_summary.json` bench document: headline metrics
+/// as notes plus the full [`chaos_summary_json`] section. Like the
+/// fleet bench, it carries no timing case and no worker count.
+pub fn chaos_bench(ccfg: &ChaosConfig, report: &ChaosReport) -> Bench {
+    let h = report.headline();
+    let mut b = Bench::new("chaos");
+    b.note("scenarios", h.scenarios as f64);
+    b.note("requests", report.requests as f64);
+    b.note("mean_completion_rate", h.mean_completion_rate);
+    b.note("min_completion_rate", h.min_completion_rate);
+    b.note("worst_p99_inflation", h.worst_p99_inflation);
+    b.note("total_retries", h.total_retries as f64);
+    b.note("total_failovers", h.total_failovers as f64);
+    b.note("total_lost", h.total_lost as f64);
+    b.note("total_promotions", h.total_promotions as f64);
+    b.note("total_recovery_uj", h.total_recovery_uj);
+    b.section("chaos", chaos_summary_json(ccfg, report));
+    b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::explore::WorkloadKind;
+
+    fn tiny_ccfg() -> ChaosConfig {
+        ChaosConfig {
+            fleet: FleetConfig {
+                pe_budget: 16,
+                arrays: 2,
+                workload: WorkloadKind::Synth,
+                max_layers: 2,
+                requests: 10,
+                unique_inputs: 2,
+                seed: 11,
+                window: 3,
+                cache_capacity: 16,
+                workers: 1,
+                ..FleetConfig::default()
+            },
+            scenarios: 2,
+            knobs: ChaosKnobs::default(),
+            hot_spare: true,
+        }
+    }
+
+    #[test]
+    fn validation_rejects_empty_measurements() {
+        assert!(tiny_ccfg().validate().is_ok());
+        let no_scenarios = ChaosConfig {
+            scenarios: 0,
+            ..tiny_ccfg()
+        };
+        assert!(no_scenarios.validate().is_err());
+        let no_retries = ChaosConfig {
+            knobs: ChaosKnobs {
+                retry_limit: 0,
+                ..ChaosKnobs::default()
+            },
+            ..tiny_ccfg()
+        };
+        assert!(no_retries.validate().is_err());
+        let bad_fleet = ChaosConfig {
+            fleet: FleetConfig {
+                arrays: 0,
+                ..tiny_ccfg().fleet
+            },
+            ..tiny_ccfg()
+        };
+        assert!(bad_fleet.validate().is_err());
+    }
+
+    #[test]
+    fn comparison_measures_every_scenario_and_lane() {
+        let ccfg = tiny_ccfg();
+        let report = run_chaos_comparison(&ccfg).unwrap();
+        assert_eq!(report.scenarios.len(), 2);
+        assert!(report.spare.is_some());
+        assert_eq!(report.baseline.runs.len(), 6);
+        for s in &report.scenarios {
+            assert_eq!(s.runs.len(), 6);
+            assert!(!s.plan.is_empty());
+            for run in &s.runs {
+                // Nothing silently vanishes: every request completes or
+                // is explicitly counted lost.
+                assert_eq!(
+                    run.completed + run.lost,
+                    ccfg.fleet.requests as u64,
+                    "{} {:?}",
+                    run.fleet,
+                    run.policy
+                );
+            }
+        }
+        let ds = report.degradations();
+        assert_eq!(ds.len(), 2);
+        for d in &ds {
+            assert!(d.completion_rate > 0.0 && d.completion_rate <= 1.0);
+            assert!(d.p99_inflation.is_finite() && d.p99_inflation > 0.0);
+            assert!(d.energy_overhead_pct.is_finite());
+        }
+        let h = report.headline();
+        assert_eq!(h.scenarios, 2);
+        assert!(h.min_completion_rate <= h.mean_completion_rate);
+        assert!(h.worst_p99_inflation >= 1.0);
+    }
+
+    #[test]
+    fn summary_embeds_the_fault_free_baseline_verbatim() {
+        let ccfg = tiny_ccfg();
+        let report = run_chaos_comparison(&ccfg).unwrap();
+        let j = chaos_summary_json(&ccfg, &report);
+        // The fault_free section is byte-for-byte the plain fleet
+        // summary of an independent `repro fleet` run.
+        let independent = run_fleet_comparison(&ccfg.fleet).unwrap();
+        assert_eq!(
+            j.req("fault_free").unwrap().to_string(),
+            summary_json(&ccfg.fleet, &independent).to_string()
+        );
+        assert_eq!(
+            j.req("chaos_scenarios").unwrap().as_arr().unwrap().len(),
+            2
+        );
+        assert!(j.req("headline").unwrap().get("worst_p99_inflation").is_some());
+        assert!(j.req("spare").unwrap().get("rows").is_some());
+        // The bench wrapper parses back with the section present.
+        let text = chaos_bench(&ccfg, &report).to_json();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(parsed.req("suite").unwrap().as_str().unwrap(), "chaos");
+        assert!(parsed.req("chaos").unwrap().get("fault_free").is_some());
+    }
+}

@@ -1,0 +1,542 @@
+//! Deterministic fault injection + self-healing for the serving fleet.
+//!
+//! The fleet layer ([`crate::fleet`]) assumes every array is healthy
+//! forever; production clusters are not. This module models the failure
+//! surface in the same currency as the rest of the crate — **seeded,
+//! modeled time** — so a chaos run is a pure function of its
+//! configuration, byte-identical at any worker count:
+//!
+//! * [`FaultPlan`] — a deterministic schedule of fault events drawn from
+//!   the scenario RNG: transient admission stalls, permanent array
+//!   death, slow-clock degradation, and PE-column faults that shrink an
+//!   array's effective geometry (the ArrayFlex-style degraded mode:
+//!   keep serving, slower, rather than binary-fail).
+//! * [`HealthState`]/[`HealthTracker`] — per-array health evolved in
+//!   modeled time by the plan; the admission loop consults it for
+//!   masking, the cost model for degraded closed-form cycles.
+//! * [`backoff_secs`] — bounded exponential backoff in modeled seconds:
+//!   a rejected request re-arrives at a deterministic later instant of
+//!   the same admission timeline, never a wall-clock one.
+//! * [`ChaosKnobs`] — the recovery policy: retry budget, optional
+//!   per-array inflight bound, strict escalation.
+//!
+//! The orchestration — running the PR-5 policy comparison under N
+//! seeded fault scenarios and reporting degradation vs the fault-free
+//! run — lives in [`chaos`]; the failure-aware admission loop itself is
+//! [`crate::fleet::run_policy_chaos`], which delegates to the untouched
+//! [`crate::fleet::run_policy`] whenever the plan is empty so the
+//! fault-free path stays bit-identical to `repro fleet`.
+
+pub mod chaos;
+
+pub use chaos::{
+    chaos_bench, chaos_summary_json, run_chaos_comparison, ChaosConfig, ChaosHeadline,
+    ChaosReport, Degradation, ScenarioOutcome,
+};
+
+use crate::error::{Error, Result};
+use crate::fleet::ArraySpec;
+use crate::serve::ShapeKey;
+use crate::util::rng::Rng;
+
+/// One kind of injected fault.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// The array refuses admission for `secs` of modeled time after the
+    /// injection instant; inflight work completes normally.
+    TransientStall {
+        /// Stall duration (modeled seconds).
+        secs: f64,
+    },
+    /// The array dies: inflight work is invalidated (retried elsewhere)
+    /// and the array never admits again — unless a hot spare is
+    /// promoted into its slot.
+    PermanentDeath,
+    /// Clock degradation: every service time on the array multiplies by
+    /// `factor` (> 1) from the injection instant on.
+    SlowClock {
+        /// Service-time multiplier.
+        factor: f64,
+    },
+    /// PE-column faults: `fraction` of the array's columns are fused
+    /// off, shrinking the effective geometry the closed-form cycle
+    /// model sees (more tile passes per GEMM).
+    ColumnLoss {
+        /// Fraction of columns lost, in `(0, 1)`.
+        fraction: f64,
+    },
+}
+
+impl FaultKind {
+    /// Short lowercase name (JSON/report spelling).
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::TransientStall { .. } => "transient_stall",
+            FaultKind::PermanentDeath => "permanent_death",
+            FaultKind::SlowClock { .. } => "slow_clock",
+            FaultKind::ColumnLoss { .. } => "column_loss",
+        }
+    }
+}
+
+/// One scheduled fault.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    /// Target array index.
+    pub array: usize,
+    /// Injection instant (modeled seconds from trace start).
+    pub at_secs: f64,
+    /// What happens.
+    pub kind: FaultKind,
+}
+
+impl FaultEvent {
+    /// Compact display label, e.g. `array1 slow_clock x1.47 @118us`.
+    pub fn label(&self) -> String {
+        let what = match self.kind {
+            FaultKind::TransientStall { secs } => {
+                format!("transient_stall {:.0}us", secs * 1e6)
+            }
+            FaultKind::PermanentDeath => "permanent_death".to_string(),
+            FaultKind::SlowClock { factor } => format!("slow_clock x{factor:.2}"),
+            FaultKind::ColumnLoss { fraction } => {
+                format!("column_loss {:.0}%", fraction * 100.0)
+            }
+        };
+        format!("array{} {} @{:.0}us", self.array, what, self.at_secs * 1e6)
+    }
+}
+
+/// A deterministic fault schedule for one scenario.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// Scenario index the plan was drawn for (0 for hand-built plans).
+    pub scenario: u64,
+    /// Events, ascending by injection time.
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// The empty plan: no faults. [`crate::fleet::run_policy_chaos`]
+    /// delegates to the plain [`crate::fleet::run_policy`] for it, so
+    /// an empty-plan chaos run is bit-identical to `repro fleet`.
+    pub fn none() -> FaultPlan {
+        FaultPlan {
+            scenario: 0,
+            events: Vec::new(),
+        }
+    }
+
+    /// Whether the plan injects anything.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// A hand-built single-permanent-failure plan — the acceptance
+    /// scenario: one array dies, everything must still complete.
+    pub fn single_death(array: usize, at_secs: f64) -> FaultPlan {
+        FaultPlan {
+            scenario: 0,
+            events: vec![FaultEvent {
+                array,
+                at_secs,
+                kind: FaultKind::PermanentDeath,
+            }],
+        }
+    }
+
+    /// Draw a scenario's schedule from the seeded RNG: 1–3 events on
+    /// random arrays inside the trace horizon. At most `arrays − 1`
+    /// permanent deaths are dealt (a fleet with every array dead has no
+    /// recovery story to measure); a death that would exceed the cap
+    /// degrades to a transient stall. Deterministic: same
+    /// `(seed, scenario, arrays, horizon)` → same plan forever.
+    pub fn generate(seed: u64, scenario: u64, arrays: usize, horizon_secs: f64) -> FaultPlan {
+        assert!(arrays > 0, "fault plan needs a non-empty fleet");
+        assert!(
+            horizon_secs.is_finite() && horizon_secs > 0.0,
+            "fault plan needs a positive horizon"
+        );
+        let mut rng = Rng::new(seed ^ (scenario + 1).wrapping_mul(0xA076_1D64_78BD_642F));
+        let count = 1 + rng.index(0, 3);
+        let mut deaths = 0usize;
+        let mut events = Vec::with_capacity(count);
+        for _ in 0..count {
+            let array = rng.index(0, arrays);
+            // Inside [5%, 90%] of the horizon: early enough to matter,
+            // late enough that some traffic ran fault-free first.
+            let at_secs = (0.05 + 0.85 * rng.uniform()) * horizon_secs;
+            let roll = rng.index(0, 4);
+            let kind = if roll == 0 && deaths + 1 < arrays {
+                deaths += 1;
+                FaultKind::PermanentDeath
+            } else if roll <= 1 {
+                FaultKind::TransientStall {
+                    secs: (0.05 + 0.15 * rng.uniform()) * horizon_secs,
+                }
+            } else if roll == 2 {
+                FaultKind::SlowClock {
+                    factor: 1.25 + rng.uniform(),
+                }
+            } else {
+                FaultKind::ColumnLoss {
+                    fraction: 0.25 + 0.25 * rng.uniform(),
+                }
+            };
+            events.push(FaultEvent {
+                array,
+                at_secs,
+                kind,
+            });
+        }
+        events.sort_by(|a, b| a.at_secs.total_cmp(&b.at_secs).then(a.array.cmp(&b.array)));
+        FaultPlan { scenario, events }
+    }
+}
+
+/// Health of one array at a modeled instant.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HealthState {
+    /// Dead arrays never admit again (until a spare takes the slot).
+    pub alive: bool,
+    /// Admission refused before this modeled instant.
+    pub stall_until: f64,
+    /// Service-time multiplier (1.0 = nominal).
+    pub clock_factor: f64,
+    /// Fraction of columns fused off (0.0 = full geometry).
+    pub column_loss: f64,
+}
+
+impl Default for HealthState {
+    fn default() -> Self {
+        HealthState {
+            alive: true,
+            stall_until: 0.0,
+            clock_factor: 1.0,
+            column_loss: 0.0,
+        }
+    }
+}
+
+impl HealthState {
+    /// Whether the array can admit a request arriving at `t`.
+    pub fn admittable(&self, t: f64) -> bool {
+        self.alive && t >= self.stall_until
+    }
+
+    /// Whether the array serves in a degraded mode (slower clock or
+    /// lost columns) — it still admits, at a higher modeled cost.
+    pub fn degraded(&self) -> bool {
+        self.clock_factor > 1.0 || self.column_loss > 0.0
+    }
+
+    /// Columns still usable out of `cols` (at least 1: a fully fused
+    /// array would have died instead).
+    pub fn effective_cols(&self, cols: usize) -> usize {
+        ((cols as f64 * (1.0 - self.column_loss)).floor() as usize).max(1)
+    }
+
+    /// Closed-form WS cycles of one GEMM on the array's *effective*
+    /// geometry: [`ArraySpec::modeled_cycles`] with the column count
+    /// shrunk by the fused fraction. Healthy state reproduces the
+    /// nominal count exactly.
+    pub fn effective_cycles(&self, spec: &ArraySpec, shape: &ShapeKey) -> u64 {
+        let cols = self.effective_cols(spec.sa.cols);
+        let passes = shape.k.div_ceil(spec.sa.rows) * shape.n.div_ceil(cols);
+        (passes * spec.sa.ws_tile_cycles(shape.m)) as u64
+    }
+
+    /// Modeled service time under degradation: effective cycles at the
+    /// degraded clock. Healthy state reproduces
+    /// [`ArraySpec::modeled_service_secs`] bit-for-bit (× 1.0 is exact),
+    /// so a fault-free chaos admission prices like the plain one.
+    pub fn effective_service_secs(&self, spec: &ArraySpec, shape: &ShapeKey) -> f64 {
+        self.effective_cycles(spec, shape) as f64 / (spec.sa.clock_ghz * 1e9) * self.clock_factor
+    }
+}
+
+/// Per-array health evolved by the fault plan in modeled time.
+#[derive(Debug, Clone)]
+pub struct HealthTracker {
+    states: Vec<HealthState>,
+}
+
+impl HealthTracker {
+    /// All-healthy tracker for `n` arrays.
+    pub fn new(n: usize) -> Self {
+        HealthTracker {
+            states: vec![HealthState::default(); n],
+        }
+    }
+
+    /// Health of array `a`.
+    pub fn state(&self, a: usize) -> &HealthState {
+        &self.states[a]
+    }
+
+    /// Whether array `a` admits at modeled instant `t`.
+    pub fn admittable(&self, a: usize, t: f64) -> bool {
+        self.states[a].admittable(t)
+    }
+
+    /// Stall array `a` until `until` (extends, never shortens).
+    pub fn stall(&mut self, a: usize, until: f64) {
+        let s = &mut self.states[a];
+        if until > s.stall_until {
+            s.stall_until = until;
+        }
+    }
+
+    /// Degrade array `a`'s clock by `factor` (compounding, capped 8×).
+    pub fn slow(&mut self, a: usize, factor: f64) {
+        let s = &mut self.states[a];
+        s.clock_factor = (s.clock_factor * factor.max(1.0)).min(8.0);
+    }
+
+    /// Fuse off a further `fraction` of array `a`'s columns (additive,
+    /// capped at 90% so the effective geometry never vanishes).
+    pub fn lose_columns(&mut self, a: usize, fraction: f64) {
+        let s = &mut self.states[a];
+        s.column_loss = (s.column_loss + fraction.clamp(0.0, 1.0)).min(0.9);
+    }
+
+    /// Kill array `a` permanently.
+    pub fn kill(&mut self, a: usize) {
+        self.states[a].alive = false;
+    }
+
+    /// Reset array `a` to full health — a promoted hot spare took the
+    /// slot.
+    pub fn revive(&mut self, a: usize) {
+        self.states[a] = HealthState::default();
+    }
+
+    /// How many arrays are currently alive.
+    pub fn alive(&self) -> usize {
+        self.states.iter().filter(|s| s.alive).count()
+    }
+}
+
+/// Per-array robustness rollup of one chaos run. All-zero in a
+/// fault-free run, so the shared serializers keep the fault-free chaos
+/// path byte-identical to the plain fleet path.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ArrayRobustness {
+    /// Requests re-queued after this array rejected or dropped them.
+    pub retries: u64,
+    /// Requests this array would have taken but that were rerouted
+    /// because it was down or stalled at the routing instant.
+    pub failovers: u64,
+    /// Inflight requests invalidated when this array died.
+    pub casualties: u64,
+    /// Requests lost at this array after the retry budget.
+    pub lost: u64,
+    /// Hot spares promoted into this slot.
+    pub promotions: u64,
+    /// Extra modeled interconnect energy (µJ) of serving in degraded
+    /// mode: (degraded − nominal service time) × provisioned power.
+    pub degraded_uj: f64,
+    /// Modeled interconnect energy (µJ) spent warming the promoted
+    /// spare's cache.
+    pub warmup_uj: f64,
+}
+
+impl ArrayRobustness {
+    /// Energy overhead of recovery on this slot (µJ): degraded-mode
+    /// surcharge plus spare warmup.
+    pub fn recovery_uj(&self) -> f64 {
+        self.degraded_uj + self.warmup_uj
+    }
+}
+
+/// Bounded exponential backoff in modeled seconds: `base × 2^(attempt−1)`,
+/// capped at 64 × base. `attempt` counts retries from 1. Modeled time,
+/// not wall clock: the retry re-enters the admission event queue at a
+/// deterministic instant, so chaos runs stay byte-identical at any
+/// worker count.
+pub fn backoff_secs(base_secs: f64, attempt: u32) -> f64 {
+    let exp = attempt.saturating_sub(1).min(6);
+    base_secs * (1u64 << exp) as f64
+}
+
+/// The recovery policy of a chaos run.
+#[derive(Debug, Clone)]
+pub struct ChaosKnobs {
+    /// Max retries per request beyond its first admission attempt; a
+    /// request rejected past the budget is counted lost.
+    pub retry_limit: u32,
+    /// Per-array inflight bound enforced under faults (0 = unbounded).
+    /// A full queue rejects with [`Error::QueueFull`] and the request
+    /// backs off like any other failure.
+    pub queue_bound: usize,
+    /// Escalate the first lost request into
+    /// [`Error::RetryBudgetExhausted`] instead of counting it — for
+    /// callers that need all-or-nothing completion.
+    pub strict: bool,
+}
+
+impl Default for ChaosKnobs {
+    fn default() -> Self {
+        ChaosKnobs {
+            retry_limit: 8,
+            queue_bound: 0,
+            strict: false,
+        }
+    }
+}
+
+impl ChaosKnobs {
+    /// Declare a request lost, or escalate under strict mode. Called by
+    /// the admission loop when `attempts` exceeded the budget.
+    pub fn check_loss(&self, request: u64, attempts: u32) -> Result<()> {
+        if self.strict {
+            Err(Error::RetryBudgetExhausted { request, attempts })
+        } else {
+            Ok(())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::explore::WorkloadKind;
+    use crate::fleet::{provision, FleetConfig};
+
+    #[test]
+    fn plans_are_deterministic_and_bounded() {
+        let a = FaultPlan::generate(2023, 1, 3, 1e-3);
+        let b = FaultPlan::generate(2023, 1, 3, 1e-3);
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
+        assert!((1..=3).contains(&a.events.len()));
+        for w in a.events.windows(2) {
+            assert!(w[0].at_secs <= w[1].at_secs, "events sorted by time");
+        }
+        let mut deaths = 0;
+        for e in &a.events {
+            assert!(e.array < 3);
+            assert!(e.at_secs > 0.0 && e.at_secs < 1e-3);
+            if e.kind == FaultKind::PermanentDeath {
+                deaths += 1;
+            }
+        }
+        assert!(deaths < 3, "never kills the whole fleet");
+        // Different scenarios draw different schedules.
+        let c = FaultPlan::generate(2023, 2, 3, 1e-3);
+        assert_ne!(a, c);
+        // A single-array fleet never draws a death at all.
+        for scn in 0..8 {
+            let p = FaultPlan::generate(7, scn, 1, 1e-3);
+            assert!(p.events.iter().all(|e| e.kind != FaultKind::PermanentDeath));
+        }
+    }
+
+    #[test]
+    fn empty_and_single_death_constructors() {
+        assert!(FaultPlan::none().is_empty());
+        let p = FaultPlan::single_death(1, 5e-4);
+        assert_eq!(p.events.len(), 1);
+        assert_eq!(p.events[0].array, 1);
+        assert_eq!(p.events[0].kind, FaultKind::PermanentDeath);
+        assert!(p.events[0].label().contains("permanent_death"));
+    }
+
+    #[test]
+    fn health_transitions() {
+        let mut h = HealthTracker::new(2);
+        assert!(h.admittable(0, 0.0));
+        assert_eq!(h.alive(), 2);
+
+        h.stall(0, 1.0);
+        assert!(!h.admittable(0, 0.5));
+        assert!(h.admittable(0, 1.0), "stall ends at the boundary");
+        h.stall(0, 0.5);
+        assert_eq!(h.state(0).stall_until, 1.0, "stalls never shorten");
+
+        h.slow(1, 1.5);
+        h.slow(1, 1.5);
+        assert!((h.state(1).clock_factor - 2.25).abs() < 1e-12);
+        assert!(h.state(1).degraded());
+        for _ in 0..10 {
+            h.slow(1, 2.0);
+        }
+        assert!(h.state(1).clock_factor <= 8.0, "compounding is capped");
+
+        h.kill(0);
+        assert!(!h.admittable(0, 99.0));
+        assert_eq!(h.alive(), 1);
+        h.revive(0);
+        assert_eq!(h.state(0), &HealthState::default());
+    }
+
+    #[test]
+    fn effective_geometry_degrades_cycles() {
+        let plan = provision(&FleetConfig {
+            pe_budget: 16,
+            arrays: 1,
+            workload: WorkloadKind::Synth,
+            max_layers: 1,
+            seed: 7,
+            workers: 1,
+            ..FleetConfig::default()
+        })
+        .unwrap();
+        let spec = &plan.selected[0];
+        let shape = ShapeKey { m: 10, k: 33, n: 40 };
+
+        // Healthy state reproduces the nominal closed form bit-for-bit.
+        let healthy = HealthState::default();
+        assert_eq!(healthy.effective_cycles(spec, &shape), spec.modeled_cycles(&shape));
+        assert_eq!(
+            healthy.effective_service_secs(spec, &shape).to_bits(),
+            spec.modeled_service_secs(&shape).to_bits()
+        );
+
+        // Column loss shrinks the geometry and raises cycles.
+        let mut h = HealthTracker::new(1);
+        h.lose_columns(0, 0.5);
+        let degraded = h.state(0);
+        assert!(degraded.effective_cols(spec.sa.cols) <= spec.sa.cols.div_ceil(2));
+        assert!(degraded.effective_cycles(spec, &shape) >= spec.modeled_cycles(&shape));
+        // Slow clock stretches service time on top.
+        h.slow(0, 2.0);
+        assert!(
+            h.state(0).effective_service_secs(spec, &shape)
+                >= 2.0 * spec.modeled_service_secs(&shape)
+        );
+        // Even total fusing keeps one column alive.
+        let mut worst = HealthState::default();
+        worst.column_loss = 0.9;
+        assert!(worst.effective_cols(1) >= 1);
+    }
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let base = 10e-6;
+        assert_eq!(backoff_secs(base, 1), base);
+        assert_eq!(backoff_secs(base, 2), 2.0 * base);
+        assert_eq!(backoff_secs(base, 3), 4.0 * base);
+        assert_eq!(backoff_secs(base, 7), 64.0 * base);
+        assert_eq!(backoff_secs(base, 40), 64.0 * base, "cap at 64x");
+        assert_eq!(backoff_secs(base, 0), base, "attempt 0 saturates");
+    }
+
+    #[test]
+    fn knobs_strict_mode_escalates_losses() {
+        let lax = ChaosKnobs::default();
+        assert!(lax.check_loss(3, 9).is_ok());
+        let strict = ChaosKnobs {
+            strict: true,
+            ..ChaosKnobs::default()
+        };
+        let err = strict.check_loss(3, 9).unwrap_err();
+        assert!(matches!(
+            err,
+            crate::error::Error::RetryBudgetExhausted {
+                request: 3,
+                attempts: 9
+            }
+        ));
+    }
+}

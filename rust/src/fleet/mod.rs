@@ -47,20 +47,21 @@
 pub mod provision;
 pub mod router;
 
-pub use provision::{provision, ArraySpec, FleetPlan};
-pub use router::{RoutePolicy, Router};
+pub use provision::{provision, provision_spare, ArraySpec, FleetPlan};
+pub use router::{RoutePolicy, RouteOutcome, Router};
 
-use std::collections::VecDeque;
+use std::collections::{BinaryHeap, HashSet, VecDeque};
 use std::time::Instant;
 
 use crate::bench_util::Bench;
 use crate::coordinator::metrics::{percentile_micros, sorted_micros};
 use crate::error::{Error, Result};
 use crate::explore::WorkloadKind;
+use crate::faults::{backoff_secs, ArrayRobustness, ChaosKnobs, FaultKind, FaultPlan, HealthTracker};
 use crate::floorplan::PeGeometry;
 use crate::power::{self, TechParams};
 use crate::serve::{
-    build_requests, CacheStats, InferRequest, ScenarioConfig, ServeConfig, Server,
+    build_requests, operand_digest, CacheStats, InferRequest, ScenarioConfig, ServeConfig, Server,
 };
 use crate::util::json::{obj, Json};
 
@@ -246,6 +247,9 @@ pub struct ArrayRun {
     pub silicon_secs: f64,
     /// The array's result-cache statistics after the run.
     pub cache: CacheStats,
+    /// Robustness rollup: retries, failovers, casualties, losses,
+    /// promotions and recovery energy. All-zero in a fault-free run.
+    pub robustness: ArrayRobustness,
 }
 
 /// One `(fleet, policy)` run over the trace.
@@ -273,6 +277,11 @@ pub struct PolicyRun {
     /// Measured wall-clock seconds of the run (printed, never
     /// serialized: varies with worker count and machine).
     pub wall_secs: f64,
+    /// Requests that completed (equals the trace length in a fault-free
+    /// run; under faults, `completed + lost` equals it).
+    pub completed: u64,
+    /// Requests lost after the retry budget (0 without faults).
+    pub lost: u64,
 }
 
 impl PolicyRun {
@@ -304,6 +313,24 @@ impl PolicyRun {
             return 0.0;
         }
         self.total_uj / self.silicon_secs * 1e-3
+    }
+
+    /// Fraction of the trace that completed, in [0, 1].
+    pub fn completion_rate(&self) -> f64 {
+        let total = self.completed + self.lost;
+        if total == 0 {
+            return 0.0;
+        }
+        self.completed as f64 / total as f64
+    }
+
+    /// Energy overhead of recovery across the fleet (µJ): degraded-mode
+    /// surcharge plus hot-spare cache warmup.
+    pub fn recovery_uj(&self) -> f64 {
+        self.per_array
+            .iter()
+            .map(|a| a.robustness.recovery_uj())
+            .sum()
     }
 }
 
@@ -467,6 +494,7 @@ pub fn run_policy(
                 total_uj: acc.total_uj,
                 silicon_secs: acc.silicon_secs,
                 cache: arr.server.cache_stats(),
+                robustness: ArrayRobustness::default(),
             }
         })
         .collect();
@@ -481,6 +509,474 @@ pub fn run_policy(
         silicon_secs: per_array.iter().map(|a| a.silicon_secs).sum(),
         per_array,
         wall_secs: t_wall.elapsed().as_secs_f64(),
+        completed: trace.len() as u64,
+        lost: 0,
+    })
+}
+
+// ---------------------------------------------------------------------
+// Failure-aware admission (the chaos engine)
+// ---------------------------------------------------------------------
+
+/// Event of the chaos admission timeline.
+#[derive(Clone, Copy)]
+enum ChaosEv {
+    /// Request `idx` (re-)arrives. `t0` is its *original* arrival
+    /// instant (latency is measured from it, so retries inflate the
+    /// percentiles honestly); `attempt` counts prior failed tries.
+    Arrive { idx: usize, t0: f64, attempt: u32 },
+    /// Fault `event` of the plan fires.
+    Fault { event: usize },
+}
+
+/// Heap entry: earliest modeled time first, sequence number breaking
+/// ties — the order is a pure function of the configuration.
+struct ChaosItem {
+    time: f64,
+    seq: u64,
+    ev: ChaosEv,
+}
+
+impl PartialEq for ChaosItem {
+    fn eq(&self, other: &Self) -> bool {
+        self.time.to_bits() == other.time.to_bits() && self.seq == other.seq
+    }
+}
+
+impl Eq for ChaosItem {}
+
+impl PartialOrd for ChaosItem {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for ChaosItem {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // `BinaryHeap` is a max-heap; reverse both keys for
+        // earliest-time, lowest-sequence first.
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// One admitted-but-not-retired request on an array.
+#[derive(Clone, Copy)]
+struct ChaosInflight {
+    finish: f64,
+    macs: u64,
+    idx: usize,
+    t0: f64,
+    attempt: u32,
+}
+
+/// Retire every modeled completion up to instant `t`: pop finished
+/// inflight entries, record their latency, and move the underlying
+/// requests into the per-array retirement batch, flushing through the
+/// server at the admission window. Billing at *retirement* (not
+/// admission) is what keeps a dead array from being charged for
+/// casualties it never finished.
+#[allow(clippy::too_many_arguments)]
+fn retire_chaos(
+    t: f64,
+    window: usize,
+    fleet: &Fleet,
+    geoms: &[PeGeometry],
+    tech: &TechParams,
+    trace: &[InferRequest],
+    inflight: &mut [VecDeque<ChaosInflight>],
+    outstanding: &mut [u64],
+    retired: &mut [Vec<InferRequest>],
+    accs: &mut [ArrayAcc],
+    lat_secs: &mut Vec<f64>,
+    completed: &mut u64,
+) -> Result<()> {
+    for a in 0..fleet.arrays.len() {
+        while let Some(f) = inflight[a].front().copied() {
+            if f.finish > t {
+                break;
+            }
+            inflight[a].pop_front();
+            outstanding[a] -= f.macs;
+            lat_secs.push(f.finish - f.t0);
+            *completed += 1;
+            retired[a].push(trace[f.idx].clone());
+            if retired[a].len() >= window {
+                flush_array(&fleet.arrays[a], &geoms[a], tech, &mut retired[a], &mut accs[a])?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Run one policy over the trace on a fleet built from `specs`, under a
+/// fault plan — the failure-aware sibling of [`run_policy`].
+///
+/// **Fault-free path.** An empty plan delegates to [`run_policy`]
+/// outright, so `repro chaos`'s baseline is *the same code* as `repro
+/// fleet` and stays bit-identical to it (asserted by
+/// `tests/chaos_determinism.rs`).
+///
+/// **Faulted path.** Admission becomes an event loop over a
+/// deterministic min-heap of arrivals, retries and fault injections, all
+/// in modeled time:
+///
+/// * Routing goes through the fault-masked [`Router::route_masked`];
+///   a request whose preferred array is down fails over (counted per
+///   array) and one that no array can admit backs off exponentially
+///   ([`backoff_secs`]) and re-arrives later, up to
+///   [`ChaosKnobs::retry_limit`] tries before it is counted lost.
+/// * `ShapeAffine` costs are priced on each array's *effective*
+///   degraded geometry and clock ([`crate::faults::HealthState`]), so
+///   routing steers around slow and shrunken arrays, and the extra
+///   modeled energy of degraded service accumulates per array.
+/// * Permanent death invalidates the array's inflight requests
+///   (casualties → retries), bills only what it had actually finished,
+///   and — when a `spare` is provisioned — promotes a fresh array into
+///   the slot, warming its result cache with every distinct operand
+///   seen so far ([`Server::warm_cache`]; the warmup energy lands in
+///   the slot's robustness rollup).
+///
+/// Everything is a pure function of `(specs, trace, plan, knobs, gap,
+/// spill)`: byte-identical at any worker count.
+#[allow(clippy::too_many_arguments)]
+pub fn run_policy_chaos(
+    specs: &[ArraySpec],
+    label: &str,
+    policy: RoutePolicy,
+    trace: &[InferRequest],
+    cfg: &FleetConfig,
+    knobs: &ChaosKnobs,
+    plan: &FaultPlan,
+    spare: Option<&ArraySpec>,
+    gap_secs: f64,
+    spill_macs: u64,
+    tech: &TechParams,
+) -> Result<PolicyRun> {
+    if plan.is_empty() {
+        let fleet = Fleet::build(label, specs, cfg)?;
+        return run_policy(&fleet, policy, trace, cfg, gap_secs, spill_macs, tech);
+    }
+
+    let mut fleet = Fleet::build(label, specs, cfg)?;
+    let n = fleet.arrays.len();
+    let window = cfg.window.max(1);
+    let t_wall = Instant::now();
+
+    // Live per-slot views; promotion swaps all three with the array.
+    let mut specs_live: Vec<ArraySpec> = specs.to_vec();
+    let mut geoms: Vec<PeGeometry> = specs_live
+        .iter()
+        .map(|s| s.geometry())
+        .collect::<Result<Vec<_>>>()?;
+    let mut cycle_fj: Vec<f64> = specs_live.iter().map(|s| s.cycle_cost_fj(tech)).collect();
+
+    let mut router = Router::new(policy);
+    let mut health = HealthTracker::new(n);
+    let mut busy_until = vec![0.0f64; n];
+    let mut inflight: Vec<VecDeque<ChaosInflight>> = (0..n).map(|_| VecDeque::new()).collect();
+    let mut outstanding = vec![0u64; n];
+    let mut retired: Vec<Vec<InferRequest>> = (0..n).map(|_| Vec::new()).collect();
+    let mut accs: Vec<ArrayAcc> = (0..n).map(|_| ArrayAcc::default()).collect();
+    let mut rob: Vec<ArrayRobustness> = (0..n).map(|_| ArrayRobustness::default()).collect();
+    let mut lat_secs: Vec<f64> = Vec::with_capacity(trace.len());
+    let mut costs = vec![0.0f64; n];
+    let mut completed = 0u64;
+    let mut lost = 0u64;
+
+    // Distinct operand sets seen so far, in admission order — the
+    // warmup set a promoted spare's cache is primed with.
+    let mut seen: Vec<InferRequest> = Vec::new();
+    let mut seen_digests: HashSet<u64> = HashSet::new();
+
+    // Seed the heap with every arrival and every fault; retries draw
+    // fresh sequence numbers from the tail.
+    let mut heap: BinaryHeap<ChaosItem> =
+        BinaryHeap::with_capacity(trace.len() + plan.events.len());
+    for i in 0..trace.len() {
+        let t0 = i as f64 * gap_secs;
+        heap.push(ChaosItem {
+            time: t0,
+            seq: i as u64,
+            ev: ChaosEv::Arrive {
+                idx: i,
+                t0,
+                attempt: 0,
+            },
+        });
+    }
+    for (e, ev) in plan.events.iter().enumerate() {
+        heap.push(ChaosItem {
+            time: ev.at_secs,
+            seq: (trace.len() + e) as u64,
+            ev: ChaosEv::Fault { event: e },
+        });
+    }
+    let mut next_seq = (trace.len() + plan.events.len()) as u64;
+    let backoff_base = gap_secs.max(1e-6);
+
+    while let Some(item) = heap.pop() {
+        let t = item.time;
+        retire_chaos(
+            t,
+            window,
+            &fleet,
+            &geoms,
+            tech,
+            trace,
+            &mut inflight,
+            &mut outstanding,
+            &mut retired,
+            &mut accs,
+            &mut lat_secs,
+            &mut completed,
+        )?;
+        match item.ev {
+            ChaosEv::Fault { event } => {
+                let ev = plan.events[event];
+                let a = ev.array;
+                if a >= n {
+                    continue;
+                }
+                match ev.kind {
+                    FaultKind::TransientStall { secs } => health.stall(a, t + secs),
+                    FaultKind::SlowClock { factor } => health.slow(a, factor),
+                    FaultKind::ColumnLoss { fraction } => health.lose_columns(a, fraction),
+                    FaultKind::PermanentDeath => {
+                        if !health.state(a).alive {
+                            continue;
+                        }
+                        health.kill(a);
+                        busy_until[a] = t;
+                        // Inflight work past the death instant is
+                        // invalidated: each casualty re-arrives with
+                        // backoff, against the retry budget.
+                        while let Some(f) = inflight[a].pop_front() {
+                            outstanding[a] -= f.macs;
+                            rob[a].casualties += 1;
+                            let attempts = f.attempt + 1;
+                            if attempts > knobs.retry_limit {
+                                knobs.check_loss(trace[f.idx].id, attempts)?;
+                                lost += 1;
+                                rob[a].lost += 1;
+                            } else {
+                                rob[a].retries += 1;
+                                fleet.arrays[a].server.metrics().record_retry();
+                                heap.push(ChaosItem {
+                                    time: t + backoff_secs(backoff_base, attempts),
+                                    seq: next_seq,
+                                    ev: ChaosEv::Arrive {
+                                        idx: f.idx,
+                                        t0: f.t0,
+                                        attempt: attempts,
+                                    },
+                                });
+                                next_seq += 1;
+                            }
+                        }
+                        // Bill only what the array actually finished.
+                        flush_array(
+                            &fleet.arrays[a],
+                            &geoms[a],
+                            tech,
+                            &mut retired[a],
+                            &mut accs[a],
+                        )?;
+                        // Hot-spare promotion: a re-provisioned array
+                        // takes the slot with a warmed cache.
+                        if let Some(sp) = spare {
+                            let server = Server::new(ServeConfig {
+                                sa: sp.sa.clone(),
+                                workers: cfg.workers,
+                                cache_capacity: cfg.cache_capacity,
+                                window: cfg.window,
+                                engine: sp.engine,
+                            });
+                            let promoted = FleetArray {
+                                spec: sp.clone(),
+                                server,
+                            };
+                            let spare_geom = sp.geometry()?;
+                            let responses = promoted.server.warm_cache(&seen, window)?;
+                            for r in &responses {
+                                let p = power::evaluate(&sp.sa, &spare_geom, tech, &r.sim);
+                                let secs = r.sim.silicon_seconds(&sp.sa);
+                                rob[a].warmup_uj += p.interconnect_mw() * secs * 1e3;
+                            }
+                            fleet.arrays[a] = promoted;
+                            geoms[a] = spare_geom;
+                            cycle_fj[a] = sp.cycle_cost_fj(tech);
+                            specs_live[a] = sp.clone();
+                            health.revive(a);
+                            rob[a].promotions += 1;
+                        }
+                    }
+                }
+            }
+            ChaosEv::Arrive { idx, t0, attempt } => {
+                let req = &trace[idx];
+                let shape = req.shape();
+                if policy == RoutePolicy::ShapeAffine {
+                    for a in 0..n {
+                        costs[a] = cycle_fj[a]
+                            * health.state(a).effective_cycles(&specs_live[a], &shape) as f64;
+                    }
+                }
+                let up: Vec<bool> = (0..n).map(|a| health.admittable(a, t)).collect();
+                let decision = router
+                    .route_masked(&costs, &outstanding, spill_macs, &up)
+                    .and_then(|out| {
+                        if knobs.queue_bound > 0
+                            && inflight[out.chosen].len() >= knobs.queue_bound
+                        {
+                            Err(Error::QueueFull {
+                                array: out.chosen,
+                                queued: inflight[out.chosen].len(),
+                                bound: knobs.queue_bound,
+                            })
+                        } else {
+                            Ok(out)
+                        }
+                    });
+                match decision {
+                    Ok(out) => {
+                        if let Some(p) = out.failed_over_from {
+                            rob[p].failovers += 1;
+                            fleet.arrays[p].server.metrics().record_failover();
+                        }
+                        let a = out.chosen;
+                        let service =
+                            health.state(a).effective_service_secs(&specs_live[a], &shape);
+                        let nominal = specs_live[a].modeled_service_secs(&shape);
+                        if service > nominal {
+                            // Degraded-mode surcharge: the extra time at
+                            // the provisioned interconnect power.
+                            rob[a].degraded_uj += (service - nominal)
+                                * specs_live[a].provisioned_interconnect_mw
+                                * 1e3;
+                        }
+                        let start = if busy_until[a] > t { busy_until[a] } else { t };
+                        let done = start + service;
+                        busy_until[a] = done;
+                        let macs = req.macs();
+                        inflight[a].push_back(ChaosInflight {
+                            finish: done,
+                            macs,
+                            idx,
+                            t0,
+                            attempt,
+                        });
+                        outstanding[a] += macs;
+                        accs[a].requests += 1;
+                        if inflight[a].len() > accs[a].queue_peak {
+                            accs[a].queue_peak = inflight[a].len();
+                        }
+                        let digest = operand_digest(
+                            req.a.rows,
+                            req.a.cols,
+                            &req.a.data,
+                            req.w.cols,
+                            &req.w.data,
+                        );
+                        if seen_digests.insert(digest) {
+                            seen.push(req.clone());
+                        }
+                    }
+                    Err(e) => {
+                        let blamed = match &e {
+                            Error::QueueFull { array, .. } => *array,
+                            Error::ArrayFailed { array } => *array,
+                            _ => return Err(e),
+                        };
+                        let attempts = attempt + 1;
+                        if attempts > knobs.retry_limit {
+                            knobs.check_loss(req.id, attempts)?;
+                            lost += 1;
+                            rob[blamed].lost += 1;
+                        } else {
+                            rob[blamed].retries += 1;
+                            fleet.arrays[blamed].server.metrics().record_retry();
+                            heap.push(ChaosItem {
+                                time: t + backoff_secs(backoff_base, attempts),
+                                seq: next_seq,
+                                ev: ChaosEv::Arrive {
+                                    idx,
+                                    t0,
+                                    attempt: attempts,
+                                },
+                            });
+                            next_seq += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // Drain everything still inflight, then flush all batches.
+    retire_chaos(
+        f64::INFINITY,
+        window,
+        &fleet,
+        &geoms,
+        tech,
+        trace,
+        &mut inflight,
+        &mut outstanding,
+        &mut retired,
+        &mut accs,
+        &mut lat_secs,
+        &mut completed,
+    )?;
+    for a in 0..n {
+        flush_array(&fleet.arrays[a], &geoms[a], tech, &mut retired[a], &mut accs[a])?;
+    }
+    debug_assert_eq!(completed + lost, trace.len() as u64);
+
+    let per_array: Vec<ArrayRun> = fleet
+        .arrays
+        .iter()
+        .enumerate()
+        .map(|(i, arr)| {
+            let acc = &accs[i];
+            let pes = arr.spec.sa.num_pes() as f64;
+            ArrayRun {
+                label: arr.spec.label(),
+                rows: arr.spec.sa.rows,
+                cols: arr.spec.sa.cols,
+                aspect: arr.spec.aspect,
+                requests: acc.requests,
+                macs: acc.macs,
+                sim_cycles: acc.sim_cycles,
+                utilization: if acc.sim_cycles > 0 {
+                    acc.macs as f64 / (pes * acc.sim_cycles as f64)
+                } else {
+                    0.0
+                },
+                queue_peak: acc.queue_peak,
+                interconnect_uj: acc.interconnect_uj,
+                total_uj: acc.total_uj,
+                silicon_secs: acc.silicon_secs,
+                cache: arr.server.cache_stats(),
+                robustness: rob[i].clone(),
+            }
+        })
+        .collect();
+
+    Ok(PolicyRun {
+        fleet: fleet.label.clone(),
+        policy,
+        latency_sorted_us: sorted_micros(lat_secs),
+        spills: router.spills(),
+        interconnect_uj: per_array.iter().map(|a| a.interconnect_uj).sum(),
+        total_uj: per_array.iter().map(|a| a.total_uj).sum(),
+        silicon_secs: per_array.iter().map(|a| a.silicon_secs).sum(),
+        per_array,
+        wall_secs: t_wall.elapsed().as_secs_f64(),
+        completed,
+        lost,
     })
 }
 
@@ -513,7 +1009,7 @@ pub struct FleetHeadline {
 }
 
 /// Everything one `repro fleet` comparison produces.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct FleetReport {
     /// The provisioning decision both fleets came from.
     pub plan: FleetPlan,
@@ -631,7 +1127,7 @@ pub fn run_fleet_comparison(cfg: &FleetConfig) -> Result<FleetReport> {
 // Serialization
 // ---------------------------------------------------------------------
 
-fn spec_json(s: &ArraySpec) -> Json {
+pub(crate) fn spec_json(s: &ArraySpec) -> Json {
     obj(vec![
         ("rows", Json::Num(s.sa.rows as f64)),
         ("cols", Json::Num(s.sa.cols as f64)),
@@ -663,10 +1159,20 @@ fn array_run_json(a: &ArrayRun) -> Json {
         ("total_uj", Json::Num(a.total_uj)),
         ("cache_hits", Json::Num(a.cache.hits as f64)),
         ("cache_misses", Json::Num(a.cache.misses as f64)),
+        // Robustness rollups serialize unconditionally — all zeros on
+        // the fault-free path, so worker-count byte-identity holds for
+        // plain and chaos summaries alike.
+        ("retries", Json::Num(a.robustness.retries as f64)),
+        ("failovers", Json::Num(a.robustness.failovers as f64)),
+        ("casualties", Json::Num(a.robustness.casualties as f64)),
+        ("lost", Json::Num(a.robustness.lost as f64)),
+        ("promotions", Json::Num(a.robustness.promotions as f64)),
+        ("degraded_uj", Json::Num(a.robustness.degraded_uj)),
+        ("warmup_uj", Json::Num(a.robustness.warmup_uj)),
     ])
 }
 
-fn run_json(r: &PolicyRun) -> Json {
+pub(crate) fn run_json(r: &PolicyRun) -> Json {
     obj(vec![
         ("fleet", Json::Str(r.fleet.clone())),
         ("policy", Json::Str(r.policy.name().to_string())),
@@ -685,6 +1191,10 @@ fn run_json(r: &PolicyRun) -> Json {
         ("silicon_secs", Json::Num(r.silicon_secs)),
         ("avg_interconnect_mw", Json::Num(r.avg_interconnect_mw())),
         ("avg_total_mw", Json::Num(r.avg_total_mw())),
+        ("completed", Json::Num(r.completed as f64)),
+        ("lost", Json::Num(r.lost as f64)),
+        ("completion_rate", Json::Num(r.completion_rate())),
+        ("recovery_uj", Json::Num(r.recovery_uj())),
     ])
 }
 
@@ -910,5 +1420,125 @@ mod tests {
         let (gap, spill) = modeled_knobs(&auto, &plan, &trace);
         assert!(gap > 0.0);
         assert!(spill > 0);
+    }
+
+    #[test]
+    fn chaos_with_empty_plan_is_the_plain_engine() {
+        let cfg = tiny_cfg();
+        let plan = provision(&cfg).unwrap();
+        let trace = build_trace(&cfg).unwrap();
+        let tech = TechParams::default();
+        let (gap, spill) = modeled_knobs(&cfg, &plan, &trace);
+        let knobs = ChaosKnobs::default();
+        for policy in RoutePolicy::ALL {
+            let fleet = Fleet::build(HETEROGENEOUS, &plan.selected, &cfg).unwrap();
+            let plain = run_policy(&fleet, policy, &trace, &cfg, gap, spill, &tech).unwrap();
+            let chaos = run_policy_chaos(
+                &plan.selected,
+                HETEROGENEOUS,
+                policy,
+                &trace,
+                &cfg,
+                &knobs,
+                &FaultPlan::none(),
+                None,
+                gap,
+                spill,
+                &tech,
+            )
+            .unwrap();
+            assert_eq!(chaos.latency_sorted_us, plain.latency_sorted_us);
+            assert_eq!(chaos.spills, plain.spills);
+            assert_eq!(chaos.completed, plain.completed);
+            assert_eq!(chaos.lost, 0);
+            assert_eq!(chaos.interconnect_uj.to_bits(), plain.interconnect_uj.to_bits());
+            assert_eq!(chaos.total_uj.to_bits(), plain.total_uj.to_bits());
+            for (c, p) in chaos.per_array.iter().zip(&plain.per_array) {
+                assert_eq!(c.requests, p.requests);
+                assert_eq!(c.macs, p.macs);
+                assert_eq!(c.cache, p.cache);
+                assert_eq!(c.robustness, ArrayRobustness::default());
+            }
+        }
+    }
+
+    #[test]
+    fn chaos_single_death_retries_to_full_completion() {
+        let cfg = tiny_cfg();
+        let plan = provision(&cfg).unwrap();
+        let trace = build_trace(&cfg).unwrap();
+        let tech = TechParams::default();
+        let (gap, spill) = modeled_knobs(&cfg, &plan, &trace);
+        // Kill array 0 mid-trace; strict mode turns any lost request
+        // into a hard error, so completing is load-bearing.
+        let knobs = ChaosKnobs {
+            strict: true,
+            ..ChaosKnobs::default()
+        };
+        let horizon = trace.len() as f64 * gap;
+        let fplan = FaultPlan::single_death(0, 0.4 * horizon);
+        let spare = provision_spare(&cfg).unwrap();
+        let run = run_policy_chaos(
+            &plan.selected,
+            HETEROGENEOUS,
+            RoutePolicy::ShapeAffine,
+            &trace,
+            &cfg,
+            &knobs,
+            &fplan,
+            Some(&spare),
+            gap,
+            spill,
+            &tech,
+        )
+        .unwrap();
+        assert_eq!(run.completed, trace.len() as u64);
+        assert_eq!(run.lost, 0);
+        assert!((run.completion_rate() - 1.0).abs() < 1e-12);
+        let promotions: u64 = run.per_array.iter().map(|a| a.robustness.promotions).sum();
+        assert_eq!(promotions, 1);
+        assert_eq!(run.per_array[0].robustness.promotions, 1);
+        // The promoted slot wears the spare's label.
+        assert_eq!(run.per_array[0].label, spare.label());
+        // Casualties (if the death caught inflight work) all came back
+        // as retries — none lost.
+        let rob = &run.per_array[0].robustness;
+        assert_eq!(rob.lost, 0);
+        assert_eq!(rob.retries, rob.casualties);
+        // Work still adds up across the surviving arrays.
+        let routed: u64 = run.per_array.iter().map(|a| a.requests).sum();
+        assert!(routed >= trace.len() as u64);
+    }
+
+    #[test]
+    fn chaos_without_spare_loses_nothing_with_survivors() {
+        // No hot spare: the dead array stays dead, yet the survivor
+        // absorbs everything via failover.
+        let cfg = tiny_cfg();
+        let plan = provision(&cfg).unwrap();
+        let trace = build_trace(&cfg).unwrap();
+        let tech = TechParams::default();
+        let (gap, spill) = modeled_knobs(&cfg, &plan, &trace);
+        let knobs = ChaosKnobs::default();
+        let fplan = FaultPlan::single_death(1, 0.1 * trace.len() as f64 * gap);
+        let run = run_policy_chaos(
+            &plan.selected,
+            HETEROGENEOUS,
+            RoutePolicy::LeastLoaded,
+            &trace,
+            &cfg,
+            &knobs,
+            &fplan,
+            None,
+            gap,
+            spill,
+            &tech,
+        )
+        .unwrap();
+        assert_eq!(run.completed, trace.len() as u64);
+        assert_eq!(run.lost, 0);
+        assert_eq!(run.per_array[1].robustness.promotions, 0);
+        // Everything admitted after the death landed on array 0.
+        assert!(run.per_array[0].requests > 0);
     }
 }

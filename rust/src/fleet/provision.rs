@@ -216,6 +216,21 @@ pub fn provision(cfg: &FleetConfig) -> Result<FleetPlan> {
     })
 }
 
+/// Provision a hot spare: re-run [`provision`] on the surviving
+/// per-array PE budget and take the energy-cheapest frontier point —
+/// the array a self-healing fleet promotes into a dead slot. One spare
+/// per comparison; it is provisioned up front (the explorer sweep is
+/// the expensive part) and cloned into a fresh server at promotion
+/// time, so every scenario promotes an identical array.
+pub fn provision_spare(cfg: &FleetConfig) -> Result<ArraySpec> {
+    let single = FleetConfig {
+        arrays: 1,
+        ..cfg.clone()
+    };
+    let mut plan = provision(&single)?;
+    Ok(plan.selected.remove(0))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -258,6 +273,21 @@ mod tests {
         for w in plan.selected.windows(2) {
             assert!(energy(&w[0]) <= energy(&w[1]) * (1.0 + 1e-12));
         }
+    }
+
+    #[test]
+    fn spare_is_the_energy_cheapest_selection() {
+        let cfg = tiny_cfg(2);
+        let plan = provision(&cfg).unwrap();
+        let spare = provision_spare(&cfg).unwrap();
+        // Same budget, same sweep: the spare is the fleet's cheapest
+        // pick, so promotion never downgrades a slot's provisioning.
+        assert_eq!(
+            (spare.sa.rows, spare.sa.cols),
+            (plan.selected[0].sa.rows, plan.selected[0].sa.cols)
+        );
+        assert_eq!(spare.engine, plan.selected[0].engine);
+        assert_eq!(spare.sa.rows * spare.sa.cols, 16);
     }
 
     #[test]

@@ -139,6 +139,85 @@ impl Router {
             }
         }
     }
+
+    /// Fault-masked routing: like [`Router::route`], but only arrays
+    /// with `up[i] == true` may be chosen. When the policy's unmasked
+    /// preference is down, the request fails over to the best healthy
+    /// array and the outcome records which array it was rescued from
+    /// (the per-array failover attribution the chaos rollups count).
+    ///
+    /// With every array up this is decision-identical to
+    /// [`Router::route`], including cursor and spill bookkeeping — the
+    /// chaos admission loop can use it unconditionally.
+    ///
+    /// Errors with [`Error::ArrayFailed`] when no array is up; the
+    /// caller backs the request off and retries at a later modeled
+    /// instant.
+    pub fn route_masked(
+        &mut self,
+        costs: &[f64],
+        queued_macs: &[u64],
+        spill_macs: u64,
+        up: &[bool],
+    ) -> Result<RouteOutcome> {
+        let n = costs.len();
+        assert!(n > 0, "router needs a non-empty fleet");
+        assert_eq!(n, queued_macs.len(), "cost/load vectors must align");
+        assert_eq!(n, up.len(), "health mask must align");
+        match self.policy {
+            RoutePolicy::RoundRobin => {
+                let first = self.rr_next % n;
+                for k in 0..n {
+                    let cand = (self.rr_next + k) % n;
+                    if up[cand] {
+                        self.rr_next += k + 1;
+                        return Ok(RouteOutcome {
+                            chosen: cand,
+                            failed_over_from: if k > 0 { Some(first) } else { None },
+                        });
+                    }
+                }
+                Err(Error::ArrayFailed { array: first })
+            }
+            RoutePolicy::LeastLoaded => {
+                let pref = argmin_u64(queued_macs);
+                let chosen = argmin_u64_masked(queued_macs, up)
+                    .ok_or(Error::ArrayFailed { array: pref })?;
+                Ok(RouteOutcome {
+                    chosen,
+                    failed_over_from: if up[pref] { None } else { Some(pref) },
+                })
+            }
+            RoutePolicy::ShapeAffine => {
+                let pref = argmin_f64(costs);
+                let best =
+                    argmin_f64_masked(costs, up).ok_or(Error::ArrayFailed { array: pref })?;
+                let mut chosen = best;
+                if spill_macs > 0 && queued_macs[best] > spill_macs {
+                    if let Some(alt) = argmin_u64_masked(queued_macs, up) {
+                        if alt != best {
+                            self.spills += 1;
+                            chosen = alt;
+                        }
+                    }
+                }
+                Ok(RouteOutcome {
+                    chosen,
+                    failed_over_from: if up[pref] { None } else { Some(pref) },
+                })
+            }
+        }
+    }
+}
+
+/// Outcome of one fault-masked routing decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RouteOutcome {
+    /// The array that admits the request.
+    pub chosen: usize,
+    /// The policy's unmasked preference, when it was down and the
+    /// request was rerouted — `None` for a decision no fault touched.
+    pub failed_over_from: Option<usize>,
 }
 
 /// Index of the minimum; first occurrence wins (deterministic ties).
@@ -158,6 +237,28 @@ fn argmin_f64(xs: &[f64]) -> usize {
     for (i, &x) in xs.iter().enumerate().skip(1) {
         if x.total_cmp(&xs[best]) == std::cmp::Ordering::Less {
             best = i;
+        }
+    }
+    best
+}
+
+/// Masked argmin over `u64`; `None` when no index is up.
+fn argmin_u64_masked(xs: &[u64], up: &[bool]) -> Option<usize> {
+    let mut best: Option<usize> = None;
+    for (i, &x) in xs.iter().enumerate() {
+        if up[i] && best.map_or(true, |b| x < xs[b]) {
+            best = Some(i);
+        }
+    }
+    best
+}
+
+/// Masked argmin under `total_cmp`; `None` when no index is up.
+fn argmin_f64_masked(xs: &[f64], up: &[bool]) -> Option<usize> {
+    let mut best: Option<usize> = None;
+    for (i, &x) in xs.iter().enumerate() {
+        if up[i] && best.map_or(true, |b| x.total_cmp(&xs[b]) == std::cmp::Ordering::Less) {
+            best = Some(i);
         }
     }
     best
@@ -213,5 +314,72 @@ mod tests {
         assert_eq!(r.spills(), 1);
         // Cost ties break toward the lowest index.
         assert_eq!(r.route(&[2.0, 2.0, 5.0], &[0, 0, 0], 0), 0);
+    }
+
+    #[test]
+    fn masked_routing_matches_plain_when_all_up() {
+        // The chaos loop uses route_masked unconditionally, so with a
+        // healthy fleet it must replay route()'s decisions exactly —
+        // cursor, spills and all.
+        let up = [true; 3];
+        for policy in RoutePolicy::ALL {
+            let mut plain = Router::new(policy);
+            let mut masked = Router::new(policy);
+            let scenarios: [(&[f64; 3], &[u64; 3], u64); 4] = [
+                (&[3.0, 1.0, 2.0], &[10, 10, 0], 100),
+                (&[3.0, 1.0, 2.0], &[10, 101, 0], 100),
+                (&[1.0, 2.0, 3.0], &[150, 300, 200], 100),
+                (&[2.0, 2.0, 5.0], &[4, 4, 4], 0),
+            ];
+            for (costs, loads, bound) in scenarios {
+                let want = plain.route(costs, loads, bound);
+                let got = masked.route_masked(costs, loads, bound, &up).unwrap();
+                assert_eq!(got.chosen, want, "{}", policy.name());
+                assert_eq!(got.failed_over_from, None);
+            }
+            assert_eq!(plain.spills(), masked.spills());
+        }
+    }
+
+    #[test]
+    fn masked_routing_fails_over_and_attributes() {
+        // Round robin skips the down array and keeps cycling.
+        let mut r = Router::new(RoutePolicy::RoundRobin);
+        let up = [true, false, true];
+        let picks: Vec<RouteOutcome> = (0..4)
+            .map(|_| r.route_masked(&[0.0; 3], &[0; 3], 0, &up).unwrap())
+            .collect();
+        assert_eq!(picks[0], RouteOutcome { chosen: 0, failed_over_from: None });
+        assert_eq!(
+            picks[1],
+            RouteOutcome { chosen: 2, failed_over_from: Some(1) }
+        );
+        assert_eq!(picks[2], RouteOutcome { chosen: 0, failed_over_from: None });
+        assert_eq!(
+            picks[3],
+            RouteOutcome { chosen: 2, failed_over_from: Some(1) }
+        );
+
+        // Least loaded: preference down → next-least healthy array.
+        let mut ll = Router::new(RoutePolicy::LeastLoaded);
+        let out = ll
+            .route_masked(&[0.0; 3], &[9, 2, 5], 0, &[true, false, true])
+            .unwrap();
+        assert_eq!(out, RouteOutcome { chosen: 2, failed_over_from: Some(1) });
+
+        // Shape affine: cheapest down → next-cheapest healthy, and the
+        // spill valve only considers healthy arrays.
+        let mut sa = Router::new(RoutePolicy::ShapeAffine);
+        let out = sa
+            .route_masked(&[1.0, 2.0, 3.0], &[0, 200, 0], 100, &[false, true, true])
+            .unwrap();
+        assert_eq!(out, RouteOutcome { chosen: 2, failed_over_from: Some(0) });
+        assert_eq!(sa.spills(), 1, "healthy winner over bound spilled to 2");
+
+        // All down: typed failure naming the preference.
+        let err = sa
+            .route_masked(&[5.0, 1.0, 3.0], &[0; 3], 0, &[false; 3])
+            .unwrap_err();
+        assert!(matches!(err, Error::ArrayFailed { array: 1 }));
     }
 }

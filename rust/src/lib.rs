@@ -70,6 +70,7 @@ pub mod config;
 pub mod coordinator;
 pub mod error;
 pub mod explore;
+pub mod faults;
 pub mod fleet;
 pub mod floorplan;
 pub mod gemm;

@@ -13,10 +13,14 @@
 //! * `fleet`    — heterogeneous multi-array fleet serving provisioned
 //!   from the Pareto frontier, with pluggable routing policies compared
 //!   against an equal-PE homogeneous square fleet;
+//! * `chaos`    — the fleet comparison replayed under seeded fault
+//!   scenarios with retries, failover and hot-spare promotion;
 //! * `verify`   — cycle-accurate vs analytic engine cross-check.
 //!
 //! Argument parsing is hand-rolled (the offline vendored dependency set
-//! has no clap); `repro help` documents every flag.
+//! has no clap). Every subcommand registers in one [`COMMANDS`] table —
+//! usage text, flag vocabulary and dispatch live in a single entry per
+//! command, so `repro help` and the parser cannot drift apart.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -32,29 +36,101 @@ use asymm_sa::sim::{fast::simulate_gemm_fast, ws::WsCycleSim};
 use asymm_sa::util::rng::Rng;
 use asymm_sa::workloads::table1_layers;
 
-const USAGE: &str = "\
+const USAGE_HEADER: &str = "\
 repro — asymmetric systolic-array floorplanning reproduction
 
 USAGE: repro <command> [flags]
 
 COMMANDS
-  optimize   print optimal aspect ratios (paper eqs. 5-6)
+";
+
+const USAGE_FOOTER: &str = "\
+  help       this text
+
+Unknown commands and unknown flags are usage errors: a typo never
+silently degrades to defaults.
+";
+
+/// One CLI subcommand: its usage text, its full flag vocabulary and its
+/// driver, in a single table entry. The help block and the parser are
+/// the *same registration*, so they cannot drift apart — a flag added
+/// to `valued` without a usage line (or vice versa) is one edit away
+/// from obvious in review, and `usage()` is assembled from the table.
+struct Command {
+    name: &'static str,
+    help: &'static str,
+    bools: &'static [&'static str],
+    valued: &'static [&'static str],
+    run: fn(&Flags) -> Result<(), String>,
+}
+
+/// Shared flag vocabulary of the fleet comparison — `fleet` takes
+/// exactly this; `chaos` extends it.
+const FLEET_VALUED: &[&str] = &[
+    "pes", "arrays", "requests", "unique", "layers", "seed", "workers", "window", "cache",
+    "spill", "gap-us", "workload", "json", "md",
+];
+
+const CHAOS_VALUED: &[&str] = &[
+    "pes", "arrays", "requests", "unique", "layers", "seed", "workers", "window", "cache",
+    "spill", "gap-us", "workload", "scenarios", "retry-limit", "queue-bound", "json", "md",
+];
+
+const COMMANDS: &[Command] = &[
+    Command {
+        name: "optimize",
+        help: "  optimize   print optimal aspect ratios (paper eqs. 5-6)
                --ah <f>        horizontal activity (default 0.22)
                --av <f>        vertical activity  (default 0.36)
-  table1     print the paper's Table I
-  fig3       emit the Fig. 3 layouts (8x8, square vs asymmetric)
+",
+        bools: &[],
+        valued: &["ah", "av"],
+        run: cmd_optimize,
+    },
+    Command {
+        name: "table1",
+        help: "  table1     print the paper's Table I
+",
+        bools: &[],
+        valued: &[],
+        run: cmd_table1,
+    },
+    Command {
+        name: "fig3",
+        help: "  fig3       emit the Fig. 3 layouts (8x8, square vs asymmetric)
                --out <dir>     output directory (default out)
                --aspect <f>    asymmetric W/H (default 3.8)
-  run        run the Fig. 4/5 experiment on the Table-I layers
+",
+        bools: &[],
+        valued: &["out", "aspect"],
+        run: cmd_fig3,
+    },
+    Command {
+        name: "run",
+        help: "  run        run the Fig. 4/5 experiment on the Table-I layers
                --config <f>    JSON experiment config
                --artifacts <d> artifact dir (default artifacts)
                --no-runtime    skip the PJRT path
                --full-resnet   all 48 stride-1 ResNet50 convs (slow)
                --csv <f>       write CSV rows
-  report     run the full experiment and write a markdown report
+",
+        bools: &["no-runtime", "full-resnet"],
+        valued: &["config", "artifacts", "csv"],
+        run: cmd_run,
+    },
+    Command {
+        name: "report",
+        help: "  report     run the full experiment and write a markdown report
                --out <f>       output file (default out/REPORT.md)
                --no-runtime    skip the PJRT path
-  serve      seeded serving scenario: shape-coalesced batching + result
+",
+        bools: &["no-runtime"],
+        valued: &["out"],
+        run: cmd_report,
+    },
+    Command {
+        name: "serve",
+        help: "  serve      seeded serving scenario: shape-coalesced batching + result
              cache through the serve subsystem; prints latency
              percentiles and the cache hit rate
                --requests <n>  request count (default 96)
@@ -65,7 +141,14 @@ COMMANDS
                --unique <n>    input variants per layer (default 4)
                --dataflow <s>  engine: ws | os | is (default ws)
                --json <f>      summary JSON path (default SERVE_summary.json)
-  sweep      parallel design-space exploration: every rows x cols
+",
+        bools: &[],
+        valued: &["requests", "seed", "workers", "window", "cache", "unique", "dataflow", "json"],
+        run: cmd_serve,
+    },
+    Command {
+        name: "sweep",
+        help: "  sweep      parallel design-space exploration: every rows x cols
              factorization of the PE budget x dataflow x workload,
              each with a PE aspect-ratio grid, evaluated with the exact
              engines + power model through the shared result cache;
@@ -81,7 +164,17 @@ COMMANDS
                --json <f>      summary path (default SWEEP_summary.json)
                --md <f>        Pareto report (default out/SWEEP_pareto.md)
                --svg <f>       Pareto scatter (default out/SWEEP_pareto.svg)
-  fleet      heterogeneous multi-array fleet serving: provision K arrays
+",
+        bools: &[],
+        valued: &[
+            "pes", "points", "dataflows", "workload", "layers", "seed", "workers", "cache",
+            "json", "md", "svg",
+        ],
+        run: cmd_sweep,
+    },
+    Command {
+        name: "fleet",
+        help: "  fleet      heterogeneous multi-array fleet serving: provision K arrays
              from the Pareto frontier at a per-array PE budget (energy
              rank), route a seeded workload trace with round_robin,
              least_loaded and shape_affine policies, and compare power
@@ -105,13 +198,55 @@ COMMANDS
                --workload <s>  table1 | synth (default table1)
                --json <f>      summary path (default FLEET_summary.json)
                --md <f>        report path (default out/FLEET_report.md)
-  verify     cross-check cycle-accurate vs analytic engines
+",
+        bools: &[],
+        valued: FLEET_VALUED,
+        run: cmd_fleet,
+    },
+    Command {
+        name: "chaos",
+        help: "  chaos      deterministic fault injection over the fleet comparison:
+             replay the policy sweep under N seeded fault scenarios
+             (transient stalls, slow clocks, PE-column loss, permanent
+             death) with bounded retries, fault-masked failover and
+             hot-spare promotion; report degradation vs the fault-free
+             baseline (which stays byte-identical to `fleet`)
+               (fleet flags: --pes --arrays --requests --unique --layers
+                --seed --workers --window --cache --spill --gap-us
+                --workload, same defaults as `fleet`)
+               --scenarios <n>   seeded fault scenarios (default 3)
+               --retry-limit <n> retry budget per request (default 8)
+               --queue-bound <n> per-array inflight bound
+                                 (default 0 = unbounded)
+               --strict        escalate lost requests to a hard error
+               --no-spare      skip hot-spare provisioning/promotion
+               --json <f>      summary path (default CHAOS_summary.json)
+               --md <f>        report path (default out/CHAOS_report.md)
+",
+        bools: &["strict", "no-spare"],
+        valued: CHAOS_VALUED,
+        run: cmd_chaos,
+    },
+    Command {
+        name: "verify",
+        help: "  verify     cross-check cycle-accurate vs analytic engines
                --cases <n>     random cases (default 10)
-  help       this text
+",
+        bools: &[],
+        valued: &["cases"],
+        run: cmd_verify,
+    },
+];
 
-Unknown commands and unknown flags are usage errors: a typo never
-silently degrades to defaults.
-";
+/// Assemble the full usage text from the command table.
+fn usage() -> String {
+    let mut s = String::from(USAGE_HEADER);
+    for c in COMMANDS {
+        s.push_str(c.help);
+    }
+    s.push_str(USAGE_FOOTER);
+    s
+}
 
 /// Tiny flag parser: `--key value` pairs plus boolean `--key`.
 ///
@@ -183,7 +318,7 @@ fn main() {
         Err(e) => {
             eprintln!("error: {e}");
             eprintln!();
-            eprintln!("{USAGE}");
+            eprintln!("{}", usage());
             2
         }
     };
@@ -192,119 +327,140 @@ fn main() {
 
 fn run_cli(args: &[String]) -> Result<(), String> {
     let Some(cmd) = args.first() else {
-        println!("{USAGE}");
+        println!("{}", usage());
         return Ok(());
     };
-    let rest = &args[1..];
-    match cmd.as_str() {
-        "optimize" => {
-            let f = Flags::parse(rest, &[], &["ah", "av"])?;
-            optimize(f.f64("ah", 0.22)?, f.f64("av", 0.36)?)
-        }
-        "table1" => {
-            Flags::parse(rest, &[], &[])?;
-            print!("{}", report::table1_string(&table1_layers()));
-            Ok(())
-        }
-        "fig3" => {
-            let f = Flags::parse(rest, &[], &["out", "aspect"])?;
-            fig3(
-                &f.path("out").unwrap_or_else(|| PathBuf::from("out")),
-                f.f64("aspect", 3.8)?,
-            )
-        }
-        "run" => {
-            let f = Flags::parse(
-                rest,
-                &["no-runtime", "full-resnet"],
-                &["config", "artifacts", "csv"],
-            )?;
-            run(
-                f.path("config"),
-                f.path("artifacts").unwrap_or_else(|| PathBuf::from("artifacts")),
-                f.flag("no-runtime"),
-                f.flag("full-resnet"),
-                f.path("csv"),
-            )
-        }
-        "report" => {
-            let f = Flags::parse(rest, &["no-runtime"], &["out"])?;
-            report_cmd(
-                f.path("out").unwrap_or_else(|| PathBuf::from("out/REPORT.md")),
-                f.flag("no-runtime"),
-            )
-        }
-        "serve" => {
-            let f = Flags::parse(
-                rest,
-                &[],
-                &["requests", "seed", "workers", "window", "cache", "unique", "dataflow", "json"],
-            )?;
-            serve(
-                f.usize("requests", 96)?,
-                f.usize("seed", 2023)? as u64,
-                f.usize("workers", 0)?,
-                f.usize("window", 16)?,
-                f.usize("cache", 24)?,
-                f.usize("unique", 4)?,
-                f.string("dataflow", "ws"),
-                f.path("json").unwrap_or_else(|| PathBuf::from("SERVE_summary.json")),
-            )
-        }
-        "sweep" => {
-            let f = Flags::parse(
-                rest,
-                &[],
-                &["pes", "points", "dataflows", "workload", "layers", "seed", "workers", "cache", "json", "md", "svg"],
-            )?;
-            sweep(
-                f.usize("pes", 1024)?,
-                f.usize("points", 25)?,
-                f.string("dataflows", "ws"),
-                f.string("workload", "both"),
-                f.usize("layers", 0)?,
-                f.usize("seed", 2023)? as u64,
-                f.usize("workers", 0)?,
-                f.usize("cache", 256)?,
-                f.path("json").unwrap_or_else(|| PathBuf::from("SWEEP_summary.json")),
-                f.path("md").unwrap_or_else(|| PathBuf::from("out/SWEEP_pareto.md")),
-                f.path("svg").unwrap_or_else(|| PathBuf::from("out/SWEEP_pareto.svg")),
-            )
-        }
-        "fleet" => {
-            let f = Flags::parse(
-                rest,
-                &[],
-                &["pes", "arrays", "requests", "unique", "layers", "seed", "workers",
-                  "window", "cache", "spill", "gap-us", "workload", "json", "md"],
-            )?;
-            fleet(
-                f.usize("pes", 1024)?,
-                f.usize("arrays", 3)?,
-                f.usize("requests", 96)?,
-                f.usize("unique", 2)?,
-                f.usize("layers", 0)?,
-                f.usize("seed", 2023)? as u64,
-                f.usize("workers", 0)?,
-                f.usize("window", 8)?,
-                f.usize("cache", 64)?,
-                f.usize("spill", 0)? as u64,
-                f.f64("gap-us", 0.0)?,
-                f.string("workload", "table1"),
-                f.path("json").unwrap_or_else(|| PathBuf::from("FLEET_summary.json")),
-                f.path("md").unwrap_or_else(|| PathBuf::from("out/FLEET_report.md")),
-            )
-        }
-        "verify" => {
-            let f = Flags::parse(rest, &[], &["cases"])?;
-            verify(f.usize("cases", 10)?)
-        }
-        "help" | "--help" | "-h" => {
-            println!("{USAGE}");
-            Ok(())
-        }
-        other => Err(format!("unknown command `{other}`")),
+    if matches!(cmd.as_str(), "help" | "--help" | "-h") {
+        println!("{}", usage());
+        return Ok(());
     }
+    let Some(c) = COMMANDS.iter().find(|c| c.name == cmd.as_str()) else {
+        return Err(format!("unknown command `{cmd}`"));
+    };
+    let f = Flags::parse(&args[1..], c.bools, c.valued)?;
+    (c.run)(&f)
+}
+
+// Per-command adapters: extract each command's flags (with its
+// defaults) and call the driver. Registered in [`COMMANDS`].
+
+fn cmd_optimize(f: &Flags) -> Result<(), String> {
+    optimize(f.f64("ah", 0.22)?, f.f64("av", 0.36)?)
+}
+
+fn cmd_table1(_f: &Flags) -> Result<(), String> {
+    print!("{}", report::table1_string(&table1_layers()));
+    Ok(())
+}
+
+fn cmd_fig3(f: &Flags) -> Result<(), String> {
+    fig3(
+        &f.path("out").unwrap_or_else(|| PathBuf::from("out")),
+        f.f64("aspect", 3.8)?,
+    )
+}
+
+fn cmd_run(f: &Flags) -> Result<(), String> {
+    run(
+        f.path("config"),
+        f.path("artifacts").unwrap_or_else(|| PathBuf::from("artifacts")),
+        f.flag("no-runtime"),
+        f.flag("full-resnet"),
+        f.path("csv"),
+    )
+}
+
+fn cmd_report(f: &Flags) -> Result<(), String> {
+    report_cmd(
+        f.path("out").unwrap_or_else(|| PathBuf::from("out/REPORT.md")),
+        f.flag("no-runtime"),
+    )
+}
+
+fn cmd_serve(f: &Flags) -> Result<(), String> {
+    serve(
+        f.usize("requests", 96)?,
+        f.usize("seed", 2023)? as u64,
+        f.usize("workers", 0)?,
+        f.usize("window", 16)?,
+        f.usize("cache", 24)?,
+        f.usize("unique", 4)?,
+        f.string("dataflow", "ws"),
+        f.path("json").unwrap_or_else(|| PathBuf::from("SERVE_summary.json")),
+    )
+}
+
+fn cmd_sweep(f: &Flags) -> Result<(), String> {
+    sweep(
+        f.usize("pes", 1024)?,
+        f.usize("points", 25)?,
+        f.string("dataflows", "ws"),
+        f.string("workload", "both"),
+        f.usize("layers", 0)?,
+        f.usize("seed", 2023)? as u64,
+        f.usize("workers", 0)?,
+        f.usize("cache", 256)?,
+        f.path("json").unwrap_or_else(|| PathBuf::from("SWEEP_summary.json")),
+        f.path("md").unwrap_or_else(|| PathBuf::from("out/SWEEP_pareto.md")),
+        f.path("svg").unwrap_or_else(|| PathBuf::from("out/SWEEP_pareto.svg")),
+    )
+}
+
+/// Build the [`FleetConfig`] both `fleet` and `chaos` share — one
+/// extraction for one vocabulary, so the two commands cannot disagree
+/// on a default.
+fn fleet_config_from_flags(f: &Flags) -> Result<asymm_sa::fleet::FleetConfig, String> {
+    use asymm_sa::explore::WorkloadKind;
+    let workload = match f.string("workload", "table1").as_str() {
+        "table1" => WorkloadKind::Table1,
+        "synth" => WorkloadKind::Synth,
+        other => return Err(format!("unknown workload `{other}` (table1|synth)")),
+    };
+    Ok(asymm_sa::fleet::FleetConfig {
+        pe_budget: f.usize("pes", 1024)?,
+        arrays: f.usize("arrays", 3)?,
+        workload,
+        max_layers: f.usize("layers", 0)?,
+        requests: f.usize("requests", 96)?,
+        unique_inputs: f.usize("unique", 2)?,
+        seed: f.usize("seed", 2023)? as u64,
+        window: f.usize("window", 8)?,
+        cache_capacity: f.usize("cache", 64)?,
+        workers: f.usize("workers", 0)?,
+        spill_macs: f.usize("spill", 0)? as u64,
+        gap_us: f.f64("gap-us", 0.0)?,
+    })
+}
+
+fn cmd_fleet(f: &Flags) -> Result<(), String> {
+    fleet(
+        fleet_config_from_flags(f)?,
+        f.path("json").unwrap_or_else(|| PathBuf::from("FLEET_summary.json")),
+        f.path("md").unwrap_or_else(|| PathBuf::from("out/FLEET_report.md")),
+    )
+}
+
+fn cmd_chaos(f: &Flags) -> Result<(), String> {
+    use asymm_sa::faults::{ChaosConfig, ChaosKnobs};
+    let ccfg = ChaosConfig {
+        fleet: fleet_config_from_flags(f)?,
+        scenarios: f.usize("scenarios", 3)?,
+        knobs: ChaosKnobs {
+            retry_limit: f.usize("retry-limit", 8)? as u32,
+            queue_bound: f.usize("queue-bound", 0)?,
+            strict: f.flag("strict"),
+        },
+        hot_spare: !f.flag("no-spare"),
+    };
+    chaos(
+        &ccfg,
+        f.path("json").unwrap_or_else(|| PathBuf::from("CHAOS_summary.json")),
+        f.path("md").unwrap_or_else(|| PathBuf::from("out/CHAOS_report.md")),
+    )
+}
+
+fn cmd_verify(f: &Flags) -> Result<(), String> {
+    verify(f.usize("cases", 10)?)
 }
 
 fn optimize(ah: f64, av: f64) -> Result<(), String> {
@@ -652,49 +808,19 @@ fn sweep(
     Ok(())
 }
 
-#[allow(clippy::too_many_arguments)]
 fn fleet(
-    pes: usize,
-    arrays: usize,
-    requests: usize,
-    unique: usize,
-    layers: usize,
-    seed: u64,
-    workers: usize,
-    window: usize,
-    cache: usize,
-    spill: u64,
-    gap_us: f64,
-    workload: String,
+    cfg: asymm_sa::fleet::FleetConfig,
     json: PathBuf,
     md_path: PathBuf,
 ) -> Result<(), String> {
-    use asymm_sa::explore::WorkloadKind;
-    use asymm_sa::fleet::{self, FleetConfig};
+    use asymm_sa::fleet;
 
-    let workload = match workload.as_str() {
-        "table1" => WorkloadKind::Table1,
-        "synth" => WorkloadKind::Synth,
-        other => return Err(format!("unknown workload `{other}` (table1|synth)")),
-    };
-    let cfg = FleetConfig {
-        pe_budget: pes,
-        arrays,
-        workload,
-        max_layers: layers,
-        requests,
-        unique_inputs: unique,
-        seed,
-        window,
-        cache_capacity: cache,
-        workers,
-        spill_macs: spill,
-        gap_us,
-    };
     println!(
-        "fleet: provisioning {arrays} x {pes}-PE arrays from the {} Pareto \
+        "fleet: provisioning {} x {}-PE arrays from the {} Pareto \
          frontier (equal-total-PE square fleet as baseline)",
-        workload.name()
+        cfg.arrays,
+        cfg.pe_budget,
+        cfg.workload.name()
     );
     let t0 = std::time::Instant::now();
     let report = fleet::run_fleet_comparison(&cfg).map_err(|e| e.to_string())?;
@@ -749,6 +875,91 @@ fn fleet(
 
     ensure_parent(&json)?;
     let b = fleet::fleet_bench(&cfg, &report);
+    b.write_json(&json).map_err(|e| e.to_string())?;
+    Ok(())
+}
+
+fn chaos(
+    ccfg: &asymm_sa::faults::ChaosConfig,
+    json: PathBuf,
+    md_path: PathBuf,
+) -> Result<(), String> {
+    use asymm_sa::faults;
+
+    println!(
+        "chaos: {} seeded fault scenario(s) over the fleet comparison \
+         ({} x {}-PE arrays, retry limit {}, queue bound {}, hot spare {})",
+        ccfg.scenarios,
+        ccfg.fleet.arrays,
+        ccfg.fleet.pe_budget,
+        ccfg.knobs.retry_limit,
+        if ccfg.knobs.queue_bound == 0 {
+            "unbounded".to_string()
+        } else {
+            ccfg.knobs.queue_bound.to_string()
+        },
+        if ccfg.hot_spare { "on" } else { "off" },
+    );
+    let t0 = std::time::Instant::now();
+    let report = faults::run_chaos_comparison(ccfg).map_err(|e| e.to_string())?;
+    if let Some(sp) = &report.spare {
+        println!("  hot spare: {}", sp.label());
+    }
+    println!(
+        "  fault-free baseline: {} requests, modeled gap {:.1} us",
+        report.requests, report.gap_us
+    );
+    for s in &report.scenarios {
+        let d = report.degradation(s);
+        println!(
+            "  scenario {}: {}",
+            s.scenario,
+            s.plan
+                .events
+                .iter()
+                .map(|e| e.label())
+                .collect::<Vec<_>>()
+                .join(", ")
+        );
+        println!(
+            "    completion {:>5.1}%  p50 x{:.2}  p99 x{:.2}  p99.9 x{:.2}  \
+             {} retries  {} failovers  {} lost  {} promotions  \
+             recovery {:.2} uJ  energy {:+.1}%",
+            100.0 * d.completion_rate,
+            d.p50_inflation,
+            d.p99_inflation,
+            d.p999_inflation,
+            d.retries,
+            d.failovers,
+            d.lost,
+            d.promotions,
+            d.recovery_uj,
+            d.energy_overhead_pct,
+        );
+    }
+    let h = report.headline();
+    println!(
+        "headline: mean completion {:.1}% (worst {:.1}%), worst p99 inflation \
+         x{:.2}; {} retries / {} failovers / {} lost / {} promotions; \
+         {:.2} uJ recovery energy ({:.2}s total)",
+        100.0 * h.mean_completion_rate,
+        100.0 * h.min_completion_rate,
+        h.worst_p99_inflation,
+        h.total_retries,
+        h.total_failovers,
+        h.total_lost,
+        h.total_promotions,
+        h.total_recovery_uj,
+        t0.elapsed().as_secs_f64(),
+    );
+
+    let md = asymm_sa::report::chaos_markdown(ccfg, &report);
+    ensure_parent(&md_path)?;
+    std::fs::write(&md_path, &md).map_err(|e| e.to_string())?;
+    println!("wrote {}", md_path.display());
+
+    ensure_parent(&json)?;
+    let b = faults::chaos_bench(ccfg, &report);
     b.write_json(&json).map_err(|e| e.to_string())?;
     Ok(())
 }

@@ -440,6 +440,113 @@ pub fn fleet_markdown(
     s
 }
 
+/// Markdown chaos/degradation report: the injected schedule and the
+/// degradation rollup of every seeded scenario against the fault-free
+/// baseline — what `repro chaos` writes next to `CHAOS_summary.json`.
+/// Deterministic: every number comes from the worker-count-invariant
+/// report.
+pub fn chaos_markdown(
+    ccfg: &crate::faults::ChaosConfig,
+    report: &crate::faults::ChaosReport,
+) -> String {
+    let base = report
+        .baseline
+        .run(crate::fleet::HETEROGENEOUS, crate::fleet::RoutePolicy::ShapeAffine)
+        .expect("baseline always carries the headline lane");
+    let mut s = String::new();
+    let _ = writeln!(s, "# asymm-sa fault tolerance\n");
+    let _ = writeln!(
+        s,
+        "{} seeded fault scenario(s) over the fleet comparison: {} arrays x \
+         {} PEs each, workload `{}`, {} requests, seed {}. Retry limit {}, \
+         queue bound {}, hot spare {}.\n",
+        ccfg.scenarios,
+        ccfg.fleet.arrays,
+        ccfg.fleet.pe_budget,
+        ccfg.fleet.workload.name(),
+        report.requests,
+        ccfg.fleet.seed,
+        ccfg.knobs.retry_limit,
+        if ccfg.knobs.queue_bound == 0 {
+            "unbounded".to_string()
+        } else {
+            ccfg.knobs.queue_bound.to_string()
+        },
+        match &report.spare {
+            Some(sp) => format!("`{}`", sp.label()),
+            None => "off".to_string(),
+        },
+    );
+    let _ = writeln!(
+        s,
+        "Fault-free baseline (heterogeneous fleet, `shape_affine` routing): \
+         p50 {} us, p99 {} us, p99.9 {} us, {:.2} uJ interconnect energy.\n",
+        base.latency_us(0.50),
+        base.latency_us(0.99),
+        base.latency_us(0.999),
+        base.interconnect_uj,
+    );
+    let _ = writeln!(s, "## Injected schedules\n");
+    for sc in &report.scenarios {
+        let _ = writeln!(
+            s,
+            "* scenario {}: {}",
+            sc.scenario,
+            sc.plan
+                .events
+                .iter()
+                .map(|e| e.label())
+                .collect::<Vec<_>>()
+                .join(", ")
+        );
+    }
+    let _ = writeln!(s, "\n## Degradation vs fault-free\n");
+    let _ = writeln!(
+        s,
+        "| scenario | completion | p50 | p99 | p99.9 | retries | failovers | \
+         lost | promotions | recovery (uJ) | energy overhead |"
+    );
+    let _ = writeln!(s, "|---|---|---|---|---|---|---|---|---|---|---|");
+    for sc in &report.scenarios {
+        let d = report.degradation(sc);
+        let _ = writeln!(
+            s,
+            "| {} | {:.1}% | x{:.2} | x{:.2} | x{:.2} | {} | {} | {} | {} | \
+             {:.2} | {:+.1}% |",
+            d.scenario,
+            100.0 * d.completion_rate,
+            d.p50_inflation,
+            d.p99_inflation,
+            d.p999_inflation,
+            d.retries,
+            d.failovers,
+            d.lost,
+            d.promotions,
+            d.recovery_uj,
+            d.energy_overhead_pct,
+        );
+    }
+    let h = report.headline();
+    let _ = writeln!(
+        s,
+        "\nHeadline: across {} scenario(s) the `shape_affine`-routed \
+         heterogeneous fleet completes {:.1}% of the trace on average \
+         (worst case {:.1}%), with worst-case p99 inflation x{:.2}; \
+         {} retries, {} failovers and {} hot-spare promotion(s) cost \
+         {:.2} uJ of modeled recovery energy, and {} request(s) were lost.",
+        h.scenarios,
+        100.0 * h.mean_completion_rate,
+        100.0 * h.min_completion_rate,
+        h.worst_p99_inflation,
+        h.total_retries,
+        h.total_failovers,
+        h.total_promotions,
+        h.total_recovery_uj,
+        h.total_lost,
+    );
+    s
+}
+
 /// CSV export of the full comparison (one row per layer).
 pub fn to_csv(rows: &[LayerPowerRow]) -> String {
     let mut s = String::from(
@@ -620,6 +727,38 @@ mod tests {
         assert!(md.contains("## Policy comparison"));
         assert!(md.contains("| heterogeneous | shape_affine |"));
         assert!(md.contains("| square | round_robin |"));
+        assert!(md.contains("Headline:"));
+    }
+
+    #[test]
+    fn chaos_markdown_contains_sections() {
+        use crate::explore::WorkloadKind;
+        use crate::faults::{run_chaos_comparison, ChaosConfig};
+        use crate::fleet::FleetConfig;
+        let ccfg = ChaosConfig {
+            fleet: FleetConfig {
+                pe_budget: 16,
+                arrays: 2,
+                workload: WorkloadKind::Synth,
+                max_layers: 1,
+                requests: 6,
+                unique_inputs: 1,
+                seed: 3,
+                window: 3,
+                cache_capacity: 8,
+                workers: 1,
+                ..FleetConfig::default()
+            },
+            scenarios: 1,
+            ..ChaosConfig::default()
+        };
+        let report = run_chaos_comparison(&ccfg).unwrap();
+        let md = chaos_markdown(&ccfg, &report);
+        assert!(md.contains("# asymm-sa fault tolerance"));
+        assert!(md.contains("Fault-free baseline"));
+        assert!(md.contains("## Injected schedules"));
+        assert!(md.contains("## Degradation vs fault-free"));
+        assert!(md.contains("| scenario | completion |"));
         assert!(md.contains("Headline:"));
     }
 

@@ -283,6 +283,38 @@ impl Server {
         Ok(out)
     }
 
+    /// Warm this server's result cache with `requests`: deduplicate by
+    /// cache key, skip keys already resident, and simulate the rest in
+    /// `window`-sized batches. Returns the responses of the cold
+    /// simulations actually run, so the caller can bill the warmup work
+    /// — the fleet layer prices a promoted hot spare's recovery energy
+    /// from exactly these responses.
+    pub fn warm_cache(
+        &self,
+        requests: &[InferRequest],
+        window: usize,
+    ) -> Result<Vec<InferResponse>> {
+        let window = window.max(1);
+        let mut todo: Vec<InferRequest> = Vec::new();
+        let mut keys: Vec<CacheKey> = Vec::new();
+        {
+            let cache = self.cache.lock().expect("cache poisoned");
+            for req in requests {
+                let key = self.cache_key(req);
+                if cache.contains(&key) || keys.contains(&key) {
+                    continue;
+                }
+                keys.push(key);
+                todo.push(req.clone());
+            }
+        }
+        let mut out = Vec::with_capacity(todo.len());
+        for chunk in todo.chunks(window) {
+            out.extend(self.process_batch(chunk)?);
+        }
+        Ok(out)
+    }
+
     /// Serve a request stream in admission windows of
     /// [`ServeConfig::window`] requests (the batching horizon: a larger
     /// window coalesces more, a smaller one bounds per-request queueing
@@ -436,6 +468,29 @@ mod tests {
         let ws = mk(DataflowKind::Ws);
         assert_ne!(ws.cache_key(&reqs[0]), os.cache_key(&reqs[0]));
         assert_eq!(os.coordinator().engine(), DataflowKind::Os);
+    }
+
+    #[test]
+    fn warm_cache_dedups_and_makes_traffic_hit() {
+        let s = server(8);
+        // 2 distinct operand sets, each appearing twice in the warmup
+        // list: warmup simulates each exactly once.
+        let reqs = vec![
+            req(0, 5, (6, 4, 4)),
+            req(1, 6, (6, 4, 4)),
+            req(2, 5, (6, 4, 4)),
+            req(3, 6, (6, 4, 4)),
+        ];
+        let warmed = s.warm_cache(&reqs, 4).unwrap();
+        assert_eq!(warmed.len(), 2, "deduplicated by cache key");
+        assert!(warmed.iter().all(|r| !r.cache_hit));
+        assert_eq!(s.metrics().snapshot().jobs, 2);
+        // Warming again is a no-op: everything is already resident.
+        assert!(s.warm_cache(&reqs, 4).unwrap().is_empty());
+        // Subsequent traffic on the warmed keys hits outright.
+        let out = s.process_batch(&reqs).unwrap();
+        assert!(out.iter().all(|r| r.cache_hit));
+        assert_eq!(s.metrics().snapshot().jobs, 2, "no new simulations");
     }
 
     #[test]

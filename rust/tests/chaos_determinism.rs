@@ -1,0 +1,205 @@
+//! Determinism + acceptance tier for the fault-injection subsystem.
+//!
+//! Three contracts, all load-bearing for `repro chaos` as a CI
+//! artifact:
+//!
+//! 1. **Worker-count invariance** — `CHAOS_summary.json` is
+//!    byte-identical with 1 worker and with 4 workers per array: fault
+//!    schedules, retries, failovers, hot-spare promotions and every
+//!    degradation number are functions of the configuration only.
+//! 2. **Fault-free identity** — a chaos run with an empty fault plan is
+//!    bit-identical to the plain fleet engine, and the `fault_free`
+//!    section of the chaos summary is byte-for-byte the plain
+//!    `FLEET_summary.json` fleet section (the baseline is *the same
+//!    code*, not a reimplementation).
+//! 3. **Single-permanent-failure acceptance** — under a seeded single
+//!    array death, the shape-affine heterogeneous fleet completes 100%
+//!    of the trace via retry/failover with zero lost requests, promotes
+//!    exactly one hot spare, and reports finite p99 inflation.
+
+use asymm_sa::explore::WorkloadKind;
+use asymm_sa::faults::{
+    chaos_bench, chaos_summary_json, run_chaos_comparison, ChaosConfig, ChaosKnobs, FaultPlan,
+};
+use asymm_sa::fleet::{
+    build_trace, fleet_bench, modeled_knobs, provision, provision_spare, run_fleet_comparison,
+    run_policy_chaos, summary_json, Fleet, FleetConfig, RoutePolicy, HETEROGENEOUS,
+};
+use asymm_sa::power::TechParams;
+
+fn tiny_cfg(workers: usize) -> FleetConfig {
+    FleetConfig {
+        pe_budget: 64,
+        arrays: 2,
+        workload: WorkloadKind::Synth,
+        max_layers: 2,
+        requests: 16,
+        unique_inputs: 2,
+        seed: 2023,
+        window: 4,
+        cache_capacity: 32,
+        workers,
+        spill_macs: 0,
+        gap_us: 0.0,
+    }
+}
+
+fn tiny_ccfg(workers: usize) -> ChaosConfig {
+    ChaosConfig {
+        fleet: tiny_cfg(workers),
+        scenarios: 2,
+        knobs: ChaosKnobs::default(),
+        hot_spare: true,
+    }
+}
+
+#[test]
+fn chaos_summary_is_worker_count_invariant() {
+    let c1 = tiny_ccfg(1);
+    let c4 = tiny_ccfg(4);
+    let r1 = run_chaos_comparison(&c1).unwrap();
+    let r4 = run_chaos_comparison(&c4).unwrap();
+    let j1 = chaos_bench(&c1, &r1).to_json();
+    let j4 = chaos_bench(&c4, &r4).to_json();
+    assert_eq!(
+        j1, j4,
+        "CHAOS_summary.json must be byte-identical across worker counts"
+    );
+    // The schedules and recovery bookkeeping are identical too (not
+    // just rounded aggregates).
+    for (a, b) in r1.scenarios.iter().zip(&r4.scenarios) {
+        assert_eq!(a.plan, b.plan);
+        for (x, y) in a.runs.iter().zip(&b.runs) {
+            assert_eq!(x.latency_sorted_us, y.latency_sorted_us);
+            assert_eq!(x.completed, y.completed);
+            assert_eq!(x.lost, y.lost);
+            for (p, q) in x.per_array.iter().zip(&y.per_array) {
+                assert_eq!(p.robustness, q.robustness);
+                assert_eq!(p.cache, q.cache);
+            }
+        }
+    }
+}
+
+#[test]
+fn fault_free_chaos_is_bit_identical_to_the_fleet_path() {
+    let cfg = tiny_cfg(2);
+    let plan = provision(&cfg).unwrap();
+    let trace = build_trace(&cfg).unwrap();
+    let tech = TechParams::default();
+    let (gap, spill) = modeled_knobs(&cfg, &plan, &trace);
+    let knobs = ChaosKnobs::default();
+
+    // Engine level: an empty plan routes through the untouched
+    // run_policy — every field matches a plain run bit-for-bit.
+    for policy in RoutePolicy::ALL {
+        let fleet = Fleet::build(HETEROGENEOUS, &plan.selected, &cfg).unwrap();
+        let plain = asymm_sa::fleet::run_policy(&fleet, policy, &trace, &cfg, gap, spill, &tech)
+            .unwrap();
+        let chaos = run_policy_chaos(
+            &plan.selected,
+            HETEROGENEOUS,
+            policy,
+            &trace,
+            &cfg,
+            &knobs,
+            &FaultPlan::none(),
+            None,
+            gap,
+            spill,
+            &tech,
+        )
+        .unwrap();
+        assert_eq!(chaos.latency_sorted_us, plain.latency_sorted_us);
+        assert_eq!(chaos.spills, plain.spills);
+        assert_eq!(
+            chaos.interconnect_uj.to_bits(),
+            plain.interconnect_uj.to_bits()
+        );
+        assert_eq!(chaos.total_uj.to_bits(), plain.total_uj.to_bits());
+        assert_eq!(chaos.completed, trace.len() as u64);
+        assert_eq!(chaos.lost, 0);
+    }
+
+    // Document level: the chaos summary embeds the *same bytes* the
+    // plain fleet path serializes.
+    let ccfg = tiny_ccfg(2);
+    let chaos_report = run_chaos_comparison(&ccfg).unwrap();
+    let fleet_report = run_fleet_comparison(&cfg).unwrap();
+    let embedded = chaos_summary_json(&ccfg, &chaos_report);
+    assert_eq!(
+        embedded.req("fault_free").unwrap().to_string(),
+        summary_json(&cfg, &fleet_report).to_string(),
+        "the fault_free section must be byte-for-byte the fleet summary"
+    );
+    // And the plain summary itself still matches what fleet_bench
+    // serializes (the repro fleet artifact path).
+    let bench_text = fleet_bench(&cfg, &fleet_report).to_json();
+    assert!(bench_text.contains("\"fleet\":"));
+}
+
+#[test]
+fn single_permanent_failure_completes_everything() {
+    let cfg = tiny_cfg(2);
+    let plan = provision(&cfg).unwrap();
+    let trace = build_trace(&cfg).unwrap();
+    let tech = TechParams::default();
+    let (gap, spill) = modeled_knobs(&cfg, &plan, &trace);
+    // Strict: any lost request is a hard error, so success here proves
+    // the zero-loss claim rather than merely reading a counter.
+    let knobs = ChaosKnobs {
+        strict: true,
+        ..ChaosKnobs::default()
+    };
+    let spare = provision_spare(&cfg).unwrap();
+    let horizon = trace.len() as f64 * gap;
+    let fplan = FaultPlan::single_death(0, 0.35 * horizon);
+
+    let base_fleet = Fleet::build(HETEROGENEOUS, &plan.selected, &cfg).unwrap();
+    let base = asymm_sa::fleet::run_policy(
+        &base_fleet,
+        RoutePolicy::ShapeAffine,
+        &trace,
+        &cfg,
+        gap,
+        spill,
+        &tech,
+    )
+    .unwrap();
+    let run = run_policy_chaos(
+        &plan.selected,
+        HETEROGENEOUS,
+        RoutePolicy::ShapeAffine,
+        &trace,
+        &cfg,
+        &knobs,
+        &fplan,
+        Some(&spare),
+        gap,
+        spill,
+        &tech,
+    )
+    .unwrap();
+
+    // 100% completion, zero lost, exactly one promotion.
+    assert_eq!(run.completed, trace.len() as u64);
+    assert_eq!(run.lost, 0);
+    assert!((run.completion_rate() - 1.0).abs() < 1e-12);
+    let promotions: u64 = run
+        .per_array
+        .iter()
+        .map(|a| a.robustness.promotions)
+        .sum();
+    assert_eq!(promotions, 1);
+    let lost: u64 = run.per_array.iter().map(|a| a.robustness.lost).sum();
+    assert_eq!(lost, 0);
+
+    // p99 inflation is reported and sane: finite, and never below 1
+    // beyond rounding (a fault cannot make the fleet faster).
+    let inflation = run.latency_us(0.99) as f64 / base.latency_us(0.99).max(1) as f64;
+    assert!(inflation.is_finite());
+    assert!(
+        inflation >= 0.99,
+        "p99 inflation x{inflation:.3} under a permanent death"
+    );
+}
