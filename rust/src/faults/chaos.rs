@@ -2,7 +2,8 @@
 //! scenarios, reported against its own fault-free baseline.
 //!
 //! `repro chaos` runs here. The baseline is the *unmodified*
-//! [`run_fleet_comparison`] — embedded verbatim as the `fault_free`
+//! [`run_fleet_comparison`](crate::fleet::run_fleet_comparison) —
+//! embedded verbatim as the `fault_free`
 //! section of `CHAOS_summary.json`, so a fault-free chaos run is
 //! byte-identical to the `repro fleet` path at any worker count
 //! (asserted by `tests/chaos_determinism.rs`). Each scenario then
@@ -16,9 +17,9 @@
 use crate::bench_util::Bench;
 use crate::error::{Error, Result};
 use crate::fleet::{
-    build_trace, modeled_knobs, provision_spare, run_fleet_comparison, run_json, run_policy_chaos,
-    spec_json, summary_json, ArraySpec, FleetConfig, FleetReport, PolicyRun, RoutePolicy,
-    HETEROGENEOUS, SQUARE,
+    build_trace, modeled_knobs, provision_spare_with, provisioning_explorer,
+    run_fleet_comparison_with, run_json, run_policy_chaos, spec_json, summary_json, ArraySpec,
+    FleetConfig, FleetReport, PolicyRun, RoutePolicy, HETEROGENEOUS, SQUARE,
 };
 use crate::power::TechParams;
 use crate::util::json::{obj, Json};
@@ -231,12 +232,16 @@ pub struct ChaosHeadline {
 pub fn run_chaos_comparison(ccfg: &ChaosConfig) -> Result<ChaosReport> {
     ccfg.validate()?;
     let cfg = &ccfg.fleet;
-    let baseline = run_fleet_comparison(cfg)?;
+    // One provisioning explorer backs both the baseline comparison and
+    // the hot spare: the spare's sweep is served from the explorer's
+    // memoized stream profiles instead of re-simulating the workload.
+    let explorer = provisioning_explorer(cfg)?;
+    let baseline = run_fleet_comparison_with(&explorer, cfg)?;
     let trace = build_trace(cfg)?;
     let tech = TechParams::default();
     let (gap_secs, spill_macs) = modeled_knobs(cfg, &baseline.plan, &trace);
     let spare = if ccfg.hot_spare {
-        Some(provision_spare(cfg)?)
+        Some(provision_spare_with(&explorer, cfg)?)
     } else {
         None
     };
@@ -398,6 +403,7 @@ pub fn chaos_bench(ccfg: &ChaosConfig, report: &ChaosReport) -> Bench {
 mod tests {
     use super::*;
     use crate::explore::WorkloadKind;
+    use crate::fleet::run_fleet_comparison;
 
     fn tiny_ccfg() -> ChaosConfig {
         ChaosConfig {

@@ -236,14 +236,14 @@ impl HealthState {
         ((cols as f64 * (1.0 - self.column_loss)).floor() as usize).max(1)
     }
 
-    /// Closed-form WS cycles of one GEMM on the array's *effective*
-    /// geometry: [`ArraySpec::modeled_cycles`] with the column count
-    /// shrunk by the fused fraction. Healthy state reproduces the
-    /// nominal count exactly.
+    /// Closed-form cycles of one GEMM on the array's *effective*
+    /// geometry under the array's own dataflow:
+    /// [`ArraySpec::modeled_cycles`] with the column count shrunk by the
+    /// fused fraction ([`crate::fleet::closed_form_cycles`]). Healthy
+    /// state reproduces the nominal count exactly.
     pub fn effective_cycles(&self, spec: &ArraySpec, shape: &ShapeKey) -> u64 {
         let cols = self.effective_cols(spec.sa.cols);
-        let passes = shape.k.div_ceil(spec.sa.rows) * shape.n.div_ceil(cols);
-        (passes * spec.sa.ws_tile_cycles(shape.m)) as u64
+        crate::fleet::closed_form_cycles(&spec.sa, spec.engine, cols, shape)
     }
 
     /// Modeled service time under degradation: effective cycles at the

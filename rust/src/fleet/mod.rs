@@ -17,8 +17,10 @@
 //!    *energy*, take the K cheapest points as the heterogeneous fleet
 //!    (each at its swept best PE aspect), and K copies of the
 //!    most-square geometry at W/H = 1 as the equal-total-PE homogeneous
-//!    baseline. Every array is wrapped in its own [`Server`] with its
-//!    engine-salted result cache.
+//!    baseline. Every array is wrapped in its own [`Server`]; all of a
+//!    fleet's servers share one fleet-level result cache with
+//!    engine-salted keys, so same-geometry arrays reuse each other's
+//!    cold simulations instead of re-simulating per array.
 //! 2. **Routing** ([`router`]) — `round_robin`, `least_loaded` (by
 //!    queued MAC count) and `shape_affine`, which scores arrays with the
 //!    closed-form interconnect-energy model and spills to the
@@ -47,21 +49,26 @@
 pub mod provision;
 pub mod router;
 
-pub use provision::{provision, provision_spare, ArraySpec, FleetPlan};
+pub use provision::{
+    closed_form_cycles, provision, provision_spare, provision_spare_with, provision_with,
+    provisioning_explorer, ArraySpec, FleetPlan,
+};
 pub use router::{RoutePolicy, RouteOutcome, Router};
 
 use std::collections::{BinaryHeap, HashSet, VecDeque};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::bench_util::Bench;
 use crate::coordinator::metrics::{percentile_micros, sorted_micros};
 use crate::error::{Error, Result};
-use crate::explore::WorkloadKind;
+use crate::explore::{Explorer, WorkloadKind};
 use crate::faults::{backoff_secs, ArrayRobustness, ChaosKnobs, FaultKind, FaultPlan, HealthTracker};
 use crate::floorplan::PeGeometry;
 use crate::power::{self, TechParams};
 use crate::serve::{
-    build_requests, operand_digest, CacheStats, InferRequest, ScenarioConfig, ServeConfig, Server,
+    build_requests, operand_digest, CacheStats, InferRequest, ResultCache, ScenarioConfig,
+    ServeConfig, Server,
 };
 use crate::util::json::{obj, Json};
 
@@ -93,7 +100,8 @@ pub struct FleetConfig {
     /// Per-array admission window: a queue flushes through
     /// [`Server::process_batch`] when it holds this many requests.
     pub window: usize,
-    /// Per-array result-cache bound in entries.
+    /// Per-array share of the fleet's shared result cache, in entries
+    /// (the fleet cache holds `cache_capacity × K`; 0 disables caching).
     pub cache_capacity: usize,
     /// Per-array coordinator workers (0 = all CPUs, negotiated per
     /// batch). Never serialized: the summary is worker-count-invariant.
@@ -150,33 +158,47 @@ impl FleetConfig {
 pub struct FleetArray {
     /// The array's provisioning decision.
     pub spec: ArraySpec,
-    /// Its server (own coordinator pool + engine-salted result cache).
+    /// Its server (own coordinator pool; result cache shared fleet-wide).
     pub server: Server,
 }
 
-/// A fleet: K servers behind one router.
+/// A fleet: K servers behind one router, sharing one result cache.
 pub struct Fleet {
     label: String,
     arrays: Vec<FleetArray>,
+    /// Fleet-level result cache shared by every array's server (and by
+    /// any spare promoted into a slot). Keys stay engine-salted per
+    /// server, so identical-geometry, identical-engine arrays serve each
+    /// other's cold simulations while everything else stays disjoint.
+    cache: Arc<Mutex<ResultCache>>,
 }
 
 impl Fleet {
-    /// Wrap provisioned specs in fresh servers (fresh caches — runs on
-    /// the same specs stay independently comparable).
+    /// Wrap provisioned specs in fresh servers over one fresh shared
+    /// result cache of `cfg.cache_capacity × K` entries (the same total
+    /// budget the old per-array caches held; 0 still disables caching).
+    /// Fresh per build — runs on the same specs stay independently
+    /// comparable.
     pub fn build(label: &str, specs: &[ArraySpec], cfg: &FleetConfig) -> Result<Fleet> {
         if specs.is_empty() {
             return Err(Error::config("fleet needs at least one array"));
         }
+        let cache = Arc::new(Mutex::new(ResultCache::new(
+            cfg.cache_capacity * specs.len(),
+        )));
         let arrays = specs
             .iter()
             .map(|spec| {
-                let server = Server::new(ServeConfig {
-                    sa: spec.sa.clone(),
-                    workers: cfg.workers,
-                    cache_capacity: cfg.cache_capacity,
-                    window: cfg.window,
-                    engine: spec.engine,
-                });
+                let server = Server::with_cache(
+                    ServeConfig {
+                        sa: spec.sa.clone(),
+                        workers: cfg.workers,
+                        cache_capacity: cfg.cache_capacity,
+                        window: cfg.window,
+                        engine: spec.engine,
+                    },
+                    Arc::clone(&cache),
+                );
                 FleetArray {
                     spec: spec.clone(),
                     server,
@@ -186,6 +208,7 @@ impl Fleet {
         Ok(Fleet {
             label: label.to_string(),
             arrays,
+            cache,
         })
     }
 
@@ -197,6 +220,12 @@ impl Fleet {
     /// The fleet's arrays.
     pub fn arrays(&self) -> &[FleetArray] {
         &self.arrays
+    }
+
+    /// Handle to the fleet-level shared result cache (what a promoted
+    /// spare's server joins).
+    pub fn result_cache(&self) -> Arc<Mutex<ResultCache>> {
+        Arc::clone(&self.cache)
     }
 }
 
@@ -787,13 +816,20 @@ pub fn run_policy_chaos(
                         // Hot-spare promotion: a re-provisioned array
                         // takes the slot with a warmed cache.
                         if let Some(sp) = spare {
-                            let server = Server::new(ServeConfig {
-                                sa: sp.sa.clone(),
-                                workers: cfg.workers,
-                                cache_capacity: cfg.cache_capacity,
-                                window: cfg.window,
-                                engine: sp.engine,
-                            });
+                            // The promoted server joins the fleet's
+                            // shared cache: operands the fleet already
+                            // simulated (under the spare's engine-salted
+                            // fingerprint) are skipped by the warmup.
+                            let server = Server::with_cache(
+                                ServeConfig {
+                                    sa: sp.sa.clone(),
+                                    workers: cfg.workers,
+                                    cache_capacity: cfg.cache_capacity,
+                                    window: cfg.window,
+                                    engine: sp.engine,
+                                },
+                                fleet.result_cache(),
+                            );
                             let promoted = FleetArray {
                                 spec: sp.clone(),
                                 server,
@@ -1097,8 +1133,16 @@ pub fn modeled_knobs(cfg: &FleetConfig, plan: &FleetPlan, trace: &[InferRequest]
 /// the same report (and byte-identical [`fleet_bench`] JSON) at any
 /// worker count — asserted by `tests/fleet_determinism.rs`.
 pub fn run_fleet_comparison(cfg: &FleetConfig) -> Result<FleetReport> {
+    run_fleet_comparison_with(&provision::provisioning_explorer(cfg)?, cfg)
+}
+
+/// [`run_fleet_comparison`] against a caller-owned provisioning
+/// explorer, so one sweep (and its memoized stream profiles) can back
+/// both the comparison and any related provisioning calls (e.g. the
+/// chaos spare).
+pub fn run_fleet_comparison_with(explorer: &Explorer, cfg: &FleetConfig) -> Result<FleetReport> {
     cfg.validate()?;
-    let plan = provision(cfg)?;
+    let plan = provision_with(explorer, cfg)?;
     let trace = build_trace(cfg)?;
     let tech = TechParams::default();
     let (gap_secs, spill_macs) = modeled_knobs(cfg, &plan, &trace);
@@ -1106,8 +1150,9 @@ pub fn run_fleet_comparison(cfg: &FleetConfig) -> Result<FleetReport> {
     let mut runs = Vec::with_capacity(2 * RoutePolicy::ALL.len());
     for (label, specs) in [(HETEROGENEOUS, &plan.selected), (SQUARE, &plan.square)] {
         for policy in RoutePolicy::ALL {
-            // Fresh servers per run: every run pays its own cold
-            // simulations, so cache counters stay comparable.
+            // Fresh servers (and a fresh shared fleet cache) per run:
+            // every run pays its own cold simulations, so cache
+            // counters stay comparable.
             let fleet = Fleet::build(label, specs, cfg)?;
             runs.push(run_policy(
                 &fleet, policy, &trace, cfg, gap_secs, spill_macs, &tech,

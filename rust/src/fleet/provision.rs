@@ -29,8 +29,51 @@ use crate::explore::{ConfigPoint, DataflowKind, Explorer, SweepConfig, WorkloadK
 use crate::floorplan::PeGeometry;
 use crate::power::{self, TechParams};
 use crate::serve::ShapeKey;
+use crate::sim::{is::is_pass_cycles, os::os_pass_cycles};
 
 use super::FleetConfig;
+
+/// Closed-form cycle count of one GEMM of `shape` under `engine` on an
+/// array of `sa`'s geometry with `eff_cols` usable columns — exactly the
+/// cycle count the analytic engines report, without simulating.
+///
+/// Every engine runs `passes × pass_cycles`; the dataflow decides which
+/// GEMM dimensions tile onto the array and which dimension each pass
+/// streams:
+///
+/// * WS: `ceil(K/R)·ceil(N/C)` passes of [`SaConfig::ws_tile_cycles`]
+///   (stream `M` activation rows);
+/// * OS: `ceil(M/R)·ceil(N/C)` passes of [`os_pass_cycles`] (stream the
+///   `K` reduction);
+/// * IS: `ceil(K/R)·ceil(M/C)` passes of [`is_pass_cycles`] (stream `N`
+///   weight columns).
+///
+/// `eff_cols` substitutes for `C` in the pass *count* only — a column
+/// masked out by a fault shrinks the tiles the array can hold, but the
+/// pipeline depth of a pass is set by the physical geometry. Pass
+/// `sa.cols` for a healthy array.
+pub fn closed_form_cycles(
+    sa: &SaConfig,
+    engine: DataflowKind,
+    eff_cols: usize,
+    shape: &ShapeKey,
+) -> u64 {
+    let (passes, pass_cycles) = match engine {
+        DataflowKind::Ws => (
+            shape.k.div_ceil(sa.rows) * shape.n.div_ceil(eff_cols),
+            sa.ws_tile_cycles(shape.m),
+        ),
+        DataflowKind::Os => (
+            shape.m.div_ceil(sa.rows) * shape.n.div_ceil(eff_cols),
+            os_pass_cycles(sa, shape.k),
+        ),
+        DataflowKind::Is => (
+            shape.k.div_ceil(sa.rows) * shape.m.div_ceil(eff_cols),
+            is_pass_cycles(sa, shape.n),
+        ),
+    };
+    (passes * pass_cycles) as u64
+}
 
 /// One provisioned array: geometry, dataflow, PE floorplan and the
 /// workload-average activities the closed-form router score uses.
@@ -98,13 +141,13 @@ impl ArraySpec {
         PeGeometry::new(self.pe_area_um2, self.aspect)
     }
 
-    /// Closed-form WS cycle count for one GEMM of `shape` on this
-    /// array: `ceil(K/R)·ceil(N/C)` tile passes of
-    /// [`SaConfig::ws_tile_cycles`] each — exactly the cycle count the
-    /// analytic engine reports, without simulating.
+    /// Closed-form cycle count for one GEMM of `shape` on this array
+    /// under the array's own dataflow ([`closed_form_cycles`]) — exactly
+    /// the cycle count the analytic engine reports, without simulating.
+    /// (Until this dispatched on [`ArraySpec::engine`] it assumed WS,
+    /// mis-modeling service time and energy of any OS/IS array.)
     pub fn modeled_cycles(&self, shape: &ShapeKey) -> u64 {
-        let passes = shape.k.div_ceil(self.sa.rows) * shape.n.div_ceil(self.sa.cols);
-        (passes * self.sa.ws_tile_cycles(shape.m)) as u64
+        closed_form_cycles(&self.sa, self.engine, self.sa.cols, shape)
     }
 
     /// Modeled service time of one GEMM of `shape` at the array clock.
@@ -153,16 +196,10 @@ pub struct FleetPlan {
     pub frontier: Vec<String>,
 }
 
-/// Run the explorer and provision both fleets for `cfg`.
-///
-/// Deterministic: the explorer output is worker-count-invariant, the
-/// energy ranking is a total order (ties break by rows), so the same
-/// configuration always yields the same fleet.
-pub fn provision(cfg: &FleetConfig) -> Result<FleetPlan> {
-    if cfg.arrays == 0 {
-        return Err(Error::config("fleet needs at least one array"));
-    }
-    let sweep = SweepConfig {
+/// The sweep provisioning runs. Independent of `cfg.arrays`, so the
+/// main-fleet and hot-spare provisioning runs share one explorer.
+fn provisioning_sweep(cfg: &FleetConfig) -> SweepConfig {
+    SweepConfig {
         pe_budget: cfg.pe_budget,
         dataflows: vec![DataflowKind::Ws],
         workloads: vec![cfg.workload],
@@ -170,8 +207,36 @@ pub fn provision(cfg: &FleetConfig) -> Result<FleetPlan> {
         seed: cfg.seed,
         workers: cfg.workers,
         ..SweepConfig::default()
-    };
-    let out = Explorer::new(sweep)?.run()?;
+    }
+}
+
+/// Build the explorer that [`provision_with`] / [`provision_spare_with`]
+/// reuse. One explorer serves any number of provisioning runs of the
+/// same `cfg`: repeat sweeps hit its stream-profile memo, so only the
+/// first run pays engine passes — re-provisioning (hot spares, future
+/// drift-driven re-runs) costs closed-form arithmetic.
+pub fn provisioning_explorer(cfg: &FleetConfig) -> Result<Explorer> {
+    Explorer::new(provisioning_sweep(cfg))
+}
+
+/// Run the explorer and provision both fleets for `cfg`
+/// ([`provision_with`] on a fresh explorer).
+pub fn provision(cfg: &FleetConfig) -> Result<FleetPlan> {
+    provision_with(&provisioning_explorer(cfg)?, cfg)
+}
+
+/// Provision both fleets for `cfg` through a shared `explorer` (from
+/// [`provisioning_explorer`]).
+///
+/// Deterministic: the explorer output is worker-count-invariant — and
+/// cache-state-invariant (memoized results are bit-identical to cold
+/// ones) — and the energy ranking is a total order (ties break by
+/// rows), so the same configuration always yields the same fleet.
+pub fn provision_with(explorer: &Explorer, cfg: &FleetConfig) -> Result<FleetPlan> {
+    if cfg.arrays == 0 {
+        return Err(Error::config("fleet needs at least one array"));
+    }
+    let out = explorer.run()?;
     let frontier = out.frontier_points(0);
     assert!(!frontier.is_empty(), "a sweep always produces a frontier");
 
@@ -216,18 +281,24 @@ pub fn provision(cfg: &FleetConfig) -> Result<FleetPlan> {
     })
 }
 
-/// Provision a hot spare: re-run [`provision`] on the surviving
-/// per-array PE budget and take the energy-cheapest frontier point —
-/// the array a self-healing fleet promotes into a dead slot. One spare
-/// per comparison; it is provisioned up front (the explorer sweep is
-/// the expensive part) and cloned into a fresh server at promotion
-/// time, so every scenario promotes an identical array.
+/// Provision a hot spare ([`provision_spare_with`] on a fresh explorer).
 pub fn provision_spare(cfg: &FleetConfig) -> Result<ArraySpec> {
+    provision_spare_with(&provisioning_explorer(cfg)?, cfg)
+}
+
+/// Provision a hot spare through a shared `explorer`: re-run the
+/// provisioning sweep (served from the explorer's profile memo when the
+/// main fleet was provisioned through the same explorer) and take the
+/// energy-cheapest frontier point — the array a self-healing fleet
+/// promotes into a dead slot. One spare per comparison; it is
+/// provisioned up front and cloned into a fresh server at promotion
+/// time, so every scenario promotes an identical array.
+pub fn provision_spare_with(explorer: &Explorer, cfg: &FleetConfig) -> Result<ArraySpec> {
     let single = FleetConfig {
         arrays: 1,
         ..cfg.clone()
     };
-    let mut plan = provision(&single)?;
+    let mut plan = provision_with(explorer, &single)?;
     Ok(plan.selected.remove(0))
 }
 

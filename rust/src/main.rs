@@ -728,12 +728,18 @@ fn sweep(
     );
     let t0 = std::time::Instant::now();
     let out = explorer.run().map_err(|e| e.to_string())?;
+    let elapsed = t0.elapsed().as_secs_f64();
     println!(
         "swept {} points in {:.2}s ({} cold sims, {} cache hits)",
         out.points.len(),
-        t0.elapsed().as_secs_f64(),
+        elapsed,
         out.cache.misses,
         out.cache.hits
+    );
+    println!(
+        "  {} floorplan candidates evaluated closed-form ({:.0} candidates/s)",
+        out.candidates(),
+        out.candidates() as f64 / elapsed.max(1e-9)
     );
     // Per-dataflow engine throughput (coordinator metrics lanes): a
     // regression in any one dataflow leg shows up here instead of being

@@ -18,7 +18,7 @@ pub use tech::TechParams;
 
 use crate::arch::{PeMicroArch, SaConfig};
 use crate::floorplan::PeGeometry;
-use crate::sim::GemmSim;
+use crate::sim::{GemmSim, SaStats};
 
 /// Per-component power of one workload on one floorplan, in mW.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -82,16 +82,37 @@ pub fn evaluate(
     tech: &TechParams,
     sim: &GemmSim,
 ) -> PowerBreakdown {
+    evaluate_stats(sa, pe, tech, &sim.stats, sim.cycles, sim.macs)
+}
+
+/// Evaluate power from bare stream statistics, without a [`GemmSim`].
+///
+/// This is [`evaluate`] with the simulation decomposed into the three
+/// fields it actually reads: bus statistics, cycles and MAC count. The
+/// factored sweep path ([`crate::explore::profile`]) stores exactly this
+/// triple per layer, so evaluating a floorplan candidate from a
+/// [`StreamProfile`](crate::explore::profile::StreamProfile) performs the
+/// identical floating-point operations in the identical order as the
+/// engine path — bit-identity between the two is structural, not a
+/// tolerance.
+pub fn evaluate_stats(
+    sa: &SaConfig,
+    pe: &PeGeometry,
+    tech: &TechParams,
+    stats: &SaStats,
+    cycles: u64,
+    macs: u64,
+) -> PowerBreakdown {
     let (w_um, h_um) = (pe.width_um(), pe.height_um());
     let e_wire = tech.wire_toggle_fj_per_um(); // fJ per µm-toggle
-    let seconds = sim.silicon_seconds(sa);
+    let seconds = cycles as f64 / (sa.clock_ghz * 1e9);
     let to_mw = |fj: f64| fj * 1e-15 / seconds * 1e3; // fJ → mW
 
     // --- Interconnect -----------------------------------------------------
-    let h_bus_fj = sim.stats.horizontal.toggles as f64 * w_um * e_wire;
-    let v_bus_fj = sim.stats.vertical.toggles as f64 * h_um * e_wire;
-    let w_load_fj = sim.stats.weight_load.toggles as f64 * h_um * e_wire;
-    let ctrl_fj = sim.cycles as f64
+    let h_bus_fj = stats.horizontal.toggles as f64 * w_um * e_wire;
+    let v_bus_fj = stats.vertical.toggles as f64 * h_um * e_wire;
+    let w_load_fj = stats.weight_load.toggles as f64 * h_um * e_wire;
+    let ctrl_fj = cycles as f64
         * sa.num_pes() as f64
         * tech.ctrl_eff_wires
         * (w_um + h_um)
@@ -100,14 +121,14 @@ pub fn evaluate(
     // --- PE-internal -------------------------------------------------------
     // Multiplier data gating: MACs whose streamed input is zero burn a
     // fraction (1 - zero_gating) of the full MAC energy.
-    let zero_frac = sim.stats.horizontal.zero_fraction();
+    let zero_frac = stats.horizontal.zero_fraction();
     let mac_eff_fj =
         tech.mac_energy_fj_for(sa.input_bits) * (1.0 - tech.zero_gating * zero_frac);
-    let mac_fj = sim.macs as f64 * mac_eff_fj;
+    let mac_fj = macs as f64 * mac_eff_fj;
 
     let reg_bits = PeMicroArch::default().cost(sa).register_bits as f64;
     let reg_fj =
-        sim.cycles as f64 * sa.num_pes() as f64 * reg_bits * tech.ff_energy_fj_per_bit;
+        cycles as f64 * sa.num_pes() as f64 * reg_bits * tech.ff_energy_fj_per_bit;
 
     let leak_mw = tech.leakage_uw_per_pe * sa.num_pes() as f64 * 1e-3;
 

@@ -43,6 +43,7 @@ pub use batcher::{coalesce_by_shape, ShapeGroup, ShapeKey};
 pub use cache::{operand_digest, sa_fingerprint, CacheKey, CacheStats, ResultCache};
 pub use session::{build_requests, run_scenario, ScenarioConfig, ServeSummary};
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -135,23 +136,44 @@ pub struct InferResponse {
 pub struct Server {
     cfg: ServeConfig,
     coord: Coordinator,
-    cache: Mutex<ResultCache>,
+    /// Result cache — possibly shared with other servers (the fleet
+    /// layer hands one cache to every array). Keys are engine-salted per
+    /// server ([`Server::cache_key`]), so sharing never aliases results
+    /// across geometries or dataflows.
+    cache: Arc<Mutex<ResultCache>>,
     sa_fp: u64,
+    /// This server's own lookup counters. For a standalone server they
+    /// equal the cache's internal totals; under a shared cache they
+    /// attribute traffic to the server that looked it up, which is what
+    /// per-array rollups report.
+    hits: AtomicU64,
+    misses: AtomicU64,
 }
 
 impl Server {
     /// New server; owns a coordinator pool (running the configured
-    /// dataflow engine) and a result cache keyed under the
+    /// dataflow engine) and a private result cache keyed under the
     /// engine-salted array fingerprint.
     pub fn new(cfg: ServeConfig) -> Self {
+        let cache = Arc::new(Mutex::new(ResultCache::new(cfg.cache_capacity)));
+        Self::with_cache(cfg, cache)
+    }
+
+    /// New server over an existing (possibly shared) result cache. The
+    /// cache's own capacity governs; `cfg.cache_capacity` is not
+    /// consulted. Identical-geometry, identical-engine servers sharing a
+    /// cache serve each other's cold simulations — the fleet layer's
+    /// cross-array memoization.
+    pub fn with_cache(cfg: ServeConfig, cache: Arc<Mutex<ResultCache>>) -> Self {
         let coord = Coordinator::new(&cfg.sa, cfg.workers).with_engine(cfg.engine);
-        let cache = Mutex::new(ResultCache::new(cfg.cache_capacity));
         let sa_fp = cache::mix(sa_fingerprint(&cfg.sa), cfg.engine.salt());
         Server {
             cfg,
             coord,
             cache,
             sa_fp,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
         }
     }
 
@@ -170,9 +192,17 @@ impl Server {
         &self.coord
     }
 
-    /// Point-in-time cache statistics.
+    /// Point-in-time cache statistics: this server's own hit/miss
+    /// counters over the cache's eviction/occupancy state. Identical to
+    /// the cache's totals for a private cache; under a shared cache the
+    /// hits/misses are this server's share of the traffic.
     pub fn cache_stats(&self) -> CacheStats {
-        self.cache.lock().expect("cache poisoned").stats()
+        let s = self.cache.lock().expect("cache poisoned").stats();
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            ..s
+        }
     }
 
     /// Cache key of a request on this server's array.
@@ -205,6 +235,11 @@ impl Server {
             let mut cache = self.cache.lock().expect("cache poisoned");
             for (i, key) in keys.iter().enumerate() {
                 sims[i] = cache.get(key);
+                if sims[i].is_some() {
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    self.misses.fetch_add(1, Ordering::Relaxed);
+                }
                 metrics.record_cache_lookup(sims[i].is_some());
             }
         }
@@ -491,6 +526,52 @@ mod tests {
         let out = s.process_batch(&reqs).unwrap();
         assert!(out.iter().all(|r| r.cache_hit));
         assert_eq!(s.metrics().snapshot().jobs, 2, "no new simulations");
+    }
+
+    #[test]
+    fn shared_cache_serves_across_servers() {
+        let sa = SaConfig::new_ws(4, 4, 8).unwrap();
+        let shared = Arc::new(Mutex::new(ResultCache::new(16)));
+        let mk = || {
+            Server::with_cache(
+                ServeConfig {
+                    sa: sa.clone(),
+                    workers: 2,
+                    cache_capacity: 0, // ignored: the shared cache governs
+                    window: 4,
+                    engine: DataflowKind::Ws,
+                },
+                Arc::clone(&shared),
+            )
+        };
+        let (s1, s2) = (mk(), mk());
+        let reqs: Vec<_> = (0..2).map(|i| req(i, 31 + i, (6, 4, 4))).collect();
+        let cold = s1.process_batch(&reqs).unwrap();
+        assert!(cold.iter().all(|r| !r.cache_hit));
+        // The sibling server with the same geometry + engine hits the
+        // shared entries without simulating anything itself.
+        let warm = s2.process_batch(&reqs).unwrap();
+        assert!(warm.iter().all(|r| r.cache_hit));
+        assert!(Arc::ptr_eq(&warm[0].sim, &cold[0].sim));
+        assert_eq!(s2.metrics().snapshot().jobs, 0);
+        // Per-server counters attribute the traffic to the server that
+        // looked it up; occupancy reflects the shared cache.
+        assert_eq!((s1.cache_stats().hits, s1.cache_stats().misses), (0, 2));
+        assert_eq!((s2.cache_stats().hits, s2.cache_stats().misses), (2, 0));
+        assert_eq!(s1.cache_stats().len, 2);
+        // A different engine on the same shared cache never aliases.
+        let os = Server::with_cache(
+            ServeConfig {
+                sa: sa.clone(),
+                workers: 2,
+                cache_capacity: 0,
+                window: 4,
+                engine: DataflowKind::Os,
+            },
+            Arc::clone(&shared),
+        );
+        let out = os.process_batch(&reqs[..1]).unwrap();
+        assert!(!out[0].cache_hit);
     }
 
     #[test]

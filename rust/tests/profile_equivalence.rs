@@ -1,0 +1,188 @@
+//! Differential tier for the factored sweep evaluator and the
+//! per-dataflow closed-form cycle model.
+//!
+//! Two families of contracts, both bit-exact (no tolerances):
+//!
+//! 1. **Profile factoring** — evaluating a floorplan candidate through a
+//!    [`StreamProfile`] (measure stream statistics once, then closed-form
+//!    arithmetic per candidate) produces the *same bits* as running
+//!    [`power::evaluate`] over the original simulations and averaging,
+//!    across all three dataflows, ragged GEMM shapes and PE aspects.
+//!    This is what licenses the explorer to sweep 10^5+ candidates
+//!    without touching the engines per candidate.
+//! 2. **Cycle model** — [`closed_form_cycles`] reproduces the analytic
+//!    engines' cycle counts exactly for WS, OS *and* IS (the fleet's
+//!    router score and chaos service model dispatch on the array's
+//!    engine; until they did, any OS/IS array was priced as WS), agrees
+//!    with [`TilePlan`] on WS, and a healthy [`HealthState`] reproduces
+//!    the nominal model bit-for-bit.
+
+use asymm_sa::arch::{PeMicroArch, SaConfig};
+use asymm_sa::explore::{DataflowKind, StreamProfile};
+use asymm_sa::faults::HealthState;
+use asymm_sa::fleet::{closed_form_cycles, ArraySpec};
+use asymm_sa::floorplan::PeGeometry;
+use asymm_sa::gemm::{Matrix, TilePlan};
+use asymm_sa::power::{self, TechParams};
+use asymm_sa::serve::ShapeKey;
+use asymm_sa::sim::fast::FastSimOpts;
+use asymm_sa::sim::GemmSim;
+
+/// Deterministic int16-range operand with a sprinkling of exact zeros
+/// (so zero-gating and zero-fraction terms are exercised).
+fn mat(rows: usize, cols: usize, salt: i32) -> Matrix<i32> {
+    let data: Vec<i32> = (0..rows * cols)
+        .map(|i| {
+            let v = (i as i32).wrapping_mul(37).wrapping_add(salt * 13 + 1);
+            if v % 5 == 0 {
+                0
+            } else {
+                (v % 901) - 450
+            }
+        })
+        .collect();
+    Matrix::from_vec(rows, cols, data).unwrap()
+}
+
+/// Ragged shapes: none divides the array geometries evenly, so every
+/// `div_ceil` in the cycle model is off the trivial path.
+const SHAPES: [(usize, usize, usize); 3] = [(10, 12, 9), (7, 5, 13), (16, 3, 8)];
+
+const GEOMS: [(usize, usize); 2] = [(4, 8), (8, 2)];
+
+fn simulate_all(df: DataflowKind, sa: &SaConfig) -> Vec<GemmSim> {
+    let opts = FastSimOpts::default();
+    SHAPES
+        .iter()
+        .enumerate()
+        .map(|(i, &(m, k, n))| {
+            df.simulate_with(sa, &mat(m, k, i as i32), &mat(k, n, 100 + i as i32), &opts)
+                .unwrap()
+        })
+        .collect()
+}
+
+#[test]
+fn factored_eval_is_bit_identical_to_the_engine_path() {
+    let tech = TechParams::default();
+    for df in DataflowKind::ALL {
+        for (rows, cols) in GEOMS {
+            let sa = SaConfig::new_ws(rows, cols, 16).unwrap();
+            let sims = simulate_all(df, &sa);
+            let profile = StreamProfile::from_sims(df, rows, cols, sims.iter());
+
+            // Aggregates are the sweep's own accumulation.
+            assert_eq!(profile.cycles, sims.iter().map(|s| s.cycles).sum::<u64>());
+            assert_eq!(profile.macs, sims.iter().map(|s| s.macs).sum::<u64>());
+
+            let pe_area = PeMicroArch::default().cost(&sa).area_um2;
+            for aspect in [0.25, 0.9, 1.0, 3.7812, 16.0] {
+                let fast = profile
+                    .eval_aspect(&sa, &tech, pe_area, aspect, true)
+                    .unwrap();
+
+                // Reference: the historical path — evaluate the full
+                // power model per simulation, accumulate in layer
+                // order, divide once.
+                let pe = PeGeometry::new(pe_area, aspect).unwrap();
+                let n = sims.len() as f64;
+                let (mut bus, mut ic, mut tot) = (0.0f64, 0.0f64, 0.0f64);
+                for sim in &sims {
+                    let p = power::evaluate(&sa, &pe, &tech, sim);
+                    bus += p.bus_mw();
+                    ic += p.interconnect_mw();
+                    tot += p.total_mw();
+                }
+                let label = format!("{} {rows}x{cols} aspect {aspect}", df.name());
+                assert_eq!(fast.bus_mw.to_bits(), (bus / n).to_bits(), "{label}");
+                assert_eq!(
+                    fast.interconnect_mw.to_bits(),
+                    (ic / n).to_bits(),
+                    "{label}"
+                );
+                assert_eq!(fast.total_mw.to_bits(), (tot / n).to_bits(), "{label}");
+            }
+
+            // evaluate() and evaluate_stats() are the same function: the
+            // decomposed entry point sees only what the sim carries.
+            let pe = PeGeometry::new(pe_area, 2.0).unwrap();
+            for sim in &sims {
+                assert_eq!(
+                    power::evaluate(&sa, &pe, &tech, sim),
+                    power::evaluate_stats(&sa, &pe, &tech, &sim.stats, sim.cycles, sim.macs)
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn closed_form_cycles_match_every_engine() {
+    for df in DataflowKind::ALL {
+        for (rows, cols) in GEOMS {
+            let sa = SaConfig::new_ws(rows, cols, 16).unwrap();
+            let sims = simulate_all(df, &sa);
+            for (sim, &(m, k, n)) in sims.iter().zip(&SHAPES) {
+                let shape = ShapeKey { m, k, n };
+                assert_eq!(
+                    closed_form_cycles(&sa, df, sa.cols, &shape),
+                    sim.cycles,
+                    "{} {rows}x{cols} {m}x{k}x{n}",
+                    df.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn ws_closed_form_agrees_with_the_tile_plan() {
+    for (rows, cols) in GEOMS {
+        let sa = SaConfig::new_ws(rows, cols, 16).unwrap();
+        for &(m, k, n) in &SHAPES {
+            let shape = ShapeKey { m, k, n };
+            let plan = TilePlan::new(m, k, n, &sa).unwrap().total_cycles(&sa) as u64;
+            assert_eq!(closed_form_cycles(&sa, DataflowKind::Ws, sa.cols, &shape), plan);
+        }
+    }
+}
+
+fn spec(sa: SaConfig, df: DataflowKind) -> ArraySpec {
+    let pe_area_um2 = PeMicroArch::default().cost(&sa).area_um2;
+    ArraySpec {
+        sa,
+        engine: df,
+        aspect: 1.0,
+        pe_area_um2,
+        a_h: 0.1,
+        a_v: 0.2,
+        provisioned_interconnect_mw: 1.0,
+        provisioned_cycles: 1,
+    }
+}
+
+#[test]
+fn healthy_state_reproduces_the_nominal_model_for_every_dataflow() {
+    let shape = ShapeKey { m: 10, k: 33, n: 40 };
+    for df in DataflowKind::ALL {
+        let sa = SaConfig::new_ws(4, 8, 16).unwrap();
+        let sp = spec(sa, df);
+        let healthy = HealthState::default();
+        assert_eq!(
+            healthy.effective_cycles(&sp, &shape),
+            sp.modeled_cycles(&shape),
+            "{}",
+            df.name()
+        );
+        assert_eq!(
+            healthy.effective_service_secs(&sp, &shape).to_bits(),
+            sp.modeled_service_secs(&shape).to_bits(),
+            "{}",
+            df.name()
+        );
+        // Losing columns multiplies the pass count, never shrinks it.
+        let mut hurt = HealthState::default();
+        hurt.column_loss = 0.5;
+        assert!(hurt.effective_cycles(&sp, &shape) >= sp.modeled_cycles(&shape));
+    }
+}

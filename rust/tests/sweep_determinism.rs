@@ -7,8 +7,8 @@
 //!    and every annotated number are functions of the configuration
 //!    only, never of completion order.
 //! 2. **Cache reuse** — a second run on the same [`Explorer`] is served
-//!    from the shared result cache (hits > 0, zero cold simulations)
-//!    and produces bit-identical points.
+//!    from the stream-profile memo (zero result-cache traffic, zero
+//!    cold simulations) and produces bit-identical points.
 //! 3. **Paper ordering** — the best asymmetric point beats the square
 //!    WS baseline on interconnect power, and the eq.-6 closed form
 //!    lands within one grid step of the swept bus-power optimum (the
@@ -54,13 +54,27 @@ fn second_run_reuses_the_result_cache() {
     let ex = Explorer::new(c.clone()).unwrap();
     let first = ex.run().unwrap();
     assert!(first.cache.misses > 0, "first run must simulate");
-    // The post-sweep baseline re-read already hits entries the WS sweep
-    // pass inserted.
-    assert!(first.cache.hits > 0, "baseline lookups should hit");
+    // Every swept (workload, dataflow, geometry) triple keys its own
+    // profile and its own result-cache entries, and the post-sweep WS
+    // baseline is served whole from the profile the WS sweep leg
+    // memoized — so the first run's result-cache traffic is all misses.
+    assert_eq!(first.cache.hits, 0, "{:?}", first.cache);
+    let ps1 = ex.profile_stats();
+    assert_eq!(ps1.misses as usize, first.points.len());
+    assert_eq!(ps1.hits, 1, "the baseline reuses the swept WS profile");
+    assert_eq!(ps1.len, first.points.len());
 
     let second = ex.run().unwrap();
     assert_eq!(second.cache.misses, 0, "everything memoized: {:?}", second.cache);
-    assert!(second.cache.hits >= first.cache.misses);
+    // The second run is served entirely from the upper tier: every
+    // profile hits the memo, so the result cache sees no traffic at all.
+    assert_eq!(second.cache.hits, 0, "profile memo should bypass the result cache");
+    let ps2 = ex.profile_stats();
+    assert_eq!(ps2.misses, ps1.misses, "no new engine work");
+    assert_eq!(
+        ps2.hits,
+        ps1.hits + second.points.len() as u64 + second.baselines.len() as u64
+    );
 
     // Memoized results are bit-identical to the cold run.
     let j1 = explore::summary_json(&c, &first);

@@ -734,6 +734,51 @@ def compute_mw(stats, cycles, macs, R, C, bh, bv, clock_ghz=1.0):
     return to_mw(mac_fj) + to_mw(reg_fj) + leak_mw
 
 
+def bus_mw(stats, cycles, R, C, area, aspect, clock_ghz=1.0):
+    """Data-bus-only slice of interconnect_mw (horizontal input +
+    vertical psum wires) — PowerBreakdown::bus_mw, the eq.-6 objective."""
+    w_um = math.sqrt(area * aspect)
+    h_um = math.sqrt(area / aspect)
+    e_wire = 0.5 * WIRE_CAP * VDD * VDD
+    seconds = float(cycles) / (clock_ghz * 1e9)
+    h_bus_fj = float(stats["h"][0]) * w_um * e_wire
+    v_bus_fj = float(stats["v"][0]) * h_um * e_wire
+
+    def to_mw(fj: float) -> float:
+        return fj * 1e-15 / seconds * 1e3
+
+    return to_mw(h_bus_fj) + to_mw(v_bus_fj)
+
+
+def profile_eval(layers, R, C, bh, bv, area, aspect):
+    """explore::profile::StreamProfile::eval_aspect, ported: evaluate one
+    floorplan candidate closed-form over stored per-layer
+    (stats, cycles, macs) snapshots, averaging (bus, interconnect, total)
+    power in layer order. This is the factored sweep path: the engines
+    measure the snapshots once, every candidate after that is this
+    function."""
+    bus = ic = tot = 0.0
+    for (stats, cycles, macs) in layers:
+        b = bus_mw(stats, cycles, R, C, area, aspect)
+        i = interconnect_mw(stats, cycles, R, C, area, aspect)
+        bus += b
+        ic += i
+        tot += i + compute_mw(stats, cycles, macs, R, C, bh, bv)
+    n = float(len(layers))
+    return (bus / n, ic / n, tot / n)
+
+
+def closed_form_cycles(df, R, C, m, k, n):
+    """fleet::closed_form_cycles, ported: per-dataflow pass count x
+    pass cost. The dataflow decides which GEMM dimensions tile onto the
+    array and which dimension each pass streams."""
+    if df == "ws":
+        return math.ceil(k / R) * math.ceil(n / C) * pass_cycles(R, C, m)
+    if df == "os":
+        return math.ceil(m / R) * math.ceil(n / C) * os_pass_cycles(R, k)
+    return math.ceil(k / R) * math.ceil(m / C) * is_pass_cycles(R, C, n)
+
+
 # ----------------------------------------------------------------------
 # Validation + generation
 # ----------------------------------------------------------------------
@@ -858,6 +903,56 @@ def selfcheck_dataflows():
                 assert 0 <= zer <= obs, f"{ctx}: {key} zeros"
                 assert 0 <= tog <= obs * bits_k, f"{ctx}: {key} toggle capacity"
     print("selfcheck: OS/IS scalar == vectorized on all cases, invariants hold")
+
+
+def selfcheck_profile():
+    """Differential for the factored sweep evaluator (mirrors Rust's
+    tests/profile_equivalence.rs): a profile snapshot — per-layer
+    (stats, cycles, macs) — evaluates floorplan candidates to exactly the
+    numbers the engine path produces, and the per-dataflow closed-form
+    cycle model reproduces every engine's cycle count (including OS and
+    IS, which the fleet's router score once priced with the WS formula)."""
+    rng = Rng(777)
+    R, C, bits = 4, 8, 8
+    guard = (R - 1).bit_length()
+    bv = 2 * bits + guard
+    hi = (1 << (bits - 1)) - 1
+    shapes = [(10, 12, 9), (7, 5, 13), (16, 3, 8)]
+    area = pe_area_um2(bits, bv)
+    for (df, fn) in (
+        ("ws", simulate_ws_numpy),
+        ("os", simulate_os_numpy),
+        ("is", simulate_is_numpy),
+    ):
+        sims = []
+        for (m, k, n) in shapes:
+            A = np.array(
+                [rng.next_u64() % (2 * hi + 1) - hi for _ in range(m * k)],
+                dtype=np.int64,
+            ).reshape(m, k)
+            W = np.array(
+                [rng.next_u64() % (2 * hi + 1) - hi for _ in range(k * n)],
+                dtype=np.int64,
+            ).reshape(k, n)
+            _y, stats, cycles, macs = fn(R, C, bits, bv, A, W)
+            ctx = f"{df} {R}x{C} {m}x{k}x{n}"
+            assert cycles == closed_form_cycles(df, R, C, m, k, n), (
+                f"{ctx}: cycle closed form"
+            )
+            sims.append((stats, cycles, macs))
+        for aspect in (0.25, 1.0, 3.7812, 16.0):
+            got = profile_eval(sims, R, C, bits, bv, area, aspect)
+            # Engine path: evaluate every simulation directly, average in
+            # layer order — the pre-factoring sweep loop.
+            want = [0.0, 0.0, 0.0]
+            for (stats, cycles, macs) in sims:
+                i = interconnect_mw(stats, cycles, R, C, area, aspect)
+                want[0] += bus_mw(stats, cycles, R, C, area, aspect)
+                want[1] += i
+                want[2] += i + compute_mw(stats, cycles, macs, R, C, bits, bv)
+            want = tuple(x / float(len(sims)) for x in want)
+            assert got == want, f"{df} aspect {aspect}: {got} vs {want}"
+    print("selfcheck: profile-factored eval == engine path, cycle closed forms hold")
 
 
 def compute_doc() -> dict:
@@ -1024,6 +1119,7 @@ def compute_dataflows_doc() -> dict:
 if __name__ == "__main__":
     selfcheck()
     selfcheck_dataflows()
+    selfcheck_profile()
     golden_dir = Path(__file__).resolve().parent.parent / "rust/tests/golden"
     fixture = golden_dir / "table1.json"
     doc = compute_doc()
