@@ -1,0 +1,80 @@
+//! Bench: drift detection + mid-trace re-provisioning → `BENCH_drift.json`.
+//!
+//! Times the drift machinery against the static serving path so a
+//! regression localizes:
+//!
+//! * **static lane** — detection off under the same Poisson arrival
+//!   plan, which must cost the same as the plain arrival-driven engine
+//!   (it *is* the plain engine: detection-off delegates);
+//! * **adaptive lane** — detection on over the drifted trace, paying
+//!   the windowed histogram, the closed-form weighted re-sweep and the
+//!   warm-cache cutover;
+//! * **full comparison** — `run_drift_comparison` end to end at a
+//!   CI-sized configuration.
+//!
+//! Derived notes record the adaptation overhead ratio and the headline
+//! quality (post-cutover energy margin, tail latencies), so CI tracks
+//! both the cost and the *payoff* trajectory of drift adaptation.
+
+use asymm_sa::bench_util::Bench;
+use asymm_sa::explore::WorkloadKind;
+use asymm_sa::fleet::{run_drift_comparison, ArrivalProcess, DriftConfig, FleetConfig};
+
+fn main() {
+    let mut b = Bench::new("drift_adaptation");
+    let dcfg = DriftConfig {
+        fleet: FleetConfig {
+            pe_budget: 64,
+            arrays: 2,
+            workload: WorkloadKind::Synth,
+            max_layers: 2,
+            requests: 32,
+            unique_inputs: 2,
+            seed: 2023,
+            window: 4,
+            cache_capacity: 64,
+            workers: 0,
+            spill_macs: 0,
+            gap_us: 0.0,
+        },
+        arrival: ArrivalProcess::Poisson {
+            seed: 0xD21F_7A11,
+            rate: 1.2,
+        },
+        phase_split: 0.5,
+        detect_window: 8,
+        divergence_threshold: 0.2,
+    };
+    let static_cfg = DriftConfig {
+        detect_window: 0,
+        ..dcfg.clone()
+    };
+
+    let static_ns = b
+        .case("static_poisson_32req", || {
+            run_drift_comparison(&static_cfg).expect("static comparison")
+        })
+        .mean_ns;
+    b.throughput(dcfg.fleet.requests as f64, "req");
+
+    let adaptive_ns = b
+        .case("adaptive_poisson_32req", || {
+            run_drift_comparison(&dcfg).expect("adaptive comparison")
+        })
+        .mean_ns;
+    b.throughput(dcfg.fleet.requests as f64, "req");
+    b.note("adaptive_over_static", adaptive_ns / static_ns);
+
+    // Quality trajectory: the headline adaptation numbers.
+    let report = run_drift_comparison(&dcfg).expect("comparison");
+    let h = report.headline();
+    b.note("adapted", if h.adapted { 1.0 } else { 0.0 });
+    b.note("post_margin_pct", h.post_margin_pct);
+    b.note("warmup_uj", h.warmup_uj);
+    b.note("adaptive_p99_us", h.adaptive_p99_us as f64);
+    b.note("adaptive_p999_us", h.adaptive_p999_us as f64);
+    b.section("drift", asymm_sa::fleet::drift_summary_json(&dcfg, &report));
+
+    b.finish();
+    b.write_json("BENCH_drift.json").expect("write BENCH_drift.json");
+}

@@ -16,6 +16,7 @@
 //! values fully determines the snapshot, so serve-latency percentiles
 //! are identical at any worker count for the same recorded values.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
@@ -23,11 +24,117 @@ use crate::sim::engine::DataflowKind;
 use crate::sim::GemmSim;
 
 /// Bound on each per-event latency log: long-lived servers must not
-/// grow metrics memory with total traffic. Past the cap, new samples
-/// are counted in `latency_samples_dropped` instead of stored — the
-/// aggregate counters stay exact forever; only percentile resolution
-/// degrades, and every in-repo scenario stays far below the cap.
+/// grow metrics memory with total traffic. Past the cap the log
+/// *subsamples* instead of truncating — see [`SampledLog`] — so tail
+/// percentiles keep covering the whole stream rather than only its
+/// warm-up prefix. Samples lost to subsampling are counted in
+/// `latency_samples_dropped`; the aggregate counters stay exact
+/// forever, and every in-repo scenario stays far below the cap.
 pub const LATENCY_LOG_CAP: usize = 1 << 20;
+
+/// Seed of the latency-log subsampling hash. A fixed constant: two
+/// `Metrics` instances fed the same sample multiset keep the same
+/// samples, which is what makes snapshots reproducible across runs and
+/// worker counts.
+pub const LATENCY_SAMPLE_SEED: u64 = 0x0DD0_1A7E_5EED_C0DE;
+
+/// SplitMix64-style finalizer over `(seed, value, occurrence)`. The
+/// occurrence index diversifies duplicates: the k-th recorded copy of a
+/// value hashes differently from the (k+1)-th, so heavy-hitter values
+/// subsample smoothly instead of all-or-nothing.
+fn sample_hash(seed: u64, micros: u64, occ: u64) -> u64 {
+    let mut x = seed
+        ^ micros.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ occ.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^= x >> 31;
+    x
+}
+
+/// Bounded latency log with *multiset-deterministic* subsampling
+/// (Wegman/Flajolet adaptive sampling). Every sample is hashed on
+/// `(value, occurrence-index-among-equal-values)`; the log keeps
+/// exactly the samples whose hash falls below an adaptive threshold
+/// `u64::MAX >> level`, and raises `level` whenever the kept set would
+/// exceed the cap.
+///
+/// The final `(level, kept-set)` is a pure function of the recorded
+/// **multiset**: occurrence indices of equal values are
+/// interleaving-invariant, and the final level is the smallest one
+/// whose below-threshold population fits the cap regardless of arrival
+/// order. So two runs that record the same latency values — in any
+/// order, from any number of workers — snapshot byte-identically. This
+/// replaces the old keep-first-`CAP` prefix log, whose long-run
+/// percentiles reflected warm-up traffic only.
+#[derive(Debug)]
+struct SampledLog {
+    /// Kept samples as `(micros, hash)`; unordered (sorted on snapshot).
+    kept: Vec<(u64, u64)>,
+    /// Per-value occurrence counters (how many times each value has
+    /// been recorded, kept or not). Bounded by the number of *distinct*
+    /// µs values, which a µs-resolution latency range keeps modest.
+    occ: HashMap<u64, u64>,
+    /// Subsampling level: samples survive with probability `2^-level`.
+    level: u32,
+    /// Total samples recorded (kept + dropped).
+    recorded: u64,
+    /// Capacity (== [`LATENCY_LOG_CAP`] in production; small in tests).
+    cap: usize,
+}
+
+impl Default for SampledLog {
+    /// Production capacity ([`LATENCY_LOG_CAP`]).
+    fn default() -> Self {
+        Self::new(LATENCY_LOG_CAP)
+    }
+}
+
+impl SampledLog {
+    fn new(cap: usize) -> Self {
+        SampledLog {
+            kept: Vec::new(),
+            occ: HashMap::new(),
+            level: 0,
+            recorded: 0,
+            cap,
+        }
+    }
+
+    fn threshold(level: u32) -> u64 {
+        u64::MAX >> level
+    }
+
+    fn push(&mut self, micros: u64) {
+        self.recorded += 1;
+        let occ = self.occ.entry(micros).or_insert(0);
+        *occ += 1;
+        let h = sample_hash(LATENCY_SAMPLE_SEED, micros, *occ);
+        if h > Self::threshold(self.level) {
+            return;
+        }
+        self.kept.push((micros, h));
+        while self.kept.len() > self.cap {
+            self.level += 1;
+            let t = Self::threshold(self.level);
+            self.kept.retain(|&(_, h)| h <= t);
+        }
+    }
+
+    /// Stable sorted view of the kept samples.
+    fn sorted(&self) -> Vec<u64> {
+        let mut v: Vec<u64> = self.kept.iter().map(|&(m, _)| m).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Samples recorded but not retained.
+    fn dropped(&self) -> u64 {
+        self.recorded - self.kept.len() as u64
+    }
+}
 
 /// Shared counters updated by workers and the serve front-end.
 #[derive(Debug, Default)]
@@ -38,17 +145,17 @@ pub struct Metrics {
     wall_micros: AtomicU64,
     cache_hits: AtomicU64,
     cache_lookups: AtomicU64,
-    latency_samples_dropped: AtomicU64,
     retries: AtomicU64,
     failovers: AtomicU64,
     /// Per-job wall times (µs), append order = completion order
-    /// (nondeterministic under fan-out; sorted before exposure).
-    job_wall_micros: Mutex<Vec<u64>>,
+    /// (nondeterministic under fan-out; the [`SampledLog`] retention is
+    /// multiset-deterministic and the view is sorted before exposure).
+    job_wall_micros: Mutex<SampledLog>,
     /// Per-request serve latencies (µs), measured from batch admission:
     /// cache lookup + batching + simulation. Waiting for *earlier*
     /// stream windows is not included (see
     /// `serve::InferResponse::latency_secs`).
-    serve_latency_micros: Mutex<Vec<u64>>,
+    serve_latency_micros: Mutex<SampledLog>,
     /// Per-dataflow job counters, indexed by [`DataflowKind::index`]:
     /// the sweep's per-engine throughput view, so a regression in any
     /// one dataflow leg is visible instead of averaged away.
@@ -107,7 +214,10 @@ pub struct MetricsSnapshot {
     pub cache_hits: u64,
     /// Result-cache lookups observed by the serve front-end.
     pub cache_lookups: u64,
-    /// Latency samples dropped once a log hit [`LATENCY_LOG_CAP`].
+    /// Latency samples recorded but subsampled away after a log reached
+    /// [`LATENCY_LOG_CAP`] (summed across both logs). Zero whenever the
+    /// whole stream fits; surfaced in the serve/fleet summaries so a
+    /// subsampled percentile is never mistaken for an exact one.
     pub latency_samples_dropped: u64,
     /// Requests re-queued against this server after a fault rejection
     /// (recorded by the fleet's chaos admission loop).
@@ -136,28 +246,38 @@ pub fn sorted_micros<I: IntoIterator<Item = f64>>(secs: I) -> Vec<u64> {
     v
 }
 
-/// Nearest-rank percentile over an ascending-sorted slice; `p ∈ [0, 1]`.
-/// Returns 0 for an empty slice. Deterministic: depends only on the
-/// sorted values, never on arrival order.
+/// **Nearest-rank** percentile over an ascending-sorted slice;
+/// `p ∈ [0, 1]` (clamped). Returns 0 for an empty slice.
+///
+/// Definition (the textbook one): the p-th percentile of N samples is
+/// the value at rank `⌈p·N⌉` (1-based), i.e. the smallest recorded
+/// value such that at least `p·N` samples are ≤ it; `p = 0` maps to
+/// rank 1. No interpolation — the result is always a recorded sample.
+/// This replaces an earlier `round(p·(N−1))` linear-index variant that
+/// disagreed with its own "nearest-rank" doc on even-N medians and
+/// small-N tails; `tests::percentile_matches_reference_definition`
+/// locks the definition against an independent counting reference.
 pub fn percentile_micros(sorted: &[u64], p: f64) -> u64 {
     if sorted.is_empty() {
         return 0;
     }
-    let rank = (p.clamp(0.0, 1.0) * (sorted.len() - 1) as f64).round() as usize;
-    sorted[rank.min(sorted.len() - 1)]
+    let n = sorted.len();
+    let rank = (p.clamp(0.0, 1.0) * n as f64).ceil() as usize;
+    sorted[rank.clamp(1, n) - 1]
+}
+
+/// Seconds → integer microseconds, rounded to nearest. `as u64` alone
+/// floors, which maps sub-µs modeled latencies to 0 and skews low
+/// percentiles — every metrics conversion routes through here.
+fn to_micros(secs: f64) -> u64 {
+    (secs * 1e6).round() as u64
 }
 
 impl Metrics {
-    /// Append to a bounded latency log; samples past the cap are
-    /// tallied in `latency_samples_dropped` instead of stored.
-    fn push_bounded(&self, log: &Mutex<Vec<u64>>, micros: u64) {
-        let mut g = log.lock().expect("metrics poisoned");
-        if g.len() < LATENCY_LOG_CAP {
-            g.push(micros);
-        } else {
-            drop(g);
-            self.latency_samples_dropped.fetch_add(1, Ordering::Relaxed);
-        }
+    /// Append to a bounded latency log (multiset-deterministic
+    /// subsampling past the cap; see [`SampledLog`]).
+    fn push_sampled(&self, log: &Mutex<SampledLog>, micros: u64) {
+        log.lock().expect("metrics poisoned").push(micros);
     }
 
     /// Record one finished simulation job.
@@ -165,14 +285,14 @@ impl Metrics {
         self.jobs.fetch_add(1, Ordering::Relaxed);
         self.macs.fetch_add(sim.macs, Ordering::Relaxed);
         self.sim_cycles.fetch_add(sim.cycles, Ordering::Relaxed);
-        let micros = (wall_secs * 1e6) as u64;
+        let micros = to_micros(wall_secs);
         self.wall_micros.fetch_add(micros, Ordering::Relaxed);
-        self.push_bounded(&self.job_wall_micros, micros);
+        self.push_sampled(&self.job_wall_micros, micros);
     }
 
     /// Record one serve-side request completion (cached or simulated).
     pub fn record_serve_latency(&self, latency_secs: f64) {
-        self.push_bounded(&self.serve_latency_micros, (latency_secs * 1e6) as u64);
+        self.push_sampled(&self.serve_latency_micros, to_micros(latency_secs));
     }
 
     /// Record one finished simulation into its dataflow's lane (in
@@ -182,7 +302,7 @@ impl Metrics {
         let i = kind.index();
         self.engine_jobs[i].fetch_add(1, Ordering::Relaxed);
         self.engine_macs[i].fetch_add(sim.macs, Ordering::Relaxed);
-        self.engine_wall_micros[i].fetch_add((wall_secs * 1e6) as u64, Ordering::Relaxed);
+        self.engine_wall_micros[i].fetch_add(to_micros(wall_secs), Ordering::Relaxed);
     }
 
     /// Record one fault-driven retry queued against this server.
@@ -206,18 +326,14 @@ impl Metrics {
     /// Snapshot the counters; latency logs are sorted into the stable
     /// view (see module docs).
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let mut job_wall: Vec<u64> = self
-            .job_wall_micros
-            .lock()
-            .expect("metrics poisoned")
-            .clone();
-        job_wall.sort_unstable();
-        let mut serve_lat: Vec<u64> = self
-            .serve_latency_micros
-            .lock()
-            .expect("metrics poisoned")
-            .clone();
-        serve_lat.sort_unstable();
+        let (job_wall, job_dropped) = {
+            let g = self.job_wall_micros.lock().expect("metrics poisoned");
+            (g.sorted(), g.dropped())
+        };
+        let (serve_lat, serve_dropped) = {
+            let g = self.serve_latency_micros.lock().expect("metrics poisoned");
+            (g.sorted(), g.dropped())
+        };
         MetricsSnapshot {
             jobs: self.jobs.load(Ordering::Relaxed),
             macs: self.macs.load(Ordering::Relaxed),
@@ -225,7 +341,7 @@ impl Metrics {
             wall_micros: self.wall_micros.load(Ordering::Relaxed),
             cache_hits: self.cache_hits.load(Ordering::Relaxed),
             cache_lookups: self.cache_lookups.load(Ordering::Relaxed),
-            latency_samples_dropped: self.latency_samples_dropped.load(Ordering::Relaxed),
+            latency_samples_dropped: job_dropped + serve_dropped,
             retries: self.retries.load(Ordering::Relaxed),
             failovers: self.failovers.load(Ordering::Relaxed),
             job_wall_sorted_micros: job_wall,
@@ -350,6 +466,124 @@ mod tests {
         assert_eq!(percentile_micros(&sorted, 1.0), 50);
         assert_eq!(percentile_micros(&sorted, 0.9), 50);
         assert_eq!(percentile_micros(&[], 0.5), 0);
+        // Even-N median: nearest-rank ⌈0.5·4⌉ = 2 → the *lower* middle
+        // sample. The old round(p·(N−1)) variant returned 30 here.
+        assert_eq!(percentile_micros(&[10, 20, 30, 40], 0.5), 20);
+        // Small-N tail: ⌈0.99·2⌉ = 2 → max, not an interpolated index.
+        assert_eq!(percentile_micros(&[7, 9], 0.99), 9);
+    }
+
+    /// Independent counting reference for the nearest-rank definition:
+    /// the smallest recorded value with at least `⌈p·N⌉` samples ≤ it.
+    fn reference_nearest_rank(sorted: &[u64], p: f64) -> u64 {
+        let n = sorted.len();
+        let need = ((p.clamp(0.0, 1.0) * n as f64).ceil() as usize).clamp(1, n);
+        for &x in sorted {
+            let le = sorted.iter().filter(|&&y| y <= x).count();
+            if le >= need {
+                return x;
+            }
+        }
+        sorted[n - 1]
+    }
+
+    #[test]
+    fn percentile_matches_reference_definition() {
+        // Property test over seeded random multisets (with duplicates)
+        // and a percentile sweep including the tail values the fleet
+        // reports (p50/p99/p99.9).
+        let mut rng = crate::util::rng::Rng::new(0xBEEF);
+        for trial in 0..200 {
+            let n = 1 + (trial % 37);
+            let mut v: Vec<u64> = (0..n).map(|_| rng.int_range(0, 40) as u64).collect();
+            v.sort_unstable();
+            for p in [0.0, 0.001, 0.25, 0.5, 0.75, 0.9, 0.99, 0.999, 1.0] {
+                assert_eq!(
+                    percentile_micros(&v, p),
+                    reference_nearest_rank(&v, p),
+                    "n={} p={} v={:?}",
+                    n,
+                    p,
+                    v
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sub_microsecond_samples_round_instead_of_truncating() {
+        // Regression: `(secs * 1e6) as u64` floored 0.6 µs to 0,
+        // zeroing low percentiles of modeled-time runs.
+        let m = Metrics::default();
+        let sim = dummy_sim();
+        m.record_job(&sim, 0.6e-6);
+        m.record_serve_latency(0.6e-6);
+        m.record_serve_latency(1.4e-6);
+        m.record_engine_job(DataflowKind::Ws, &sim, 0.6e-6);
+        let s = m.snapshot();
+        assert_eq!(s.job_wall_sorted_micros, vec![1]);
+        assert_eq!(s.serve_latency_sorted_micros, vec![1, 1]);
+        assert_eq!(s.wall_micros, 1);
+        assert_eq!(s.engine(DataflowKind::Ws).wall_micros, 1);
+    }
+
+    #[test]
+    fn sampled_log_is_multiset_deterministic_and_bounded() {
+        // Over-cap streams keep a subsample that depends only on the
+        // recorded multiset — any interleaving (as produced by any
+        // worker count) yields the same kept set and drop count.
+        let n = 400u64;
+        let cap = 32;
+        let mut forward = SampledLog::new(cap);
+        let mut backward = SampledLog::new(cap);
+        let mut shuffled = SampledLog::new(cap);
+        let values: Vec<u64> = (0..n).map(|i| 100 + i % 37).collect();
+        for &v in &values {
+            forward.push(v);
+        }
+        for &v in values.iter().rev() {
+            backward.push(v);
+        }
+        let mut perm = values.clone();
+        let mut rng = crate::util::rng::Rng::new(42);
+        for i in (1..perm.len()).rev() {
+            perm.swap(i, rng.index(0, i + 1));
+        }
+        for &v in &perm {
+            shuffled.push(v);
+        }
+        assert_eq!(forward.sorted(), backward.sorted());
+        assert_eq!(forward.sorted(), shuffled.sorted());
+        assert_eq!(forward.dropped(), backward.dropped());
+        assert_eq!(forward.dropped(), shuffled.dropped());
+        assert!(forward.kept.len() <= cap);
+        assert!(!forward.sorted().is_empty(), "subsample must be non-empty");
+        assert_eq!(forward.recorded, n);
+        assert_eq!(forward.dropped(), n - forward.kept.len() as u64);
+        // Under-cap streams keep everything exactly.
+        let mut small = SampledLog::new(cap);
+        for v in [3u64, 1, 2] {
+            small.push(v);
+        }
+        assert_eq!(small.sorted(), vec![1, 2, 3]);
+        assert_eq!(small.dropped(), 0);
+    }
+
+    #[test]
+    fn dropped_samples_surface_in_the_snapshot() {
+        // Production-cap logs never drop in-repo streams…
+        let m = Metrics::default();
+        for _ in 0..100 {
+            m.record_serve_latency(0.001);
+        }
+        assert_eq!(m.snapshot().latency_samples_dropped, 0);
+        // …but a saturated log reports exactly what it subsampled away.
+        let mut log = SampledLog::new(8);
+        for i in 0..100u64 {
+            log.push(i);
+        }
+        assert_eq!(log.dropped(), 100 - log.kept.len() as u64);
+        assert!(log.dropped() > 0);
     }
 
     #[test]

@@ -532,6 +532,33 @@ impl Explorer {
     /// the same output at any worker count (the summary JSON is asserted
     /// byte-identical by `tests/sweep_determinism.rs`).
     pub fn run(&self) -> Result<SweepOutput> {
+        self.run_inner(None)
+    }
+
+    /// Run the sweep against an *observed* traffic mix: per-layer
+    /// weights (a request histogram over the workload's lowered layers)
+    /// replace the uniform layer average everywhere a point is scored —
+    /// aggregates via [`StreamProfile::weighted_aggregates`], aspect
+    /// candidates via [`StreamProfile::eval_aspect_weighted`]. The
+    /// engine passes and their memoized [`StreamProfile`]s are identical
+    /// to [`Explorer::run`]'s, so after a plain run this re-evaluation
+    /// is pure closed-form arithmetic — the property drift-adaptive
+    /// re-provisioning (`fleet::drift`) relies on to be cheap enough to
+    /// run mid-trace.
+    ///
+    /// Requires a single-workload configuration (the weights are per
+    /// lowered layer of that workload); each profile validates the
+    /// weight vector's length against its own layer count.
+    pub fn run_weighted(&self, weights: &[f64]) -> Result<SweepOutput> {
+        if self.cfg.workloads.len() != 1 {
+            return Err(Error::config(
+                "weighted sweeps need exactly one workload: weights are per lowered layer",
+            ));
+        }
+        self.run_inner(Some(weights))
+    }
+
+    fn run_inner(&self, weights: Option<&[f64]>) -> Result<SweepOutput> {
         let stats0 = self.cache_stats();
 
         // 1. Lower every workload to quantized GEMM operands (seeded,
@@ -567,7 +594,7 @@ impl Explorer {
             let wk = self.cfg.workloads[wi];
             let metrics = Arc::clone(&metrics);
             tasks.push(Box::new(move |intra: usize| {
-                self.eval_config(wk, wl, df, r, c, intra, &metrics)
+                self.eval_config(wk, wl, df, r, c, intra, &metrics, weights)
             }));
         }
         let points = self.coord.run_tasks(tasks)?;
@@ -587,6 +614,7 @@ impl Explorer {
                 bc,
                 intra,
                 &metrics,
+                weights,
             )?);
         }
 
@@ -635,10 +663,11 @@ impl Explorer {
         cols: usize,
         intra: usize,
         metrics: &Metrics,
+        weights: Option<&[f64]>,
     ) -> Result<ConfigPoint> {
         let sa = SaConfig::new_ws(rows, cols, self.cfg.input_bits)?;
         let profile = self.profile_for(wl, df, &sa, rows, cols, intra, metrics)?;
-        self.eval_profile(kind, &sa, &profile)
+        self.eval_profile(kind, &sa, &profile, weights)
     }
 
     /// Get (or measure) the stream profile of one `(workload, dataflow,
@@ -711,16 +740,23 @@ impl Explorer {
     /// Closed-form point evaluation from a stream profile: aggregates,
     /// eq.-5/eq.-6 optima, and the full aspect sample sweep — no engine
     /// work, bit-identical to the historical inline path (asserted by
-    /// `tests/profile_equivalence.rs`).
+    /// `tests/profile_equivalence.rs`). With `weights`, every aggregate
+    /// and aspect score becomes a mix-weighted expectation instead of a
+    /// uniform layer mean (weighted cycles/MACs are expected-per-request
+    /// values); with `None` the float operations are exactly the
+    /// historical ones.
     fn eval_profile(
         &self,
         kind: WorkloadKind,
         sa: &SaConfig,
         profile: &StreamProfile,
+        weights: Option<&[f64]>,
     ) -> Result<ConfigPoint> {
         let (rows, cols) = (profile.rows, profile.cols);
-        let (cycles, macs) = (profile.cycles, profile.macs);
-        let (a_h, a_v) = (profile.a_h, profile.a_v);
+        let (cycles, macs, a_h, a_v) = match weights {
+            Some(w) => profile.weighted_aggregates(w)?,
+            None => (profile.cycles, profile.macs, profile.a_h, profile.a_v),
+        };
         let eq5_ratio = optimizer::wirelength_optimal_ratio(sa);
         let eq6_ratio = if a_h > 0.0 && a_v > 0.0 {
             optimizer::closed_form_ratio(sa, a_h, a_v)
@@ -747,7 +783,11 @@ impl Explorer {
 
         let mut aspects: Vec<AspectEval> = Vec::with_capacity(samples.len());
         for &(aspect, on_grid) in &samples {
-            aspects.push(profile.eval_aspect(sa, &self.tech, pe_area_um2, aspect, on_grid)?);
+            aspects.push(match weights {
+                Some(w) => profile
+                    .eval_aspect_weighted(sa, &self.tech, pe_area_um2, w, aspect, on_grid)?,
+                None => profile.eval_aspect(sa, &self.tech, pe_area_um2, aspect, on_grid)?,
+            });
         }
 
         let square = *aspects
@@ -1031,6 +1071,47 @@ mod tests {
         assert_eq!(a.cache.hits, 0);
         assert_eq!(b.cache.hits, 0);
         assert_eq!(a.cache.misses, b.cache.misses);
+    }
+
+    #[test]
+    fn weighted_run_reuses_profiles_and_uniform_weights_match_plain() {
+        let cfg = SweepConfig {
+            max_layers: 2,
+            ..tiny_cfg()
+        };
+        let ex = Explorer::new(cfg).unwrap();
+        let plain = ex.run().unwrap();
+        // A weighted pass after a plain run costs no new engine work:
+        // every profile is memoized.
+        let misses0 = ex.profile_stats().misses;
+        let uniform = ex.run_weighted(&[1.0, 1.0]).unwrap();
+        assert_eq!(ex.profile_stats().misses, misses0);
+        assert_eq!(uniform.points.len(), plain.points.len());
+        for (u, p) in uniform.points.iter().zip(&plain.points) {
+            // 1.0-weights are bit-identical to the uniform mean.
+            assert_eq!(
+                u.best.interconnect_mw.to_bits(),
+                p.best.interconnect_mw.to_bits()
+            );
+            // Weighted cycles are expected-per-request, not the total.
+            assert_eq!(u.cycles, (p.cycles as f64 / 2.0).round() as u64);
+        }
+        // A skewed mix moves at least one point's score.
+        let skew = ex.run_weighted(&[5.0, 0.0]).unwrap();
+        assert!(skew
+            .points
+            .iter()
+            .zip(&plain.points)
+            .any(|(s, p)| s.best.interconnect_mw.to_bits()
+                != p.best.interconnect_mw.to_bits()));
+        // Wrong arity and multi-workload configs are rejected.
+        assert!(ex.run_weighted(&[1.0]).is_err());
+        let multi = Explorer::new(SweepConfig {
+            workloads: vec![WorkloadKind::Table1, WorkloadKind::Synth],
+            ..tiny_cfg()
+        })
+        .unwrap();
+        assert!(multi.run_weighted(&[1.0]).is_err());
     }
 
     #[test]

@@ -33,7 +33,7 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 use crate::arch::SaConfig;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::floorplan::PeGeometry;
 use crate::power::{self, TechParams};
 use crate::serve::cache::mix;
@@ -183,6 +183,91 @@ impl StreamProfile {
             interconnect_mw: ic / n,
             total_mw: tot / n,
         })
+    }
+
+    /// Reject weight vectors the weighted evaluators cannot average
+    /// over: wrong length, non-finite or negative entries, or a zero
+    /// total mass.
+    pub fn validate_weights(&self, weights: &[f64]) -> Result<f64> {
+        if weights.len() != self.layers.len() {
+            return Err(Error::config(format!(
+                "weight vector has {} entries for {} profiled layers",
+                weights.len(),
+                self.layers.len()
+            )));
+        }
+        let mut sum = 0.0;
+        for &w in weights {
+            if !w.is_finite() || w < 0.0 {
+                return Err(Error::config(format!(
+                    "layer weights must be finite and >= 0, got {w}"
+                )));
+            }
+            sum += w;
+        }
+        if sum <= 0.0 {
+            return Err(Error::config("layer weights sum to zero"));
+        }
+        Ok(sum)
+    }
+
+    /// Evaluate one floorplan candidate against a *weighted* traffic
+    /// mix: per-layer weights (an observed request histogram) replace
+    /// the uniform layer average of [`StreamProfile::eval_aspect`], so
+    /// the returned powers are expectations over the mix actually
+    /// flowing through the buses. With all weights `1.0` this is
+    /// bit-identical to `eval_aspect` (`1.0 * x == x` and the weight sum
+    /// is exactly the layer count) — asserted in tests.
+    pub fn eval_aspect_weighted(
+        &self,
+        sa: &SaConfig,
+        tech: &TechParams,
+        pe_area_um2: f64,
+        weights: &[f64],
+        aspect: f64,
+        on_grid: bool,
+    ) -> Result<AspectEval> {
+        let wsum = self.validate_weights(weights)?;
+        let pe = PeGeometry::new(pe_area_um2, aspect)?;
+        let (mut bus, mut ic, mut tot) = (0.0, 0.0, 0.0);
+        for (l, &w) in self.layers.iter().zip(weights) {
+            let p = power::evaluate_stats(sa, &pe, tech, &l.stats, l.cycles, l.macs);
+            bus += w * p.bus_mw();
+            ic += w * p.interconnect_mw();
+            tot += w * p.total_mw();
+        }
+        Ok(AspectEval {
+            aspect,
+            on_grid,
+            bus_mw: bus / wsum,
+            interconnect_mw: ic / wsum,
+            total_mw: tot / wsum,
+        })
+    }
+
+    /// Mix-weighted workload aggregates: expected cycles and MACs per
+    /// request (rounded to the nearest count) and mean switching
+    /// activities under the weighted mix. These feed the weighted
+    /// explorer pass the same way [`StreamProfile::cycles`]/`macs`/
+    /// `a_h`/`a_v` feed the uniform one.
+    pub fn weighted_aggregates(&self, weights: &[f64]) -> Result<(u64, u64, f64, f64)> {
+        let wsum = self.validate_weights(weights)?;
+        let mut cycles = 0.0;
+        let mut macs = 0.0;
+        let mut a_h = 0.0;
+        let mut a_v = 0.0;
+        for (l, &w) in self.layers.iter().zip(weights) {
+            cycles += w * l.cycles as f64;
+            macs += w * l.macs as f64;
+            a_h += w * l.stats.horizontal.activity();
+            a_v += w * l.stats.vertical.activity();
+        }
+        Ok((
+            (cycles / wsum).round() as u64,
+            (macs / wsum).round() as u64,
+            a_h / wsum,
+            a_v / wsum,
+        ))
     }
 }
 
@@ -336,6 +421,65 @@ mod tests {
             + sims[1].stats.horizontal.activity())
             / 2.0;
         assert_eq!(p.a_h.to_bits(), a_h.to_bits());
+    }
+
+    #[test]
+    fn uniform_weights_reproduce_the_unweighted_evaluation() {
+        let sa = SaConfig::new_ws(4, 8, 16).unwrap();
+        let df = DataflowKind::Ws;
+        let opts = FastSimOpts::default();
+        let sims: Vec<GemmSim> = [(10usize, 12usize, 9usize), (7, 5, 13), (6, 6, 6)]
+            .iter()
+            .map(|&(m, k, n)| {
+                df.simulate_with(&sa, &rand_mat(m, k, 1), &rand_mat(k, n, 2), &opts)
+                    .unwrap()
+            })
+            .collect();
+        let p = StreamProfile::from_sims(df, 4, 8, sims.iter());
+        let tech = TechParams::default();
+        let area = 900.0;
+        for aspect in [0.5, 1.0, 2.75] {
+            let plain = p.eval_aspect(&sa, &tech, area, aspect, true).unwrap();
+            let weighted = p
+                .eval_aspect_weighted(&sa, &tech, area, &[1.0, 1.0, 1.0], aspect, true)
+                .unwrap();
+            assert_eq!(plain.bus_mw.to_bits(), weighted.bus_mw.to_bits());
+            assert_eq!(
+                plain.interconnect_mw.to_bits(),
+                weighted.interconnect_mw.to_bits()
+            );
+            assert_eq!(plain.total_mw.to_bits(), weighted.total_mw.to_bits());
+        }
+        // A skewed mix moves the answer (layers differ, so the weighted
+        // expectation cannot coincide with the uniform mean).
+        let skew = p
+            .eval_aspect_weighted(&sa, &tech, area, &[10.0, 0.0, 0.0], 2.75, true)
+            .unwrap();
+        let plain = p.eval_aspect(&sa, &tech, area, 2.75, true).unwrap();
+        assert_ne!(skew.interconnect_mw.to_bits(), plain.interconnect_mw.to_bits());
+        // Aggregates collapse to the dominant layer under a point mass.
+        let (cy, macs, a_h, _) = p.weighted_aggregates(&[10.0, 0.0, 0.0]).unwrap();
+        assert_eq!(cy, sims[0].cycles);
+        assert_eq!(macs, sims[0].macs);
+        assert_eq!(a_h.to_bits(), sims[0].stats.horizontal.activity().to_bits());
+    }
+
+    #[test]
+    fn weight_validation_rejects_degenerate_vectors() {
+        let p = StreamProfile::from_layers(DataflowKind::Ws, 2, 2, vec![]);
+        assert!(p.validate_weights(&[1.0]).is_err());
+        let sa = SaConfig::new_ws(4, 8, 16).unwrap();
+        let df = DataflowKind::Ws;
+        let opts = FastSimOpts::default();
+        let sim = df
+            .simulate_with(&sa, &rand_mat(5, 5, 1), &rand_mat(5, 5, 2), &opts)
+            .unwrap();
+        let p = StreamProfile::from_sims(df, 4, 8, [&sim]);
+        assert!(p.validate_weights(&[-1.0]).is_err());
+        assert!(p.validate_weights(&[f64::NAN]).is_err());
+        assert!(p.validate_weights(&[0.0]).is_err());
+        assert!(p.validate_weights(&[1.0, 1.0]).is_err());
+        assert_eq!(p.validate_weights(&[2.0]).unwrap(), 2.0);
     }
 
     #[test]

@@ -1,0 +1,284 @@
+//! Arrival processes: the fleet's request-admission law as a value.
+//!
+//! PR 5's admission loop hard-coded `t = i × gap_secs` — a perfectly
+//! paced open loop that never stresses the spill bound or the tail
+//! percentiles. [`ArrivalProcess`] lifts that law into a seeded,
+//! worker-count-deterministic event source with three shapes:
+//!
+//! * [`ArrivalProcess::FixedGap`] — the historical law, bit-exact
+//!   (`i as f64 * gap_secs`, the same float ops in the same order), so
+//!   legacy entry points can delegate through it without perturbing a
+//!   single ULP;
+//! * [`ArrivalProcess::Poisson`] — memoryless arrivals with mean
+//!   inter-arrival `gap_secs / rate` drawn from a dedicated
+//!   [`Rng`] stream, the realism knob for p99/p99.9 under burstiness;
+//! * [`ArrivalProcess::Recorded`] — a validated externally captured
+//!   timestamp trace, for replaying production arrival patterns.
+//!
+//! All three produce an [`ArrivalPlan`]: per-request instants plus
+//! per-request priority classes. The plan's [`ArrivalPlan::order`] is
+//! the *admission order* — `(time, class, sequence)` — so same-instant
+//! bursts drain urgent classes first and the order is a pure function
+//! of the plan, never of scheduling. Every consumer
+//! ([`crate::fleet::run_policy_arrivals`], the drift runner) admits in
+//! that order, which is what keeps `DRIFT_summary.json` byte-identical
+//! at any worker count.
+
+use crate::error::{Error, Result};
+use crate::util::rng::Rng;
+
+/// Which arrival law generates request instants.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalProcess {
+    /// The historical law: request `i` arrives at exactly
+    /// `i × gap_secs`.
+    FixedGap,
+    /// Memoryless (exponential inter-arrival) process with mean gap
+    /// `gap_secs / rate`: `rate` is the load multiplier relative to the
+    /// fixed-gap pacing (`1.0` = same mean throughput, bursty spacing).
+    Poisson {
+        /// Seed of the dedicated arrival RNG stream.
+        seed: u64,
+        /// Load multiplier; mean inter-arrival is `gap_secs / rate`.
+        rate: f64,
+    },
+    /// Replay a recorded timestamp trace (seconds, non-decreasing).
+    Recorded(Vec<f64>),
+}
+
+impl ArrivalProcess {
+    /// Stable name for reports and summaries.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalProcess::FixedGap => "fixed_gap",
+            ArrivalProcess::Poisson { .. } => "poisson",
+            ArrivalProcess::Recorded(_) => "recorded",
+        }
+    }
+
+    /// Parse a CLI arrival kind. `Recorded` has no flag syntax (traces
+    /// are supplied programmatically), so only the generative laws
+    /// parse.
+    pub fn parse(kind: &str, seed: u64, rate: f64) -> Result<Self> {
+        match kind {
+            "fixed" | "fixed_gap" => Ok(ArrivalProcess::FixedGap),
+            "poisson" => Ok(ArrivalProcess::Poisson { seed, rate }),
+            other => Err(Error::config(format!(
+                "unknown arrival process '{other}' (expected fixed|poisson)"
+            ))),
+        }
+    }
+
+    /// Reject parameterizations that cannot generate `n` arrivals.
+    pub fn validate(&self, n: usize) -> Result<()> {
+        match self {
+            ArrivalProcess::FixedGap => Ok(()),
+            ArrivalProcess::Poisson { rate, .. } => {
+                if !rate.is_finite() || *rate <= 0.0 {
+                    return Err(Error::config(format!(
+                        "poisson rate must be finite and > 0, got {rate}"
+                    )));
+                }
+                Ok(())
+            }
+            ArrivalProcess::Recorded(times) => {
+                if times.len() < n {
+                    return Err(Error::config(format!(
+                        "recorded trace has {} arrivals for {} requests",
+                        times.len(),
+                        n
+                    )));
+                }
+                let mut prev = 0.0f64;
+                for (i, &t) in times.iter().take(n).enumerate() {
+                    if !t.is_finite() || t < 0.0 {
+                        return Err(Error::config(format!(
+                            "recorded arrival {i} is not a finite non-negative time: {t}"
+                        )));
+                    }
+                    if t < prev {
+                        return Err(Error::config(format!(
+                            "recorded arrivals must be non-decreasing: t[{i}] = {t} < {prev}"
+                        )));
+                    }
+                    prev = t;
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Generate the first `n` arrival instants. `gap_secs` scales the
+    /// generative laws (ignored by `Recorded`). Deterministic: a pure
+    /// function of `(self, n, gap_secs)`.
+    pub fn times(&self, n: usize, gap_secs: f64) -> Result<Vec<f64>> {
+        self.validate(n)?;
+        Ok(match self {
+            // Exactly the historical expression, so FixedGap plans are
+            // bit-identical to the pre-arrival-process admission law.
+            ArrivalProcess::FixedGap => (0..n).map(|i| i as f64 * gap_secs).collect(),
+            ArrivalProcess::Poisson { seed, rate } => {
+                let mut rng = Rng::new(*seed);
+                let mean = gap_secs / rate;
+                let mut t = 0.0f64;
+                let mut out = Vec::with_capacity(n);
+                for _ in 0..n {
+                    out.push(t);
+                    // Inverse-CDF exponential; `1 - u` keeps the argument
+                    // in (0, 1] so the log is finite.
+                    t += -(1.0 - rng.uniform()).ln() * mean;
+                }
+                out
+            }
+            ArrivalProcess::Recorded(times) => times.iter().take(n).copied().collect(),
+        })
+    }
+}
+
+/// A fully materialized admission schedule: per-request instants and
+/// priority classes (lower = more urgent; ties broken by sequence).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArrivalPlan {
+    /// Arrival instant of request `i` (seconds).
+    pub times: Vec<f64>,
+    /// Priority class of request `i`.
+    pub classes: Vec<u8>,
+}
+
+impl ArrivalPlan {
+    /// Plan with every request in the default class 0.
+    pub fn new(times: Vec<f64>) -> Self {
+        let classes = vec![0u8; times.len()];
+        ArrivalPlan { times, classes }
+    }
+
+    /// Plan with explicit per-request priority classes.
+    pub fn with_classes(times: Vec<f64>, classes: Vec<u8>) -> Result<Self> {
+        if times.len() != classes.len() {
+            return Err(Error::config(format!(
+                "arrival plan has {} times but {} classes",
+                times.len(),
+                classes.len()
+            )));
+        }
+        Ok(ArrivalPlan { times, classes })
+    }
+
+    /// Requests scheduled.
+    pub fn len(&self) -> usize {
+        self.times.len()
+    }
+
+    /// Whether the plan schedules nothing.
+    pub fn is_empty(&self) -> bool {
+        self.times.is_empty()
+    }
+
+    /// Latest arrival instant (the admission horizon), 0 when empty.
+    pub fn horizon(&self) -> f64 {
+        self.times.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// Admission order: request indices sorted by `(time, class,
+    /// sequence)`. Strictly increasing plans (FixedGap with a positive
+    /// gap) order as the identity; same-instant bursts drain urgent
+    /// classes first. A pure function of the plan — this is the
+    /// determinism root of every arrival-driven run.
+    pub fn order(&self) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..self.times.len()).collect();
+        idx.sort_by(|&a, &b| {
+            self.times[a]
+                .total_cmp(&self.times[b])
+                .then(self.classes[a].cmp(&self.classes[b]))
+                .then(a.cmp(&b))
+        });
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_gap_is_the_historical_law_bit_exactly() {
+        let times = ArrivalProcess::FixedGap.times(5, 3.5e-4).unwrap();
+        for (i, &t) in times.iter().enumerate() {
+            assert_eq!(t.to_bits(), (i as f64 * 3.5e-4).to_bits());
+        }
+        let plan = ArrivalPlan::new(times);
+        assert_eq!(plan.order(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn poisson_is_seeded_nondecreasing_and_load_scaled() {
+        let p = ArrivalProcess::Poisson { seed: 42, rate: 1.0 };
+        let a = p.times(400, 1e-3).unwrap();
+        let b = p.times(400, 1e-3).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a[0], 0.0);
+        for w in a.windows(2) {
+            assert!(w[1] >= w[0]);
+        }
+        // Mean inter-arrival tracks gap/rate loosely (law of large
+        // numbers, not a distribution test).
+        let mean = a.last().unwrap() / (a.len() - 1) as f64;
+        assert!((0.5e-3..2e-3).contains(&mean), "mean {mean}");
+        // Double the rate → roughly half the horizon.
+        let fast = ArrivalProcess::Poisson { seed: 42, rate: 2.0 }
+            .times(400, 1e-3)
+            .unwrap();
+        assert!(fast.last().unwrap() < a.last().unwrap());
+        // A different seed is a different schedule.
+        let other = ArrivalProcess::Poisson { seed: 43, rate: 1.0 }
+            .times(400, 1e-3)
+            .unwrap();
+        assert_ne!(a, other);
+        assert!(ArrivalProcess::Poisson { seed: 1, rate: 0.0 }
+            .times(4, 1e-3)
+            .is_err());
+    }
+
+    #[test]
+    fn recorded_traces_are_validated_and_truncated() {
+        let p = ArrivalProcess::Recorded(vec![0.0, 1.0, 1.0, 2.5]);
+        assert_eq!(p.times(3, 9.9).unwrap(), vec![0.0, 1.0, 1.0]);
+        assert!(p.times(5, 9.9).is_err()); // too short
+        assert!(ArrivalProcess::Recorded(vec![0.0, -1.0])
+            .times(2, 1.0)
+            .is_err());
+        assert!(ArrivalProcess::Recorded(vec![1.0, 0.5]).times(2, 1.0).is_err());
+        assert!(ArrivalProcess::Recorded(vec![0.0, f64::NAN])
+            .times(2, 1.0)
+            .is_err());
+        // Entries beyond n are never validated away a valid prefix.
+        assert!(ArrivalProcess::Recorded(vec![0.0, 1.0, f64::NAN])
+            .times(2, 1.0)
+            .is_ok());
+    }
+
+    #[test]
+    fn same_instant_bursts_drain_by_class_then_sequence() {
+        let plan =
+            ArrivalPlan::with_classes(vec![1.0, 1.0, 0.0, 1.0], vec![2, 0, 1, 0]).unwrap();
+        // t=0 first, then the t=1 burst: class 0 (seq 1, then 3), then
+        // class 2.
+        assert_eq!(plan.order(), vec![2, 1, 3, 0]);
+        assert!(ArrivalPlan::with_classes(vec![0.0], vec![]).is_err());
+        assert_eq!(plan.horizon(), 1.0);
+        assert_eq!(ArrivalPlan::new(vec![]).horizon(), 0.0);
+    }
+
+    #[test]
+    fn parse_covers_the_generative_laws() {
+        assert_eq!(
+            ArrivalProcess::parse("fixed", 7, 1.0).unwrap(),
+            ArrivalProcess::FixedGap
+        );
+        assert_eq!(
+            ArrivalProcess::parse("poisson", 7, 2.0).unwrap(),
+            ArrivalProcess::Poisson { seed: 7, rate: 2.0 }
+        );
+        assert!(ArrivalProcess::parse("weibull", 7, 1.0).is_err());
+    }
+}

@@ -1,0 +1,997 @@
+//! Drift-adaptive self-optimization: re-provision the fleet when the
+//! observed traffic mix diverges from the provisioned one.
+//!
+//! The source paper's premise is that the optimal floorplan depends on
+//! the activity profile actually flowing through the buses; a fleet
+//! provisioned for yesterday's mix is therefore *stale* the moment the
+//! mix drifts. PR 6 built the hot-swap machinery (spare provisioning,
+//! cache-warmed promotion) and drove it from faults; PR 7 made sweep
+//! re-evaluation closed-form. This module supplies the missing trigger
+//! and closes ROADMAP item 2:
+//!
+//! * [`MixTracker`] — a sliding per-layer histogram of admitted
+//!   requests, compared against the uniform provisioning mix with an
+//!   L1 divergence (half the total variation distance);
+//! * a **re-provisioning pass** — when divergence crosses the
+//!   threshold, [`Explorer::run_weighted`] re-scores every geometry ×
+//!   aspect candidate against the *observed* histogram. The engine
+//!   passes were already paid at provisioning time and memoized as
+//!   [`StreamProfile`](crate::explore::StreamProfile)s, so the re-sweep
+//!   is pure closed-form arithmetic — cheap enough to run mid-trace;
+//! * **cutover** — pending batches flush on the old geometry (billing
+//!   pre-cutover work where it ran), then every slot swaps to its
+//!   re-selected [`ArraySpec`] behind a fresh [`Server`] that joins the
+//!   fleet's shared result cache and is warmed with every distinct
+//!   operand seen so far ([`Server::warm_cache`]; warmup energy lands
+//!   in the slot's robustness rollup, same as a chaos promotion).
+//!
+//! [`run_drift_comparison`] replays one two-phase drifted trace twice —
+//! adaptive and static, same [`ArrivalPlan`] — segmenting energy and
+//! latency at the adaptive run's cutover so the post-drift comparison
+//! is apples-to-apples. Everything is modeled time and seeded
+//! arithmetic: `DRIFT_summary.json` is byte-identical at any worker
+//! count (asserted by `tests/drift_determinism.rs`), and with detection
+//! disabled under fixed-gap arrivals the runner *is* [`run_policy`] —
+//! it delegates outright, mirroring the chaos engine's empty-plan
+//! contract.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::time::Instant;
+
+use crate::bench_util::Bench;
+use crate::coordinator::metrics::{percentile_micros, sorted_micros};
+use crate::error::{Error, Result};
+use crate::explore::Explorer;
+use crate::faults::ArrayRobustness;
+use crate::floorplan::PeGeometry;
+use crate::power::{self, TechParams};
+use crate::serve::{
+    build_requests, operand_digest, InferRequest, ScenarioConfig, ServeConfig, Server, ShapeKey,
+};
+use crate::util::json::{obj, Json};
+
+use super::arrival::{ArrivalPlan, ArrivalProcess};
+use super::{
+    flush_array, modeled_knobs, provision_with, provisioning_explorer, run_json,
+    run_policy_arrivals, select_frontier, spec_json, ArrayAcc, ArrayRun, ArraySpec, Fleet,
+    FleetArray, FleetConfig, FleetPlan, PolicyRun, RoutePolicy, Router,
+};
+
+/// Seed salt of the drifted second phase's request stream, so the two
+/// phases never share activation variants.
+const DRIFT_PHASE_SALT: u64 = 0x00D2_1F7E_D51A_17ED;
+
+/// Everything one drift comparison varies and how.
+#[derive(Debug, Clone)]
+pub struct DriftConfig {
+    /// The underlying fleet scenario (provisioning budget, trace size,
+    /// knobs).
+    pub fleet: FleetConfig,
+    /// Arrival law of the request stream (both runs share one plan).
+    pub arrival: ArrivalProcess,
+    /// Fraction of the trace served before the mix shifts.
+    pub phase_split: f64,
+    /// Sliding mix-histogram window in requests; 0 disables drift
+    /// detection entirely (the delegation contract's switch).
+    pub detect_window: usize,
+    /// Divergence trigger: adapt when the windowed observed mix is at
+    /// least this far (half L1 distance, in [0, 1]) from the uniform
+    /// provisioning mix.
+    pub divergence_threshold: f64,
+}
+
+impl Default for DriftConfig {
+    fn default() -> Self {
+        DriftConfig {
+            fleet: FleetConfig::default(),
+            arrival: ArrivalProcess::Poisson {
+                seed: 0xD21F_7A11,
+                rate: 1.0,
+            },
+            phase_split: 0.5,
+            detect_window: 24,
+            divergence_threshold: 0.25,
+        }
+    }
+}
+
+impl DriftConfig {
+    /// Reject configurations with nothing to measure.
+    pub fn validate(&self) -> Result<()> {
+        self.fleet.validate()?;
+        self.arrival.validate(self.fleet.requests)?;
+        if !(self.phase_split > 0.0 && self.phase_split < 1.0) {
+            return Err(Error::config(format!(
+                "phase_split must be in (0, 1), got {}",
+                self.phase_split
+            )));
+        }
+        if !(self.divergence_threshold > 0.0 && self.divergence_threshold <= 1.0) {
+            return Err(Error::config(format!(
+                "divergence_threshold must be in (0, 1], got {}",
+                self.divergence_threshold
+            )));
+        }
+        Ok(())
+    }
+
+    /// First trace index of the drifted phase.
+    pub fn phase_at(&self) -> usize {
+        let n = self.fleet.requests;
+        (((n as f64) * self.phase_split).round() as usize).clamp(1, n.max(2) - 1)
+    }
+}
+
+/// Sliding per-layer histogram of the admitted request mix, with the
+/// divergence statistic the adaptation trigger reads. A pure function
+/// of the admission sequence — no clocks, no sampling.
+#[derive(Debug, Clone)]
+pub struct MixTracker {
+    counts: Vec<u64>,
+    recent: VecDeque<usize>,
+    window: usize,
+}
+
+impl MixTracker {
+    /// Tracker over `layers` bins with a `window`-request horizon.
+    pub fn new(layers: usize, window: usize) -> Self {
+        MixTracker {
+            counts: vec![0; layers],
+            recent: VecDeque::with_capacity(window),
+            window,
+        }
+    }
+
+    /// Record one admitted request's layer bin.
+    pub fn observe(&mut self, layer: usize) {
+        if layer >= self.counts.len() || self.window == 0 {
+            return;
+        }
+        self.recent.push_back(layer);
+        self.counts[layer] += 1;
+        if self.recent.len() > self.window {
+            let old = self.recent.pop_front().expect("non-empty window");
+            self.counts[old] -= 1;
+        }
+    }
+
+    /// Whether the window has filled once (divergence is meaningful).
+    pub fn warm(&self) -> bool {
+        self.window > 0 && self.recent.len() >= self.window
+    }
+
+    /// Half the L1 distance between the windowed observed mix and the
+    /// uniform provisioning mix — the total variation distance, in
+    /// [0, 1]: 0 = identical, 1 = disjoint support.
+    pub fn divergence(&self) -> f64 {
+        let total: u64 = self.counts.iter().sum();
+        if total == 0 || self.counts.is_empty() {
+            return 0.0;
+        }
+        let uniform = 1.0 / self.counts.len() as f64;
+        0.5 * self
+            .counts
+            .iter()
+            .map(|&c| (c as f64 / total as f64 - uniform).abs())
+            .sum::<f64>()
+    }
+
+    /// The windowed histogram as per-layer weights (request counts) —
+    /// what [`Explorer::run_weighted`] re-provisions against.
+    pub fn weights(&self) -> Vec<f64> {
+        self.counts.iter().map(|&c| c as f64).collect()
+    }
+}
+
+/// Build the two-phase drifted trace: phase 1 draws uniformly from the
+/// full workload mix (what the fleet was provisioned for, so the
+/// detector stays quiet), phase 2 draws only from the mix's second half
+/// of layers under a salted seed. Request ids are resequenced over the
+/// concatenation.
+pub fn build_drift_trace(dcfg: &DriftConfig) -> Result<Vec<InferRequest>> {
+    let cfg = &dcfg.fleet;
+    let mut mix = cfg.workload.layers();
+    if cfg.max_layers > 0 && mix.len() > cfg.max_layers {
+        mix.truncate(cfg.max_layers);
+    }
+    let n = cfg.requests;
+    let n1 = dcfg.phase_at().min(n);
+    let phase1 = build_requests(
+        &ScenarioConfig {
+            seed: cfg.seed,
+            requests: n1,
+            unique_inputs: cfg.unique_inputs,
+        },
+        &mix,
+    )?;
+    let skew = mix[mix.len() / 2..].to_vec();
+    let phase2 = if n > n1 {
+        build_requests(
+            &ScenarioConfig {
+                seed: cfg.seed ^ DRIFT_PHASE_SALT,
+                requests: n - n1,
+                unique_inputs: cfg.unique_inputs,
+            },
+            &skew,
+        )?
+    } else {
+        Vec::new()
+    };
+    let mut trace: Vec<InferRequest> = phase1.into_iter().chain(phase2).collect();
+    for (i, req) in trace.iter_mut().enumerate() {
+        req.id = i as u64;
+    }
+    Ok(trace)
+}
+
+/// Map each lowered layer's GEMM shape to its mix index, via a
+/// one-request-per-layer probe through the same seeded lowering the
+/// trace uses. Layers sharing a shape collapse into the first match
+/// (they are indistinguishable to a shape-keyed observer anyway).
+fn shape_bins(cfg: &FleetConfig) -> Result<(HashMap<ShapeKey, usize>, usize)> {
+    let mut mix = cfg.workload.layers();
+    if cfg.max_layers > 0 && mix.len() > cfg.max_layers {
+        mix.truncate(cfg.max_layers);
+    }
+    let probe = build_requests(
+        &ScenarioConfig {
+            seed: cfg.seed,
+            requests: mix.len(),
+            unique_inputs: 1,
+        },
+        &mix,
+    )?;
+    let mut map = HashMap::new();
+    for (i, r) in probe.iter().enumerate() {
+        map.entry(r.shape()).or_insert(i);
+    }
+    Ok((map, mix.len()))
+}
+
+/// One lane of the drift comparison: the full policy run plus the
+/// cutover bookkeeping the headline compares.
+#[derive(Debug, Clone)]
+pub struct DriftRun {
+    /// The complete run rollup ([`PolicyRun`] semantics, `ShapeAffine`
+    /// routing; per-array labels reflect the *final* specs of each
+    /// slot).
+    pub run: PolicyRun,
+    /// Whether a cutover happened.
+    pub adapted: bool,
+    /// Admission rank of the first post-cutover request.
+    pub cutover_index: Option<usize>,
+    /// Modeled instant of the cutover (seconds).
+    pub cutover_secs: Option<f64>,
+    /// Largest windowed divergence observed over the run.
+    pub peak_divergence: f64,
+    /// Interconnect energy of requests admitted before the cutover
+    /// boundary (µJ). The whole run when no boundary exists.
+    pub pre_interconnect_uj: f64,
+    /// Interconnect energy of requests admitted at/after the boundary
+    /// (µJ).
+    pub post_interconnect_uj: f64,
+    /// Modeled latencies of the post-boundary requests (µs, sorted).
+    pub post_latency_sorted_us: Vec<u64>,
+    /// Cache-warmup energy billed at cutover (µJ; also inside the
+    /// per-array robustness rollups).
+    pub warmup_uj: f64,
+    /// Per-slot specs after the run (re-selected on an adaptive
+    /// cutover, the provisioned ones otherwise).
+    pub specs_after: Vec<ArraySpec>,
+}
+
+impl DriftRun {
+    /// Post-boundary latency percentile in µs (0 when no boundary).
+    pub fn post_latency_us(&self, p: f64) -> u64 {
+        percentile_micros(&self.post_latency_sorted_us, p)
+    }
+}
+
+/// The full drift comparison: one provisioning, one arrival plan, two
+/// runs over the same drifted trace.
+#[derive(Debug, Clone)]
+pub struct DriftReport {
+    /// The static provisioning both lanes start from.
+    pub plan: FleetPlan,
+    /// Requests in the trace.
+    pub requests: usize,
+    /// First trace index of the drifted phase.
+    pub phase_at: usize,
+    /// Modeled inter-arrival gap used (µs).
+    pub gap_us: f64,
+    /// `ShapeAffine` spill bound used (MACs).
+    pub spill_macs: u64,
+    /// Arrival law both lanes were driven by.
+    pub arrival: ArrivalProcess,
+    /// The adaptive lane (detection + cutover enabled).
+    pub adaptive: DriftRun,
+    /// The static lane (same specs throughout, energy segmented at the
+    /// adaptive lane's cutover for apples-to-apples post comparison).
+    pub static_run: DriftRun,
+}
+
+/// The drift comparison's one-line verdict.
+#[derive(Debug, Clone)]
+pub struct DriftHeadline {
+    /// Whether the adaptive lane actually cut over.
+    pub adapted: bool,
+    /// Admission rank of the first post-cutover request.
+    pub cutover_index: Option<usize>,
+    /// Post-cutover interconnect-energy margin of adaptive over static
+    /// (percent; positive = adaptive cheaper).
+    pub post_margin_pct: f64,
+    /// Adaptive post-cutover interconnect energy (µJ).
+    pub adaptive_post_uj: f64,
+    /// Static post-cutover interconnect energy (µJ).
+    pub static_post_uj: f64,
+    /// Cache-warmup energy the cutover cost (µJ).
+    pub warmup_uj: f64,
+    /// Adaptive whole-run p99 latency (µs).
+    pub adaptive_p99_us: u64,
+    /// Adaptive whole-run p99.9 latency (µs).
+    pub adaptive_p999_us: u64,
+    /// Static whole-run p99 latency (µs).
+    pub static_p99_us: u64,
+    /// Static whole-run p99.9 latency (µs).
+    pub static_p999_us: u64,
+}
+
+impl DriftReport {
+    /// Distill the comparison into its headline.
+    pub fn headline(&self) -> DriftHeadline {
+        let a = &self.adaptive;
+        let s = &self.static_run;
+        DriftHeadline {
+            adapted: a.adapted,
+            cutover_index: a.cutover_index,
+            post_margin_pct: if s.post_interconnect_uj > 0.0 {
+                100.0 * (1.0 - a.post_interconnect_uj / s.post_interconnect_uj)
+            } else {
+                0.0
+            },
+            adaptive_post_uj: a.post_interconnect_uj,
+            static_post_uj: s.post_interconnect_uj,
+            warmup_uj: a.warmup_uj,
+            adaptive_p99_us: a.run.latency_us(0.99),
+            adaptive_p999_us: a.run.latency_us(0.999),
+            static_p99_us: s.run.latency_us(0.99),
+            static_p999_us: s.run.latency_us(0.999),
+        }
+    }
+}
+
+/// One lane of the drift comparison: [`run_policy_arrivals`]'s
+/// admission loop with a mix tracker, an optional adaptive cutover, and
+/// pre/post energy segmentation.
+///
+/// With detection off and no forced boundary the lane *is* the plain
+/// engine — it delegates to [`run_policy_arrivals`] outright (the
+/// drift sibling of the chaos engine's empty-plan contract, asserted
+/// bit-exact by `tests/drift_determinism.rs`).
+#[allow(clippy::too_many_arguments)]
+fn drift_run(
+    explorer: &Explorer,
+    label: &str,
+    specs: &[ArraySpec],
+    trace: &[InferRequest],
+    cfg: &FleetConfig,
+    dcfg: &DriftConfig,
+    arrivals: &ArrivalPlan,
+    spill_macs: u64,
+    tech: &TechParams,
+    detect: bool,
+    forced_boundary: Option<usize>,
+) -> Result<DriftRun> {
+    if !detect && forced_boundary.is_none() {
+        let fleet = Fleet::build(label, specs, cfg)?;
+        let run = run_policy_arrivals(
+            &fleet,
+            RoutePolicy::ShapeAffine,
+            trace,
+            cfg,
+            arrivals,
+            spill_macs,
+            tech,
+        )?;
+        let pre = run.interconnect_uj;
+        return Ok(DriftRun {
+            run,
+            adapted: false,
+            cutover_index: None,
+            cutover_secs: None,
+            peak_divergence: 0.0,
+            pre_interconnect_uj: pre,
+            post_interconnect_uj: 0.0,
+            post_latency_sorted_us: Vec::new(),
+            warmup_uj: 0.0,
+            specs_after: specs.to_vec(),
+        });
+    }
+    if arrivals.len() != trace.len() {
+        return Err(Error::config(format!(
+            "arrival plan schedules {} requests for a {}-request trace",
+            arrivals.len(),
+            trace.len()
+        )));
+    }
+
+    let (layer_of, layers) = shape_bins(cfg)?;
+    let mut fleet = Fleet::build(label, specs, cfg)?;
+    let n = fleet.arrays.len();
+    let window = cfg.window.max(1);
+    let t_wall = Instant::now();
+
+    let mut geoms: Vec<PeGeometry> = fleet
+        .arrays
+        .iter()
+        .map(|a| a.spec.geometry())
+        .collect::<Result<Vec<_>>>()?;
+    let mut cycle_fj: Vec<f64> = fleet
+        .arrays
+        .iter()
+        .map(|a| a.spec.cycle_cost_fj(tech))
+        .collect();
+
+    let mut router = Router::new(RoutePolicy::ShapeAffine);
+    let mut busy_until = vec![0.0f64; n];
+    let mut inflight: Vec<VecDeque<(f64, u64)>> = (0..n).map(|_| VecDeque::new()).collect();
+    let mut outstanding = vec![0u64; n];
+    let mut pending: Vec<Vec<InferRequest>> = (0..n).map(|_| Vec::new()).collect();
+    // Segmented accumulators: admission-order boundary at the cutover.
+    let mut accs_pre: Vec<ArrayAcc> = (0..n).map(|_| ArrayAcc::default()).collect();
+    let mut accs_post: Vec<ArrayAcc> = (0..n).map(|_| ArrayAcc::default()).collect();
+    let mut in_post = false;
+    let mut rob: Vec<ArrayRobustness> = (0..n).map(|_| ArrayRobustness::default()).collect();
+    let mut lat_secs: Vec<f64> = Vec::with_capacity(trace.len());
+    let mut lat_post_secs: Vec<f64> = Vec::new();
+    let mut costs = vec![0.0f64; n];
+
+    let mut tracker = MixTracker::new(layers, dcfg.detect_window);
+    let mut peak_divergence = 0.0f64;
+    let mut adapted = false;
+    let mut cutover_index = None;
+    let mut cutover_secs = None;
+    let mut warmup_uj = 0.0f64;
+
+    // Distinct operands seen so far, in admission order — the warmup
+    // set the re-provisioned servers' caches are primed with.
+    let mut seen: Vec<InferRequest> = Vec::new();
+    let mut seen_digests: HashSet<u64> = HashSet::new();
+
+    for (rank, &i) in arrivals.order().iter().enumerate() {
+        // Forced segmentation boundary (the static lane mirrors the
+        // adaptive lane's cutover rank): flush everything admitted so
+        // far on the pre side, then keep serving unchanged.
+        if !in_post && forced_boundary == Some(rank) {
+            for a in 0..n {
+                flush_array(&fleet.arrays[a], &geoms[a], tech, &mut pending[a], &mut accs_pre[a])?;
+            }
+            in_post = true;
+        }
+
+        let req = &trace[i];
+        let t = arrivals.times[i];
+        // Retire modeled completions up to the arrival instant.
+        for a in 0..n {
+            while let Some(&(finish, macs)) = inflight[a].front() {
+                if finish <= t {
+                    outstanding[a] -= macs;
+                    inflight[a].pop_front();
+                } else {
+                    break;
+                }
+            }
+        }
+        let shape = req.shape();
+        for (a, arr) in fleet.arrays.iter().enumerate() {
+            costs[a] = cycle_fj[a] * arr.spec.modeled_cycles(&shape) as f64;
+        }
+        let a = router.route(&costs, &outstanding, spill_macs);
+
+        let service = fleet.arrays[a].spec.modeled_service_secs(&shape);
+        let start = if busy_until[a] > t { busy_until[a] } else { t };
+        let done = start + service;
+        busy_until[a] = done;
+        let macs = req.macs();
+        inflight[a].push_back((done, macs));
+        outstanding[a] += macs;
+        lat_secs.push(done - t);
+        if in_post {
+            lat_post_secs.push(done - t);
+        }
+
+        let accs = if in_post { &mut accs_post } else { &mut accs_pre };
+        accs[a].requests += 1;
+        if inflight[a].len() > accs[a].queue_peak {
+            accs[a].queue_peak = inflight[a].len();
+        }
+        pending[a].push(req.clone());
+        if pending[a].len() >= window {
+            flush_array(&fleet.arrays[a], &geoms[a], tech, &mut pending[a], &mut accs[a])?;
+        }
+
+        let digest = operand_digest(req.a.rows, req.a.cols, &req.a.data, req.w.cols, &req.w.data);
+        if seen_digests.insert(digest) {
+            seen.push(req.clone());
+        }
+
+        // Drift detection + adaptive cutover, after the admission so
+        // the triggering request itself is served pre-cutover.
+        if detect && !adapted {
+            if let Some(&li) = layer_of.get(&shape) {
+                tracker.observe(li);
+            }
+            if tracker.warm() {
+                let d = tracker.divergence();
+                if d > peak_divergence {
+                    peak_divergence = d;
+                }
+                if d >= dcfg.divergence_threshold {
+                    // 1. Bill everything admitted so far on the old
+                    //    geometry.
+                    for a in 0..n {
+                        flush_array(
+                            &fleet.arrays[a],
+                            &geoms[a],
+                            tech,
+                            &mut pending[a],
+                            &mut accs_pre[a],
+                        )?;
+                    }
+                    // 2. Re-provision against the observed histogram —
+                    //    closed-form over the explorer's memoized
+                    //    profiles, ranked by the same energy rule as
+                    //    the original provisioning.
+                    let out = explorer.run_weighted(&tracker.weights())?;
+                    let new_specs = select_frontier(&out, n)?;
+                    // 3. Cutover: each slot swaps to its re-selected
+                    //    array behind a fresh server on the fleet's
+                    //    shared cache, warmed with every operand seen.
+                    //    Backlog (busy horizons, inflight work) is
+                    //    inherited — requests don't vanish at cutover.
+                    for (a, sp) in new_specs.iter().enumerate() {
+                        let server = Server::with_cache(
+                            ServeConfig {
+                                sa: sp.sa.clone(),
+                                workers: cfg.workers,
+                                cache_capacity: cfg.cache_capacity,
+                                window: cfg.window,
+                                engine: sp.engine,
+                            },
+                            fleet.result_cache(),
+                        );
+                        let promoted = FleetArray {
+                            spec: sp.clone(),
+                            server,
+                        };
+                        let geom = sp.geometry()?;
+                        let responses = promoted.server.warm_cache(&seen, window)?;
+                        for r in &responses {
+                            let p = power::evaluate(&sp.sa, &geom, tech, &r.sim);
+                            let secs = r.sim.silicon_seconds(&sp.sa);
+                            rob[a].warmup_uj += p.interconnect_mw() * secs * 1e3;
+                            warmup_uj += p.interconnect_mw() * secs * 1e3;
+                        }
+                        fleet.arrays[a] = promoted;
+                        geoms[a] = geom;
+                        cycle_fj[a] = sp.cycle_cost_fj(tech);
+                        rob[a].promotions += 1;
+                    }
+                    adapted = true;
+                    in_post = true;
+                    cutover_index = Some(rank + 1);
+                    cutover_secs = Some(t);
+                }
+            }
+        }
+    }
+
+    // Final flush into the current segment (post-cutover slots only
+    // ever hold post-boundary admissions: the boundary flushed every
+    // queue).
+    for a in 0..n {
+        let acc = if in_post { &mut accs_post[a] } else { &mut accs_pre[a] };
+        flush_array(&fleet.arrays[a], &geoms[a], tech, &mut pending[a], acc)?;
+    }
+
+    let per_array: Vec<ArrayRun> = fleet
+        .arrays
+        .iter()
+        .enumerate()
+        .map(|(i, arr)| {
+            let (pre, post) = (&accs_pre[i], &accs_post[i]);
+            let requests = pre.requests + post.requests;
+            let macs = pre.macs + post.macs;
+            let sim_cycles = pre.sim_cycles + post.sim_cycles;
+            let pes = arr.spec.sa.num_pes() as f64;
+            ArrayRun {
+                label: arr.spec.label(),
+                rows: arr.spec.sa.rows,
+                cols: arr.spec.sa.cols,
+                aspect: arr.spec.aspect,
+                requests,
+                macs,
+                sim_cycles,
+                utilization: if sim_cycles > 0 {
+                    macs as f64 / (pes * sim_cycles as f64)
+                } else {
+                    0.0
+                },
+                queue_peak: pre.queue_peak.max(post.queue_peak),
+                interconnect_uj: pre.interconnect_uj + post.interconnect_uj,
+                total_uj: pre.total_uj + post.total_uj,
+                silicon_secs: pre.silicon_secs + post.silicon_secs,
+                cache: arr.server.cache_stats(),
+                robustness: rob[i].clone(),
+            }
+        })
+        .collect();
+
+    let run = PolicyRun {
+        fleet: fleet.label.clone(),
+        policy: RoutePolicy::ShapeAffine,
+        latency_sorted_us: sorted_micros(lat_secs),
+        spills: router.spills(),
+        interconnect_uj: per_array.iter().map(|a| a.interconnect_uj).sum(),
+        total_uj: per_array.iter().map(|a| a.total_uj).sum(),
+        silicon_secs: per_array.iter().map(|a| a.silicon_secs).sum(),
+        per_array,
+        wall_secs: t_wall.elapsed().as_secs_f64(),
+        completed: trace.len() as u64,
+        lost: 0,
+        latency_samples_dropped: fleet
+            .arrays
+            .iter()
+            .map(|a| a.server.metrics().snapshot().latency_samples_dropped)
+            .sum(),
+    };
+    Ok(DriftRun {
+        run,
+        adapted,
+        cutover_index,
+        cutover_secs,
+        peak_divergence,
+        pre_interconnect_uj: accs_pre.iter().map(|a| a.interconnect_uj).sum(),
+        post_interconnect_uj: accs_post.iter().map(|a| a.interconnect_uj).sum(),
+        post_latency_sorted_us: sorted_micros(lat_post_secs),
+        warmup_uj,
+        specs_after: fleet.arrays.iter().map(|a| a.spec.clone()).collect(),
+    })
+}
+
+/// Run the full drift comparison: provision statically, build the
+/// two-phase drifted trace and one arrival plan, then replay it through
+/// the adaptive lane (detection + cutover) and the static lane (same
+/// specs throughout, segmented at the adaptive cutover rank).
+/// Deterministic: the same configuration produces the same report (and
+/// byte-identical [`drift_bench`] JSON) at any worker count.
+pub fn run_drift_comparison(dcfg: &DriftConfig) -> Result<DriftReport> {
+    dcfg.validate()?;
+    let cfg = &dcfg.fleet;
+    // One explorer backs provisioning *and* the mid-trace re-sweep: the
+    // weighted pass is served from the profiles the provisioning run
+    // memoized.
+    let explorer = provisioning_explorer(cfg)?;
+    let plan = provision_with(&explorer, cfg)?;
+    let trace = build_drift_trace(dcfg)?;
+    let tech = TechParams::default();
+    let (gap_secs, spill_macs) = modeled_knobs(cfg, &plan, &trace);
+    let arrivals = ArrivalPlan::new(dcfg.arrival.times(trace.len(), gap_secs)?);
+
+    let adaptive = drift_run(
+        &explorer,
+        "adaptive",
+        &plan.selected,
+        &trace,
+        cfg,
+        dcfg,
+        &arrivals,
+        spill_macs,
+        &tech,
+        dcfg.detect_window > 0,
+        None,
+    )?;
+    let static_run = drift_run(
+        &explorer,
+        "static",
+        &plan.selected,
+        &trace,
+        cfg,
+        dcfg,
+        &arrivals,
+        spill_macs,
+        &tech,
+        false,
+        adaptive.cutover_index,
+    )?;
+
+    Ok(DriftReport {
+        plan,
+        requests: trace.len(),
+        phase_at: dcfg.phase_at(),
+        gap_us: gap_secs * 1e6,
+        spill_macs,
+        arrival: dcfg.arrival.clone(),
+        adaptive,
+        static_run,
+    })
+}
+
+// ---------------------------------------------------------------------
+// Serialization
+// ---------------------------------------------------------------------
+
+fn drift_run_json(r: &DriftRun) -> Json {
+    obj(vec![
+        ("run", run_json(&r.run)),
+        ("adapted", Json::Bool(r.adapted)),
+        (
+            "cutover_index",
+            r.cutover_index
+                .map(|i| Json::Num(i as f64))
+                .unwrap_or(Json::Null),
+        ),
+        (
+            "cutover_us",
+            r.cutover_secs
+                .map(|s| Json::Num(s * 1e6))
+                .unwrap_or(Json::Null),
+        ),
+        ("peak_divergence", Json::Num(r.peak_divergence)),
+        ("pre_interconnect_uj", Json::Num(r.pre_interconnect_uj)),
+        ("post_interconnect_uj", Json::Num(r.post_interconnect_uj)),
+        (
+            "post_p99_us",
+            Json::Num(r.post_latency_us(0.99) as f64),
+        ),
+        (
+            "post_p999_us",
+            Json::Num(r.post_latency_us(0.999) as f64),
+        ),
+        ("warmup_uj", Json::Num(r.warmup_uj)),
+        (
+            "specs_after",
+            Json::Arr(r.specs_after.iter().map(spec_json).collect()),
+        ),
+    ])
+}
+
+fn headline_json(h: &DriftHeadline) -> Json {
+    obj(vec![
+        ("adapted", Json::Bool(h.adapted)),
+        (
+            "cutover_index",
+            h.cutover_index
+                .map(|i| Json::Num(i as f64))
+                .unwrap_or(Json::Null),
+        ),
+        ("post_margin_pct", Json::Num(h.post_margin_pct)),
+        ("adaptive_post_uj", Json::Num(h.adaptive_post_uj)),
+        ("static_post_uj", Json::Num(h.static_post_uj)),
+        ("warmup_uj", Json::Num(h.warmup_uj)),
+        ("adaptive_p99_us", Json::Num(h.adaptive_p99_us as f64)),
+        ("adaptive_p999_us", Json::Num(h.adaptive_p999_us as f64)),
+        ("static_p99_us", Json::Num(h.static_p99_us as f64)),
+        ("static_p999_us", Json::Num(h.static_p999_us as f64)),
+    ])
+}
+
+/// The machine-readable drift document. Deterministic — no wall-clock,
+/// no worker count (asserted byte-identical at workers 1 vs 4 by
+/// `tests/drift_determinism.rs`).
+pub fn drift_summary_json(dcfg: &DriftConfig, report: &DriftReport) -> Json {
+    let mut arrival_kv = vec![("kind", Json::Str(report.arrival.name().to_string()))];
+    if let ArrivalProcess::Poisson { seed, rate } = &report.arrival {
+        arrival_kv.push(("seed", Json::Num(*seed as f64)));
+        arrival_kv.push(("rate", Json::Num(*rate)));
+    }
+    obj(vec![
+        ("arrival", obj(arrival_kv)),
+        ("requests", Json::Num(report.requests as f64)),
+        ("phase_at", Json::Num(report.phase_at as f64)),
+        ("gap_us", Json::Num(report.gap_us)),
+        ("spill_macs", Json::Num(report.spill_macs as f64)),
+        ("detect_window", Json::Num(dcfg.detect_window as f64)),
+        (
+            "divergence_threshold",
+            Json::Num(dcfg.divergence_threshold),
+        ),
+        (
+            "provisioned",
+            Json::Arr(report.plan.selected.iter().map(spec_json).collect()),
+        ),
+        ("adaptive", drift_run_json(&report.adaptive)),
+        ("static", drift_run_json(&report.static_run)),
+        ("headline", headline_json(&report.headline())),
+    ])
+}
+
+/// Assemble the `DRIFT_summary.json` bench document: headline metrics
+/// as notes plus the full [`drift_summary_json`] section. Like the
+/// fleet and chaos benches, it carries no timing case and no worker
+/// count.
+pub fn drift_bench(dcfg: &DriftConfig, report: &DriftReport) -> Bench {
+    let h = report.headline();
+    let mut b = Bench::new("drift");
+    b.note("requests", report.requests as f64);
+    b.note("adapted", if h.adapted { 1.0 } else { 0.0 });
+    b.note("post_margin_pct", h.post_margin_pct);
+    b.note("adaptive_post_uj", h.adaptive_post_uj);
+    b.note("static_post_uj", h.static_post_uj);
+    b.note("warmup_uj", h.warmup_uj);
+    b.note("adaptive_p99_us", h.adaptive_p99_us as f64);
+    b.note("adaptive_p999_us", h.adaptive_p999_us as f64);
+    b.note("static_p99_us", h.static_p99_us as f64);
+    b.note("static_p999_us", h.static_p999_us as f64);
+    b.section("drift", drift_summary_json(dcfg, report));
+    b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::explore::WorkloadKind;
+
+    fn tiny_dcfg() -> DriftConfig {
+        DriftConfig {
+            fleet: FleetConfig {
+                pe_budget: 16,
+                arrays: 2,
+                workload: WorkloadKind::Synth,
+                max_layers: 2,
+                requests: 24,
+                unique_inputs: 2,
+                seed: 11,
+                window: 3,
+                cache_capacity: 16,
+                workers: 1,
+                ..FleetConfig::default()
+            },
+            arrival: ArrivalProcess::Poisson { seed: 5, rate: 1.3 },
+            phase_split: 0.5,
+            detect_window: 6,
+            divergence_threshold: 0.2,
+        }
+    }
+
+    #[test]
+    fn validation_rejects_degenerate_configs() {
+        assert!(tiny_dcfg().validate().is_ok());
+        assert!(DriftConfig {
+            phase_split: 0.0,
+            ..tiny_dcfg()
+        }
+        .validate()
+        .is_err());
+        assert!(DriftConfig {
+            divergence_threshold: 0.0,
+            ..tiny_dcfg()
+        }
+        .validate()
+        .is_err());
+        assert!(DriftConfig {
+            arrival: ArrivalProcess::Poisson { seed: 1, rate: -1.0 },
+            ..tiny_dcfg()
+        }
+        .validate()
+        .is_err());
+    }
+
+    #[test]
+    fn tracker_divergence_tracks_the_window() {
+        let mut tr = MixTracker::new(2, 4);
+        assert!(!tr.warm());
+        for layer in [0, 1, 0, 1] {
+            tr.observe(layer);
+        }
+        assert!(tr.warm());
+        assert_eq!(tr.divergence(), 0.0);
+        // Window slides to all-ones: full total-variation distance for
+        // a 2-layer mix with one layer starved.
+        for _ in 0..4 {
+            tr.observe(1);
+        }
+        assert!((tr.divergence() - 0.5).abs() < 1e-12);
+        assert_eq!(tr.weights(), vec![0.0, 4.0]);
+    }
+
+    #[test]
+    fn drifted_trace_shifts_the_mix_at_the_phase_boundary() {
+        let dcfg = tiny_dcfg();
+        let trace = build_drift_trace(&dcfg).unwrap();
+        assert_eq!(trace.len(), 24);
+        let (bins, layers) = shape_bins(&dcfg.fleet).unwrap();
+        assert_eq!(layers, 2);
+        let phase_at = dcfg.phase_at();
+        assert_eq!(phase_at, 12);
+        // Phase 1 alternates over the full mix; phase 2 only draws the
+        // skewed tail.
+        let phase2_bins: Vec<usize> = trace[phase_at..]
+            .iter()
+            .map(|r| *bins.get(&r.shape()).expect("known shape"))
+            .collect();
+        assert!(phase2_bins.iter().all(|&b| b == 1), "{phase2_bins:?}");
+        let phase1_bins: Vec<usize> = trace[..phase_at]
+            .iter()
+            .map(|r| *bins.get(&r.shape()).expect("known shape"))
+            .collect();
+        assert!(phase1_bins.iter().any(|&b| b == 0));
+        // Ids are resequenced over the concatenation.
+        for (i, r) in trace.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+        }
+    }
+
+    #[test]
+    fn comparison_adapts_and_segments_consistently() {
+        let dcfg = tiny_dcfg();
+        let report = run_drift_comparison(&dcfg).unwrap();
+        let a = &report.adaptive;
+        let s = &report.static_run;
+        assert!(a.adapted, "drifted mix must trigger adaptation");
+        assert!(s.run.completed == 24 && a.run.completed == 24);
+        let cut = a.cutover_index.unwrap();
+        assert!(cut > report.phase_at, "trigger needs drifted evidence");
+        assert!(cut < report.requests);
+        assert_eq!(s.cutover_index, None);
+        assert!(a.peak_divergence >= dcfg.divergence_threshold);
+        // Segmentation is exhaustive on both lanes.
+        for lane in [a, s] {
+            assert!(
+                (lane.pre_interconnect_uj + lane.post_interconnect_uj
+                    - lane.run.interconnect_uj)
+                    .abs()
+                    < 1e-9
+            );
+            assert_eq!(
+                lane.post_latency_sorted_us.len(),
+                report.requests - cut
+            );
+        }
+        // The adaptive lane re-provisioned for the observed (skewed)
+        // mix and must not lose to the static lane post-cutover; the
+        // tiny synth geometry grid leaves little headroom, so allow
+        // modeling noise (the Table-I margin is asserted by
+        // tests/drift_determinism.rs). Warmup is billed separately.
+        assert!(
+            a.post_interconnect_uj <= s.post_interconnect_uj * 1.02,
+            "adaptive post {} vs static post {}",
+            a.post_interconnect_uj,
+            s.post_interconnect_uj
+        );
+        assert!(a.warmup_uj >= 0.0);
+        assert_eq!(a.specs_after.len(), 2);
+        assert_eq!(s.specs_after.len(), 2);
+        // Static lane keeps the provisioned specs.
+        for (spec, provisioned) in s.specs_after.iter().zip(&report.plan.selected) {
+            assert_eq!(spec.sa.rows, provisioned.sa.rows);
+            assert_eq!(spec.sa.cols, provisioned.sa.cols);
+        }
+        let h = report.headline();
+        assert!(h.adapted);
+        assert!(h.post_margin_pct.is_finite());
+        assert!(h.adaptive_p999_us >= h.adaptive_p99_us);
+    }
+
+    #[test]
+    fn summary_json_shape() {
+        let dcfg = tiny_dcfg();
+        let report = run_drift_comparison(&dcfg).unwrap();
+        let j = drift_summary_json(&dcfg, &report);
+        assert_eq!(
+            j.req("arrival").unwrap().req("kind").unwrap().as_str().unwrap(),
+            "poisson"
+        );
+        assert!(j.req("adaptive").unwrap().get("run").is_some());
+        assert!(j.req("static").unwrap().get("run").is_some());
+        assert!(j.req("headline").unwrap().get("post_margin_pct").is_some());
+        assert_eq!(
+            j.req("provisioned").unwrap().as_arr().unwrap().len(),
+            2
+        );
+        let text = drift_bench(&dcfg, &report).to_json();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(parsed.req("suite").unwrap().as_str().unwrap(), "drift");
+        assert!(parsed.req("drift").unwrap().get("headline").is_some());
+    }
+}

@@ -29,12 +29,14 @@
 //!    seeded scenario trace ([`crate::serve::build_requests`]) into
 //!    per-array bounded queues that flush through
 //!    [`Server::process_batch`] at the admission window. Latency is
-//!    *modeled*: requests arrive on a fixed inter-arrival gap and each
+//!    *modeled*: requests arrive on an [`ArrivalPlan`] (fixed-gap,
+//!    seeded Poisson, or a recorded trace — see [`arrival`]) and each
 //!    array drains at its silicon rate (closed-form WS cycles at the
 //!    array clock), so queueing delay, spill decisions and the reported
 //!    percentiles are pure functions of the trace — byte-identical at
 //!    any worker count. Wall-clock throughput is measured too, but only
-//!    printed, never serialized.
+//!    printed, never serialized. [`drift`] layers mix-drift detection
+//!    and mid-trace re-provisioning over the same loop.
 //! 4. **Reporting** — fleet-level rollups (per-array utilization,
 //!    per-policy modeled-latency percentiles as sorted snapshots, exact
 //!    interconnect/total energy from [`crate::power::evaluate`] over
@@ -46,12 +48,19 @@
 //! `power × time` per request, and ranking by power alone would crown
 //! the frontier's slow tail (see [`provision`] docs).
 
+pub mod arrival;
+pub mod drift;
 pub mod provision;
 pub mod router;
 
+pub use arrival::{ArrivalPlan, ArrivalProcess};
+pub use drift::{
+    drift_bench, drift_summary_json, run_drift_comparison, DriftConfig, DriftHeadline,
+    DriftReport, DriftRun,
+};
 pub use provision::{
     closed_form_cycles, provision, provision_spare, provision_spare_with, provision_with,
-    provisioning_explorer, ArraySpec, FleetPlan,
+    provisioning_explorer, select_frontier, ArraySpec, FleetPlan,
 };
 pub use router::{RoutePolicy, RouteOutcome, Router};
 
@@ -311,6 +320,12 @@ pub struct PolicyRun {
     pub completed: u64,
     /// Requests lost after the retry budget (0 without faults).
     pub lost: u64,
+    /// Serve-side latency samples the arrays' bounded logs subsampled
+    /// away (summed across the fleet; 0 = every server-side percentile
+    /// is exact). The modeled `latency_sorted_us` above is always
+    /// complete — this surfaces the servers' own instrumentation
+    /// honesty, mirroring [`ServeSummary`](crate::serve::ServeSummary).
+    pub latency_samples_dropped: u64,
 }
 
 impl PolicyRun {
@@ -402,14 +417,14 @@ fn flush_array(
     Ok(())
 }
 
-/// Run one policy over the trace on one fleet.
+/// Run one policy over the trace on one fleet, under the historical
+/// fixed-gap arrival law (request `i` arrives at `i × gap_secs`).
 ///
-/// Admission model: request `i` arrives at `i × gap_secs`; the router
-/// sees each array's *outstanding* queued MACs (admitted minus modeled-
-/// finished at the arrival instant); the chosen array's modeled busy
-/// horizon advances by the closed-form service time. Queues flush
-/// through [`Server::process_batch`] every `window` admissions (and at
-/// end of trace), so the engines simulate exactly the routed work.
+/// A thin wrapper over [`run_policy_arrivals`] with a
+/// [`ArrivalProcess::FixedGap`] plan — the plan reproduces the old
+/// inline expression bit-exactly and orders as the identity, so this
+/// entry point's output is unchanged from before arrival processes
+/// existed (asserted by `tests/drift_determinism.rs`).
 pub fn run_policy(
     fleet: &Fleet,
     policy: RoutePolicy,
@@ -419,6 +434,39 @@ pub fn run_policy(
     spill_macs: u64,
     tech: &TechParams,
 ) -> Result<PolicyRun> {
+    let arrivals = ArrivalPlan::new(ArrivalProcess::FixedGap.times(trace.len(), gap_secs)?);
+    run_policy_arrivals(fleet, policy, trace, cfg, &arrivals, spill_macs, tech)
+}
+
+/// Run one policy over the trace on one fleet, admitting requests at
+/// the instants (and in the priority order) of an [`ArrivalPlan`].
+///
+/// Admission model: request `i` arrives at `arrivals.times[i]`,
+/// admitted in [`ArrivalPlan::order`] — `(time, class, sequence)`, so
+/// same-instant bursts drain urgent classes first. The router sees each
+/// array's *outstanding* queued MACs (admitted minus modeled-finished
+/// at the arrival instant); the chosen array's modeled busy horizon
+/// advances by the closed-form service time. Queues flush through
+/// [`Server::process_batch`] every `window` admissions (and at end of
+/// trace), so the engines simulate exactly the routed work. Everything
+/// is a pure function of `(fleet specs, trace, arrivals, spill)` —
+/// byte-identical at any worker count.
+pub fn run_policy_arrivals(
+    fleet: &Fleet,
+    policy: RoutePolicy,
+    trace: &[InferRequest],
+    cfg: &FleetConfig,
+    arrivals: &ArrivalPlan,
+    spill_macs: u64,
+    tech: &TechParams,
+) -> Result<PolicyRun> {
+    if arrivals.len() != trace.len() {
+        return Err(Error::config(format!(
+            "arrival plan schedules {} requests for a {}-request trace",
+            arrivals.len(),
+            trace.len()
+        )));
+    }
     let n = fleet.arrays.len();
     let window = cfg.window.max(1);
     let geoms: Vec<PeGeometry> = fleet
@@ -456,8 +504,9 @@ pub fn run_policy(
         }
     }
 
-    for (i, req) in trace.iter().enumerate() {
-        let t = i as f64 * gap_secs;
+    for &i in &arrivals.order() {
+        let req = &trace[i];
+        let t = arrivals.times[i];
         // Retire modeled completions up to the arrival instant.
         for a in 0..n {
             while let Some(&(finish, macs)) = inflight[a].front() {
@@ -540,6 +589,11 @@ pub fn run_policy(
         wall_secs: t_wall.elapsed().as_secs_f64(),
         completed: trace.len() as u64,
         lost: 0,
+        latency_samples_dropped: fleet
+            .arrays
+            .iter()
+            .map(|a| a.server.metrics().snapshot().latency_samples_dropped)
+            .sum(),
     })
 }
 
@@ -684,9 +738,42 @@ pub fn run_policy_chaos(
     spill_macs: u64,
     tech: &TechParams,
 ) -> Result<PolicyRun> {
+    let arrivals = ArrivalPlan::new(ArrivalProcess::FixedGap.times(trace.len(), gap_secs)?);
+    run_policy_chaos_arrivals(
+        specs, label, policy, trace, cfg, knobs, plan, spare, &arrivals, gap_secs, spill_macs,
+        tech,
+    )
+}
+
+/// The failure-aware admission loop under an explicit [`ArrivalPlan`] —
+/// what [`run_policy_chaos`] delegates to with a fixed-gap plan.
+/// `gap_secs` still parameterizes the retry backoff base
+/// ([`backoff_secs`]); arrival instants come from the plan.
+#[allow(clippy::too_many_arguments)]
+pub fn run_policy_chaos_arrivals(
+    specs: &[ArraySpec],
+    label: &str,
+    policy: RoutePolicy,
+    trace: &[InferRequest],
+    cfg: &FleetConfig,
+    knobs: &ChaosKnobs,
+    plan: &FaultPlan,
+    spare: Option<&ArraySpec>,
+    arrivals: &ArrivalPlan,
+    gap_secs: f64,
+    spill_macs: u64,
+    tech: &TechParams,
+) -> Result<PolicyRun> {
+    if arrivals.len() != trace.len() {
+        return Err(Error::config(format!(
+            "arrival plan schedules {} requests for a {}-request trace",
+            arrivals.len(),
+            trace.len()
+        )));
+    }
     if plan.is_empty() {
         let fleet = Fleet::build(label, specs, cfg)?;
-        return run_policy(&fleet, policy, trace, cfg, gap_secs, spill_macs, tech);
+        return run_policy_arrivals(&fleet, policy, trace, cfg, arrivals, spill_macs, tech);
     }
 
     let mut fleet = Fleet::build(label, specs, cfg)?;
@@ -724,11 +811,15 @@ pub fn run_policy_chaos(
     // fresh sequence numbers from the tail.
     let mut heap: BinaryHeap<ChaosItem> =
         BinaryHeap::with_capacity(trace.len() + plan.events.len());
-    for i in 0..trace.len() {
-        let t0 = i as f64 * gap_secs;
+    // Admission-order ranks become the initial sequence numbers, so
+    // same-instant bursts pop urgent classes first (the heap breaks
+    // time ties by sequence). Under FixedGap the order is the identity
+    // and this seeding is bit-identical to the historical `i × gap`.
+    for (rank, &i) in arrivals.order().iter().enumerate() {
+        let t0 = arrivals.times[i];
         heap.push(ChaosItem {
             time: t0,
-            seq: i as u64,
+            seq: rank as u64,
             ev: ChaosEv::Arrive {
                 idx: i,
                 t0,
@@ -1013,6 +1104,11 @@ pub fn run_policy_chaos(
         wall_secs: t_wall.elapsed().as_secs_f64(),
         completed,
         lost,
+        latency_samples_dropped: fleet
+            .arrays
+            .iter()
+            .map(|a| a.server.metrics().snapshot().latency_samples_dropped)
+            .sum(),
     })
 }
 
@@ -1229,6 +1325,7 @@ pub(crate) fn run_json(r: &PolicyRun) -> Json {
         ("p50_us", Json::Num(r.latency_us(0.50) as f64)),
         ("p90_us", Json::Num(r.latency_us(0.90) as f64)),
         ("p99_us", Json::Num(r.latency_us(0.99) as f64)),
+        ("p999_us", Json::Num(r.latency_us(0.999) as f64)),
         ("max_us", Json::Num(r.latency_us(1.0) as f64)),
         ("mean_us", Json::Num(r.mean_latency_us())),
         ("interconnect_uj", Json::Num(r.interconnect_uj)),
@@ -1240,6 +1337,10 @@ pub(crate) fn run_json(r: &PolicyRun) -> Json {
         ("lost", Json::Num(r.lost as f64)),
         ("completion_rate", Json::Num(r.completion_rate())),
         ("recovery_uj", Json::Num(r.recovery_uj())),
+        (
+            "latency_samples_dropped",
+            Json::Num(r.latency_samples_dropped as f64),
+        ),
     ])
 }
 

@@ -25,7 +25,7 @@
 
 use crate::arch::SaConfig;
 use crate::error::{Error, Result};
-use crate::explore::{ConfigPoint, DataflowKind, Explorer, SweepConfig, WorkloadKind};
+use crate::explore::{ConfigPoint, DataflowKind, Explorer, SweepConfig, SweepOutput, WorkloadKind};
 use crate::floorplan::PeGeometry;
 use crate::power::{self, TechParams};
 use crate::serve::ShapeKey;
@@ -240,19 +240,7 @@ pub fn provision_with(explorer: &Explorer, cfg: &FleetConfig) -> Result<FleetPla
     let frontier = out.frontier_points(0);
     assert!(!frontier.is_empty(), "a sweep always produces a frontier");
 
-    // Energy rank: interconnect power at the best aspect × workload
-    // cycles, ascending; rows break ties so the order is total.
-    let mut ranked: Vec<&ConfigPoint> = frontier.clone();
-    ranked.sort_by(|a, b| {
-        (a.best.interconnect_mw * a.cycles as f64)
-            .total_cmp(&(b.best.interconnect_mw * b.cycles as f64))
-            .then(a.rows.cmp(&b.rows))
-    });
-    // K cheapest; wrap around when the frontier is smaller than the
-    // fleet (duplicate geometries then add capacity, not diversity).
-    let selected = (0..cfg.arrays)
-        .map(|i| ArraySpec::from_point(ranked[i % ranked.len()], false))
-        .collect::<Result<Vec<_>>>()?;
+    let selected = select_frontier(&out, cfg.arrays)?;
 
     let base = &out.baselines[0];
     let square = (0..cfg.arrays)
@@ -279,6 +267,31 @@ pub fn provision_with(explorer: &Explorer, cfg: &FleetConfig) -> Result<FleetPla
         square,
         frontier: frontier_labels,
     })
+}
+
+/// The heterogeneous selection rule, reusable against any sweep output
+/// (the plain provisioning run or a mix-weighted re-sweep from
+/// [`Explorer::run_weighted`] during drift adaptation): rank the
+/// workload-0 Pareto frontier by interconnect energy — best-aspect
+/// interconnect power × workload cycles, ascending, rows breaking ties
+/// so the order is total — and take the K cheapest points at their
+/// swept best aspects. Wraps around when the frontier is smaller than
+/// the fleet (duplicate geometries then add capacity, not diversity).
+pub fn select_frontier(out: &SweepOutput, arrays: usize) -> Result<Vec<ArraySpec>> {
+    if arrays == 0 {
+        return Err(Error::config("fleet needs at least one array"));
+    }
+    let frontier = out.frontier_points(0);
+    assert!(!frontier.is_empty(), "a sweep always produces a frontier");
+    let mut ranked: Vec<&ConfigPoint> = frontier;
+    ranked.sort_by(|a, b| {
+        (a.best.interconnect_mw * a.cycles as f64)
+            .total_cmp(&(b.best.interconnect_mw * b.cycles as f64))
+            .then(a.rows.cmp(&b.rows))
+    });
+    (0..arrays)
+        .map(|i| ArraySpec::from_point(ranked[i % ranked.len()], false))
+        .collect()
 }
 
 /// Provision a hot spare ([`provision_spare_with`] on a fresh explorer).

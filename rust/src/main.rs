@@ -15,6 +15,9 @@
 //!   against an equal-PE homogeneous square fleet;
 //! * `chaos`    — the fleet comparison replayed under seeded fault
 //!   scenarios with retries, failover and hot-spare promotion;
+//! * `drift`    — the fleet under Poisson/fixed-gap arrivals with a
+//!   mid-trace mix shift: drift-adaptive re-provisioning vs the static
+//!   fleet, with post-cutover energy and tail-latency margins;
 //! * `verify`   — cycle-accurate vs analytic engine cross-check.
 //!
 //! Argument parsing is hand-rolled (the offline vendored dependency set
@@ -74,6 +77,12 @@ const FLEET_VALUED: &[&str] = &[
 const CHAOS_VALUED: &[&str] = &[
     "pes", "arrays", "requests", "unique", "layers", "seed", "workers", "window", "cache",
     "spill", "gap-us", "workload", "scenarios", "retry-limit", "queue-bound", "json", "md",
+];
+
+const DRIFT_VALUED: &[&str] = &[
+    "pes", "arrays", "requests", "unique", "layers", "seed", "workers", "window", "cache",
+    "spill", "gap-us", "workload", "arrival", "rate", "arrival-seed", "detect-window",
+    "threshold", "phase-split", "json", "md",
 ];
 
 const COMMANDS: &[Command] = &[
@@ -226,6 +235,34 @@ const COMMANDS: &[Command] = &[
         bools: &["strict", "no-spare"],
         valued: CHAOS_VALUED,
         run: cmd_chaos,
+    },
+    Command {
+        name: "drift",
+        help: "  drift      drift-adaptive fleet under Poisson/fixed-gap arrivals:
+             serve a two-phase trace whose layer mix shifts mid-stream,
+             detect the drift from a windowed mix histogram, re-run the
+             provisioning sweep against the observed mix (closed-form
+             over memoized profiles) and hot-swap every array; compare
+             post-cutover interconnect energy and p99/p99.9 against the
+             statically provisioned fleet on the same arrival plan
+               (fleet flags: --pes --arrays --requests --unique --layers
+                --seed --workers --window --cache --spill --gap-us
+                --workload, same defaults as `fleet`)
+               --arrival <s>      poisson | fixed (default poisson)
+               --rate <f>         poisson load multiplier (default 1.0)
+               --arrival-seed <n> arrival RNG seed (default 3525278225)
+               --detect-window <n> mix window in requests
+                                  (default 24; 0 disables adaptation)
+               --threshold <f>    divergence trigger in (0,1]
+                                  (default 0.25)
+               --phase-split <f>  fraction of trace before the mix
+                                  shift (default 0.5)
+               --json <f>      summary path (default DRIFT_summary.json)
+               --md <f>        report path (default out/DRIFT_report.md)
+",
+        bools: &[],
+        valued: DRIFT_VALUED,
+        run: cmd_drift,
     },
     Command {
         name: "verify",
@@ -456,6 +493,28 @@ fn cmd_chaos(f: &Flags) -> Result<(), String> {
         &ccfg,
         f.path("json").unwrap_or_else(|| PathBuf::from("CHAOS_summary.json")),
         f.path("md").unwrap_or_else(|| PathBuf::from("out/CHAOS_report.md")),
+    )
+}
+
+fn cmd_drift(f: &Flags) -> Result<(), String> {
+    use asymm_sa::fleet::{ArrivalProcess, DriftConfig};
+    let arrival = ArrivalProcess::parse(
+        &f.string("arrival", "poisson"),
+        f.usize("arrival-seed", 0xD21F_7A11)? as u64,
+        f.f64("rate", 1.0)?,
+    )
+    .map_err(|e| e.to_string())?;
+    let dcfg = DriftConfig {
+        fleet: fleet_config_from_flags(f)?,
+        arrival,
+        phase_split: f.f64("phase-split", 0.5)?,
+        detect_window: f.usize("detect-window", 24)?,
+        divergence_threshold: f.f64("threshold", 0.25)?,
+    };
+    drift(
+        &dcfg,
+        f.path("json").unwrap_or_else(|| PathBuf::from("DRIFT_summary.json")),
+        f.path("md").unwrap_or_else(|| PathBuf::from("out/DRIFT_report.md")),
     )
 }
 
@@ -966,6 +1025,77 @@ fn chaos(
 
     ensure_parent(&json)?;
     let b = faults::chaos_bench(ccfg, &report);
+    b.write_json(&json).map_err(|e| e.to_string())?;
+    Ok(())
+}
+
+fn drift(
+    dcfg: &asymm_sa::fleet::DriftConfig,
+    json: PathBuf,
+    md_path: PathBuf,
+) -> Result<(), String> {
+    use asymm_sa::fleet;
+
+    println!(
+        "drift: {} requests under {} arrivals, mix shift at request {} \
+         ({} x {}-PE arrays, detect window {}, threshold {:.2})",
+        dcfg.fleet.requests,
+        dcfg.arrival.name(),
+        dcfg.phase_at(),
+        dcfg.fleet.arrays,
+        dcfg.fleet.pe_budget,
+        dcfg.detect_window,
+        dcfg.divergence_threshold,
+    );
+    let t0 = std::time::Instant::now();
+    let report = fleet::run_drift_comparison(dcfg).map_err(|e| e.to_string())?;
+    println!(
+        "  modeled gap {:.1} us, spill bound {} MACs",
+        report.gap_us, report.spill_macs
+    );
+    for run in [&report.adaptive, &report.static_run] {
+        println!(
+            "  {:>8}: p99 {} us  p99.9 {} us  interconnect {:.2} uJ \
+             (pre {:.2} / post {:.2})",
+            run.run.fleet,
+            run.run.latency_us(0.99),
+            run.run.latency_us(0.999),
+            run.run.interconnect_uj,
+            run.pre_interconnect_uj,
+            run.post_interconnect_uj,
+        );
+    }
+    let h = report.headline();
+    if h.adapted {
+        println!(
+            "headline: adapted at request {} (divergence {:.3}); post-cutover \
+             interconnect margin {:+.1}% vs static ({:.2} vs {:.2} uJ), \
+             warmup {:.2} uJ ({:.2}s total)",
+            h.cutover_index.expect("adapted run has a cutover"),
+            report.adaptive.peak_divergence,
+            h.post_margin_pct,
+            h.adaptive_post_uj,
+            h.static_post_uj,
+            h.warmup_uj,
+            t0.elapsed().as_secs_f64(),
+        );
+    } else {
+        println!(
+            "headline: no adaptation (peak divergence {:.3} below threshold \
+             {:.2} or detection disabled; {:.2}s total)",
+            report.adaptive.peak_divergence,
+            dcfg.divergence_threshold,
+            t0.elapsed().as_secs_f64(),
+        );
+    }
+
+    let md = asymm_sa::report::drift_markdown(dcfg, &report);
+    ensure_parent(&md_path)?;
+    std::fs::write(&md_path, &md).map_err(|e| e.to_string())?;
+    println!("wrote {}", md_path.display());
+
+    ensure_parent(&json)?;
+    let b = fleet::drift_bench(dcfg, &report);
     b.write_json(&json).map_err(|e| e.to_string())?;
     Ok(())
 }

@@ -138,6 +138,9 @@ pub struct ServeSummary {
     pub p99_ms: f64,
     /// Max (ms).
     pub max_ms: f64,
+    /// Latency samples the bounded logs subsampled away (0 = the
+    /// percentiles above are exact over the whole stream).
+    pub latency_samples_dropped: u64,
     /// Result-cache statistics.
     pub cache: CacheStats,
 }
@@ -157,8 +160,16 @@ impl std::fmt::Display for ServeSummary {
         )?;
         writeln!(
             f,
-            "serve latency: p50 {:.2} ms, p90 {:.2} ms, p99 {:.2} ms, max {:.2} ms",
-            self.p50_ms, self.p90_ms, self.p99_ms, self.max_ms
+            "serve latency: p50 {:.2} ms, p90 {:.2} ms, p99 {:.2} ms, max {:.2} ms{}",
+            self.p50_ms,
+            self.p90_ms,
+            self.p99_ms,
+            self.max_ms,
+            if self.latency_samples_dropped > 0 {
+                format!(" ({} samples subsampled)", self.latency_samples_dropped)
+            } else {
+                String::new()
+            }
         )?;
         write!(
             f,
@@ -198,6 +209,7 @@ pub fn run_scenario(
         p90_ms: snap.serve_latency_percentile_ms(0.90),
         p99_ms: snap.serve_latency_percentile_ms(0.99),
         max_ms: snap.serve_latency_percentile_ms(1.0),
+        latency_samples_dropped: snap.latency_samples_dropped,
         cache: server.cache_stats(),
     };
     Ok((responses, summary))

@@ -1,0 +1,239 @@
+//! Determinism + acceptance tier for drift adaptation and arrival
+//! processes.
+//!
+//! Three contracts, all load-bearing for `repro drift` as a CI
+//! artifact:
+//!
+//! 1. **Worker-count invariance** — `DRIFT_summary.json` is
+//!    byte-identical with 1 worker and with 4 workers per array, under
+//!    both Poisson and recorded arrival plans: arrivals, detection,
+//!    cutover and every energy/latency number are functions of the
+//!    configuration only.
+//! 2. **Delegation identity** — with detection off under fixed-gap
+//!    arrivals, the drift runner *is* the plain fleet engine
+//!    ([`run_policy`]): every field matches bit-for-bit (the arrival
+//!    sibling of the chaos engine's empty-plan contract). The fixed-gap
+//!    plan itself reproduces the historical `i × gap` instants
+//!    bit-exactly.
+//! 3. **Adaptation acceptance** — on a two-phase drifted Table-I mix,
+//!    the adaptive fleet detects the shift, re-provisions mid-trace,
+//!    and its post-cutover interconnect energy does not lose to the
+//!    statically provisioned fleet serving the same arrival plan.
+
+use asymm_sa::explore::WorkloadKind;
+use asymm_sa::fleet::drift::build_drift_trace;
+use asymm_sa::fleet::{
+    drift_bench, modeled_knobs, provision, run_drift_comparison, run_policy, ArrivalPlan,
+    ArrivalProcess, DriftConfig, Fleet, FleetConfig, RoutePolicy, HETEROGENEOUS,
+};
+use asymm_sa::power::TechParams;
+
+fn tiny_cfg(workers: usize) -> FleetConfig {
+    FleetConfig {
+        pe_budget: 64,
+        arrays: 2,
+        workload: WorkloadKind::Synth,
+        max_layers: 2,
+        requests: 24,
+        unique_inputs: 2,
+        seed: 2023,
+        window: 4,
+        cache_capacity: 32,
+        workers,
+        spill_macs: 0,
+        gap_us: 0.0,
+    }
+}
+
+fn tiny_dcfg(workers: usize, arrival: ArrivalProcess) -> DriftConfig {
+    DriftConfig {
+        fleet: tiny_cfg(workers),
+        arrival,
+        phase_split: 0.5,
+        detect_window: 6,
+        divergence_threshold: 0.2,
+    }
+}
+
+#[test]
+fn drift_summary_is_worker_count_invariant_under_poisson() {
+    let arrival = ArrivalProcess::Poisson {
+        seed: 0xD21F_7A11,
+        rate: 1.3,
+    };
+    let c1 = tiny_dcfg(1, arrival.clone());
+    let c4 = tiny_dcfg(4, arrival);
+    let r1 = run_drift_comparison(&c1).unwrap();
+    let r4 = run_drift_comparison(&c4).unwrap();
+    assert_eq!(
+        drift_bench(&c1, &r1).to_json(),
+        drift_bench(&c4, &r4).to_json(),
+        "DRIFT_summary.json must be byte-identical across worker counts"
+    );
+    // The cutover decision and the raw latency multisets match too (not
+    // just rounded aggregates).
+    assert_eq!(r1.adaptive.cutover_index, r4.adaptive.cutover_index);
+    assert_eq!(
+        r1.adaptive.run.latency_sorted_us,
+        r4.adaptive.run.latency_sorted_us
+    );
+    assert_eq!(
+        r1.adaptive.post_latency_sorted_us,
+        r4.adaptive.post_latency_sorted_us
+    );
+    assert_eq!(
+        r1.adaptive.post_interconnect_uj.to_bits(),
+        r4.adaptive.post_interconnect_uj.to_bits()
+    );
+    assert_eq!(
+        r1.static_run.run.latency_sorted_us,
+        r4.static_run.run.latency_sorted_us
+    );
+}
+
+#[test]
+fn drift_summary_is_worker_count_invariant_under_recorded_trace() {
+    // A replayed production-style trace: non-uniform but deterministic
+    // instants, long enough for the tiny scenario.
+    let times: Vec<f64> = (0..24)
+        .map(|i| i as f64 * 7.3e-5 + if i % 3 == 0 { 0.0 } else { 1.1e-5 })
+        .collect();
+    let c1 = tiny_dcfg(1, ArrivalProcess::Recorded(times.clone()));
+    let c4 = tiny_dcfg(4, ArrivalProcess::Recorded(times));
+    let r1 = run_drift_comparison(&c1).unwrap();
+    let r4 = run_drift_comparison(&c4).unwrap();
+    assert_eq!(
+        drift_bench(&c1, &r1).to_json(),
+        drift_bench(&c4, &r4).to_json(),
+        "recorded-arrival DRIFT_summary.json must be byte-identical \
+         across worker counts"
+    );
+}
+
+#[test]
+fn drift_off_fixed_gap_is_bit_identical_to_run_policy() {
+    // Detection off + fixed-gap arrivals must delegate to the plain
+    // engine outright: same trace, same knobs, bit-identical run.
+    let dcfg = DriftConfig {
+        detect_window: 0,
+        arrival: ArrivalProcess::FixedGap,
+        ..tiny_dcfg(2, ArrivalProcess::FixedGap)
+    };
+    let cfg = &dcfg.fleet;
+    let report = run_drift_comparison(&dcfg).unwrap();
+    assert!(!report.adaptive.adapted);
+    assert_eq!(report.adaptive.cutover_index, None);
+
+    let plan = provision(cfg).unwrap();
+    let trace = build_drift_trace(&dcfg).unwrap();
+    let tech = TechParams::default();
+    let (gap, spill) = modeled_knobs(cfg, &plan, &trace);
+
+    // The fixed-gap plan reproduces the historical arrival law to the
+    // bit.
+    let arrivals = ArrivalPlan::new(ArrivalProcess::FixedGap.times(trace.len(), gap).unwrap());
+    for (i, &t) in arrivals.times.iter().enumerate() {
+        assert_eq!(t.to_bits(), (i as f64 * gap).to_bits());
+    }
+
+    let fleet = Fleet::build(HETEROGENEOUS, &plan.selected, cfg).unwrap();
+    let plain = run_policy(&fleet, RoutePolicy::ShapeAffine, &trace, cfg, gap, spill, &tech)
+        .unwrap();
+    let lane = &report.adaptive.run;
+    assert_eq!(lane.latency_sorted_us, plain.latency_sorted_us);
+    assert_eq!(lane.spills, plain.spills);
+    assert_eq!(lane.interconnect_uj.to_bits(), plain.interconnect_uj.to_bits());
+    assert_eq!(lane.total_uj.to_bits(), plain.total_uj.to_bits());
+    assert_eq!(lane.silicon_secs.to_bits(), plain.silicon_secs.to_bits());
+    for (a, b) in lane.per_array.iter().zip(&plain.per_array) {
+        assert_eq!(a.requests, b.requests);
+        assert_eq!(a.macs, b.macs);
+        assert_eq!(a.sim_cycles, b.sim_cycles);
+        assert_eq!(a.queue_peak, b.queue_peak);
+        assert_eq!(a.interconnect_uj.to_bits(), b.interconnect_uj.to_bits());
+        assert_eq!(a.cache, b.cache);
+    }
+    // Both lanes delegate, so they are bit-identical to each other too.
+    assert_eq!(
+        report.static_run.run.latency_sorted_us,
+        lane.latency_sorted_us
+    );
+    assert_eq!(
+        report.static_run.run.interconnect_uj.to_bits(),
+        lane.interconnect_uj.to_bits()
+    );
+}
+
+#[test]
+fn adaptive_fleet_holds_the_postcutover_margin_on_drifted_table1() {
+    // The acceptance scenario: a Table-I mix whose second half takes
+    // over mid-trace under bursty Poisson arrivals.
+    let dcfg = DriftConfig {
+        fleet: FleetConfig {
+            pe_budget: 128,
+            arrays: 2,
+            workload: WorkloadKind::Table1,
+            max_layers: 4,
+            requests: 48,
+            unique_inputs: 2,
+            seed: 2023,
+            window: 4,
+            cache_capacity: 32,
+            workers: 0,
+            spill_macs: 0,
+            gap_us: 0.0,
+        },
+        arrival: ArrivalProcess::Poisson {
+            seed: 0xD21F_7A11,
+            rate: 1.2,
+        },
+        phase_split: 0.5,
+        detect_window: 12,
+        divergence_threshold: 0.2,
+    };
+    let report = run_drift_comparison(&dcfg).unwrap();
+    let a = &report.adaptive;
+    let s = &report.static_run;
+
+    assert!(a.adapted, "the drifted Table-I mix must trigger adaptation");
+    let cut = a.cutover_index.expect("adapted run has a cutover");
+    assert!(
+        cut > report.phase_at,
+        "the detector cannot fire before drifted evidence exists \
+         (cutover {cut}, phase at {})",
+        report.phase_at
+    );
+    assert!(cut < report.requests, "cutover must leave a post segment");
+    assert!(a.peak_divergence >= dcfg.divergence_threshold);
+
+    // Segmentation is exhaustive and the lanes saw identical post
+    // segments.
+    for lane in [a, s] {
+        assert!(
+            (lane.pre_interconnect_uj + lane.post_interconnect_uj
+                - lane.run.interconnect_uj)
+                .abs()
+                < 1e-6
+        );
+        assert_eq!(lane.post_latency_sorted_us.len(), report.requests - cut);
+        assert_eq!(lane.run.completed, report.requests as u64);
+    }
+
+    // Post-cutover the re-provisioned fleet must not lose to the static
+    // one (small slack absorbs operand-level activity noise between the
+    // provisioning profiles and the served trace; the measured margin is
+    // surfaced in DRIFT_summary.json / BENCH_drift.json for CI).
+    assert!(
+        a.post_interconnect_uj <= s.post_interconnect_uj * 1.05,
+        "adaptive post-cutover {} uJ vs static {} uJ",
+        a.post_interconnect_uj,
+        s.post_interconnect_uj
+    );
+    let h = report.headline();
+    assert!(h.post_margin_pct.is_finite());
+    assert!(h.warmup_uj >= 0.0);
+    // Tail percentiles are reported at both p99 and p99.9 and are
+    // ordered.
+    assert!(h.adaptive_p999_us >= h.adaptive_p99_us);
+    assert!(h.static_p999_us >= h.static_p99_us);
+}
