@@ -40,6 +40,7 @@ fn main() {
         workers: 0,
         spill_macs: 0,
         gap_us: 0.0,
+        classes: 1,
     };
     let knobs = ChaosKnobs::default();
     let plan = provision(&cfg).expect("provision");

@@ -1,0 +1,114 @@
+//! Bench: daemon request handling → `BENCH_daemon.json`.
+//!
+//! Times the daemon's three cost centers separately so a regression
+//! localizes:
+//!
+//! * **build** — fleet provisioning + daemon construction (cold-start);
+//! * **submit_gemm** — per-request protocol handling on a persistent
+//!   daemon with a warm result cache (steady-state requests/sec);
+//! * **submit_trace** — batched trace admission through the window.
+//!
+//! A deterministic accounting pass then records the robustness
+//! headline numbers (rejection counters by code, drain latency) as
+//! notes, so CI tracks the admission-control behavior per commit, not
+//! just the speed.
+
+use asymm_sa::bench_util::Bench;
+use asymm_sa::daemon::{DaemonConfig, Harness};
+use asymm_sa::explore::WorkloadKind;
+use asymm_sa::fleet::FleetConfig;
+
+fn daemon_cfg() -> DaemonConfig {
+    DaemonConfig {
+        fleet: FleetConfig {
+            pe_budget: 64,
+            arrays: 2,
+            workload: WorkloadKind::Synth,
+            max_layers: 2,
+            requests: 32,
+            unique_inputs: 2,
+            seed: 2023,
+            window: 4,
+            cache_capacity: 64,
+            workers: 0,
+            spill_macs: 0,
+            gap_us: 0.0,
+            classes: 2,
+        },
+        ..DaemonConfig::default()
+    }
+}
+
+fn main() {
+    let mut b = Bench::new("daemon_rps");
+
+    b.case("daemon_build_64pes_2arrays", || {
+        Harness::new(daemon_cfg()).expect("daemon")
+    });
+
+    // Steady state: persistent daemon, warm cache (4 operand variants
+    // cycle, so after the first pass every simulation is a cache hit).
+    const BATCH: usize = 32;
+    let script: String = (0..BATCH)
+        .map(|i| {
+            format!(
+                "{{\"id\": {i}, \"method\": \"submit_gemm\", \"params\": \
+                 {{\"m\": 16, \"k\": 8, \"n\": 8, \"seed\": {}, \"class\": {}}}}}\n",
+                i % 4,
+                i % 2,
+            )
+        })
+        .collect();
+    let mut gemm_daemon = Harness::new(daemon_cfg()).expect("daemon");
+    b.case("submit_gemm_32req_warm", || gemm_daemon.run_script(&script));
+    b.throughput(BATCH as f64, "req");
+
+    let mut trace_daemon = Harness::new(daemon_cfg()).expect("daemon");
+    let trace_line = "{\"id\": 1, \"method\": \"submit_trace\", \"params\": {\"requests\": 64}}\n";
+    b.case("submit_trace_64req_warm", || {
+        trace_daemon.run_script(trace_line)
+    });
+    b.throughput(64.0, "req");
+
+    // Deterministic robustness accounting: a same-instant burst against
+    // a tight bound, an unmeetable deadline, then a drain under load.
+    let mut cfg = daemon_cfg();
+    cfg.queue_bound = 2;
+    let mut acct = Harness::new(cfg).expect("daemon");
+    let mut acct_script = String::new();
+    for i in 0..16 {
+        acct_script.push_str(&format!(
+            "{{\"id\": {i}, \"method\": \"submit_gemm\", \"params\": \
+             {{\"m\": 16, \"k\": 8, \"n\": 8, \"class\": {}, \"at_us\": 0}}}}\n",
+            i % 2,
+        ));
+    }
+    acct_script.push_str(
+        "{\"id\": 100, \"method\": \"submit_gemm\", \"params\": \
+         {\"m\": 512, \"k\": 64, \"n\": 64, \"deadline_us\": 1}}\n\
+         {\"id\": 101, \"method\": \"submit_trace\", \"params\": {\"requests\": 32}}\n\
+         {\"id\": 102, \"method\": \"drain\"}\n",
+    );
+    acct.run_script(&acct_script);
+    let summary = acct.summary_json();
+    let n = |path: &[&str]| -> f64 {
+        let mut v = &summary;
+        for k in path {
+            v = v.req(k).expect("summary field");
+        }
+        v.as_f64().expect("summary number")
+    };
+    b.note("accepted", n(&["accepted"]));
+    b.note("rejected_queue_full", n(&["rejected", "queue_full"]));
+    b.note("rejected_deadline", n(&["rejected", "deadline_exceeded"]));
+    b.note("drain_latency_us", n(&["drain_latency_us"]));
+    b.note("p99_us", n(&["p99_us"]));
+    assert_eq!(
+        n(&["accepted"]),
+        n(&["billed"]),
+        "drain must bill every admitted request exactly once"
+    );
+
+    b.finish();
+    b.write_json("BENCH_daemon.json").expect("write BENCH_daemon.json");
+}

@@ -36,6 +36,7 @@ fn main() {
             workers: 0,
             spill_macs: 0,
             gap_us: 0.0,
+            classes: 1,
         },
         arrival: ArrivalProcess::Poisson {
             seed: 0xD21F_7A11,

@@ -37,6 +37,7 @@ fn main() {
         workers: 0,
         spill_macs: 0,
         gap_us: 0.0,
+        classes: 1,
     };
 
     b.case("provision_64pes_2arrays", || {

@@ -16,7 +16,7 @@
 //! values fully determines the snapshot, so serve-latency percentiles
 //! are identical at any worker count for the same recorded values.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
@@ -271,6 +271,64 @@ pub fn percentile_micros(sorted: &[u64], p: f64) -> u64 {
 /// percentiles — every metrics conversion routes through here.
 fn to_micros(secs: f64) -> u64 {
     (secs * 1e6).round() as u64
+}
+
+/// Per-priority-class latency lanes: the shared accumulator behind the
+/// multi-tenant percentiles in the serve, fleet and daemon summaries.
+///
+/// Lanes are keyed by class in a `BTreeMap`, so [`ClassLatencies::snapshot`]
+/// iterates classes in ascending order and the serialized `per_class`
+/// arrays are deterministic. Like [`sorted_micros`], the snapshot is a
+/// function of the recorded per-class multisets only — independent of
+/// recording order and hence of worker count.
+#[derive(Debug, Default)]
+pub struct ClassLatencies {
+    lanes: BTreeMap<u8, Vec<f64>>,
+}
+
+impl ClassLatencies {
+    /// Empty accumulator: no classes until something is recorded.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one latency sample (seconds) into its class lane.
+    pub fn record(&mut self, class: u8, secs: f64) {
+        self.lanes.entry(class).or_default().push(secs);
+    }
+
+    /// Stable per-class views, classes ascending; each lane carries the
+    /// sorted-µs snapshot [`percentile_micros`] expects.
+    pub fn snapshot(&self) -> Vec<ClassLatency> {
+        self.lanes
+            .iter()
+            .map(|(&class, secs)| ClassLatency {
+                class,
+                latency_sorted_us: sorted_micros(secs.iter().copied()),
+            })
+            .collect()
+    }
+}
+
+/// One priority class's stable latency view.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ClassLatency {
+    /// Priority class (0 = most urgent).
+    pub class: u8,
+    /// Recorded latencies in µs, sorted ascending.
+    pub latency_sorted_us: Vec<u64>,
+}
+
+impl ClassLatency {
+    /// Samples recorded for this class.
+    pub fn requests(&self) -> usize {
+        self.latency_sorted_us.len()
+    }
+
+    /// Nearest-rank latency percentile in µs.
+    pub fn latency_us(&self, p: f64) -> u64 {
+        percentile_micros(&self.latency_sorted_us, p)
+    }
 }
 
 impl Metrics {
@@ -642,6 +700,32 @@ mod tests {
         // Rounds to the nearest microsecond; empty stays empty.
         assert_eq!(sorted_micros([1.4e-6, 1.6e-6]), vec![1, 2]);
         assert!(sorted_micros(Vec::<f64>::new()).is_empty());
+    }
+
+    #[test]
+    fn class_latencies_snapshot_in_class_order() {
+        let mut c = ClassLatencies::new();
+        // Record classes out of order, values out of order.
+        c.record(2, 0.003);
+        c.record(0, 0.002);
+        c.record(2, 0.001);
+        c.record(0, 0.004);
+        let snap = c.snapshot();
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap[0].class, 0);
+        assert_eq!(snap[0].latency_sorted_us, vec![2000, 4000]);
+        assert_eq!(snap[1].class, 2);
+        assert_eq!(snap[1].latency_sorted_us, vec![1000, 3000]);
+        assert_eq!(snap[0].requests(), 2);
+        assert_eq!(snap[1].latency_us(0.99), 3000);
+        // Order-independence: the reverse recording snapshots equal.
+        let mut r = ClassLatencies::new();
+        r.record(0, 0.004);
+        r.record(2, 0.001);
+        r.record(0, 0.002);
+        r.record(2, 0.003);
+        assert_eq!(r.snapshot(), snap);
+        assert!(ClassLatencies::new().snapshot().is_empty());
     }
 
     #[test]

@@ -1,0 +1,119 @@
+//! In-process protocol harness: the daemon without the socket.
+//!
+//! Feeds request lines straight into [`Daemon::handle`] through the
+//! same parse/render path the Unix-socket server uses, so a scripted
+//! request sequence produces a byte-identical response transcript in
+//! either mode — which is what the golden tests in
+//! `rust/tests/daemon_determinism.rs` pin at worker counts 1 and 4.
+
+use crate::error::Result;
+use crate::util::json::Json;
+
+use super::protocol::{parse_line, render_err, render_ok};
+use super::{Daemon, DaemonConfig, DaemonState};
+
+/// Socket-free driver around a [`Daemon`].
+pub struct Harness {
+    daemon: Daemon,
+}
+
+impl Harness {
+    /// Provision a fleet and stand the daemon up in-process.
+    pub fn new(cfg: DaemonConfig) -> Result<Harness> {
+        Ok(Harness {
+            daemon: Daemon::new(cfg)?,
+        })
+    }
+
+    /// Handle one request line and return its one response line
+    /// (without the trailing newline).
+    pub fn handle_line(&mut self, line: &str) -> String {
+        let (id, parsed) = parse_line(line);
+        let outcome = parsed.and_then(|req| self.daemon.handle(req));
+        match outcome {
+            Ok(result) => render_ok(&id, result),
+            Err(e) => render_err(&id, &e),
+        }
+    }
+
+    /// Run a request script: one request per line, blank lines and
+    /// `#`-comments skipped. Returns the response transcript, one line
+    /// per request, each `\n`-terminated.
+    pub fn run_script(&mut self, script: &str) -> String {
+        let mut out = String::new();
+        for line in script.lines() {
+            let trimmed = line.trim();
+            if trimmed.is_empty() || trimmed.starts_with('#') {
+                continue;
+            }
+            out.push_str(&self.handle_line(trimmed));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Current daemon state.
+    pub fn state(&self) -> DaemonState {
+        self.daemon.state()
+    }
+
+    /// The final summary document (`DAEMON_summary.json` content).
+    pub fn summary_json(&self) -> Json {
+        self.daemon.summary_json()
+    }
+
+    /// Borrow the underlying daemon.
+    pub fn daemon(&self) -> &Daemon {
+        &self.daemon
+    }
+
+    /// Mutable access for tests and the local runner.
+    pub fn daemon_mut(&mut self) -> &mut Daemon {
+        &mut self.daemon
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::daemon::tests::tiny_cfg;
+
+    #[test]
+    fn a_script_yields_one_response_line_per_request() {
+        let mut h = Harness::new(tiny_cfg()).unwrap();
+        let out = h.run_script(
+            "# exercise status, one gemm, drain\n\
+             {\"id\": 1, \"method\": \"fleet_status\"}\n\
+             \n\
+             {\"id\": 2, \"method\": \"submit_gemm\", \"params\": {\"m\": 4, \"k\": 4, \"n\": 4}}\n\
+             {\"id\": 3, \"method\": \"drain\"}\n",
+        );
+        let lines: Vec<&str> = out.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("{\"id\":1,\"result\":"));
+        assert!(lines[1].contains("\"latency_us\":"));
+        assert!(lines[2].contains("\"state\":\"drained\""));
+        assert_eq!(h.state(), DaemonState::Drained);
+    }
+
+    #[test]
+    fn parse_failures_become_error_lines_not_panics() {
+        let mut h = Harness::new(tiny_cfg()).unwrap();
+        let out = h.handle_line("{\"method\": \"frobnicate\"}");
+        assert!(out.contains("\"code\":\"protocol_violation\""));
+        assert!(out.contains("unknown method"));
+        // The daemon survives and still answers.
+        assert!(h.handle_line("{\"id\": 9, \"method\": \"fleet_status\"}").contains("\"id\":9"));
+    }
+
+    #[test]
+    fn post_drain_submissions_get_the_draining_code() {
+        let mut h = Harness::new(tiny_cfg()).unwrap();
+        assert!(h.handle_line("{\"method\": \"drain\"}").contains("\"state\":\"drained\""));
+        let out = h.handle_line(
+            "{\"id\": 5, \"method\": \"submit_gemm\", \"params\": {\"m\": 2, \"k\": 2, \"n\": 2}}",
+        );
+        assert!(out.contains("\"code\":\"draining\""), "{out}");
+        assert!(out.contains("\"id\":5"), "{out}");
+    }
+}

@@ -1,0 +1,1002 @@
+//! Always-on serving daemon over the fleet.
+//!
+//! `repro daemon` wraps the [`crate::fleet`] machinery in a long-lived
+//! process speaking the line-delimited JSON protocol of
+//! `docs/protocol.md` — `submit_gemm`, `submit_trace`, `fleet_status`,
+//! `drain`, `shutdown` — over a Unix domain socket ([`server`]) or an
+//! in-process [`Harness`] (what the golden tests script; both paths
+//! call the same [`Daemon`] handlers, so the transcripts are
+//! byte-identical).
+//!
+//! The robustness core lives here:
+//!
+//! * **Bounded admission with per-class watermarks.** Each array admits
+//!   at most `queue_bound` in-flight requests for class 0; class `c` of
+//!   `C` sees the lower watermark `max(1, queue_bound·(C−c)/C)`, so
+//!   lower-priority classes shed first as backlog builds. Shedding is a
+//!   typed [`Error::QueueFull`] wire error, never a blocked socket.
+//! * **Deadlines in modeled time.** A request's projected sojourn
+//!   (queueing behind the routed array's busy horizon plus its
+//!   closed-form service time) is checked against the deadline *before*
+//!   admission commits, so a rejection leaves no trace in the
+//!   accounting and every decision is a pure function of the request
+//!   script — worker count, socket scheduling and machine speed cannot
+//!   change a single counter.
+//! * **Graceful drain.** `drain` stops admission, flushes every pending
+//!   batch through the engines and retires every admitted request at
+//!   its modeled finish: after a drain `accepted == completed ==
+//!   billed`, with nothing lost or double-billed. Drain is idempotent
+//!   and post-drain submissions are rejected with [`Error::Draining`].
+//! * **Deterministic background jobs.** The [`scheduler`] triggers
+//!   cache warmup and drift re-provisioning by *admission counts*,
+//!   never timers; jobs run synchronously at the end of the request
+//!   that made them due. The socket server's scheduler thread only
+//!   provides liveness for jobs already due on an idle connection.
+
+pub mod harness;
+pub mod protocol;
+mod scheduler;
+#[cfg(unix)]
+pub mod server;
+
+pub use harness::Harness;
+pub use protocol::{parse_line, render_err, render_ok, Request};
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::Arc;
+
+use crate::coordinator::metrics::{percentile_micros, sorted_micros, ClassLatencies};
+use crate::error::{Error, Result};
+use crate::explore::Explorer;
+use crate::fleet::{
+    build_trace, class_latency_json, flush_array, modeled_knobs, provision_with,
+    provisioning_explorer, select_frontier, shape_bins, ArrayAcc, Fleet, FleetConfig, MixTracker,
+    RoutePolicy, Router, HETEROGENEOUS,
+};
+use crate::floorplan::PeGeometry;
+use crate::gemm::Matrix;
+use crate::power::{self, TechParams};
+use crate::serve::{
+    build_requests, operand_digest, InferRequest, InferResponse, ScenarioConfig, ServeConfig,
+    Server, ShapeKey,
+};
+use crate::util::json::{obj, Json};
+use crate::util::rng::Rng;
+use crate::workloads::ConvLayer;
+
+use scheduler::{JobKind, Scheduler};
+
+/// Largest accepted GEMM dimension of `submit_gemm` (keeps a scripted
+/// request from allocating unbounded operand matrices).
+pub const MAX_GEMM_DIM: usize = 4096;
+
+/// Daemon configuration: the fleet it provisions plus the admission
+/// knobs of `docs/protocol.md`.
+#[derive(Debug, Clone)]
+pub struct DaemonConfig {
+    /// The fleet to provision and serve (arrays, workload mix, window,
+    /// priority classes, …). `fleet.requests` only sizes the
+    /// `modeled_knobs` probe trace and the `submit_trace` default.
+    pub fleet: FleetConfig,
+    /// Per-array class-0 admission bound; `0` = auto `4 × window`.
+    pub queue_bound: usize,
+    /// Default per-request deadline in µs of modeled sojourn; `0` =
+    /// none. `submit_gemm`/`submit_trace` may override per call.
+    pub deadline_us: u64,
+    /// Re-provisioning job period in admissions; `0` = off. Doubles as
+    /// the observed-mix window the drift check runs over.
+    pub reprovision_every: usize,
+    /// Total-variation divergence that triggers a re-provision (only
+    /// consulted when `reprovision_every > 0`).
+    pub divergence_threshold: f64,
+    /// Cache-warmup job period in admissions; `0` = auto `4 × window`.
+    pub warm_every: usize,
+}
+
+impl Default for DaemonConfig {
+    fn default() -> Self {
+        DaemonConfig {
+            fleet: FleetConfig::default(),
+            queue_bound: 0,
+            deadline_us: 0,
+            reprovision_every: 0,
+            divergence_threshold: 0.25,
+            warm_every: 0,
+        }
+    }
+}
+
+impl DaemonConfig {
+    /// Validate the configuration.
+    pub fn validate(&self) -> Result<()> {
+        self.fleet.validate()?;
+        if self.reprovision_every > 0
+            && !(self.divergence_threshold > 0.0 && self.divergence_threshold <= 1.0)
+        {
+            return Err(Error::config(format!(
+                "divergence threshold {} outside (0, 1]",
+                self.divergence_threshold
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Daemon lifecycle state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DaemonState {
+    /// Accepting work.
+    Running,
+    /// Drained: all admitted work retired and billed; admission closed.
+    Drained,
+    /// Terminal: drained and told to exit (socket server stops).
+    Shutdown,
+}
+
+impl DaemonState {
+    /// Wire name (`fleet_status.state`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            DaemonState::Running => "running",
+            DaemonState::Drained => "drained",
+            DaemonState::Shutdown => "shutdown",
+        }
+    }
+}
+
+/// An admission decision that committed: where the request landed and
+/// the modeled instants the reply reports.
+struct Admitted {
+    array: usize,
+    arrival: f64,
+    finish: f64,
+}
+
+/// The daemon: fleet + modeled clock + admission state machine. All
+/// handlers take `&mut self` and are serialized by the caller (the
+/// socket server holds a mutex; the harness is single-threaded), so
+/// every run of a request script replays the exact same state
+/// trajectory.
+pub struct Daemon {
+    cfg: DaemonConfig,
+    fleet: Fleet,
+    geoms: Vec<PeGeometry>,
+    cycle_fj: Vec<f64>,
+    tech: TechParams,
+    router: Router,
+    explorer: Explorer,
+    mix: Vec<ConvLayer>,
+    layer_of: HashMap<ShapeKey, usize>,
+    tracker: Option<MixTracker>,
+    scheduler: Scheduler,
+
+    gap_secs: f64,
+    spill_macs: u64,
+    queue_bound: usize,
+
+    state: DaemonState,
+    /// Modeled now: the last arrival instant consumed (monotone).
+    clock: f64,
+    /// Whether any arrival instant was consumed yet (the first default
+    /// arrival lands at t = 0, like the fleet's fixed-gap law).
+    started: bool,
+    busy_until: Vec<f64>,
+    inflight: Vec<VecDeque<(f64, u64)>>,
+    outstanding: Vec<u64>,
+    pending: Vec<Vec<InferRequest>>,
+    accs: Vec<ArrayAcc>,
+
+    lat_secs: Vec<f64>,
+    class_lat: ClassLatencies,
+    accepted: u64,
+    completed: u64,
+    billed: u64,
+    rej_queue_full: u64,
+    rej_deadline: u64,
+    rej_draining: u64,
+    next_request: u64,
+    reprovisions: u64,
+    warmup_uj: f64,
+    drain_latency_us: Option<u64>,
+
+    /// Unique operands seen (by digest), in first-seen order — what the
+    /// warmup job replays onto every array and what a re-provision
+    /// warms the promoted servers with.
+    seen: Vec<InferRequest>,
+    seen_digests: HashSet<u64>,
+    /// Index into `seen` up to which the warmup job already ran.
+    warmed_upto: usize,
+}
+
+impl Daemon {
+    /// Provision the fleet and start the modeled clock at zero.
+    pub fn new(cfg: DaemonConfig) -> Result<Daemon> {
+        cfg.validate()?;
+        let fcfg = &cfg.fleet;
+        let explorer = provisioning_explorer(fcfg)?;
+        let plan = provision_with(&explorer, fcfg)?;
+        let probe = build_trace(fcfg)?;
+        let (gap_secs, spill_macs) = modeled_knobs(fcfg, &plan, &probe);
+        let fleet = Fleet::build(HETEROGENEOUS, &plan.selected, fcfg)?;
+        let n = fleet.arrays().len();
+        let geoms = fleet
+            .arrays()
+            .iter()
+            .map(|a| a.spec.geometry())
+            .collect::<Result<Vec<_>>>()?;
+        let tech = TechParams::default();
+        let cycle_fj = fleet
+            .arrays()
+            .iter()
+            .map(|a| a.spec.cycle_cost_fj(&tech))
+            .collect();
+        let (layer_of, layers) = shape_bins(fcfg)?;
+        let mut mix = fcfg.workload.layers();
+        if fcfg.max_layers > 0 && mix.len() > fcfg.max_layers {
+            mix.truncate(fcfg.max_layers);
+        }
+        let window = fcfg.window.max(1);
+        let queue_bound = if cfg.queue_bound == 0 {
+            4 * window
+        } else {
+            cfg.queue_bound
+        };
+        let warm_every = if cfg.warm_every == 0 {
+            4 * window
+        } else {
+            cfg.warm_every
+        };
+        let tracker = if cfg.reprovision_every > 0 {
+            Some(MixTracker::new(layers, cfg.reprovision_every))
+        } else {
+            None
+        };
+        let scheduler = Scheduler::new(warm_every as u64, cfg.reprovision_every as u64);
+        Ok(Daemon {
+            cfg,
+            fleet,
+            geoms,
+            cycle_fj,
+            tech,
+            router: Router::new(RoutePolicy::ShapeAffine),
+            explorer,
+            mix,
+            layer_of,
+            tracker,
+            scheduler,
+            gap_secs,
+            spill_macs,
+            queue_bound,
+            state: DaemonState::Running,
+            clock: 0.0,
+            started: false,
+            busy_until: vec![0.0; n],
+            inflight: (0..n).map(|_| VecDeque::new()).collect(),
+            outstanding: vec![0; n],
+            pending: (0..n).map(|_| Vec::new()).collect(),
+            accs: (0..n).map(|_| ArrayAcc::default()).collect(),
+            lat_secs: Vec::new(),
+            class_lat: ClassLatencies::new(),
+            accepted: 0,
+            completed: 0,
+            billed: 0,
+            rej_queue_full: 0,
+            rej_deadline: 0,
+            rej_draining: 0,
+            next_request: 0,
+            reprovisions: 0,
+            warmup_uj: 0.0,
+            drain_latency_us: None,
+            seen: Vec::new(),
+            seen_digests: HashSet::new(),
+            warmed_upto: 0,
+        })
+    }
+
+    /// Lifecycle state.
+    pub fn state(&self) -> DaemonState {
+        self.state
+    }
+
+    /// The configuration the daemon was built with.
+    pub fn config(&self) -> &DaemonConfig {
+        &self.cfg
+    }
+
+    /// Resolved per-array class-0 admission bound.
+    pub fn queue_bound(&self) -> usize {
+        self.queue_bound
+    }
+
+    // -- modeled clock ------------------------------------------------
+
+    /// Consume the next arrival instant: explicit `at` (clamped
+    /// monotone) or the previous arrival plus the fleet gap. Advances
+    /// the clock even when the subsequent admission check rejects —
+    /// a shed arrival still happened.
+    fn next_arrival(&mut self, at_us: Option<u64>) -> f64 {
+        let t = match at_us {
+            Some(us) => (us as f64 * 1e-6).max(self.clock),
+            None => {
+                if self.started {
+                    self.clock + self.gap_secs
+                } else {
+                    0.0
+                }
+            }
+        };
+        self.started = true;
+        self.clock = t;
+        t
+    }
+
+    /// Retire modeled completions up to instant `t`.
+    fn retire(&mut self, t: f64) {
+        for a in 0..self.inflight.len() {
+            while let Some(&(finish, macs)) = self.inflight[a].front() {
+                if finish <= t {
+                    self.outstanding[a] -= macs;
+                    self.inflight[a].pop_front();
+                    self.completed += 1;
+                } else {
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Per-class admission watermark: class `c` of `C` sees
+    /// `max(1, queue_bound·(C−c)/C)`.
+    fn watermark(&self, class: u8) -> usize {
+        let c_total = self.cfg.fleet.classes.max(1);
+        let c = (class as usize).min(c_total - 1);
+        ((self.queue_bound * (c_total - c)) / c_total).max(1)
+    }
+
+    // -- admission ----------------------------------------------------
+
+    /// Admit one request at `at_us` (or the default arrival law) under
+    /// `class` and `deadline_us` (0 = none). On success the request
+    /// sits in its array's pending batch — the caller decides when to
+    /// flush. On rejection the modeled clock has still advanced.
+    fn admit(
+        &mut self,
+        req: InferRequest,
+        class: u8,
+        deadline_us: u64,
+        at_us: Option<u64>,
+    ) -> Result<Admitted> {
+        if self.state != DaemonState::Running {
+            self.rej_draining += 1;
+            return Err(Error::Draining);
+        }
+        let t = self.next_arrival(at_us);
+        self.retire(t);
+
+        let shape = req.shape();
+        let n = self.fleet.arrays().len();
+        let mut costs = vec![0.0f64; n];
+        for (a, arr) in self.fleet.arrays().iter().enumerate() {
+            costs[a] = self.cycle_fj[a] * arr.spec.modeled_cycles(&shape) as f64;
+        }
+        let a = self.router.route(&costs, &self.outstanding, self.spill_macs);
+
+        let bound = self.watermark(class);
+        if self.inflight[a].len() >= bound {
+            self.rej_queue_full += 1;
+            return Err(Error::QueueFull {
+                array: a,
+                queued: self.inflight[a].len(),
+                bound,
+            });
+        }
+
+        let service = self.fleet.arrays()[a].spec.modeled_service_secs(&shape);
+        let start = if self.busy_until[a] > t {
+            self.busy_until[a]
+        } else {
+            t
+        };
+        let finish = start + service;
+        if deadline_us > 0 {
+            let projected_us = ((finish - t) * 1e6).round() as u64;
+            if projected_us > deadline_us {
+                self.rej_deadline += 1;
+                return Err(Error::DeadlineExceeded {
+                    request: req.id,
+                    deadline_us,
+                    projected_us,
+                });
+            }
+        }
+
+        // Commit.
+        self.busy_until[a] = finish;
+        let macs = req.macs();
+        self.inflight[a].push_back((finish, macs));
+        self.outstanding[a] += macs;
+        self.accepted += 1;
+        self.lat_secs.push(finish - t);
+        self.class_lat.record(class, finish - t);
+        self.accs[a].requests += 1;
+        if self.inflight[a].len() > self.accs[a].queue_peak {
+            self.accs[a].queue_peak = self.inflight[a].len();
+        }
+        let digest = operand_digest(req.a.rows, req.a.cols, &req.a.data, req.w.cols, &req.w.data);
+        if self.seen_digests.insert(digest) {
+            self.seen.push(req.clone());
+        }
+        if let (Some(tracker), Some(&li)) = (self.tracker.as_mut(), self.layer_of.get(&shape)) {
+            tracker.observe(li);
+        }
+        self.pending[a].push(req);
+        self.scheduler.note_admission();
+        Ok(Admitted {
+            array: a,
+            arrival: t,
+            finish,
+        })
+    }
+
+    /// Flush one array's pending batch through its engines; counts the
+    /// flushed requests as billed.
+    fn flush(&mut self, a: usize) -> Result<Vec<InferResponse>> {
+        let responses = flush_array(
+            &self.fleet.arrays()[a],
+            &self.geoms[a],
+            &self.tech,
+            &mut self.pending[a],
+            &mut self.accs[a],
+        )?;
+        self.billed += responses.len() as u64;
+        Ok(responses)
+    }
+
+    // -- background jobs ----------------------------------------------
+
+    /// Run every scheduler job that is due. Called at the end of each
+    /// admitting handler (so job effects land deterministically at
+    /// admission counts) and by the socket server's liveness thread
+    /// (where it is a no-op unless a job is already due).
+    pub fn run_due_jobs(&mut self) -> Result<()> {
+        if self.state != DaemonState::Running {
+            return Ok(());
+        }
+        for job in self.scheduler.due() {
+            match job {
+                JobKind::WarmCache => self.warm_job()?,
+                JobKind::Reprovision => self.reprovision_job()?,
+            }
+        }
+        Ok(())
+    }
+
+    /// Cache warmup: replay every unique operand seen since the last
+    /// warm onto every array, so cross-array routing of repeat traffic
+    /// hits the shared cache. Warmup energy is billed to `warmup_uj`,
+    /// never to a request.
+    fn warm_job(&mut self) -> Result<()> {
+        if self.warmed_upto >= self.seen.len() {
+            return Ok(());
+        }
+        let fresh: Vec<InferRequest> = self.seen[self.warmed_upto..].to_vec();
+        self.warmed_upto = self.seen.len();
+        let window = self.cfg.fleet.window.max(1);
+        for a in 0..self.fleet.arrays().len() {
+            let responses = self.fleet.arrays()[a].server.warm_cache(&fresh, window)?;
+            for r in &responses {
+                let spec = &self.fleet.arrays()[a].spec;
+                let p = power::evaluate(&spec.sa, &self.geoms[a], &self.tech, &r.sim);
+                self.warmup_uj += p.interconnect_mw() * r.sim.silicon_seconds(&spec.sa) * 1e3;
+            }
+        }
+        Ok(())
+    }
+
+    /// Drift re-provisioning: when the observed mix diverges from the
+    /// provisioning-time uniform mix past the threshold, re-run the
+    /// weighted sweep (closed-form over the explorer's memoized
+    /// profiles), cut every slot over to its re-selected array behind a
+    /// fresh server on the shared cache, and warm the promoted servers
+    /// with everything seen — the PR 8 cutover, now under live load.
+    /// Backlog (busy horizons, in-flight work) is inherited, so no
+    /// admitted request is lost or re-billed at cutover.
+    fn reprovision_job(&mut self) -> Result<()> {
+        let weights = match self.tracker.as_ref() {
+            Some(t) if t.warm() && t.divergence() >= self.cfg.divergence_threshold => t.weights(),
+            _ => return Ok(()),
+        };
+        // Bill everything admitted so far on the old geometry.
+        for a in 0..self.fleet.arrays().len() {
+            self.flush(a)?;
+        }
+        let out = self.explorer.run_weighted(&weights)?;
+        let n = self.fleet.arrays().len();
+        let new_specs = select_frontier(&out, n)?;
+        let fcfg = &self.cfg.fleet;
+        let window = fcfg.window.max(1);
+        for (a, sp) in new_specs.iter().enumerate() {
+            let server = Server::with_cache(
+                ServeConfig {
+                    sa: sp.sa.clone(),
+                    workers: fcfg.workers,
+                    cache_capacity: fcfg.cache_capacity,
+                    window: fcfg.window,
+                    engine: sp.engine,
+                },
+                self.fleet.result_cache(),
+            );
+            let geom = sp.geometry()?;
+            let responses = server.warm_cache(&self.seen, window)?;
+            for r in &responses {
+                let p = power::evaluate(&sp.sa, &geom, &self.tech, &r.sim);
+                self.warmup_uj += p.interconnect_mw() * r.sim.silicon_seconds(&sp.sa) * 1e3;
+            }
+            let arrays = self.fleet.arrays_mut();
+            arrays[a].spec = sp.clone();
+            arrays[a].server = server;
+            self.geoms[a] = geom;
+            self.cycle_fj[a] = sp.cycle_cost_fj(&self.tech);
+        }
+        self.warmed_upto = self.seen.len();
+        self.reprovisions += 1;
+        Ok(())
+    }
+
+    // -- handlers -----------------------------------------------------
+
+    /// Dispatch one parsed request to its handler.
+    pub fn handle(&mut self, req: Request) -> Result<Json> {
+        match req {
+            Request::SubmitGemm {
+                m,
+                k,
+                n,
+                seed,
+                class,
+                deadline_us,
+                at_us,
+            } => self.submit_gemm(m, k, n, seed, class, deadline_us, at_us),
+            Request::SubmitTrace {
+                requests,
+                unique_inputs,
+                seed,
+                deadline_us,
+            } => self.submit_trace(requests, unique_inputs, seed, deadline_us),
+            Request::FleetStatus => Ok(self.fleet_status()),
+            Request::Drain => self.drain(),
+            Request::Shutdown => self.shutdown(),
+        }
+    }
+
+    /// `submit_gemm`: admit one seeded GEMM and serve it synchronously.
+    fn submit_gemm(
+        &mut self,
+        m: usize,
+        k: usize,
+        n: usize,
+        seed: u64,
+        class: u8,
+        deadline_us: Option<u64>,
+        at_us: Option<u64>,
+    ) -> Result<Json> {
+        let classes = self.cfg.fleet.classes.max(1);
+        if class as usize >= classes {
+            return Err(Error::protocol(format!(
+                "class {class} out of range ({classes} classes)"
+            )));
+        }
+        let mut rng = Rng::new(seed);
+        let mut mat = |r: usize, c: usize| {
+            Matrix::from_vec(
+                r,
+                c,
+                (0..r * c).map(|_| rng.int_range(-100, 100) as i32).collect(),
+            )
+            .expect("sized correctly")
+        };
+        let a_mat = mat(m, k);
+        let w_mat = mat(k, n);
+        let id = self.next_request;
+        self.next_request += 1;
+        let req = InferRequest {
+            id,
+            name: format!("gemm{m}x{k}x{n}:s{seed}"),
+            a: Arc::new(a_mat),
+            w: Arc::new(w_mat),
+        };
+        let deadline = deadline_us.unwrap_or(self.cfg.deadline_us);
+        let adm = self.admit(req, class, deadline, at_us)?;
+        let responses = self.flush(adm.array)?;
+        let r = responses
+            .iter()
+            .find(|r| r.id == id)
+            .ok_or_else(|| Error::Coordinator("flushed batch lost a response".into()))?;
+        let spec = &self.fleet.arrays()[adm.array].spec;
+        let p = power::evaluate(&spec.sa, &self.geoms[adm.array], &self.tech, &r.sim);
+        let secs = r.sim.silicon_seconds(&spec.sa);
+        let result = obj(vec![
+            ("request", Json::Num(id as f64)),
+            ("array", Json::Num(adm.array as f64)),
+            ("array_label", Json::Str(spec.label())),
+            ("class", Json::Num(class as f64)),
+            ("arrival_us", Json::Num((adm.arrival * 1e6).round())),
+            ("finish_us", Json::Num((adm.finish * 1e6).round())),
+            (
+                "latency_us",
+                Json::Num(((adm.finish - adm.arrival) * 1e6).round()),
+            ),
+            ("macs", Json::Num(r.sim.macs as f64)),
+            ("sim_cycles", Json::Num(r.sim.cycles as f64)),
+            ("cache_hit", Json::Bool(r.cache_hit)),
+            ("interconnect_uj", Json::Num(p.interconnect_mw() * secs * 1e3)),
+            ("total_uj", Json::Num(p.total_mw() * secs * 1e3)),
+        ]);
+        self.run_due_jobs()?;
+        Ok(result)
+    }
+
+    /// `submit_trace`: admit a seeded scenario trace through the
+    /// admission window; per-request rejections are counted, not
+    /// errors.
+    fn submit_trace(
+        &mut self,
+        requests: Option<usize>,
+        unique_inputs: Option<usize>,
+        seed: Option<u64>,
+        deadline_us: Option<u64>,
+    ) -> Result<Json> {
+        if self.state != DaemonState::Running {
+            self.rej_draining += 1;
+            return Err(Error::Draining);
+        }
+        let fcfg = &self.cfg.fleet;
+        let classes = fcfg.classes.max(1);
+        let scn = ScenarioConfig {
+            seed: seed.unwrap_or(fcfg.seed),
+            requests: requests.unwrap_or(fcfg.requests),
+            unique_inputs: unique_inputs.unwrap_or(fcfg.unique_inputs),
+            classes: fcfg.classes,
+        };
+        let trace = build_requests(&scn, &self.mix)?;
+        let deadline = deadline_us.unwrap_or(self.cfg.deadline_us);
+        let window = fcfg.window.max(1);
+
+        let uj_before: f64 = self.accs.iter().map(|a| a.interconnect_uj).sum();
+        let total_before: f64 = self.accs.iter().map(|a| a.total_uj).sum();
+        let mut trace_lat = ClassLatencies::new();
+        let (mut admitted, mut shed_queue, mut shed_deadline) = (0u64, 0u64, 0u64);
+        let submitted = trace.len() as u64;
+        for (i, mut req) in trace.into_iter().enumerate() {
+            req.id = self.next_request;
+            self.next_request += 1;
+            let class = (i % classes) as u8;
+            match self.admit(req, class, deadline, None) {
+                Ok(adm) => {
+                    admitted += 1;
+                    trace_lat.record(class, adm.finish - adm.arrival);
+                    if self.pending[adm.array].len() >= window {
+                        self.flush(adm.array)?;
+                    }
+                }
+                Err(Error::QueueFull { .. }) => shed_queue += 1,
+                Err(Error::DeadlineExceeded { .. }) => shed_deadline += 1,
+                Err(e) => return Err(e),
+            }
+        }
+        for a in 0..self.fleet.arrays().len() {
+            self.flush(a)?;
+        }
+        let uj_after: f64 = self.accs.iter().map(|a| a.interconnect_uj).sum();
+        let total_after: f64 = self.accs.iter().map(|a| a.total_uj).sum();
+        let per_class = Json::Arr(trace_lat.snapshot().iter().map(class_latency_json).collect());
+        let result = obj(vec![
+            ("submitted", Json::Num(submitted as f64)),
+            ("admitted", Json::Num(admitted as f64)),
+            ("rejected_queue_full", Json::Num(shed_queue as f64)),
+            ("rejected_deadline", Json::Num(shed_deadline as f64)),
+            ("clock_us", Json::Num((self.clock * 1e6).round())),
+            ("interconnect_uj", Json::Num(uj_after - uj_before)),
+            ("total_uj", Json::Num(total_after - total_before)),
+            ("per_class", per_class),
+        ]);
+        self.run_due_jobs()?;
+        Ok(result)
+    }
+
+    /// `fleet_status`: read-only snapshot (does not advance the clock).
+    fn fleet_status(&self) -> Json {
+        let (mut hits, mut misses) = (0u64, 0u64);
+        for arr in self.fleet.arrays() {
+            let s = arr.server.cache_stats();
+            hits += s.hits;
+            misses += s.misses;
+        }
+        let len = self.fleet.result_cache().lock().expect("cache poisoned").len();
+        let arrays = Json::Arr(
+            self.fleet
+                .arrays()
+                .iter()
+                .enumerate()
+                .map(|(a, arr)| {
+                    obj(vec![
+                        ("label", Json::Str(arr.spec.label())),
+                        ("rows", Json::Num(arr.spec.sa.rows as f64)),
+                        ("cols", Json::Num(arr.spec.sa.cols as f64)),
+                        ("dataflow", Json::Str(arr.spec.engine.name().to_string())),
+                        ("requests", Json::Num(self.accs[a].requests as f64)),
+                        ("inflight", Json::Num(self.inflight[a].len() as f64)),
+                        (
+                            "busy_until_us",
+                            Json::Num((self.busy_until[a] * 1e6).round()),
+                        ),
+                    ])
+                })
+                .collect(),
+        );
+        obj(vec![
+            ("state", Json::Str(self.state.name().to_string())),
+            ("classes", Json::Num(self.cfg.fleet.classes as f64)),
+            ("clock_us", Json::Num((self.clock * 1e6).round())),
+            ("accepted", Json::Num(self.accepted as f64)),
+            ("completed", Json::Num(self.completed as f64)),
+            ("billed", Json::Num(self.billed as f64)),
+            (
+                "inflight",
+                Json::Num(self.inflight.iter().map(|q| q.len()).sum::<usize>() as f64),
+            ),
+            ("queue_bound", Json::Num(self.queue_bound as f64)),
+            ("reprovisions", Json::Num(self.reprovisions as f64)),
+            (
+                "rejected",
+                obj(vec![
+                    ("queue_full", Json::Num(self.rej_queue_full as f64)),
+                    ("deadline_exceeded", Json::Num(self.rej_deadline as f64)),
+                    ("draining", Json::Num(self.rej_draining as f64)),
+                ]),
+            ),
+            (
+                "cache",
+                obj(vec![
+                    ("hits", Json::Num(hits as f64)),
+                    ("misses", Json::Num(misses as f64)),
+                    ("len", Json::Num(len as f64)),
+                ]),
+            ),
+            ("arrays", arrays),
+        ])
+    }
+
+    /// Terminal counters shared by `drain` and `shutdown` replies.
+    fn terminal_result(&self) -> Json {
+        obj(vec![
+            ("state", Json::Str(self.state.name().to_string())),
+            ("accepted", Json::Num(self.accepted as f64)),
+            ("completed", Json::Num(self.completed as f64)),
+            ("billed", Json::Num(self.billed as f64)),
+            (
+                "drain_latency_us",
+                Json::Num(self.drain_latency_us.unwrap_or(0) as f64),
+            ),
+            (
+                "interconnect_uj",
+                Json::Num(self.accs.iter().map(|a| a.interconnect_uj).sum()),
+            ),
+            (
+                "total_uj",
+                Json::Num(self.accs.iter().map(|a| a.total_uj).sum()),
+            ),
+        ])
+    }
+
+    /// `drain`: stop accepting, flush every pending batch, retire all
+    /// in-flight work at its modeled finish. Idempotent.
+    fn drain(&mut self) -> Result<Json> {
+        if self.drain_latency_us.is_none() {
+            let drain_instant = self.clock;
+            for a in 0..self.fleet.arrays().len() {
+                self.flush(a)?;
+            }
+            let horizon = self
+                .busy_until
+                .iter()
+                .fold(drain_instant, |m, &b| if b > m { b } else { m });
+            self.clock = horizon;
+            self.retire(horizon);
+            self.drain_latency_us = Some(((horizon - drain_instant) * 1e6).round() as u64);
+            if self.state == DaemonState::Running {
+                self.state = DaemonState::Drained;
+            }
+        }
+        Ok(self.terminal_result())
+    }
+
+    /// `shutdown`: drain (if still running) and go terminal.
+    fn shutdown(&mut self) -> Result<Json> {
+        self.drain()?;
+        self.state = DaemonState::Shutdown;
+        Ok(self.terminal_result())
+    }
+
+    // -- summary ------------------------------------------------------
+
+    /// `DAEMON_summary.json`: the daemon's full deterministic account —
+    /// a pure function of the configuration and the request script
+    /// (wall-clock never serialized), so workers 1 and 4 emit
+    /// byte-identical documents.
+    pub fn summary_json(&self) -> Json {
+        let fcfg = &self.cfg.fleet;
+        let sorted = sorted_micros(self.lat_secs.iter().copied());
+        let per_array = Json::Arr(
+            self.fleet
+                .arrays()
+                .iter()
+                .zip(&self.accs)
+                .map(|(arr, acc)| {
+                    obj(vec![
+                        ("label", Json::Str(arr.spec.label())),
+                        ("rows", Json::Num(arr.spec.sa.rows as f64)),
+                        ("cols", Json::Num(arr.spec.sa.cols as f64)),
+                        ("dataflow", Json::Str(arr.spec.engine.name().to_string())),
+                        ("requests", Json::Num(acc.requests as f64)),
+                        ("macs", Json::Num(acc.macs as f64)),
+                        ("sim_cycles", Json::Num(acc.sim_cycles as f64)),
+                        ("queue_peak", Json::Num(acc.queue_peak as f64)),
+                        ("interconnect_uj", Json::Num(acc.interconnect_uj)),
+                        ("total_uj", Json::Num(acc.total_uj)),
+                    ])
+                })
+                .collect(),
+        );
+        obj(vec![
+            (
+                "config",
+                obj(vec![
+                    ("pes", Json::Num(fcfg.pe_budget as f64)),
+                    ("arrays", Json::Num(fcfg.arrays as f64)),
+                    ("classes", Json::Num(fcfg.classes as f64)),
+                    ("window", Json::Num(fcfg.window as f64)),
+                    ("seed", Json::Num(fcfg.seed as f64)),
+                    ("workload", Json::Str(fcfg.workload.name().to_string())),
+                    ("queue_bound", Json::Num(self.queue_bound as f64)),
+                    ("deadline_us", Json::Num(self.cfg.deadline_us as f64)),
+                    (
+                        "reprovision_every",
+                        Json::Num(self.cfg.reprovision_every as f64),
+                    ),
+                ]),
+            ),
+            ("state", Json::Str(self.state.name().to_string())),
+            ("clock_us", Json::Num((self.clock * 1e6).round())),
+            ("accepted", Json::Num(self.accepted as f64)),
+            ("completed", Json::Num(self.completed as f64)),
+            ("billed", Json::Num(self.billed as f64)),
+            (
+                "rejected",
+                obj(vec![
+                    ("queue_full", Json::Num(self.rej_queue_full as f64)),
+                    ("deadline_exceeded", Json::Num(self.rej_deadline as f64)),
+                    ("draining", Json::Num(self.rej_draining as f64)),
+                ]),
+            ),
+            ("reprovisions", Json::Num(self.reprovisions as f64)),
+            ("warmup_uj", Json::Num(self.warmup_uj)),
+            (
+                "drain_latency_us",
+                Json::Num(self.drain_latency_us.unwrap_or(0) as f64),
+            ),
+            ("p50_us", Json::Num(percentile_micros(&sorted, 0.50) as f64)),
+            ("p99_us", Json::Num(percentile_micros(&sorted, 0.99) as f64)),
+            ("p999_us", Json::Num(percentile_micros(&sorted, 0.999) as f64)),
+            (
+                "per_class",
+                Json::Arr(self.class_lat.snapshot().iter().map(class_latency_json).collect()),
+            ),
+            (
+                "interconnect_uj",
+                Json::Num(self.accs.iter().map(|a| a.interconnect_uj).sum()),
+            ),
+            (
+                "total_uj",
+                Json::Num(self.accs.iter().map(|a| a.total_uj).sum()),
+            ),
+            ("per_array", per_array),
+        ])
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::explore::WorkloadKind;
+
+    pub(crate) fn tiny_cfg() -> DaemonConfig {
+        DaemonConfig {
+            fleet: FleetConfig {
+                pe_budget: 16,
+                arrays: 2,
+                workload: WorkloadKind::Synth,
+                max_layers: 2,
+                requests: 8,
+                unique_inputs: 2,
+                seed: 11,
+                window: 3,
+                cache_capacity: 16,
+                workers: 1,
+                ..FleetConfig::default()
+            },
+            ..DaemonConfig::default()
+        }
+    }
+
+    #[test]
+    fn watermarks_shed_lower_classes_first() {
+        let mut cfg = tiny_cfg();
+        cfg.fleet.classes = 4;
+        cfg.queue_bound = 8;
+        let d = Daemon::new(cfg).unwrap();
+        // class 0 sees the full bound, the lowest class a quarter.
+        assert_eq!(d.watermark(0), 8);
+        assert_eq!(d.watermark(1), 6);
+        assert_eq!(d.watermark(2), 4);
+        assert_eq!(d.watermark(3), 2);
+    }
+
+    #[test]
+    fn watermark_never_reaches_zero() {
+        let mut cfg = tiny_cfg();
+        cfg.fleet.classes = 8;
+        cfg.queue_bound = 2;
+        let d = Daemon::new(cfg).unwrap();
+        for c in 0..8 {
+            assert!(d.watermark(c) >= 1, "class {c} starved outright");
+        }
+    }
+
+    #[test]
+    fn queue_bound_zero_selects_four_windows() {
+        let d = Daemon::new(tiny_cfg()).unwrap();
+        assert_eq!(d.queue_bound(), 4 * 3);
+    }
+
+    #[test]
+    fn validation_rejects_bad_threshold() {
+        let mut cfg = tiny_cfg();
+        cfg.reprovision_every = 8;
+        cfg.divergence_threshold = 0.0;
+        assert!(Daemon::new(cfg).is_err());
+        let mut cfg = tiny_cfg();
+        cfg.reprovision_every = 8;
+        cfg.divergence_threshold = 1.5;
+        assert!(Daemon::new(cfg).is_err());
+    }
+
+    #[test]
+    fn default_arrivals_replay_the_fixed_gap_law() {
+        let mut d = Daemon::new(tiny_cfg()).unwrap();
+        let gap = d.gap_secs;
+        assert_eq!(d.next_arrival(None), 0.0);
+        let t1 = d.next_arrival(None);
+        assert!((t1 - gap).abs() < 1e-12);
+        let t2 = d.next_arrival(None);
+        assert!((t2 - 2.0 * gap).abs() < 1e-12);
+        // Explicit instants are clamped monotone.
+        let t3 = d.next_arrival(Some(0));
+        assert_eq!(t3, t2);
+    }
+
+    #[test]
+    fn drain_on_a_fresh_daemon_is_a_zero_latency_noop() {
+        let mut d = Daemon::new(tiny_cfg()).unwrap();
+        let r = d.drain().unwrap();
+        assert_eq!(r.req("state").unwrap().as_str().unwrap(), "drained");
+        assert_eq!(r.req("drain_latency_us").unwrap().as_u64().unwrap(), 0);
+        assert_eq!(r.req("accepted").unwrap().as_u64().unwrap(), 0);
+        // Idempotent, and shutdown stays terminal.
+        let r2 = d.drain().unwrap();
+        assert_eq!(r2.req("state").unwrap().as_str().unwrap(), "drained");
+        let r3 = d.shutdown().unwrap();
+        assert_eq!(r3.req("state").unwrap().as_str().unwrap(), "shutdown");
+        assert_eq!(d.state(), DaemonState::Shutdown);
+    }
+}

@@ -1,0 +1,276 @@
+//! Wire protocol: line-delimited JSON requests/responses.
+//!
+//! `docs/protocol.md` is the normative description; the unit tests
+//! below and `rust/tests/daemon_determinism.rs` hold this module to
+//! it. Parsing is strict like the CLI flag parser: an unknown method,
+//! an unknown parameter key or a mistyped value is a
+//! [`Error::ProtocolViolation`], never a silent default.
+
+use crate::error::{Error, Result};
+use crate::util::json::{obj, Json};
+
+use super::MAX_GEMM_DIM;
+
+/// A parsed protocol request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Request {
+    /// Admit one seeded GEMM and serve it synchronously.
+    SubmitGemm {
+        /// Rows of the activation operand.
+        m: usize,
+        /// Inner dimension.
+        k: usize,
+        /// Columns of the weight operand.
+        n: usize,
+        /// Operand generator seed.
+        seed: u64,
+        /// Priority class (`< classes`).
+        class: u8,
+        /// Per-request deadline override (µs of modeled sojourn).
+        deadline_us: Option<u64>,
+        /// Explicit modeled arrival instant (µs).
+        at_us: Option<u64>,
+    },
+    /// Admit a seeded scenario trace through the admission window.
+    SubmitTrace {
+        /// Trace length (default: fleet config).
+        requests: Option<usize>,
+        /// Operand variants per layer (default: fleet config).
+        unique_inputs: Option<usize>,
+        /// Scenario seed (default: fleet config).
+        seed: Option<u64>,
+        /// Deadline applied to every request of the trace.
+        deadline_us: Option<u64>,
+    },
+    /// Read-only snapshot.
+    FleetStatus,
+    /// Graceful drain.
+    Drain,
+    /// Drain (if running) and go terminal.
+    Shutdown,
+}
+
+/// Reject unknown keys in `params` — the strictness that keeps a typo
+/// from degrading into a default, mirrored from the CLI flag parser.
+fn check_keys(params: &Json, allowed: &[&str]) -> Result<()> {
+    if let Json::Obj(map) = params {
+        for key in map.keys() {
+            if !allowed.contains(&key.as_str()) {
+                return Err(Error::protocol(format!("unknown parameter `{key}`")));
+            }
+        }
+        Ok(())
+    } else {
+        Err(Error::protocol("params must be an object"))
+    }
+}
+
+/// Optional non-negative integer parameter.
+fn opt_u64(params: &Json, key: &str) -> Result<Option<u64>> {
+    match params.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_u64()
+            .map(Some)
+            .map_err(|_| Error::protocol(format!("parameter `{key}` must be a non-negative integer"))),
+    }
+}
+
+/// Required GEMM dimension: an integer in `1 ..= MAX_GEMM_DIM`.
+fn dim(params: &Json, key: &str) -> Result<usize> {
+    let v = opt_u64(params, key)?
+        .ok_or_else(|| Error::protocol(format!("missing parameter `{key}`")))?;
+    if v == 0 || v as usize > MAX_GEMM_DIM {
+        return Err(Error::protocol(format!(
+            "parameter `{key}` must be in 1..={MAX_GEMM_DIM} (got {v})"
+        )));
+    }
+    Ok(v as usize)
+}
+
+/// Parse one request line. Returns the echoed `id` (the request's `id`
+/// field, [`Json::Null`] when absent or unparseable) alongside the
+/// parse outcome, so the caller can always address its response.
+pub fn parse_line(line: &str) -> (Json, Result<Request>) {
+    let doc = match Json::parse(line) {
+        Ok(d) => d,
+        Err(_) => return (Json::Null, Err(Error::protocol("invalid json"))),
+    };
+    if !matches!(doc, Json::Obj(_)) {
+        return (Json::Null, Err(Error::protocol("request must be an object")));
+    }
+    let id = doc.get("id").cloned().unwrap_or(Json::Null);
+    if !matches!(id, Json::Null | Json::Num(_)) {
+        return (
+            Json::Null,
+            Err(Error::protocol("field `id` must be a number")),
+        );
+    }
+    (id.clone(), parse_request(&doc))
+}
+
+fn parse_request(doc: &Json) -> Result<Request> {
+    if let Json::Obj(map) = doc {
+        for key in map.keys() {
+            if !["id", "method", "params"].contains(&key.as_str()) {
+                return Err(Error::protocol(format!("unknown field `{key}`")));
+            }
+        }
+    }
+    let method = doc
+        .get("method")
+        .ok_or_else(|| Error::protocol("missing field `method`"))?
+        .as_str()
+        .map_err(|_| Error::protocol("field `method` must be a string"))?
+        .to_string();
+    let empty = Json::Obj(Default::default());
+    let params = doc.get("params").unwrap_or(&empty);
+
+    match method.as_str() {
+        "submit_gemm" => {
+            check_keys(params, &["m", "k", "n", "seed", "class", "deadline_us", "at_us"])?;
+            let class = opt_u64(params, "class")?.unwrap_or(0);
+            if class > u8::MAX as u64 {
+                return Err(Error::protocol(format!(
+                    "parameter `class` must be < 256 (got {class})"
+                )));
+            }
+            Ok(Request::SubmitGemm {
+                m: dim(params, "m")?,
+                k: dim(params, "k")?,
+                n: dim(params, "n")?,
+                seed: opt_u64(params, "seed")?.unwrap_or(1),
+                class: class as u8,
+                deadline_us: opt_u64(params, "deadline_us")?,
+                at_us: opt_u64(params, "at_us")?,
+            })
+        }
+        "submit_trace" => {
+            check_keys(params, &["requests", "unique_inputs", "seed", "deadline_us"])?;
+            Ok(Request::SubmitTrace {
+                requests: opt_u64(params, "requests")?.map(|v| v as usize),
+                unique_inputs: opt_u64(params, "unique_inputs")?.map(|v| v as usize),
+                seed: opt_u64(params, "seed")?,
+                deadline_us: opt_u64(params, "deadline_us")?,
+            })
+        }
+        "fleet_status" => {
+            check_keys(params, &[])?;
+            Ok(Request::FleetStatus)
+        }
+        "drain" => {
+            check_keys(params, &[])?;
+            Ok(Request::Drain)
+        }
+        "shutdown" => {
+            check_keys(params, &[])?;
+            Ok(Request::Shutdown)
+        }
+        other => Err(Error::protocol(format!("unknown method `{other}`"))),
+    }
+}
+
+/// Serialize a success response: `{"id": ..., "result": ...}` with
+/// canonically ordered keys (no trailing newline).
+pub fn render_ok(id: &Json, result: Json) -> String {
+    obj(vec![("id", id.clone()), ("result", result)]).to_string()
+}
+
+/// Serialize an error response: the stable wire code plus the
+/// human-readable `Display` message.
+pub fn render_err(id: &Json, err: &Error) -> String {
+    obj(vec![
+        ("id", id.clone()),
+        (
+            "error",
+            obj(vec![
+                ("code", Json::Str(err.wire_code().to_string())),
+                ("message", Json::Str(err.to_string())),
+            ]),
+        ),
+    ])
+    .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_ok(line: &str) -> Request {
+        let (_, r) = parse_line(line);
+        r.unwrap()
+    }
+
+    fn parse_code(line: &str) -> String {
+        let (id, r) = parse_line(line);
+        render_err(&id, &r.unwrap_err())
+    }
+
+    #[test]
+    fn submit_gemm_parses_with_defaults() {
+        let r = parse_ok(r#"{"id": 1, "method": "submit_gemm", "params": {"m": 8, "k": 4, "n": 2}}"#);
+        assert_eq!(
+            r,
+            Request::SubmitGemm {
+                m: 8,
+                k: 4,
+                n: 2,
+                seed: 1,
+                class: 0,
+                deadline_us: None,
+                at_us: None,
+            }
+        );
+    }
+
+    #[test]
+    fn bare_methods_parse_without_params() {
+        assert_eq!(parse_ok(r#"{"method": "fleet_status"}"#), Request::FleetStatus);
+        assert_eq!(parse_ok(r#"{"method": "drain", "params": {}}"#), Request::Drain);
+        assert_eq!(parse_ok(r#"{"method": "shutdown"}"#), Request::Shutdown);
+    }
+
+    #[test]
+    fn strictness_rejects_unknowns_and_bad_types() {
+        for (line, needle) in [
+            ("not json", "invalid json"),
+            (r#"[1, 2]"#, "must be an object"),
+            (r#"{"method": "nope"}"#, "unknown method"),
+            (r#"{"method": "submit_gemm", "params": {"m": 1, "k": 1, "n": 1, "mm": 2}}"#, "unknown parameter `mm`"),
+            (r#"{"method": "drain", "params": {"force": true}}"#, "unknown parameter `force`"),
+            (r#"{"method": "drain", "extra": 1}"#, "unknown field `extra`"),
+            (r#"{"method": "submit_gemm", "params": {"k": 1, "n": 1}}"#, "missing parameter `m`"),
+            (r#"{"method": "submit_gemm", "params": {"m": 0, "k": 1, "n": 1}}"#, "must be in 1..="),
+            (r#"{"method": "submit_gemm", "params": {"m": 1.5, "k": 1, "n": 1}}"#, "non-negative integer"),
+            (r#"{"method": "submit_gemm", "params": {"m": 1, "k": 1, "n": 1, "class": 300}}"#, "must be < 256"),
+            (r#"{"id": "abc", "method": "drain"}"#, "must be a number"),
+            (r#"{"params": {}}"#, "missing field `method`"),
+        ] {
+            let rendered = parse_code(line);
+            assert!(
+                rendered.contains(r#""code":"protocol_violation""#),
+                "{line} → {rendered}"
+            );
+            assert!(rendered.contains(needle), "{line} → {rendered}");
+        }
+    }
+
+    #[test]
+    fn responses_serialize_with_canonical_key_order() {
+        let ok = render_ok(&Json::Num(7.0), obj(vec![("b", Json::Num(2.0)), ("a", Json::Num(1.0))]));
+        assert_eq!(ok, r#"{"id":7,"result":{"a":1,"b":2}}"#);
+        let err = render_err(&Json::Null, &Error::Draining);
+        assert_eq!(
+            err,
+            r#"{"error":{"code":"draining","message":"draining: daemon accepts no new work"},"id":null}"#
+        );
+    }
+
+    #[test]
+    fn id_is_echoed_verbatim_and_null_when_absent() {
+        let (id, _) = parse_line(r#"{"id": 42, "method": "drain"}"#);
+        assert_eq!(id, Json::Num(42.0));
+        let (id, _) = parse_line(r#"{"method": "drain"}"#);
+        assert_eq!(id, Json::Null);
+    }
+}

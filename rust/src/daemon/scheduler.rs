@@ -1,0 +1,129 @@
+//! Deterministic background-job scheduler.
+//!
+//! Jobs are due at *admission counts*, never wall-clock instants: the
+//! daemon calls [`Scheduler::note_admission`] on every committed
+//! admission and runs whatever [`Scheduler::due`] returns at the end of
+//! the same request — so job effects (cache warmup energy, a
+//! re-provision cutover) land at the same point of every replay of a
+//! request script, at any worker count. The socket server's scheduler
+//! thread calls the same `due` path and is therefore a strict no-op
+//! unless a job is *already* due while the connection idles — pure
+//! liveness, never a new decision.
+
+/// The background jobs the daemon schedules.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum JobKind {
+    /// Replay unseen unique operands onto every array's cache.
+    WarmCache,
+    /// Drift check + weighted re-provision cutover.
+    Reprovision,
+}
+
+struct Job {
+    kind: JobKind,
+    every: u64,
+    next_due: u64,
+}
+
+/// Admission-count job queue.
+pub(crate) struct Scheduler {
+    jobs: Vec<Job>,
+    admissions: u64,
+}
+
+impl Scheduler {
+    /// Jobs with their periods in admissions; `0` disables a job.
+    /// Warmup runs before re-provision when both are due at the same
+    /// admission (a fixed order keeps the replay deterministic).
+    pub(crate) fn new(warm_every: u64, reprovision_every: u64) -> Self {
+        let mut jobs = Vec::new();
+        if warm_every > 0 {
+            jobs.push(Job {
+                kind: JobKind::WarmCache,
+                every: warm_every,
+                next_due: warm_every,
+            });
+        }
+        if reprovision_every > 0 {
+            jobs.push(Job {
+                kind: JobKind::Reprovision,
+                every: reprovision_every,
+                next_due: reprovision_every,
+            });
+        }
+        Scheduler { jobs, admissions: 0 }
+    }
+
+    /// Count one committed admission.
+    pub(crate) fn note_admission(&mut self) {
+        self.admissions += 1;
+    }
+
+    /// Pop every job whose due point has been reached and advance it to
+    /// its next period. Idempotent between admissions: a second call at
+    /// the same count returns nothing.
+    pub(crate) fn due(&mut self) -> Vec<JobKind> {
+        let mut out = Vec::new();
+        for job in &mut self.jobs {
+            if self.admissions >= job.next_due {
+                out.push(job.kind);
+                // Skip periods the admission counter already passed, so
+                // a burst cannot queue the same job twice.
+                while job.next_due <= self.admissions {
+                    job.next_due += job.every;
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jobs_fire_at_their_periods_and_only_once() {
+        let mut s = Scheduler::new(3, 5);
+        let mut fired = Vec::new();
+        for i in 1..=10u64 {
+            s.note_admission();
+            for j in s.due() {
+                fired.push((i, j));
+            }
+            // Idempotent at the same admission count.
+            assert!(s.due().is_empty());
+        }
+        assert_eq!(
+            fired,
+            vec![
+                (3, JobKind::WarmCache),
+                (5, JobKind::Reprovision),
+                (6, JobKind::WarmCache),
+                (9, JobKind::WarmCache),
+                (10, JobKind::Reprovision),
+            ]
+        );
+    }
+
+    #[test]
+    fn zero_period_disables_a_job() {
+        let mut s = Scheduler::new(0, 0);
+        for _ in 0..20 {
+            s.note_admission();
+            assert!(s.due().is_empty());
+        }
+    }
+
+    #[test]
+    fn a_burst_skips_missed_periods_instead_of_queueing() {
+        let mut s = Scheduler::new(2, 0);
+        for _ in 0..7 {
+            s.note_admission();
+        }
+        // One firing despite three elapsed periods, next due at 8.
+        assert_eq!(s.due(), vec![JobKind::WarmCache]);
+        s.note_admission();
+        assert_eq!(s.due(), vec![JobKind::WarmCache]);
+    }
+}

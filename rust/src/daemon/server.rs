@@ -1,0 +1,203 @@
+//! Unix-domain-socket front end for the daemon.
+//!
+//! One connection at a time, one request line per response line — the
+//! same parse/handle/render path as [`crate::daemon::Harness`], so the
+//! socket adds liveness and remote access but no behavior: a request
+//! script produces the byte-identical transcript either way.
+
+use std::fs;
+use std::io::{BufRead, BufReader, Write};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::report::daemon_markdown;
+
+use super::protocol::{parse_line, render_err, render_ok};
+use super::{Daemon, DaemonConfig, DaemonState};
+
+/// How often the liveness thread checks for already-due background
+/// jobs while every connection idles. Pure liveness: job due points are
+/// admission counts, so the period cannot affect any modeled result.
+const SCHEDULER_TICK: Duration = Duration::from_millis(25);
+
+/// Handle one request line against the shared daemon; returns the
+/// response line (no trailing newline) and whether the daemon went
+/// terminal handling it.
+fn handle_shared(daemon: &Mutex<Daemon>, line: &str) -> (String, bool) {
+    let (id, parsed) = parse_line(line);
+    let mut d = daemon.lock().expect("daemon poisoned");
+    let outcome = parsed.and_then(|req| d.handle(req));
+    let response = match outcome {
+        Ok(result) => render_ok(&id, result),
+        Err(e) => render_err(&id, &e),
+    };
+    (response, d.state() == DaemonState::Shutdown)
+}
+
+/// Serve `cfg` on `socket` until a `shutdown` request, then write the
+/// final `DAEMON_summary.json` / markdown report (when paths are given)
+/// and remove the socket file.
+pub fn run_server(
+    cfg: DaemonConfig,
+    socket: &Path,
+    json_path: Option<&Path>,
+    md_path: Option<&Path>,
+) -> Result<()> {
+    let daemon = Arc::new(Mutex::new(Daemon::new(cfg)?));
+    if socket.exists() {
+        fs::remove_file(socket)?;
+    }
+    if let Some(dir) = socket.parent() {
+        if !dir.as_os_str().is_empty() {
+            fs::create_dir_all(dir)?;
+        }
+    }
+    let listener = UnixListener::bind(socket)?;
+    eprintln!("daemon: listening on {}", socket.display());
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let ticker = {
+        let daemon = Arc::clone(&daemon);
+        let stop = Arc::clone(&stop);
+        thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                thread::sleep(SCHEDULER_TICK);
+                let mut d = daemon.lock().expect("daemon poisoned");
+                if d.state() == DaemonState::Running {
+                    // Errors surface on the next request; the liveness
+                    // tick has no one to answer to.
+                    let _ = d.run_due_jobs();
+                }
+            }
+        })
+    };
+
+    let mut terminal = false;
+    while !terminal {
+        let (stream, _) = listener.accept()?;
+        terminal = serve_connection(&daemon, stream)?;
+    }
+
+    stop.store(true, Ordering::Relaxed);
+    let _ = ticker.join();
+    let d = daemon.lock().expect("daemon poisoned");
+    if let Some(path) = json_path {
+        write_text(path, &(d.summary_json().to_string() + "\n"))?;
+        eprintln!("daemon: wrote {}", path.display());
+    }
+    if let Some(path) = md_path {
+        write_text(path, &daemon_markdown(d.config(), &d.summary_json()))?;
+        eprintln!("daemon: wrote {}", path.display());
+    }
+    fs::remove_file(socket)?;
+    Ok(())
+}
+
+/// Drive one connection to EOF (or shutdown). Returns whether the
+/// daemon went terminal.
+fn serve_connection(daemon: &Mutex<Daemon>, stream: UnixStream) -> Result<bool> {
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (response, terminal) = handle_shared(daemon, &line);
+        writer.write_all(response.as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+        if terminal {
+            return Ok(true);
+        }
+    }
+    Ok(false)
+}
+
+/// Run a request script against a live daemon socket: one request line
+/// out, one response line back, in order. Returns the response
+/// transcript (each line `\n`-terminated). Blank lines and `#`-comments
+/// in the script are skipped, exactly like [`Harness::run_script`].
+///
+/// [`Harness::run_script`]: crate::daemon::Harness::run_script
+pub fn run_client(socket: &Path, script: &str) -> Result<String> {
+    let stream = UnixStream::connect(socket)
+        .map_err(|e| Error::runtime(format!("connect {}: {e}", socket.display())))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let mut out = String::new();
+    for line in script.lines() {
+        let trimmed = line.trim();
+        if trimmed.is_empty() || trimmed.starts_with('#') {
+            continue;
+        }
+        writer.write_all(trimmed.as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+        let mut response = String::new();
+        let n = reader.read_line(&mut response)?;
+        if n == 0 {
+            return Err(Error::runtime(
+                "daemon closed the connection mid-script".to_string(),
+            ));
+        }
+        out.push_str(&response);
+    }
+    Ok(out)
+}
+
+fn write_text(path: &Path, text: &str) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            fs::create_dir_all(dir)?;
+        }
+    }
+    fs::write(path, text)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::daemon::tests::tiny_cfg;
+
+    /// End-to-end over a real socket: the transcript a script produces
+    /// over the wire is byte-identical to the in-process harness run of
+    /// the same script (same daemon config, same handlers).
+    #[test]
+    fn socket_transcript_matches_the_harness() {
+        let script = "{\"id\": 1, \"method\": \"fleet_status\"}\n\
+                      {\"id\": 2, \"method\": \"submit_gemm\", \"params\": {\"m\": 4, \"k\": 4, \"n\": 4}}\n\
+                      {\"id\": 3, \"method\": \"submit_gemm\", \"params\": {\"m\": 4, \"k\": 4, \"n\": 4, \"class\": 9}}\n\
+                      {\"id\": 4, \"method\": \"shutdown\"}\n";
+        let mut h = crate::daemon::Harness::new(tiny_cfg()).unwrap();
+        let want = h.run_script(script);
+
+        let dir = std::env::temp_dir().join(format!("asymm_sa_daemon_{}", std::process::id()));
+        fs::create_dir_all(&dir).unwrap();
+        let socket = dir.join("smoke.sock");
+        let server_socket = socket.clone();
+        let server = thread::spawn(move || run_server(tiny_cfg(), &server_socket, None, None));
+        // Wait for the listener to come up.
+        let mut tries = 0;
+        let got = loop {
+            match run_client(&socket, script) {
+                Ok(t) => break t,
+                Err(_) if tries < 100 => {
+                    tries += 1;
+                    thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) => panic!("client never connected: {e}"),
+            }
+        };
+        server.join().unwrap().unwrap();
+        assert_eq!(got, want);
+        assert!(!socket.exists(), "server must remove its socket file");
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -53,6 +53,24 @@ pub enum Error {
         /// Attempts made (initial admission plus retries).
         attempts: u32,
     },
+
+    /// The projected modeled completion of a request exceeds its
+    /// deadline; rejected at admission, before any state was committed.
+    DeadlineExceeded {
+        /// Request id.
+        request: u64,
+        /// The deadline the request carried (µs of modeled sojourn).
+        deadline_us: u64,
+        /// The projected modeled sojourn at the admission decision (µs).
+        projected_us: u64,
+    },
+
+    /// The daemon has drained (or shut down) and accepts no new work.
+    Draining,
+
+    /// Malformed daemon request: invalid JSON, missing/unknown method,
+    /// or a bad/unknown parameter.
+    ProtocolViolation(String),
 }
 
 impl fmt::Display for Error {
@@ -81,6 +99,17 @@ impl fmt::Display for Error {
                 f,
                 "retry budget exhausted: request {request} lost after {attempts} attempts"
             ),
+            Error::DeadlineExceeded {
+                request,
+                deadline_us,
+                projected_us,
+            } => write!(
+                f,
+                "deadline exceeded: request {request} projects {projected_us} us \
+                 (deadline {deadline_us} us)"
+            ),
+            Error::Draining => write!(f, "draining: daemon accepts no new work"),
+            Error::ProtocolViolation(m) => write!(f, "protocol violation: {m}"),
         }
     }
 }
@@ -126,6 +155,36 @@ impl Error {
     /// Convenience constructor for runtime errors.
     pub fn runtime(msg: impl Into<String>) -> Self {
         Error::Runtime(msg.into())
+    }
+
+    /// Convenience constructor for daemon protocol violations.
+    pub fn protocol(msg: impl Into<String>) -> Self {
+        Error::ProtocolViolation(msg.into())
+    }
+
+    /// Stable machine-readable wire code of this error — what the
+    /// daemon protocol puts in a response's `error.code` field.
+    ///
+    /// Total over every variant, so any internal error surfaces with a
+    /// meaningful code instead of a catch-all. The codes are frozen by
+    /// `docs/protocol.md`; [`tests::wire_codes_match_the_protocol_doc`]
+    /// asserts the two cannot drift apart.
+    pub fn wire_code(&self) -> &'static str {
+        match self {
+            Error::Shape(_) => "shape",
+            Error::Config(_) => "config",
+            Error::Runtime(_) => "runtime",
+            #[cfg(feature = "xla")]
+            Error::Xla(_) => "runtime",
+            Error::Io(_) => "io",
+            Error::Coordinator(_) => "coordinator",
+            Error::QueueFull { .. } => "queue_full",
+            Error::ArrayFailed { .. } => "array_failed",
+            Error::RetryBudgetExhausted { .. } => "retry_budget_exhausted",
+            Error::DeadlineExceeded { .. } => "deadline_exceeded",
+            Error::Draining => "draining",
+            Error::ProtocolViolation(_) => "protocol_violation",
+        }
     }
 }
 
@@ -175,5 +234,111 @@ mod tests {
         let e: Error = std::io::Error::new(std::io::ErrorKind::Other, "nope").into();
         assert!(e.source().is_some());
         assert!(Error::shape("x").source().is_none());
+    }
+
+    #[test]
+    fn protocol_rejections_carry_their_context() {
+        let d = Error::DeadlineExceeded {
+            request: 7,
+            deadline_us: 100,
+            projected_us: 250,
+        };
+        assert!(matches!(
+            d,
+            Error::DeadlineExceeded {
+                request: 7,
+                deadline_us: 100,
+                projected_us: 250
+            }
+        ));
+        assert_eq!(
+            d.to_string(),
+            "deadline exceeded: request 7 projects 250 us (deadline 100 us)"
+        );
+        assert_eq!(
+            Error::Draining.to_string(),
+            "draining: daemon accepts no new work"
+        );
+        assert_eq!(
+            Error::protocol("unknown method `frob`").to_string(),
+            "protocol violation: unknown method `frob`"
+        );
+    }
+
+    /// Every variant the protocol can surface, one constructed witness
+    /// each — the fixture both wire-code tests iterate.
+    fn wire_witnesses() -> Vec<Error> {
+        vec![
+            Error::shape("x"),
+            Error::config("y"),
+            Error::runtime("z"),
+            std::io::Error::new(std::io::ErrorKind::Other, "nope").into(),
+            Error::Coordinator("c".into()),
+            Error::QueueFull {
+                array: 0,
+                queued: 8,
+                bound: 8,
+            },
+            Error::ArrayFailed { array: 0 },
+            Error::RetryBudgetExhausted {
+                request: 1,
+                attempts: 3,
+            },
+            Error::DeadlineExceeded {
+                request: 1,
+                deadline_us: 10,
+                projected_us: 20,
+            },
+            Error::Draining,
+            Error::protocol("p"),
+        ]
+    }
+
+    #[test]
+    fn wire_codes_are_stable_snake_case_identifiers() {
+        for e in wire_witnesses() {
+            let code = e.wire_code();
+            assert!(!code.is_empty());
+            assert!(
+                code.chars().all(|c| c.is_ascii_lowercase() || c == '_'),
+                "wire code {code:?} must be a snake_case identifier"
+            );
+        }
+        // The protocol's three typed rejections keep their frozen names.
+        assert_eq!(
+            Error::QueueFull {
+                array: 0,
+                queued: 1,
+                bound: 1
+            }
+            .wire_code(),
+            "queue_full"
+        );
+        assert_eq!(
+            Error::DeadlineExceeded {
+                request: 0,
+                deadline_us: 0,
+                projected_us: 0
+            }
+            .wire_code(),
+            "deadline_exceeded"
+        );
+        assert_eq!(Error::Draining.wire_code(), "draining");
+        assert_eq!(Error::protocol("p").wire_code(), "protocol_violation");
+    }
+
+    #[test]
+    fn wire_codes_match_the_protocol_doc() {
+        // The protocol doc's error table is the contract clients code
+        // against; every code the daemon can emit must appear there as
+        // a backticked identifier, so code and doc cannot drift apart.
+        let doc = include_str!("../../docs/protocol.md");
+        for e in wire_witnesses() {
+            let needle = format!("`{}`", e.wire_code());
+            assert!(
+                doc.contains(&needle),
+                "wire code {needle} is missing from docs/protocol.md"
+            );
+        }
     }
 }

@@ -152,6 +152,20 @@ impl ArrivalPlan {
         ArrivalPlan { times, classes }
     }
 
+    /// Plan with priority classes assigned round-robin from config:
+    /// request `i` gets class `i mod classes` (0 = most urgent). With
+    /// `classes <= 1` every request stays in class 0, which makes the
+    /// plan — and everything downstream of it — identical to
+    /// [`ArrivalPlan::new`], so single-tenant outputs are unchanged.
+    pub fn round_robin_classes(times: Vec<f64>, classes: usize) -> Self {
+        let c = classes.clamp(1, 256);
+        let cls = (0..times.len()).map(|i| (i % c) as u8).collect();
+        ArrivalPlan {
+            times,
+            classes: cls,
+        }
+    }
+
     /// Plan with explicit per-request priority classes.
     pub fn with_classes(times: Vec<f64>, classes: Vec<u8>) -> Result<Self> {
         if times.len() != classes.len() {
@@ -267,6 +281,24 @@ mod tests {
         assert!(ArrivalPlan::with_classes(vec![0.0], vec![]).is_err());
         assert_eq!(plan.horizon(), 1.0);
         assert_eq!(ArrivalPlan::new(vec![]).horizon(), 0.0);
+    }
+
+    #[test]
+    fn round_robin_classes_cycle_and_degenerate_to_class_zero() {
+        let times = vec![0.0, 1.0, 2.0, 3.0, 4.0];
+        let plan = ArrivalPlan::round_robin_classes(times.clone(), 3);
+        assert_eq!(plan.classes, vec![0, 1, 2, 0, 1]);
+        // Strictly increasing times: classes never reorder admission.
+        assert_eq!(plan.order(), vec![0, 1, 2, 3, 4]);
+        // classes <= 1 reproduces the single-tenant plan exactly.
+        assert_eq!(
+            ArrivalPlan::round_robin_classes(times.clone(), 1),
+            ArrivalPlan::new(times.clone())
+        );
+        assert_eq!(
+            ArrivalPlan::round_robin_classes(times.clone(), 0),
+            ArrivalPlan::new(times)
+        );
     }
 
     #[test]

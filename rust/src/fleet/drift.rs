@@ -39,7 +39,7 @@ use std::collections::{HashMap, HashSet, VecDeque};
 use std::time::Instant;
 
 use crate::bench_util::Bench;
-use crate::coordinator::metrics::{percentile_micros, sorted_micros};
+use crate::coordinator::metrics::{percentile_micros, sorted_micros, ClassLatencies};
 use crate::error::{Error, Result};
 use crate::explore::Explorer;
 use crate::faults::ArrayRobustness;
@@ -201,6 +201,7 @@ pub fn build_drift_trace(dcfg: &DriftConfig) -> Result<Vec<InferRequest>> {
             seed: cfg.seed,
             requests: n1,
             unique_inputs: cfg.unique_inputs,
+            classes: cfg.classes,
         },
         &mix,
     )?;
@@ -211,6 +212,7 @@ pub fn build_drift_trace(dcfg: &DriftConfig) -> Result<Vec<InferRequest>> {
                 seed: cfg.seed ^ DRIFT_PHASE_SALT,
                 requests: n - n1,
                 unique_inputs: cfg.unique_inputs,
+                classes: cfg.classes,
             },
             &skew,
         )?
@@ -228,7 +230,9 @@ pub fn build_drift_trace(dcfg: &DriftConfig) -> Result<Vec<InferRequest>> {
 /// one-request-per-layer probe through the same seeded lowering the
 /// trace uses. Layers sharing a shape collapse into the first match
 /// (they are indistinguishable to a shape-keyed observer anyway).
-fn shape_bins(cfg: &FleetConfig) -> Result<(HashMap<ShapeKey, usize>, usize)> {
+/// `pub(crate)`: the daemon's scheduler tracks its live mix with the
+/// same bins.
+pub(crate) fn shape_bins(cfg: &FleetConfig) -> Result<(HashMap<ShapeKey, usize>, usize)> {
     let mut mix = cfg.workload.layers();
     if cfg.max_layers > 0 && mix.len() > cfg.max_layers {
         mix.truncate(cfg.max_layers);
@@ -238,6 +242,7 @@ fn shape_bins(cfg: &FleetConfig) -> Result<(HashMap<ShapeKey, usize>, usize)> {
             seed: cfg.seed,
             requests: mix.len(),
             unique_inputs: 1,
+            classes: 1,
         },
         &mix,
     )?;
@@ -444,6 +449,7 @@ fn drift_run(
     let mut rob: Vec<ArrayRobustness> = (0..n).map(|_| ArrayRobustness::default()).collect();
     let mut lat_secs: Vec<f64> = Vec::with_capacity(trace.len());
     let mut lat_post_secs: Vec<f64> = Vec::new();
+    let mut class_lat = ClassLatencies::new();
     let mut costs = vec![0.0f64; n];
 
     let mut tracker = MixTracker::new(layers, dcfg.detect_window);
@@ -496,6 +502,7 @@ fn drift_run(
         inflight[a].push_back((done, macs));
         outstanding[a] += macs;
         lat_secs.push(done - t);
+        class_lat.record(arrivals.classes[i], done - t);
         if in_post {
             lat_post_secs.push(done - t);
         }
@@ -644,6 +651,7 @@ fn drift_run(
             .iter()
             .map(|a| a.server.metrics().snapshot().latency_samples_dropped)
             .sum(),
+        per_class: class_lat.snapshot(),
     };
     Ok(DriftRun {
         run,
@@ -676,7 +684,8 @@ pub fn run_drift_comparison(dcfg: &DriftConfig) -> Result<DriftReport> {
     let trace = build_drift_trace(dcfg)?;
     let tech = TechParams::default();
     let (gap_secs, spill_macs) = modeled_knobs(cfg, &plan, &trace);
-    let arrivals = ArrivalPlan::new(dcfg.arrival.times(trace.len(), gap_secs)?);
+    let arrivals =
+        ArrivalPlan::round_robin_classes(dcfg.arrival.times(trace.len(), gap_secs)?, cfg.classes);
 
     let adaptive = drift_run(
         &explorer,

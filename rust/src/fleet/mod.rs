@@ -56,8 +56,9 @@ pub mod router;
 pub use arrival::{ArrivalPlan, ArrivalProcess};
 pub use drift::{
     drift_bench, drift_summary_json, run_drift_comparison, DriftConfig, DriftHeadline,
-    DriftReport, DriftRun,
+    DriftReport, DriftRun, MixTracker,
 };
+pub(crate) use drift::shape_bins;
 pub use provision::{
     closed_form_cycles, provision, provision_spare, provision_spare_with, provision_with,
     provisioning_explorer, select_frontier, ArraySpec, FleetPlan,
@@ -69,7 +70,7 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::bench_util::Bench;
-use crate::coordinator::metrics::{percentile_micros, sorted_micros};
+use crate::coordinator::metrics::{percentile_micros, sorted_micros, ClassLatencies, ClassLatency};
 use crate::error::{Error, Result};
 use crate::explore::{Explorer, WorkloadKind};
 use crate::faults::{backoff_secs, ArrayRobustness, ChaosKnobs, FaultKind, FaultPlan, HealthTracker};
@@ -123,6 +124,13 @@ pub struct FleetConfig {
     /// service time ÷ K × 1.2, i.e. the square fleet runs just under
     /// saturation).
     pub gap_us: f64,
+    /// Multi-tenant priority classes: request `i` of a trace is
+    /// assigned class `i mod classes` (0 = most urgent; same-instant
+    /// bursts admit urgent classes first, and the daemon's admission
+    /// watermarks shed low-priority classes first). `1` (the default)
+    /// is single-tenant and reproduces the historical outputs
+    /// bit-exactly.
+    pub classes: usize,
 }
 
 impl Default for FleetConfig {
@@ -140,6 +148,7 @@ impl Default for FleetConfig {
             workers: 0,
             spill_macs: 0,
             gap_us: 0.0,
+            classes: 1,
         }
     }
 }
@@ -158,6 +167,9 @@ impl FleetConfig {
         }
         if !self.gap_us.is_finite() || self.gap_us < 0.0 {
             return Err(Error::config("gap_us must be finite and >= 0"));
+        }
+        if self.classes == 0 || self.classes > 256 {
+            return Err(Error::config("classes must be in 1..=256"));
         }
         Ok(())
     }
@@ -236,6 +248,12 @@ impl Fleet {
     pub fn result_cache(&self) -> Arc<Mutex<ResultCache>> {
         Arc::clone(&self.cache)
     }
+
+    /// Mutable slot access for live re-provisioning (the drift cutover
+    /// and the daemon's scheduler swap promoted arrays in place).
+    pub(crate) fn arrays_mut(&mut self) -> &mut Vec<FleetArray> {
+        &mut self.arrays
+    }
 }
 
 /// Build the deterministic scenario trace for a fleet configuration:
@@ -250,6 +268,7 @@ pub fn build_trace(cfg: &FleetConfig) -> Result<Vec<InferRequest>> {
         seed: cfg.seed,
         requests: cfg.requests,
         unique_inputs: cfg.unique_inputs,
+        classes: cfg.classes,
     };
     build_requests(&scn, &mix)
 }
@@ -326,6 +345,10 @@ pub struct PolicyRun {
     /// complete — this surfaces the servers' own instrumentation
     /// honesty, mirroring [`ServeSummary`](crate::serve::ServeSummary).
     pub latency_samples_dropped: u64,
+    /// Per-priority-class modeled latency lanes (classes ascending;
+    /// one lane, class 0, in a single-tenant run). Same samples as
+    /// `latency_sorted_us`, split by [`ArrivalPlan`] class.
+    pub per_class: Vec<ClassLatency>,
 }
 
 impl PolicyRun {
@@ -378,29 +401,32 @@ impl PolicyRun {
     }
 }
 
-/// Mutable per-array accumulators of one policy run.
+/// Mutable per-array accumulators of one policy run (shared with the
+/// daemon's live admission loop).
 #[derive(Default)]
-struct ArrayAcc {
-    requests: u64,
-    macs: u64,
-    sim_cycles: u64,
-    queue_peak: usize,
-    interconnect_uj: f64,
-    total_uj: f64,
-    silicon_secs: f64,
+pub(crate) struct ArrayAcc {
+    pub(crate) requests: u64,
+    pub(crate) macs: u64,
+    pub(crate) sim_cycles: u64,
+    pub(crate) queue_peak: usize,
+    pub(crate) interconnect_uj: f64,
+    pub(crate) total_uj: f64,
+    pub(crate) silicon_secs: f64,
 }
 
 /// Flush one array's pending queue through its server and fold the
-/// responses into the accumulators.
-fn flush_array(
+/// responses into the accumulators. Returns the responses so callers
+/// that answer per-request (the daemon's `submit_gemm`) can read the
+/// simulated results; batch callers drop them.
+pub(crate) fn flush_array(
     arr: &FleetArray,
     geom: &PeGeometry,
     tech: &TechParams,
     pending: &mut Vec<InferRequest>,
     acc: &mut ArrayAcc,
-) -> Result<()> {
+) -> Result<Vec<crate::serve::InferResponse>> {
     if pending.is_empty() {
-        return Ok(());
+        return Ok(Vec::new());
     }
     let batch = std::mem::take(pending);
     let responses = arr.server.process_batch(&batch)?;
@@ -414,7 +440,7 @@ fn flush_array(
         acc.total_uj += p.total_mw() * secs * 1e3;
         acc.silicon_secs += secs;
     }
-    Ok(())
+    Ok(responses)
 }
 
 /// Run one policy over the trace on one fleet, under the historical
@@ -434,7 +460,10 @@ pub fn run_policy(
     spill_macs: u64,
     tech: &TechParams,
 ) -> Result<PolicyRun> {
-    let arrivals = ArrivalPlan::new(ArrivalProcess::FixedGap.times(trace.len(), gap_secs)?);
+    let arrivals = ArrivalPlan::round_robin_classes(
+        ArrivalProcess::FixedGap.times(trace.len(), gap_secs)?,
+        cfg.classes,
+    );
     run_policy_arrivals(fleet, policy, trace, cfg, &arrivals, spill_macs, tech)
 }
 
@@ -483,6 +512,7 @@ pub fn run_policy_arrivals(
     let mut pending: Vec<Vec<InferRequest>> = (0..n).map(|_| Vec::new()).collect();
     let mut accs: Vec<ArrayAcc> = (0..n).map(|_| ArrayAcc::default()).collect();
     let mut lat_secs: Vec<f64> = Vec::with_capacity(trace.len());
+    let mut class_lat = ClassLatencies::new();
     // Shape-independent factor of the ShapeAffine score, once per
     // array; the per-request cost buffer is only filled when the policy
     // actually consults it.
@@ -534,6 +564,7 @@ pub fn run_policy_arrivals(
         inflight[a].push_back((done, macs));
         outstanding[a] += macs;
         lat_secs.push(done - t);
+        class_lat.record(arrivals.classes[i], done - t);
 
         accs[a].requests += 1;
         if inflight[a].len() > accs[a].queue_peak {
@@ -594,6 +625,7 @@ pub fn run_policy_arrivals(
             .iter()
             .map(|a| a.server.metrics().snapshot().latency_samples_dropped)
             .sum(),
+        per_class: class_lat.snapshot(),
     })
 }
 
@@ -669,11 +701,13 @@ fn retire_chaos(
     geoms: &[PeGeometry],
     tech: &TechParams,
     trace: &[InferRequest],
+    classes: &[u8],
     inflight: &mut [VecDeque<ChaosInflight>],
     outstanding: &mut [u64],
     retired: &mut [Vec<InferRequest>],
     accs: &mut [ArrayAcc],
     lat_secs: &mut Vec<f64>,
+    class_lat: &mut ClassLatencies,
     completed: &mut u64,
 ) -> Result<()> {
     for a in 0..fleet.arrays.len() {
@@ -684,6 +718,7 @@ fn retire_chaos(
             inflight[a].pop_front();
             outstanding[a] -= f.macs;
             lat_secs.push(f.finish - f.t0);
+            class_lat.record(classes[f.idx], f.finish - f.t0);
             *completed += 1;
             retired[a].push(trace[f.idx].clone());
             if retired[a].len() >= window {
@@ -738,7 +773,10 @@ pub fn run_policy_chaos(
     spill_macs: u64,
     tech: &TechParams,
 ) -> Result<PolicyRun> {
-    let arrivals = ArrivalPlan::new(ArrivalProcess::FixedGap.times(trace.len(), gap_secs)?);
+    let arrivals = ArrivalPlan::round_robin_classes(
+        ArrivalProcess::FixedGap.times(trace.len(), gap_secs)?,
+        cfg.classes,
+    );
     run_policy_chaos_arrivals(
         specs, label, policy, trace, cfg, knobs, plan, spare, &arrivals, gap_secs, spill_macs,
         tech,
@@ -798,6 +836,7 @@ pub fn run_policy_chaos_arrivals(
     let mut accs: Vec<ArrayAcc> = (0..n).map(|_| ArrayAcc::default()).collect();
     let mut rob: Vec<ArrayRobustness> = (0..n).map(|_| ArrayRobustness::default()).collect();
     let mut lat_secs: Vec<f64> = Vec::with_capacity(trace.len());
+    let mut class_lat = ClassLatencies::new();
     let mut costs = vec![0.0f64; n];
     let mut completed = 0u64;
     let mut lost = 0u64;
@@ -846,11 +885,13 @@ pub fn run_policy_chaos_arrivals(
             &geoms,
             tech,
             trace,
+            &arrivals.classes,
             &mut inflight,
             &mut outstanding,
             &mut retired,
             &mut accs,
             &mut lat_secs,
+            &mut class_lat,
             &mut completed,
         )?;
         match item.ev {
@@ -1050,11 +1091,13 @@ pub fn run_policy_chaos_arrivals(
         &geoms,
         tech,
         trace,
+        &arrivals.classes,
         &mut inflight,
         &mut outstanding,
         &mut retired,
         &mut accs,
         &mut lat_secs,
+        &mut class_lat,
         &mut completed,
     )?;
     for a in 0..n {
@@ -1109,6 +1152,7 @@ pub fn run_policy_chaos_arrivals(
             .iter()
             .map(|a| a.server.metrics().snapshot().latency_samples_dropped)
             .sum(),
+        per_class: class_lat.snapshot(),
     })
 }
 
@@ -1313,6 +1357,18 @@ fn array_run_json(a: &ArrayRun) -> Json {
     ])
 }
 
+/// One priority class's latency lane as JSON — shared by the fleet,
+/// drift and daemon summaries so `per_class` arrays stay one schema.
+pub(crate) fn class_latency_json(c: &ClassLatency) -> Json {
+    obj(vec![
+        ("class", Json::Num(c.class as f64)),
+        ("requests", Json::Num(c.requests() as f64)),
+        ("p50_us", Json::Num(c.latency_us(0.50) as f64)),
+        ("p99_us", Json::Num(c.latency_us(0.99) as f64)),
+        ("p999_us", Json::Num(c.latency_us(0.999) as f64)),
+    ])
+}
+
 pub(crate) fn run_json(r: &PolicyRun) -> Json {
     obj(vec![
         ("fleet", Json::Str(r.fleet.clone())),
@@ -1340,6 +1396,10 @@ pub(crate) fn run_json(r: &PolicyRun) -> Json {
         (
             "latency_samples_dropped",
             Json::Num(r.latency_samples_dropped as f64),
+        ),
+        (
+            "per_class",
+            Json::Arr(r.per_class.iter().map(class_latency_json).collect()),
         ),
     ])
 }
@@ -1384,6 +1444,7 @@ pub fn summary_json(cfg: &FleetConfig, report: &FleetReport) -> Json {
         ("seed", Json::Num(cfg.seed as f64)),
         ("window", Json::Num(cfg.window as f64)),
         ("cache_capacity", Json::Num(cfg.cache_capacity as f64)),
+        ("classes", Json::Num(cfg.classes as f64)),
         ("gap_us", Json::Num(report.gap_us)),
         ("spill_macs", Json::Num(report.spill_macs as f64)),
         (
@@ -1545,8 +1606,53 @@ mod tests {
             FleetConfig { gap_us: f64::NAN, ..tiny_cfg() },
             FleetConfig { gap_us: f64::INFINITY, ..tiny_cfg() },
             FleetConfig { gap_us: -1.0, ..tiny_cfg() },
+            FleetConfig { classes: 0, ..tiny_cfg() },
+            FleetConfig { classes: 300, ..tiny_cfg() },
         ] {
             assert!(bad.validate().is_err());
+        }
+    }
+
+    #[test]
+    fn priority_classes_partition_the_latency_lanes() {
+        // Multi-tenant run: three round-robin classes.
+        let cfg = FleetConfig {
+            classes: 3,
+            ..tiny_cfg()
+        };
+        let report = run_fleet_comparison(&cfg).unwrap();
+        for run in &report.runs {
+            assert_eq!(run.per_class.len(), 3);
+            let total: usize = run.per_class.iter().map(|c| c.requests()).sum();
+            assert_eq!(total, cfg.requests);
+            // The class lanes partition the aggregate latency multiset.
+            let mut merged: Vec<u64> = run
+                .per_class
+                .iter()
+                .flat_map(|c| c.latency_sorted_us.iter().copied())
+                .collect();
+            merged.sort_unstable();
+            assert_eq!(merged, run.latency_sorted_us);
+        }
+        // Class assignment is reporting-only under fixed-gap arrivals
+        // (strictly increasing instants admit in sequence order), so
+        // the aggregate outcome is bit-identical to single-tenant.
+        let single = run_fleet_comparison(&tiny_cfg()).unwrap();
+        for (m, s) in report.runs.iter().zip(&single.runs) {
+            assert_eq!(m.latency_sorted_us, s.latency_sorted_us);
+            assert_eq!(m.interconnect_uj.to_bits(), s.interconnect_uj.to_bits());
+            assert_eq!(s.per_class.len(), 1);
+            assert_eq!(s.per_class[0].class, 0);
+            assert_eq!(s.per_class[0].latency_sorted_us, s.latency_sorted_us);
+        }
+        // per_class serializes with the frozen schema.
+        let j = run_json(&report.runs[0]);
+        let lanes = j.req("per_class").unwrap().as_arr().unwrap();
+        assert_eq!(lanes.len(), 3);
+        for lane in lanes {
+            for key in ["class", "requests", "p50_us", "p99_us", "p999_us"] {
+                assert!(lane.get(key).is_some(), "per_class lane missing {key}");
+            }
         }
     }
 

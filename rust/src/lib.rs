@@ -68,6 +68,7 @@ pub mod arch;
 pub mod bench_util;
 pub mod config;
 pub mod coordinator;
+pub mod daemon;
 pub mod error;
 pub mod explore;
 pub mod faults;

@@ -71,18 +71,25 @@ struct Command {
 /// exactly this; `chaos` extends it.
 const FLEET_VALUED: &[&str] = &[
     "pes", "arrays", "requests", "unique", "layers", "seed", "workers", "window", "cache",
-    "spill", "gap-us", "workload", "json", "md",
+    "spill", "gap-us", "workload", "classes", "json", "md",
 ];
 
 const CHAOS_VALUED: &[&str] = &[
     "pes", "arrays", "requests", "unique", "layers", "seed", "workers", "window", "cache",
-    "spill", "gap-us", "workload", "scenarios", "retry-limit", "queue-bound", "json", "md",
+    "spill", "gap-us", "workload", "classes", "scenarios", "retry-limit", "queue-bound", "json",
+    "md",
 ];
 
 const DRIFT_VALUED: &[&str] = &[
     "pes", "arrays", "requests", "unique", "layers", "seed", "workers", "window", "cache",
-    "spill", "gap-us", "workload", "arrival", "rate", "arrival-seed", "detect-window",
+    "spill", "gap-us", "workload", "classes", "arrival", "rate", "arrival-seed", "detect-window",
     "threshold", "phase-split", "json", "md",
+];
+
+const DAEMON_VALUED: &[&str] = &[
+    "pes", "arrays", "unique", "layers", "seed", "workers", "window", "cache", "spill",
+    "gap-us", "workload", "classes", "queue-bound", "deadline-us", "reprovision-every",
+    "socket", "script", "json", "md",
 ];
 
 const COMMANDS: &[Command] = &[
@@ -149,10 +156,14 @@ const COMMANDS: &[Command] = &[
                --cache <n>     result-cache entries (default 24)
                --unique <n>    input variants per layer (default 4)
                --dataflow <s>  engine: ws | os | is (default ws)
+               --classes <n>   round-robin priority classes (default 1)
                --json <f>      summary JSON path (default SERVE_summary.json)
 ",
         bools: &[],
-        valued: &["requests", "seed", "workers", "window", "cache", "unique", "dataflow", "json"],
+        valued: &[
+            "requests", "seed", "workers", "window", "cache", "unique", "dataflow", "classes",
+            "json",
+        ],
         run: cmd_serve,
     },
     Command {
@@ -205,6 +216,7 @@ const COMMANDS: &[Command] = &[
                                (default 0 = auto: square fleet near
                                saturation)
                --workload <s>  table1 | synth (default table1)
+               --classes <n>   round-robin priority classes (default 1)
                --json <f>      summary path (default FLEET_summary.json)
                --md <f>        report path (default out/FLEET_report.md)
 ",
@@ -263,6 +275,32 @@ const COMMANDS: &[Command] = &[
         bools: &[],
         valued: DRIFT_VALUED,
         run: cmd_drift,
+    },
+    Command {
+        name: "daemon",
+        help: "  daemon     always-on serving daemon over the fleet: line-delimited
+             JSON requests (submit_gemm, submit_trace, fleet_status,
+             drain, shutdown) with bounded per-class admission, modeled
+             deadlines and graceful drain; runs on a Unix socket, as a
+             client against one, or --local against a script file
+               (fleet flags: --pes --arrays --unique --layers --seed
+                --workers --window --cache --spill --gap-us --workload
+                --classes, same defaults as `fleet`)
+               --socket <p>    Unix socket path (default out/asymm_sa.sock)
+               --client        connect to --socket and stream --script
+               --local         drive the in-process harness (no socket)
+               --script <f>    request script, one JSON object per line
+               --queue-bound <n>      per-array admission bound
+                                      (default 0 = auto: 4x window)
+               --deadline-us <n>      default deadline, 0 = none
+               --reprovision-every <n> scheduler re-provision period in
+                                      admissions (default 0 = off)
+               --json <f>      summary path (default DAEMON_summary.json)
+               --md <f>        report path (default out/DAEMON_report.md)
+",
+        bools: &["client", "local"],
+        valued: DAEMON_VALUED,
+        run: cmd_daemon,
     },
     Command {
         name: "verify",
@@ -423,6 +461,7 @@ fn cmd_serve(f: &Flags) -> Result<(), String> {
         f.usize("cache", 24)?,
         f.usize("unique", 4)?,
         f.string("dataflow", "ws"),
+        f.usize("classes", 1)?,
         f.path("json").unwrap_or_else(|| PathBuf::from("SERVE_summary.json")),
     )
 }
@@ -466,6 +505,7 @@ fn fleet_config_from_flags(f: &Flags) -> Result<asymm_sa::fleet::FleetConfig, St
         workers: f.usize("workers", 0)?,
         spill_macs: f.usize("spill", 0)? as u64,
         gap_us: f.f64("gap-us", 0.0)?,
+        classes: f.usize("classes", 1)?,
     })
 }
 
@@ -516,6 +556,78 @@ fn cmd_drift(f: &Flags) -> Result<(), String> {
         f.path("json").unwrap_or_else(|| PathBuf::from("DRIFT_summary.json")),
         f.path("md").unwrap_or_else(|| PathBuf::from("out/DRIFT_report.md")),
     )
+}
+
+fn cmd_daemon(f: &Flags) -> Result<(), String> {
+    use asymm_sa::daemon::DaemonConfig;
+    let cfg = DaemonConfig {
+        fleet: fleet_config_from_flags(f)?,
+        queue_bound: f.usize("queue-bound", 0)?,
+        deadline_us: f.usize("deadline-us", 0)? as u64,
+        reprovision_every: f.usize("reprovision-every", 0)?,
+        ..DaemonConfig::default()
+    };
+    let socket = f.path("socket").unwrap_or_else(|| PathBuf::from("out/asymm_sa.sock"));
+    let json = f.path("json").unwrap_or_else(|| PathBuf::from("DAEMON_summary.json"));
+    let md = f.path("md").unwrap_or_else(|| PathBuf::from("out/DAEMON_report.md"));
+
+    if f.flag("client") {
+        let script_path = f
+            .path("script")
+            .ok_or_else(|| "--client needs --script <file>".to_string())?;
+        let script = std::fs::read_to_string(&script_path)
+            .map_err(|e| format!("read {}: {e}", script_path.display()))?;
+        #[cfg(unix)]
+        {
+            let transcript = asymm_sa::daemon::server::run_client(&socket, &script)
+                .map_err(|e| e.to_string())?;
+            print!("{transcript}");
+            return Ok(());
+        }
+        #[cfg(not(unix))]
+        {
+            return Err("daemon --client needs Unix sockets; use --local".to_string());
+        }
+    }
+
+    if f.flag("local") {
+        let script_path = f
+            .path("script")
+            .ok_or_else(|| "--local needs --script <file>".to_string())?;
+        let script = std::fs::read_to_string(&script_path)
+            .map_err(|e| format!("read {}: {e}", script_path.display()))?;
+        let mut harness = asymm_sa::daemon::Harness::new(cfg).map_err(|e| e.to_string())?;
+        let transcript = harness.run_script(&script);
+        print!("{transcript}");
+        let summary = harness.summary_json();
+        write_text_file(&json, &(summary.to_string() + "\n"))?;
+        write_text_file(
+            &md,
+            &asymm_sa::report::daemon_markdown(harness.daemon().config(), &summary),
+        )?;
+        eprintln!("daemon: wrote {} and {}", json.display(), md.display());
+        return Ok(());
+    }
+
+    #[cfg(unix)]
+    {
+        asymm_sa::daemon::server::run_server(cfg, &socket, Some(&json), Some(&md))
+            .map_err(|e| e.to_string())
+    }
+    #[cfg(not(unix))]
+    {
+        Err("daemon server mode needs Unix sockets; use --local".to_string())
+    }
+}
+
+/// Write a text artifact, creating parent directories.
+fn write_text_file(path: &PathBuf, text: &str) -> Result<(), String> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+        }
+    }
+    std::fs::write(path, text).map_err(|e| format!("write {}: {e}", path.display()))
 }
 
 fn cmd_verify(f: &Flags) -> Result<(), String> {
@@ -661,6 +773,7 @@ fn serve(
     cache: usize,
     unique: usize,
     dataflow: String,
+    classes: usize,
     json: PathBuf,
 ) -> Result<(), String> {
     use asymm_sa::bench_util::Bench;
@@ -692,6 +805,7 @@ fn serve(
         seed,
         requests,
         unique_inputs: unique,
+        classes,
     };
     let mix = asymm_sa::serve::session::serving_mix();
     let (responses, sum) = run_scenario(&server, &scn, &mix).map_err(|e| e.to_string())?;
@@ -720,6 +834,22 @@ fn serve(
     b.note("cache_hit_rate", sum.cache.hit_rate());
     b.note("cache_evictions", sum.cache.evictions as f64);
     b.note("cache_capacity", cache as f64);
+    b.section(
+        "per_class",
+        asymm_sa::util::json::Json::Arr(
+            sum.per_class
+                .iter()
+                .map(|c| {
+                    asymm_sa::util::json::obj(vec![
+                        ("class", asymm_sa::util::json::Json::Num(c.class as f64)),
+                        ("requests", asymm_sa::util::json::Json::Num(c.requests as f64)),
+                        ("p99_ms", asymm_sa::util::json::Json::Num(c.p99_ms)),
+                        ("p999_ms", asymm_sa::util::json::Json::Num(c.p999_ms)),
+                    ])
+                })
+                .collect(),
+        ),
+    );
     b.write_json(&json).map_err(|e| e.to_string())?;
     Ok(())
 }

@@ -670,6 +670,128 @@ pub fn to_csv(rows: &[LayerPowerRow]) -> String {
     s
 }
 
+/// Markdown report of a daemon run, rendered from the daemon's own
+/// `DAEMON_summary.json` document — one source of truth, so the report
+/// cannot drift from what the JSON artifact records.
+pub fn daemon_markdown(
+    cfg: &crate::daemon::DaemonConfig,
+    summary: &crate::util::json::Json,
+) -> String {
+    use crate::util::json::Json;
+    let num = |j: &Json, k: &str| j.get(k).and_then(|v| v.as_f64().ok()).unwrap_or(0.0);
+    let text = |j: &Json, k: &str| {
+        j.get(k)
+            .and_then(|v| v.as_str().ok())
+            .unwrap_or("?")
+            .to_string()
+    };
+    let fcfg = &cfg.fleet;
+    let rejected = summary.get("rejected").cloned().unwrap_or(Json::Null);
+    let scfg = summary.get("config").cloned().unwrap_or(Json::Null);
+    let mut s = String::new();
+    let _ = writeln!(s, "# asymm-sa serving daemon\n");
+    let _ = writeln!(
+        s,
+        "{} x {}-PE arrays, workload `{}`, {} priority class(es), \
+         admission window {}, seed {}. Queue bound {} per array \
+         (per-class watermarks), default deadline {} us (0 = none), \
+         re-provision every {} admissions (0 = off). All latency and \
+         every counter below are modeled — a pure function of the \
+         request script, identical at any worker count.\n",
+        fcfg.arrays,
+        fcfg.pe_budget,
+        fcfg.workload.name(),
+        fcfg.classes.max(1),
+        fcfg.window,
+        fcfg.seed,
+        num(&scfg, "queue_bound"),
+        cfg.deadline_us,
+        cfg.reprovision_every,
+    );
+    let _ = writeln!(s, "## Accounting\n");
+    let _ = writeln!(
+        s,
+        "| state | accepted | completed | billed | shed (queue) | \
+         shed (deadline) | shed (draining) | reprovisions | \
+         drain latency (us) | modeled clock (us) |"
+    );
+    let _ = writeln!(s, "|---|---|---|---|---|---|---|---|---|---|");
+    let _ = writeln!(
+        s,
+        "| {} | {} | {} | {} | {} | {} | {} | {} | {} | {} |",
+        text(summary, "state"),
+        num(summary, "accepted"),
+        num(summary, "completed"),
+        num(summary, "billed"),
+        num(&rejected, "queue_full"),
+        num(&rejected, "deadline_exceeded"),
+        num(&rejected, "draining"),
+        num(summary, "reprovisions"),
+        num(summary, "drain_latency_us"),
+        num(summary, "clock_us"),
+    );
+    let _ = writeln!(s, "\n## Modeled latency\n");
+    let _ = writeln!(s, "| class | requests | p50 (us) | p99 (us) | p99.9 (us) |");
+    let _ = writeln!(s, "|---|---|---|---|---|");
+    let _ = writeln!(
+        s,
+        "| all | {} | {} | {} | {} |",
+        num(summary, "accepted"),
+        num(summary, "p50_us"),
+        num(summary, "p99_us"),
+        num(summary, "p999_us"),
+    );
+    if let Some(Json::Arr(classes)) = summary.get("per_class") {
+        for c in classes {
+            let _ = writeln!(
+                s,
+                "| {} | {} | {} | {} | {} |",
+                num(c, "class"),
+                num(c, "requests"),
+                num(c, "p50_us"),
+                num(c, "p99_us"),
+                num(c, "p999_us"),
+            );
+        }
+    }
+    let _ = writeln!(s, "\n## Arrays\n");
+    let _ = writeln!(
+        s,
+        "| array | geometry | dataflow | requests | MACs | sim cycles | \
+         queue peak | interconnect (uJ) | total (uJ) |"
+    );
+    let _ = writeln!(s, "|---|---|---|---|---|---|---|---|---|");
+    if let Some(Json::Arr(arrays)) = summary.get("per_array") {
+        for a in arrays {
+            let _ = writeln!(
+                s,
+                "| `{}` | {}x{} | {} | {} | {} | {} | {} | {:.2} | {:.2} |",
+                text(a, "label"),
+                num(a, "rows"),
+                num(a, "cols"),
+                text(a, "dataflow"),
+                num(a, "requests"),
+                num(a, "macs"),
+                num(a, "sim_cycles"),
+                num(a, "queue_peak"),
+                num(a, "interconnect_uj"),
+                num(a, "total_uj"),
+            );
+        }
+    }
+    let _ = writeln!(
+        s,
+        "\nEnergy: {:.2} uJ interconnect / {:.2} uJ total billed to \
+         requests, plus {:.2} uJ of background cache warmup. Every \
+         admitted request is billed exactly once (accepted == completed \
+         == billed after drain).",
+        num(summary, "interconnect_uj"),
+        num(summary, "total_uj"),
+        num(summary, "warmup_uj"),
+    );
+    s
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -902,5 +1024,37 @@ mod tests {
             assert!(s.contains(n));
         }
         assert!(s.contains("3136 x 256 x 64"));
+    }
+
+    #[test]
+    fn daemon_markdown_renders_the_summary_document() {
+        use crate::util::json::Json;
+        let cfg = crate::daemon::DaemonConfig::default();
+        let summary = Json::parse(
+            r#"{
+              "config": {"queue_bound": 12},
+              "state": "drained",
+              "clock_us": 420, "accepted": 9, "completed": 9, "billed": 9,
+              "rejected": {"queue_full": 2, "deadline_exceeded": 1, "draining": 3},
+              "reprovisions": 1, "warmup_uj": 0.5, "drain_latency_us": 37,
+              "p50_us": 10, "p99_us": 20, "p999_us": 21,
+              "per_class": [{"class": 0, "requests": 9, "p50_us": 10, "p99_us": 20, "p999_us": 21}],
+              "interconnect_uj": 1.25, "total_uj": 4.5,
+              "per_array": [{"label": "ws-8x2", "rows": 8, "cols": 2,
+                "dataflow": "ws", "requests": 9, "macs": 100, "sim_cycles": 50,
+                "queue_peak": 4, "interconnect_uj": 1.25, "total_uj": 4.5}]
+            }"#,
+        )
+        .unwrap();
+        let md = daemon_markdown(&cfg, &summary);
+        assert!(md.contains("# asymm-sa serving daemon"));
+        assert!(md.contains("## Accounting"));
+        assert!(md.contains("| drained | 9 | 9 | 9 | 2 | 1 | 3 | 1 | 37 | 420 |"));
+        assert!(md.contains("## Modeled latency"));
+        assert!(md.contains("| all | 9 | 10 | 20 | 21 |"));
+        assert!(md.contains("| 0 | 9 | 10 | 20 | 21 |"));
+        assert!(md.contains("`ws-8x2`"));
+        assert!(md.contains("8x2"));
+        assert!(md.contains("accepted == completed == billed"));
     }
 }

@@ -170,6 +170,17 @@ impl ResultCache {
         }
     }
 
+    /// Entries currently resident (what the daemon's `fleet_status`
+    /// reports as `cache.len`).
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// True when no entry is resident.
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
     /// Look up a memoized result; refreshes recency on hit.
     pub fn get(&mut self, key: &CacheKey) -> Option<Arc<GemmSim>> {
         self.tick += 1;

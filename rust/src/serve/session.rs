@@ -18,6 +18,7 @@
 
 use std::sync::Arc;
 
+use crate::coordinator::metrics::ClassLatencies;
 use crate::error::Result;
 use crate::gemm::Matrix;
 use crate::report::pipeline::layer_operands;
@@ -37,6 +38,11 @@ pub struct ScenarioConfig {
     /// the cache's repeat traffic. With `requests ≫ layers × variants`
     /// the hit rate is deterministically nonzero.
     pub unique_inputs: usize,
+    /// Multi-tenant priority classes: request `i` belongs to class
+    /// `i mod classes` (0 = most urgent). Purely a reporting partition
+    /// at the serve layer — the per-class latency tails in
+    /// [`ServeSummary::per_class`]; `1` (the default) is single-tenant.
+    pub classes: usize,
 }
 
 impl Default for ScenarioConfig {
@@ -45,6 +51,7 @@ impl Default for ScenarioConfig {
             seed: 2023,
             requests: 96,
             unique_inputs: 4,
+            classes: 1,
         }
     }
 }
@@ -143,6 +150,25 @@ pub struct ServeSummary {
     pub latency_samples_dropped: u64,
     /// Result-cache statistics.
     pub cache: CacheStats,
+    /// Per-priority-class wall-clock latency tails (classes ascending;
+    /// one entry, class 0, in a single-tenant scenario). Computed from
+    /// the per-response latencies, so like the wall-clock percentiles
+    /// above the *values* vary run to run while the class partition is
+    /// deterministic.
+    pub per_class: Vec<ClassServeLatency>,
+}
+
+/// One priority class's slice of a serve scenario.
+#[derive(Debug, Clone)]
+pub struct ClassServeLatency {
+    /// Priority class (0 = most urgent).
+    pub class: u8,
+    /// Requests served in this class.
+    pub requests: usize,
+    /// 99th-percentile serve latency (ms).
+    pub p99_ms: f64,
+    /// 99.9th-percentile serve latency (ms).
+    pub p999_ms: f64,
 }
 
 impl std::fmt::Display for ServeSummary {
@@ -171,6 +197,17 @@ impl std::fmt::Display for ServeSummary {
                 String::new()
             }
         )?;
+        // Multi-tenant scenarios get a per-class tail line; the
+        // single-tenant format stays byte-for-byte what it always was.
+        if self.per_class.len() > 1 {
+            for c in &self.per_class {
+                writeln!(
+                    f,
+                    "class {}: {} requests, p99 {:.2} ms, p99.9 {:.2} ms",
+                    c.class, c.requests, c.p99_ms, c.p999_ms
+                )?;
+            }
+        }
         write!(
             f,
             "cache: {} hits / {} lookups ({:.1}% hit rate), {} evictions, {} resident",
@@ -199,6 +236,24 @@ pub fn run_scenario(
 
     let snap = server.metrics().snapshot();
     let total_macs: u64 = responses.iter().map(|r| r.sim.macs).sum();
+    // Per-class tails over the per-response latencies: class of request
+    // `i` is `i mod classes` (ids are assigned sequentially by
+    // `build_requests`, so the partition is deterministic).
+    let classes = scn.classes.clamp(1, 256) as u64;
+    let mut class_lat = ClassLatencies::new();
+    for r in &responses {
+        class_lat.record((r.id % classes) as u8, r.latency_secs);
+    }
+    let per_class = class_lat
+        .snapshot()
+        .iter()
+        .map(|c| ClassServeLatency {
+            class: c.class,
+            requests: c.requests(),
+            p99_ms: c.latency_us(0.99) as f64 * 1e-3,
+            p999_ms: c.latency_us(0.999) as f64 * 1e-3,
+        })
+        .collect();
     let summary = ServeSummary {
         requests: responses.len(),
         jobs: snap.jobs,
@@ -211,6 +266,7 @@ pub fn run_scenario(
         max_ms: snap.serve_latency_percentile_ms(1.0),
         latency_samples_dropped: snap.latency_samples_dropped,
         cache: server.cache_stats(),
+        per_class,
     };
     Ok((responses, summary))
 }
@@ -249,6 +305,7 @@ mod tests {
             seed: 7,
             requests,
             unique_inputs: 2,
+            classes: 1,
         }
     }
 
@@ -300,5 +357,38 @@ mod tests {
             assert_eq!(x.sim.y, y.sim.y);
             assert_eq!(x.sim.stats, y.sim.stats);
         }
+        // Single-tenant: exactly one class lane covering every request,
+        // and the Display keeps its historical three-line format.
+        assert_eq!(sum1.per_class.len(), 1);
+        assert_eq!(sum1.per_class[0].class, 0);
+        assert_eq!(sum1.per_class[0].requests, 16);
+        assert_eq!(format!("{sum1}").lines().count(), 3);
+    }
+
+    #[test]
+    fn multi_tenant_scenario_partitions_per_class_tails() {
+        let sa = SaConfig::new_ws(8, 8, 16).unwrap();
+        let server = Server::new(ServeConfig {
+            sa,
+            workers: 2,
+            cache_capacity: 16,
+            window: 4,
+            engine: crate::sim::engine::DataflowKind::Ws,
+        });
+        let cfg = ScenarioConfig {
+            classes: 3,
+            ..scn(12)
+        };
+        let (_, sum) = run_scenario(&server, &cfg, &tiny_mix()).unwrap();
+        assert_eq!(sum.per_class.len(), 3);
+        let per_class_total: usize = sum.per_class.iter().map(|c| c.requests).sum();
+        assert_eq!(per_class_total, 12);
+        for (i, c) in sum.per_class.iter().enumerate() {
+            assert_eq!(c.class as usize, i);
+            assert_eq!(c.requests, 4);
+            assert!(c.p99_ms >= 0.0 && c.p999_ms >= c.p99_ms - 1e-12);
+        }
+        // Multi-tenant Display appends one line per class.
+        assert_eq!(format!("{sum}").lines().count(), 3 + 3);
     }
 }

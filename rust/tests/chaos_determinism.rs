@@ -41,6 +41,7 @@ fn tiny_cfg(workers: usize) -> FleetConfig {
         workers,
         spill_macs: 0,
         gap_us: 0.0,
+        classes: 1,
     }
 }
 

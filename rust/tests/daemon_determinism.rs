@@ -1,0 +1,218 @@
+//! Determinism + robustness tier for the serving daemon.
+//!
+//! Four contracts, all load-bearing for `repro daemon` as a CI
+//! artifact:
+//!
+//! 1. **Golden transcript** — the same request script produces a
+//!    byte-identical response transcript AND a byte-identical
+//!    `DAEMON_summary.json` with 1 worker and with 4 workers per array:
+//!    every admission decision, rejection counter, latency percentile
+//!    and energy number is modeled, never wall-clock.
+//! 2. **Drain under load** — a drain mid-stream completes every
+//!    admitted request (`accepted == completed == billed`), loses and
+//!    double-bills nothing, is idempotent, and rejects post-drain
+//!    submissions with the typed `draining` code.
+//! 3. **Overload sheds, never blocks** — a burst at one modeled
+//!    instant against a tight queue bound yields typed `queue_full`
+//!    responses (the handler returns; nothing queues unboundedly).
+//! 4. **Deadlines reject before commit** — an unmeetable deadline gets
+//!    `deadline_exceeded` and leaves no trace in the accounting.
+
+use asymm_sa::daemon::{DaemonConfig, DaemonState, Harness};
+use asymm_sa::explore::WorkloadKind;
+use asymm_sa::fleet::FleetConfig;
+
+fn daemon_cfg(workers: usize) -> DaemonConfig {
+    DaemonConfig {
+        fleet: FleetConfig {
+            pe_budget: 64,
+            arrays: 2,
+            workload: WorkloadKind::Synth,
+            max_layers: 2,
+            requests: 16,
+            unique_inputs: 2,
+            seed: 2023,
+            window: 4,
+            cache_capacity: 32,
+            workers,
+            spill_macs: 0,
+            gap_us: 0.0,
+            classes: 2,
+        },
+        ..DaemonConfig::default()
+    }
+}
+
+const GOLDEN_SCRIPT: &str = r#"
+# golden daemon script: trace + gemms + status + drain + shutdown
+{"id": 1, "method": "fleet_status"}
+{"id": 2, "method": "submit_trace", "params": {"requests": 12}}
+{"id": 3, "method": "submit_gemm", "params": {"m": 16, "k": 8, "n": 8, "seed": 7, "class": 1, "at_us": 1000000}}
+{"id": 4, "method": "submit_gemm", "params": {"m": 16, "k": 8, "n": 8, "seed": 7, "at_us": 1000001}}
+{"id": 5, "method": "not_a_method"}
+{"id": 6, "method": "fleet_status"}
+{"id": 7, "method": "drain"}
+{"id": 8, "method": "submit_gemm", "params": {"m": 4, "k": 4, "n": 4}}
+{"id": 9, "method": "shutdown"}
+"#;
+
+#[test]
+fn transcript_and_summary_are_worker_count_invariant() {
+    let mut h1 = Harness::new(daemon_cfg(1)).unwrap();
+    let mut h4 = Harness::new(daemon_cfg(4)).unwrap();
+    let t1 = h1.run_script(GOLDEN_SCRIPT);
+    let t4 = h4.run_script(GOLDEN_SCRIPT);
+    assert_eq!(
+        t1, t4,
+        "response transcript must be byte-identical across worker counts"
+    );
+    assert_eq!(
+        h1.summary_json().to_string(),
+        h4.summary_json().to_string(),
+        "DAEMON_summary.json must be byte-identical across worker counts"
+    );
+    // The transcript exercised every response kind.
+    assert!(t1.contains("\"cache_hit\":false"));
+    assert!(t1.contains("\"cache_hit\":true"), "repeat gemm must hit the cache");
+    assert!(t1.contains("\"code\":\"protocol_violation\""));
+    assert!(t1.contains("\"code\":\"draining\""));
+    assert!(t1.contains("\"state\":\"shutdown\""));
+    assert_eq!(h1.state(), DaemonState::Shutdown);
+}
+
+#[test]
+fn a_different_seed_changes_the_transcript() {
+    let mut a = Harness::new(daemon_cfg(1)).unwrap();
+    let mut cfg = daemon_cfg(1);
+    cfg.fleet.seed = 7;
+    let mut b = Harness::new(cfg).unwrap();
+    let script = "{\"id\": 1, \"method\": \"submit_trace\", \"params\": {\"requests\": 12}}\n";
+    assert_ne!(
+        a.run_script(script),
+        b.run_script(script),
+        "determinism must not be vacuous"
+    );
+}
+
+#[test]
+fn drain_under_load_completes_everything_admitted_exactly_once() {
+    let mut h = Harness::new(daemon_cfg(1)).unwrap();
+    // Put real load in flight: a trace plus two immediate gemms.
+    let load = h.run_script(
+        "{\"id\": 1, \"method\": \"submit_trace\", \"params\": {\"requests\": 12}}\n\
+         {\"id\": 2, \"method\": \"submit_gemm\", \"params\": {\"m\": 32, \"k\": 16, \"n\": 16}}\n",
+    );
+    assert!(load.contains("\"admitted\":"));
+    let drain = h.handle_line("{\"id\": 3, \"method\": \"drain\"}");
+    assert!(drain.contains("\"state\":\"drained\""), "{drain}");
+
+    let d = h.daemon();
+    let summary = d.summary_json();
+    let accepted = summary.req("accepted").unwrap().as_u64().unwrap();
+    let completed = summary.req("completed").unwrap().as_u64().unwrap();
+    let billed = summary.req("billed").unwrap().as_u64().unwrap();
+    assert!(accepted > 0, "the load must have admitted something");
+    assert_eq!(accepted, completed, "drain must retire every admitted request");
+    assert_eq!(accepted, billed, "nothing lost, nothing double-billed");
+
+    // Idempotent: a second drain reports the same terminal counters and
+    // the original drain latency.
+    let again = h.handle_line("{\"id\": 4, \"method\": \"drain\"}");
+    let first: Vec<&str> = drain.splitn(2, "\"id\":3").collect();
+    let second: Vec<&str> = again.splitn(2, "\"id\":4").collect();
+    assert_eq!(
+        first[1], second[1],
+        "drain must be idempotent: {drain} vs {again}"
+    );
+
+    // Post-drain submissions are typed rejections, counted as such.
+    let rejected = h.handle_line(
+        "{\"id\": 5, \"method\": \"submit_gemm\", \"params\": {\"m\": 4, \"k\": 4, \"n\": 4}}",
+    );
+    assert!(rejected.contains("\"code\":\"draining\""), "{rejected}");
+    let post = h.daemon().summary_json();
+    assert_eq!(
+        post.req("accepted").unwrap().as_u64().unwrap(),
+        accepted,
+        "a rejected submission must leave the accounting untouched"
+    );
+    assert!(
+        post.req("rejected").unwrap().req("draining").unwrap().as_u64().unwrap() >= 1
+    );
+}
+
+#[test]
+fn overload_sheds_with_queue_full_and_never_blocks() {
+    let mut cfg = daemon_cfg(1);
+    cfg.queue_bound = 1;
+    let mut h = Harness::new(cfg).unwrap();
+    // A burst at one modeled instant: nothing retires between arrivals,
+    // so the per-array queues can only grow until the bound sheds.
+    let mut saw_queue_full = false;
+    for i in 0..8 {
+        let line = format!(
+            "{{\"id\": {i}, \"method\": \"submit_gemm\", \
+             \"params\": {{\"m\": 16, \"k\": 8, \"n\": 8, \"at_us\": 0}}}}"
+        );
+        let out = h.handle_line(&line);
+        saw_queue_full |= out.contains("\"code\":\"queue_full\"");
+    }
+    assert!(saw_queue_full, "a same-instant burst must hit the bound");
+    let summary = h.daemon().summary_json();
+    let shed = summary.req("rejected").unwrap().req("queue_full").unwrap().as_u64().unwrap();
+    let accepted = summary.req("accepted").unwrap().as_u64().unwrap();
+    assert!(shed >= 1);
+    assert_eq!(accepted + shed, 8, "every burst request either admitted or shed");
+    // Shed requests were still billed-never: accepted work flushed 1:1.
+    assert_eq!(summary.req("billed").unwrap().as_u64().unwrap(), accepted);
+}
+
+#[test]
+fn unmeetable_deadlines_reject_before_any_state_commits() {
+    let mut h = Harness::new(daemon_cfg(1)).unwrap();
+    let out = h.handle_line(
+        "{\"id\": 1, \"method\": \"submit_gemm\", \
+         \"params\": {\"m\": 512, \"k\": 64, \"n\": 64, \"deadline_us\": 1}}",
+    );
+    assert!(out.contains("\"code\":\"deadline_exceeded\""), "{out}");
+    let summary = h.daemon().summary_json();
+    assert_eq!(summary.req("accepted").unwrap().as_u64().unwrap(), 0);
+    assert_eq!(summary.req("billed").unwrap().as_u64().unwrap(), 0);
+    assert_eq!(
+        summary.req("rejected").unwrap().req("deadline_exceeded").unwrap().as_u64().unwrap(),
+        1
+    );
+    // The rejection still advanced the modeled clock (the arrival
+    // happened), and a meetable deadline is admitted afterwards.
+    let ok = h.handle_line(
+        "{\"id\": 2, \"method\": \"submit_gemm\", \
+         \"params\": {\"m\": 16, \"k\": 8, \"n\": 8, \"deadline_us\": 100000000}}",
+    );
+    assert!(ok.contains("\"latency_us\":"), "{ok}");
+}
+
+#[test]
+fn per_class_watermarks_shed_the_low_class_first() {
+    let mut cfg = daemon_cfg(1);
+    cfg.fleet.classes = 2;
+    cfg.queue_bound = 4;
+    let mut h = Harness::new(cfg).unwrap();
+    // Same-instant burst alternating classes: class 1's watermark is
+    // half of class 0's, so class 1 must shed strictly first.
+    let mut first_shed_class = None;
+    for i in 0..12 {
+        let class = i % 2;
+        let out = h.handle_line(&format!(
+            "{{\"id\": {i}, \"method\": \"submit_gemm\", \
+             \"params\": {{\"m\": 16, \"k\": 8, \"n\": 8, \"class\": {class}, \"at_us\": 0}}}}"
+        ));
+        if out.contains("\"code\":\"queue_full\"") && first_shed_class.is_none() {
+            first_shed_class = Some(class);
+        }
+    }
+    assert_eq!(
+        first_shed_class,
+        Some(1),
+        "the lower-priority class must hit its watermark first"
+    );
+}

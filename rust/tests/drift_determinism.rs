@@ -42,6 +42,7 @@ fn tiny_cfg(workers: usize) -> FleetConfig {
         workers,
         spill_macs: 0,
         gap_us: 0.0,
+        classes: 1,
     }
 }
 
@@ -182,6 +183,7 @@ fn adaptive_fleet_holds_the_postcutover_margin_on_drifted_table1() {
             workers: 0,
             spill_macs: 0,
             gap_us: 0.0,
+            classes: 1,
         },
         arrival: ArrivalProcess::Poisson {
             seed: 0xD21F_7A11,

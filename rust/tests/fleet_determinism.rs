@@ -39,6 +39,7 @@ fn tiny_cfg(workers: usize) -> FleetConfig {
         workers,
         spill_macs: 0,
         gap_us: 0.0,
+        classes: 1,
     }
 }
 
@@ -104,6 +105,7 @@ fn shape_affine_wins_on_the_table1_mix() {
         workers: 0,
         spill_macs: 0,
         gap_us: 0.0,
+        classes: 1,
     };
     let report = run_fleet_comparison(&cfg).unwrap();
     let h = report.headline();
