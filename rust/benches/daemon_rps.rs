@@ -70,6 +70,18 @@ fn main() {
     });
     b.throughput(64.0, "req");
 
+    // Tracing overhead: the same steady-state gemm batch with span
+    // recording on. The acceptance bar is a <5% throughput delta vs the
+    // untraced case above — span recording is two pushes on the modeled
+    // clock, never a syscall.
+    let mut traced_cfg = daemon_cfg();
+    traced_cfg.trace = true;
+    let mut traced_daemon = Harness::new(traced_cfg).expect("daemon");
+    b.case("submit_gemm_32req_warm_traced", || {
+        traced_daemon.run_script(&script)
+    });
+    b.throughput(BATCH as f64, "req");
+
     // Deterministic robustness accounting: a same-instant burst against
     // a tight bound, an unmeetable deadline, then a drain under load.
     let mut cfg = daemon_cfg();

@@ -55,6 +55,7 @@ use crate::fleet::{
 };
 use crate::floorplan::PeGeometry;
 use crate::gemm::Matrix;
+use crate::obs::{RejectCause, Registry, SpanKind, Tracer};
 use crate::power::{self, TechParams};
 use crate::serve::{
     build_requests, operand_digest, InferRequest, InferResponse, ScenarioConfig, ServeConfig,
@@ -91,6 +92,10 @@ pub struct DaemonConfig {
     pub divergence_threshold: f64,
     /// Cache-warmup job period in admissions; `0` = auto `4 × window`.
     pub warm_every: usize,
+    /// Record modeled-time spans for `TRACE_daemon.json`. The metrics
+    /// registry is always on (counters are cheap and feed
+    /// `get_metrics`); span recording is opt-in via `--trace`.
+    pub trace: bool,
 }
 
 impl Default for DaemonConfig {
@@ -102,8 +107,25 @@ impl Default for DaemonConfig {
             reprovision_every: 0,
             divergence_threshold: 0.25,
             warm_every: 0,
+            trace: false,
         }
     }
+}
+
+/// Metric name of the per-cause rejection counter — the **single**
+/// source of truth for shed counts: `fleet_status`, `summary_json` and
+/// the `get_metrics` exposition all read this registry entry, so the
+/// wire counters cannot drift from the exposition.
+fn rejected_metric(cause: RejectCause) -> String {
+    format!("daemon_rejected_total{{cause=\"{}\"}}", cause.name())
+}
+
+/// Metric name of the per-outcome cache lookup counter.
+fn cache_lookup_metric(hit: bool) -> String {
+    format!(
+        "daemon_cache_lookups_total{{result=\"{}\"}}",
+        if hit { "hit" } else { "miss" }
+    )
 }
 
 impl DaemonConfig {
@@ -191,9 +213,6 @@ pub struct Daemon {
     accepted: u64,
     completed: u64,
     billed: u64,
-    rej_queue_full: u64,
-    rej_deadline: u64,
-    rej_draining: u64,
     next_request: u64,
     reprovisions: u64,
     warmup_uj: f64,
@@ -206,6 +225,12 @@ pub struct Daemon {
     seen_digests: HashSet<u64>,
     /// Index into `seen` up to which the warmup job already ran.
     warmed_upto: usize,
+
+    /// Unified metrics (always on): rejection counters live **only**
+    /// here — wire replies read them back out.
+    registry: Registry,
+    /// Modeled-time span recorder (enabled by `cfg.trace`).
+    tracer: Tracer,
 }
 
 impl Daemon {
@@ -252,6 +277,14 @@ impl Daemon {
             None
         };
         let scheduler = Scheduler::new(warm_every as u64, cfg.reprovision_every as u64);
+        let mut tracer = if cfg.trace { Tracer::new() } else { Tracer::off() };
+        tracer.track("daemon");
+        let mut registry = Registry::new();
+        // Pre-touch the rejection counters so the exposition always
+        // lists every cause, even at zero.
+        for cause in RejectCause::ALL {
+            registry.add(&rejected_metric(cause), 0);
+        }
         Ok(Daemon {
             cfg,
             fleet,
@@ -280,9 +313,6 @@ impl Daemon {
             accepted: 0,
             completed: 0,
             billed: 0,
-            rej_queue_full: 0,
-            rej_deadline: 0,
-            rej_draining: 0,
             next_request: 0,
             reprovisions: 0,
             warmup_uj: 0.0,
@@ -290,6 +320,8 @@ impl Daemon {
             seen: Vec::new(),
             seen_digests: HashSet::new(),
             warmed_upto: 0,
+            registry,
+            tracer,
         })
     }
 
@@ -306,6 +338,35 @@ impl Daemon {
     /// Resolved per-array class-0 admission bound.
     pub fn queue_bound(&self) -> usize {
         self.queue_bound
+    }
+
+    /// The span recorder (for trace export).
+    pub fn tracer(&self) -> &Tracer {
+        &self.tracer
+    }
+
+    /// The unified metrics registry.
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// Per-cause rejection count — read back from the registry, the
+    /// single source of truth.
+    fn rejected(&self, cause: RejectCause) -> u64 {
+        self.registry.counter(&rejected_metric(cause))
+    }
+
+    /// The modeled clock as integer µs (half-up).
+    fn clock_us(&self) -> u64 {
+        (self.clock * 1e6).round() as u64
+    }
+
+    /// Count one shed arrival: the registry counter is the only store,
+    /// and the tracer gets the matching cause-typed event.
+    fn note_reject(&mut self, cause: RejectCause, request: u64, class: u8) -> &mut crate::obs::Reject {
+        self.registry.inc(&rejected_metric(cause));
+        let t = self.clock_us();
+        self.tracer.reject(cause, t).request(request).class(class)
     }
 
     // -- modeled clock ------------------------------------------------
@@ -367,7 +428,7 @@ impl Daemon {
         at_us: Option<u64>,
     ) -> Result<Admitted> {
         if self.state != DaemonState::Running {
-            self.rej_draining += 1;
+            self.note_reject(RejectCause::Draining, req.id, class);
             return Err(Error::Draining);
         }
         let t = self.next_arrival(at_us);
@@ -383,10 +444,11 @@ impl Daemon {
 
         let bound = self.watermark(class);
         if self.inflight[a].len() >= bound {
-            self.rej_queue_full += 1;
+            let queued = self.inflight[a].len();
+            self.note_reject(RejectCause::QueueFull, req.id, class).array(a);
             return Err(Error::QueueFull {
                 array: a,
-                queued: self.inflight[a].len(),
+                queued,
                 bound,
             });
         }
@@ -401,7 +463,7 @@ impl Daemon {
         if deadline_us > 0 {
             let projected_us = ((finish - t) * 1e6).round() as u64;
             if projected_us > deadline_us {
-                self.rej_deadline += 1;
+                self.note_reject(RejectCause::DeadlineExceeded, req.id, class).array(a);
                 return Err(Error::DeadlineExceeded {
                     request: req.id,
                     deadline_us,
@@ -410,7 +472,28 @@ impl Daemon {
             }
         }
 
-        // Commit.
+        // Commit. Spans record the request's full modeled critical path
+        // here, at the decision point — begin/end are modeled instants,
+        // so the trace is identical at any worker count.
+        let rid = req.id;
+        let t_us = (t * 1e6).round() as u64;
+        let start_us = (start * 1e6).round() as u64;
+        let finish_us = (finish * 1e6).round() as u64;
+        self.tracer.instant(SpanKind::Admit, t_us).request(rid).class(class);
+        self.tracer.instant(SpanKind::Route, t_us).request(rid).class(class).array(a);
+        if start_us > t_us {
+            self.tracer
+                .span(SpanKind::QueueWait, t_us, start_us)
+                .request(rid)
+                .class(class)
+                .array(a);
+        }
+        self.tracer
+            .span(SpanKind::Engine, start_us, finish_us)
+            .request(rid)
+            .class(class)
+            .array(a);
+        self.registry.observe("daemon_latency_us", ((finish - t) * 1e6).round());
         self.busy_until[a] = finish;
         let macs = req.macs();
         self.inflight[a].push_back((finish, macs));
@@ -439,7 +522,10 @@ impl Daemon {
     }
 
     /// Flush one array's pending batch through its engines; counts the
-    /// flushed requests as billed.
+    /// flushed requests as billed. Each billed response gets its
+    /// terminal `bill` span (plus a `cache_lookup` instant), closing the
+    /// span accounting: one `bill` or one rejection event per admission
+    /// decision.
     fn flush(&mut self, a: usize) -> Result<Vec<InferResponse>> {
         let responses = flush_array(
             &self.fleet.arrays()[a],
@@ -449,6 +535,15 @@ impl Daemon {
             &mut self.accs[a],
         )?;
         self.billed += responses.len() as u64;
+        let t = self.clock_us();
+        if !responses.is_empty() {
+            self.tracer.instant(SpanKind::Batch, t).array(a);
+        }
+        for r in &responses {
+            self.registry.inc(&cache_lookup_metric(r.cache_hit));
+            self.tracer.instant(SpanKind::CacheLookup, t).request(r.id).array(a);
+            self.tracer.instant(SpanKind::Bill, t).request(r.id).array(a);
+        }
         Ok(responses)
     }
 
@@ -481,6 +576,9 @@ impl Daemon {
         }
         let fresh: Vec<InferRequest> = self.seen[self.warmed_upto..].to_vec();
         self.warmed_upto = self.seen.len();
+        let t = self.clock_us();
+        self.tracer.instant(SpanKind::Warmup, t);
+        self.registry.inc("daemon_warmups_total");
         let window = self.cfg.fleet.window.max(1);
         for a in 0..self.fleet.arrays().len() {
             let responses = self.fleet.arrays()[a].server.warm_cache(&fresh, window)?;
@@ -540,6 +638,9 @@ impl Daemon {
         }
         self.warmed_upto = self.seen.len();
         self.reprovisions += 1;
+        let t = self.clock_us();
+        self.tracer.instant(SpanKind::Reprovision, t);
+        self.registry.inc("daemon_reprovisions_total");
         Ok(())
     }
 
@@ -564,6 +665,7 @@ impl Daemon {
                 deadline_us,
             } => self.submit_trace(requests, unique_inputs, seed, deadline_us),
             Request::FleetStatus => Ok(self.fleet_status()),
+            Request::GetMetrics => Ok(self.get_metrics()),
             Request::Drain => self.drain(),
             Request::Shutdown => self.shutdown(),
         }
@@ -647,7 +749,7 @@ impl Daemon {
         deadline_us: Option<u64>,
     ) -> Result<Json> {
         if self.state != DaemonState::Running {
-            self.rej_draining += 1;
+            self.note_reject(RejectCause::Draining, self.next_request, 0);
             return Err(Error::Draining);
         }
         let fcfg = &self.cfg.fleet;
@@ -664,8 +766,12 @@ impl Daemon {
 
         let uj_before: f64 = self.accs.iter().map(|a| a.interconnect_uj).sum();
         let total_before: f64 = self.accs.iter().map(|a| a.total_uj).sum();
+        // Per-call shed counts are registry deltas — the registry is the
+        // only rejection store, so the reply cannot drift from it.
+        let queue_before = self.rejected(RejectCause::QueueFull);
+        let deadline_before = self.rejected(RejectCause::DeadlineExceeded);
         let mut trace_lat = ClassLatencies::new();
-        let (mut admitted, mut shed_queue, mut shed_deadline) = (0u64, 0u64, 0u64);
+        let mut admitted = 0u64;
         let submitted = trace.len() as u64;
         for (i, mut req) in trace.into_iter().enumerate() {
             req.id = self.next_request;
@@ -679,11 +785,12 @@ impl Daemon {
                         self.flush(adm.array)?;
                     }
                 }
-                Err(Error::QueueFull { .. }) => shed_queue += 1,
-                Err(Error::DeadlineExceeded { .. }) => shed_deadline += 1,
+                Err(Error::QueueFull { .. }) | Err(Error::DeadlineExceeded { .. }) => {}
                 Err(e) => return Err(e),
             }
         }
+        let shed_queue = self.rejected(RejectCause::QueueFull) - queue_before;
+        let shed_deadline = self.rejected(RejectCause::DeadlineExceeded) - deadline_before;
         for a in 0..self.fleet.arrays().len() {
             self.flush(a)?;
         }
@@ -747,14 +854,7 @@ impl Daemon {
             ),
             ("queue_bound", Json::Num(self.queue_bound as f64)),
             ("reprovisions", Json::Num(self.reprovisions as f64)),
-            (
-                "rejected",
-                obj(vec![
-                    ("queue_full", Json::Num(self.rej_queue_full as f64)),
-                    ("deadline_exceeded", Json::Num(self.rej_deadline as f64)),
-                    ("draining", Json::Num(self.rej_draining as f64)),
-                ]),
-            ),
+            ("rejected", self.rejected_json()),
             (
                 "cache",
                 obj(vec![
@@ -763,8 +863,76 @@ impl Daemon {
                     ("len", Json::Num(len as f64)),
                 ]),
             ),
+            ("drift", self.drift_json()),
             ("arrays", arrays),
         ])
+    }
+
+    /// Per-cause rejection counters, read from the registry.
+    fn rejected_json(&self) -> Json {
+        obj(RejectCause::ALL
+            .iter()
+            .map(|&c| (c.name(), Json::Num(self.rejected(c) as f64)))
+            .collect())
+    }
+
+    /// The drift tracker's live view: windowed per-layer mix and
+    /// total-variation divergence. Always present (zeros and an empty
+    /// mix when drift detection is off) so the status schema is stable.
+    fn drift_json(&self) -> Json {
+        match self.tracker.as_ref() {
+            Some(t) => obj(vec![
+                ("divergence", Json::Num(t.divergence())),
+                (
+                    "mix",
+                    Json::Arr(t.weights().into_iter().map(Json::Num).collect()),
+                ),
+                ("warm", Json::Bool(t.warm())),
+                ("window", Json::Num(self.cfg.reprovision_every as f64)),
+            ]),
+            None => obj(vec![
+                ("divergence", Json::Num(0.0)),
+                ("mix", Json::Arr(Vec::new())),
+                ("warm", Json::Bool(false)),
+                ("window", Json::Num(0.0)),
+            ]),
+        }
+    }
+
+    /// `get_metrics`: sync the point-in-time gauges into the registry
+    /// and return the full Prometheus-style text exposition.
+    fn get_metrics(&mut self) -> Json {
+        let (mut hits, mut misses) = (0u64, 0u64);
+        for arr in self.fleet.arrays() {
+            let s = arr.server.cache_stats();
+            hits += s.hits;
+            misses += s.misses;
+        }
+        let len = self.fleet.result_cache().lock().expect("cache poisoned").len();
+        self.registry.set_gauge("daemon_accepted", self.accepted as f64);
+        self.registry.set_gauge("daemon_completed", self.completed as f64);
+        self.registry.set_gauge("daemon_billed", self.billed as f64);
+        self.registry.set_gauge(
+            "daemon_inflight",
+            self.inflight.iter().map(|q| q.len()).sum::<usize>() as f64,
+        );
+        self.registry.set_gauge("daemon_clock_us", (self.clock * 1e6).round());
+        self.registry.set_gauge("daemon_cache_hits", hits as f64);
+        self.registry.set_gauge("daemon_cache_misses", misses as f64);
+        self.registry.set_gauge("daemon_cache_len", len as f64);
+        self.registry.set_gauge("daemon_warmup_uj", self.warmup_uj);
+        self.registry.set_gauge("daemon_reprovisions", self.reprovisions as f64);
+        let (div, warm) = match self.tracker.as_ref() {
+            Some(t) => (t.divergence(), t.warm()),
+            None => (0.0, false),
+        };
+        self.registry.set_gauge("daemon_drift_divergence", div);
+        self.registry
+            .set_gauge("daemon_drift_warm", if warm { 1.0 } else { 0.0 });
+        obj(vec![(
+            "exposition",
+            Json::Str(self.registry.render_text()),
+        )])
     }
 
     /// Terminal counters shared by `drain` and `shutdown` replies.
@@ -804,6 +972,11 @@ impl Daemon {
             self.clock = horizon;
             self.retire(horizon);
             self.drain_latency_us = Some(((horizon - drain_instant) * 1e6).round() as u64);
+            self.tracer.span(
+                SpanKind::Drain,
+                (drain_instant * 1e6).round() as u64,
+                (horizon * 1e6).round() as u64,
+            );
             if self.state == DaemonState::Running {
                 self.state = DaemonState::Drained;
             }
@@ -871,14 +1044,7 @@ impl Daemon {
             ("accepted", Json::Num(self.accepted as f64)),
             ("completed", Json::Num(self.completed as f64)),
             ("billed", Json::Num(self.billed as f64)),
-            (
-                "rejected",
-                obj(vec![
-                    ("queue_full", Json::Num(self.rej_queue_full as f64)),
-                    ("deadline_exceeded", Json::Num(self.rej_deadline as f64)),
-                    ("draining", Json::Num(self.rej_draining as f64)),
-                ]),
-            ),
+            ("rejected", self.rejected_json()),
             ("reprovisions", Json::Num(self.reprovisions as f64)),
             ("warmup_uj", Json::Num(self.warmup_uj)),
             (

@@ -44,6 +44,8 @@ pub enum Request {
     },
     /// Read-only snapshot.
     FleetStatus,
+    /// Prometheus-style text exposition of the unified metrics registry.
+    GetMetrics,
     /// Graceful drain.
     Drain,
     /// Drain (if running) and go terminal.
@@ -158,6 +160,10 @@ fn parse_request(doc: &Json) -> Result<Request> {
             check_keys(params, &[])?;
             Ok(Request::FleetStatus)
         }
+        "get_metrics" => {
+            check_keys(params, &[])?;
+            Ok(Request::GetMetrics)
+        }
         "drain" => {
             check_keys(params, &[])?;
             Ok(Request::Drain)
@@ -226,8 +232,15 @@ mod tests {
     #[test]
     fn bare_methods_parse_without_params() {
         assert_eq!(parse_ok(r#"{"method": "fleet_status"}"#), Request::FleetStatus);
+        assert_eq!(parse_ok(r#"{"method": "get_metrics"}"#), Request::GetMetrics);
         assert_eq!(parse_ok(r#"{"method": "drain", "params": {}}"#), Request::Drain);
         assert_eq!(parse_ok(r#"{"method": "shutdown"}"#), Request::Shutdown);
+    }
+
+    #[test]
+    fn get_metrics_rejects_params() {
+        let rendered = parse_code(r#"{"method": "get_metrics", "params": {"x": 1}}"#);
+        assert!(rendered.contains("unknown parameter `x`"), "{rendered}");
     }
 
     #[test]

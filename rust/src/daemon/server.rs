@@ -15,6 +15,7 @@ use std::thread;
 use std::time::Duration;
 
 use crate::error::{Error, Result};
+use crate::obs::log;
 use crate::report::daemon_markdown;
 
 use super::protocol::{parse_line, render_err, render_ok};
@@ -40,13 +41,17 @@ fn handle_shared(daemon: &Mutex<Daemon>, line: &str) -> (String, bool) {
 }
 
 /// Serve `cfg` on `socket` until a `shutdown` request, then write the
-/// final `DAEMON_summary.json` / markdown report (when paths are given)
-/// and remove the socket file.
+/// final `DAEMON_summary.json` / markdown report / trace artifacts
+/// (when paths are given) and remove the socket file. Operational
+/// events go through [`crate::obs::log`], so stderr is one parseable
+/// logfmt line per event and `--quiet` silences everything below
+/// `error`.
 pub fn run_server(
     cfg: DaemonConfig,
     socket: &Path,
     json_path: Option<&Path>,
     md_path: Option<&Path>,
+    trace_path: Option<&Path>,
 ) -> Result<()> {
     let daemon = Arc::new(Mutex::new(Daemon::new(cfg)?));
     if socket.exists() {
@@ -58,7 +63,7 @@ pub fn run_server(
         }
     }
     let listener = UnixListener::bind(socket)?;
-    eprintln!("daemon: listening on {}", socket.display());
+    log::info("daemon", &format!("listening on {}", socket.display()));
 
     let stop = Arc::new(AtomicBool::new(false));
     let ticker = {
@@ -85,14 +90,22 @@ pub fn run_server(
 
     stop.store(true, Ordering::Relaxed);
     let _ = ticker.join();
-    let d = daemon.lock().expect("daemon poisoned");
+    let mut d = daemon.lock().expect("daemon poisoned");
     if let Some(path) = json_path {
         write_text(path, &(d.summary_json().to_string() + "\n"))?;
-        eprintln!("daemon: wrote {}", path.display());
+        log::info("daemon", &format!("wrote {}", path.display()));
     }
     if let Some(path) = md_path {
         write_text(path, &daemon_markdown(d.config(), &d.summary_json()))?;
-        eprintln!("daemon: wrote {}", path.display());
+        log::info("daemon", &format!("wrote {}", path.display()));
+    }
+    if let Some(path) = trace_path {
+        // Syncing the gauges before export keeps the `.prom` sibling
+        // identical to a final `get_metrics` reply.
+        let _ = d.handle(super::Request::GetMetrics)?;
+        for p in crate::obs::write_trace_artifacts(path, d.tracer(), d.registry())? {
+            log::info("daemon", &format!("wrote {}", p.display()));
+        }
     }
     fs::remove_file(socket)?;
     Ok(())
@@ -182,7 +195,7 @@ mod tests {
         fs::create_dir_all(&dir).unwrap();
         let socket = dir.join("smoke.sock");
         let server_socket = socket.clone();
-        let server = thread::spawn(move || run_server(tiny_cfg(), &server_socket, None, None));
+        let server = thread::spawn(move || run_server(tiny_cfg(), &server_socket, None, None, None));
         // Wait for the listener to come up.
         let mut tries = 0;
         let got = loop {

@@ -8,7 +8,8 @@
 //! byte-identical to the `repro fleet` path at any worker count
 //! (asserted by `tests/chaos_determinism.rs`). Each scenario then
 //! replays every `(fleet, policy)` pair through the failure-aware
-//! [`run_policy_chaos`] under a [`FaultPlan`] drawn from the scenario
+//! [`run_policy_chaos`](crate::fleet::run_policy_chaos) under a
+//! [`FaultPlan`] drawn from the scenario
 //! RNG, and the report distills per-scenario [`Degradation`] —
 //! latency-percentile inflation, completion rate, and the modeled
 //! energy overhead of recovery (degraded-mode service + spare cache
@@ -18,8 +19,8 @@ use crate::bench_util::Bench;
 use crate::error::{Error, Result};
 use crate::fleet::{
     build_trace, modeled_knobs, provision_spare_with, provisioning_explorer,
-    run_fleet_comparison_with, run_json, run_policy_chaos, spec_json, summary_json, ArraySpec,
-    FleetConfig, FleetReport, PolicyRun, RoutePolicy, HETEROGENEOUS, SQUARE,
+    run_fleet_comparison_with, run_json, spec_json, summary_json, ArraySpec, FleetConfig,
+    FleetReport, PolicyRun, RoutePolicy, HETEROGENEOUS, SQUARE,
 };
 use crate::power::TechParams;
 use crate::util::json::{obj, Json};
@@ -230,6 +231,19 @@ pub struct ChaosHeadline {
 /// same report (and byte-identical [`chaos_bench`] JSON) at any worker
 /// count — asserted by `tests/chaos_determinism.rs`.
 pub fn run_chaos_comparison(ccfg: &ChaosConfig) -> Result<ChaosReport> {
+    run_chaos_comparison_traced(ccfg, &mut crate::obs::Tracer::off())
+}
+
+/// [`run_chaos_comparison`] with span tracing on the modeled clock:
+/// each scenario lane records onto a track named
+/// `s{scenario}/{fleet}/{policy}` (the fault-free baseline stays
+/// untraced — `repro fleet --trace` covers it). Retries, failovers,
+/// warmups and terminal queue-full rejections land in the export
+/// alongside the admission/engine spans.
+pub fn run_chaos_comparison_traced(
+    ccfg: &ChaosConfig,
+    tracer: &mut crate::obs::Tracer,
+) -> Result<ChaosReport> {
     ccfg.validate()?;
     let cfg = &ccfg.fleet;
     // One provisioning explorer backs both the baseline comparison and
@@ -256,7 +270,12 @@ pub fn run_chaos_comparison(ccfg: &ChaosConfig) -> Result<ChaosReport> {
             (SQUARE, &baseline.plan.square),
         ] {
             for policy in RoutePolicy::ALL {
-                runs.push(run_policy_chaos(
+                tracer.track(&format!("s{s}/{label}/{}", policy.name()));
+                let arrivals = crate::fleet::ArrivalPlan::round_robin_classes(
+                    crate::fleet::ArrivalProcess::FixedGap.times(trace.len(), gap_secs)?,
+                    cfg.classes,
+                );
+                runs.push(crate::fleet::run_policy_chaos_arrivals_traced(
                     specs,
                     label,
                     policy,
@@ -265,9 +284,11 @@ pub fn run_chaos_comparison(ccfg: &ChaosConfig) -> Result<ChaosReport> {
                     &ccfg.knobs,
                     &plan,
                     spare.as_ref(),
+                    &arrivals,
                     gap_secs,
                     spill_macs,
                     &tech,
+                    tracer,
                 )?);
             }
         }

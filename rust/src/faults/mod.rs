@@ -30,8 +30,8 @@
 pub mod chaos;
 
 pub use chaos::{
-    chaos_bench, chaos_summary_json, run_chaos_comparison, ChaosConfig, ChaosHeadline,
-    ChaosReport, Degradation, ScenarioOutcome,
+    chaos_bench, chaos_summary_json, run_chaos_comparison, run_chaos_comparison_traced,
+    ChaosConfig, ChaosHeadline, ChaosReport, Degradation, ScenarioOutcome,
 };
 
 use crate::error::{Error, Result};

@@ -44,6 +44,7 @@ use crate::error::{Error, Result};
 use crate::explore::Explorer;
 use crate::faults::ArrayRobustness;
 use crate::floorplan::PeGeometry;
+use crate::obs::{SpanKind, Tracer};
 use crate::power::{self, TechParams};
 use crate::serve::{
     build_requests, operand_digest, InferRequest, ScenarioConfig, ServeConfig, Server, ShapeKey,
@@ -53,7 +54,7 @@ use crate::util::json::{obj, Json};
 use super::arrival::{ArrivalPlan, ArrivalProcess};
 use super::{
     flush_array, modeled_knobs, provision_with, provisioning_explorer, run_json,
-    run_policy_arrivals, select_frontier, spec_json, ArrayAcc, ArrayRun, ArraySpec, Fleet,
+    run_policy_arrivals_traced, select_frontier, spec_json, ArrayAcc, ArrayRun, ArraySpec, Fleet,
     FleetArray, FleetConfig, FleetPlan, PolicyRun, RoutePolicy, Router,
 };
 
@@ -386,10 +387,11 @@ fn drift_run(
     tech: &TechParams,
     detect: bool,
     forced_boundary: Option<usize>,
+    tracer: &mut Tracer,
 ) -> Result<DriftRun> {
     if !detect && forced_boundary.is_none() {
         let fleet = Fleet::build(label, specs, cfg)?;
-        let run = run_policy_arrivals(
+        let run = run_policy_arrivals_traced(
             &fleet,
             RoutePolicy::ShapeAffine,
             trace,
@@ -397,6 +399,7 @@ fn drift_run(
             arrivals,
             spill_macs,
             tech,
+            tracer,
         )?;
         let pre = run.interconnect_uj;
         return Ok(DriftRun {
@@ -506,6 +509,27 @@ fn drift_run(
         if in_post {
             lat_post_secs.push(done - t);
         }
+        if tracer.is_enabled() {
+            let class = arrivals.classes[i];
+            let t_us = (t * 1e6).round() as u64;
+            let start_us = (start * 1e6).round() as u64;
+            let done_us = (done * 1e6).round() as u64;
+            tracer.instant(SpanKind::Admit, t_us).request(req.id).class(class);
+            tracer.instant(SpanKind::Route, t_us).request(req.id).class(class).array(a);
+            if start_us > t_us {
+                tracer
+                    .span(SpanKind::QueueWait, t_us, start_us)
+                    .request(req.id)
+                    .class(class)
+                    .array(a);
+            }
+            tracer
+                .span(SpanKind::Engine, start_us, done_us)
+                .request(req.id)
+                .class(class)
+                .array(a);
+            tracer.instant(SpanKind::Bill, done_us).request(req.id).class(class).array(a);
+        }
 
         let accs = if in_post { &mut accs_post } else { &mut accs_pre };
         accs[a].requests += 1;
@@ -583,11 +607,17 @@ fn drift_run(
                         geoms[a] = geom;
                         cycle_fj[a] = sp.cycle_cost_fj(tech);
                         rob[a].promotions += 1;
+                        if tracer.is_enabled() {
+                            tracer.instant(SpanKind::Warmup, (t * 1e6).round() as u64).array(a);
+                        }
                     }
                     adapted = true;
                     in_post = true;
                     cutover_index = Some(rank + 1);
                     cutover_secs = Some(t);
+                    if tracer.is_enabled() {
+                        tracer.instant(SpanKind::Reprovision, (t * 1e6).round() as u64);
+                    }
                 }
             }
         }
@@ -674,6 +704,17 @@ fn drift_run(
 /// Deterministic: the same configuration produces the same report (and
 /// byte-identical [`drift_bench`] JSON) at any worker count.
 pub fn run_drift_comparison(dcfg: &DriftConfig) -> Result<DriftReport> {
+    run_drift_comparison_traced(dcfg, &mut Tracer::off())
+}
+
+/// [`run_drift_comparison`] with span tracing on the modeled clock:
+/// the adaptive lane records onto track `adaptive` (including the
+/// `reprovision` instant and per-slot `warmup` instants at cutover),
+/// the static lane onto track `static`.
+pub fn run_drift_comparison_traced(
+    dcfg: &DriftConfig,
+    tracer: &mut Tracer,
+) -> Result<DriftReport> {
     dcfg.validate()?;
     let cfg = &dcfg.fleet;
     // One explorer backs provisioning *and* the mid-trace re-sweep: the
@@ -687,6 +728,7 @@ pub fn run_drift_comparison(dcfg: &DriftConfig) -> Result<DriftReport> {
     let arrivals =
         ArrivalPlan::round_robin_classes(dcfg.arrival.times(trace.len(), gap_secs)?, cfg.classes);
 
+    tracer.track("adaptive");
     let adaptive = drift_run(
         &explorer,
         "adaptive",
@@ -699,7 +741,9 @@ pub fn run_drift_comparison(dcfg: &DriftConfig) -> Result<DriftReport> {
         &tech,
         dcfg.detect_window > 0,
         None,
+        tracer,
     )?;
+    tracer.track("static");
     let static_run = drift_run(
         &explorer,
         "static",
@@ -712,6 +756,7 @@ pub fn run_drift_comparison(dcfg: &DriftConfig) -> Result<DriftReport> {
         &tech,
         false,
         adaptive.cutover_index,
+        tracer,
     )?;
 
     Ok(DriftReport {

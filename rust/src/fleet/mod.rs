@@ -55,8 +55,8 @@ pub mod router;
 
 pub use arrival::{ArrivalPlan, ArrivalProcess};
 pub use drift::{
-    drift_bench, drift_summary_json, run_drift_comparison, DriftConfig, DriftHeadline,
-    DriftReport, DriftRun, MixTracker,
+    drift_bench, drift_summary_json, run_drift_comparison, run_drift_comparison_traced,
+    DriftConfig, DriftHeadline, DriftReport, DriftRun, MixTracker,
 };
 pub(crate) use drift::shape_bins;
 pub use provision::{
@@ -75,6 +75,7 @@ use crate::error::{Error, Result};
 use crate::explore::{Explorer, WorkloadKind};
 use crate::faults::{backoff_secs, ArrayRobustness, ChaosKnobs, FaultKind, FaultPlan, HealthTracker};
 use crate::floorplan::PeGeometry;
+use crate::obs::{RejectCause, SpanKind, Tracer};
 use crate::power::{self, TechParams};
 use crate::serve::{
     build_requests, operand_digest, CacheStats, InferRequest, ResultCache, ScenarioConfig,
@@ -489,6 +490,38 @@ pub fn run_policy_arrivals(
     spill_macs: u64,
     tech: &TechParams,
 ) -> Result<PolicyRun> {
+    run_policy_arrivals_traced(
+        fleet,
+        policy,
+        trace,
+        cfg,
+        arrivals,
+        spill_macs,
+        tech,
+        &mut Tracer::off(),
+    )
+}
+
+/// [`run_policy_arrivals`] with span tracing on the modeled clock:
+/// each admission records `admit`/`route` instants at the arrival
+/// instant, a `queue_wait` span when the chosen array is busy, the
+/// `engine` service span, and a terminal `bill` instant at the modeled
+/// finish — all attributed with request id, priority class and array
+/// slot, on the tracer's current track. Recording reads only modeled
+/// quantities, so traced exports are byte-identical at any worker
+/// count; with a disabled tracer ([`Tracer::off`]) the run is the
+/// plain [`run_policy_arrivals`].
+#[allow(clippy::too_many_arguments)]
+pub fn run_policy_arrivals_traced(
+    fleet: &Fleet,
+    policy: RoutePolicy,
+    trace: &[InferRequest],
+    cfg: &FleetConfig,
+    arrivals: &ArrivalPlan,
+    spill_macs: u64,
+    tech: &TechParams,
+    tracer: &mut Tracer,
+) -> Result<PolicyRun> {
     if arrivals.len() != trace.len() {
         return Err(Error::config(format!(
             "arrival plan schedules {} requests for a {}-request trace",
@@ -565,6 +598,27 @@ pub fn run_policy_arrivals(
         outstanding[a] += macs;
         lat_secs.push(done - t);
         class_lat.record(arrivals.classes[i], done - t);
+        if tracer.is_enabled() {
+            let class = arrivals.classes[i];
+            let t_us = (t * 1e6).round() as u64;
+            let start_us = (start * 1e6).round() as u64;
+            let done_us = (done * 1e6).round() as u64;
+            tracer.instant(SpanKind::Admit, t_us).request(req.id).class(class);
+            tracer.instant(SpanKind::Route, t_us).request(req.id).class(class).array(a);
+            if start_us > t_us {
+                tracer
+                    .span(SpanKind::QueueWait, t_us, start_us)
+                    .request(req.id)
+                    .class(class)
+                    .array(a);
+            }
+            tracer
+                .span(SpanKind::Engine, start_us, done_us)
+                .request(req.id)
+                .class(class)
+                .array(a);
+            tracer.instant(SpanKind::Bill, done_us).request(req.id).class(class).array(a);
+        }
 
         accs[a].requests += 1;
         if inflight[a].len() > accs[a].queue_peak {
@@ -709,6 +763,7 @@ fn retire_chaos(
     lat_secs: &mut Vec<f64>,
     class_lat: &mut ClassLatencies,
     completed: &mut u64,
+    tracer: &mut Tracer,
 ) -> Result<()> {
     for a in 0..fleet.arrays.len() {
         while let Some(f) = inflight[a].front().copied() {
@@ -720,6 +775,13 @@ fn retire_chaos(
             lat_secs.push(f.finish - f.t0);
             class_lat.record(classes[f.idx], f.finish - f.t0);
             *completed += 1;
+            if tracer.is_enabled() {
+                tracer
+                    .instant(SpanKind::Bill, (f.finish * 1e6).round() as u64)
+                    .request(trace[f.idx].id)
+                    .class(classes[f.idx])
+                    .array(a);
+            }
             retired[a].push(trace[f.idx].clone());
             if retired[a].len() >= window {
                 flush_array(&fleet.arrays[a], &geoms[a], tech, &mut retired[a], &mut accs[a])?;
@@ -802,6 +864,50 @@ pub fn run_policy_chaos_arrivals(
     spill_macs: u64,
     tech: &TechParams,
 ) -> Result<PolicyRun> {
+    run_policy_chaos_arrivals_traced(
+        specs,
+        label,
+        policy,
+        trace,
+        cfg,
+        knobs,
+        plan,
+        spare,
+        arrivals,
+        gap_secs,
+        spill_macs,
+        tech,
+        &mut Tracer::off(),
+    )
+}
+
+/// [`run_policy_chaos_arrivals`] with span tracing on the modeled
+/// clock. On top of the fault-free spans (`admit` on first arrival,
+/// `route`/`queue_wait`/`engine` per successful admission, terminal
+/// `bill` at retirement), the chaos loop records `retry` instants for
+/// every backoff re-arrival (route failures and death casualties
+/// alike), `failover` instants when a request lands away from its
+/// preferred array, a `warmup` instant at hot-spare promotion, and a
+/// cause-typed `queue_full` rejection event when a request exhausts
+/// its retry budget against a full queue. Engine spans of requests a
+/// dying array never finished stay in the trace without a matching
+/// `bill` — the work *was* modeled, then invalidated.
+#[allow(clippy::too_many_arguments)]
+pub fn run_policy_chaos_arrivals_traced(
+    specs: &[ArraySpec],
+    label: &str,
+    policy: RoutePolicy,
+    trace: &[InferRequest],
+    cfg: &FleetConfig,
+    knobs: &ChaosKnobs,
+    plan: &FaultPlan,
+    spare: Option<&ArraySpec>,
+    arrivals: &ArrivalPlan,
+    gap_secs: f64,
+    spill_macs: u64,
+    tech: &TechParams,
+    tracer: &mut Tracer,
+) -> Result<PolicyRun> {
     if arrivals.len() != trace.len() {
         return Err(Error::config(format!(
             "arrival plan schedules {} requests for a {}-request trace",
@@ -811,7 +917,9 @@ pub fn run_policy_chaos_arrivals(
     }
     if plan.is_empty() {
         let fleet = Fleet::build(label, specs, cfg)?;
-        return run_policy_arrivals(&fleet, policy, trace, cfg, arrivals, spill_macs, tech);
+        return run_policy_arrivals_traced(
+            &fleet, policy, trace, cfg, arrivals, spill_macs, tech, tracer,
+        );
     }
 
     let mut fleet = Fleet::build(label, specs, cfg)?;
@@ -893,7 +1001,9 @@ pub fn run_policy_chaos_arrivals(
             &mut lat_secs,
             &mut class_lat,
             &mut completed,
+            tracer,
         )?;
+        let t_us = (t * 1e6).round() as u64;
         match item.ev {
             ChaosEv::Fault { event } => {
                 let ev = plan.events[event];
@@ -925,6 +1035,13 @@ pub fn run_policy_chaos_arrivals(
                             } else {
                                 rob[a].retries += 1;
                                 fleet.arrays[a].server.metrics().record_retry();
+                                if tracer.is_enabled() {
+                                    tracer
+                                        .instant(SpanKind::Retry, t_us)
+                                        .request(trace[f.idx].id)
+                                        .class(arrivals.classes[f.idx])
+                                        .array(a);
+                                }
                                 heap.push(ChaosItem {
                                     time: t + backoff_secs(backoff_base, attempts),
                                     seq: next_seq,
@@ -979,12 +1096,21 @@ pub fn run_policy_chaos_arrivals(
                             specs_live[a] = sp.clone();
                             health.revive(a);
                             rob[a].promotions += 1;
+                            if tracer.is_enabled() {
+                                tracer.instant(SpanKind::Warmup, t_us).array(a);
+                            }
                         }
                     }
                 }
             }
             ChaosEv::Arrive { idx, t0, attempt } => {
                 let req = &trace[idx];
+                if tracer.is_enabled() && attempt == 0 {
+                    tracer
+                        .instant(SpanKind::Admit, t_us)
+                        .request(req.id)
+                        .class(arrivals.classes[idx]);
+                }
                 let shape = req.shape();
                 if policy == RoutePolicy::ShapeAffine {
                     for a in 0..n {
@@ -1013,6 +1139,13 @@ pub fn run_policy_chaos_arrivals(
                         if let Some(p) = out.failed_over_from {
                             rob[p].failovers += 1;
                             fleet.arrays[p].server.metrics().record_failover();
+                            if tracer.is_enabled() {
+                                tracer
+                                    .instant(SpanKind::Failover, t_us)
+                                    .request(req.id)
+                                    .class(arrivals.classes[idx])
+                                    .array(out.chosen);
+                            }
                         }
                         let a = out.chosen;
                         let service =
@@ -1028,6 +1161,24 @@ pub fn run_policy_chaos_arrivals(
                         let start = if busy_until[a] > t { busy_until[a] } else { t };
                         let done = start + service;
                         busy_until[a] = done;
+                        if tracer.is_enabled() {
+                            let class = arrivals.classes[idx];
+                            let start_us = (start * 1e6).round() as u64;
+                            let done_us = (done * 1e6).round() as u64;
+                            tracer.instant(SpanKind::Route, t_us).request(req.id).class(class).array(a);
+                            if start_us > t_us {
+                                tracer
+                                    .span(SpanKind::QueueWait, t_us, start_us)
+                                    .request(req.id)
+                                    .class(class)
+                                    .array(a);
+                            }
+                            tracer
+                                .span(SpanKind::Engine, start_us, done_us)
+                                .request(req.id)
+                                .class(class)
+                                .array(a);
+                        }
                         let macs = req.macs();
                         inflight[a].push_back(ChaosInflight {
                             finish: done,
@@ -1063,9 +1214,25 @@ pub fn run_policy_chaos_arrivals(
                             knobs.check_loss(req.id, attempts)?;
                             lost += 1;
                             rob[blamed].lost += 1;
+                            if tracer.is_enabled() {
+                                if let Error::QueueFull { .. } = &e {
+                                    tracer
+                                        .reject(RejectCause::QueueFull, t_us)
+                                        .request(req.id)
+                                        .class(arrivals.classes[idx])
+                                        .array(blamed);
+                                }
+                            }
                         } else {
                             rob[blamed].retries += 1;
                             fleet.arrays[blamed].server.metrics().record_retry();
+                            if tracer.is_enabled() {
+                                tracer
+                                    .instant(SpanKind::Retry, t_us)
+                                    .request(req.id)
+                                    .class(arrivals.classes[idx])
+                                    .array(blamed);
+                            }
                             heap.push(ChaosItem {
                                 time: t + backoff_secs(backoff_base, attempts),
                                 seq: next_seq,
@@ -1099,6 +1266,7 @@ pub fn run_policy_chaos_arrivals(
         &mut lat_secs,
         &mut class_lat,
         &mut completed,
+        tracer,
     )?;
     for a in 0..n {
         flush_array(&fleet.arrays[a], &geoms[a], tech, &mut retired[a], &mut accs[a])?;
@@ -1281,6 +1449,23 @@ pub fn run_fleet_comparison(cfg: &FleetConfig) -> Result<FleetReport> {
 /// both the comparison and any related provisioning calls (e.g. the
 /// chaos spare).
 pub fn run_fleet_comparison_with(explorer: &Explorer, cfg: &FleetConfig) -> Result<FleetReport> {
+    run_fleet_comparison_traced_with(explorer, cfg, &mut Tracer::off())
+}
+
+/// [`run_fleet_comparison`] with span tracing: every `(fleet, policy)`
+/// lane records onto its own trace track named `{fleet}/{policy}`, so
+/// the export shows all six admission timelines side by side.
+pub fn run_fleet_comparison_traced(cfg: &FleetConfig, tracer: &mut Tracer) -> Result<FleetReport> {
+    run_fleet_comparison_traced_with(&provision::provisioning_explorer(cfg)?, cfg, tracer)
+}
+
+/// [`run_fleet_comparison_with`] plus the tracer — the body both
+/// wrappers share.
+pub fn run_fleet_comparison_traced_with(
+    explorer: &Explorer,
+    cfg: &FleetConfig,
+    tracer: &mut Tracer,
+) -> Result<FleetReport> {
     cfg.validate()?;
     let plan = provision_with(explorer, cfg)?;
     let trace = build_trace(cfg)?;
@@ -1294,8 +1479,13 @@ pub fn run_fleet_comparison_with(explorer: &Explorer, cfg: &FleetConfig) -> Resu
             // every run pays its own cold simulations, so cache
             // counters stay comparable.
             let fleet = Fleet::build(label, specs, cfg)?;
-            runs.push(run_policy(
-                &fleet, policy, &trace, cfg, gap_secs, spill_macs, &tech,
+            tracer.track(&format!("{label}/{}", policy.name()));
+            let arrivals = ArrivalPlan::round_robin_classes(
+                ArrivalProcess::FixedGap.times(trace.len(), gap_secs)?,
+                cfg.classes,
+            );
+            runs.push(run_policy_arrivals_traced(
+                &fleet, policy, &trace, cfg, &arrivals, spill_macs, &tech, tracer,
             )?);
         }
     }

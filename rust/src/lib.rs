@@ -26,6 +26,7 @@
 //!   parallel design-space explorer with Pareto reporting ([`explore`]),
 //!   multi-array fleet serving provisioned from the Pareto frontier
 //!   with shape-affine routing ([`fleet`]),
+//!   deterministic modeled-time tracing + unified metrics ([`obs`]),
 //!   PJRT runtime that executes the AOT artifacts ([`runtime`]),
 //!   figure/table regeneration ([`report`]) and self-contained
 //!   substrates ([`util`], [`bench_util`]) for the fully-offline build.
@@ -75,6 +76,7 @@ pub mod faults;
 pub mod fleet;
 pub mod floorplan;
 pub mod gemm;
+pub mod obs;
 pub mod power;
 pub mod quant;
 pub mod report;

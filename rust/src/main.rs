@@ -71,25 +71,25 @@ struct Command {
 /// exactly this; `chaos` extends it.
 const FLEET_VALUED: &[&str] = &[
     "pes", "arrays", "requests", "unique", "layers", "seed", "workers", "window", "cache",
-    "spill", "gap-us", "workload", "classes", "json", "md",
+    "spill", "gap-us", "workload", "classes", "json", "md", "trace",
 ];
 
 const CHAOS_VALUED: &[&str] = &[
     "pes", "arrays", "requests", "unique", "layers", "seed", "workers", "window", "cache",
     "spill", "gap-us", "workload", "classes", "scenarios", "retry-limit", "queue-bound", "json",
-    "md",
+    "md", "trace",
 ];
 
 const DRIFT_VALUED: &[&str] = &[
     "pes", "arrays", "requests", "unique", "layers", "seed", "workers", "window", "cache",
     "spill", "gap-us", "workload", "classes", "arrival", "rate", "arrival-seed", "detect-window",
-    "threshold", "phase-split", "json", "md",
+    "threshold", "phase-split", "json", "md", "trace",
 ];
 
 const DAEMON_VALUED: &[&str] = &[
     "pes", "arrays", "unique", "layers", "seed", "workers", "window", "cache", "spill",
     "gap-us", "workload", "classes", "queue-bound", "deadline-us", "reprovision-every",
-    "socket", "script", "json", "md",
+    "socket", "script", "json", "md", "trace",
 ];
 
 const COMMANDS: &[Command] = &[
@@ -158,11 +158,13 @@ const COMMANDS: &[Command] = &[
                --dataflow <s>  engine: ws | os | is (default ws)
                --classes <n>   round-robin priority classes (default 1)
                --json <f>      summary JSON path (default SERVE_summary.json)
+               --trace <f>     Chrome-trace export (plus sibling .prom
+                               metrics and .md critical-path digest)
 ",
         bools: &[],
         valued: &[
             "requests", "seed", "workers", "window", "cache", "unique", "dataflow", "classes",
-            "json",
+            "json", "trace",
         ],
         run: cmd_serve,
     },
@@ -219,6 +221,8 @@ const COMMANDS: &[Command] = &[
                --classes <n>   round-robin priority classes (default 1)
                --json <f>      summary path (default FLEET_summary.json)
                --md <f>        report path (default out/FLEET_report.md)
+               --trace <f>     Chrome-trace export (plus sibling .prom
+                               metrics and .md critical-path digest)
 ",
         bools: &[],
         valued: FLEET_VALUED,
@@ -243,6 +247,8 @@ const COMMANDS: &[Command] = &[
                --no-spare      skip hot-spare provisioning/promotion
                --json <f>      summary path (default CHAOS_summary.json)
                --md <f>        report path (default out/CHAOS_report.md)
+               --trace <f>     Chrome-trace export (plus sibling .prom
+                               metrics and .md critical-path digest)
 ",
         bools: &["strict", "no-spare"],
         valued: CHAOS_VALUED,
@@ -271,6 +277,8 @@ const COMMANDS: &[Command] = &[
                                   shift (default 0.5)
                --json <f>      summary path (default DRIFT_summary.json)
                --md <f>        report path (default out/DRIFT_report.md)
+               --trace <f>     Chrome-trace export (plus sibling .prom
+                               metrics and .md critical-path digest)
 ",
         bools: &[],
         valued: DRIFT_VALUED,
@@ -280,8 +288,9 @@ const COMMANDS: &[Command] = &[
         name: "daemon",
         help: "  daemon     always-on serving daemon over the fleet: line-delimited
              JSON requests (submit_gemm, submit_trace, fleet_status,
-             drain, shutdown) with bounded per-class admission, modeled
-             deadlines and graceful drain; runs on a Unix socket, as a
+             get_metrics, drain, shutdown) with bounded per-class
+             admission, modeled deadlines and graceful drain; runs on
+             a Unix socket, as a
              client against one, or --local against a script file
                (fleet flags: --pes --arrays --unique --layers --seed
                 --workers --window --cache --spill --gap-us --workload
@@ -297,8 +306,11 @@ const COMMANDS: &[Command] = &[
                                       admissions (default 0 = off)
                --json <f>      summary path (default DAEMON_summary.json)
                --md <f>        report path (default out/DAEMON_report.md)
+               --trace <f>     Chrome-trace export on shutdown (plus
+                               sibling .prom metrics and .md digest)
+               --quiet         silence info/warn logs (errors still print)
 ",
-        bools: &["client", "local"],
+        bools: &["client", "local", "quiet"],
         valued: DAEMON_VALUED,
         run: cmd_daemon,
     },
@@ -463,6 +475,7 @@ fn cmd_serve(f: &Flags) -> Result<(), String> {
         f.string("dataflow", "ws"),
         f.usize("classes", 1)?,
         f.path("json").unwrap_or_else(|| PathBuf::from("SERVE_summary.json")),
+        f.path("trace"),
     )
 }
 
@@ -514,6 +527,7 @@ fn cmd_fleet(f: &Flags) -> Result<(), String> {
         fleet_config_from_flags(f)?,
         f.path("json").unwrap_or_else(|| PathBuf::from("FLEET_summary.json")),
         f.path("md").unwrap_or_else(|| PathBuf::from("out/FLEET_report.md")),
+        f.path("trace"),
     )
 }
 
@@ -533,6 +547,7 @@ fn cmd_chaos(f: &Flags) -> Result<(), String> {
         &ccfg,
         f.path("json").unwrap_or_else(|| PathBuf::from("CHAOS_summary.json")),
         f.path("md").unwrap_or_else(|| PathBuf::from("out/CHAOS_report.md")),
+        f.path("trace"),
     )
 }
 
@@ -555,6 +570,7 @@ fn cmd_drift(f: &Flags) -> Result<(), String> {
         &dcfg,
         f.path("json").unwrap_or_else(|| PathBuf::from("DRIFT_summary.json")),
         f.path("md").unwrap_or_else(|| PathBuf::from("out/DRIFT_report.md")),
+        f.path("trace"),
     )
 }
 
@@ -565,11 +581,16 @@ fn cmd_daemon(f: &Flags) -> Result<(), String> {
         queue_bound: f.usize("queue-bound", 0)?,
         deadline_us: f.usize("deadline-us", 0)? as u64,
         reprovision_every: f.usize("reprovision-every", 0)?,
+        trace: f.path("trace").is_some(),
         ..DaemonConfig::default()
     };
     let socket = f.path("socket").unwrap_or_else(|| PathBuf::from("out/asymm_sa.sock"));
     let json = f.path("json").unwrap_or_else(|| PathBuf::from("DAEMON_summary.json"));
     let md = f.path("md").unwrap_or_else(|| PathBuf::from("out/DAEMON_report.md"));
+    let trace = f.path("trace");
+    if f.flag("quiet") {
+        asymm_sa::obs::log::set_level(asymm_sa::obs::log::Level::Error);
+    }
 
     if f.flag("client") {
         let script_path = f
@@ -605,13 +626,28 @@ fn cmd_daemon(f: &Flags) -> Result<(), String> {
             &md,
             &asymm_sa::report::daemon_markdown(harness.daemon().config(), &summary),
         )?;
-        eprintln!("daemon: wrote {} and {}", json.display(), md.display());
+        asymm_sa::obs::log::info(
+            "daemon",
+            &format!("wrote {} and {}", json.display(), md.display()),
+        );
+        if let Some(tp) = &trace {
+            let d = harness.daemon_mut();
+            // Sync the registry's gauges with live daemon state before
+            // rendering the exposition (same path the server takes).
+            d.handle(asymm_sa::daemon::Request::GetMetrics)
+                .map_err(|e| e.to_string())?;
+            for p in asymm_sa::obs::write_trace_artifacts(tp, d.tracer(), d.registry())
+                .map_err(|e| e.to_string())?
+            {
+                asymm_sa::obs::log::info("daemon", &format!("wrote {}", p.display()));
+            }
+        }
         return Ok(());
     }
 
     #[cfg(unix)]
     {
-        asymm_sa::daemon::server::run_server(cfg, &socket, Some(&json), Some(&md))
+        asymm_sa::daemon::server::run_server(cfg, &socket, Some(&json), Some(&md), trace.as_deref())
             .map_err(|e| e.to_string())
     }
     #[cfg(not(unix))]
@@ -775,6 +811,7 @@ fn serve(
     dataflow: String,
     classes: usize,
     json: PathBuf,
+    trace: Option<PathBuf>,
 ) -> Result<(), String> {
     use asymm_sa::bench_util::Bench;
     use asymm_sa::serve::{run_scenario, ScenarioConfig, ServeConfig, Server};
@@ -851,6 +888,16 @@ fn serve(
         ),
     );
     b.write_json(&json).map_err(|e| e.to_string())?;
+
+    // Trace export: rebuilt from the responses on the modeled clock, so
+    // the artifact is a pure function of (config, seed) — wall-clock
+    // latencies never leak into it.
+    if trace.is_some() {
+        let mut tracer = asymm_sa::obs::Tracer::new();
+        tracer.track("serve");
+        asymm_sa::serve::trace_scenario(&mut tracer, &sa, window, classes, &responses);
+        write_trace_if_requested(&trace, &tracer)?;
+    }
     Ok(())
 }
 
@@ -1007,6 +1054,7 @@ fn fleet(
     cfg: asymm_sa::fleet::FleetConfig,
     json: PathBuf,
     md_path: PathBuf,
+    trace: Option<PathBuf>,
 ) -> Result<(), String> {
     use asymm_sa::fleet;
 
@@ -1018,7 +1066,13 @@ fn fleet(
         cfg.workload.name()
     );
     let t0 = std::time::Instant::now();
-    let report = fleet::run_fleet_comparison(&cfg).map_err(|e| e.to_string())?;
+    let mut tracer = if trace.is_some() {
+        asymm_sa::obs::Tracer::new()
+    } else {
+        asymm_sa::obs::Tracer::off()
+    };
+    let report =
+        fleet::run_fleet_comparison_traced(&cfg, &mut tracer).map_err(|e| e.to_string())?;
     println!(
         "  heterogeneous: {}",
         report
@@ -1071,6 +1125,25 @@ fn fleet(
     ensure_parent(&json)?;
     let b = fleet::fleet_bench(&cfg, &report);
     b.write_json(&json).map_err(|e| e.to_string())?;
+    write_trace_if_requested(&trace, &tracer)?;
+    Ok(())
+}
+
+/// Shared trailer for the one-shot subcommands: derive the metrics
+/// exposition from the trace (a pure function of it, so it inherits
+/// byte-identity at any worker count) and write the artifact triple.
+fn write_trace_if_requested(
+    trace: &Option<PathBuf>,
+    tracer: &asymm_sa::obs::Tracer,
+) -> Result<(), String> {
+    if let Some(tp) = trace {
+        let reg = asymm_sa::obs::Registry::from_tracer(tracer);
+        for p in
+            asymm_sa::obs::write_trace_artifacts(tp, tracer, &reg).map_err(|e| e.to_string())?
+        {
+            println!("wrote {}", p.display());
+        }
+    }
     Ok(())
 }
 
@@ -1078,6 +1151,7 @@ fn chaos(
     ccfg: &asymm_sa::faults::ChaosConfig,
     json: PathBuf,
     md_path: PathBuf,
+    trace: Option<PathBuf>,
 ) -> Result<(), String> {
     use asymm_sa::faults;
 
@@ -1096,7 +1170,13 @@ fn chaos(
         if ccfg.hot_spare { "on" } else { "off" },
     );
     let t0 = std::time::Instant::now();
-    let report = faults::run_chaos_comparison(ccfg).map_err(|e| e.to_string())?;
+    let mut tracer = if trace.is_some() {
+        asymm_sa::obs::Tracer::new()
+    } else {
+        asymm_sa::obs::Tracer::off()
+    };
+    let report =
+        faults::run_chaos_comparison_traced(ccfg, &mut tracer).map_err(|e| e.to_string())?;
     if let Some(sp) = &report.spare {
         println!("  hot spare: {}", sp.label());
     }
@@ -1156,6 +1236,7 @@ fn chaos(
     ensure_parent(&json)?;
     let b = faults::chaos_bench(ccfg, &report);
     b.write_json(&json).map_err(|e| e.to_string())?;
+    write_trace_if_requested(&trace, &tracer)?;
     Ok(())
 }
 
@@ -1163,6 +1244,7 @@ fn drift(
     dcfg: &asymm_sa::fleet::DriftConfig,
     json: PathBuf,
     md_path: PathBuf,
+    trace: Option<PathBuf>,
 ) -> Result<(), String> {
     use asymm_sa::fleet;
 
@@ -1178,7 +1260,13 @@ fn drift(
         dcfg.divergence_threshold,
     );
     let t0 = std::time::Instant::now();
-    let report = fleet::run_drift_comparison(dcfg).map_err(|e| e.to_string())?;
+    let mut tracer = if trace.is_some() {
+        asymm_sa::obs::Tracer::new()
+    } else {
+        asymm_sa::obs::Tracer::off()
+    };
+    let report =
+        fleet::run_drift_comparison_traced(dcfg, &mut tracer).map_err(|e| e.to_string())?;
     println!(
         "  modeled gap {:.1} us, spill bound {} MACs",
         report.gap_us, report.spill_macs
@@ -1227,6 +1315,7 @@ fn drift(
     ensure_parent(&json)?;
     let b = fleet::drift_bench(dcfg, &report);
     b.write_json(&json).map_err(|e| e.to_string())?;
+    write_trace_if_requested(&trace, &tracer)?;
     Ok(())
 }
 

@@ -1,0 +1,114 @@
+//! Leveled, machine-consumable stderr logging.
+//!
+//! The daemon's operational chatter goes through this sink instead of
+//! raw `eprintln!`, so socket-mode stderr is parseable (logfmt: one
+//! `level=… component=… msg="…"` line per event) and `--quiet` can
+//! silence everything below [`Level::Error`]. Formatting is a pure
+//! function ([`format_line`]) so tests can assert on it without
+//! capturing stderr.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Log severity, ascending.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    /// Developer noise.
+    Debug = 0,
+    /// Normal operational events (default threshold).
+    Info = 1,
+    /// Degraded but continuing.
+    Warn = 2,
+    /// Failures; never silenced by `--quiet`.
+    Error = 3,
+}
+
+impl Level {
+    /// Stable lowercase name used in the logfmt line.
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Debug => "debug",
+            Level::Info => "info",
+            Level::Warn => "warn",
+            Level::Error => "error",
+        }
+    }
+}
+
+static MIN_LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+/// Set the global minimum level (lower levels are dropped).
+pub fn set_level(level: Level) {
+    MIN_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Current minimum level.
+pub fn min_level() -> Level {
+    match MIN_LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Debug,
+        1 => Level::Info,
+        2 => Level::Warn,
+        _ => Level::Error,
+    }
+}
+
+/// Render one logfmt line: `level=info component=daemon msg="…"`.
+/// Quotes and backslashes in the message are escaped so one event is
+/// always exactly one parseable line.
+pub fn format_line(level: Level, component: &str, msg: &str) -> String {
+    let mut escaped = String::with_capacity(msg.len());
+    for ch in msg.chars() {
+        match ch {
+            '"' => escaped.push_str("\\\""),
+            '\\' => escaped.push_str("\\\\"),
+            '\n' => escaped.push_str("\\n"),
+            c => escaped.push(c),
+        }
+    }
+    format!("level={} component={component} msg=\"{escaped}\"", level.name())
+}
+
+/// Emit one event to stderr if it clears the threshold.
+pub fn log(level: Level, component: &str, msg: &str) {
+    if level >= min_level() {
+        eprintln!("{}", format_line(level, component, msg));
+    }
+}
+
+/// [`Level::Info`] event.
+pub fn info(component: &str, msg: &str) {
+    log(Level::Info, component, msg);
+}
+
+/// [`Level::Warn`] event.
+pub fn warn(component: &str, msg: &str) {
+    log(Level::Warn, component, msg);
+}
+
+/// [`Level::Error`] event.
+pub fn error(component: &str, msg: &str) {
+    log(Level::Error, component, msg);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn format_is_logfmt_with_escapes() {
+        assert_eq!(
+            format_line(Level::Info, "daemon", "listening on /tmp/x.sock"),
+            "level=info component=daemon msg=\"listening on /tmp/x.sock\""
+        );
+        assert_eq!(
+            format_line(Level::Error, "daemon", "a \"quoted\"\npath\\x"),
+            "level=error component=daemon msg=\"a \\\"quoted\\\"\\npath\\\\x\""
+        );
+    }
+
+    #[test]
+    fn levels_order_and_name() {
+        assert!(Level::Debug < Level::Info);
+        assert!(Level::Warn < Level::Error);
+        assert_eq!(Level::Warn.name(), "warn");
+    }
+}

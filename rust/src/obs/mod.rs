@@ -1,0 +1,769 @@
+//! Deterministic observability: modeled-time span tracing + a unified
+//! metrics registry.
+//!
+//! Everything here obeys the repo's determinism contract: spans carry
+//! **modeled** begin/end instants (µs on the admission clock), never
+//! wall-clock timestamps, so a trace export is a pure function of
+//! `(config, request script)` and byte-identical at any worker count —
+//! pinned by `tests/trace_determinism.rs`. The [`Tracer`] records typed
+//! spans (`admit`, `route`, `queue_wait`, `batch`, `cache_lookup`,
+//! `engine`, `retry`, `failover`, `warmup`, `reprovision`, `drain`,
+//! `bill`) plus cause-typed rejection events, and exports Chrome
+//! trace-event JSON (`chrome://tracing` / Perfetto) via
+//! [`Tracer::chrome_string`]. The [`Registry`] absorbs the scattered
+//! counters (cache tiers, retries, failovers, sheds by cause, drift
+//! divergence, warmup energy) behind one Prometheus-style text
+//! exposition ([`Registry::render_text`]) with fixed log-spaced
+//! histogram buckets, surfaced on the wire as the daemon's
+//! `get_metrics` method. `docs/observability.md` is the naming
+//! reference.
+
+pub mod log;
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use crate::util::json::{obj, Json};
+
+/// What a span measures. `name()` is the wire/export name; the span
+/// vocabulary is documented in `docs/observability.md`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Admission decision for one request (instant at arrival).
+    Admit,
+    /// Routing decision (instant; `array` is the chosen slot).
+    Route,
+    /// Time between arrival and service start on the routed array.
+    QueueWait,
+    /// One admission-window flush serving a batch.
+    Batch,
+    /// Result-cache lookup (instant; hit/miss is a metric, not a span).
+    CacheLookup,
+    /// Modeled service on the array (start..finish).
+    Engine,
+    /// One bounded modeled-time retry after a fault (chaos path).
+    Retry,
+    /// Fault-masked failover re-route (chaos path).
+    Failover,
+    /// Background cache warmup job.
+    Warmup,
+    /// Drift-triggered re-provisioning cutover.
+    Reprovision,
+    /// Graceful drain (drain instant .. modeled busy horizon).
+    Drain,
+    /// Terminal billing event: the request completed and was billed.
+    Bill,
+}
+
+impl SpanKind {
+    /// Stable export name.
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Admit => "admit",
+            SpanKind::Route => "route",
+            SpanKind::QueueWait => "queue_wait",
+            SpanKind::Batch => "batch",
+            SpanKind::CacheLookup => "cache_lookup",
+            SpanKind::Engine => "engine",
+            SpanKind::Retry => "retry",
+            SpanKind::Failover => "failover",
+            SpanKind::Warmup => "warmup",
+            SpanKind::Reprovision => "reprovision",
+            SpanKind::Drain => "drain",
+            SpanKind::Bill => "bill",
+        }
+    }
+
+    /// All kinds, in exposition order.
+    pub const ALL: [SpanKind; 12] = [
+        SpanKind::Admit,
+        SpanKind::Route,
+        SpanKind::QueueWait,
+        SpanKind::Batch,
+        SpanKind::CacheLookup,
+        SpanKind::Engine,
+        SpanKind::Retry,
+        SpanKind::Failover,
+        SpanKind::Warmup,
+        SpanKind::Reprovision,
+        SpanKind::Drain,
+        SpanKind::Bill,
+    ];
+}
+
+/// Why an arrival was shed. Mirrors the wire error codes of
+/// `docs/protocol.md` exactly, so trace events and error counters
+/// cannot drift apart.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectCause {
+    /// Bounded queue hit this class's watermark.
+    QueueFull,
+    /// Projected modeled sojourn exceeds the deadline.
+    DeadlineExceeded,
+    /// The server is draining (or drained) and sheds all new work.
+    Draining,
+}
+
+impl RejectCause {
+    /// Stable export name — identical to the wire error code.
+    pub fn name(self) -> &'static str {
+        match self {
+            RejectCause::QueueFull => "queue_full",
+            RejectCause::DeadlineExceeded => "deadline_exceeded",
+            RejectCause::Draining => "draining",
+        }
+    }
+
+    /// All causes, in exposition order.
+    pub const ALL: [RejectCause; 3] = [
+        RejectCause::QueueFull,
+        RejectCause::DeadlineExceeded,
+        RejectCause::Draining,
+    ];
+}
+
+/// One recorded span: a typed interval on the modeled clock.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    /// What this span measures.
+    pub kind: SpanKind,
+    /// Modeled begin instant (µs).
+    pub begin_us: u64,
+    /// Modeled end instant (µs); equal to `begin_us` for instants.
+    pub end_us: u64,
+    /// Track (Chrome `pid`) the span belongs to.
+    pub track: usize,
+    /// Request id, when the span is attributable to one request.
+    pub request: Option<u64>,
+    /// Priority class, when known.
+    pub class: Option<u8>,
+    /// Array slot, when the span is attributable to one array.
+    pub array: Option<usize>,
+}
+
+impl Span {
+    /// Attach a request id (builder style).
+    pub fn request(&mut self, id: u64) -> &mut Self {
+        self.request = Some(id);
+        self
+    }
+
+    /// Attach a priority class (builder style).
+    pub fn class(&mut self, class: u8) -> &mut Self {
+        self.class = Some(class);
+        self
+    }
+
+    /// Attach an array slot (builder style).
+    pub fn array(&mut self, array: usize) -> &mut Self {
+        self.array = Some(array);
+        self
+    }
+}
+
+/// One cause-typed rejection event (an instant on the modeled clock).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Reject {
+    /// Why the arrival was shed.
+    pub cause: RejectCause,
+    /// Modeled arrival instant (µs).
+    pub t_us: u64,
+    /// Track (Chrome `pid`) the event belongs to.
+    pub track: usize,
+    /// Request id, when one was assigned before the rejection.
+    pub request: Option<u64>,
+    /// Priority class, when known.
+    pub class: Option<u8>,
+    /// Array the request was routed to, when routing ran.
+    pub array: Option<usize>,
+}
+
+impl Reject {
+    /// Attach a request id (builder style).
+    pub fn request(&mut self, id: u64) -> &mut Self {
+        self.request = Some(id);
+        self
+    }
+
+    /// Attach a priority class (builder style).
+    pub fn class(&mut self, class: u8) -> &mut Self {
+        self.class = Some(class);
+        self
+    }
+
+    /// Attach an array slot (builder style).
+    pub fn array(&mut self, array: usize) -> &mut Self {
+        self.array = Some(array);
+        self
+    }
+}
+
+/// Records modeled-time spans and rejection events, grouped into named
+/// tracks (one Chrome `pid` per track: a policy lane, a drift lane, or
+/// the daemon itself). A disabled tracer ([`Tracer::off`]) accepts the
+/// same calls at near-zero cost — recording methods write to a scratch
+/// slot — so call sites need no `if traced` branches.
+#[derive(Debug, Clone)]
+pub struct Tracer {
+    enabled: bool,
+    tracks: Vec<String>,
+    current: usize,
+    spans: Vec<Span>,
+    rejects: Vec<Reject>,
+    scratch_span: Span,
+    scratch_reject: Reject,
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Tracer {
+    /// An enabled tracer. Tracks are created on first use; recording a
+    /// span before any [`Tracer::track`] call lands on a default
+    /// `main` track.
+    pub fn new() -> Self {
+        Tracer {
+            enabled: true,
+            tracks: Vec::new(),
+            current: 0,
+            spans: Vec::new(),
+            rejects: Vec::new(),
+            scratch_span: Span {
+                kind: SpanKind::Admit,
+                begin_us: 0,
+                end_us: 0,
+                track: 0,
+                request: None,
+                class: None,
+                array: None,
+            },
+            scratch_reject: Reject {
+                cause: RejectCause::QueueFull,
+                t_us: 0,
+                track: 0,
+                request: None,
+                class: None,
+                array: None,
+            },
+        }
+    }
+
+    /// A disabled tracer: every recording call is a cheap no-op.
+    pub fn off() -> Self {
+        let mut t = Self::new();
+        t.enabled = false;
+        t
+    }
+
+    /// Whether spans are being kept.
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Switch the current track, creating it on first use. Track order
+    /// is first-use order — deterministic because every caller runs on
+    /// the sequential orchestration path.
+    pub fn track(&mut self, name: &str) {
+        if !self.enabled {
+            return;
+        }
+        self.current = match self.tracks.iter().position(|t| t == name) {
+            Some(i) => i,
+            None => {
+                self.tracks.push(name.to_string());
+                self.tracks.len() - 1
+            }
+        };
+    }
+
+    /// Lazily create the default track when recording starts before any
+    /// [`Tracer::track`] call.
+    fn ensure_track(&mut self) {
+        if self.tracks.is_empty() {
+            self.tracks.push("main".to_string());
+            self.current = 0;
+        }
+    }
+
+    /// Record a span on the current track and return it for builder-style
+    /// attribution. `end_us < begin_us` is clamped to an instant.
+    pub fn span(&mut self, kind: SpanKind, begin_us: u64, end_us: u64) -> &mut Span {
+        if !self.enabled {
+            return &mut self.scratch_span;
+        }
+        self.ensure_track();
+        self.spans.push(Span {
+            kind,
+            begin_us,
+            end_us: end_us.max(begin_us),
+            track: self.current,
+            request: None,
+            class: None,
+            array: None,
+        });
+        self.spans.last_mut().expect("just pushed")
+    }
+
+    /// Record an instant span (begin == end).
+    pub fn instant(&mut self, kind: SpanKind, t_us: u64) -> &mut Span {
+        self.span(kind, t_us, t_us)
+    }
+
+    /// Record a cause-typed rejection event on the current track.
+    pub fn reject(&mut self, cause: RejectCause, t_us: u64) -> &mut Reject {
+        if !self.enabled {
+            return &mut self.scratch_reject;
+        }
+        self.ensure_track();
+        self.rejects.push(Reject {
+            cause,
+            t_us,
+            track: self.current,
+            request: None,
+            class: None,
+            array: None,
+        });
+        self.rejects.last_mut().expect("just pushed")
+    }
+
+    /// Recorded spans, in recording order.
+    pub fn spans(&self) -> &[Span] {
+        &self.spans
+    }
+
+    /// Recorded rejection events, in recording order.
+    pub fn rejects(&self) -> &[Reject] {
+        &self.rejects
+    }
+
+    /// Track names, in first-use order.
+    pub fn tracks(&self) -> &[String] {
+        &self.tracks
+    }
+
+    /// Count of spans of one kind.
+    pub fn count(&self, kind: SpanKind) -> usize {
+        self.spans.iter().filter(|s| s.kind == kind).count()
+    }
+
+    /// Count of rejection events of one cause.
+    pub fn reject_count(&self, cause: RejectCause) -> usize {
+        self.rejects.iter().filter(|r| r.cause == cause).count()
+    }
+
+    /// Export as Chrome trace-event JSON (loadable in `chrome://tracing`
+    /// and Perfetto). `pid` is the track index, `tid` the array slot
+    /// (+1; 0 = no array). All `ts`/`dur` are modeled µs — never
+    /// wall-clock — so the export is byte-identical at any worker count.
+    pub fn chrome_string(&self) -> String {
+        let mut events = Vec::new();
+        for (i, name) in self.tracks.iter().enumerate() {
+            events.push(obj(vec![
+                ("ph", Json::Str("M".to_string())),
+                ("pid", Json::Num(i as f64)),
+                ("tid", Json::Num(0.0)),
+                ("name", Json::Str("process_name".to_string())),
+                ("args", obj(vec![("name", Json::Str(name.clone()))])),
+            ]));
+        }
+        for s in &self.spans {
+            let mut args = Vec::new();
+            if let Some(r) = s.request {
+                args.push(("request", Json::Num(r as f64)));
+            }
+            if let Some(c) = s.class {
+                args.push(("class", Json::Num(c as f64)));
+            }
+            if let Some(a) = s.array {
+                args.push(("array", Json::Num(a as f64)));
+            }
+            let mut ev = vec![
+                ("ph", Json::Str("X".to_string())),
+                ("pid", Json::Num(s.track as f64)),
+                (
+                    "tid",
+                    Json::Num(s.array.map(|a| a as f64 + 1.0).unwrap_or(0.0)),
+                ),
+                ("ts", Json::Num(s.begin_us as f64)),
+                ("dur", Json::Num((s.end_us - s.begin_us) as f64)),
+                ("name", Json::Str(s.kind.name().to_string())),
+                ("cat", Json::Str("span".to_string())),
+            ];
+            ev.push(("args", obj(args)));
+            events.push(obj(ev));
+        }
+        for r in &self.rejects {
+            let mut args = Vec::new();
+            if let Some(id) = r.request {
+                args.push(("request", Json::Num(id as f64)));
+            }
+            if let Some(c) = r.class {
+                args.push(("class", Json::Num(c as f64)));
+            }
+            if let Some(a) = r.array {
+                args.push(("array", Json::Num(a as f64)));
+            }
+            events.push(obj(vec![
+                ("ph", Json::Str("i".to_string())),
+                ("pid", Json::Num(r.track as f64)),
+                (
+                    "tid",
+                    Json::Num(r.array.map(|a| a as f64 + 1.0).unwrap_or(0.0)),
+                ),
+                ("ts", Json::Num(r.t_us as f64)),
+                ("name", Json::Str(format!("reject:{}", r.cause.name()))),
+                ("cat", Json::Str("reject".to_string())),
+                ("s", Json::Str("t".to_string())),
+                ("args", obj(args)),
+            ]));
+        }
+        obj(vec![
+            ("displayTimeUnit", Json::Str("ms".to_string())),
+            ("traceEvents", Json::Arr(events)),
+        ])
+        .to_string()
+    }
+}
+
+/// The fixed log-spaced bucket edges every latency histogram uses:
+/// 1-2-5 per decade over 1 µs .. 10 s of modeled time. Fixed edges keep
+/// the exposition deterministic — bucket boundaries never depend on the
+/// data.
+pub fn latency_edges_us() -> Vec<f64> {
+    let mut edges = Vec::new();
+    let mut decade = 1.0;
+    while decade <= 1e7 {
+        for m in [1.0, 2.0, 5.0] {
+            edges.push(decade * m);
+        }
+        decade *= 10.0;
+    }
+    edges
+}
+
+/// A fixed-bucket histogram (cumulative exposition like Prometheus).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Histogram {
+    edges: Vec<f64>,
+    counts: Vec<u64>,
+    sum: f64,
+    count: u64,
+}
+
+impl Histogram {
+    /// A histogram over the given ascending bucket edges.
+    pub fn new(edges: Vec<f64>) -> Self {
+        let n = edges.len();
+        Histogram {
+            edges,
+            counts: vec![0; n],
+            sum: 0.0,
+            count: 0,
+        }
+    }
+
+    /// Record one observation.
+    pub fn observe(&mut self, v: f64) {
+        for (i, e) in self.edges.iter().enumerate() {
+            if v <= *e {
+                self.counts[i] += 1;
+                break;
+            }
+        }
+        self.sum += v;
+        self.count += 1;
+    }
+
+    /// Total observation count.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+}
+
+/// Format a number the way `util::json` does: integral values print
+/// without a fractional part, so expositions diff cleanly against JSON
+/// artifacts.
+fn fmt_num(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 2f64.powi(53) {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Base metric name: everything before the `{...}` label block.
+fn base_name(name: &str) -> &str {
+    name.split('{').next().unwrap_or(name)
+}
+
+/// A unified metrics registry: typed counters, gauges and histograms
+/// behind one deterministic Prometheus-style text exposition. Metric
+/// names carry their labels inline (`daemon_rejected_total{cause=
+/// "queue_full"}`); `BTreeMap` storage makes exposition order canonical.
+#[derive(Debug, Clone, Default)]
+pub struct Registry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    hists: BTreeMap<String, Histogram>,
+}
+
+impl Registry {
+    /// An empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add `delta` to a counter (created at 0).
+    pub fn add(&mut self, name: &str, delta: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += delta;
+    }
+
+    /// Increment a counter by 1.
+    pub fn inc(&mut self, name: &str) {
+        self.add(name, 1);
+    }
+
+    /// Read a counter (0 when never touched).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Set a gauge to the current value.
+    pub fn set_gauge(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    /// Read a gauge (0 when never set).
+    pub fn gauge(&self, name: &str) -> f64 {
+        self.gauges.get(name).copied().unwrap_or(0.0)
+    }
+
+    /// Record one observation into a histogram (created on first use
+    /// with the fixed [`latency_edges_us`] buckets).
+    pub fn observe(&mut self, name: &str, v: f64) {
+        self.hists
+            .entry(name.to_string())
+            .or_insert_with(|| Histogram::new(latency_edges_us()))
+            .observe(v);
+    }
+
+    /// Read a histogram's observation count (0 when never touched).
+    pub fn hist_count(&self, name: &str) -> u64 {
+        self.hists.get(name).map(|h| h.count()).unwrap_or(0)
+    }
+
+    /// A registry derived purely from a tracer's recorded events:
+    /// `trace_spans_total{kind=...}` per span kind,
+    /// `trace_rejects_total{cause=...}` per cause (every kind/cause
+    /// pre-listed at 0 so the exposition shape never depends on the
+    /// run), modeled-duration histograms for `engine` and `queue_wait`
+    /// spans, and a `trace_tracks` gauge. The one-shot CLI commands
+    /// build their `.prom` sibling from this — a pure function of the
+    /// trace, so it inherits the trace's worker-count byte-identity.
+    pub fn from_tracer(t: &Tracer) -> Self {
+        let mut r = Registry::new();
+        for kind in SpanKind::ALL {
+            r.add(&format!("trace_spans_total{{kind=\"{}\"}}", kind.name()), 0);
+        }
+        for cause in RejectCause::ALL {
+            r.add(&format!("trace_rejects_total{{cause=\"{}\"}}", cause.name()), 0);
+        }
+        for s in t.spans() {
+            r.inc(&format!("trace_spans_total{{kind=\"{}\"}}", s.kind.name()));
+            match s.kind {
+                SpanKind::Engine => r.observe("trace_engine_us", (s.end_us - s.begin_us) as f64),
+                SpanKind::QueueWait => {
+                    r.observe("trace_queue_wait_us", (s.end_us - s.begin_us) as f64)
+                }
+                _ => {}
+            }
+        }
+        for rej in t.rejects() {
+            r.inc(&format!("trace_rejects_total{{cause=\"{}\"}}", rej.cause.name()));
+        }
+        r.set_gauge("trace_tracks", t.tracks().len() as f64);
+        r
+    }
+
+    /// Render the Prometheus text exposition: `# TYPE` headers, sorted
+    /// metric lines, cumulative histogram buckets. Deterministic: the
+    /// same registry state renders byte-identically.
+    pub fn render_text(&self) -> String {
+        let mut s = String::new();
+        let mut last_base = "";
+        for (name, v) in &self.counters {
+            let b = base_name(name);
+            if b != last_base {
+                let _ = writeln!(s, "# TYPE {b} counter");
+                last_base = b;
+            }
+            let _ = writeln!(s, "{name} {v}");
+        }
+        last_base = "";
+        for (name, v) in &self.gauges {
+            let b = base_name(name);
+            if b != last_base {
+                let _ = writeln!(s, "# TYPE {b} gauge");
+                last_base = b;
+            }
+            let _ = writeln!(s, "{name} {}", fmt_num(*v));
+        }
+        for (name, h) in &self.hists {
+            let _ = writeln!(s, "# TYPE {name} histogram");
+            let mut cum = 0u64;
+            for (e, c) in h.edges.iter().zip(&h.counts) {
+                cum += c;
+                let _ = writeln!(s, "{name}_bucket{{le=\"{}\"}} {cum}", fmt_num(*e));
+            }
+            let _ = writeln!(s, "{name}_bucket{{le=\"+Inf\"}} {}", h.count);
+            let _ = writeln!(s, "{name}_sum {}", fmt_num(h.sum));
+            let _ = writeln!(s, "{name}_count {}", h.count);
+        }
+        s
+    }
+}
+
+/// Write the three sibling trace artifacts for a run: the Chrome trace
+/// at `path`, the metrics exposition at `path` with extension `prom`,
+/// and the critical-path digest at `path` with extension `md`. Returns
+/// the three paths written.
+pub fn write_trace_artifacts(
+    path: &std::path::Path,
+    tracer: &Tracer,
+    registry: &Registry,
+) -> crate::error::Result<Vec<std::path::PathBuf>> {
+    let write = |p: &std::path::Path, text: &str| -> crate::error::Result<()> {
+        if let Some(dir) = p.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(p, text)?;
+        Ok(())
+    };
+    let prom = path.with_extension("prom");
+    let md = path.with_extension("md");
+    write(path, &tracer.chrome_string())?;
+    write(&prom, &registry.render_text())?;
+    write(&md, &crate::report::trace_markdown(tracer))?;
+    Ok(vec![path.to_path_buf(), prom, md])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_record_with_attribution() {
+        let mut t = Tracer::new();
+        t.track("lane");
+        t.span(SpanKind::Engine, 10, 30).request(7).class(1).array(2);
+        t.reject(RejectCause::QueueFull, 40).request(8).class(0);
+        assert_eq!(t.count(SpanKind::Engine), 1);
+        assert_eq!(t.reject_count(RejectCause::QueueFull), 1);
+        let s = &t.spans()[0];
+        assert_eq!((s.begin_us, s.end_us), (10, 30));
+        assert_eq!((s.request, s.class, s.array), (Some(7), Some(1), Some(2)));
+        assert_eq!(t.tracks(), &["lane".to_string()]);
+    }
+
+    #[test]
+    fn recording_before_any_track_call_lands_on_main() {
+        let mut t = Tracer::new();
+        t.instant(SpanKind::Admit, 1);
+        assert_eq!(t.tracks(), &["main".to_string()]);
+    }
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let mut t = Tracer::off();
+        t.track("lane");
+        t.span(SpanKind::Bill, 1, 2).request(1);
+        t.reject(RejectCause::Draining, 3);
+        assert!(t.spans().is_empty());
+        assert!(t.rejects().is_empty());
+        assert!(!t.is_enabled());
+    }
+
+    #[test]
+    fn chrome_export_is_valid_json_with_metadata_and_events() {
+        let mut t = Tracer::new();
+        t.track("daemon");
+        t.span(SpanKind::Engine, 5, 9).request(1).array(0);
+        t.instant(SpanKind::Bill, 9).request(1);
+        t.reject(RejectCause::DeadlineExceeded, 12).class(1);
+        let s = t.chrome_string();
+        let j = Json::parse(&s).unwrap();
+        let events = j.req("traceEvents").unwrap().as_arr().unwrap();
+        // 1 track's metadata + 2 spans + 1 reject.
+        assert_eq!(events.len(), 4);
+        assert!(s.contains(r#""displayTimeUnit":"ms""#));
+        assert!(s.contains(r#""name":"reject:deadline_exceeded""#));
+        assert!(s.contains(r#""ph":"X""#));
+        // tid 1 = array 0; instants without an array sit on tid 0.
+        assert!(s.contains(r#""tid":1"#));
+    }
+
+    #[test]
+    fn span_end_clamps_to_begin() {
+        let mut t = Tracer::new();
+        t.span(SpanKind::QueueWait, 10, 5);
+        assert_eq!(t.spans()[0].end_us, 10);
+    }
+
+    #[test]
+    fn registry_counts_and_renders_deterministically() {
+        let mut r = Registry::new();
+        r.inc("x_total{cause=\"b\"}");
+        r.inc("x_total{cause=\"a\"}");
+        r.add("x_total{cause=\"a\"}", 2);
+        r.set_gauge("g_value", 2.5);
+        r.observe("lat_us", 3.0);
+        r.observe("lat_us", 700.0);
+        let text = r.render_text();
+        // BTreeMap order: label a before label b, one TYPE header.
+        let a = text.find("x_total{cause=\"a\"} 3").unwrap();
+        let b = text.find("x_total{cause=\"b\"} 1").unwrap();
+        assert!(a < b);
+        assert_eq!(text.matches("# TYPE x_total counter").count(), 1);
+        assert!(text.contains("g_value 2.5"));
+        assert!(text.contains("lat_us_bucket{le=\"5\"} 1"));
+        assert!(text.contains("lat_us_bucket{le=\"1000\"} 2"));
+        assert!(text.contains("lat_us_bucket{le=\"+Inf\"} 2"));
+        assert!(text.contains("lat_us_sum 703"));
+        assert!(text.contains("lat_us_count 2"));
+        assert_eq!(text, r.clone().render_text());
+        assert_eq!(r.counter("x_total{cause=\"a\"}"), 3);
+        assert_eq!(r.hist_count("lat_us"), 2);
+    }
+
+    #[test]
+    fn registry_from_tracer_counts_spans_and_rejects() {
+        let mut t = Tracer::new();
+        t.span(SpanKind::Engine, 0, 10).request(1);
+        t.span(SpanKind::QueueWait, 0, 4);
+        t.reject(RejectCause::Draining, 5);
+        let r = Registry::from_tracer(&t);
+        assert_eq!(r.counter("trace_spans_total{kind=\"engine\"}"), 1);
+        assert_eq!(r.counter("trace_spans_total{kind=\"bill\"}"), 0);
+        assert_eq!(r.counter("trace_rejects_total{cause=\"draining\"}"), 1);
+        assert_eq!(r.hist_count("trace_engine_us"), 1);
+        assert_eq!(r.gauge("trace_tracks"), 1.0);
+        // The exposition lists every kind regardless of what ran.
+        let text = r.render_text();
+        for kind in SpanKind::ALL {
+            assert!(text.contains(&format!("trace_spans_total{{kind=\"{}\"}}", kind.name())));
+        }
+    }
+
+    #[test]
+    fn latency_edges_are_ascending_one_two_five() {
+        let e = latency_edges_us();
+        assert_eq!(&e[..6], &[1.0, 2.0, 5.0, 10.0, 20.0, 50.0]);
+        assert!(e.windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(*e.last().unwrap(), 5e7);
+    }
+}

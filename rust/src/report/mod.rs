@@ -645,6 +645,152 @@ pub fn drift_markdown(
     s
 }
 
+/// Markdown critical-path digest of a recorded trace: per track and
+/// per priority class, attribute the modeled p99 latency to queue wait
+/// vs engine service vs retries, then roll up per-array service time.
+/// Deterministic: spans carry only modeled time, so the digest is
+/// byte-identical at any worker count.
+pub fn trace_markdown(tracer: &crate::obs::Tracer) -> String {
+    use crate::obs::{RejectCause, SpanKind};
+    use std::collections::BTreeMap;
+
+    // Reassemble each request's critical path from its spans. Keyed by
+    // (track, request): one request appears on exactly one track.
+    #[derive(Default, Clone)]
+    struct ReqPath {
+        class: u8,
+        queue_us: u64,
+        engine_us: u64,
+        retries: u64,
+        billed: bool,
+    }
+    let mut paths: BTreeMap<(usize, u64), ReqPath> = BTreeMap::new();
+    for s in tracer.spans() {
+        let Some(rid) = s.request else { continue };
+        let p = paths.entry((s.track, rid)).or_default();
+        if let Some(c) = s.class {
+            p.class = c;
+        }
+        let dur = s.end_us - s.begin_us;
+        match s.kind {
+            SpanKind::QueueWait => p.queue_us += dur,
+            SpanKind::Engine => p.engine_us += dur,
+            SpanKind::Retry => p.retries += 1,
+            SpanKind::Bill => p.billed = true,
+            _ => {}
+        }
+    }
+
+    let mut s = String::new();
+    let _ = writeln!(s, "# asymm-sa trace digest\n");
+    let _ = writeln!(
+        s,
+        "{} span(s), {} rejection event(s) over {} track(s); all times \
+         are modeled µs (no wall clock in this digest or the trace it \
+         summarizes).\n",
+        tracer.spans().len(),
+        tracer.rejects().len(),
+        tracer.tracks().len(),
+    );
+
+    // Nearest-rank percentile over a sorted slice (matches the repo's
+    // latency convention).
+    let pct = |sorted: &[u64], p: f64| -> u64 {
+        if sorted.is_empty() {
+            return 0;
+        }
+        let rank = ((p * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+        sorted[rank - 1]
+    };
+
+    let _ = writeln!(s, "## Critical path by class\n");
+    let _ = writeln!(
+        s,
+        "| track | class | requests | billed | p99 total (us) | \
+         p99 queue (us) | p99 engine (us) | queue share | retries |"
+    );
+    let _ = writeln!(s, "|---|---|---|---|---|---|---|---|---|");
+    // Group by (track, class).
+    let mut groups: BTreeMap<(usize, u8), Vec<&ReqPath>> = BTreeMap::new();
+    for ((track, _), p) in &paths {
+        groups.entry((*track, p.class)).or_default().push(p);
+    }
+    for ((track, class), reqs) in &groups {
+        let mut totals: Vec<u64> = reqs.iter().map(|p| p.queue_us + p.engine_us).collect();
+        let mut queues: Vec<u64> = reqs.iter().map(|p| p.queue_us).collect();
+        let mut engines: Vec<u64> = reqs.iter().map(|p| p.engine_us).collect();
+        totals.sort_unstable();
+        queues.sort_unstable();
+        engines.sort_unstable();
+        let billed = reqs.iter().filter(|p| p.billed).count();
+        let retries: u64 = reqs.iter().map(|p| p.retries).sum();
+        let queue_sum: u64 = queues.iter().sum();
+        let total_sum: u64 = totals.iter().sum::<u64>().max(1);
+        let _ = writeln!(
+            s,
+            "| {} | {} | {} | {} | {} | {} | {} | {:.1}% | {} |",
+            tracer
+                .tracks()
+                .get(*track)
+                .map(|t| t.as_str())
+                .unwrap_or("?"),
+            class,
+            reqs.len(),
+            billed,
+            pct(&totals, 0.99),
+            pct(&queues, 0.99),
+            pct(&engines, 0.99),
+            100.0 * queue_sum as f64 / total_sum as f64,
+            retries,
+        );
+    }
+
+    let _ = writeln!(s, "\n## Service time by array\n");
+    let _ = writeln!(s, "| track | array | engine spans | busy (us) |");
+    let _ = writeln!(s, "|---|---|---|---|");
+    let mut arrays: BTreeMap<(usize, usize), (u64, u64)> = BTreeMap::new();
+    for sp in tracer.spans() {
+        if sp.kind == SpanKind::Engine {
+            if let Some(a) = sp.array {
+                let e = arrays.entry((sp.track, a)).or_default();
+                e.0 += 1;
+                e.1 += sp.end_us - sp.begin_us;
+            }
+        }
+    }
+    for ((track, array), (n, busy)) in &arrays {
+        let _ = writeln!(
+            s,
+            "| {} | {} | {} | {} |",
+            tracer
+                .tracks()
+                .get(*track)
+                .map(|t| t.as_str())
+                .unwrap_or("?"),
+            array,
+            n,
+            busy,
+        );
+    }
+
+    let _ = writeln!(s, "\n## Rejections\n");
+    let _ = writeln!(s, "| cause | events |");
+    let _ = writeln!(s, "|---|---|");
+    for cause in RejectCause::ALL {
+        let _ = writeln!(s, "| {} | {} |", cause.name(), tracer.reject_count(cause));
+    }
+    let bills = tracer.count(SpanKind::Bill);
+    let rejects = tracer.rejects().len();
+    let _ = writeln!(
+        s,
+        "\nAccounting: {} terminal `bill` span(s) + {} rejection event(s) \
+         cover every admission decision exactly once (pinned by \
+         `tests/trace_determinism.rs`).",
+        bills, rejects,
+    );
+    s
+}
+
 /// CSV export of the full comparison (one row per layer).
 pub fn to_csv(rows: &[LayerPowerRow]) -> String {
     let mut s = String::from(

@@ -41,7 +41,9 @@ pub mod session;
 
 pub use batcher::{coalesce_by_shape, ShapeGroup, ShapeKey};
 pub use cache::{operand_digest, sa_fingerprint, CacheKey, CacheStats, ResultCache};
-pub use session::{build_requests, run_scenario, ClassServeLatency, ScenarioConfig, ServeSummary};
+pub use session::{
+    build_requests, run_scenario, trace_scenario, ClassServeLatency, ScenarioConfig, ServeSummary,
+};
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};

@@ -271,6 +271,57 @@ pub fn run_scenario(
     Ok((responses, summary))
 }
 
+/// Record a deterministic modeled-clock trace of a serve scenario's
+/// responses onto the tracer's current track.
+///
+/// The serve layer measures *wall-clock* latency
+/// ([`InferResponse::latency_secs`]), which must never reach a trace
+/// export — the determinism contract admits only modeled time. So the
+/// serve trace is a synthetic modeled timeline: responses are walked
+/// in admission windows of `window` requests, each window opens with a
+/// `batch` instant and per-request `cache_lookup` instants, every cold
+/// response contributes an `engine` span of its modeled silicon time
+/// on `sa` (cache hits are free), and the whole window bills at its
+/// last engine finish. A pure function of `(responses, sa, window,
+/// classes)` — byte-identical at any worker count.
+pub fn trace_scenario(
+    tracer: &mut crate::obs::Tracer,
+    sa: &crate::arch::SaConfig,
+    window: usize,
+    classes: usize,
+    responses: &[InferResponse],
+) {
+    use crate::obs::SpanKind;
+    if !tracer.is_enabled() {
+        return;
+    }
+    let window = window.max(1);
+    let classes = classes.clamp(1, 256) as u64;
+    let mut cursor_us = 0u64;
+    for chunk in responses.chunks(window) {
+        let t0 = cursor_us;
+        tracer.instant(SpanKind::Batch, t0);
+        let mut end = t0;
+        for r in chunk {
+            let class = (r.id % classes) as u8;
+            tracer.instant(SpanKind::CacheLookup, t0).request(r.id).class(class);
+            if !r.cache_hit {
+                let service_us = (r.sim.silicon_seconds(sa) * 1e6).round() as u64;
+                let begin = end;
+                end += service_us;
+                tracer.span(SpanKind::Engine, begin, end).request(r.id).class(class);
+            }
+        }
+        for r in chunk {
+            tracer
+                .instant(SpanKind::Bill, end)
+                .request(r.id)
+                .class((r.id % classes) as u8);
+        }
+        cursor_us = end;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

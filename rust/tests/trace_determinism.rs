@@ -1,0 +1,203 @@
+//! Determinism tier for the observability layer (`obs`).
+//!
+//! Four contracts, all load-bearing for `--trace` artifacts as CI
+//! outputs:
+//!
+//! 1. **Worker-count invariance of the daemon trace** — the same
+//!    request script produces a byte-identical Chrome trace export and
+//!    a byte-identical metrics exposition with 1 worker and with 4
+//!    workers per array: every span timestamp is modeled time, never
+//!    wall clock.
+//! 2. **Worker-count invariance of the fleet trace** — same contract
+//!    for the one-shot `repro fleet --trace` path, where the metrics
+//!    exposition is *derived* from the trace and so inherits its
+//!    byte-identity.
+//! 3. **Span accounting closure** — on the daemon, every admitted
+//!    request records exactly one terminal `bill` span and every shed
+//!    arrival exactly one cause-typed rejection event; the trace
+//!    totals equal the wire counters.
+//! 4. **Wire/exposition anti-drift** — the per-cause `rejected`
+//!    counters in `DAEMON_summary.json` are the same numbers the
+//!    Prometheus-style exposition reports for
+//!    `daemon_rejected_total{cause=…}` (they read one registry entry).
+
+use asymm_sa::daemon::{DaemonConfig, Harness, Request};
+use asymm_sa::explore::WorkloadKind;
+use asymm_sa::fleet::{run_fleet_comparison_traced, FleetConfig};
+use asymm_sa::obs::{Registry, RejectCause, SpanKind, Tracer};
+
+fn tiny_fleet(workers: usize) -> FleetConfig {
+    FleetConfig {
+        pe_budget: 64,
+        arrays: 2,
+        workload: WorkloadKind::Synth,
+        max_layers: 2,
+        requests: 16,
+        unique_inputs: 2,
+        seed: 2023,
+        window: 4,
+        cache_capacity: 32,
+        workers,
+        spill_macs: 0,
+        gap_us: 0.0,
+        classes: 2,
+    }
+}
+
+fn traced_cfg(workers: usize) -> DaemonConfig {
+    DaemonConfig {
+        fleet: tiny_fleet(workers),
+        trace: true,
+        ..DaemonConfig::default()
+    }
+}
+
+const SCRIPT: &str = r#"
+# traced daemon script: trace + gemms + a rejection of every cause
+{"id": 1, "method": "submit_trace", "params": {"requests": 12}}
+{"id": 2, "method": "submit_gemm", "params": {"m": 16, "k": 8, "n": 8, "seed": 7, "class": 1, "at_us": 1000000}}
+{"id": 3, "method": "submit_gemm", "params": {"m": 512, "k": 64, "n": 64, "deadline_us": 1}}
+{"id": 4, "method": "get_metrics"}
+{"id": 5, "method": "drain"}
+{"id": 6, "method": "submit_gemm", "params": {"m": 4, "k": 4, "n": 4}}
+{"id": 7, "method": "shutdown"}
+"#;
+
+#[test]
+fn daemon_trace_and_exposition_are_worker_count_invariant() {
+    let mut h1 = Harness::new(traced_cfg(1)).unwrap();
+    let mut h4 = Harness::new(traced_cfg(4)).unwrap();
+    let t1 = h1.run_script(SCRIPT);
+    let t4 = h4.run_script(SCRIPT);
+    assert_eq!(
+        t1, t4,
+        "response transcript (incl. get_metrics) must be byte-identical"
+    );
+    assert_eq!(
+        h1.daemon().tracer().chrome_string(),
+        h4.daemon().tracer().chrome_string(),
+        "TRACE_daemon.json must be byte-identical across worker counts"
+    );
+    assert_eq!(
+        h1.daemon().registry().render_text(),
+        h4.daemon().registry().render_text(),
+        "metrics exposition must be byte-identical across worker counts"
+    );
+    // The trace actually recorded the interesting span kinds.
+    let tr = h1.daemon().tracer();
+    assert!(tr.count(SpanKind::Admit) > 0);
+    assert!(tr.count(SpanKind::Engine) > 0);
+    assert!(tr.count(SpanKind::Bill) > 0);
+    assert_eq!(tr.reject_count(RejectCause::DeadlineExceeded), 1);
+    assert_eq!(tr.reject_count(RejectCause::Draining), 1);
+    // The exposition carries the daemon metric families.
+    let text = h1.daemon().registry().render_text();
+    assert!(text.contains("daemon_rejected_total{cause=\"deadline_exceeded\"} 1"));
+    assert!(text.contains("# TYPE daemon_latency_us histogram"));
+}
+
+#[test]
+fn fleet_trace_is_worker_count_invariant_and_closed() {
+    let (c1, c4) = (tiny_fleet(1), tiny_fleet(4));
+    let mut t1 = Tracer::new();
+    let mut t4 = Tracer::new();
+    run_fleet_comparison_traced(&c1, &mut t1).unwrap();
+    run_fleet_comparison_traced(&c4, &mut t4).unwrap();
+    assert_eq!(
+        t1.chrome_string(),
+        t4.chrome_string(),
+        "TRACE_fleet.json must be byte-identical across worker counts"
+    );
+    // The one-shot exposition is a pure function of the trace, so it
+    // inherits the byte-identity.
+    assert_eq!(
+        Registry::from_tracer(&t1).render_text(),
+        Registry::from_tracer(&t4).render_text()
+    );
+    // Fault-free closure: both fleets × all three policies serve every
+    // request, and each admitted request bills exactly once.
+    let admits = t1.count(SpanKind::Admit);
+    assert_eq!(admits, 6 * c1.requests, "2 fleets x 3 policies x requests");
+    assert_eq!(admits, t1.count(SpanKind::Bill));
+    assert_eq!(admits, t1.count(SpanKind::Engine));
+    assert_eq!(t1.reject_count(RejectCause::QueueFull), 0);
+}
+
+#[test]
+fn daemon_span_accounting_closes_against_the_wire_counters() {
+    let mut cfg = traced_cfg(1);
+    cfg.queue_bound = 1;
+    let mut h = Harness::new(cfg).unwrap();
+    // A same-instant burst against a bound of 1 sheds with queue_full;
+    // an unmeetable deadline rejects; a post-drain submit rejects with
+    // draining. Every admitted request retires at the drain.
+    for i in 0..8 {
+        h.handle_line(&format!(
+            "{{\"id\": {i}, \"method\": \"submit_gemm\", \
+             \"params\": {{\"m\": 16, \"k\": 8, \"n\": 8, \"at_us\": 0}}}}"
+        ));
+    }
+    h.handle_line(
+        "{\"id\": 8, \"method\": \"submit_gemm\", \
+         \"params\": {\"m\": 512, \"k\": 64, \"n\": 64, \"deadline_us\": 1}}",
+    );
+    h.handle_line("{\"id\": 9, \"method\": \"drain\"}");
+    h.handle_line(
+        "{\"id\": 10, \"method\": \"submit_gemm\", \
+         \"params\": {\"m\": 4, \"k\": 4, \"n\": 4}}",
+    );
+
+    let d = h.daemon();
+    let summary = d.summary_json();
+    let get = |k: &str| summary.req(k).unwrap().as_u64().unwrap();
+    let rejected = |c: &str| {
+        summary.req("rejected").unwrap().req(c).unwrap().as_u64().unwrap()
+    };
+    let tr = d.tracer();
+    // Exactly one admit and one bill per accepted request.
+    assert!(get("accepted") > 0);
+    assert_eq!(tr.count(SpanKind::Admit) as u64, get("accepted"));
+    assert_eq!(tr.count(SpanKind::Bill) as u64, get("billed"));
+    assert_eq!(get("accepted"), get("billed"), "drain retires everything");
+    // Exactly one cause-typed rejection event per shed arrival.
+    assert!(rejected("queue_full") >= 1, "the burst must shed");
+    assert_eq!(
+        tr.reject_count(RejectCause::QueueFull) as u64,
+        rejected("queue_full")
+    );
+    assert_eq!(
+        tr.reject_count(RejectCause::DeadlineExceeded) as u64,
+        rejected("deadline_exceeded")
+    );
+    assert_eq!(
+        tr.reject_count(RejectCause::Draining) as u64,
+        rejected("draining")
+    );
+    // Closure: every arrival is exactly one admit or one reject.
+    let all_rejects = rejected("queue_full") + rejected("deadline_exceeded");
+    assert_eq!(get("accepted") + all_rejects, 9, "8 burst + 1 deadline");
+}
+
+#[test]
+fn summary_rejections_equal_the_exposition_counters() {
+    let mut h = Harness::new(traced_cfg(1)).unwrap();
+    let _ = h.run_script(SCRIPT);
+    // Sync gauges the same way the server does before exporting.
+    h.daemon_mut().handle(Request::GetMetrics).unwrap();
+    let summary = h.daemon().summary_json();
+    let text = h.daemon().registry().render_text();
+    for cause in ["queue_full", "deadline_exceeded", "draining"] {
+        let wire = summary
+            .req("rejected")
+            .unwrap()
+            .req(cause)
+            .unwrap()
+            .as_u64()
+            .unwrap();
+        let line = format!("daemon_rejected_total{{cause=\"{cause}\"}} {wire}");
+        assert!(
+            text.contains(&line),
+            "summary says {cause}={wire} but the exposition disagrees:\n{text}"
+        );
+    }
+}
